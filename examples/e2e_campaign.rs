@@ -1,0 +1,186 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Software inference runs through the AOT-compiled PJRT artifacts (L2
+//! JAX graphs embedding the L1 Pallas int8 GEMM kernels, lowered to HLO
+//! text and executed by the Rust PJRT client) — Python is NOT running.
+//! For every sampled transient fault, the target layer's GEMM tile is
+//! offloaded to the RTL mesh simulator (L3) with the fault injected, the
+//! corrupted int32 tile is spliced back, and the inference completes on
+//! the software path. Golden vs faulty Top-1 gives the AVF; a SW-only
+//! campaign gives the PVF; wall-clocks give the paper's Table VI
+//! slowdown and the Table V-style speedup vs the full-SoC backend.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example e2e_campaign -- --inputs 4 --faults-per-layer 8
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use enfor_sa::campaign::{sample_trial, TrialFault};
+use enfor_sa::config::Dataflow;
+use enfor_sa::coordinator::Args;
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::{argmax, models};
+use enfor_sa::mesh::Mesh;
+use enfor_sa::report::{format_table, human_time};
+use enfor_sa::runtime::quicknet::QuicknetPjrt;
+use enfor_sa::runtime::PjrtRuntime;
+use enfor_sa::soc::Soc;
+use enfor_sa::swfi::{sample_output_fault, SwInjector};
+use enfor_sa::util::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let inputs = args.u64_or("inputs", 4)?;
+    let faults_per_layer = args.u64_or("faults-per-layer", 8)?;
+    let seed = args.u64_or("seed", 0xE2E)?;
+    let dim = args.usize_or("dim", 8)?;
+    let soc_trials = args.u64_or("soc-trials", 4)?;
+    args.finish()?;
+
+    let mut rt = PjrtRuntime::load("artifacts")?;
+    println!(
+        "PJRT platform: {} — software path runs on AOT XLA artifacts\n",
+        rt.platform()
+    );
+    let qn = QuicknetPjrt::new(0xDEAD);
+    let model = &qn.model;
+    let mut rng = Rng::new(seed);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+
+    // discover the GEMM sites once (shapes are input-independent)
+    let probe = synthetic_input(&model.input_shape, &mut rng);
+    let sites = model.gemm_sites(&probe);
+    println!(
+        "QuickNet: {} params, {} GEMM sites, {dim}x{dim} OS mesh",
+        model.param_count(),
+        sites.len()
+    );
+
+    // warm-up: compile all artifacts once so neither campaign pays the
+    // one-time XLA compilation inside its timing window
+    {
+        let mut wrng = Rng::new(seed ^ 0xAA);
+        let warm = synthetic_input(&model.input_shape, &mut wrng);
+        let _ = qn.forward(&mut rt, &warm, None)?;
+    }
+
+    // ---- ENFOR-SA campaign: PJRT software path + RTL tile ----
+    let mut rtl_trials = 0u64;
+    let mut rtl_critical = 0u64;
+    let mut rtl_exposed = 0u64;
+    let t_rtl = Instant::now();
+    for i in 0..inputs {
+        let mut irng = Rng::new(seed ^ (i + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let x = synthetic_input(&model.input_shape, &mut irng);
+        let golden_logits = qn.forward(&mut rt, &x, None)?;
+        let golden = argmax(&golden_logits.data);
+        for info in &sites {
+            for _ in 0..faults_per_layer {
+                let trial: TrialFault = sample_trial(
+                    info.site, info.m, info.k, info.n, dim, &mut irng, &[],
+                );
+                let logits = qn.forward(&mut rt, &x, Some((trial, &mut mesh)))?;
+                rtl_trials += 1;
+                if logits.data != golden_logits.data {
+                    rtl_exposed += 1;
+                }
+                if argmax(&logits.data) != golden {
+                    rtl_critical += 1;
+                }
+            }
+        }
+    }
+    let rtl_wall = t_rtl.elapsed();
+
+    // ---- SW-only campaign (PVF baseline): SAME PJRT software path,
+    // faults flipped directly in the visible layer-output tensors ----
+    let mut sw_trials = 0u64;
+    let mut sw_critical = 0u64;
+    let t_sw = Instant::now();
+    for i in 0..inputs {
+        let mut irng = Rng::new(seed ^ (i + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let x = synthetic_input(&model.input_shape, &mut irng);
+        let golden = qn.top1(&mut rt, &x)?;
+        for _ in 0..sites.len() as u64 * faults_per_layer {
+            let target = sample_output_fault(model, &mut irng);
+            let logits = qn.forward_swfi(&mut rt, &x, &target)?;
+            sw_trials += 1;
+            if argmax(&logits.data) != golden {
+                sw_critical += 1;
+            }
+        }
+    }
+    let sw_wall = t_sw.elapsed();
+
+    // ---- full-SoC reference: the same offloaded *tile* simulated
+    // through the entire chip (Table V's comparison granularity) ----
+    let mut irng = Rng::new(seed ^ 0x50C);
+    let info = sites[1]; // conv2 tile, K = 144
+    let a_tile = irng.mat_i8(dim, info.k);
+    let b_tile = irng.mat_i8(info.k, dim);
+    let d_tile = irng.mat_i32(dim, dim, 100);
+    let t_mesh_tile = Instant::now();
+    let mesh_tile_reps = 50;
+    for _ in 0..mesh_tile_reps {
+        std::hint::black_box(
+            enfor_sa::mesh::driver::MatmulDriver::new(&mut mesh)
+                .matmul(&a_tile, &b_tile, &d_tile),
+        );
+    }
+    let mesh_tile_s = t_mesh_tile.elapsed().as_secs_f64() / mesh_tile_reps as f64;
+    let t_soc = Instant::now();
+    {
+        let mut soc = Soc::new(dim);
+        for _ in 0..soc_trials {
+            std::hint::black_box(soc.run_matmul(&a_tile, &b_tile, &d_tile, None)?);
+        }
+    }
+    let soc_tile_s = t_soc.elapsed().as_secs_f64() / soc_trials as f64;
+    let rtl_per_trial = rtl_wall.as_secs_f64() / rtl_trials as f64;
+    let sw_per_trial = sw_wall.as_secs_f64() / sw_trials as f64;
+
+    let avf = rtl_critical as f64 / rtl_trials as f64 * 100.0;
+    let pvf = sw_critical as f64 / sw_trials as f64 * 100.0;
+    let slowdown = (rtl_per_trial / sw_per_trial - 1.0) * 100.0;
+    let soc_speedup = soc_tile_s / mesh_tile_s;
+
+    println!(
+        "\n{}",
+        format_table(
+            "END-TO-END RESULTS (QuickNet, PJRT software path, RTL tile offload)",
+            &["Metric", "Value"],
+            &[
+                vec!["RTL trials".into(), rtl_trials.to_string()],
+                vec!["AVF (RTL)".into(), format!("{avf:.3}%")],
+                vec![
+                    "fault exposed to SW".into(),
+                    format!("{:.1}%", rtl_exposed as f64 / rtl_trials as f64 * 100.0)
+                ],
+                vec!["PVF (SW-only)".into(), format!("{pvf:.3}%")],
+                vec![
+                    "PVF / AVF".into(),
+                    if avf > 0.0 {
+                        format!("{:.2}x", pvf / avf)
+                    } else {
+                        format!("inf (0 criticals in {rtl_trials} RTL trials)")
+                    }
+                ],
+                vec!["SW campaign wall".into(), human_time(sw_wall.as_secs_f64())],
+                vec!["ENFOR-SA campaign wall".into(), human_time(rtl_wall.as_secs_f64())],
+                vec!["slowdown vs SW-only".into(), format!("{slowdown:.2}%")],
+                vec!["RTL tile on mesh".into(), human_time(mesh_tile_s)],
+                vec!["same tile on full SoC".into(), human_time(soc_tile_s)],
+                vec![
+                    "ENFOR-SA speedup vs full-SoC".into(),
+                    format!("{soc_speedup:.1}x")
+                ],
+            ],
+        )
+    );
+    println!(
+        "paper shape check: PVF >> AVF (paper 5.3x mean), slowdown small \
+         (paper mean 6%), mesh-only >> full-SoC (paper >=198x)"
+    );
+    Ok(())
+}

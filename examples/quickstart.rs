@@ -1,0 +1,60 @@
+//! Quickstart: one matmul on the RTL mesh, one transient fault, and what
+//! it does to the output — the smallest end-to-end use of the library.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use enfor_sa::mesh::{Fault, Mesh, SignalKind};
+use enfor_sa::util::Rng;
+
+fn main() {
+    let dim = 8;
+    let k = 16;
+    let mut rng = Rng::new(2026);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+
+    // operands: A (weights) streams west->east, B (activations)
+    // north->south, D preloads the output-stationary accumulators.
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+
+    // golden run: the mesh must agree with plain software arithmetic
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    assert_eq!(golden, gold_matmul(&a, &b, &d));
+    println!(
+        "golden matmul OK on a {dim}x{dim} OS mesh ({} cycles)",
+        os_matmul_cycles(dim, k)
+    );
+
+    // a transient fault: flip the propagate control bit of PE(2,3) in
+    // the middle of the compute phase — ENFOR-SA injects it by flipping
+    // the SOURCE register in the simulation wrapper, no instrumentation.
+    let fault = Fault::new(2, 3, SignalKind::Propag, 0, (2 * dim) as u64 + 6);
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+
+    println!("injected: {fault}");
+    let mut corrupted = 0;
+    for r in 0..dim {
+        for c in 0..dim {
+            if faulty[r][c] != golden[r][c] {
+                corrupted += 1;
+                if corrupted <= 6 {
+                    println!(
+                        "  C[{r}][{c}]: {} -> {} (xor {:#x})",
+                        golden[r][c],
+                        faulty[r][c],
+                        golden[r][c] ^ faulty[r][c]
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "{corrupted}/{} outputs corrupted by a single control-bit flip — \
+         the column below PE(2,3) was hijacked (paper §IV-B)",
+        dim * dim
+    );
+    assert!(corrupted > 0);
+}

@@ -1,0 +1,68 @@
+//! ViT case study: fault-injection campaign over the attention blocks of
+//! the DeiT-style models (the paper's "matmul-related tasks inside the
+//! attention blocks" target, §III-B).
+//!
+//! Run: `cargo run --release --example vit_attention -- --faults 100`
+
+use enfor_sa::campaign::run_campaign;
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use enfor_sa::coordinator::Args;
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::models;
+use enfor_sa::report::{format_table, human_time};
+use enfor_sa::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let faults = args.u64_or("faults", 100)?;
+    let inputs = args.u64_or("inputs", 2)?;
+    args.finish()?;
+
+    let mesh_cfg = MeshConfig::default();
+    let mut rows = Vec::new();
+    for name in ["DeiT-T", "DeiT-S"] {
+        let model = models::by_name(name, 42).unwrap();
+        // show the attention GEMM structure the campaign will sample
+        let mut rng = Rng::new(1);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let sites = model.gemm_sites(&x);
+        let attn_sites = sites
+            .iter()
+            .filter(|s| s.site.ordinal > 0)
+            .count();
+        println!(
+            "{name}: {} GEMM sites total, {} inside attention blocks",
+            sites.len(),
+            attn_sites
+        );
+
+        let cfg = CampaignConfig {
+            seed: 0x517,
+            faults_per_layer: faults / 10,
+            inputs,
+            backend: Backend::EnforSa,
+            offload_scope: OffloadScope::SingleTile,
+            signals: vec![],
+            workers: 1,
+        };
+        let r = run_campaign(&model, &mesh_cfg, &cfg)?;
+        let (lo, hi) = r.vuln.ci95();
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", r.vuln.trials),
+            format!("{:.3}%", r.vf() * 100.0),
+            format!("[{:.3}%, {:.3}%]", lo * 100.0, hi * 100.0),
+            format!("{:.1}%", r.exposed_trials as f64 / r.vuln.trials as f64 * 100.0),
+            human_time(r.wall.as_secs_f64()),
+        ]);
+    }
+    println!(
+        "{}",
+        format_table(
+            "ViT attention-block campaign (ENFOR-SA backend, 8x8 OS)",
+            &["Model", "Trials", "AVF", "95% CI", "Exposed", "Wall"],
+            &rows,
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas authoring + AOT lowering to HLO text.
+
+Nothing in this package is imported at runtime; the Rust binary only reads
+the `artifacts/` directory this package produces.
+"""

@@ -1,0 +1,78 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fwd, shapes):
+    """jit + lower a graph with ShapeDtypeStruct example args."""
+    specs = [jax.ShapeDtypeStruct(s, dt) for s, dt in shapes.values()]
+    return jax.jit(fwd).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower all L2 graphs")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": {}, "models": {}}
+    for name, fwd, shapes, meta in model.build_all():
+        if args.only and name != args.only:
+            continue
+        lowered = lower_one(fwd, shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "meta": meta,
+            "inputs": [
+                {"name": k, "shape": list(s), "dtype": jnp.dtype(dt).name}
+                for k, (s, dt) in shapes.items()
+            ],
+        }
+        print(f"lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    manifest["models"]["quicknet"] = {
+        "input": [3, 32, 32],
+        "classes": 10,
+        "layers": [
+            {"name": n, "kind": k, **cfg} for n, k, cfg in model.QUICKNET_LAYERS
+        ],
+        "pool": {"after": "quicknet_conv4", "kind": "global_avg", "hw": 8},
+    }
+    manifest["attention"] = model.ATTENTION_CFG
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

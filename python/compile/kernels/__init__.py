@@ -1,0 +1,6 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .im2col import im2col
+from .matmul_int8 import matmul_int8, requant_int32
+
+__all__ = ["im2col", "matmul_int8", "requant_int32"]

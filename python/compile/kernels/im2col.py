@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: im2col unfold for quantized convolution.
+
+Convolutions are lowered onto the systolic array as GEMMs (the paper's
+runtime does exactly this for CNN layers); im2col produces the activation
+matrix. The grid iterates over output rows; each program extracts the
+KH-row slab of the (pre-padded) image it needs and emits the OW patch rows
+for that output row. Patch layout is (c, kh, kw), matching ref.py and
+`rust/src/dnn/im2col.rs`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _im2col_kernel(x_ref, o_ref, *, kh, kw, stride, ow):
+    """Emit the OW patches of one output row.
+
+    x_ref: full padded image [C, Hp, Wp]; o_ref block: [OW, C*KH*KW].
+    """
+    i = pl.program_id(0)
+    c, _, wp = x_ref.shape
+    # KH-row slab for this output row: [C, KH, Wp].
+    slab = x_ref[:, pl.ds(i * stride, kh), :]
+    # Strided windows along W: idx[ow_, kw_] = ow_ * stride + kw_.
+    idx = jnp.arange(ow)[:, None] * stride + jnp.arange(kw)[None, :]
+    patches = slab[:, :, idx]  # [C, KH, OW, KW]
+    o_ref[...] = patches.transpose(2, 0, 1, 3).reshape(ow, c * kh * kw)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad"))
+def im2col(x, kh, kw, stride=1, pad=0):
+    """Unfold x[C, H, W] int8 -> [OH*OW, C*KH*KW] int8 patch matrix."""
+    c, h, w = x.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    hp, wp = h + 2 * pad, w + 2 * pad
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, kh=kh, kw=kw, stride=stride, ow=ow),
+        grid=(oh,),
+        in_specs=[pl.BlockSpec((c, hp, wp), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((ow, c * kh * kw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh * ow, c * kh * kw), jnp.int8),
+        interpret=True,
+    )(xp)
+    return out

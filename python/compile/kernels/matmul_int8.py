@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: tiled int8 x int8 -> int32 GEMM with bias.
+
+This is the functional golden model of the Gemmini mesh: the systolic array
+computes `C = A . B + D` over int8 operands with exact int32 accumulation,
+and so does this kernel. The tile grid (TM, TK, TN) mirrors the DIM x DIM PE
+grid the same way the mesh's systolic skewing tiles the operand stream.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): each (TM, TK) x (TK, TN)
+block pair is staged in VMEM, the K loop is the innermost grid dimension so
+the int32 accumulator block stays resident in VMEM across the whole
+reduction (no HBM round-trips), and the MAC feeds the MXU via
+`preferred_element_type=int32`. interpret=True everywhere — the CPU PJRT
+client cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, d_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] . b[k,j], init with d."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = d_ref[...]
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def _pick_tile(dim, pref):
+    """Largest divisor of `dim` that is <= pref (tiles must divide shapes)."""
+    t = min(dim, pref)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn"))
+def matmul_int8(a, b, d, tm=128, tk=128, tn=128):
+    """C[i32] = A[i8] . B[i8] + D[i32] as a tiled Pallas kernel.
+
+    a: [M, K] int8, b: [K, N] int8, d: [M, N] int32 -> [M, N] int32.
+    Tile sizes are clamped to divisors of the problem shape.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert d.shape == (m, n), f"bias shape {d.shape} != {(m, n)}"
+    tm = _pick_tile(m, tm)
+    tk = _pick_tile(k, tk)
+    tn = _pick_tile(n, tn)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b, d)
+
+
+def _requant_kernel(c_ref, m_ref, o_ref, *, relu):
+    """Elementwise requantization block: i32 -> i8 (round-half-up, clamp)."""
+    c = c_ref[...].astype(jnp.float32)
+    q = jnp.floor(c * m_ref[0, 0] + jnp.float32(0.5))
+    q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+    if relu:
+        q = jnp.maximum(q, 0)
+    o_ref[...] = q
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "tm", "tn"))
+def requant_int32(c, m, relu=False, tm=256, tn=256):
+    """Requantize an int32 accumulator matrix to int8.
+
+    c: [M, N] int32, m: f32 scalar multiplier -> [M, N] int8.
+    """
+    mm, nn = c.shape
+    tm = _pick_tile(mm, tm)
+    tn = _pick_tile(nn, tn)
+    m_arr = jnp.asarray(m, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_requant_kernel, relu=relu),
+        grid=(mm // tm, nn // tn),
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int8),
+        interpret=True,
+    )(c, m_arr)

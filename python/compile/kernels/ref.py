@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORRECTNESS CONTRACT of layer 1: every Pallas kernel in this
+package must agree bit-exactly with its oracle here (pytest enforces it).
+The Rust native engine (`rust/src/dnn/gemm.rs`) and the RTL mesh simulator
+(`rust/src/mesh/`) implement the same arithmetic, so the whole cross-layer
+stack shares one numeric definition.
+
+Quantization scheme (shared by Python, HLO artifacts and Rust):
+  * activations / weights: int8, symmetric (zero_point = 0)
+  * bias / accumulators:   int32 (exact integer GEMM, no saturation)
+  * requantization:        q = clamp(floor(acc_f32 * m + 0.5), -128, 127)
+    with `m` a per-layer f32 multiplier; floor(x + 0.5) is round-half-up,
+    which is deterministic and identical in IEEE f32 on both XLA-CPU and
+    Rust (one f32 multiply, one f32 add, one floor).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_int8_ref(a, b, d):
+    """C[i32] = A[i8] . B[i8] + D[i32], exact integer arithmetic.
+
+    a: [M, K] int8, b: [K, N] int8, d: [M, N] int32 -> [M, N] int32.
+    """
+    return (
+        jnp.dot(
+            a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32
+        )
+        + d
+    )
+
+
+def requant_ref(c, m, relu=False):
+    """int32 accumulator -> int8 with round-half-up and saturation."""
+    q = jnp.floor(c.astype(jnp.float32) * jnp.float32(m) + jnp.float32(0.5))
+    q = jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+    if relu:
+        q = jnp.maximum(q, 0)
+    return q
+
+
+def im2col_ref(x, kh, kw, stride, pad):
+    """Unfold a single image x[C, H, W] (int8) into patch rows.
+
+    Returns [OH * OW, C * KH * KW] int8, patch layout (c, kh, kw) —
+    identical to `rust/src/dnn/im2col.rs`.
+    """
+    c, h, w = x.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    rows = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = xp[:, i * stride : i * stride + kh, j * stride : j * stride + kw]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows).astype(jnp.int8)
+
+
+def conv2d_int8_ref(x, w, bias, m, stride, pad, relu):
+    """Whole quantized conv layer oracle: im2col + GEMM + requant.
+
+    x: [C, H, W] i8; w: [OC, C, KH, KW] i8; bias: [OC] i32 -> [OC, OH, OW] i8.
+    """
+    oc, c, kh, kw = w.shape
+    patches = im2col_ref(x, kh, kw, stride, pad)  # [P, C*KH*KW]
+    wmat = w.reshape(oc, c * kh * kw).T  # [C*KH*KW, OC]
+    d = jnp.broadcast_to(bias[None, :], (patches.shape[0], oc)).astype(jnp.int32)
+    acc = matmul_int8_ref(patches, wmat, d)  # [P, OC]
+    q = requant_ref(acc, m, relu)
+    h, wdim = x.shape[1], x.shape[2]
+    ohh = (h + 2 * pad - kh) // stride + 1
+    oww = (wdim + 2 * pad - kw) // stride + 1
+    return q.T.reshape(oc, ohh, oww)
+
+
+def softmax_f32_ref(s):
+    """Numerically stable f32 softmax over the last axis."""
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def np_requant(c, m, relu=False):
+    """NumPy twin of requant_ref for host-side golden data generation."""
+    q = np.floor(c.astype(np.float32) * np.float32(m) + np.float32(0.5))
+    q = np.clip(q, -128.0, 127.0).astype(np.int8)
+    if relu:
+        q = np.maximum(q, 0)
+    return q

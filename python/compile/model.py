@@ -1,0 +1,169 @@
+"""L2 JAX graphs: quantized DNN layers built on the L1 Pallas kernels.
+
+Each builder returns a traceable function with *fixed* shapes (AOT contract:
+one HLO artifact per layer instance). Weights and biases are graph INPUTS,
+not constants — the Rust coordinator owns the parameters, which is what lets
+the software-level fault injector flip bits in them between executions.
+Scale multipliers are baked in and recorded in the artifact manifest.
+
+The e2e model ("QuickNet") is a small int8 CNN for 3x32x32 inputs / 10
+classes; its per-layer graphs are what the Rust PJRT runtime executes on the
+software portion of the cross-layer forward pass.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import im2col, matmul_int8, requant_int32
+from .kernels.ref import softmax_f32_ref
+
+
+def make_qconv(cin, h, w, cout, kh, kw, stride, pad, m, relu):
+    """Quantized conv layer graph (im2col + GEMM + requant).
+
+    Signature: f(x[cin,h,w] i8, wmat[cin*kh*kw, cout] i8, bias[cout] i32)
+    -> (y[cout,oh,ow] i8,)
+    """
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    p = oh * ow
+
+    def fwd(x, wmat, bias):
+        patches = im2col(x, kh, kw, stride, pad)  # [P, cin*kh*kw]
+        d = jnp.broadcast_to(bias[None, :], (p, cout)).astype(jnp.int32)
+        acc = matmul_int8(patches, wmat, d)  # [P, cout]
+        y = requant_int32(acc, m, relu=relu)  # [P, cout] i8
+        return (y.T.reshape(cout, oh, ow),)
+
+    shapes = dict(
+        x=((cin, h, w), jnp.int8),
+        wmat=((cin * kh * kw, cout), jnp.int8),
+        bias=((cout,), jnp.int32),
+    )
+    meta = dict(
+        kind="conv", cin=cin, h=h, w=w, cout=cout, kh=kh, kw=kw,
+        stride=stride, pad=pad, m=m, relu=relu, oh=oh, ow=ow,
+    )
+    return fwd, shapes, meta
+
+
+def make_qlinear(in_f, out_f, m, relu):
+    """Quantized fully-connected layer graph.
+
+    Signature: f(x[1,in_f] i8, w[in_f,out_f] i8, bias[out_f] i32)
+    -> (y[1,out_f] i8,)
+    """
+
+    def fwd(x, w, bias):
+        d = bias[None, :].astype(jnp.int32)
+        acc = matmul_int8(x, w, d)
+        return (requant_int32(acc, m, relu=relu),)
+
+    shapes = dict(
+        x=((1, in_f), jnp.int8),
+        w=((in_f, out_f), jnp.int8),
+        bias=((out_f,), jnp.int32),
+    )
+    meta = dict(kind="linear", in_f=in_f, out_f=out_f, m=m, relu=relu)
+    return fwd, shapes, meta
+
+
+def make_qgemm(mdim, k, n):
+    """Raw tile GEMM graph: the unit the cross-layer runner offloads.
+
+    Signature: f(a[m,k] i8, b[k,n] i8, d[m,n] i32) -> (c[m,n] i32,)
+    """
+
+    def fwd(a, b, d):
+        return (matmul_int8(a, b, d),)
+
+    shapes = dict(
+        a=((mdim, k), jnp.int8), b=((k, n), jnp.int8), d=((mdim, n), jnp.int32)
+    )
+    meta = dict(kind="gemm", m_dim=mdim, k=k, n=n)
+    return fwd, shapes, meta
+
+
+def make_qattention(seq, d_model, mq, mk, mv, ms, mo, mw):
+    """Single-head quantized attention block (the ViT matmul hot-spot).
+
+    Integer projections / AV / output matmuls with f32 softmax in between
+    (probabilities re-quantized to int8 with scale 127), mirroring the
+    I-ViT-style integer pipeline the paper evaluates.
+
+    Signature: f(x[seq,d] i8, wq, wk, wv, wo [d,d] i8) -> (y[seq,d] i8,)
+    """
+    zero_d = ((seq, d_model), jnp.int32)
+
+    def proj(x, w, m):
+        d0 = jnp.zeros(zero_d[0], jnp.int32)
+        return requant_int32(matmul_int8(x, w, d0), m)
+
+    def fwd(x, wq, wk, wv, wo):
+        q = proj(x, wq, mq)  # [L, D] i8
+        k = proj(x, wk, mk)
+        v = proj(x, wv, mv)
+        zs = jnp.zeros((seq, seq), jnp.int32)
+        s = matmul_int8(q, k.T, zs)  # [L, L] i32 logits
+        p = softmax_f32_ref(s.astype(jnp.float32) * jnp.float32(ms))
+        p_i8 = jnp.clip(
+            jnp.floor(p * jnp.float32(127.0) + jnp.float32(0.5)), 0.0, 127.0
+        ).astype(jnp.int8)
+        o = requant_int32(matmul_int8(p_i8, v, zero_like(zero_d)), mo)  # [L, D]
+        y = requant_int32(matmul_int8(o, wo, zero_like(zero_d)), mw)
+        return (y,)
+
+    def zero_like(sd):
+        return jnp.zeros(sd[0], jnp.int32)
+
+    shapes = dict(
+        x=((seq, d_model), jnp.int8),
+        wq=((d_model, d_model), jnp.int8),
+        wk=((d_model, d_model), jnp.int8),
+        wv=((d_model, d_model), jnp.int8),
+        wo=((d_model, d_model), jnp.int8),
+    )
+    meta = dict(
+        kind="attention", seq=seq, d_model=d_model,
+        mq=mq, mk=mk, mv=mv, ms=ms, mo=mo, mw=mw,
+    )
+    return fwd, shapes, meta
+
+
+# ---------------------------------------------------------------------------
+# QuickNet: the end-to-end example model. 3x32x32 -> 10 classes, ~70k params.
+# Pool + argmax run natively in Rust (integer ops); every GEMM-bearing layer
+# is a PJRT artifact. Scales chosen so int8 ranges stay well-exercised.
+# ---------------------------------------------------------------------------
+QUICKNET_LAYERS = [
+    ("quicknet_conv1", "conv", dict(cin=3, h=32, w=32, cout=16, kh=3, kw=3,
+                                    stride=1, pad=1, m=0.035, relu=True)),
+    ("quicknet_conv2", "conv", dict(cin=16, h=32, w=32, cout=32, kh=3, kw=3,
+                                    stride=2, pad=1, m=0.02, relu=True)),
+    ("quicknet_conv3", "conv", dict(cin=32, h=16, w=16, cout=32, kh=3, kw=3,
+                                    stride=1, pad=1, m=0.02, relu=True)),
+    ("quicknet_conv4", "conv", dict(cin=32, h=16, w=16, cout=64, kh=3, kw=3,
+                                    stride=2, pad=1, m=0.02, relu=True)),
+    # global 8x8 avg-pool happens natively in rust between conv4 and fc
+    ("quicknet_fc", "linear", dict(in_f=64, out_f=10, m=0.05, relu=False)),
+]
+
+# Generic GEMM tiles for the mesh cross-check and the ViT attention block.
+GEMM_TILES = [(8, 8, 8), (16, 16, 16), (64, 64, 64), (128, 128, 128)]
+ATTENTION_CFG = dict(
+    seq=64, d_model=64, mq=0.01, mk=0.01, mv=0.01, ms=0.05, mo=0.05, mw=0.02
+)
+
+
+def build_all():
+    """Yield (name, fwd, shapes, meta) for every artifact to AOT-compile."""
+    for name, kind, cfg in QUICKNET_LAYERS:
+        if kind == "conv":
+            fwd, shapes, meta = make_qconv(**cfg)
+        else:
+            fwd, shapes, meta = make_qlinear(**cfg)
+        yield name, fwd, shapes, meta
+    for mdim, k, n in GEMM_TILES:
+        fwd, shapes, meta = make_qgemm(mdim, k, n)
+        yield f"gemm_{mdim}x{k}x{n}", fwd, shapes, meta
+    fwd, shapes, meta = make_qattention(**ATTENTION_CFG)
+    yield "attention_64", fwd, shapes, meta

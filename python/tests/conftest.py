@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile); make the package importable either way.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,69 @@
+"""L1 correctness: Pallas im2col kernel vs pure-jnp oracle (bit-exact)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import im2col
+from compile.kernels.ref import im2col_ref
+
+RNG = np.random.default_rng(0x1C01)
+
+
+def rand_img(c, h, w):
+    return RNG.integers(-128, 128, (c, h, w), dtype=np.int8)
+
+
+@pytest.mark.parametrize(
+    "c,h,w,kh,kw,stride,pad",
+    [
+        (1, 4, 4, 1, 1, 1, 0),  # pointwise
+        (3, 8, 8, 3, 3, 1, 1),  # classic 3x3 same
+        (3, 32, 32, 3, 3, 1, 1),  # quicknet conv1
+        (16, 32, 32, 3, 3, 2, 1),  # strided
+        (4, 9, 7, 3, 5, 2, 2),  # asymmetric kernel, odd dims
+        (2, 8, 8, 8, 8, 1, 0),  # kernel == image
+        (3, 16, 16, 7, 7, 2, 3),  # resnet conv1-like
+    ],
+)
+def test_im2col_matches_ref(c, h, w, kh, kw, stride, pad):
+    x = rand_img(c, h, w)
+    got = np.asarray(im2col(x, kh, kw, stride, pad))
+    want = np.asarray(im2col_ref(x, kh, kw, stride, pad))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_im2col_patch_layout_is_c_kh_kw():
+    """Pin the patch element ordering: index = c*KH*KW + kh*KW + kw."""
+    c, h, w, kh, kw = 2, 3, 3, 2, 2
+    x = np.arange(c * h * w, dtype=np.int8).reshape(c, h, w)
+    got = np.asarray(im2col(x, kh, kw, 1, 0))
+    # first patch, channel 1, kernel pos (1, 0) => x[1, 1, 0] = 9 + 3 = 12
+    assert got[0, 1 * kh * kw + 1 * kw + 0] == x[1, 1, 0]
+
+
+def test_im2col_zero_padding_is_zero():
+    x = np.full((1, 2, 2), 7, np.int8)
+    got = np.asarray(im2col(x, 3, 3, 1, 1))
+    # top-left patch has its entire first row in the pad region
+    assert (got[0, :3] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    k=st.integers(1, 3),
+    stride=st.integers(1, 2),
+    pad=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_hypothesis(c, h, w, k, stride, pad, seed):
+    if h + 2 * pad < k or w + 2 * pad < k:
+        return
+    r = np.random.default_rng(seed)
+    x = r.integers(-128, 128, (c, h, w), dtype=np.int8)
+    got = np.asarray(im2col(x, k, k, stride, pad))
+    want = np.asarray(im2col_ref(x, k, k, stride, pad))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas int8 GEMM / requant kernels vs pure-jnp oracles.
+
+The GEMM is exact integer arithmetic, so every comparison is bit-exact
+(assert_array_equal, not allclose).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_int8, requant_int32
+from compile.kernels.ref import matmul_int8_ref, np_requant, requant_ref
+
+RNG = np.random.default_rng(0xE4F0)
+
+
+def rand_i8(*shape):
+    return RNG.integers(-128, 128, size=shape, dtype=np.int8)
+
+
+def rand_i32(*shape, lo=-(2**20), hi=2**20):
+    return RNG.integers(lo, hi, size=shape, dtype=np.int32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (2, 3, 4),
+        (8, 8, 8),
+        (16, 27, 16),  # conv1-like K = 3*3*3
+        (64, 64, 64),
+        (128, 128, 128),
+        (256, 144, 32),  # conv2-like
+        (100, 70, 30),  # awkward non-power-of-two
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    a, b, d = rand_i8(m, k), rand_i8(k, n), rand_i32(m, n)
+    got = matmul_int8(a, b, d)
+    want = matmul_int8_ref(a, b, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tm,tk,tn", [(1, 1, 1), (4, 4, 4), (8, 32, 8), (64, 16, 64)])
+def test_matmul_tile_invariance(tm, tk, tn):
+    """Result must be independent of the tile decomposition."""
+    a, b, d = rand_i8(64, 64), rand_i8(64, 64), rand_i32(64, 64)
+    got = matmul_int8(a, b, d, tm=tm, tk=tk, tn=tn)
+    want = matmul_int8_ref(a, b, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_extreme_values_no_overflow():
+    """Worst case |acc| = 128*128*K must accumulate exactly in int32."""
+    k = 96
+    a = np.full((8, k), -128, np.int8)
+    b = np.full((k, 8), -128, np.int8)
+    d = np.zeros((8, 8), np.int32)
+    got = np.asarray(matmul_int8(a, b, d))
+    assert (got == 128 * 128 * k).all()
+
+
+def test_matmul_identity():
+    n = 16
+    eye = np.eye(n, dtype=np.int8)
+    x = rand_i8(n, n)
+    got = np.asarray(matmul_int8(x, eye, np.zeros((n, n), np.int32)))
+    np.testing.assert_array_equal(got, x.astype(np.int32))
+
+
+def test_matmul_bias_only():
+    """Zero operands: output must equal the bias exactly."""
+    d = rand_i32(32, 32)
+    z = np.zeros((32, 32), np.int8)
+    np.testing.assert_array_equal(np.asarray(matmul_int8(z, z, d)), d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    a = r.integers(-128, 128, (m, k), dtype=np.int8)
+    b = r.integers(-128, 128, (k, n), dtype=np.int8)
+    d = r.integers(-(2**16), 2**16, (m, n), dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(matmul_int8(a, b, d)), np.asarray(matmul_int8_ref(a, b, d))
+    )
+
+
+# ----------------------------- requant ------------------------------------
+
+
+@pytest.mark.parametrize("relu", [False, True])
+@pytest.mark.parametrize("m", [0.001, 0.02, 0.5, 1.0])
+def test_requant_matches_ref(m, relu):
+    c = rand_i32(32, 48, lo=-(2**24), hi=2**24)
+    got = requant_int32(c, m, relu=relu)
+    want = requant_ref(c, m, relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_requant_saturates():
+    c = np.array([[2**30, -(2**30)]], np.int32)
+    got = np.asarray(requant_int32(c, 1.0))
+    np.testing.assert_array_equal(got, np.array([[127, -128]], np.int8))
+
+
+def test_requant_round_half_up():
+    """floor(x*m + 0.5): 0.5 rounds up, -0.5 rounds to 0 (half-up).
+
+    m = 0.5 is exactly representable in f32, so the halfway cases are exact.
+    """
+    c = np.array([[1, -1, 3, -3]], np.int32)
+    got = np.asarray(requant_int32(c, 0.5))  # 0.5, -0.5, 1.5, -1.5
+    np.testing.assert_array_equal(got, np.array([[1, 0, 2, -1]], np.int8))
+
+
+def test_requant_relu_clamps_negatives():
+    c = np.array([[-1000, 1000, 0]], np.int32)
+    got = np.asarray(requant_int32(c, 1.0, relu=True))
+    np.testing.assert_array_equal(got, np.array([[0, 127, 0]], np.int8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.floats(1e-5, 2.0, allow_nan=False))
+def test_requant_hypothesis(seed, m):
+    r = np.random.default_rng(seed)
+    c = r.integers(-(2**26), 2**26, (17, 9), dtype=np.int32)
+    got = np.asarray(requant_int32(c, float(np.float32(m))))
+    want = np_requant(c, float(np.float32(m)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_requant_ref_and_np_twin_agree():
+    c = rand_i32(64, 64, lo=-(2**26), hi=2**26)
+    np.testing.assert_array_equal(
+        np.asarray(requant_ref(c, 0.013)), np_requant(c, 0.013)
+    )

@@ -1,0 +1,120 @@
+"""L2 correctness: layer graphs vs whole-layer oracles, and AOT lowering.
+
+These are the graphs the Rust runtime executes via PJRT, so their numeric
+behaviour here IS the software path of the cross-layer simulator.
+"""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import (
+    conv2d_int8_ref,
+    matmul_int8_ref,
+    np_requant,
+    softmax_f32_ref,
+)
+
+RNG = np.random.default_rng(0x90DE1)
+
+
+def rand_i8(*shape):
+    return RNG.integers(-128, 128, shape, dtype=np.int8)
+
+
+def rand_i32(*shape, span=2**10):
+    return RNG.integers(-span, span, shape, dtype=np.int32)
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        dict(cin=3, h=8, w=8, cout=4, kh=3, kw=3, stride=1, pad=1, m=0.03, relu=True),
+        dict(cin=2, h=9, w=9, cout=3, kh=3, kw=3, stride=2, pad=1, m=0.05, relu=False),
+        dict(cin=1, h=6, w=6, cout=2, kh=1, kw=1, stride=1, pad=0, m=0.1, relu=True),
+    ],
+)
+def test_qconv_graph_matches_whole_layer_oracle(cfg):
+    fwd, shapes, meta = model.make_qconv(**cfg)
+    x = rand_i8(*shapes["x"][0])
+    w4 = rand_i8(cfg["cout"], cfg["cin"], cfg["kh"], cfg["kw"])
+    wmat = w4.reshape(cfg["cout"], -1).T.copy()
+    bias = rand_i32(cfg["cout"])
+    (got,) = fwd(x, wmat, bias)
+    want = conv2d_int8_ref(
+        x, w4, bias, cfg["m"], cfg["stride"], cfg["pad"], cfg["relu"]
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qlinear_graph_matches_oracle():
+    fwd, shapes, meta = model.make_qlinear(in_f=24, out_f=10, m=0.04, relu=False)
+    x, w, b = rand_i8(1, 24), rand_i8(24, 10), rand_i32(10)
+    (got,) = fwd(x, w, b)
+    acc = x.astype(np.int32) @ w.astype(np.int32) + b[None, :]
+    want = np_requant(acc, 0.04)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_qgemm_graph_is_exact():
+    fwd, shapes, meta = model.make_qgemm(16, 16, 16)
+    a, b, d = rand_i8(16, 16), rand_i8(16, 16), rand_i32(16, 16)
+    (got,) = fwd(a, b, d)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(matmul_int8_ref(a, b, d))
+    )
+
+
+def test_qattention_graph_matches_oracle():
+    cfg = dict(seq=8, d_model=8, mq=0.02, mk=0.02, mv=0.02, ms=0.05, mo=0.05, mw=0.03)
+    fwd, shapes, meta = model.make_qattention(**cfg)
+    x = rand_i8(8, 8)
+    ws = [rand_i8(8, 8) for _ in range(4)]
+    (got,) = fwd(x, *ws)
+
+    def proj(w, m):
+        return np_requant(x.astype(np.int32) @ w.astype(np.int32), m)
+
+    q, k, v = proj(ws[0], cfg["mq"]), proj(ws[1], cfg["mk"]), proj(ws[2], cfg["mv"])
+    s = q.astype(np.int32) @ k.astype(np.int32).T
+    p = np.asarray(softmax_f32_ref(s.astype(np.float32) * np.float32(cfg["ms"])))
+    p_i8 = np.clip(np.floor(p * 127.0 + 0.5), 0, 127).astype(np.int8)
+    o = np_requant(p_i8.astype(np.int32) @ v.astype(np.int32), cfg["mo"])
+    want = np_requant(o.astype(np.int32) @ ws[3].astype(np.int32), cfg["mw"])
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_quicknet_layer_shapes_chain():
+    """Consecutive QuickNet conv layers must be shape-compatible."""
+    convs = [cfg for _, kind, cfg in model.QUICKNET_LAYERS if kind == "conv"]
+    for prev, nxt in zip(convs, convs[1:]):
+        oh = (prev["h"] + 2 * prev["pad"] - prev["kh"]) // prev["stride"] + 1
+        assert nxt["cin"] == prev["cout"]
+        assert nxt["h"] == oh and nxt["w"] == oh
+    last = convs[-1]
+    oh = (last["h"] + 2 * last["pad"] - last["kh"]) // last["stride"] + 1
+    fc = model.QUICKNET_LAYERS[-1][2]
+    assert fc["in_f"] == last["cout"]  # global avg pool collapses oh x ow
+    assert oh == 8  # matches manifest pool.hw
+
+
+def test_build_all_is_complete_and_unique():
+    names = [name for name, *_ in model.build_all()]
+    assert len(names) == len(set(names))
+    assert "quicknet_conv1" in names and "quicknet_fc" in names
+    assert "attention_64" in names
+    assert any(n.startswith("gemm_8x") for n in names)
+
+
+@pytest.mark.parametrize("name", ["quicknet_fc", "gemm_8x8x8"])
+def test_aot_lowering_produces_hlo_text(name):
+    from compile import aot
+
+    for n, fwd, shapes, meta in model.build_all():
+        if n != name:
+            continue
+        text = aot.to_hlo_text(aot.lower_one(fwd, shapes))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        return
+    pytest.fail(f"artifact {name} not found")

@@ -1,0 +1,64 @@
+//! Bench: Table III — mean cycle time of raw `step()` calls,
+//! ENFOR-SA mesh vs HDFIT-instrumented mesh, across array sizes.
+//!
+//! Includes the D1 ablation: a third variant with a *cold* armed-fault
+//! check (branch present, never taken) to separate the branch cost from
+//! HDFIT's full per-assignment bookkeeping.
+//!
+//! Run: `cargo bench --bench cycle_time` (env BENCH_CYCLES to override).
+
+use enfor_sa::benchkit::cycle_time;
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::inject::idle_cycles;
+use enfor_sa::mesh::{Fault, Mesh, MeshInputs, MeshSim, SignalKind, StepOutput};
+use std::time::Instant;
+
+fn main() {
+    let cycles: u64 = std::env::var("BENCH_CYCLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let dims = [4usize, 8, 16, 32, 64];
+    println!("TABLE III: mean cycle time over {cycles} raw step() calls");
+    println!(
+        "{:<10} {:>14} {:>14} {:>12} {:>18}",
+        "Array", "ENFOR-SA", "HDFIT", "Improvement", "branch-check abl."
+    );
+    let rows = cycle_time(&dims, cycles);
+    for row in &rows {
+        // D1 ablation: ENFOR-SA step + one per-cycle fault compare (the
+        // wrapper branch) — the entire injection overhead of the method.
+        let mut mesh = Mesh::new(row.dim, Dataflow::OutputStationary);
+        let inp = MeshInputs::idle(row.dim);
+        let mut out = StepOutput::new(row.dim);
+        let fault = Fault::new(0, 0, SignalKind::Acc, 0, u64::MAX); // never fires
+        let t0 = Instant::now();
+        for t in 0..cycles {
+            if fault.cycle == t {
+                unreachable!();
+            }
+            mesh.step(&inp, &mut out);
+        }
+        let branch_us = t0.elapsed().as_secs_f64() * 1e6 / cycles as f64;
+        std::hint::black_box(mesh.acc_at(0, 0));
+        println!(
+            "DIM{:<7} {:>12.3}us {:>12.3}us {:>11.2}x {:>16.3}us",
+            row.dim,
+            row.enforsa_us,
+            row.hdfit_us,
+            row.improvement(),
+            branch_us
+        );
+    }
+    // quick machine-readable block for EXPERIMENTS.md tooling
+    for row in &rows {
+        println!(
+            "CSV,cycle_time,{},{:.6},{:.6},{:.3}",
+            row.dim,
+            row.enforsa_us,
+            row.hdfit_us,
+            row.improvement()
+        );
+    }
+    idle_cycles(&mut Mesh::new(4, Dataflow::OutputStationary), 1); // keep linked
+}

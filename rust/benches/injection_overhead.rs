@@ -1,0 +1,77 @@
+//! Bench: Table VI — campaign injection time (SW-only vs ENFOR-SA
+//! cross-layer) and the AVF/PVF vulnerability factors, per model.
+//!
+//! The paper runs 500 faults/layer/input over 640 ImageNet inputs
+//! (~42M faults, hours per model); this scaled harness defaults to a
+//! few hundred trials per model — override with env:
+//!   BENCH_FAULTS=..  BENCH_INPUTS=..  BENCH_MODELS=quicknet,ResNet18
+//!
+//! Run: `cargo bench --bench injection_overhead`
+
+use enfor_sa::benchkit::injection_table;
+use enfor_sa::config::{CampaignConfig, MeshConfig};
+use enfor_sa::dnn::models;
+use enfor_sa::report::human_time;
+
+fn main() {
+    let faults: u64 = std::env::var("BENCH_FAULTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let inputs: u64 = std::env::var("BENCH_INPUTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    let names: Vec<String> = std::env::var("BENCH_MODELS")
+        .ok()
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|| {
+            models::TABLE_II
+                .iter()
+                .map(|i| i.name.to_string())
+                .collect()
+        });
+    let mesh_cfg = MeshConfig::default();
+    let cc = CampaignConfig {
+        faults_per_layer: faults,
+        inputs,
+        ..Default::default()
+    };
+    println!(
+        "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, DIM8 OS)"
+    );
+    println!(
+        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8}",
+        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF"
+    );
+    let rows = injection_table(&names, &mesh_cfg, &cc).expect("campaigns");
+    for r in &rows {
+        println!(
+            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}%",
+            r.model,
+            human_time(r.sw.wall.as_secs_f64()),
+            human_time(r.rtl.wall.as_secs_f64()),
+            r.slowdown_pct(),
+            r.pvf_pct(),
+            r.avf_pct()
+        );
+    }
+    let n = rows.len() as f64;
+    println!(
+        "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%",
+        rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
+        rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / n,
+        rows.iter().map(|r| r.avf_pct()).sum::<f64>() / n,
+    );
+    for r in &rows {
+        println!(
+            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4}",
+            r.model,
+            r.sw.wall.as_secs_f64(),
+            r.rtl.wall.as_secs_f64(),
+            r.slowdown_pct(),
+            r.pvf_pct(),
+            r.avf_pct()
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench: Table V — full forward pass of the (scaled) ResNet50 first
+//! convolution layer on three backends: ENFOR-SA mesh-only, the full-SoC
+//! simulation, and the HDFIT-instrumented mesh.
+//!
+//! Run: `cargo bench --bench layer_forward` (env BENCH_DIMS="4,8" to
+//! restrict — full-SoC at DIM64 takes a while).
+
+use enfor_sa::benchkit::layer_forward;
+
+fn main() {
+    let dims: Vec<usize> = std::env::var("BENCH_DIMS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect()
+        })
+        .unwrap_or_else(|| vec![4, 8, 16, 32, 64]);
+    println!("TABLE V: ResNet50 conv1 full forward pass (im2col: 256x27x24)");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "Array", "ENFOR-SA", "Full SoC", "vs SoC", "HDFIT", "vs HDFIT"
+    );
+    let rows = layer_forward(&dims).expect("layer bench");
+    for r in &rows {
+        println!(
+            "DIM{:<5} {:>11.4}s {:>11.4}s {:>11.1}x {:>11.4}s {:>9.2}x",
+            r.dim,
+            r.enforsa_s,
+            r.full_soc_s,
+            r.vs_full_soc(),
+            r.hdfit_s,
+            r.vs_hdfit()
+        );
+    }
+    for r in &rows {
+        println!(
+            "CSV,layer_forward,{},{:.6},{:.6},{:.6},{:.3},{:.3}",
+            r.dim,
+            r.enforsa_s,
+            r.full_soc_s,
+            r.hdfit_s,
+            r.vs_full_soc(),
+            r.vs_hdfit()
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: Table IV — mean full-matmul time (`C = A.B + D`, preload +
+//! compute + flush) across array sizes, ENFOR-SA vs HDFIT.
+//!
+//! Run: `cargo bench --bench matmul_time` (env BENCH_REPS to override).
+
+use enfor_sa::benchkit::matmul_time;
+
+fn main() {
+    let reps: u64 = std::env::var("BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let dims = [4usize, 8, 16, 32, 64];
+    println!("TABLE IV: mean matmul time over {reps} matmuls");
+    println!(
+        "{:<10} {:>14} {:>14} {:>12}",
+        "Array", "ENFOR-SA", "HDFIT", "Improvement"
+    );
+    let rows = matmul_time(&dims, reps);
+    for r in &rows {
+        println!(
+            "DIM{:<7} {:>12.3}ms {:>12.3}ms {:>11.2}x",
+            r.dim, r.enforsa_ms, r.hdfit_ms, r.improvement()
+        );
+    }
+    for r in &rows {
+        println!(
+            "CSV,matmul_time,{},{:.6},{:.6},{:.3}",
+            r.dim, r.enforsa_ms, r.hdfit_ms, r.improvement()
+        );
+    }
+}

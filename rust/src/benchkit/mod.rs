@@ -1,0 +1,268 @@
+//! Benchmark kit: the measurement routines behind every table and
+//! figure of the paper's evaluation (§IV). Shared by the criterion-style
+//! bench binaries (`rust/benches/*`) and the `enfor-sa` CLI so the same
+//! code regenerates the paper's artifacts either way.
+
+use crate::campaign::{run_campaign, CampaignResult};
+use crate::config::{Backend, CampaignConfig, Dataflow, MeshConfig};
+use crate::dnn::models;
+use crate::mesh::driver::{tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+use crate::mesh::hdfit::InstrumentedMesh;
+use crate::mesh::inject::idle_cycles;
+use crate::mesh::{Mesh, MeshSim};
+use crate::soc::Soc;
+use crate::util::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Table III row: mean raw `step()` cycle time.
+#[derive(Clone, Debug)]
+pub struct CycleTimeRow {
+    pub dim: usize,
+    pub enforsa_us: f64,
+    pub hdfit_us: f64,
+}
+
+impl CycleTimeRow {
+    pub fn improvement(&self) -> f64 {
+        self.hdfit_us / self.enforsa_us
+    }
+}
+
+/// Table III: mean cycle time over `cycles` raw `dut->step()` calls
+/// (paper: 1M), ENFOR-SA mesh vs HDFIT-instrumented mesh.
+pub fn cycle_time(dims: &[usize], cycles: u64) -> Vec<CycleTimeRow> {
+    dims.iter()
+        .map(|&dim| {
+            let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+            let t0 = Instant::now();
+            idle_cycles(&mut mesh, cycles);
+            let enforsa_us = t0.elapsed().as_secs_f64() * 1e6 / cycles as f64;
+            // keep the simulator state observable so the loop cannot be
+            // optimized away
+            std::hint::black_box(mesh.acc_at(0, 0));
+
+            let mut hm = InstrumentedMesh::new(dim);
+            let t0 = Instant::now();
+            idle_cycles(&mut hm, cycles);
+            let hdfit_us = t0.elapsed().as_secs_f64() * 1e6 / cycles as f64;
+            std::hint::black_box(hm.hook_calls);
+            CycleTimeRow { dim, enforsa_us, hdfit_us }
+        })
+        .collect()
+}
+
+/// Table IV row: mean full matmul time (`C = A.B + D`, DIMxDIM).
+#[derive(Clone, Debug)]
+pub struct MatmulTimeRow {
+    pub dim: usize,
+    pub enforsa_ms: f64,
+    pub hdfit_ms: f64,
+}
+
+impl MatmulTimeRow {
+    pub fn improvement(&self) -> f64 {
+        self.hdfit_ms / self.enforsa_ms
+    }
+}
+
+/// Table IV: mean matmul time over `reps` matmuls (paper: 1k), covering
+/// preload + compute + flush.
+pub fn matmul_time(dims: &[usize], reps: u64) -> Vec<MatmulTimeRow> {
+    let mut rng = Rng::new(0xBE0C);
+    dims.iter()
+        .map(|&dim| {
+            let a = rng.mat_i8(dim, dim);
+            let b = rng.mat_i8(dim, dim);
+            let d = rng.mat_i32(dim, dim, 100);
+
+            let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d));
+            }
+            let enforsa_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+            let mut hm = InstrumentedMesh::new(dim);
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(MatmulDriver::new(&mut hm).matmul(&a, &b, &d));
+            }
+            let hdfit_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+            MatmulTimeRow { dim, enforsa_ms, hdfit_ms }
+        })
+        .collect()
+}
+
+/// Table V row: full forward pass of the ResNet50-style first conv
+/// layer, lowered to tiled matmuls, per backend.
+#[derive(Clone, Debug)]
+pub struct LayerForwardRow {
+    pub dim: usize,
+    pub enforsa_s: f64,
+    pub full_soc_s: f64,
+    pub hdfit_s: f64,
+}
+
+impl LayerForwardRow {
+    pub fn vs_full_soc(&self) -> f64 {
+        self.full_soc_s / self.enforsa_s
+    }
+
+    pub fn vs_hdfit(&self) -> f64 {
+        self.hdfit_s / self.enforsa_s
+    }
+}
+
+/// The GEMM operands of our scaled ResNet50's first convolution
+/// (im2col-lowered), shared by all three backends.
+pub fn resnet50_conv1_operands(rng: &mut Rng) -> (MatI8, MatI8, MatI32) {
+    // conv1: cin=3, 32x32 input, cout=24, 3x3, stride 2, pad 1
+    // im2col: M = 16*16 = 256 pixels, K = 27, N = 24
+    let (m, k, n) = (256usize, 27usize, 24usize);
+    (rng.mat_i8(m, k), rng.mat_i8(k, n), rng.mat_i32(m, n, 128))
+}
+
+/// Table V: one full conv-layer forward per backend. `soc_reps` lets the
+/// caller shrink the (expensive) full-SoC measurement.
+pub fn layer_forward(dims: &[usize]) -> Result<Vec<LayerForwardRow>> {
+    let mut rng = Rng::new(0x7AB1E5);
+    let (a, b, d) = resnet50_conv1_operands(&mut rng);
+    let mut rows = Vec::new();
+    for &dim in dims {
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let t0 = Instant::now();
+        std::hint::black_box(tiled_matmul_os(&mut mesh, &a, &b, &d));
+        let enforsa_s = t0.elapsed().as_secs_f64();
+
+        let mut hm = InstrumentedMesh::new(dim);
+        let t0 = Instant::now();
+        std::hint::black_box(tiled_matmul_os(&mut hm, &a, &b, &d));
+        let hdfit_s = t0.elapsed().as_secs_f64();
+
+        // full SoC: each output tile through the whole chip
+        let mut soc = Soc::new(dim);
+        let t0 = Instant::now();
+        let m = a.len();
+        let n = b[0].len();
+        let mut ti = 0;
+        while ti < m {
+            let mut tj = 0;
+            while tj < n {
+                let a_tile: MatI8 = (0..dim)
+                    .map(|r| {
+                        if ti + r < m {
+                            a[ti + r].clone()
+                        } else {
+                            vec![0; a[0].len()]
+                        }
+                    })
+                    .collect();
+                let b_tile: MatI8 = b
+                    .iter()
+                    .map(|row| {
+                        (0..dim)
+                            .map(|cc| if tj + cc < n { row[tj + cc] } else { 0 })
+                            .collect()
+                    })
+                    .collect();
+                let d_tile: MatI32 = (0..dim)
+                    .map(|r| {
+                        (0..dim)
+                            .map(|cc| {
+                                if ti + r < m && tj + cc < n {
+                                    d[ti + r][tj + cc]
+                                } else {
+                                    0
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                std::hint::black_box(soc.run_matmul(&a_tile, &b_tile, &d_tile, None)?);
+                tj += dim;
+            }
+            ti += dim;
+        }
+        let full_soc_s = t0.elapsed().as_secs_f64();
+        rows.push(LayerForwardRow { dim, enforsa_s, full_soc_s, hdfit_s });
+    }
+    Ok(rows)
+}
+
+/// Table VI row: injection time + vulnerability factors for one model.
+#[derive(Clone, Debug)]
+pub struct InjectionRow {
+    pub model: String,
+    pub sw: CampaignResult,
+    pub rtl: CampaignResult,
+}
+
+impl InjectionRow {
+    pub fn slowdown_pct(&self) -> f64 {
+        (self.rtl.wall.as_secs_f64() / self.sw.wall.as_secs_f64() - 1.0) * 100.0
+    }
+
+    pub fn pvf_pct(&self) -> f64 {
+        self.sw.vf() * 100.0
+    }
+
+    pub fn avf_pct(&self) -> f64 {
+        self.rtl.vf() * 100.0
+    }
+}
+
+/// Table VI: run SW-only and ENFOR-SA campaigns for each named model.
+pub fn injection_table(
+    model_names: &[String],
+    mesh_cfg: &MeshConfig,
+    base: &CampaignConfig,
+) -> Result<Vec<InjectionRow>> {
+    let mut rows = Vec::new();
+    for name in model_names {
+        let model = models::by_name(name, 42 + rows.len() as u64)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+        let mut sw_cfg = base.clone();
+        sw_cfg.backend = Backend::SwOnly;
+        let sw = run_campaign(&model, mesh_cfg, &sw_cfg)?;
+        let mut rtl_cfg = base.clone();
+        rtl_cfg.backend = Backend::EnforSa;
+        let rtl = run_campaign(&model, mesh_cfg, &rtl_cfg)?;
+        rows.push(InjectionRow {
+            model: model.name.clone(),
+            sw,
+            rtl,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_time_hdfit_is_slower() {
+        let rows = cycle_time(&[8], 20_000);
+        assert_eq!(rows.len(), 1);
+        assert!(
+            rows[0].improvement() > 1.2,
+            "HDFIT instrumentation must cost: {:.2}x",
+            rows[0].improvement()
+        );
+    }
+
+    #[test]
+    fn matmul_time_scales_with_dim() {
+        let rows = matmul_time(&[4, 8], 30);
+        assert!(rows[1].enforsa_ms > rows[0].enforsa_ms);
+        assert!(rows[0].improvement() > 1.0);
+    }
+
+    #[test]
+    fn layer_forward_soc_dominates() {
+        let rows = layer_forward(&[4]).unwrap();
+        assert!(rows[0].vs_full_soc() > 5.0, "{:?}", rows[0]);
+        assert!(rows[0].vs_hdfit() > 1.0, "{:?}", rows[0]);
+    }
+}

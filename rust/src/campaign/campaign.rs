@@ -1,0 +1,273 @@
+//! Campaign orchestration: the paper's §IV experiments as a library.
+//!
+//! A campaign runs `faults_per_layer` trials per GEMM layer per input,
+//! classifies each trial (masked / exposed / critical) and accumulates
+//! AVF (RTL backends) or PVF (software-only backend) with wall-clock
+//! accounting for the Table VI timing comparison.
+
+use super::fault::{sample_trial, TrialFault};
+use super::runner::{CrossLayerRunner, TileBackend};
+use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use crate::dnn::engine::synthetic_input;
+use crate::dnn::{argmax, GemmSiteInfo, Model};
+use crate::mesh::hdfit::InstrumentedMesh;
+use crate::mesh::{Mesh, SignalKind};
+use crate::soc::Soc;
+use crate::swfi::{sample_output_fault, SwInjector};
+use crate::util::stats::VulnEstimate;
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Result of one fault-injection trial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialOutcome {
+    /// Fault never reached the layer output (HW-masked).
+    Masked,
+    /// Layer output corrupted but Top-1 unchanged (SW-masked / SDC-safe).
+    Exposed,
+    /// Top-1 classification flipped vs the golden run.
+    Critical,
+}
+
+/// Aggregated campaign result for one model on one backend.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub model: String,
+    pub backend: Backend,
+    pub vuln: VulnEstimate,
+    pub exposed_trials: u64,
+    pub masked_trials: u64,
+    pub wall: Duration,
+    pub per_layer: BTreeMap<usize, VulnEstimate>,
+}
+
+impl CampaignResult {
+    /// The vulnerability factor: AVF for RTL backends, PVF for SW-only.
+    pub fn vf(&self) -> f64 {
+        self.vuln.vf()
+    }
+}
+
+impl CampaignResult {
+    /// Merge a partial (per-input / per-worker) result into this one.
+    pub fn merge(&mut self, other: &CampaignResult) {
+        self.vuln.merge(&other.vuln);
+        self.exposed_trials += other.exposed_trials;
+        self.masked_trials += other.masked_trials;
+        self.wall += other.wall;
+        for (layer, v) in &other.per_layer {
+            self.per_layer.entry(*layer).or_default().merge(v);
+        }
+    }
+
+    pub fn empty(model: &str, backend: Backend) -> CampaignResult {
+        CampaignResult {
+            model: model.to_string(),
+            backend,
+            vuln: VulnEstimate::default(),
+            exposed_trials: 0,
+            masked_trials: 0,
+            wall: Duration::ZERO,
+            per_layer: BTreeMap::new(),
+        }
+    }
+}
+
+/// Run the trials of a single input index with its own derived RNG
+/// stream — the unit of work the coordinator distributes to workers.
+/// Worker-count invariant: results depend only on (seed, input_idx).
+pub fn run_input(
+    model: &Model,
+    mesh_cfg: &MeshConfig,
+    cfg: &CampaignConfig,
+    input_idx: u64,
+) -> Result<CampaignResult> {
+    let mut one = cfg.clone();
+    one.inputs = 1;
+    one.seed = cfg.seed ^ (input_idx + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    run_campaign(model, mesh_cfg, &one)
+}
+
+/// Run a full campaign for `model` with the given configuration.
+pub fn run_campaign(
+    model: &Model,
+    mesh_cfg: &MeshConfig,
+    cfg: &CampaignConfig,
+) -> Result<CampaignResult> {
+    let kinds: Vec<SignalKind> = cfg
+        .signals
+        .iter()
+        .filter_map(|s| SignalKind::parse(s))
+        .collect();
+    let mut rng = Rng::new(cfg.seed);
+    let mut result = CampaignResult {
+        model: model.name.clone(),
+        backend: cfg.backend,
+        vuln: VulnEstimate::default(),
+        exposed_trials: 0,
+        masked_trials: 0,
+        wall: Duration::ZERO,
+        per_layer: BTreeMap::new(),
+    };
+    // persistent backends (reset per matmul by the drivers)
+    let mut mesh = Mesh::new(mesh_cfg.dim, mesh_cfg.dataflow);
+    let mut hdfit = InstrumentedMesh::new(mesh_cfg.dim);
+
+    let t0 = Instant::now();
+    let mut sites: Option<Vec<GemmSiteInfo>> = None;
+    for _input in 0..cfg.inputs {
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden_logits = model.forward(&x, None);
+        let golden = argmax(&golden_logits.data);
+        let sites =
+            sites.get_or_insert_with(|| model.gemm_sites(&x)).clone();
+        for info in &sites {
+            for _ in 0..cfg.faults_per_layer {
+                let outcome = match cfg.backend {
+                    Backend::SwOnly => {
+                        let target = sample_output_fault(model, &mut rng);
+                        let mut inj = SwInjector::new(target);
+                        let logits = model.forward(&x, Some(&mut inj));
+                        let corrupted = logits != golden_logits;
+                        classify(corrupted, argmax(&logits.data) != golden)
+                    }
+                    Backend::FullSoc => {
+                        let trial = sample_trial(
+                            info.site, info.m, info.k, info.n, mesh_cfg.dim, &mut rng,
+                            &kinds,
+                        );
+                        // a fresh SoC per trial (the core re-runs its
+                        // driver program from reset)
+                        run_soc_trial(model, &x, golden, trial, mesh_cfg.dim)?
+                    }
+                    _ => {
+                        let trial = sample_trial(
+                            info.site, info.m, info.k, info.n, mesh_cfg.dim, &mut rng,
+                            &kinds,
+                        );
+                        let backend = match cfg.backend {
+                            Backend::EnforSa => TileBackend::Mesh(&mut mesh),
+                            Backend::Hdfit => TileBackend::Hdfit(&mut hdfit),
+                            _ => unreachable!(),
+                        };
+                        let mut runner =
+                            CrossLayerRunner::new(trial, backend, cfg.offload_scope);
+                        let logits = model.forward(&x, Some(&mut runner));
+                        debug_assert!(runner.hit, "trial site must be reached");
+                        classify(runner.exposed, argmax(&logits.data) != golden)
+                    }
+                };
+                record(&mut result, info.site.layer, outcome);
+            }
+        }
+    }
+    result.wall = t0.elapsed();
+    Ok(result)
+}
+
+// The FullSoc arm needs its own flow (the backend owns big state);
+// factored out to keep the loop readable.
+fn run_soc_trial(
+    model: &Model,
+    x: &crate::dnn::TensorI8,
+    golden: usize,
+    trial: TrialFault,
+    dim: usize,
+) -> Result<TrialOutcome> {
+    let mut soc = Soc::new(dim);
+    let mut runner = CrossLayerRunner::new(
+        trial,
+        TileBackend::Soc(&mut soc),
+        OffloadScope::SingleTile,
+    );
+    let logits = model.forward(x, Some(&mut runner));
+    Ok(classify(
+        runner.exposed,
+        argmax(&logits.data) != golden,
+    ))
+}
+
+fn classify(exposed: bool, critical: bool) -> TrialOutcome {
+    if critical {
+        TrialOutcome::Critical
+    } else if exposed {
+        TrialOutcome::Exposed
+    } else {
+        TrialOutcome::Masked
+    }
+}
+
+fn record(result: &mut CampaignResult, layer: usize, outcome: TrialOutcome) {
+    let critical = outcome == TrialOutcome::Critical;
+    result.vuln.record(critical);
+    result.per_layer.entry(layer).or_default().record(critical);
+    match outcome {
+        TrialOutcome::Masked => result.masked_trials += 1,
+        TrialOutcome::Exposed => result.exposed_trials += 1,
+        TrialOutcome::Critical => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    fn small_cfg(backend: Backend) -> (MeshConfig, CampaignConfig) {
+        (
+            MeshConfig::default(),
+            CampaignConfig {
+                seed: 99,
+                faults_per_layer: 4,
+                inputs: 2,
+                backend,
+                offload_scope: OffloadScope::SingleTile,
+                signals: vec![],
+                workers: 1,
+            },
+        )
+    }
+
+    #[test]
+    fn enforsa_campaign_runs_and_counts() {
+        let model = models::quicknet(5);
+        let (mesh_cfg, cfg) = small_cfg(Backend::EnforSa);
+        let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        // 5 GEMM sites x 4 faults x 2 inputs
+        assert_eq!(r.vuln.trials, 40);
+        assert_eq!(
+            r.vuln.trials,
+            r.masked_trials + r.exposed_trials + r.vuln.critical
+        );
+        assert_eq!(r.per_layer.len(), 5);
+    }
+
+    #[test]
+    fn sw_campaign_runs() {
+        let model = models::quicknet(5);
+        let (mesh_cfg, cfg) = small_cfg(Backend::SwOnly);
+        let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(r.vuln.trials, 40);
+    }
+
+    #[test]
+    fn campaign_is_reproducible_from_seed() {
+        let model = models::quicknet(5);
+        let (mesh_cfg, cfg) = small_cfg(Backend::EnforSa);
+        let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+    }
+
+    #[test]
+    fn control_only_campaign_respects_filter() {
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.signals = vec!["propag".into(), "valid".into()];
+        let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(r.vuln.trials, 40);
+    }
+}

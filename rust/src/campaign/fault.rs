@@ -1,0 +1,140 @@
+//! Fault sampling for statistical injection campaigns.
+//!
+//! A *trial fault* picks (uniformly over the bit-weighted fault space):
+//! which GEMM tile of which layer is offloaded to RTL, which PE signal
+//! bit inside the mesh flips, and at which cycle of the offloaded
+//! matmul. This mirrors the paper's setup: one transient fault per
+//! inference, injected into the mesh while it computes one tile.
+
+use crate::dnn::GemmSiteId;
+use crate::mesh::driver::os_matmul_cycles;
+use crate::mesh::{Fault, SignalKind};
+use crate::util::Rng;
+
+/// A fully-specified cross-layer fault trial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrialFault {
+    pub site: GemmSiteId,
+    /// Output-tile coordinates (units of DIM).
+    pub tile_i: usize,
+    pub tile_j: usize,
+    /// The mesh-level transient fault (cycle relative to the tile matmul).
+    pub fault: Fault,
+}
+
+/// Sample a signal kind proportionally to its bit width, optionally
+/// restricted to a subset (`kinds`); then a bit within it.
+pub fn sample_signal(rng: &mut Rng, kinds: &[SignalKind]) -> (SignalKind, u8) {
+    let pool: &[SignalKind] = if kinds.is_empty() {
+        &SignalKind::ALL
+    } else {
+        kinds
+    };
+    let total: u64 = pool.iter().map(|k| k.width() as u64).sum();
+    let mut pick = rng.below(total);
+    for &k in pool {
+        let w = k.width() as u64;
+        if pick < w {
+            return (k, pick as u8);
+        }
+        pick -= w;
+    }
+    unreachable!("bit-weighted sampling exhausted the pool");
+}
+
+/// Sample a mesh fault for a tile matmul with inner dimension `k_inner`.
+pub fn sample_mesh_fault(
+    dim: usize,
+    k_inner: usize,
+    rng: &mut Rng,
+    kinds: &[SignalKind],
+) -> Fault {
+    let (kind, bit) = sample_signal(rng, kinds);
+    let row = rng.usize_below(dim);
+    let col = rng.usize_below(dim);
+    let cycle = rng.below(os_matmul_cycles(dim, k_inner));
+    Fault::new(row, col, kind, bit, cycle)
+}
+
+/// Sample a complete trial for one GEMM site of shape (m, k, n).
+#[allow(clippy::too_many_arguments)]
+pub fn sample_trial(
+    site: GemmSiteId,
+    m: usize,
+    k: usize,
+    n: usize,
+    dim: usize,
+    rng: &mut Rng,
+    kinds: &[SignalKind],
+) -> TrialFault {
+    let tiles_i = m.div_ceil(dim);
+    let tiles_j = n.div_ceil(dim);
+    TrialFault {
+        site,
+        tile_i: rng.usize_below(tiles_i),
+        tile_j: rng.usize_below(tiles_j),
+        fault: sample_mesh_fault(dim, k, rng, kinds),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_sampling_is_bit_weighted() {
+        let mut rng = Rng::new(61);
+        let mut acc32 = 0usize;
+        let mut ctrl = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            let (k, bit) = sample_signal(&mut rng, &[]);
+            assert!(bit < k.width());
+            match k {
+                SignalKind::Acc | SignalKind::DReg => acc32 += 1,
+                SignalKind::Propag | SignalKind::Valid => ctrl += 1,
+                _ => {}
+            }
+        }
+        // 64 of 82 bits are 32-bit storage; 2 of 82 are control.
+        let frac32 = acc32 as f64 / n as f64;
+        let fracc = ctrl as f64 / n as f64;
+        assert!((frac32 - 64.0 / 82.0).abs() < 0.02, "{frac32}");
+        assert!((fracc - 2.0 / 82.0).abs() < 0.01, "{fracc}");
+    }
+
+    #[test]
+    fn kind_filter_restricts() {
+        let mut rng = Rng::new(62);
+        for _ in 0..200 {
+            let (k, _) = sample_signal(&mut rng, &[SignalKind::Propag, SignalKind::Valid]);
+            assert!(matches!(k, SignalKind::Propag | SignalKind::Valid));
+        }
+    }
+
+    #[test]
+    fn trial_bounds_respected() {
+        let mut rng = Rng::new(63);
+        let site = GemmSiteId { layer: 1, ordinal: 0 };
+        for _ in 0..500 {
+            let t = sample_trial(site, 100, 27, 16, 8, &mut rng, &[]);
+            assert!(t.tile_i < 13);
+            assert!(t.tile_j < 2);
+            assert!(t.fault.addr.row < 8 && t.fault.addr.col < 8);
+            assert!(t.fault.cycle < os_matmul_cycles(8, 27));
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let site = GemmSiteId { layer: 0, ordinal: 0 };
+        let mut r1 = Rng::new(64);
+        let mut r2 = Rng::new(64);
+        for _ in 0..50 {
+            assert_eq!(
+                sample_trial(site, 64, 64, 64, 8, &mut r1, &[]),
+                sample_trial(site, 64, 64, 64, 8, &mut r2, &[])
+            );
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Per-PE vulnerability maps — the paper's Fig. 5.
+//!
+//! * **Fig. 5a**: AVF per PE when *control signals* (propag / valid) are
+//!   targeted during a real cross-layer inference. Propag faults hijack
+//!   the accumulator chain and forward down the column, so upper rows
+//!   come out more critical.
+//! * **Fig. 5b**: probability that a fault in the *weight* pipeline
+//!   registers is exposed to the software layer (not masked inside the
+//!   array). Western (earlier) columns are more exposed because the
+//!   corrupted operand is reused by every PE further east.
+
+use super::fault::TrialFault;
+use super::runner::{CrossLayerRunner, TileBackend};
+use crate::config::{Dataflow, OffloadScope};
+use crate::dnn::engine::synthetic_input;
+use crate::dnn::{argmax, Model};
+use crate::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use crate::mesh::{Fault, Mesh, SignalKind};
+use crate::util::stats::VulnEstimate;
+use crate::util::Rng;
+
+/// A DIM x DIM heat map of per-PE estimates.
+#[derive(Clone, Debug)]
+pub struct PeMap {
+    pub dim: usize,
+    pub title: String,
+    /// row-major per-PE estimates
+    pub cells: Vec<VulnEstimate>,
+}
+
+impl PeMap {
+    pub fn new(dim: usize, title: &str) -> Self {
+        PeMap {
+            dim,
+            title: title.to_string(),
+            cells: vec![VulnEstimate::default(); dim * dim],
+        }
+    }
+
+    pub fn value(&self, r: usize, c: usize) -> f64 {
+        self.cells[r * self.dim + c].vf()
+    }
+
+    /// Mean estimate of one row (Fig. 5a trend check).
+    pub fn row_mean(&self, r: usize) -> f64 {
+        (0..self.dim).map(|c| self.value(r, c)).sum::<f64>() / self.dim as f64
+    }
+
+    /// Mean estimate of one column (Fig. 5b trend check).
+    pub fn col_mean(&self, c: usize) -> f64 {
+        (0..self.dim).map(|r| self.value(r, c)).sum::<f64>() / self.dim as f64
+    }
+}
+
+/// Fig. 5a: per-PE AVF for control-signal faults during full cross-layer
+/// inference of `model`, injecting into the GEMM of layer-site index
+/// `site_idx` (e.g. the first conv of ResNet50 in the paper).
+pub fn control_avf_map(
+    model: &Model,
+    site_idx: usize,
+    dim: usize,
+    trials_per_pe: u64,
+    seed: u64,
+    kind: SignalKind,
+) -> PeMap {
+    assert!(matches!(kind, SignalKind::Propag | SignalKind::Valid));
+    let mut rng = Rng::new(seed);
+    let mut map = PeMap::new(dim, &format!("AVF map ({kind}) — {}", model.name));
+    let x = synthetic_input(&model.input_shape, &mut rng);
+    let golden = argmax(&model.forward(&x, None).data);
+    let sites = model.gemm_sites(&x);
+    let info = sites[site_idx.min(sites.len() - 1)];
+    let cycles = os_matmul_cycles(dim, info.k);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    for r in 0..dim {
+        for c in 0..dim {
+            for _ in 0..trials_per_pe {
+                let trial = TrialFault {
+                    site: info.site,
+                    tile_i: rng.usize_below(info.m.div_ceil(dim)),
+                    tile_j: rng.usize_below(info.n.div_ceil(dim)),
+                    fault: Fault::new(r, c, kind, 0, rng.below(cycles)),
+                };
+                let mut runner = CrossLayerRunner::new(
+                    trial,
+                    TileBackend::Mesh(&mut mesh),
+                    OffloadScope::SingleTile,
+                );
+                let logits = model.forward(&x, Some(&mut runner));
+                let critical = argmax(&logits.data) != golden;
+                map.cells[r * dim + c].record(critical);
+            }
+        }
+    }
+    map
+}
+
+/// Per-PE exposure for faults in `kind`, measured at tile granularity:
+/// the probability that an *output element* of the tile is corrupted
+/// (golden vs faulty tile, ReLU-sparse activations providing the
+/// zero-masking). Per-element accounting captures both the paper's
+/// Fig. 5 gradients:
+///
+/// * `kind = Weight` — Fig. 5b: western columns more exposed (the
+///   corrupted operand is reused by every PE further east);
+/// * `kind = Propag/Valid` — tile-level companion of Fig. 5a: upper
+///   rows more exposed (the flipped control bit forwards south and the
+///   accumulator hijack corrupts the whole column below).
+pub fn exposure_map(
+    dim: usize,
+    k_inner: usize,
+    kind: SignalKind,
+    trials_per_pe: u64,
+    seed: u64,
+) -> PeMap {
+    let mut rng = Rng::new(seed);
+    let mut map = PeMap::new(dim, &format!("{kind}-register exposure map"));
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    // Faults are sampled within the COMPUTE phase — the paper's Fig. 5
+    // analysis concerns faults "during computation" (propag erroneously
+    // asserted while MACs run); preload/flush-phase faults have their
+    // own, different spatial profile.
+    let compute_start = (2 * dim - 1) as u64;
+    let compute_len = (k_inner + 2 * dim - 2) as u64;
+    for r in 0..dim {
+        for c in 0..dim {
+            for _ in 0..trials_per_pe {
+                // weights dense, activations ReLU-sparse (half zeros)
+                let a = rng.mat_i8(dim, k_inner);
+                let mut b = rng.mat_i8(k_inner, dim);
+                for row in b.iter_mut() {
+                    for v in row.iter_mut() {
+                        if rng.chance(0.5) {
+                            *v = 0;
+                        } else {
+                            *v = (*v).max(0); // post-ReLU activations
+                        }
+                    }
+                }
+                let d = vec![vec![0i32; dim]; dim];
+                let fault = Fault::new(
+                    r,
+                    c,
+                    kind,
+                    rng.below(kind.width() as u64) as u8,
+                    compute_start + rng.below(compute_len),
+                );
+                let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+                let gold = gold_matmul(&a, &b, &d);
+                let cell = &mut map.cells[r * dim + c];
+                for (fr, gr) in faulty.iter().zip(&gold) {
+                    for (fv, gv) in fr.iter().zip(gr) {
+                        cell.record(fv != gv);
+                    }
+                }
+            }
+        }
+    }
+    map
+}
+
+/// Fig. 5b: weight-register exposure (see [`exposure_map`]).
+pub fn weight_exposure_map(
+    dim: usize,
+    k_inner: usize,
+    trials_per_pe: u64,
+    seed: u64,
+) -> PeMap {
+    exposure_map(dim, k_inner, SignalKind::Weight, trials_per_pe, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn propag_map_upper_rows_more_critical() {
+        let model = models::quicknet(5);
+        let map = control_avf_map(&model, 1, 4, 12, 0xF16A, SignalKind::Propag);
+        // paper: corruption propagates down the whole column, so upper
+        // rows affect more PEs => row 0 at least as critical as row dim-1
+        let top = map.row_mean(0);
+        let bottom = map.row_mean(3);
+        assert!(
+            top >= bottom,
+            "top rows must be >= critical: top={top} bottom={bottom}"
+        );
+    }
+
+    #[test]
+    fn propag_exposure_decreases_southward() {
+        let map = exposure_map(4, 16, SignalKind::Propag, 40, 0xF16C);
+        let top = map.row_mean(0);
+        let bottom = map.row_mean(3);
+        assert!(
+            top > bottom,
+            "upper rows must be more exposed: top={top} bottom={bottom}"
+        );
+    }
+
+    #[test]
+    fn weight_exposure_decreases_eastward() {
+        let map = weight_exposure_map(4, 16, 40, 0xF16B);
+        let west = map.col_mean(0);
+        let east = map.col_mean(3);
+        assert!(
+            west > east,
+            "western columns must be more exposed: west={west} east={east}"
+        );
+    }
+
+    #[test]
+    fn map_accessors() {
+        let mut m = PeMap::new(2, "t");
+        m.cells[0].record(true);
+        m.cells[0].record(false);
+        assert!((m.value(0, 0) - 0.5).abs() < 1e-12);
+        assert_eq!(m.value(1, 1), 0.0);
+    }
+}

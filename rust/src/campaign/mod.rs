@@ -1,0 +1,13 @@
+//! Fault-injection campaign engine: sampling, the cross-layer trial
+//! runner, per-PE vulnerability maps and campaign orchestration.
+
+#[allow(clippy::module_inception)]
+pub mod campaign;
+pub mod fault;
+pub mod maps;
+pub mod runner;
+
+pub use campaign::{run_campaign, CampaignResult, TrialOutcome};
+pub use fault::{sample_mesh_fault, sample_trial, TrialFault};
+pub use maps::{control_avf_map, exposure_map, weight_exposure_map, PeMap};
+pub use runner::{CrossLayerRunner, TileBackend};

@@ -1,0 +1,335 @@
+//! The cross-layer trial runner: software inference with exactly one
+//! tile offloaded to an RTL backend (paper Fig. 4).
+//!
+//! Implemented as a [`GemmHook`]: the forward pass runs on the native
+//! software path until the target GEMM site is reached; there, the
+//! runner extracts the one DIM-padded operand tile the sampled fault
+//! lands in, executes it on the RTL backend with the fault armed, and
+//! splices the (possibly corrupted) int32 tile back into the layer's
+//! accumulator — the rest of the inference continues in software.
+
+use super::fault::TrialFault;
+use crate::config::OffloadScope;
+use crate::dnn::gemm::gemm_i8;
+use crate::dnn::layers::{GemmCall, GemmHook};
+use crate::mesh::driver::{tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+use crate::mesh::hdfit::InstrumentedMesh;
+
+use crate::mesh::{Fault, Mesh, MeshSim};
+use crate::soc::Soc;
+
+/// Which simulator executes the offloaded tile.
+pub enum TileBackend<'a> {
+    /// ENFOR-SA mesh-only RTL.
+    Mesh(&'a mut Mesh),
+    /// HDFIT-style instrumented mesh-only RTL.
+    Hdfit(&'a mut InstrumentedMesh),
+    /// Whole-SoC RTL (core drives the matmul).
+    Soc(&'a mut Soc),
+}
+
+impl<'a> TileBackend<'a> {
+    pub fn dim(&self) -> usize {
+        match self {
+            TileBackend::Mesh(m) => m.dim(),
+            TileBackend::Hdfit(m) => m.dim(),
+            TileBackend::Soc(s) => s.dim(),
+        }
+    }
+
+    /// Run one DIM x DIM-output tile matmul (full-K stream), with an
+    /// optional transient fault.
+    pub fn run_tile(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        d: &MatI32,
+        fault: Option<&Fault>,
+    ) -> anyhow::Result<MatI32> {
+        Ok(match self {
+            TileBackend::Mesh(m) => match fault {
+                Some(f) => MatmulDriver::new(*m).matmul_with_fault(a, b, d, f),
+                None => MatmulDriver::new(*m).matmul(a, b, d),
+            },
+            TileBackend::Hdfit(m) => match fault {
+                Some(f) => MatmulDriver::new(*m).matmul_with_fault(a, b, d, f),
+                None => MatmulDriver::new(*m).matmul(a, b, d),
+            },
+            TileBackend::Soc(s) => s.run_matmul(a, b, d, fault.copied())?,
+        })
+    }
+
+    /// Whole-layer offload (ablation D3): every tile through RTL, the
+    /// fault armed only on the target tile.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_layer(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        d: &MatI32,
+        fault: &Fault,
+        tile_i: usize,
+        tile_j: usize,
+    ) -> anyhow::Result<MatI32> {
+        let dim = self.dim();
+        let m = a.len();
+        let n = if b.is_empty() { 0 } else { b[0].len() };
+        // fault tile computed with fault, all others fault-free
+        let mut c = match self {
+            TileBackend::Mesh(mesh) => tiled_matmul_os(*mesh, a, b, d),
+            TileBackend::Hdfit(mesh) => tiled_matmul_os(*mesh, a, b, d),
+            TileBackend::Soc(_) => {
+                anyhow::bail!("whole-layer offload through the SoC is not supported")
+            }
+        };
+        // redo the faulty tile with the fault and splice
+        let (ti, tj) = (tile_i * dim, tile_j * dim);
+        let k = if m == 0 { 0 } else { a[0].len() };
+        let a_tile: MatI8 = (0..dim)
+            .map(|r| if ti + r < m { a[ti + r].clone() } else { vec![0; k] })
+            .collect();
+        let b_tile: MatI8 = (0..k)
+            .map(|r| {
+                (0..dim)
+                    .map(|cc| if tj + cc < n { b[r][tj + cc] } else { 0 })
+                    .collect()
+            })
+            .collect();
+        let d_tile: MatI32 = (0..dim)
+            .map(|r| {
+                (0..dim)
+                    .map(|cc| {
+                        if ti + r < m && tj + cc < n {
+                            d[ti + r][tj + cc]
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let c_tile = self.run_tile(&a_tile, &b_tile, &d_tile, Some(fault))?;
+        for r in 0..dim {
+            for cc in 0..dim {
+                if ti + r < m && tj + cc < n {
+                    c[ti + r][tj + cc] = c_tile[r][cc];
+                }
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// GEMM hook that performs the cross-layer offload for one trial.
+pub struct CrossLayerRunner<'a> {
+    pub trial: TrialFault,
+    pub backend: TileBackend<'a>,
+    pub scope: OffloadScope,
+    /// Set when the target site was reached.
+    pub hit: bool,
+    /// Set when the RTL tile differed from the fault-free tile (the
+    /// fault was *exposed* to the software layer — paper Fig. 5b).
+    pub exposed: bool,
+}
+
+impl<'a> CrossLayerRunner<'a> {
+    pub fn new(trial: TrialFault, backend: TileBackend<'a>, scope: OffloadScope) -> Self {
+        CrossLayerRunner {
+            trial,
+            backend,
+            scope,
+            hit: false,
+            exposed: false,
+        }
+    }
+}
+
+impl GemmHook for CrossLayerRunner<'_> {
+    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+        if call.site != self.trial.site || self.hit {
+            return None;
+        }
+        self.hit = true;
+        let dim = self.backend.dim();
+        let (m, k, n) = (call.m, call.k, call.n);
+        // clamp the sampled tile to this call's actual tile grid (shapes
+        // can differ between the sampling pass and this input)
+        let ti = self.trial.tile_i.min(m.div_ceil(dim) - 1);
+        let tj = self.trial.tile_j.min(n.div_ceil(dim) - 1);
+
+        // native full result first
+        let mut c = vec![0i32; m * n];
+        gemm_i8(m, k, n, call.a, call.b, call.d, &mut c);
+
+        if self.scope == OffloadScope::Layer {
+            // ablation: run the ENTIRE layer through RTL
+            let a2: MatI8 = (0..m).map(|r| call.a[r * k..(r + 1) * k].to_vec()).collect();
+            let b2: MatI8 = (0..k).map(|r| call.b[r * n..(r + 1) * n].to_vec()).collect();
+            let d2: MatI32 = (0..m).map(|r| call.d[r * n..(r + 1) * n].to_vec()).collect();
+            let cf = self
+                .backend
+                .run_layer(&a2, &b2, &d2, &self.trial.fault, ti, tj)
+                .expect("layer offload failed");
+            let flat: Vec<i32> = cf.into_iter().flatten().collect();
+            self.exposed = flat != c;
+            return Some(flat);
+        }
+
+        // ENFOR-SA single-tile offload: extract the DIM-padded tile
+        let (ri, cj) = (ti * dim, tj * dim);
+        let a_tile: MatI8 = (0..dim)
+            .map(|r| {
+                if ri + r < m {
+                    call.a[(ri + r) * k..(ri + r + 1) * k].to_vec()
+                } else {
+                    vec![0; k]
+                }
+            })
+            .collect();
+        let b_tile: MatI8 = (0..k)
+            .map(|r| {
+                (0..dim)
+                    .map(|cc| if cj + cc < n { call.b[r * n + cj + cc] } else { 0 })
+                    .collect()
+            })
+            .collect();
+        let d_tile: MatI32 = (0..dim)
+            .map(|r| {
+                (0..dim)
+                    .map(|cc| {
+                        if ri + r < m && cj + cc < n {
+                            call.d[(ri + r) * n + cj + cc]
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let c_tile = self
+            .backend
+            .run_tile(&a_tile, &b_tile, &d_tile, Some(&self.trial.fault))
+            .expect("tile offload failed");
+        // splice the RTL tile back into the accumulator
+        for r in 0..dim {
+            for cc in 0..dim {
+                if ri + r < m && cj + cc < n {
+                    let idx = (ri + r) * n + cj + cc;
+                    if c[idx] != c_tile[r][cc] {
+                        self.exposed = true;
+                        c[idx] = c_tile[r][cc];
+                    }
+                }
+            }
+        }
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataflow;
+    use crate::dnn::engine::synthetic_input;
+    use crate::dnn::models;
+    use crate::dnn::GemmSiteId;
+    use crate::mesh::SignalKind;
+    use crate::util::Rng;
+
+    fn a_trial(cycle: u64) -> TrialFault {
+        TrialFault {
+            site: GemmSiteId { layer: 1, ordinal: 0 },
+            tile_i: 0,
+            tile_j: 0,
+            fault: Fault::new(0, 0, SignalKind::Acc, 30, cycle),
+        }
+    }
+
+    #[test]
+    fn golden_tile_offload_is_transparent() {
+        // Offloading a tile WITHOUT corruption must reproduce the native
+        // forward pass bit-exactly (RTL accuracy of the mesh).
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(71);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        // a propag fault during an idle edge cycle: fully masked
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let trial = TrialFault {
+            site: GemmSiteId { layer: 1, ordinal: 0 },
+            tile_i: 0,
+            tile_j: 0,
+            // valid-flip at the very last flush cycle: no effect
+            fault: Fault::new(7, 7, SignalKind::Valid, 0, 1),
+        };
+        let mut runner =
+            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let out = model.forward(&x, Some(&mut runner));
+        assert!(runner.hit);
+        assert!(!runner.exposed);
+        assert_eq!(out, golden);
+    }
+
+    #[test]
+    fn acc_fault_high_bit_is_exposed() {
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(72);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        // bit 30 of an accumulator mid-compute: massive corruption
+        let trial = a_trial(20);
+        let mut runner =
+            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let _ = model.forward(&x, Some(&mut runner));
+        assert!(runner.hit);
+        assert!(runner.exposed);
+    }
+
+    #[test]
+    fn single_tile_and_layer_scope_agree_on_fault_effect() {
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(73);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(25);
+
+        let mut mesh1 = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r1 = CrossLayerRunner::new(
+            trial,
+            TileBackend::Mesh(&mut mesh1),
+            OffloadScope::SingleTile,
+        );
+        let out1 = model.forward(&x, Some(&mut r1));
+
+        let mut mesh2 = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r2 =
+            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh2), OffloadScope::Layer);
+        let out2 = model.forward(&x, Some(&mut r2));
+
+        assert_eq!(out1, out2, "both scopes yield identical faulty outputs");
+    }
+
+    #[test]
+    fn hdfit_backend_reproduces_mesh_backend() {
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(74);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(33);
+
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r1 = CrossLayerRunner::new(
+            trial,
+            TileBackend::Mesh(&mut mesh),
+            OffloadScope::SingleTile,
+        );
+        let out_mesh = model.forward(&x, Some(&mut r1));
+
+        let mut hm = InstrumentedMesh::new(8);
+        let mut r2 = CrossLayerRunner::new(
+            trial,
+            TileBackend::Hdfit(&mut hm),
+            OffloadScope::SingleTile,
+        );
+        let out_hdfit = model.forward(&x, Some(&mut r2));
+        assert_eq!(out_mesh, out_hdfit);
+    }
+}

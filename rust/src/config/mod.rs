@@ -1,0 +1,326 @@
+//! Typed configuration system: array geometry, dataflow, fault model,
+//! campaign parameters. Loadable from a JSON file (see `util::json` —
+//! the build environment is offline, so the crate carries its own JSON),
+//! overridable from the CLI.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Systolic dataflow of the Gemmini mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Dataflow {
+    /// Output-stationary: accumulators stay in the PEs, operands stream.
+    /// This is the configuration the paper evaluates (DIM8 OS).
+    #[default]
+    OutputStationary,
+    /// Weight-stationary: weights preloaded, partial sums flow down.
+    WeightStationary,
+}
+
+impl Dataflow {
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s.to_ascii_lowercase().as_str() {
+            "os" | "output_stationary" | "output-stationary" => {
+                Some(Dataflow::OutputStationary)
+            }
+            "ws" | "weight_stationary" | "weight-stationary" => {
+                Some(Dataflow::WeightStationary)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dataflow::OutputStationary => write!(f, "OS"),
+            Dataflow::WeightStationary => write!(f, "WS"),
+        }
+    }
+}
+
+/// Which simulation backend executes the injected tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// ENFOR-SA: mesh-only RTL with inverted-assignment-order injection.
+    #[default]
+    EnforSa,
+    /// HDFIT-style: mesh-only RTL with per-assignment instrumentation.
+    Hdfit,
+    /// Full-SoC RTL simulation (core + caches + scratchpad + controller).
+    FullSoc,
+    /// Software-only injection (bit flips in tensors; PVF baseline).
+    SwOnly,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "enfor-sa" | "enforsa" | "enfor_sa" => Some(Backend::EnforSa),
+            "hdfit" => Some(Backend::Hdfit),
+            "full-soc" | "fullsoc" | "full_soc" | "soc" => Some(Backend::FullSoc),
+            "sw-only" | "sw" | "sw_only" => Some(Backend::SwOnly),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Backend::EnforSa => "enfor-sa",
+            Backend::Hdfit => "hdfit",
+            Backend::FullSoc => "full-soc",
+            Backend::SwOnly => "sw-only",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// How much of the target layer is offloaded to RTL per fault
+/// (ablation D3 in DESIGN.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OffloadScope {
+    /// ENFOR-SA: exactly one DIM-multiple tile (the injected one).
+    #[default]
+    SingleTile,
+    /// Whole-layer RTL simulation (what full-RTL cross-layer tools do).
+    Layer,
+}
+
+impl OffloadScope {
+    pub fn parse(s: &str) -> Option<OffloadScope> {
+        match s.to_ascii_lowercase().as_str() {
+            "single-tile" | "tile" | "single_tile" => Some(OffloadScope::SingleTile),
+            "layer" => Some(OffloadScope::Layer),
+            _ => None,
+        }
+    }
+}
+
+/// Hardware (mesh) configuration — the paper's "compilation phase" knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct MeshConfig {
+    /// Mesh dimension (DIM x DIM PEs). Paper explores {4, 8, 16, 32, 64}.
+    pub dim: usize,
+    pub dataflow: Dataflow,
+}
+
+impl Default for MeshConfig {
+    fn default() -> Self {
+        MeshConfig {
+            dim: 8,
+            dataflow: Dataflow::OutputStationary,
+        }
+    }
+}
+
+impl MeshConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.dim == 0 || self.dim > 256 {
+            bail!("mesh dim must be in 1..=256, got {}", self.dim);
+        }
+        Ok(())
+    }
+}
+
+/// Campaign configuration.
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    /// RNG seed; identical seeds reproduce identical fault lists.
+    pub seed: u64,
+    /// Faults injected per layer per input (paper: 500).
+    pub faults_per_layer: u64,
+    /// Number of synthetic inputs per model (paper: 20 batches x 32).
+    pub inputs: u64,
+    /// Backend for the injected tile.
+    pub backend: Backend,
+    pub offload_scope: OffloadScope,
+    /// Restrict injection to these signal kinds (empty = all).
+    pub signals: Vec<String>,
+    /// Worker threads for the campaign coordinator.
+    pub workers: usize,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            seed: 0xE4F0_5A,
+            faults_per_layer: 100,
+            inputs: 8,
+            backend: Backend::EnforSa,
+            offload_scope: OffloadScope::SingleTile,
+            signals: vec![],
+            workers: 1,
+        }
+    }
+}
+
+impl CampaignConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.faults_per_layer == 0 {
+            bail!("faults_per_layer must be > 0");
+        }
+        if self.inputs == 0 {
+            bail!("inputs must be > 0");
+        }
+        if self.workers == 0 {
+            bail!("workers must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub mesh: MeshConfig,
+    pub campaign: CampaignConfig,
+    /// Directory holding the AOT artifacts (`manifest.json` + HLO text).
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mesh: MeshConfig::default(),
+            campaign: CampaignConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Load a JSON config file; absent keys keep their defaults.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let cfg = Self::from_json_str(&text)
+            .with_context(|| format!("parsing config {}", path.display()))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Config> {
+        let j = Json::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(mesh) = j.get("mesh") {
+            if let Some(dim) = mesh.get("dim").and_then(Json::as_usize) {
+                cfg.mesh.dim = dim;
+            }
+            if let Some(df) = mesh.get("dataflow").and_then(Json::as_str) {
+                cfg.mesh.dataflow =
+                    Dataflow::parse(df).ok_or_else(|| anyhow::anyhow!("bad dataflow {df}"))?;
+            }
+        }
+        if let Some(c) = j.get("campaign") {
+            if let Some(v) = c.get("seed").and_then(Json::as_f64) {
+                cfg.campaign.seed = v as u64;
+            }
+            if let Some(v) = c.get("faults_per_layer").and_then(Json::as_f64) {
+                cfg.campaign.faults_per_layer = v as u64;
+            }
+            if let Some(v) = c.get("inputs").and_then(Json::as_f64) {
+                cfg.campaign.inputs = v as u64;
+            }
+            if let Some(v) = c.get("backend").and_then(Json::as_str) {
+                cfg.campaign.backend =
+                    Backend::parse(v).ok_or_else(|| anyhow::anyhow!("bad backend {v}"))?;
+            }
+            if let Some(v) = c.get("offload_scope").and_then(Json::as_str) {
+                cfg.campaign.offload_scope = OffloadScope::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad offload_scope {v}"))?;
+            }
+            if let Some(v) = c.get("workers").and_then(Json::as_usize) {
+                cfg.campaign.workers = v;
+            }
+            if let Some(arr) = c.get("signals").and_then(Json::as_arr) {
+                cfg.campaign.signals = arr
+                    .iter()
+                    .filter_map(|s| s.as_str().map(str::to_string))
+                    .collect();
+            }
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = v.to_string();
+        }
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.mesh.validate()?;
+        self.campaign.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+        assert_eq!(Config::default().mesh.dim, 8);
+        assert_eq!(Config::default().mesh.dataflow, Dataflow::OutputStationary);
+    }
+
+    #[test]
+    fn rejects_zero_dim() {
+        let mut c = Config::default();
+        c.mesh.dim = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_faults() {
+        let mut c = Config::default();
+        c.campaign.faults_per_layer = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_partial_file_uses_defaults() {
+        let c = Config::from_json_str(r#"{"mesh": {"dim": 16}}"#).unwrap();
+        assert_eq!(c.mesh.dim, 16);
+        assert_eq!(c.campaign.faults_per_layer, 100);
+        assert_eq!(c.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn json_full_file_parses() {
+        let c = Config::from_json_str(
+            r#"{
+              "mesh": {"dim": 4, "dataflow": "ws"},
+              "campaign": {"seed": 7, "faults_per_layer": 10, "inputs": 2,
+                           "backend": "hdfit", "offload_scope": "layer",
+                           "workers": 2, "signals": ["propag", "valid"]},
+              "artifacts_dir": "art"
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.mesh.dim, 4);
+        assert_eq!(c.mesh.dataflow, Dataflow::WeightStationary);
+        assert_eq!(c.campaign.backend, Backend::Hdfit);
+        assert_eq!(c.campaign.offload_scope, OffloadScope::Layer);
+        assert_eq!(c.campaign.signals.len(), 2);
+        assert_eq!(c.artifacts_dir, "art");
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        assert!(Config::from_json_str(r#"{"mesh": {"dataflow": "bogus"}}"#).is_err());
+        assert!(
+            Config::from_json_str(r#"{"campaign": {"backend": "bogus"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn dataflow_display_and_parse() {
+        assert_eq!(Dataflow::OutputStationary.to_string(), "OS");
+        assert_eq!(Dataflow::parse("os"), Some(Dataflow::OutputStationary));
+        assert_eq!(Backend::parse("full-soc"), Some(Backend::FullSoc));
+    }
+}

@@ -1,0 +1,160 @@
+//! Minimal CLI argument parser (offline environment: no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown-flag detection is the caller's job via
+//! [`Args::finish`].
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let v = self.flags.get(key).map(String::as_str);
+        if v.is_some() {
+            self.used.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usizes (e.g. `--dims 4,8,16`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on unrecognized flags (typo safety).
+    pub fn finish(&self) -> Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !used.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // note: a bare flag followed by a non-flag token consumes it as
+        // its value (`--verbose extra` would mean verbose=extra), so
+        // boolean flags go last or use `--flag=true`.
+        let a = parse("campaign --dim 8 --model resnet50 extra --verbose");
+        assert_eq!(a.positional, vec!["campaign", "extra"]);
+        assert_eq!(a.get("dim"), Some("8"));
+        assert_eq!(a.get("model"), Some("resnet50"));
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--dim=16 --name=foo");
+        assert_eq!(a.usize_or("dim", 0).unwrap(), 16);
+        assert_eq!(a.str_or("name", ""), "foo");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.u64_or("faults", 100).unwrap(), 100);
+        assert_eq!(a.str_or("backend", "enfor-sa"), "enfor-sa");
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--dims 4,8,16");
+        assert_eq!(a.usize_list_or("dims", &[]).unwrap(), vec![4, 8, 16]);
+        let b = parse("x");
+        assert_eq!(b.usize_list_or("dims", &[8]).unwrap(), vec![8]);
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("--dim eight");
+        assert!(a.usize_or("dim", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("--dim 8 --bogus 1");
+        let _ = a.get("dim");
+        assert!(a.finish().is_err());
+        let b = parse("--dim 8");
+        let _ = b.get("dim");
+        assert!(b.finish().is_ok());
+    }
+}

@@ -1,0 +1,7 @@
+//! L3 coordinator: CLI parsing and the multi-worker campaign pool.
+
+pub mod cli;
+pub mod pool;
+
+pub use cli::Args;
+pub use pool::{run_parallel, Progress};

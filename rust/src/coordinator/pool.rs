@@ -1,0 +1,135 @@
+//! The campaign coordinator: distributes fault-trial work across worker
+//! threads and aggregates results.
+//!
+//! Each worker owns its own mesh simulator and model clone (simulators
+//! are stateful); the work unit is one *input* (all its per-layer fault
+//! trials), seeded from `(campaign seed, input index)` so results are
+//! bit-identical regardless of worker count — required for the paper's
+//! reproducibility claims and pinned by `rust/tests/prop_coordinator.rs`.
+
+use crate::campaign::campaign::{run_input, CampaignResult};
+use crate::config::{CampaignConfig, MeshConfig};
+use crate::dnn::Model;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Live progress counters shared with observers (CLI progress line).
+#[derive(Default)]
+pub struct Progress {
+    pub inputs_done: AtomicU64,
+    pub trials_done: AtomicU64,
+}
+
+/// Run a campaign across `cfg.workers` threads.
+pub fn run_parallel(
+    model: &Model,
+    mesh_cfg: &MeshConfig,
+    cfg: &CampaignConfig,
+    progress: Option<Arc<Progress>>,
+) -> Result<CampaignResult> {
+    let t0 = Instant::now();
+    let workers = cfg.workers.max(1).min((cfg.inputs as usize).max(1));
+    let mut merged = CampaignResult::empty(&model.name, cfg.backend);
+    if workers <= 1 {
+        for input_idx in 0..cfg.inputs {
+            let part = run_input(model, mesh_cfg, cfg, input_idx)?;
+            bump(&progress, &part);
+            merged.merge(&part);
+        }
+    } else {
+        let next = Arc::new(AtomicU64::new(0));
+        let results: Vec<Result<Vec<CampaignResult>>> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..workers {
+                let next = Arc::clone(&next);
+                let progress = progress.clone();
+                let model = model.clone();
+                handles.push(scope.spawn(move || -> Result<Vec<CampaignResult>> {
+                    let mut parts = Vec::new();
+                    loop {
+                        let input_idx = next.fetch_add(1, Ordering::Relaxed);
+                        if input_idx >= cfg.inputs {
+                            break;
+                        }
+                        let part = run_input(&model, mesh_cfg, cfg, input_idx)?;
+                        bump(&progress, &part);
+                        parts.push(part);
+                    }
+                    Ok(parts)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // merge in deterministic order (sort by nothing needed: merge is
+        // commutative over counters)
+        for r in results {
+            for part in r? {
+                merged.merge(&part);
+            }
+        }
+    }
+    merged.wall = t0.elapsed(); // wall clock, not summed worker time
+    Ok(merged)
+}
+
+fn bump(progress: &Option<Arc<Progress>>, part: &CampaignResult) {
+    if let Some(p) = progress {
+        p.inputs_done.fetch_add(1, Ordering::Relaxed);
+        p.trials_done.fetch_add(part.vuln.trials, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::dnn::models;
+
+    fn cfg(workers: usize) -> (MeshConfig, CampaignConfig) {
+        (
+            MeshConfig::default(),
+            CampaignConfig {
+                seed: 0xC0FFEE,
+                faults_per_layer: 3,
+                inputs: 4,
+                backend: Backend::EnforSa,
+                offload_scope: Default::default(),
+                signals: vec![],
+                workers,
+            },
+        )
+    }
+
+    #[test]
+    fn single_worker_counts() {
+        let model = models::quicknet(7);
+        let (m, c) = cfg(1);
+        let r = run_parallel(&model, &m, &c, None).unwrap();
+        assert_eq!(r.vuln.trials, 4 * 5 * 3);
+    }
+
+    #[test]
+    fn worker_count_invariance() {
+        let model = models::quicknet(7);
+        let (m, c1) = cfg(1);
+        let (_, c2) = cfg(3);
+        let a = run_parallel(&model, &m, &c1, None).unwrap();
+        let b = run_parallel(&model, &m, &c2, None).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        assert_eq!(a.per_layer.len(), b.per_layer.len());
+    }
+
+    #[test]
+    fn progress_counters_advance() {
+        let model = models::quicknet(7);
+        let (m, c) = cfg(2);
+        let p = Arc::new(Progress::default());
+        let _ = run_parallel(&model, &m, &c, Some(Arc::clone(&p))).unwrap();
+        assert_eq!(p.inputs_done.load(Ordering::Relaxed), 4);
+        assert_eq!(p.trials_done.load(Ordering::Relaxed), 60);
+    }
+}

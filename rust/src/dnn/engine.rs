@@ -1,0 +1,223 @@
+//! Inference engine: sequential layer stacks, forward hooks, GEMM-site
+//! discovery and post-training calibration of requantization scales.
+
+use super::layers::{Act, ForwardCtx, GemmCall, GemmHook, GemmSiteId, Layer};
+use super::tensor::TensorI8;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// A quantized model: a named stack of layers ending in a classifier.
+#[derive(Clone, Debug)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub classes: usize,
+    /// Input shape [C, H, W].
+    pub input_shape: Vec<usize>,
+}
+
+impl Model {
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(Layer::param_count).sum()
+    }
+
+    /// Full forward pass; returns the logits row [1, classes].
+    pub fn forward(&self, x: &TensorI8, mut hook: Option<&mut dyn GemmHook>) -> TensorI8 {
+        let mut act = Act::Chw(x.clone());
+        let mut ctx = ForwardCtx::new(match &mut hook {
+            Some(h) => Some(&mut **h),
+            None => None,
+        });
+        for (li, layer) in self.layers.iter().enumerate() {
+            act = layer.forward(&act, li, &mut ctx);
+            if let Some(h) = ctx.hook.as_deref_mut() {
+                h.layer_output(li, &mut act);
+            }
+        }
+        let t = act.tensor();
+        assert_eq!(
+            t.shape,
+            vec![1, self.classes],
+            "model must end in a [1, classes] classifier"
+        );
+        t.clone()
+    }
+
+    /// Top-1 class of an input (the paper's criticality criterion
+    /// compares this against the golden run).
+    pub fn top1(&self, x: &TensorI8, hook: Option<&mut dyn GemmHook>) -> usize {
+        let logits = self.forward(x, hook);
+        argmax(&logits.data)
+    }
+
+    /// Discover every GEMM call site (layer, ordinal, m, k, n) by running
+    /// one recording pass — the fault sampler draws targets from this.
+    pub fn gemm_sites(&self, example: &TensorI8) -> Vec<GemmSiteInfo> {
+        let mut rec = Recorder::default();
+        self.forward(example, Some(&mut rec));
+        rec.sites
+    }
+
+    /// Post-training calibration: run `n` random inputs, record the peak
+    /// |accumulator| per conv/linear layer, and set each layer's
+    /// requantization multiplier so peak outputs land near `target`
+    /// (|q| ~ 100). This keeps synthetic-weight models in a healthy
+    /// dynamic range so quantization masking behaves like a real PTQ
+    /// model's.
+    pub fn calibrate(&mut self, rng: &mut Rng, n: usize, target: f32) {
+        for _ in 0..n {
+            let x = synthetic_input(&self.input_shape, rng);
+            let mut cal = Calibrator::default();
+            self.forward(&x, Some(&mut cal));
+            for (li, peak) in cal.peak {
+                if peak == 0 {
+                    continue;
+                }
+                let m = target / peak as f32;
+                apply_scale(&mut self.layers, li, m);
+            }
+        }
+    }
+}
+
+/// Shape record of one GEMM site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmSiteInfo {
+    pub site: GemmSiteId,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+#[derive(Default)]
+struct Recorder {
+    sites: Vec<GemmSiteInfo>,
+}
+
+impl GemmHook for Recorder {
+    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+        self.sites.push(GemmSiteInfo {
+            site: call.site,
+            m: call.m,
+            k: call.k,
+            n: call.n,
+        });
+        None
+    }
+}
+
+#[derive(Default)]
+struct Calibrator {
+    peak: BTreeMap<usize, i32>,
+}
+
+impl GemmHook for Calibrator {
+    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+        // run natively, observe the accumulator range
+        let mut c = vec![0i32; call.m * call.n];
+        super::gemm::gemm_i8(call.m, call.k, call.n, call.a, call.b, call.d, &mut c);
+        let peak = c.iter().map(|v| v.saturating_abs()).max().unwrap_or(0);
+        let e = self.peak.entry(call.site.layer).or_insert(0);
+        *e = (*e).max(peak);
+        Some(c)
+    }
+}
+
+/// Set the requant multiplier of conv/linear layers at flat index `li`
+/// (first-level only; nested layers inherit the parent index and are
+/// scaled together, which matches how they share the site address).
+fn apply_scale(layers: &mut [Layer], li: usize, m: f32) {
+    fn rec(layer: &mut Layer, m: f32) {
+        match layer {
+            Layer::Conv(c) => c.m = c.m.min(m),
+            Layer::Linear(l) => l.m = l.m.min(m),
+            Layer::Residual(r) => r.body.iter_mut().for_each(|l| rec(l, m)),
+            Layer::ParallelConcat(p) => p
+                .branches
+                .iter_mut()
+                .for_each(|b| b.iter_mut().for_each(|l| rec(l, m))),
+            _ => {}
+        }
+    }
+    if let Some(layer) = layers.get_mut(li) {
+        rec(layer, m);
+    }
+}
+
+pub fn argmax(v: &[i8]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by_key(|&(i, &x)| (x, std::cmp::Reverse(i)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Synthetic dataset input: half-range values with ReLU-like sparsity
+/// (the zero-masking substrate of the paper's Fig. 5b analysis).
+pub fn synthetic_input(shape: &[usize], rng: &mut Rng) -> TensorI8 {
+    let mut t = TensorI8::random_sparse(shape, 0.3, rng);
+    for v in t.data.iter_mut() {
+        *v >>= 1; // keep |x| <= 63
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::models;
+
+    #[test]
+    fn argmax_prefers_first_on_tie() {
+        assert_eq!(argmax(&[1, 5, 5, 2]), 1);
+        assert_eq!(argmax(&[-3]), 0);
+    }
+
+    #[test]
+    fn quicknet_forward_is_deterministic() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(1);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let a = model.forward(&x, None);
+        let b = model.forward(&x, None);
+        assert_eq!(a, b);
+        assert_eq!(a.shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn quicknet_distinguishes_inputs() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(2);
+        let mut tops = std::collections::HashSet::new();
+        for _ in 0..12 {
+            let x = synthetic_input(&model.input_shape, &mut rng);
+            tops.insert(model.top1(&x, None));
+        }
+        assert!(tops.len() > 1, "logits must not be saturated/constant");
+    }
+
+    #[test]
+    fn gemm_sites_cover_all_gemm_layers() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(3);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let sites = model.gemm_sites(&x);
+        // 4 convs + 1 fc
+        assert_eq!(sites.len(), 5);
+        assert_eq!(sites[0].k, 27); // conv1: 3*3*3
+        assert_eq!(sites[4].n, 10); // classifier
+    }
+
+    #[test]
+    fn calibration_brings_peaks_into_range() {
+        let mut model = models::quicknet(0xBEEF);
+        let mut rng = Rng::new(4);
+        model.calibrate(&mut rng, 2, 100.0);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let logits = model.forward(&x, None);
+        assert!(
+            logits.data.iter().any(|&v| v != 127 && v != -128),
+            "calibrated logits must not be fully saturated"
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Native int8 GEMM — the software inference path (what PyTorch's
+//! quantized kernels are to the paper's runtime). Flat row-major arrays,
+//! i32 accumulation, identical arithmetic to the Pallas kernel's ref.py
+//! and to the mesh.
+
+/// C[i32] = A[i8] . B[i8] + D[i32].
+/// a: M x K, b: K x N, d/c: M x N, all row-major flat slices.
+pub fn gemm_i8(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], d: &[i32], c: &mut [i32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.copy_from_slice(d);
+    // ikj loop order: streams B rows, keeps C row hot; the autovectorizer
+    // turns the inner loop into 8/16-lane integer FMAs.
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue; // ReLU sparsity: the HW masking analogue in SW
+            }
+            let av = aik as i32;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv = cv.wrapping_add(av * bv as i32);
+            }
+        }
+    }
+}
+
+/// Convenience allocating wrapper.
+pub fn gemm_i8_alloc(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], d: &[i32]) -> Vec<i32> {
+    let mut c = vec![0; m * n];
+    gemm_i8(m, k, n, a, b, d, &mut c);
+    c
+}
+
+/// Reference (naive ijk) implementation used to pin the optimized one.
+pub fn gemm_i8_naive(m: usize, k: usize, n: usize, a: &[i8], b: &[i8], d: &[i32]) -> Vec<i32> {
+    let mut c = vec![0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = d[i * n + j];
+            for kk in 0..k {
+                acc = acc.wrapping_add(a[i * k + kk] as i32 * b[kk * n + j] as i32);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn optimized_matches_naive() {
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 4, 4), (7, 13, 5), (32, 27, 16)] {
+            let mut a = vec![0i8; m * k];
+            let mut b = vec![0i8; k * n];
+            rng.fill_i8(&mut a);
+            rng.fill_i8(&mut b);
+            let d: Vec<i32> = (0..m * n).map(|i| i as i32 - 50).collect();
+            assert_eq!(
+                gemm_i8_alloc(m, k, n, &a, &b, &d),
+                gemm_i8_naive(m, k, n, &a, &b, &d),
+                "m={m} k={k} n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_a_rows_short_circuit_correctly() {
+        // the aik == 0 skip must not change results
+        let m = 4;
+        let k = 8;
+        let n = 4;
+        let a = vec![0i8; m * k];
+        let mut rng = Rng::new(32);
+        let mut b = vec![0i8; k * n];
+        rng.fill_i8(&mut b);
+        let d: Vec<i32> = (0..m * n).map(|i| i as i32).collect();
+        assert_eq!(gemm_i8_alloc(m, k, n, &a, &b, &d), d);
+    }
+
+    #[test]
+    fn matches_mesh_gold_matmul() {
+        // one arithmetic definition across the whole stack
+        use crate::mesh::driver::gold_matmul;
+        let mut rng = Rng::new(33);
+        let (m, k, n) = (5usize, 6usize, 7usize);
+        let a2 = rng.mat_i8(m, k);
+        let b2 = rng.mat_i8(k, n);
+        let d2 = rng.mat_i32(m, n, 100);
+        let a: Vec<i8> = a2.iter().flatten().copied().collect();
+        let b: Vec<i8> = b2.iter().flatten().copied().collect();
+        let d: Vec<i32> = d2.iter().flatten().copied().collect();
+        let flat = gemm_i8_alloc(m, k, n, &a, &b, &d);
+        let gold = gold_matmul(&a2, &b2, &d2);
+        let gold_flat: Vec<i32> = gold.iter().flatten().copied().collect();
+        assert_eq!(flat, gold_flat);
+    }
+
+    #[test]
+    fn extreme_values_accumulate_exactly() {
+        let (m, k, n) = (2usize, 64usize, 2usize);
+        let a = vec![-128i8; m * k];
+        let b = vec![-128i8; k * n];
+        let d = vec![0i32; m * n];
+        let c = gemm_i8_alloc(m, k, n, &a, &b, &d);
+        assert!(c.iter().all(|&v| v == 128 * 128 * 64));
+    }
+}

@@ -1,0 +1,127 @@
+//! im2col unfolding — how convolutions are lowered onto the systolic
+//! array (paper §III-B: "convolutions are expressed as matrix
+//! multiplications by using the im2col procedure").
+//!
+//! Patch layout is (c, kh, kw), identical to the Pallas kernel
+//! (`python/compile/kernels/im2col.py`) and its ref.py oracle, so the
+//! same GEMM operands appear at every level of the stack.
+
+use super::tensor::TensorI8;
+
+/// Output spatial size of a convolution.
+#[inline]
+pub fn conv_out(h: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (h + 2 * pad - k) / stride + 1
+}
+
+/// Unfold x[C, H, W] into a [OH*OW, C*KH*KW] patch matrix (flat,
+/// row-major). Channel group `(c0, c1)` restricts to channels
+/// [c0, c1) — used by grouped / depthwise convolutions.
+pub fn im2col_group(
+    x: &TensorI8,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    c0: usize,
+    c1: usize,
+) -> (Vec<i8>, usize, usize) {
+    let (c, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    debug_assert!(c1 <= c && c0 < c1);
+    let gc = c1 - c0;
+    let oh = conv_out(h, kh, stride, pad);
+    let ow = conv_out(w, kw, stride, pad);
+    let patch = gc * kh * kw;
+    let mut out = vec![0i8; oh * ow * patch];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * patch;
+            for cc in 0..gc {
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        out[row + (cc * kh + ky) * kw + kx] =
+                            x.at3(c0 + cc, iy as usize, ix as usize);
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// Full-channel im2col.
+pub fn im2col(
+    x: &TensorI8,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<i8>, usize, usize) {
+    im2col_group(x, kh, kw, stride, pad, 0, x.shape[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pointwise_is_channel_transpose() {
+        let mut rng = Rng::new(41);
+        let x = TensorI8::random(&[3, 2, 2], &mut rng);
+        let (p, oh, ow) = im2col(&x, 1, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        for pix in 0..4 {
+            for c in 0..3 {
+                assert_eq!(p[pix * 3 + c], x.data[c * 4 + pix]);
+            }
+        }
+    }
+
+    #[test]
+    fn patch_layout_is_c_kh_kw() {
+        // mirror of the pytest pin in python/tests/test_im2col_kernel.py
+        let (c, h, w, kh, kw) = (2usize, 3usize, 3usize, 2usize, 2usize);
+        let data: Vec<i8> = (0..(c * h * w) as i32).map(|v| v as i8).collect();
+        let x = TensorI8::from_vec(&[c, h, w], data);
+        let (p, _, _) = im2col(&x, kh, kw, 1, 0);
+        // first patch, channel 1, kernel pos (1, 0) => x[1, 1, 0] = 12
+        assert_eq!(p[1 * kh * kw + 1 * kw], x.at3(1, 1, 0));
+    }
+
+    #[test]
+    fn zero_padding_fills_zero() {
+        let x = TensorI8::from_vec(&[1, 2, 2], vec![7; 4]);
+        let (p, oh, ow) = im2col(&x, 3, 3, 1, 1);
+        assert_eq!((oh, ow), (2, 2));
+        // top-left patch: entire first kernel row is padding
+        assert_eq!(&p[0..3], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn strided_output_size() {
+        let mut rng = Rng::new(42);
+        let x = TensorI8::random(&[4, 9, 9], &mut rng);
+        let (_p, oh, ow) = im2col(&x, 3, 3, 2, 1);
+        assert_eq!((oh, ow), (5, 5));
+    }
+
+    #[test]
+    fn grouped_extracts_channel_slice() {
+        let mut rng = Rng::new(43);
+        let x = TensorI8::random(&[4, 3, 3], &mut rng);
+        let (pg, _, _) = im2col_group(&x, 1, 1, 1, 0, 2, 4);
+        for pix in 0..9 {
+            assert_eq!(pg[pix * 2], x.data[2 * 9 + pix]);
+            assert_eq!(pg[pix * 2 + 1], x.data[3 * 9 + pix]);
+        }
+    }
+}

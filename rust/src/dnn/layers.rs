@@ -1,0 +1,723 @@
+//! Quantized DNN layers (int8 symmetric, int32 accumulation).
+//!
+//! Every GEMM in every layer is routed through [`run_gemm`], which first
+//! offers the call to the [`GemmHook`] installed in the [`ForwardCtx`].
+//! This is the crate's analogue of the paper's PyTorch forward hooks: the
+//! cross-layer runner intercepts exactly one GEMM (or one tile of one
+//! GEMM) and executes it on the RTL mesh, while everything else runs on
+//! the native software path.
+
+use super::gemm::gemm_i8;
+use super::im2col::{conv_out, im2col_group};
+pub use super::tensor::Act;
+use super::tensor::TensorI8;
+use crate::util::quant::{quant_f32, requant_slice};
+
+/// Identifies one GEMM call site during a forward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmSiteId {
+    /// Index of the layer in the model's layer list.
+    pub layer: usize,
+    /// Ordinal of the GEMM within the layer (groups, attention matmuls).
+    pub ordinal: usize,
+}
+
+/// A GEMM call offered to the hook: `C = A . B + D` (flat row-major).
+pub struct GemmCall<'s> {
+    pub site: GemmSiteId,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub a: &'s [i8],
+    pub b: &'s [i8],
+    pub d: &'s [i32],
+}
+
+/// Intercepts GEMMs during a forward pass (cross-layer offload, software
+/// fault injection, call tracing...).
+pub trait GemmHook {
+    /// Return `Some(c)` to take over the call, `None` to let the native
+    /// path run it.
+    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>>;
+
+    /// Offered the requantized int8 output of every layer (SW-level
+    /// output injection); may mutate it in place.
+    fn layer_output(&mut self, _layer: usize, _out: &mut Act) {}
+}
+
+/// Per-forward-pass context.
+pub struct ForwardCtx<'h> {
+    pub hook: Option<&'h mut dyn GemmHook>,
+    /// GEMM ordinal counter within the current layer.
+    ordinal: usize,
+    layer: usize,
+}
+
+impl<'h> ForwardCtx<'h> {
+    pub fn new(hook: Option<&'h mut dyn GemmHook>) -> Self {
+        ForwardCtx {
+            hook,
+            ordinal: 0,
+            layer: 0,
+        }
+    }
+
+    pub fn plain() -> ForwardCtx<'static> {
+        ForwardCtx {
+            hook: None,
+            ordinal: 0,
+            layer: 0,
+        }
+    }
+
+    fn begin_layer(&mut self, layer: usize) {
+        self.layer = layer;
+        self.ordinal = 0;
+    }
+}
+
+/// All GEMMs funnel through here.
+pub fn run_gemm(
+    ctx: &mut ForwardCtx<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[i8],
+    b: &[i8],
+    d: &[i32],
+) -> Vec<i32> {
+    let site = GemmSiteId {
+        layer: ctx.layer,
+        ordinal: ctx.ordinal,
+    };
+    ctx.ordinal += 1;
+    if let Some(hook) = ctx.hook.as_deref_mut() {
+        let call = GemmCall { site, m, k, n, a, b, d };
+        if let Some(c) = hook.gemm(&call) {
+            debug_assert_eq!(c.len(), m * n);
+            return c;
+        }
+    }
+    let mut c = vec![0i32; m * n];
+    gemm_i8(m, k, n, a, b, d, &mut c);
+    c
+}
+
+// ---------------------------------------------------------------------
+// Layers
+// ---------------------------------------------------------------------
+
+/// Quantized 2-D convolution (supports grouped / depthwise via `groups`).
+/// Weights are stored GEMM-ready: per group, a [cin_g*kh*kw, cout_g]
+/// column-major-by-output matrix, groups concatenated.
+#[derive(Clone, Debug)]
+pub struct QConv2d {
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub m: f32,
+    pub relu: bool,
+    pub wmat: Vec<i8>,
+    pub bias: Vec<i32>,
+}
+
+impl QConv2d {
+    pub fn param_count(&self) -> usize {
+        self.wmat.len() + self.bias.len()
+    }
+
+    pub fn out_shape(&self, x: &TensorI8) -> (usize, usize, usize) {
+        (
+            self.cout,
+            conv_out(x.shape[1], self.kh, self.stride, self.pad),
+            conv_out(x.shape[2], self.kw, self.stride, self.pad),
+        )
+    }
+
+    pub fn forward(&self, x: &TensorI8, ctx: &mut ForwardCtx<'_>) -> TensorI8 {
+        assert_eq!(x.shape[0], self.cin, "channel mismatch");
+        assert_eq!(self.cin % self.groups, 0);
+        assert_eq!(self.cout % self.groups, 0);
+        let cin_g = self.cin / self.groups;
+        let cout_g = self.cout / self.groups;
+        let kelems = cin_g * self.kh * self.kw;
+        let (_c, oh, ow) = self.out_shape(x);
+        let p = oh * ow;
+        let mut out = TensorI8::zeros(&[self.cout, oh, ow]);
+        let mut q = vec![0i8; p * cout_g];
+        for g in 0..self.groups {
+            let (patches, _, _) = im2col_group(
+                x,
+                self.kh,
+                self.kw,
+                self.stride,
+                self.pad,
+                g * cin_g,
+                (g + 1) * cin_g,
+            );
+            let w_g = &self.wmat[g * kelems * cout_g..(g + 1) * kelems * cout_g];
+            let bias_g = &self.bias[g * cout_g..(g + 1) * cout_g];
+            // bias broadcast over pixels
+            let mut d = vec![0i32; p * cout_g];
+            for pix in 0..p {
+                d[pix * cout_g..(pix + 1) * cout_g].copy_from_slice(bias_g);
+            }
+            let acc = run_gemm(ctx, p, kelems, cout_g, &patches, w_g, &d);
+            requant_slice(&acc, self.m, self.relu, &mut q);
+            // [P, cout_g] -> CHW
+            for oc in 0..cout_g {
+                let ch = g * cout_g + oc;
+                for pix in 0..p {
+                    out.data[ch * p + pix] = q[pix * cout_g + oc];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Quantized linear layer applied row-wise to an [L, in_f] matrix.
+#[derive(Clone, Debug)]
+pub struct QLinear {
+    pub in_f: usize,
+    pub out_f: usize,
+    pub m: f32,
+    pub relu: bool,
+    /// [in_f, out_f] row-major.
+    pub w: Vec<i8>,
+    pub bias: Vec<i32>,
+}
+
+impl QLinear {
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.bias.len()
+    }
+
+    pub fn forward(&self, x: &TensorI8, ctx: &mut ForwardCtx<'_>) -> TensorI8 {
+        let l = x.shape[0];
+        assert_eq!(x.shape[1], self.in_f, "linear input width mismatch");
+        let mut d = vec![0i32; l * self.out_f];
+        for row in 0..l {
+            d[row * self.out_f..(row + 1) * self.out_f].copy_from_slice(&self.bias);
+        }
+        let acc = run_gemm(ctx, l, self.in_f, self.out_f, &x.data, &self.w, &d);
+        let mut q = vec![0i8; l * self.out_f];
+        requant_slice(&acc, self.m, self.relu, &mut q);
+        TensorI8::from_vec(&[l, self.out_f], q)
+    }
+}
+
+/// Single-head quantized attention block (I-ViT style): integer
+/// projections and AV/output matmuls, f32 softmax requantized to [0,127].
+/// Mirrors `python/compile/model.py::make_qattention` bit-for-bit on the
+/// integer path.
+#[derive(Clone, Debug)]
+pub struct QAttention {
+    pub d_model: usize,
+    pub wq: Vec<i8>,
+    pub wk: Vec<i8>,
+    pub wv: Vec<i8>,
+    pub wo: Vec<i8>,
+    pub mq: f32,
+    pub mk: f32,
+    pub mv: f32,
+    pub ms: f32,
+    pub mo: f32,
+    pub mw: f32,
+}
+
+impl QAttention {
+    pub fn param_count(&self) -> usize {
+        4 * self.d_model * self.d_model
+    }
+
+    pub fn forward(&self, x: &TensorI8, ctx: &mut ForwardCtx<'_>) -> TensorI8 {
+        let l = x.shape[0];
+        let dm = self.d_model;
+        assert_eq!(x.shape[1], dm);
+        let zeros_ld = vec![0i32; l * dm];
+        let proj = |ctx: &mut ForwardCtx<'_>, w: &[i8], m: f32| -> Vec<i8> {
+            let acc = run_gemm(ctx, l, dm, dm, &x.data, w, &zeros_ld);
+            let mut q = vec![0i8; l * dm];
+            requant_slice(&acc, m, false, &mut q);
+            q
+        };
+        let q = proj(ctx, &self.wq, self.mq);
+        let k = proj(ctx, &self.wk, self.mk);
+        let v = proj(ctx, &self.wv, self.mv);
+        // S = Q . K^T  (transpose K into GEMM layout)
+        let mut kt = vec![0i8; dm * l];
+        for i in 0..l {
+            for j in 0..dm {
+                kt[j * l + i] = k[i * dm + j];
+            }
+        }
+        let zeros_ll = vec![0i32; l * l];
+        let s = run_gemm(ctx, l, dm, l, &q, &kt, &zeros_ll);
+        // f32 softmax over rows, probabilities quantized to [0, 127]
+        let mut p_i8 = vec![0i8; l * l];
+        for row in 0..l {
+            let srow = &s[row * l..(row + 1) * l];
+            let maxv = srow
+                .iter()
+                .map(|&x| x as f32 * self.ms)
+                .fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = srow
+                .iter()
+                .map(|&x| (x as f32 * self.ms - maxv).exp())
+                .collect();
+            let sum: f32 = exps.iter().sum();
+            for (j, e) in exps.iter().enumerate() {
+                p_i8[row * l + j] = quant_f32(e / sum, 127.0).max(0);
+            }
+        }
+        // O = P . V, Y = O . Wo
+        let o_acc = run_gemm(ctx, l, l, dm, &p_i8, &v, &zeros_ld);
+        let mut o = vec![0i8; l * dm];
+        requant_slice(&o_acc, self.mo, false, &mut o);
+        let y_acc = run_gemm(ctx, l, dm, dm, &o, &self.wo, &zeros_ld);
+        let mut y = vec![0i8; l * dm];
+        requant_slice(&y_acc, self.mw, false, &mut y);
+        TensorI8::from_vec(&[l, dm], y)
+    }
+}
+
+/// Saturating residual add: `y = sat(x + f(x))` around a sub-stack.
+#[derive(Clone, Debug)]
+pub struct Residual {
+    pub body: Vec<Layer>,
+}
+
+/// Parallel branches concatenated along channels (Inception-style).
+#[derive(Clone, Debug)]
+pub struct ParallelConcat {
+    pub branches: Vec<Vec<Layer>>,
+}
+
+/// The layer algebra of the model zoo.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    Conv(QConv2d),
+    Linear(QLinear),
+    Attention(QAttention),
+    Residual(Residual),
+    ParallelConcat(ParallelConcat),
+    /// 2x2 (or kxk) max pooling.
+    MaxPool { k: usize, stride: usize },
+    /// Global average pool: [C,H,W] -> tokens [1, C].
+    GlobalAvgPool,
+    /// Channel shuffle (ShuffleNet).
+    ChannelShuffle { groups: usize },
+    /// [C,H,W] -> tokens [H*W, C] (patch embedding output).
+    ToTokens,
+    /// Mean over tokens: [L, D] -> [1, D] (ViT classification pooling).
+    TokenMean,
+    /// ReLU applied in place (for post-residual activation).
+    Relu,
+}
+
+impl Layer {
+    /// Number of parameters (Table II reporting).
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Conv(c) => c.param_count(),
+            Layer::Linear(l) => l.param_count(),
+            Layer::Attention(a) => a.param_count(),
+            Layer::Residual(r) => r.body.iter().map(Layer::param_count).sum(),
+            Layer::ParallelConcat(p) => p
+                .branches
+                .iter()
+                .flat_map(|b| b.iter().map(Layer::param_count))
+                .sum(),
+            _ => 0,
+        }
+    }
+
+    /// Forward one layer. `li` is the flat layer index used for GEMM-site
+    /// addressing (nested layers share their parent's index).
+    pub fn forward(&self, x: &Act, li: usize, ctx: &mut ForwardCtx<'_>) -> Act {
+        ctx.begin_layer(li);
+        match self {
+            Layer::Conv(c) => Act::Chw(c.forward(x.chw(), ctx)),
+            Layer::Linear(l) => Act::Tokens(l.forward(x.tensor(), ctx)),
+            Layer::Attention(a) => Act::Tokens(a.forward(x.tokens(), ctx)),
+            Layer::Residual(res) => {
+                let mut h = x.clone();
+                for layer in &res.body {
+                    h = layer.forward(&h, li, ctx);
+                    ctx.begin_layer(li); // keep the parent's site addressing
+                }
+                let xt = x.tensor();
+                let ht = h.tensor_mut();
+                assert_eq!(xt.shape, ht.shape, "residual shape mismatch");
+                for (hv, &xv) in ht.data.iter_mut().zip(&xt.data) {
+                    *hv = hv.saturating_add(xv);
+                }
+                h
+            }
+            Layer::ParallelConcat(pc) => {
+                let mut chans: Vec<TensorI8> = Vec::new();
+                for branch in &pc.branches {
+                    let mut h = x.clone();
+                    for layer in branch {
+                        h = layer.forward(&h, li, ctx);
+                        ctx.begin_layer(li);
+                    }
+                    chans.push(h.chw().clone());
+                }
+                let (hh, ww) = (chans[0].shape[1], chans[0].shape[2]);
+                let total_c: usize = chans.iter().map(|t| t.shape[0]).sum();
+                let mut out = TensorI8::zeros(&[total_c, hh, ww]);
+                let mut off = 0;
+                for t in &chans {
+                    assert_eq!((t.shape[1], t.shape[2]), (hh, ww));
+                    out.data[off..off + t.data.len()].copy_from_slice(&t.data);
+                    off += t.data.len();
+                }
+                Act::Chw(out)
+            }
+            Layer::MaxPool { k, stride } => {
+                let t = x.chw();
+                let (c, h, w) = (t.shape[0], t.shape[1], t.shape[2]);
+                let oh = (h - k) / stride + 1;
+                let ow = (w - k) / stride + 1;
+                let mut out = TensorI8::zeros(&[c, oh, ow]);
+                for cc in 0..c {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut best = i8::MIN;
+                            for dy in 0..*k {
+                                for dx in 0..*k {
+                                    best =
+                                        best.max(t.at3(cc, oy * stride + dy, ox * stride + dx));
+                                }
+                            }
+                            out.data[(cc * oh + oy) * ow + ox] = best;
+                        }
+                    }
+                }
+                Act::Chw(out)
+            }
+            Layer::GlobalAvgPool => {
+                let t = x.chw();
+                let (c, h, w) = (t.shape[0], t.shape[1], t.shape[2]);
+                let n = (h * w) as f32;
+                let mut out = TensorI8::zeros(&[1, c]);
+                for cc in 0..c {
+                    let sum: i32 = t.data[cc * h * w..(cc + 1) * h * w]
+                        .iter()
+                        .map(|&v| v as i32)
+                        .sum();
+                    out.data[cc] = (sum as f32 / n + 0.5).floor().clamp(-128.0, 127.0) as i8;
+                }
+                Act::Tokens(out)
+            }
+            Layer::ChannelShuffle { groups } => {
+                let t = x.chw();
+                let (c, h, w) = (t.shape[0], t.shape[1], t.shape[2]);
+                assert_eq!(c % groups, 0);
+                let per = c / groups;
+                let mut out = TensorI8::zeros(&[c, h, w]);
+                for cc in 0..c {
+                    // (g, i) -> (i, g) transpose of channel groups
+                    let (g, i) = (cc / per, cc % per);
+                    let dst = i * groups + g;
+                    out.data[dst * h * w..(dst + 1) * h * w]
+                        .copy_from_slice(&t.data[cc * h * w..(cc + 1) * h * w]);
+                }
+                Act::Chw(out)
+            }
+            Layer::ToTokens => {
+                let t = x.chw();
+                let (c, h, w) = (t.shape[0], t.shape[1], t.shape[2]);
+                let l = h * w;
+                let mut out = TensorI8::zeros(&[l, c]);
+                for cc in 0..c {
+                    for pix in 0..l {
+                        out.data[pix * c + cc] = t.data[cc * l + pix];
+                    }
+                }
+                Act::Tokens(out)
+            }
+            Layer::TokenMean => {
+                let t = x.tokens();
+                let (l, d) = (t.shape[0], t.shape[1]);
+                let mut out = TensorI8::zeros(&[1, d]);
+                for j in 0..d {
+                    let sum: i32 = (0..l).map(|i| t.data[i * d + j] as i32).sum();
+                    out.data[j] =
+                        (sum as f32 / l as f32 + 0.5).floor().clamp(-128.0, 127.0) as i8;
+                }
+                Act::Tokens(out)
+            }
+            Layer::Relu => {
+                let mut out = x.clone();
+                for v in out.tensor_mut().data.iter_mut() {
+                    *v = (*v).max(0);
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn conv_fixture(groups: usize) -> (QConv2d, TensorI8) {
+        let mut rng = Rng::new(51);
+        let (cin, cout, k) = (4usize, 6usize, 3usize);
+        let cin_g = cin / groups;
+        let cout_g = cout / groups;
+        let conv = QConv2d {
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: 1,
+            pad: 1,
+            groups,
+            m: 0.03,
+            relu: true,
+            wmat: {
+                let mut w = vec![0i8; groups * cin_g * k * k * cout_g];
+                rng.fill_i8(&mut w);
+                w
+            },
+            bias: (0..cout as i32).map(|v| v * 10).collect(),
+        };
+        let x = TensorI8::random(&[cin, 6, 6], &mut rng);
+        (conv, x)
+    }
+
+    /// Direct (definition-level) convolution oracle.
+    fn conv_oracle(conv: &QConv2d, x: &TensorI8) -> TensorI8 {
+        let (cout, oh, ow) = conv.out_shape(x);
+        let cin_g = conv.cin / conv.groups;
+        let cout_g = conv.cout / conv.groups;
+        let kelems = cin_g * conv.kh * conv.kw;
+        let mut out = TensorI8::zeros(&[cout, oh, ow]);
+        for oc in 0..cout {
+            let g = oc / cout_g;
+            let ocg = oc % cout_g;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = conv.bias[oc];
+                    for ic in 0..cin_g {
+                        for ky in 0..conv.kh {
+                            for kx in 0..conv.kw {
+                                let iy =
+                                    (oy * conv.stride + ky) as isize - conv.pad as isize;
+                                let ix =
+                                    (ox * conv.stride + kx) as isize - conv.pad as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= x.shape[1] as isize
+                                    || ix >= x.shape[2] as isize
+                                {
+                                    continue;
+                                }
+                                let xv =
+                                    x.at3(g * cin_g + ic, iy as usize, ix as usize) as i32;
+                                let widx = ((ic * conv.kh + ky) * conv.kw + kx) * cout_g + ocg;
+                                let wv = conv.wmat[g * kelems * cout_g + widx] as i32;
+                                acc = acc.wrapping_add(xv * wv);
+                            }
+                        }
+                    }
+                    let mut q = crate::util::quant::requant(acc, conv.m);
+                    if conv.relu {
+                        q = q.max(0);
+                    }
+                    out.data[(oc * oh + oy) * ow + ox] = q;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_definition_oracle() {
+        for groups in [1usize, 2] {
+            let (conv, x) = conv_fixture(groups);
+            let got = conv.forward(&x, &mut ForwardCtx::plain());
+            let want = conv_oracle(&conv, &x);
+            assert_eq!(got, want, "groups={groups}");
+        }
+    }
+
+    #[test]
+    fn depthwise_conv_runs() {
+        let mut rng = Rng::new(52);
+        let conv = QConv2d {
+            cin: 4,
+            cout: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            groups: 4,
+            m: 0.05,
+            relu: false,
+            wmat: {
+                let mut w = vec![0i8; 4 * 9];
+                rng.fill_i8(&mut w);
+                w
+            },
+            bias: vec![0; 4],
+        };
+        let x = TensorI8::random(&[4, 5, 5], &mut rng);
+        let got = conv.forward(&x, &mut ForwardCtx::plain());
+        assert_eq!(got.shape, vec![4, 5, 5]);
+        assert_eq!(got, conv_oracle(&conv, &x));
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let lin = QLinear {
+            in_f: 3,
+            out_f: 2,
+            m: 1.0,
+            relu: false,
+            w: vec![1, 0, 0, 1, 1, 1], // [3,2]
+            bias: vec![5, -5],
+        };
+        let x = TensorI8::from_vec(&[1, 3], vec![1, 2, 3]);
+        let y = lin.forward(&x, &mut ForwardCtx::plain());
+        // y0 = 1*1 + 2*0 + 3*1 + 5 = 9 ; y1 = 0 + 2 + 3 - 5 = 0
+        assert_eq!(y.data, vec![9, 0]);
+    }
+
+    #[test]
+    fn global_avg_pool_rounds_half_up() {
+        let x = TensorI8::from_vec(&[1, 2, 2], vec![1, 2, 2, 2]); // mean 1.75
+        let y = Layer::GlobalAvgPool.forward(&Act::Chw(x), 0, &mut ForwardCtx::plain());
+        assert_eq!(y.tokens().data, vec![2]);
+    }
+
+    #[test]
+    fn channel_shuffle_is_permutation() {
+        let mut rng = Rng::new(53);
+        let x = TensorI8::random(&[6, 2, 2], &mut rng);
+        let y = Layer::ChannelShuffle { groups: 2 }.forward(
+            &Act::Chw(x.clone()),
+            0,
+            &mut ForwardCtx::plain(),
+        );
+        let yt = y.chw();
+        // channel (g, i) moves to i*groups + g
+        for g in 0..2 {
+            for i in 0..3 {
+                let src = g * 3 + i;
+                let dst = i * 2 + g;
+                assert_eq!(
+                    &yt.data[dst * 4..(dst + 1) * 4],
+                    &x.data[src * 4..(src + 1) * 4]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn residual_adds_saturating() {
+        // body = identity (empty) => y = sat(x + x)
+        let x = TensorI8::from_vec(&[1, 1, 2], vec![100, -100]);
+        let y = Layer::Residual(Residual { body: vec![] }).forward(
+            &Act::Chw(x),
+            0,
+            &mut ForwardCtx::plain(),
+        );
+        assert_eq!(y.chw().data, vec![127, -128]);
+    }
+
+    #[test]
+    fn attention_shapes_and_determinism() {
+        let mut rng = Rng::new(54);
+        let dm = 8;
+        let attn = QAttention {
+            d_model: dm,
+            wq: TensorI8::random(&[dm * dm], &mut rng).data,
+            wk: TensorI8::random(&[dm * dm], &mut rng).data,
+            wv: TensorI8::random(&[dm * dm], &mut rng).data,
+            wo: TensorI8::random(&[dm * dm], &mut rng).data,
+            mq: 0.02,
+            mk: 0.02,
+            mv: 0.02,
+            ms: 0.05,
+            mo: 0.05,
+            mw: 0.03,
+        };
+        let x = TensorI8::random(&[4, dm], &mut rng);
+        let y1 = attn.forward(&x, &mut ForwardCtx::plain());
+        let y2 = attn.forward(&x, &mut ForwardCtx::plain());
+        assert_eq!(y1.shape, vec![4, dm]);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn gemm_hook_sees_all_sites() {
+        struct Counter(Vec<GemmSiteId>);
+        impl GemmHook for Counter {
+            fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+                self.0.push(call.site);
+                None
+            }
+        }
+        let mut rng = Rng::new(55);
+        let dm = 4;
+        let attn = QAttention {
+            d_model: dm,
+            wq: TensorI8::random(&[dm * dm], &mut rng).data,
+            wk: TensorI8::random(&[dm * dm], &mut rng).data,
+            wv: TensorI8::random(&[dm * dm], &mut rng).data,
+            wo: TensorI8::random(&[dm * dm], &mut rng).data,
+            mq: 0.02,
+            mk: 0.02,
+            mv: 0.02,
+            ms: 0.05,
+            mo: 0.05,
+            mw: 0.03,
+        };
+        let x = TensorI8::random(&[2, dm], &mut rng);
+        let mut counter = Counter(vec![]);
+        let mut ctx = ForwardCtx::new(Some(&mut counter));
+        ctx.begin_layer(7);
+        attn.forward(&x, &mut ctx);
+        // q, k, v projections + qk^T + pv + out = 6 GEMMs, ordinals 0..6
+        assert_eq!(counter.0.len(), 6);
+        assert!(counter.0.iter().all(|s| s.layer == 7));
+        assert_eq!(
+            counter.0.iter().map(|s| s.ordinal).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4, 5]
+        );
+    }
+
+    #[test]
+    fn hook_can_override_gemm() {
+        struct Zeroer;
+        impl GemmHook for Zeroer {
+            fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+                Some(vec![0; call.m * call.n])
+            }
+        }
+        let lin = QLinear {
+            in_f: 2,
+            out_f: 2,
+            m: 1.0,
+            relu: false,
+            w: vec![1, 1, 1, 1],
+            bias: vec![9, 9],
+        };
+        let x = TensorI8::from_vec(&[1, 2], vec![1, 1]);
+        let mut z = Zeroer;
+        let mut ctx = ForwardCtx::new(Some(&mut z));
+        let y = lin.forward(&x, &mut ctx);
+        assert_eq!(y.data, vec![0, 0], "hook result replaced the GEMM");
+    }
+}

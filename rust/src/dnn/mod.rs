@@ -1,0 +1,14 @@
+//! Quantized DNN substrate: tensors, native int8 GEMM, im2col, layers,
+//! the inference engine with GEMM-site hooks (the crate's analogue of
+//! the paper's PyTorch forward hooks) and the Table II model zoo.
+
+pub mod engine;
+pub mod gemm;
+pub mod im2col;
+pub mod layers;
+pub mod models;
+pub mod tensor;
+
+pub use engine::{argmax, synthetic_input, GemmSiteInfo, Model};
+pub use layers::{ForwardCtx, GemmCall, GemmHook, GemmSiteId, Layer};
+pub use tensor::{Act, TensorI32, TensorI8};

@@ -1,0 +1,180 @@
+//! Flat int8 / int32 tensors (CHW activations, GEMM-layout weights).
+//!
+//! The numeric contract matches `python/compile/kernels/ref.py`: int8
+//! symmetric quantization, int32 accumulation, requantization via
+//! `util::quant::requant`.
+
+use crate::util::Rng;
+
+/// A dense int8 tensor with an explicit shape (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI8 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI8 {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI8 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Deterministic random tensor (synthetic weights / inputs).
+    pub fn random(shape: &[usize], rng: &mut Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_i8(&mut t.data);
+        t
+    }
+
+    /// Random tensor with a sparsity fraction of exact zeros — DNN
+    /// activations after ReLU are sparse, which is the masking mechanism
+    /// behind the paper's Fig. 5b. `p_zero` in [0, 1].
+    pub fn random_sparse(shape: &[usize], p_zero: f64, rng: &mut Rng) -> Self {
+        let mut t = Self::random(shape, rng);
+        for v in t.data.iter_mut() {
+            if rng.chance(p_zero) {
+                *v = 0;
+            }
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// CHW accessor (3-D tensors).
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> i8 {
+        debug_assert_eq!(self.shape.len(), 3);
+        self.data[(c * self.shape[1] + h) * self.shape[2] + w]
+    }
+}
+
+/// A dense int32 tensor (accumulators, biases).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI32 {
+            shape: shape.to_vec(),
+            data: vec![0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn random(shape: &[usize], span: i32, rng: &mut Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        for v in t.data.iter_mut() {
+            *v = (rng.below(2 * span as u64) as i32) - span;
+        }
+        t
+    }
+}
+
+/// Activation flowing between layers: either a CHW image tensor (CNNs)
+/// or a token matrix (ViTs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Act {
+    /// [C, H, W]
+    Chw(TensorI8),
+    /// [L, D] (sequence of L tokens of width D)
+    Tokens(TensorI8),
+}
+
+impl Act {
+    pub fn tensor(&self) -> &TensorI8 {
+        match self {
+            Act::Chw(t) | Act::Tokens(t) => t,
+        }
+    }
+
+    pub fn tensor_mut(&mut self) -> &mut TensorI8 {
+        match self {
+            Act::Chw(t) | Act::Tokens(t) => t,
+        }
+    }
+
+    pub fn chw(&self) -> &TensorI8 {
+        match self {
+            Act::Chw(t) => t,
+            Act::Tokens(_) => panic!("expected CHW activation, got tokens"),
+        }
+    }
+
+    pub fn tokens(&self) -> &TensorI8 {
+        match self {
+            Act::Tokens(t) => t,
+            Act::Chw(_) => panic!("expected token activation, got CHW"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_product() {
+        let t = TensorI8::zeros(&[3, 4, 5]);
+        assert_eq!(t.len(), 60);
+        assert!(t.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn at3_indexing() {
+        let mut t = TensorI8::zeros(&[2, 3, 4]);
+        t.data[(1 * 3 + 2) * 4 + 3] = 42;
+        assert_eq!(t.at3(1, 2, 3), 42);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(
+            TensorI8::random(&[16], &mut r1),
+            TensorI8::random(&[16], &mut r2)
+        );
+    }
+
+    #[test]
+    fn sparse_has_zeros() {
+        let mut rng = Rng::new(6);
+        let t = TensorI8::random_sparse(&[1000], 0.5, &mut rng);
+        let zeros = t.data.iter().filter(|&&v| v == 0).count();
+        assert!(zeros > 350 && zeros < 700, "zeros = {zeros}");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected CHW")]
+    fn act_kind_mismatch_panics() {
+        let a = Act::Tokens(TensorI8::zeros(&[4, 4]));
+        a.chw();
+    }
+}

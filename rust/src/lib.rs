@@ -1,0 +1,50 @@
+//! # ENFOR-SA — End-to-end cross-layer transient fault injector for
+//! DNN reliability assessment on systolic arrays.
+//!
+//! This crate reproduces the ENFOR-SA system (Tonetto et al., 2026) as a
+//! three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the RTL-level
+//!   systolic-array mesh simulator with the paper's non-intrusive
+//!   *inverted-assignment-order* fault injection ([`mesh`]), the HDFIT-style
+//!   instrumented baseline ([`mesh::hdfit`]), the full-SoC baseline
+//!   ([`soc`]), the quantized DNN substrate ([`dnn`]), the software-level
+//!   injector ([`swfi`]), the statistical campaign engine ([`campaign`]) and
+//!   the async campaign coordinator ([`coordinator`]).
+//! * **L2** — JAX graphs of the quantized layers (`python/compile/model.py`),
+//!   AOT-lowered to HLO text and executed from Rust via PJRT ([`runtime`]).
+//! * **L1** — Pallas int8 GEMM / im2col kernels
+//!   (`python/compile/kernels/`), the functional golden model of the mesh.
+//!
+//! Python never runs on the request path: once `make artifacts` has produced
+//! `artifacts/*.hlo.txt`, the binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use enfor_sa::mesh::{driver::MatmulDriver, Fault, Mesh, SignalKind};
+//!
+//! let mut mesh = Mesh::new(8, enfor_sa::config::Dataflow::OutputStationary);
+//! let a = vec![vec![1i8; 8]; 8];
+//! let b = vec![vec![2i8; 8]; 8];
+//! let d = vec![vec![0i32; 8]; 8];
+//! let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+//! let fault = Fault::new(3, 4, SignalKind::Weight, 2, 10);
+//! let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+//! assert_ne!(golden, faulty);
+//! ```
+
+pub mod benchkit;
+pub mod campaign;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod mesh;
+pub mod report;
+pub mod runtime;
+pub mod soc;
+pub mod swfi;
+pub mod util;
+
+/// Crate version string (matches Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,408 @@
+//! `enfor-sa` — the command-line front end of the framework.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (see
+//! DESIGN.md §5 for the table/figure index):
+//!
+//! ```text
+//! enfor-sa models                          Table II
+//! enfor-sa cycle-bench  [--dims 4,8,..]    Table III
+//! enfor-sa matmul-bench [--dims ..]        Table IV
+//! enfor-sa layer-bench  [--dims ..]        Table V
+//! enfor-sa campaign --model <name> ...     Table VI (one model)
+//! enfor-sa suite table6 --models a,b,..    Table VI (many models)
+//! enfor-sa maps --signal control|weight    Fig. 5a / 5b
+//! enfor-sa validate                        §IV-B accuracy validation
+//! enfor-sa report --state-inventory        DESIGN.md D2 ablation data
+//! ```
+
+use anyhow::{bail, Result};
+use enfor_sa::benchkit;
+use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
+use enfor_sa::config::{Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope};
+use enfor_sa::coordinator::{run_parallel, Args};
+use enfor_sa::dnn::models;
+use enfor_sa::mesh::driver::{gold_matmul, MatmulDriver};
+use enfor_sa::mesh::hdfit::InstrumentedMesh;
+use enfor_sa::mesh::{Mesh, SignalKind};
+use enfor_sa::report::{format_pe_map, format_table, human_time, pe_map_json};
+use enfor_sa::soc::Soc;
+use enfor_sa::util::json::Json;
+use enfor_sa::util::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: enfor-sa <models|cycle-bench|matmul-bench|layer-bench|campaign|suite|maps|validate|report> [flags]\n\
+     run `enfor-sa <cmd> --help` conceptually via DESIGN.md §5"
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "models" => cmd_models(&args),
+        "cycle-bench" => cmd_cycle_bench(&args),
+        "matmul-bench" => cmd_matmul_bench(&args),
+        "layer-bench" => cmd_layer_bench(&args),
+        "campaign" => cmd_campaign(&args),
+        "suite" => cmd_suite(&args),
+        "maps" => cmd_maps(&args),
+        "validate" => cmd_validate(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+/// Common mesh/campaign configuration from flags (+ optional --config).
+fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.mesh.dim = args.usize_or("dim", cfg.mesh.dim)?;
+    if let Some(df) = args.get("dataflow") {
+        cfg.mesh.dataflow = Dataflow::parse(df)
+            .ok_or_else(|| anyhow::anyhow!("bad --dataflow {df}"))?;
+    }
+    cfg.campaign.seed = args.u64_or("seed", cfg.campaign.seed)?;
+    cfg.campaign.faults_per_layer = args.u64_or("faults", cfg.campaign.faults_per_layer)?;
+    cfg.campaign.inputs = args.u64_or("inputs", cfg.campaign.inputs)?;
+    cfg.campaign.workers = args.usize_or("workers", cfg.campaign.workers)?;
+    if let Some(b) = args.get("backend") {
+        cfg.campaign.backend =
+            Backend::parse(b).ok_or_else(|| anyhow::anyhow!("bad --backend {b}"))?;
+    }
+    if let Some(s) = args.get("offload-scope") {
+        cfg.campaign.offload_scope = OffloadScope::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --offload-scope {s}"))?;
+    }
+    if let Some(s) = args.get("signals") {
+        cfg.campaign.signals = s.split(',').map(str::to_string).collect();
+    }
+    cfg.validate()?;
+    Ok((cfg.mesh, cfg.campaign))
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42)?;
+    args.finish()?;
+    let zoo = models::zoo(seed);
+    let rows: Vec<Vec<String>> = zoo
+        .iter()
+        .zip(models::TABLE_II.iter())
+        .map(|(m, info)| {
+            vec![
+                m.name.clone(),
+                format!("{:.2}%", info.paper_top1),
+                format!("{:.2}M", info.paper_params_m),
+                format!("{}", m.param_count()),
+                format!("{}", m.layers.len()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            "TABLE II: evaluated quantized models (paper metadata + this build)",
+            &["Model", "Paper Top-1", "Paper params", "Our params", "Our layers"],
+            &rows,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_cycle_bench(args: &Args) -> Result<()> {
+    let dims = args.usize_list_or("dims", &[4, 8, 16, 32, 64])?;
+    let cycles = args.u64_or("cycles", 1_000_000)?;
+    args.finish()?;
+    let rows = benchkit::cycle_time(&dims, cycles);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("DIM{}", r.dim),
+                format!("{:.3}us", r.enforsa_us),
+                format!("{:.3}us", r.hdfit_us),
+                format!("{:.2}x", r.improvement()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            &format!("TABLE III: mean cycle time ({cycles} raw step() calls)"),
+            &["Array Size", "ENFOR-SA (mesh only)", "HDFIT (mesh only)", "Improvement"],
+            &table,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_matmul_bench(args: &Args) -> Result<()> {
+    let dims = args.usize_list_or("dims", &[4, 8, 16, 32, 64])?;
+    let reps = args.u64_or("reps", 1000)?;
+    args.finish()?;
+    let rows = benchkit::matmul_time(&dims, reps);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("DIM{}", r.dim),
+                format!("{:.3}ms", r.enforsa_ms),
+                format!("{:.3}ms", r.hdfit_ms),
+                format!("{:.2}x", r.improvement()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            &format!("TABLE IV: mean matmul time ({reps} matmuls)"),
+            &["Array Size", "ENFOR-SA (mesh only)", "HDFIT (mesh only)", "Improvement"],
+            &table,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_layer_bench(args: &Args) -> Result<()> {
+    let dims = args.usize_list_or("dims", &[4, 8, 16, 32, 64])?;
+    args.finish()?;
+    let rows = benchkit::layer_forward(&dims)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("DIM{}", r.dim),
+                human_time(r.enforsa_s),
+                human_time(r.full_soc_s),
+                format!("{:.2}x", r.vs_full_soc()),
+                human_time(r.hdfit_s),
+                format!("{:.2}x", r.vs_hdfit()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            "TABLE V: full forward pass of ResNet50's 1st conv layer",
+            &["Array", "ENFOR-SA", "Full SoC", "vs Full SoC", "HDFIT", "vs HDFIT"],
+            &table,
+        )
+    );
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    let (mesh_cfg, cc) = configs(args)?;
+    let name = args.str_or("model", "quicknet");
+    let out = args.get("out").map(str::to_string);
+    args.finish()?;
+    let model = models::by_name(&name, cc.seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    eprintln!(
+        "campaign: model={name} backend={} dim={} inputs={} faults/layer={}",
+        cc.backend, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
+    );
+    let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
+    let (lo, hi) = r.vuln.ci95();
+    println!(
+        "{}: trials={} critical={} exposed={} masked={}",
+        r.model, r.vuln.trials, r.vuln.critical, r.exposed_trials, r.masked_trials
+    );
+    println!(
+        "VF = {:.4}% (95% CI [{:.4}%, {:.4}%])  wall = {}",
+        r.vf() * 100.0,
+        lo * 100.0,
+        hi * 100.0,
+        human_time(r.wall.as_secs_f64())
+    );
+    for (layer, v) in &r.per_layer {
+        println!("  layer {layer:2}: VF {:.4}% ({} trials)", v.vf() * 100.0, v.trials);
+    }
+    if let Some(path) = out {
+        let j = Json::obj(vec![
+            ("model", Json::str(r.model.clone())),
+            ("backend", Json::str(r.backend.to_string())),
+            ("trials", Json::num(r.vuln.trials as f64)),
+            ("critical", Json::num(r.vuln.critical as f64)),
+            ("exposed", Json::num(r.exposed_trials as f64)),
+            ("masked", Json::num(r.masked_trials as f64)),
+            ("vf", Json::num(r.vf())),
+            ("wall_s", Json::num(r.wall.as_secs_f64())),
+        ]);
+        std::fs::write(&path, j.pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("table6");
+    if which != "table6" {
+        bail!("unknown suite '{which}' (available: table6)");
+    }
+    let (mesh_cfg, cc) = configs(args)?;
+    let default_models: Vec<String> = models::TABLE_II
+        .iter()
+        .map(|i| i.name.to_string())
+        .collect();
+    let list: Vec<String> = match args.get("models") {
+        Some(s) => s.split(',').map(str::to_string).collect(),
+        None => default_models,
+    };
+    args.finish()?;
+    let rows = benchkit::injection_table(&list, &mesh_cfg, &cc)?;
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                human_time(r.sw.wall.as_secs_f64()),
+                human_time(r.rtl.wall.as_secs_f64()),
+                format!("{:.2}%", r.slowdown_pct()),
+                format!("{:.2}%", r.pvf_pct()),
+                format!("{:.2}%", r.avf_pct()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        format_table(
+            "TABLE VI: injection time and AVF/PVF vulnerability factors",
+            &["Model", "SW (inputs)", "ENFOR-SA (RTL)", "Slowdown", "PVF*", "AVF*"],
+            &table,
+        )
+    );
+    let mean_slow: f64 =
+        rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / rows.len() as f64;
+    let mean_pvf: f64 = rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / rows.len() as f64;
+    let mean_avf: f64 = rows.iter().map(|r| r.avf_pct()).sum::<f64>() / rows.len() as f64;
+    println!("Mean slowdown {mean_slow:.2}%  mean PVF {mean_pvf:.2}%  mean AVF {mean_avf:.2}%");
+    println!("*percentage of critical inferences");
+    Ok(())
+}
+
+fn cmd_maps(args: &Args) -> Result<()> {
+    let (mesh_cfg, cc) = configs(args)?;
+    let signal = args.str_or("signal", "control");
+    let trials = args.u64_or("trials-per-pe", 30)?;
+    let model_name = args.str_or("model", "ResNet50");
+    let out = args.get("out").map(str::to_string);
+    args.finish()?;
+    let mut json_maps = Vec::new();
+    match signal.as_str() {
+        "control" => {
+            let model = models::by_name(&model_name, cc.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+            for kind in [SignalKind::Valid, SignalKind::Propag] {
+                // model-level AVF map (the paper's Fig. 5a metric) ...
+                let map =
+                    control_avf_map(&model, 0, mesh_cfg.dim, trials, cc.seed, kind);
+                println!("{}", format_pe_map(&map));
+                json_maps.push(pe_map_json(&map));
+                // ... plus the tile-level exposure map, which shows the
+                // row gradient even at small trial budgets
+                let emap = exposure_map(mesh_cfg.dim, 27, kind, trials * 4, cc.seed);
+                println!("{}", format_pe_map(&emap));
+                json_maps.push(pe_map_json(&emap));
+            }
+        }
+        "weight" => {
+            let map = weight_exposure_map(mesh_cfg.dim, 27, trials, cc.seed);
+            println!("{}", format_pe_map(&map));
+            json_maps.push(pe_map_json(&map));
+        }
+        other => bail!("unknown --signal '{other}' (control|weight)"),
+    }
+    if let Some(path) = out {
+        std::fs::write(&path, Json::Arr(json_maps).pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let dim = args.usize_or("dim", 8)?;
+    let reps = args.u64_or("reps", 200)?;
+    let seed = args.u64_or("seed", 0x5A11D)?;
+    args.finish()?;
+    let mut rng = Rng::new(seed);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut hm = InstrumentedMesh::new(dim);
+    let mut identical = 0u64;
+    for i in 0..reps {
+        let k = 1 + rng.usize_below(24);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 1000);
+        let fault = enfor_sa::campaign::sample_mesh_fault(dim, k, &mut rng, &[]);
+        let c1 = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+        let c2 = MatmulDriver::new(&mut hm).matmul_with_fault(&a, &b, &d, &fault);
+        if c1 == c2 {
+            identical += 1;
+        } else {
+            eprintln!("MISMATCH at rep {i}: fault {fault}");
+        }
+        // also confirm fault-free equality with the software gold
+        let g1 = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        assert_eq!(g1, gold_matmul(&a, &b, &d), "fault-free RTL != SW gold");
+    }
+    println!(
+        "accuracy validation vs HDFIT: {identical}/{reps} identical faulty outputs"
+    );
+    if identical != reps {
+        bail!("ENFOR-SA and HDFIT diverged");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    if args.bool("state-inventory") {
+        args.finish()?;
+        let rows: Vec<Vec<String>> = [4usize, 8, 16, 32, 64]
+            .iter()
+            .map(|&dim| {
+                let soc = Soc::new(dim);
+                let mesh = Mesh::new(dim, Dataflow::OutputStationary);
+                let ratio = soc.state_elements() as f64 / mesh.state_elements() as f64;
+                vec![
+                    format!("DIM{dim}"),
+                    format!("{}", mesh.state_elements()),
+                    format!("{}", soc.state_elements()),
+                    format!("{ratio:.1}x"),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            format_table(
+                "D2: per-cycle state inventory (why mesh isolation wins, and why\n\
+                 the win shrinks with DIM — Table V's trend)",
+                &["Array", "Mesh state", "Full-SoC state", "SoC/Mesh"],
+                &rows,
+            )
+        );
+        return Ok(());
+    }
+    args.finish()?;
+    println!("available: --state-inventory");
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Interface adapters (paper Fig. 3, Step 2).
+//!
+//! When the Mesh is isolated from the SoC, the surrounding hardware —
+//! scratchpad read pipelines that skew operand rows, the transposer, and
+//! the accumulator drain logic — is emulated by these cheap adapters.
+//! They reproduce the *boundary timing* of the real blocks (one column of
+//! skew registers per row/column) without simulating their internals.
+
+/// Emulates the bank of skew shift-registers that staggers operand row
+/// `i` by `i` cycles on its way into the array.
+///
+/// `feed(t)` returns the edge value for lane `i` at cycle `t` given the
+/// dense operand matrix: lane `i` sees element `t - i` of its stream, or
+/// 0 outside the stream window (matching a zero-padded scratchpad read).
+#[derive(Clone, Debug)]
+pub struct SkewFeeder<T = i8> {
+    /// streams[lane][k] = k-th element of the lane's operand stream.
+    streams: Vec<Vec<T>>,
+}
+
+impl<T: Copy + Default> SkewFeeder<T> {
+    /// Build from row streams: lane i carries `rows[i]`.
+    pub fn from_rows(rows: &[Vec<T>]) -> Self {
+        SkewFeeder {
+            streams: rows.to_vec(),
+        }
+    }
+
+    /// Build from the columns of a K x N matrix: lane c carries column c
+    /// (this is the "transposer" path of the real Gemmini frontend).
+    pub fn from_cols(mat: &[Vec<T>]) -> Self {
+        let k = mat.len();
+        let n = if k == 0 { 0 } else { mat[0].len() };
+        let streams = (0..n)
+            .map(|c| (0..k).map(|r| mat[r][c]).collect())
+            .collect();
+        SkewFeeder { streams }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Stream length (all lanes equal by construction).
+    pub fn len(&self) -> usize {
+        self.streams.first().map_or(0, |s| s.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Edge value for `lane` at cycle `t` (skewed by `lane`).
+    #[inline]
+    pub fn at(&self, lane: usize, t: usize) -> T {
+        let s = &self.streams[lane];
+        if t >= lane {
+            let k = t - lane;
+            if k < s.len() {
+                return s[k];
+            }
+        }
+        T::default()
+    }
+
+    /// Whether lane `lane` carries live data at cycle `t` (the valid bit
+    /// that travels with the stream).
+    #[inline]
+    pub fn live(&self, lane: usize, t: usize) -> bool {
+        t >= lane && t - lane < self.streams[lane].len()
+    }
+
+    /// Cycles until every lane has drained.
+    pub fn duration(&self) -> usize {
+        if self.lanes() == 0 {
+            0
+        } else {
+            self.len() + self.lanes() - 1
+        }
+    }
+}
+
+impl SkewFeeder<i8> {
+    /// Mutable access to a stream element (fault injection into the
+    /// emulated scratchpad-read pipeline feeding the mesh edge).
+    pub fn flip_element(&mut self, lane: usize, k: usize, bit: u8) {
+        if let Some(v) = self.streams.get_mut(lane).and_then(|s| s.get_mut(k)) {
+            *v = crate::util::bits::flip_i8(*v, bit);
+        }
+    }
+}
+
+/// Collects the result matrix from the south edge during flush: the
+/// accumulator chain emits row DIM-1 first, so the collector writes rows
+/// in reverse order (the "un-staircasing" the real drain FSM performs).
+#[derive(Clone, Debug)]
+pub struct FlushCollector {
+    dim: usize,
+    /// Per column, how many values have been captured so far.
+    taken: Vec<usize>,
+    /// Collected matrix, row-major dim x dim.
+    pub c: Vec<Vec<i32>>,
+}
+
+impl FlushCollector {
+    pub fn new(dim: usize) -> Self {
+        FlushCollector {
+            dim,
+            taken: vec![0; dim],
+            c: vec![vec![0; dim]; dim],
+        }
+    }
+
+    /// Record this cycle's south-edge flush outputs.
+    pub fn absorb(&mut self, south_c: &[Option<i32>]) {
+        for (col, v) in south_c.iter().enumerate() {
+            if let Some(v) = *v {
+                let k = self.taken[col];
+                if k < self.dim {
+                    self.c[self.dim - 1 - k][col] = v;
+                    self.taken[col] += 1;
+                }
+            }
+        }
+    }
+
+    /// True once every column produced DIM values.
+    pub fn complete(&self) -> bool {
+        self.taken.iter().all(|&t| t == self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_feeder_delays_by_lane() {
+        let rows = vec![vec![1i8, 2, 3], vec![4, 5, 6]];
+        let f = SkewFeeder::from_rows(&rows);
+        assert_eq!(f.at(0, 0), 1);
+        assert_eq!(f.at(0, 2), 3);
+        assert_eq!(f.at(1, 0), 0); // not arrived yet
+        assert_eq!(f.at(1, 1), 4);
+        assert_eq!(f.at(1, 3), 6);
+        assert_eq!(f.at(1, 4), 0); // drained
+        assert_eq!(f.duration(), 4);
+    }
+
+    #[test]
+    fn skew_feeder_from_cols_transposes() {
+        // 2x3 matrix; lane c = column c.
+        let m = vec![vec![1i8, 2, 3], vec![4, 5, 6]];
+        let f = SkewFeeder::from_cols(&m);
+        assert_eq!(f.lanes(), 3);
+        assert_eq!(f.at(0, 0), 1);
+        assert_eq!(f.at(0, 1), 4);
+        assert_eq!(f.at(2, 2), 3);
+        assert_eq!(f.at(2, 3), 6);
+    }
+
+    #[test]
+    fn live_matches_at_window() {
+        let f = SkewFeeder::from_rows(&[vec![9i8; 4], vec![9i8; 4]]);
+        for lane in 0..2 {
+            for t in 0..8 {
+                assert_eq!(f.live(lane, t), t >= lane && t - lane < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn flush_collector_reverses_rows() {
+        let mut fc = FlushCollector::new(2);
+        fc.absorb(&[Some(30), Some(40)]); // first out = row 1
+        assert!(!fc.complete());
+        fc.absorb(&[Some(10), Some(20)]); // then row 0
+        assert!(fc.complete());
+        assert_eq!(fc.c, vec![vec![10, 20], vec![30, 40]]);
+    }
+
+    #[test]
+    fn flip_element_targets_stream() {
+        let mut f = SkewFeeder::from_rows(&[vec![0i8, 0]]);
+        f.flip_element(0, 1, 3);
+        assert_eq!(f.at(0, 1), 8);
+    }
+}

@@ -1,0 +1,475 @@
+//! Matmul drivers: the "simulation wrapper" that drives operand streams
+//! through the mesh, performs `C = A . B + D`, and applies at most ONE
+//! compare-and-branch per cycle for fault injection — the ENFOR-SA
+//! alternative to per-assignment instrumentation.
+//!
+//! Output-stationary schedule (the paper's configuration):
+//!
+//! 1. **Preload** (2*DIM-1 cycles): propagate asserted at the north edge
+//!    for DIM cycles while the bias matrix D staircases down the
+//!    accumulator chain (rows fed in reverse).
+//! 2. **Compute** (K + 2*DIM-2 cycles): weights stream west→east with
+//!    row skew, activations north→south with column skew, `valid`
+//!    travelling with the activation stream.
+//! 3. **Flush** (2*DIM-1 cycles): propagate again; results exit the
+//!    south edge bottom-row-first and are un-staircased by the
+//!    [`FlushCollector`].
+//!
+//! Weight-stationary schedule: W staircases in through the d-chain, then
+//! activation columns stream west→east while psums (initialised with D
+//! rows at the north edge) flow down and exit south every cycle.
+
+use super::adapters::{FlushCollector, SkewFeeder};
+use super::inject::{Fault, Injectable};
+use super::mesh::{MeshInputs, StepOutput};
+use crate::config::Dataflow;
+
+/// Matrix aliases used throughout the mesh layer (row-major vec-of-rows).
+pub type MatI8 = Vec<Vec<i8>>;
+pub type MatI32 = Vec<Vec<i32>>;
+
+/// Cycle count of one OS matmul on a DIM mesh with inner dimension K.
+pub fn os_matmul_cycles(dim: usize, k: usize) -> u64 {
+    ((2 * dim - 1) + (k + 2 * dim - 2) + (2 * dim - 1)) as u64
+}
+
+/// Cycle count of one WS matmul streaming M rows through a DIM mesh.
+pub fn ws_matmul_cycles(dim: usize, m: usize) -> u64 {
+    ((2 * dim - 1) + (m + 2 * dim - 2)) as u64
+}
+
+/// Drives one matmul through a mesh backend.
+pub struct MatmulDriver<'m, S: Injectable> {
+    mesh: &'m mut S,
+}
+
+impl<'m, S: Injectable> MatmulDriver<'m, S> {
+    pub fn new(mesh: &'m mut S) -> Self {
+        MatmulDriver { mesh }
+    }
+
+    /// Golden (fault-free) matmul.
+    pub fn matmul(&mut self, a: &MatI8, b: &MatI8, d: &MatI32) -> MatI32 {
+        self.run(a, b, d, None)
+    }
+
+    /// Matmul with a single transient fault injected at `fault.cycle`
+    /// (relative to the start of this matmul).
+    pub fn matmul_with_fault(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        d: &MatI32,
+        fault: &Fault,
+    ) -> MatI32 {
+        self.run(a, b, d, Some(fault))
+    }
+
+    fn run(&mut self, a: &MatI8, b: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+        if let Some(f) = fault {
+            self.mesh.arm(f);
+        }
+        let c = match self.mesh.dataflow() {
+            Dataflow::OutputStationary => self.run_os(a, b, d, fault),
+            Dataflow::WeightStationary => self.run_ws(a, b, d, fault),
+        };
+        if fault.is_some() {
+            self.mesh.disarm();
+        }
+        c
+    }
+
+    /// One compare per cycle: the entire injection overhead of ENFOR-SA.
+    /// (Transient faults fire once; stuck-at faults re-apply the forcing
+    /// every cycle from their onset — still wrapper-only.)
+    #[inline]
+    fn maybe_inject(&mut self, fault: Option<&Fault>, t: u64, inp: &mut MeshInputs) {
+        if let Some(f) = fault {
+            if f.fires_at(t) {
+                self.mesh.inject_now(f, inp);
+            }
+        }
+    }
+
+    /// Output-stationary: A is DIM x K (weights), B is K x DIM
+    /// (activations), D and C are DIM x DIM.
+    fn run_os(&mut self, a: &MatI8, b: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+        let dim = self.mesh.dim();
+        let k = if a.is_empty() { 0 } else { a[0].len() };
+        assert_eq!(a.len(), dim, "A must have DIM rows");
+        assert!(a.iter().all(|r| r.len() == k), "ragged A");
+        assert_eq!(b.len(), k, "B must have K rows");
+        assert!(b.iter().all(|r| r.len() == dim), "B must have DIM cols");
+        assert_eq!(d.len(), dim, "D must be DIM x DIM");
+
+        self.mesh.reset();
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        let mut t: u64 = 0;
+
+        // Phase 1: preload D (reversed rows down the accumulator chain).
+        for p in 0..(2 * dim - 1) {
+            inp.clear();
+            if p < dim {
+                for c in 0..dim {
+                    inp.north_propag[c] = true;
+                    inp.north_d[c] = d[dim - 1 - p][c];
+                }
+            }
+            self.maybe_inject(fault, t, &mut inp);
+            self.mesh.step(&inp, &mut out);
+            t += 1;
+        }
+
+        // Phase 2: compute. Row skew on A, column skew on B; valid rides
+        // with the activation stream.
+        let a_feed: SkewFeeder<i8> = SkewFeeder::from_rows(a);
+        let b_feed: SkewFeeder<i8> = SkewFeeder::from_cols(b);
+        let compute_len = k + 2 * dim - 2;
+        for tau in 0..compute_len {
+            inp.clear();
+            for r in 0..dim {
+                inp.west_a[r] = a_feed.at(r, tau);
+            }
+            for c in 0..dim {
+                inp.north_b[c] = b_feed.at(c, tau);
+                inp.north_valid[c] = b_feed.live(c, tau);
+            }
+            self.maybe_inject(fault, t, &mut inp);
+            self.mesh.step(&inp, &mut out);
+            t += 1;
+        }
+
+        // Phase 3: flush C through the south edge.
+        let mut collector = FlushCollector::new(dim);
+        for p in 0..(2 * dim - 1) {
+            inp.clear();
+            out.clear();
+            if p < dim {
+                for c in 0..dim {
+                    inp.north_propag[c] = true;
+                }
+            }
+            self.maybe_inject(fault, t, &mut inp);
+            self.mesh.step(&inp, &mut out);
+            collector.absorb(&out.south_c);
+            t += 1;
+        }
+        // A control-signal fault during the flush window can legitimately
+        // disturb the drain (extra or missing propagate pulses) — the real
+        // drain FSM also just latches whatever arrives in its fixed
+        // window. Only fault-free runs must drain exactly DIM rows.
+        debug_assert!(
+            fault.is_some() || collector.complete(),
+            "fault-free flush did not drain DIM rows"
+        );
+        debug_assert_eq!(t, os_matmul_cycles(dim, k));
+        collector.c
+    }
+
+    /// Weight-stationary: B here is the stationary DIM x DIM weight tile,
+    /// A is M x DIM (activations streaming), D is M x DIM (bias rows).
+    /// Returns C = A . B + D (M x DIM).
+    fn run_ws(&mut self, a: &MatI8, w: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+        let dim = self.mesh.dim();
+        let m = a.len();
+        assert!(a.iter().all(|r| r.len() == dim), "A must have DIM cols");
+        assert_eq!(w.len(), dim, "W must be DIM x DIM");
+        assert_eq!(d.len(), m, "D must have M rows");
+
+        self.mesh.reset();
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        let mut t: u64 = 0;
+
+        // Phase 1: preload W through the d-chain (reversed rows).
+        for p in 0..(2 * dim - 1) {
+            inp.clear();
+            if p < dim {
+                for c in 0..dim {
+                    inp.north_propag[c] = true;
+                    inp.north_d[c] = w[dim - 1 - p][c] as i32;
+                }
+            }
+            self.maybe_inject(fault, t, &mut inp);
+            self.mesh.step(&inp, &mut out);
+            t += 1;
+        }
+
+        // Phase 2: stream activations (columns of A with row skew) and
+        // psum bias rows (columns of D with column skew at the top).
+        let a_feed: SkewFeeder<i8> = SkewFeeder::from_cols(a);
+        let d_feed: SkewFeeder<i32> = SkewFeeder::from_cols(d);
+        let compute_len = m + 2 * dim - 2;
+        let mut c_out = vec![vec![0i32; dim]; m];
+        let mut taken = vec![0usize; dim];
+        for tau in 0..compute_len {
+            inp.clear();
+            out.clear();
+            for r in 0..dim {
+                inp.west_a[r] = a_feed.at(r, tau);
+            }
+            for cc in 0..dim {
+                inp.north_d[cc] = d_feed.at(cc, tau);
+                inp.north_valid[cc] = d_feed.live(cc, tau);
+            }
+            self.maybe_inject(fault, t, &mut inp);
+            self.mesh.step(&inp, &mut out);
+            for cc in 0..dim {
+                if let Some(ps) = out.south_psum[cc] {
+                    if taken[cc] < m {
+                        c_out[taken[cc]][cc] = ps;
+                        taken[cc] += 1;
+                    }
+                }
+            }
+            t += 1;
+        }
+        debug_assert!(
+            fault.is_some() || taken.iter().all(|&x| x == m),
+            "fault-free WS drain incomplete"
+        );
+        c_out
+    }
+}
+
+/// Reference tiled matmul over the mesh: decomposes an arbitrary
+/// (M x K) . (K x N) into DIM x DIM output tiles, each computed by one
+/// OS pass with the full K stream. Used by tests and by the whole-layer
+/// RTL offload ablation (DESIGN.md D3).
+pub fn tiled_matmul_os<S: Injectable>(
+    mesh: &mut S,
+    a: &MatI8,
+    b: &MatI8,
+    d: &MatI32,
+) -> MatI32 {
+    let dim = mesh.dim();
+    let m = a.len();
+    let k = if m == 0 { 0 } else { a[0].len() };
+    let n = if b.is_empty() { 0 } else { b[0].len() };
+    let mut c = vec![vec![0i32; n]; m];
+    let mut ti = 0;
+    while ti < m {
+        let mut tj = 0;
+        while tj < n {
+            // Extract (and zero-pad) the operand tiles.
+            let a_tile: MatI8 = (0..dim)
+                .map(|r| {
+                    if ti + r < m {
+                        a[ti + r].clone()
+                    } else {
+                        vec![0; k]
+                    }
+                })
+                .collect();
+            let b_tile: MatI8 = (0..k)
+                .map(|r| {
+                    (0..dim)
+                        .map(|cc| if tj + cc < n { b[r][tj + cc] } else { 0 })
+                        .collect()
+                })
+                .collect();
+            let d_tile: MatI32 = (0..dim)
+                .map(|r| {
+                    (0..dim)
+                        .map(|cc| {
+                            if ti + r < m && tj + cc < n {
+                                d[ti + r][tj + cc]
+                            } else {
+                                0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let c_tile = MatmulDriver::new(mesh).matmul(&a_tile, &b_tile, &d_tile);
+            for r in 0..dim {
+                for cc in 0..dim {
+                    if ti + r < m && tj + cc < n {
+                        c[ti + r][tj + cc] = c_tile[r][cc];
+                    }
+                }
+            }
+            tj += dim;
+        }
+        ti += dim;
+    }
+    c
+}
+
+/// Pure-software golden matmul (the oracle for all mesh tests; the same
+/// arithmetic as the Pallas kernel's ref.py).
+pub fn gold_matmul(a: &MatI8, b: &MatI8, d: &MatI32) -> MatI32 {
+    let m = a.len();
+    let k = if m == 0 { 0 } else { a[0].len() };
+    let n = if b.is_empty() { 0 } else { b[0].len() };
+    let mut c = vec![vec![0i32; n]; m];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = d[i][j];
+            for kk in 0..k {
+                acc = acc.wrapping_add(a[i][kk] as i32 * b[kk][j] as i32);
+            }
+            c[i][j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataflow;
+    use crate::mesh::mesh::Mesh;
+    use crate::util::Rng;
+
+    #[test]
+    fn os_identity_matmul() {
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let eye: MatI8 = (0..dim)
+            .map(|r| (0..dim).map(|c| (r == c) as i8).collect())
+            .collect();
+        let b: MatI8 = (0..dim)
+            .map(|r| (0..dim).map(|c| (r * dim + c) as i8).collect())
+            .collect();
+        let d = vec![vec![0i32; dim]; dim];
+        let c = MatmulDriver::new(&mut mesh).matmul(&eye, &b, &d);
+        let want = gold_matmul(&eye, &b, &d);
+        assert_eq!(c, want);
+    }
+
+    #[test]
+    fn os_random_matmuls_match_gold() {
+        let mut rng = Rng::new(1);
+        for &(dim, k) in &[(2usize, 2usize), (4, 4), (4, 12), (8, 8), (8, 3), (3, 7)] {
+            let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+            let a = rng.mat_i8(dim, k);
+            let b = rng.mat_i8(k, dim);
+            let d = rng.mat_i32(dim, dim, 1 << 12);
+            let c = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+            assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+        }
+    }
+
+    #[test]
+    fn os_bias_only() {
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(2);
+        let a = vec![vec![0i8; 4]; dim];
+        let b = vec![vec![0i8; dim]; 4];
+        let d = rng.mat_i32(dim, dim, 1000);
+        let c = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn os_back_to_back_matmuls_are_independent() {
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(3);
+        let a1 = rng.mat_i8(dim, 6);
+        let b1 = rng.mat_i8(6, dim);
+        let d1 = rng.mat_i32(dim, dim, 100);
+        let c1a = MatmulDriver::new(&mut mesh).matmul(&a1, &b1, &d1);
+        let a2 = rng.mat_i8(dim, 5);
+        let b2 = rng.mat_i8(5, dim);
+        let _noise = MatmulDriver::new(&mut mesh).matmul(&a2, &b2, &d1);
+        let c1b = MatmulDriver::new(&mut mesh).matmul(&a1, &b1, &d1);
+        assert_eq!(c1a, c1b);
+    }
+
+    #[test]
+    fn ws_random_matmuls_match_gold() {
+        let mut rng = Rng::new(4);
+        for &(dim, m) in &[(2usize, 2usize), (4, 4), (4, 10), (8, 8), (8, 1)] {
+            let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+            let a = rng.mat_i8(m, dim);
+            let w = rng.mat_i8(dim, dim);
+            let d = rng.mat_i32(m, dim, 1 << 12);
+            let c = MatmulDriver::new(&mut mesh).matmul(&a, &w, &d);
+            assert_eq!(c, gold_matmul(&a, &w, &d), "dim={dim} m={m}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_matches_gold_on_awkward_shapes() {
+        let mut rng = Rng::new(5);
+        let mut mesh = Mesh::new(4, Dataflow::OutputStationary);
+        for &(m, k, n) in &[(4usize, 4usize, 4usize), (8, 4, 8), (5, 7, 9), (1, 3, 2)] {
+            let a = rng.mat_i8(m, k);
+            let b = rng.mat_i8(k, n);
+            let d = rng.mat_i32(m, n, 500);
+            let c = tiled_matmul_os(&mut mesh, &a, &b, &d);
+            assert_eq!(c, gold_matmul(&a, &b, &d), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn injected_fault_changes_output() {
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(6);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = vec![vec![0i32; dim]; dim];
+        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        // Propag fault in the middle of the compute phase of PE(0,1).
+        let cyc = (2 * dim - 1) as u64 + 3;
+        let f = Fault::new(0, 1, SignalKind::Propag, 0, cyc);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        assert_ne!(golden, faulty);
+    }
+
+    #[test]
+    fn fault_outside_active_window_is_masked() {
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(7);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = vec![vec![0i32; dim]; dim];
+        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        // A weight-path fault injected in the very first preload cycle:
+        // the operand pipelines carry no live data yet, and the corrupted
+        // stream element drains before compute => fully masked.
+        let f = Fault::new(0, 3, SignalKind::Weight, 6, 0);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        assert_eq!(golden, faulty);
+    }
+
+    #[test]
+    fn zero_activation_masks_weight_fault() {
+        use crate::mesh::signal::SignalKind;
+        // All-zero activations: any weight-path corruption multiplies by
+        // zero and never reaches the accumulators (the paper's Fig. 5b
+        // masking mechanism).
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(8);
+        let a = rng.mat_i8(dim, dim);
+        let b = vec![vec![0i8; dim]; dim];
+        let d = rng.mat_i32(dim, dim, 100);
+        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let cyc = (2 * dim - 1) as u64 + 2;
+        let f = Fault::new(1, 1, SignalKind::Weight, 3, cyc);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        assert_eq!(golden, faulty);
+    }
+
+    #[test]
+    fn cycle_counts_match_formula() {
+        let dim = 8;
+        let k = 16;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(9);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 10);
+        MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        assert_eq!(mesh.cycle, os_matmul_cycles(dim, k));
+    }
+}

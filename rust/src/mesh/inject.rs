@@ -1,0 +1,367 @@
+//! ENFOR-SA's non-intrusive transient fault injection.
+//!
+//! The key observation (paper §III-A): the verilated model updates
+//! registers in *inverted assignment order*, so register `R_target` of a
+//! PE latches the value of its **source** — the upstream PE's register —
+//! before the source itself is refreshed. Injecting into `R_target` at
+//! cycle `t` therefore requires no HDL instrumentation at all: flip bits
+//! in the *source variable* right before `step()` of cycle `t`. During
+//! that step the target (and this PE's MAC, which taps the same wire)
+//! consumes the corrupted value; at the end of the same step the source
+//! is overwritten with its own clean upstream data. One branch per cycle
+//! in the simulation wrapper — zero cost per assignment.
+//!
+//! Source mapping used here (OS dataflow, mirrors Fig. 2):
+//!
+//! | target (r, c)      | source flipped pre-step                       |
+//! |--------------------|-----------------------------------------------|
+//! | `Weight` (a path)  | `reg_a[r][c-1]`, or the west edge wire if c=0 |
+//! | `Act` (b path)     | `reg_b[r-1][c]`, or the north edge wire if r=0|
+//! | `Propag`           | `reg_propag[r-1][c]` / north edge wire        |
+//! | `Valid`            | `reg_valid[r-1][c]` / north edge wire         |
+//! | `Acc`              | the accumulator itself (self-sourced: the MAC |
+//! |                    | reads-modifies-writes it, so a pre-step flip  |
+//! |                    | is exactly an SEU latched the cycle before)   |
+//! | `DReg`             | the d-chain register itself (rewritten every  |
+//! |                    | cycle, so the flip lives exactly one cycle)   |
+
+use super::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+use super::signal::{SignalAddr, SignalKind};
+use crate::config::Dataflow;
+use crate::util::bits::{flip_bool, flip_i32, flip_i8, set_bit_i32, set_bit_i8};
+
+/// Fault persistence model.
+///
+/// * `Transient` — classic SEU: one latch event corrupted (the paper's
+///   model; `cycle` is the single firing cycle).
+/// * `StuckAt(v)` — permanent defect: the target bit is forced to `v`
+///   on EVERY cycle from `cycle` onward (extension; cf. the Gemmini
+///   stuck-at study [26] the paper discusses). ENFOR-SA's source-flip
+///   technique supports this for free — the wrapper re-applies the
+///   forcing each cycle, still without HDL instrumentation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Persistence {
+    #[default]
+    Transient,
+    StuckAt(bool),
+}
+
+
+/// A single transient (SEU) fault: one bit of one signal at one cycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fault {
+    pub addr: SignalAddr,
+    /// Bit index within the signal (< addr.kind.width()).
+    pub bit: u8,
+    /// Injection cycle, relative to the start of the offloaded matmul
+    /// (first firing cycle for stuck-at faults).
+    pub cycle: u64,
+    /// Transient (default) or permanent stuck-at.
+    pub persistence: Persistence,
+}
+
+impl Fault {
+    /// A transient (SEU) fault — the paper's model.
+    pub fn new(row: usize, col: usize, kind: SignalKind, bit: u8, cycle: u64) -> Self {
+        debug_assert!(bit < kind.width());
+        Fault {
+            addr: SignalAddr::new(row, col, kind),
+            bit,
+            cycle,
+            persistence: Persistence::Transient,
+        }
+    }
+
+    /// A permanent stuck-at-`value` fault active from `from_cycle` on.
+    pub fn stuck_at(
+        row: usize,
+        col: usize,
+        kind: SignalKind,
+        bit: u8,
+        value: bool,
+        from_cycle: u64,
+    ) -> Self {
+        debug_assert!(bit < kind.width());
+        Fault {
+            addr: SignalAddr::new(row, col, kind),
+            bit,
+            cycle: from_cycle,
+            persistence: Persistence::StuckAt(value),
+        }
+    }
+
+    /// Does this fault act on cycle `t`? (The wrapper's only per-cycle
+    /// check.)
+    #[inline]
+    pub fn fires_at(&self, t: u64) -> bool {
+        match self.persistence {
+            Persistence::Transient => self.cycle == t,
+            Persistence::StuckAt(_) => t >= self.cycle,
+        }
+    }
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PE({},{}).{}[bit {}] @ cycle {}",
+            self.addr.row, self.addr.col, self.addr.kind, self.bit, self.cycle
+        )
+    }
+}
+
+/// Apply `fault` to the plain mesh using the source-register technique.
+/// Must be called immediately before the `step()` of each firing cycle.
+pub fn apply_enforsa(mesh: &mut Mesh, inp: &mut MeshInputs, fault: &Fault) {
+    let (r, c) = (fault.addr.row, fault.addr.col);
+    let dim = mesh.dim();
+    assert!(r < dim && c < dim, "fault target outside mesh");
+    let i = r * dim + c;
+    // corruption operators for this fault's persistence model
+    let f8 = |v: i8| match fault.persistence {
+        Persistence::Transient => flip_i8(v, fault.bit),
+        Persistence::StuckAt(val) => set_bit_i8(v, fault.bit, val),
+    };
+    let f32v = |v: i32| match fault.persistence {
+        Persistence::Transient => flip_i32(v, fault.bit),
+        Persistence::StuckAt(val) => set_bit_i32(v, fault.bit, val),
+    };
+    let fb = |v: bool| match fault.persistence {
+        Persistence::Transient => flip_bool(v),
+        Persistence::StuckAt(val) => val,
+    };
+    match fault.addr.kind {
+        SignalKind::Weight => {
+            if mesh.dataflow() == Dataflow::WeightStationary {
+                // WS: the weight lives in the PE's stationary register —
+                // an SEU there persists until the next preload.
+                mesh.reg_w[i] = f8(mesh.reg_w[i]);
+            } else if c == 0 {
+                inp.west_a[r] = f8(inp.west_a[r]);
+            } else {
+                mesh.reg_a[i - 1] = f8(mesh.reg_a[i - 1]);
+            }
+        }
+        SignalKind::Act => {
+            if r == 0 {
+                inp.north_b[c] = f8(inp.north_b[c]);
+            } else {
+                mesh.reg_b[i - dim] = f8(mesh.reg_b[i - dim]);
+            }
+        }
+        SignalKind::Propag => {
+            if r == 0 {
+                inp.north_propag[c] = fb(inp.north_propag[c]);
+            } else {
+                mesh.reg_propag[i - dim] = fb(mesh.reg_propag[i - dim]);
+            }
+        }
+        SignalKind::Valid => {
+            if r == 0 {
+                inp.north_valid[c] = fb(inp.north_valid[c]);
+            } else {
+                mesh.reg_valid[i - dim] = fb(mesh.reg_valid[i - dim]);
+            }
+        }
+        SignalKind::Acc => {
+            mesh.acc[i] = f32v(mesh.acc[i]);
+        }
+        SignalKind::DReg => {
+            mesh.reg_d[i] = f32v(mesh.reg_d[i]);
+        }
+    }
+}
+
+impl Mesh {
+    /// ENFOR-SA injection entry point used by the drivers.
+    pub fn inject_now(&mut self, fault: &Fault, inp: &mut MeshInputs) {
+        apply_enforsa(self, inp, fault);
+    }
+}
+
+/// Backend-polymorphic injection interface for the matmul drivers.
+///
+/// * `arm` / `disarm` bracket a run — HDFIT-style backends pre-configure
+///   their instrumentation hooks here (HDFIT faults are part of the
+///   elaborated design), while ENFOR-SA's mesh needs nothing.
+/// * `inject_now` is called by the wrapper exactly once, right before the
+///   `step()` of `fault.cycle` — a single compare+branch per cycle, which
+///   is the whole point of the technique.
+pub trait Injectable: MeshSim {
+    fn arm(&mut self, _fault: &Fault) {}
+    fn inject_now(&mut self, _fault: &Fault, _inp: &mut MeshInputs) {}
+    fn disarm(&mut self) {}
+}
+
+impl Injectable for Mesh {
+    #[inline]
+    fn inject_now(&mut self, fault: &Fault, inp: &mut MeshInputs) {
+        Mesh::inject_now(self, fault, inp);
+    }
+}
+
+/// A no-fault golden run helper: step `n` idle cycles (used by benches).
+pub fn idle_cycles<S: MeshSim>(mesh: &mut S, n: u64) {
+    let dim = mesh.dim();
+    let inp = MeshInputs::idle(dim);
+    let mut out = StepOutput::new(dim);
+    for _ in 0..n {
+        mesh.step(&inp, &mut out);
+    }
+}
+
+/// Convenience constructor for tests/benches.
+pub fn os_mesh(dim: usize) -> Mesh {
+    Mesh::new(dim, Dataflow::OutputStationary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Dataflow;
+
+    fn mesh4() -> (Mesh, MeshInputs, StepOutput) {
+        (
+            Mesh::new(4, Dataflow::OutputStationary),
+            MeshInputs::idle(4),
+            StepOutput::new(4),
+        )
+    }
+
+    #[test]
+    fn weight_fault_corrupts_target_mac_not_source() {
+        // Fill the a-pipeline of row 1 with a known value, then inject a
+        // Weight fault targeting PE(1,2): PE(1,2)'s next latched a must be
+        // corrupted, PE(1,1)'s must stay clean.
+        let (mut m, mut inp, mut out) = mesh4();
+        inp.west_a[1] = 16;
+        // march the value into reg_a[1][1]
+        m.step(&inp, &mut out); // reg_a[1][0] = 16
+        m.step(&inp, &mut out); // reg_a[1][1] = 16
+        let f = Fault::new(1, 2, SignalKind::Weight, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out); // PE(1,2) latches flipped source
+        assert_eq!(m.reg_a[m.idx(1, 2)], 17, "target latched corrupt value");
+        assert_eq!(
+            m.reg_a[m.idx(1, 1)],
+            16,
+            "source restored by its own upstream data"
+        );
+    }
+
+    #[test]
+    fn weight_fault_at_column_zero_flips_edge_wire() {
+        let (mut m, mut inp, _out) = mesh4();
+        inp.west_a[2] = 1;
+        let f = Fault::new(2, 0, SignalKind::Weight, 1, 0);
+        m.inject_now(&f, &mut inp);
+        assert_eq!(inp.west_a[2], 3);
+    }
+
+    #[test]
+    fn propag_fault_hijacks_accumulator_from_above() {
+        // Give PE(0,0) and PE(1,0) distinct accumulators; flip propag at
+        // PE(1,0): its acc must become the d-chain value (acc above,
+        // latched the previous cycle).
+        let (mut m, mut inp, mut out) = mesh4();
+        let i = m.idx(0, 0);
+
+        m.acc[i] = 111;
+        let i = m.idx(1, 0);
+
+        m.acc[i] = 222;
+        // One idle step so reg_d[1][0] latches acc[0][0] = 111.
+        m.step(&inp, &mut out);
+        let f = Fault::new(1, 0, SignalKind::Propag, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(1, 0), 111, "partial sum destroyed by propag");
+        // and the erroneous bit forwards south:
+        assert!(m.reg_propag[m.idx(1, 0)]);
+    }
+
+    #[test]
+    fn propag_corruption_cascades_down_the_column() {
+        // After the fault at row 1, the flipped bit reaches row 2 next
+        // cycle and destroys its accumulator too (paper: whole column
+        // below the target is affected; upper rows more critical).
+        let (mut m, mut inp, mut out) = mesh4();
+        for r in 0..4 {
+            let i = m.idx(r, 0);
+            m.acc[i] = (r as i32 + 1) * 100;
+        }
+        m.step(&inp, &mut out); // settle d-chain
+        let f = Fault::new(1, 0, SignalKind::Propag, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out); // row 1 hijacked
+        m.step(&inp, &mut out); // row 2 hijacked by forwarded bit
+        m.step(&inp, &mut out); // row 3 hijacked
+        assert_ne!(m.acc_at(2, 0), 300);
+        assert_ne!(m.acc_at(3, 0), 400);
+        assert_eq!(m.acc_at(0, 0), 100, "rows above are untouched");
+    }
+
+    #[test]
+    fn valid_fault_suppresses_one_mac() {
+        let (mut m, mut inp, mut out) = mesh4();
+        // Continuous MAC stream into PE(0,0): a=2, b=3, valid.
+        inp.west_a[0] = 2;
+        inp.north_b[0] = 3;
+        inp.north_valid[0] = true;
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(0, 0), 6);
+        // Fault: flip valid at PE(0,0) (row 0 -> edge wire).
+        let f = Fault::new(0, 0, SignalKind::Valid, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(0, 0), 6, "MAC suppressed for one cycle");
+        // stream continues (inject_now flipped only the cycle's wire value)
+        inp.north_valid[0] = true;
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(0, 0), 12);
+    }
+
+    #[test]
+    fn acc_fault_is_persistent_until_overwritten() {
+        let (mut m, mut inp, mut out) = mesh4();
+        let i = m.idx(2, 2);
+
+        m.acc[i] = 0b100;
+        let f = Fault::new(2, 2, SignalKind::Acc, 0, 0);
+        m.inject_now(&f, &mut inp);
+        assert_eq!(m.acc_at(2, 2), 0b101);
+        m.step(&inp, &mut out);
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(2, 2), 0b101, "SEU persists in storage");
+    }
+
+    #[test]
+    fn dreg_fault_lives_one_cycle() {
+        let (mut m, mut inp, mut out) = mesh4();
+        let f = Fault::new(1, 1, SignalKind::DReg, 5, 0);
+        m.inject_now(&f, &mut inp);
+        assert_eq!(m.reg_d[m.idx(1, 1)], 32);
+        m.step(&inp, &mut out); // reg_d rewritten from acc above (0)
+        assert_eq!(m.reg_d[m.idx(1, 1)], 0);
+    }
+
+    #[test]
+    fn act_fault_mirrors_weight_on_vertical_path() {
+        let (mut m, mut inp, mut out) = mesh4();
+        inp.north_b[2] = 32;
+        m.step(&inp, &mut out); // reg_b[0][2] = 32
+        inp.clear(); // stop driving the edge so the refresh value is 0
+        let f = Fault::new(1, 2, SignalKind::Act, 7, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out);
+        assert_eq!(m.reg_b[m.idx(1, 2)], 32 | -128, "target corrupted");
+        assert_eq!(m.reg_b[m.idx(0, 2)], 0, "source refreshed clean");
+    }
+
+    #[test]
+    fn display_formats() {
+        let f = Fault::new(3, 4, SignalKind::Propag, 0, 17);
+        assert_eq!(f.to_string(), "PE(3,4).propag[bit 0] @ cycle 17");
+    }
+}

@@ -1,0 +1,488 @@
+//! The verilated-equivalent Gemmini Mesh model.
+//!
+//! This is a cycle-accurate register-transfer simulator of the DIM x DIM
+//! PE grid (the `Mesh.v` block the paper isolates in its "compilation"
+//! step). It reproduces, by construction, the property ENFOR-SA's
+//! injection method depends on: Verilator preserves Verilog non-blocking
+//! register semantics by *inverting the order of register assignments*
+//! (downstream registers are written first), so `step()` updates the grid
+//! **in place**, most-downstream PE first (row DIM-1..0, col DIM-1..0),
+//! and every read of a neighbour register observes its *pre-edge* value.
+//!
+//! PE microarchitecture (paper Fig. 2, output-stationary):
+//!
+//! ```text
+//!            b_in  d_in  propag/valid (from north)
+//!              │     │     │
+//!   a_in ──►[MAC: acc += a_in*b_in]──► reg_a ──► east
+//!              │     │     │
+//!            reg_b reg_d reg_propag/reg_valid
+//!              ▼     ▼     ▼   (to south)
+//! ```
+//!
+//! * `reg_a` — horizontal operand pipeline register (weights, west→east);
+//! * `reg_b` — vertical operand pipeline register (activations);
+//! * `acc`   — the output-stationary 32-bit accumulator;
+//! * `reg_d` — the accumulator-chain pipeline register: it latches the
+//!   northern PE's `out_c` wire every cycle, so during `propagate` phases
+//!   bias matrices staircase in and results staircase out correctly even
+//!   though the propagate *enable* itself is pipelined row by row;
+//! * `reg_propag` / `reg_valid` — the local control bits, forwarded south.
+//!
+//! The MAC consumes the *input wires* (the upstream registers); the PE's
+//! own registers forward the operands to its neighbours one cycle later —
+//! matching Gemmini, where a transient in a PE's operand register corrupts
+//! that PE's MAC and every downstream PE one hop per cycle (Fig. 5b).
+
+use crate::config::Dataflow;
+
+/// Per-cycle boundary inputs, produced by the interface adapters.
+#[derive(Clone, Debug)]
+pub struct MeshInputs {
+    /// West edge: operand entering each row's `a` path (weights).
+    pub west_a: Vec<i8>,
+    /// North edge: operand entering each column's `b` path (activations).
+    pub north_b: Vec<i8>,
+    /// North edge: accumulator-chain input (bias rows during preload).
+    pub north_d: Vec<i32>,
+    /// North edge: propagate control per column.
+    pub north_propag: Vec<bool>,
+    /// North edge: valid control per column.
+    pub north_valid: Vec<bool>,
+}
+
+impl MeshInputs {
+    pub fn idle(dim: usize) -> Self {
+        MeshInputs {
+            west_a: vec![0; dim],
+            north_b: vec![0; dim],
+            north_d: vec![0; dim],
+            north_propag: vec![false; dim],
+            north_valid: vec![false; dim],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.west_a.fill(0);
+        self.north_b.fill(0);
+        self.north_d.fill(0);
+        self.north_propag.fill(false);
+        self.north_valid.fill(false);
+    }
+}
+
+/// Values crossing the south edge during one cycle.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// `out_c` wire of each bottom-row PE when its propagate input was
+    /// asserted this cycle (flush traffic), else None.
+    pub south_c: Vec<Option<i32>>,
+    /// Completed partial sums leaving the bottom row (WS dataflow).
+    pub south_psum: Vec<Option<i32>>,
+}
+
+impl StepOutput {
+    pub fn new(dim: usize) -> Self {
+        StepOutput {
+            south_c: vec![None; dim],
+            south_psum: vec![None; dim],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.south_c.fill(None);
+        self.south_psum.fill(None);
+    }
+}
+
+/// Common simulation interface implemented by the plain (ENFOR-SA) mesh
+/// and the HDFIT-style instrumented mesh, so drivers and the campaign
+/// engine are generic over the backend.
+pub trait MeshSim {
+    fn dim(&self) -> usize;
+    fn dataflow(&self) -> Dataflow;
+    fn cycle(&self) -> u64;
+    /// Advance one clock edge.
+    fn step(&mut self, inp: &MeshInputs, out: &mut StepOutput);
+    /// Reset all architectural state (registers, accumulators, cycle).
+    fn reset(&mut self);
+    /// Read an accumulator (test/debug visibility, as in waveforms).
+    fn acc_at(&self, row: usize, col: usize) -> i32;
+}
+
+/// The plain verilated-equivalent mesh (no instrumentation — ENFOR-SA's
+/// fast backend).
+pub struct Mesh {
+    dim: usize,
+    dataflow: Dataflow,
+    pub(crate) cycle: u64,
+    // Flat SoA register files, index = row * dim + col.
+    pub(crate) reg_a: Vec<i8>,
+    pub(crate) reg_b: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) reg_d: Vec<i32>,
+    pub(crate) reg_propag: Vec<bool>,
+    pub(crate) reg_valid: Vec<bool>,
+    /// WS only: the stationary weight held in each PE.
+    pub(crate) reg_w: Vec<i8>,
+    /// Scratch: pre-edge copy of one row of `reg_a`, so rows can be
+    /// evaluated left-to-right (vectorizable) while preserving the
+    /// inverted-assignment-order semantics (§Perf iteration 2).
+    scratch_a: Vec<i8>,
+}
+
+impl Mesh {
+    pub fn new(dim: usize, dataflow: Dataflow) -> Self {
+        assert!(dim > 0, "mesh dim must be positive");
+        let n = dim * dim;
+        Mesh {
+            dim,
+            dataflow,
+            cycle: 0,
+            reg_a: vec![0; n],
+            reg_b: vec![0; n],
+            acc: vec![0; n],
+            reg_d: vec![0; n],
+            reg_propag: vec![false; n],
+            reg_valid: vec![false; n],
+            reg_w: vec![0; n],
+            scratch_a: vec![0; dim],
+        }
+    }
+
+    #[inline]
+    pub(crate) fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.dim + c
+    }
+
+    /// Output-stationary clock edge. In-place, inverted assignment order.
+    ///
+    /// Hot path of the whole framework (Table III/IV/V all sit on it).
+    /// Perf notes (EXPERIMENTS.md §Perf): the north/west edge-PE cases
+    /// are peeled out of the inner loop so interior PEs run branch-free,
+    /// and the row-local state is accessed through disjoint slices so
+    /// the optimizer drops the bounds checks.
+    fn step_os(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
+        let dim = self.dim;
+        for r in (0..dim).rev() {
+            let base = r * dim;
+            if r == 0 {
+                // ---- north-edge row: sources are the boundary ports ----
+                for c in (0..dim).rev() {
+                    let a_in = if c == 0 {
+                        inp.west_a[0]
+                    } else {
+                        self.reg_a[c - 1]
+                    };
+                    let b_in = inp.north_b[c];
+                    let p_in = inp.north_propag[c];
+                    let v_in = inp.north_valid[c];
+                    let d_in = inp.north_d[c];
+                    if p_in {
+                        if dim == 1 {
+                            out.south_c[c] = Some(self.acc[c]);
+                        }
+                        self.acc[c] = d_in;
+                    } else if v_in {
+                        self.acc[c] =
+                            self.acc[c].wrapping_add(a_in as i32 * b_in as i32);
+                    }
+                    self.reg_d[c] = d_in;
+                    self.reg_a[c] = a_in;
+                    self.reg_b[c] = b_in;
+                    self.reg_propag[c] = p_in;
+                    self.reg_valid[c] = v_in;
+                }
+                continue;
+            }
+            // ---- interior rows ----
+            // A pre-edge snapshot of this row's `reg_a` lets the row be
+            // evaluated LEFT-TO-RIGHT with element-wise-independent
+            // operations (the only intra-row dependency is the a-chain):
+            // identical semantics to the inverted-order walk, but the
+            // loop body becomes straight-line selects the autovectorizer
+            // can lift to SIMD (§Perf iteration 2).
+            let (north, row) = (base - dim, base);
+            let bottom = r == dim - 1;
+            self.scratch_a.copy_from_slice(&self.reg_a[row..row + dim]);
+            for c in 0..dim {
+                let i = row + c;
+                let n = north + c;
+                let a_in = if c == 0 {
+                    inp.west_a[r]
+                } else {
+                    self.scratch_a[c - 1]
+                };
+                let b_in = self.reg_b[n];
+                let p_in = self.reg_propag[n];
+                let v_in = self.reg_valid[n];
+                // Inner PEs read the accumulator-chain input from their
+                // inter-PE pipeline register (which latched the northern
+                // PE's out_c wire last cycle).
+                let d_in = self.reg_d[i];
+                let out_c_north = self.acc[n]; // pre-edge: updated later
+                // ---- sequential assignments (branch-free selects) ----
+                let acc_old = self.acc[i];
+                if bottom && p_in {
+                    out.south_c[c] = Some(acc_old);
+                }
+                let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
+                self.acc[i] = if p_in {
+                    d_in
+                } else if v_in {
+                    mac
+                } else {
+                    acc_old
+                };
+                self.reg_d[i] = out_c_north;
+                self.reg_a[i] = a_in;
+                self.reg_b[i] = b_in;
+                self.reg_propag[i] = p_in;
+                self.reg_valid[i] = v_in;
+            }
+        }
+        self.cycle += 1;
+    }
+
+    /// Weight-stationary clock edge. Weights preload through the d-chain
+    /// (propagate phases), partial sums flow north→south through `acc`
+    /// (acting as the psum pipeline register), activations west→east.
+    fn step_ws(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
+        let dim = self.dim;
+        for r in (0..dim).rev() {
+            for c in (0..dim).rev() {
+                let i = r * dim + c;
+                let a_in = if c == 0 { inp.west_a[r] } else { self.reg_a[i - 1] };
+                let b_in = if r == 0 { inp.north_b[c] } else { self.reg_b[i - dim] };
+                let p_in = if r == 0 {
+                    inp.north_propag[c]
+                } else {
+                    self.reg_propag[i - dim]
+                };
+                let v_in = if r == 0 {
+                    inp.north_valid[c]
+                } else {
+                    self.reg_valid[i - dim]
+                };
+                let d_in = if r == 0 { inp.north_d[c] } else { self.reg_d[i] };
+                let out_c_north = if r == 0 {
+                    inp.north_d[c]
+                } else {
+                    self.acc[i - dim]
+                };
+                // psum entering from the north (bias row at the top edge).
+                let ps_in = if r == 0 {
+                    inp.north_d[c]
+                } else {
+                    self.acc[i - dim]
+                };
+                if p_in {
+                    // weight preload: the d-chain staircases W in; old
+                    // weight is flushed out through the same chain.
+                    if r == dim - 1 {
+                        out.south_c[c] = Some(self.reg_w[i] as i32);
+                    }
+                    self.reg_w[i] = (d_in & 0xff) as i8;
+                    self.acc[i] = d_in;
+                } else if v_in {
+                    let ps = ps_in.wrapping_add(self.reg_w[i] as i32 * a_in as i32);
+                    self.acc[i] = ps;
+                    if r == dim - 1 {
+                        out.south_psum[c] = Some(ps);
+                    }
+                }
+                self.reg_d[i] = out_c_north;
+                self.reg_a[i] = a_in;
+                self.reg_b[i] = b_in;
+                self.reg_propag[i] = p_in;
+                self.reg_valid[i] = v_in;
+            }
+        }
+        self.cycle += 1;
+    }
+
+    /// Number of architectural state elements evaluated per cycle — the
+    /// quantity that governs simulation cost (DESIGN.md D2).
+    pub fn state_elements(&self) -> usize {
+        let per_pe = 7; // a, b, acc, d, w, propag, valid
+        self.dim * self.dim * per_pe
+    }
+}
+
+impl MeshSim for Mesh {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn dataflow(&self) -> Dataflow {
+        self.dataflow
+    }
+
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    #[inline]
+    fn step(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
+        debug_assert_eq!(inp.west_a.len(), self.dim);
+        match self.dataflow {
+            Dataflow::OutputStationary => self.step_os(inp, out),
+            Dataflow::WeightStationary => self.step_ws(inp, out),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cycle = 0;
+        self.reg_a.fill(0);
+        self.reg_b.fill(0);
+        self.acc.fill(0);
+        self.reg_d.fill(0);
+        self.reg_propag.fill(false);
+        self.reg_valid.fill(false);
+        self.reg_w.fill(0);
+    }
+
+    fn acc_at(&self, row: usize, col: usize) -> i32 {
+        self.acc[self.idx(row, col)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_steps_do_nothing() {
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        for _ in 0..10 {
+            m.step(&inp, &mut out);
+        }
+        assert_eq!(m.cycle(), 10);
+        assert!(m.acc.iter().all(|&v| v == 0));
+        assert!(out.south_c.iter().all(|o| o.is_none()));
+    }
+
+    #[test]
+    fn single_mac_at_origin() {
+        // Drive a=3 (row 0), b=5 (col 0), valid for exactly one cycle:
+        // PE(0,0) must accumulate 15; nothing else changes.
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let mut inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        inp.west_a[0] = 3;
+        inp.north_b[0] = 5;
+        inp.north_valid[0] = true;
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(0, 0), 15);
+        // the operands were latched for forwarding east/south:
+        assert_eq!(m.reg_a[0], 3);
+        assert_eq!(m.reg_b[0], 5);
+        inp.clear();
+        m.step(&inp, &mut out);
+        assert_eq!(m.acc_at(0, 0), 15); // valid deasserted: no further MAC
+    }
+
+    #[test]
+    fn operands_pipeline_one_hop_per_cycle() {
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let mut inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        inp.west_a[0] = 7;
+        m.step(&inp, &mut out);
+        inp.clear();
+        // After k more cycles the value sits in reg_a of PE(0,k).
+        for k in 1..4 {
+            m.step(&inp, &mut out);
+            assert_eq!(m.reg_a[k], 7, "cycle {k}");
+            if k >= 1 {
+                assert_eq!(m.reg_a[k - 1], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn propag_bit_travels_south() {
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let mut inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        inp.north_propag[2] = true;
+        m.step(&inp, &mut out);
+        inp.clear();
+        assert!(m.reg_propag[m.idx(0, 2)]);
+        m.step(&inp, &mut out);
+        assert!(!m.reg_propag[m.idx(0, 2)]);
+        assert!(m.reg_propag[m.idx(1, 2)]);
+    }
+
+    #[test]
+    fn d_chain_staircases_preload() {
+        // Feed a 3-element column of D values (reversed) with propagate
+        // asserted for dim cycles; accumulators must end as D[r].
+        let dim = 3;
+        let mut m = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        let d = [10i32, 20, 30];
+        for t in 0..(2 * dim - 1) {
+            inp.clear();
+            if t < dim {
+                inp.north_propag[0] = true;
+                inp.north_d[0] = d[dim - 1 - t];
+            }
+            m.step(&inp, &mut out);
+        }
+        for r in 0..dim {
+            assert_eq!(m.acc_at(r, 0), d[r], "row {r}");
+        }
+    }
+
+    #[test]
+    fn flush_emits_rows_bottom_first() {
+        let dim = 3;
+        let mut m = Mesh::new(dim, Dataflow::OutputStationary);
+        // Pre-set accumulators directly (white-box).
+        for r in 0..dim {
+            let i = r * dim;
+            m.acc[i] = (r as i32 + 1) * 100;
+        }
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        let mut captured = vec![];
+        for t in 0..(2 * dim - 1) {
+            inp.clear();
+            out.clear();
+            if t < dim {
+                inp.north_propag[0] = true;
+            }
+            m.step(&inp, &mut out);
+            if let Some(v) = out.south_c[0] {
+                captured.push(v);
+            }
+        }
+        assert_eq!(captured, vec![300, 200, 100]);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let mut inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        inp.west_a[0] = 1;
+        inp.north_b[0] = 1;
+        inp.north_valid[0] = true;
+        m.step(&inp, &mut out);
+        m.reset();
+        assert_eq!(m.cycle(), 0);
+        assert!(m.acc.iter().all(|&v| v == 0));
+        assert!(m.reg_a.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn state_elements_scale_quadratically() {
+        let m4 = Mesh::new(4, Dataflow::OutputStationary);
+        let m8 = Mesh::new(8, Dataflow::OutputStationary);
+        assert_eq!(m8.state_elements(), 4 * m4.state_elements());
+    }
+}

@@ -1,0 +1,20 @@
+//! The RTL-level systolic-array substrate: the verilated-equivalent
+//! Gemmini Mesh model, the ENFOR-SA non-intrusive injector, the
+//! HDFIT-style instrumented baseline, the boundary interface adapters and
+//! the matmul drivers.
+//!
+//! See the module docs of [`mesh`] for the microarchitecture and of
+//! [`inject`] for the injection technique.
+
+pub mod adapters;
+pub mod driver;
+pub mod hdfit;
+pub mod inject;
+#[allow(clippy::module_inception)]
+pub mod mesh;
+pub mod signal;
+
+pub use driver::{gold_matmul, tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+pub use inject::{Fault, Injectable};
+pub use mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+pub use signal::{SignalAddr, SignalKind};

@@ -1,0 +1,145 @@
+//! Addressable signal space of the mesh.
+//!
+//! Every injectable storage element is identified by `(row, col, kind)`;
+//! a transient fault additionally carries a bit index and an injection
+//! cycle. The same addressing is used by the ENFOR-SA injector, the
+//! HDFIT-style instrumented mesh and the campaign sampler, so fault lists
+//! are portable across backends (the paper's accuracy-validation setup).
+
+
+
+/// The injectable signal classes inside a PE (paper Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+
+pub enum SignalKind {
+    /// Horizontal (west→east) operand pipeline register. In the paper's
+    /// configuration this path carries the DNN *weights* (Fig. 5b).
+    Weight,
+    /// Vertical (north→south) operand pipeline register (activations).
+    Act,
+    /// The output-stationary accumulator (32-bit).
+    Acc,
+    /// The vertical accumulator-chain pipeline register used for bias
+    /// preload and result flush (32-bit).
+    DReg,
+    /// Local control: propagate bit (flows north→south).
+    Propag,
+    /// Local control: valid bit (flows north→south).
+    Valid,
+}
+
+impl SignalKind {
+    /// Number of bits of the underlying storage element.
+    pub fn width(self) -> u8 {
+        match self {
+            SignalKind::Weight | SignalKind::Act => 8,
+            SignalKind::Acc | SignalKind::DReg => 32,
+            SignalKind::Propag | SignalKind::Valid => 1,
+        }
+    }
+
+    /// All kinds, in a stable order (used by samplers and reports).
+    pub const ALL: [SignalKind; 6] = [
+        SignalKind::Weight,
+        SignalKind::Act,
+        SignalKind::Acc,
+        SignalKind::DReg,
+        SignalKind::Propag,
+        SignalKind::Valid,
+    ];
+
+    /// Parse from the CLI / config string form.
+    pub fn parse(s: &str) -> Option<SignalKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "weight" | "a" => Some(SignalKind::Weight),
+            "act" | "activation" | "b" => Some(SignalKind::Act),
+            "acc" | "accumulator" | "c" => Some(SignalKind::Acc),
+            "dreg" | "d" => Some(SignalKind::DReg),
+            "propag" | "propagate" => Some(SignalKind::Propag),
+            "valid" => Some(SignalKind::Valid),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SignalKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SignalKind::Weight => "weight",
+            SignalKind::Act => "act",
+            SignalKind::Acc => "acc",
+            SignalKind::DReg => "dreg",
+            SignalKind::Propag => "propag",
+            SignalKind::Valid => "valid",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A fully-qualified signal address inside a DIM x DIM mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SignalAddr {
+    pub row: usize,
+    pub col: usize,
+    pub kind: SignalKind,
+}
+
+impl SignalAddr {
+    pub fn new(row: usize, col: usize, kind: SignalKind) -> Self {
+        SignalAddr { row, col, kind }
+    }
+
+    /// Total number of injectable (signal, bit) targets in a mesh —
+    /// the per-cycle fault-space size used for statistical sampling.
+    pub fn fault_space_bits(dim: usize) -> u64 {
+        let per_pe: u64 = SignalKind::ALL.iter().map(|k| k.width() as u64).sum();
+        (dim * dim) as u64 * per_pe
+    }
+
+    /// Enumerate every signal address of a mesh in a stable order.
+    pub fn enumerate(dim: usize) -> impl Iterator<Item = SignalAddr> {
+        (0..dim).flat_map(move |r| {
+            (0..dim).flat_map(move |c| {
+                SignalKind::ALL
+                    .iter()
+                    .map(move |&k| SignalAddr::new(r, c, k))
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(SignalKind::Weight.width(), 8);
+        assert_eq!(SignalKind::Acc.width(), 32);
+        assert_eq!(SignalKind::Propag.width(), 1);
+    }
+
+    #[test]
+    fn fault_space_size() {
+        // per PE: 8 + 8 + 32 + 32 + 1 + 1 = 82 bits
+        assert_eq!(SignalAddr::fault_space_bits(8), 64 * 82);
+        assert_eq!(SignalAddr::fault_space_bits(1), 82);
+    }
+
+    #[test]
+    fn enumerate_covers_all() {
+        let v: Vec<_> = SignalAddr::enumerate(4).collect();
+        assert_eq!(v.len(), 4 * 4 * 6);
+        // unique
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(set.len(), v.len());
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for k in SignalKind::ALL {
+            assert_eq!(SignalKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(SignalKind::parse("bogus"), None);
+    }
+}

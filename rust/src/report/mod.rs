@@ -1,0 +1,147 @@
+//! Report rendering: paper-style tables and per-PE heat maps, as
+//! monospace text and JSON.
+
+use crate::campaign::PeMap;
+use crate::util::json::Json;
+
+/// Render an aligned monospace table (the shape the paper's tables use).
+pub fn format_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let line = |w: &[usize]| -> String {
+        let mut s = String::from("+");
+        for width in w {
+            s.push_str(&"-".repeat(width + 2));
+            s.push('+');
+        }
+        s.push('\n');
+        s
+    };
+    out.push_str(&line(&widths));
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {h:w$} |"));
+    }
+    out.push('\n');
+    out.push_str(&line(&widths));
+    for row in rows {
+        out.push('|');
+        for (c, w) in row.iter().zip(&widths) {
+            out.push_str(&format!(" {c:>w$} |"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&line(&widths));
+    out
+}
+
+/// Render a per-PE heat map as ASCII (paper Fig. 5 style).
+pub fn format_pe_map(map: &PeMap) -> String {
+    let mut out = format!("{} ({}x{})\n", map.title, map.dim, map.dim);
+    // column header
+    out.push_str("      ");
+    for c in 0..map.dim {
+        out.push_str(&format!("  c{c:<4}"));
+    }
+    out.push('\n');
+    for r in 0..map.dim {
+        out.push_str(&format!("  r{r:<3}"));
+        for c in 0..map.dim {
+            out.push_str(&format!(" {:>6.3}", map.value(r, c)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Per-PE map as JSON (for plotting outside).
+pub fn pe_map_json(map: &PeMap) -> Json {
+    let rows: Vec<Json> = (0..map.dim)
+        .map(|r| {
+            Json::Arr(
+                (0..map.dim)
+                    .map(|c| Json::Num(map.value(r, c)))
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("title", Json::str(map.title.clone())),
+        ("dim", Json::num(map.dim as f64)),
+        ("values", Json::Arr(rows)),
+    ])
+}
+
+/// Format a duration in the paper's style (h / min / s / ms / us).
+pub fn human_time(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.0}h{:02.0}min", (secs / 3600.0).floor(), (secs % 3600.0) / 60.0)
+    } else if secs >= 60.0 {
+        format!("{:.0}min{:02.0}s", (secs / 60.0).floor(), secs % 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::PeMap;
+
+    #[test]
+    fn table_is_aligned() {
+        let t = format_table(
+            "TABLE X",
+            &["Model", "AVF"],
+            &[
+                vec!["ResNet50".into(), "0.34%".into()],
+                vec!["X".into(), "1.00%".into()],
+            ],
+        );
+        assert!(t.contains("TABLE X"));
+        assert!(t.contains("| ResNet50 |"));
+        let lines: Vec<&str> = t.lines().collect();
+        let w = lines[1].len();
+        assert!(lines.iter().skip(1).all(|l| l.len() == w));
+    }
+
+    #[test]
+    fn map_renders_all_cells() {
+        let mut m = PeMap::new(2, "t");
+        for c in m.cells.iter_mut() {
+            c.record(true);
+        }
+        let s = format_pe_map(&m);
+        assert_eq!(s.matches("1.000").count(), 4);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(7260.0), "2h01min");
+        assert_eq!(human_time(61.0), "1min01s");
+        assert_eq!(human_time(2.5), "2.50s");
+        assert_eq!(human_time(0.0025), "2.500ms");
+        assert_eq!(human_time(0.0000025), "2.500us");
+    }
+
+    #[test]
+    fn pe_map_json_shape() {
+        let m = PeMap::new(3, "x");
+        let j = pe_map_json(&m);
+        assert_eq!(j.get("dim").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("values").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the software-level inference path of the
+//! end-to-end driver — Python never runs here.
+//!
+//! Interchange format is HLO *text* (not serialized HloModuleProto):
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod quicknet;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT artifact (from `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// (name, shape, dtype) of each graph input, in call order.
+    pub inputs: Vec<(String, Vec<usize>, String)>,
+    /// free-form meta (kind, scales, conv geometry...)
+    pub meta: Json,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let raw = Json::parse(&text)?;
+        let mut artifacts = BTreeMap::new();
+        let arts = raw
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest artifacts must be an object"))?;
+        for (name, a) in arts {
+            let file = a
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact file must be a string"))?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in a.req("inputs")?.as_arr().unwrap_or(&[]) {
+                let iname = inp.req("name")?.as_str().unwrap_or("").to_string();
+                let shape: Vec<usize> = inp
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                let dtype = inp.req("dtype")?.as_str().unwrap_or("").to_string();
+                inputs.push((iname, shape, dtype));
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(Manifest { artifacts, raw })
+    }
+}
+
+/// A typed argument for an artifact execution.
+pub enum ArgValue<'a> {
+    I8(&'a [i8], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+impl ArgValue<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ArgValue::I8(data, shape) => {
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    shape,
+                    bytes,
+                )?)
+            }
+            ArgValue::I32(data, shape) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?)
+            }
+        }
+    }
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            dir,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            let path = self.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact; the result is the first element of the
+    /// 1-tuple every graph returns (aot.py lowers with return_tuple).
+    pub fn exec(&mut self, name: &str, args: &[ArgValue<'_>]) -> Result<xla::Literal> {
+        // validate against the manifest before crossing into XLA
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if info.inputs.len() != args.len() {
+            bail!(
+                "artifact {name} expects {} inputs, got {}",
+                info.inputs.len(),
+                args.len()
+            );
+        }
+        for ((iname, shape, _), arg) in info.inputs.iter().zip(args) {
+            let (len, ashape) = match arg {
+                ArgValue::I8(d, s) => (d.len(), s.clone()),
+                ArgValue::I32(d, s) => (d.len(), s.clone()),
+            };
+            if &ashape != shape || len != shape.iter().product::<usize>() {
+                bail!("artifact {name} input '{iname}': shape {ashape:?} != {shape:?}");
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Execute and read back an int8 tensor.
+    pub fn exec_i8(&mut self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<i8>> {
+        Ok(self.exec(name, args)?.to_vec::<i8>()?)
+    }
+
+    /// Execute and read back an int32 tensor.
+    pub fn exec_i32(&mut self, name: &str, args: &[ArgValue<'_>]) -> Result<Vec<i32>> {
+        Ok(self.exec(name, args)?.to_vec::<i32>()?)
+    }
+
+    /// Raw GEMM through a `gemm_MxKxN` artifact.
+    pub fn gemm(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+        a: &[i8],
+        b: &[i8],
+        d: &[i32],
+    ) -> Result<Vec<i32>> {
+        let name = format!("gemm_{m}x{k}x{n}");
+        self.exec_i32(
+            &name,
+            &[
+                ArgValue::I8(a, vec![m, k]),
+                ArgValue::I8(b, vec![k, n]),
+                ArgValue::I32(d, vec![m, n]),
+            ],
+        )
+    }
+}

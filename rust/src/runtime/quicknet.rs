@@ -1,0 +1,172 @@
+//! QuickNet on PJRT: the end-to-end software inference path.
+//!
+//! Every GEMM-bearing layer executes as an AOT-compiled XLA graph
+//! (`quicknet_conv1..4`, `quicknet_fc`); the global average pool runs
+//! natively (integer op, no artifact needed). For a cross-layer fault
+//! trial, the *target* layer is swapped to the native im2col+GEMM path
+//! with one tile offloaded to the RTL mesh — exactly the paper's Fig. 4
+//! runtime flow, with PJRT playing the role of the PyTorch stack.
+
+use super::{ArgValue, PjrtRuntime};
+use crate::campaign::{CrossLayerRunner, TileBackend, TrialFault};
+use crate::config::OffloadScope;
+use crate::dnn::layers::{ForwardCtx, Layer};
+use crate::dnn::models;
+use crate::dnn::{Act, Model, TensorI8};
+use anyhow::{anyhow, Result};
+
+/// QuickNet with PJRT-executed layers.
+pub struct QuicknetPjrt {
+    /// the native twin: owns the weights and the fallback path
+    pub model: Model,
+    /// names of the artifacts backing each GEMM layer, by layer index
+    layer_artifacts: Vec<Option<String>>,
+}
+
+impl QuicknetPjrt {
+    pub fn new(seed: u64) -> Self {
+        let model = models::quicknet(seed);
+        let layer_artifacts = vec![
+            Some("quicknet_conv1".to_string()),
+            Some("quicknet_conv2".to_string()),
+            Some("quicknet_conv3".to_string()),
+            Some("quicknet_conv4".to_string()),
+            None, // global avg pool: native
+            Some("quicknet_fc".to_string()),
+        ];
+        QuicknetPjrt {
+            model,
+            layer_artifacts,
+        }
+    }
+
+    /// Forward pass through PJRT. If `trial` is set, the target layer
+    /// runs natively with one tile offloaded (with fault) to `mesh`.
+    pub fn forward(
+        &self,
+        rt: &mut PjrtRuntime,
+        x: &TensorI8,
+        trial: Option<(TrialFault, &mut crate::mesh::Mesh)>,
+    ) -> Result<TensorI8> {
+        let mut act = Act::Chw(x.clone());
+        let (trial, mut mesh) = match trial {
+            Some((t, m)) => (Some(t), Some(m)),
+            None => (None, None),
+        };
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            let is_target = trial.map(|t| t.site.layer == li).unwrap_or(false);
+            act = if is_target {
+                // cross-layer path: native layer with RTL tile offload
+                let t = trial.unwrap();
+                let mesh = mesh.as_deref_mut().expect("mesh required for trial");
+                let mut runner = CrossLayerRunner::new(
+                    t,
+                    TileBackend::Mesh(mesh),
+                    OffloadScope::SingleTile,
+                );
+                let mut ctx = ForwardCtx::new(Some(&mut runner));
+                layer.forward(&act, li, &mut ctx)
+            } else {
+                match (&self.layer_artifacts[li], layer) {
+                    (Some(name), Layer::Conv(conv)) => {
+                        let t = act.chw();
+                        let (oc, oh, ow) = conv.out_shape(t);
+                        let y = rt.exec_i8(
+                            name,
+                            &[
+                                ArgValue::I8(&t.data, t.shape.clone()),
+                                ArgValue::I8(
+                                    &conv.wmat,
+                                    vec![conv.cin * conv.kh * conv.kw, conv.cout],
+                                ),
+                                ArgValue::I32(&conv.bias, vec![conv.cout]),
+                            ],
+                        )?;
+                        Act::Chw(TensorI8::from_vec(&[oc, oh, ow], y))
+                    }
+                    (Some(name), Layer::Linear(lin)) => {
+                        let t = act.tokens();
+                        let y = rt.exec_i8(
+                            name,
+                            &[
+                                ArgValue::I8(&t.data, t.shape.clone()),
+                                ArgValue::I8(&lin.w, vec![lin.in_f, lin.out_f]),
+                                ArgValue::I32(&lin.bias, vec![lin.out_f]),
+                            ],
+                        )?;
+                        Act::Tokens(TensorI8::from_vec(&[1, lin.out_f], y))
+                    }
+                    (None, layer) => {
+                        layer.forward(&act, li, &mut ForwardCtx::plain())
+                    }
+                    (Some(n), _) => {
+                        return Err(anyhow!("artifact {n} bound to unsupported layer"))
+                    }
+                }
+            };
+        }
+        Ok(act.tensor().clone())
+    }
+
+    /// Golden Top-1 through PJRT.
+    pub fn top1(&self, rt: &mut PjrtRuntime, x: &TensorI8) -> Result<usize> {
+        Ok(crate::dnn::argmax(&self.forward(rt, x, None)?.data))
+    }
+
+    /// Forward pass through PJRT with a software-level fault applied to
+    /// one layer's output tensor (the PVF baseline of Table VI, on the
+    /// same software path as the golden/RTL runs).
+    pub fn forward_swfi(
+        &self,
+        rt: &mut PjrtRuntime,
+        x: &TensorI8,
+        target: &crate::swfi::SwTarget,
+    ) -> Result<TensorI8> {
+        use crate::swfi::SwTarget;
+        let mut act = Act::Chw(x.clone());
+        for (li, layer) in self.model.layers.iter().enumerate() {
+            act = match (&self.layer_artifacts[li], layer) {
+                (Some(name), Layer::Conv(conv)) => {
+                    let t = act.chw();
+                    let (oc, oh, ow) = conv.out_shape(t);
+                    let y = rt.exec_i8(
+                        name,
+                        &[
+                            ArgValue::I8(&t.data, t.shape.clone()),
+                            ArgValue::I8(
+                                &conv.wmat,
+                                vec![conv.cin * conv.kh * conv.kw, conv.cout],
+                            ),
+                            ArgValue::I32(&conv.bias, vec![conv.cout]),
+                        ],
+                    )?;
+                    Act::Chw(TensorI8::from_vec(&[oc, oh, ow], y))
+                }
+                (Some(name), Layer::Linear(lin)) => {
+                    let t = act.tokens();
+                    let y = rt.exec_i8(
+                        name,
+                        &[
+                            ArgValue::I8(&t.data, t.shape.clone()),
+                            ArgValue::I8(&lin.w, vec![lin.in_f, lin.out_f]),
+                            ArgValue::I32(&lin.bias, vec![lin.out_f]),
+                        ],
+                    )?;
+                    Act::Tokens(TensorI8::from_vec(&[1, lin.out_f], y))
+                }
+                (None, layer) => layer.forward(&act, li, &mut ForwardCtx::plain()),
+                (Some(n), _) => {
+                    return Err(anyhow!("artifact {n} bound to unsupported layer"))
+                }
+            };
+            if let SwTarget::LayerOutput { layer, elem, bit } = *target {
+                if layer == li {
+                    let t = act.tensor_mut();
+                    let e = elem % t.data.len();
+                    t.data[e] = crate::util::bits::flip_i8(t.data[e], bit);
+                }
+            }
+        }
+        Ok(act.tensor().clone())
+    }
+}

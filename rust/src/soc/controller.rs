@@ -1,0 +1,341 @@
+//! Gemmini controller: RoCC command queue (ROB), config state and the
+//! execute FSM that drives operand streams from the scratchpad into the
+//! mesh — the `ExecuteController` / `LoadController` / `StoreController`
+//! complex of the real design.
+//!
+//! The execute FSM reproduces *exactly* the schedule of
+//! [`crate::mesh::driver::MatmulDriver`] (preload / compute / flush with
+//! the same skews), so a fault at mesh-relative cycle `t` produces the
+//! same corruption whether injected through the mesh-only wrapper or
+//! through the full SoC — pinned by `rust/tests/integration_soc.rs`.
+
+use super::core::RoccCmd;
+use super::dma::{Dma, DmaDir, MainMemory};
+use super::scratchpad::{AccMem, Scratchpad};
+use crate::mesh::adapters::FlushCollector;
+use crate::mesh::inject::{Fault, Injectable};
+use crate::mesh::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Gemmini RoCC functs (subset).
+pub mod funct {
+    pub const CONFIG: u8 = 0;
+    pub const MVIN: u8 = 1;
+    pub const PRELOAD: u8 = 2;
+    pub const COMPUTE: u8 = 3;
+    pub const MVOUT: u8 = 4;
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ExecState {
+    Idle,
+    Preload { p: usize },
+    Compute { tau: usize },
+    Flush { p: usize },
+}
+
+/// The controller + mesh complex.
+pub struct Controller {
+    pub mesh: Mesh,
+    rob: VecDeque<RoccCmd>,
+    state: ExecState,
+    /// config: inner dimension (stream length K) of the next compute.
+    cfg_k: usize,
+    /// operand base rows (set by the COMPUTE command).
+    a_base: usize,
+    b_base: usize,
+    /// accmem row holding D (set by PRELOAD) and landing row for C.
+    d_base: usize,
+    c_base: usize,
+    /// ring buffers implementing the skew shift registers at the edges.
+    ring_a: Vec<Vec<i8>>,
+    ring_b: Vec<Vec<i8>>,
+    /// mesh-relative cycle counter for the in-flight matmul.
+    mesh_t: u64,
+    /// optional armed fault (mesh-relative cycle).
+    fault: Option<Fault>,
+    collector: Option<FlushCollector>,
+    inp: MeshInputs,
+    out: StepOutput,
+    /// statistics
+    pub matmuls_done: u64,
+}
+
+impl Controller {
+    pub fn new(dim: usize) -> Self {
+        Controller {
+            mesh: Mesh::new(dim, crate::config::Dataflow::OutputStationary),
+            rob: VecDeque::new(),
+            state: ExecState::Idle,
+            cfg_k: dim,
+            a_base: 0,
+            b_base: 0,
+            d_base: 0,
+            c_base: 0,
+            ring_a: vec![vec![0; dim]; dim],
+            ring_b: vec![vec![0; dim]; dim],
+            mesh_t: 0,
+            fault: None,
+            collector: None,
+            inp: MeshInputs::idle(dim),
+            out: StepOutput::new(dim),
+            matmuls_done: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mesh.dim()
+    }
+
+    /// ROB occupancy (drives the core's fence).
+    pub fn busy(&self) -> bool {
+        !self.rob.is_empty() || self.state != ExecState::Idle
+    }
+
+    pub fn enqueue(&mut self, cmd: RoccCmd) {
+        self.rob.push_back(cmd);
+    }
+
+    /// Arm a transient fault at a mesh-relative cycle of the *next*
+    /// compute command.
+    pub fn arm_fault(&mut self, fault: Fault) {
+        self.fault = Some(fault);
+    }
+
+    /// One clock edge of the controller + mesh complex.
+    pub fn tick(
+        &mut self,
+        spad: &mut Scratchpad,
+        accmem: &mut AccMem,
+        dma: &mut Dma,
+        mem: &mut MainMemory,
+    ) -> Result<()> {
+        let dim = self.dim();
+        match self.state {
+            ExecState::Idle => {
+                // decode at most one command per cycle (issue stage)
+                if let Some(cmd) = self.rob.front().copied() {
+                    match cmd.funct {
+                        funct::CONFIG => {
+                            self.cfg_k = cmd.rs1 as usize;
+                            self.rob.pop_front();
+                        }
+                        funct::MVIN => {
+                            if !dma.busy() {
+                                let rows = (cmd.rs2 >> 32) as usize;
+                                let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
+                                dma.start(
+                                    DmaDir::MemToSpad,
+                                    cmd.rs1 as usize,
+                                    spad_row,
+                                    rows,
+                                    mem,
+                                );
+                                self.rob.pop_front();
+                            }
+                        }
+                        funct::MVOUT => {
+                            if !dma.busy() {
+                                let rows = (cmd.rs2 >> 32) as usize;
+                                let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
+                                dma.start(
+                                    DmaDir::SpadToMem,
+                                    cmd.rs1 as usize,
+                                    spad_row,
+                                    rows,
+                                    mem,
+                                );
+                                self.rob.pop_front();
+                            }
+                        }
+                        funct::PRELOAD => {
+                            self.d_base = cmd.rs1 as usize;
+                            self.c_base = cmd.rs2 as usize;
+                            self.rob.pop_front();
+                        }
+                        funct::COMPUTE => {
+                            self.a_base = cmd.rs1 as usize;
+                            self.b_base = cmd.rs2 as usize;
+                            self.rob.pop_front();
+                            self.mesh.reset();
+                            self.mesh_t = 0;
+                            self.collector = Some(FlushCollector::new(dim));
+                            for r in &mut self.ring_a {
+                                r.fill(0);
+                            }
+                            for r in &mut self.ring_b {
+                                r.fill(0);
+                            }
+                            self.state = ExecState::Preload { p: 0 };
+                        }
+                        other => anyhow::bail!("unknown RoCC funct {other}"),
+                    }
+                }
+                // the full SoC clocks the mesh every cycle, busy or not
+                self.inp.clear();
+                self.mesh.step(&self.inp, &mut self.out);
+            }
+            ExecState::Preload { p } => {
+                self.inp.clear();
+                if p < dim {
+                    let d_row = accmem.read_row(self.d_base + (dim - 1 - p))?.to_vec();
+                    for c in 0..dim {
+                        self.inp.north_propag[c] = true;
+                        self.inp.north_d[c] = d_row[c];
+                    }
+                }
+                self.step_mesh_with_fault();
+                self.state = if p + 1 == 2 * dim - 1 {
+                    ExecState::Compute { tau: 0 }
+                } else {
+                    ExecState::Preload { p: p + 1 }
+                };
+            }
+            ExecState::Compute { tau } => {
+                let k = self.cfg_k;
+                // scratchpad reads: one operand column/row pair per cycle
+                // while the streams last, pushed into the skew registers.
+                if tau < k {
+                    let (a_col, _s1) = spad.read_row(self.a_base + tau)?;
+                    let (b_row, _s2) = spad.read_row(self.b_base + tau)?;
+                    self.ring_a[tau % dim].copy_from_slice(&a_col);
+                    self.ring_b[tau % dim].copy_from_slice(&b_row);
+                }
+                self.inp.clear();
+                for r in 0..dim {
+                    // lane r sees stream element tau - r (skew registers)
+                    if tau >= r && tau - r < k {
+                        self.inp.west_a[r] = self.ring_a[(tau - r) % dim][r];
+                    }
+                }
+                for c in 0..dim {
+                    if tau >= c && tau - c < k {
+                        self.inp.north_b[c] = self.ring_b[(tau - c) % dim][c];
+                        self.inp.north_valid[c] = true;
+                    }
+                }
+                self.step_mesh_with_fault();
+                self.state = if tau + 1 == k + 2 * dim - 2 {
+                    ExecState::Flush { p: 0 }
+                } else {
+                    ExecState::Compute { tau: tau + 1 }
+                };
+            }
+            ExecState::Flush { p } => {
+                self.inp.clear();
+                self.out.clear();
+                if p < dim {
+                    for c in 0..dim {
+                        self.inp.north_propag[c] = true;
+                    }
+                }
+                self.step_mesh_with_fault();
+                if let Some(col) = self.collector.as_mut() {
+                    col.absorb(&self.out.south_c);
+                }
+                if p + 1 == 2 * dim - 1 {
+                    // land C into the accumulator memory
+                    let col = self.collector.take().expect("flush without collector");
+                    debug_assert!(col.complete());
+                    for (r, row) in col.c.iter().enumerate() {
+                        accmem.write_row(self.c_base + r, row)?;
+                    }
+                    self.fault = None;
+                    self.matmuls_done += 1;
+                    self.state = ExecState::Idle;
+                } else {
+                    self.state = ExecState::Flush { p: p + 1 };
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn step_mesh_with_fault(&mut self) {
+        if let Some(f) = self.fault {
+            if f.fires_at(self.mesh_t) {
+                self.mesh.inject_now(&f, &mut self.inp);
+            }
+        }
+        self.mesh.step(&self.inp, &mut self.out);
+        self.mesh_t += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the controller directly (no core) through one matmul.
+    fn run_matmul_direct(dim: usize, k: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+        use crate::mesh::driver::gold_matmul;
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 1 << 10);
+
+        let mut ctrl = Controller::new(dim);
+        let mut spad = Scratchpad::new(4, 64, dim);
+        let mut accmem = AccMem::new(64, dim);
+        let mut dma = Dma::new();
+        let mut mem = MainMemory::new(1 << 16, 2);
+
+        // stage operands: spad rows [0..k) = A columns, [k..2k) = B rows
+        for kk in 0..k {
+            let col: Vec<i8> = (0..dim).map(|r| a[r][kk]).collect();
+            spad.write_row(kk, &col).unwrap();
+            spad.write_row(k + kk, &b[kk]).unwrap();
+            spad.tick();
+        }
+        for r in 0..dim {
+            accmem.write_row(r, &d[r]).unwrap();
+        }
+        ctrl.enqueue(RoccCmd { funct: funct::CONFIG, rs1: k as u64, rs2: 0 });
+        ctrl.enqueue(RoccCmd { funct: funct::PRELOAD, rs1: 0, rs2: 16 });
+        ctrl.enqueue(RoccCmd { funct: funct::COMPUTE, rs1: 0, rs2: k as u64 });
+        let mut guard = 0;
+        while ctrl.busy() {
+            spad.tick();
+            ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+            guard += 1;
+            assert!(guard < 100_000);
+        }
+        let c: Vec<Vec<i32>> = (0..dim)
+            .map(|r| accmem.read_row(16 + r).unwrap().to_vec())
+            .collect();
+        (c, gold_matmul(&a, &b, &d))
+    }
+
+    #[test]
+    fn controller_matmul_matches_gold() {
+        for &(dim, k) in &[(2usize, 2usize), (4, 4), (4, 9), (8, 8)] {
+            let (c, gold) = run_matmul_direct(dim, k, dim as u64 * 31 + k as u64);
+            assert_eq!(c, gold, "dim={dim} k={k}");
+        }
+    }
+
+    #[test]
+    fn mvin_then_mvout_round_trip() {
+        let mut ctrl = Controller::new(4);
+        let mut spad = Scratchpad::new(4, 64, 4);
+        let mut accmem = AccMem::new(64, 4);
+        let mut dma = Dma::new();
+        let mut mem = MainMemory::new(1 << 12, 2);
+        for (i, b) in mem.bytes[64..72].iter_mut().enumerate() {
+            *b = (i as i8) - 4;
+        }
+        ctrl.enqueue(RoccCmd { funct: funct::MVIN, rs1: 64, rs2: (2u64 << 32) | 8 });
+        ctrl.enqueue(RoccCmd { funct: funct::MVOUT, rs1: 256, rs2: (2u64 << 32) | 8 });
+        let mut guard = 0;
+        while ctrl.busy() || dma.busy() {
+            spad.tick();
+            ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+            dma.tick(&mut mem, &mut spad).unwrap();
+            guard += 1;
+            assert!(guard < 10_000);
+        }
+        assert_eq!(&mem.bytes[256..264], &mem.bytes[64..72].to_vec()[..]);
+    }
+}

@@ -1,0 +1,174 @@
+//! DMA engine: moves operand tiles between the (modelled) main memory and
+//! the scratchpad, one row per cycle with a fixed setup latency — the
+//! MVIN / MVOUT datapath of Gemmini.
+
+use super::scratchpad::Scratchpad;
+use anyhow::Result;
+
+/// Main-memory model: a flat byte array with a fixed access latency that
+/// the DMA pays once per burst.
+pub struct MainMemory {
+    pub bytes: Vec<i8>,
+    pub burst_latency: u32,
+}
+
+impl MainMemory {
+    pub fn new(size: usize, burst_latency: u32) -> Self {
+        MainMemory {
+            bytes: vec![0; size],
+            burst_latency,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DmaState {
+    Idle,
+    Setup { remaining: u32 },
+    Busy,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DmaDir {
+    MemToSpad,
+    SpadToMem,
+}
+
+/// One in-flight DMA transfer descriptor.
+#[derive(Clone, Copy, Debug)]
+struct Xfer {
+    dir: DmaDir,
+    mem_addr: usize,
+    spad_row: usize,
+    rows: usize,
+    done_rows: usize,
+}
+
+/// The DMA engine FSM. `tick` moves at most one row per cycle.
+pub struct Dma {
+    state: DmaState,
+    xfer: Option<Xfer>,
+    pub rows_moved: u64,
+}
+
+impl Default for Dma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dma {
+    pub fn new() -> Self {
+        Dma {
+            state: DmaState::Idle,
+            xfer: None,
+            rows_moved: 0,
+        }
+    }
+
+    pub fn busy(&self) -> bool {
+        self.state != DmaState::Idle
+    }
+
+    /// Enqueue a transfer (controller guarantees the engine is idle).
+    pub fn start(
+        &mut self,
+        dir: DmaDir,
+        mem_addr: usize,
+        spad_row: usize,
+        rows: usize,
+        mem: &MainMemory,
+    ) {
+        debug_assert!(!self.busy(), "DMA start while busy");
+        self.xfer = Some(Xfer {
+            dir,
+            mem_addr,
+            spad_row,
+            rows,
+            done_rows: 0,
+        });
+        self.state = DmaState::Setup {
+            remaining: mem.burst_latency,
+        };
+    }
+
+    /// One clock edge: progress the FSM, moving up to one row.
+    pub fn tick(&mut self, mem: &mut MainMemory, spad: &mut Scratchpad) -> Result<()> {
+        match self.state {
+            DmaState::Idle => {}
+            DmaState::Setup { remaining } => {
+                self.state = if remaining <= 1 {
+                    DmaState::Busy
+                } else {
+                    DmaState::Setup {
+                        remaining: remaining - 1,
+                    }
+                };
+            }
+            DmaState::Busy => {
+                let row_bytes = spad.row_bytes();
+                let x = self.xfer.as_mut().expect("busy DMA without xfer");
+                let mem_off = x.mem_addr + x.done_rows * row_bytes;
+                match x.dir {
+                    DmaDir::MemToSpad => {
+                        let src = mem.bytes[mem_off..mem_off + row_bytes].to_vec();
+                        spad.write_row(x.spad_row + x.done_rows, &src)?;
+                    }
+                    DmaDir::SpadToMem => {
+                        let (row, _stall) = spad.read_row(x.spad_row + x.done_rows)?;
+                        mem.bytes[mem_off..mem_off + row_bytes].copy_from_slice(&row);
+                    }
+                }
+                x.done_rows += 1;
+                self.rows_moved += 1;
+                if x.done_rows == x.rows {
+                    self.state = DmaState::Idle;
+                    self.xfer = None;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mvin_moves_rows_after_setup() {
+        let mut mem = MainMemory::new(1024, 3);
+        let mut spad = Scratchpad::new(2, 8, 4);
+        for (i, b) in mem.bytes[100..108].iter_mut().enumerate() {
+            *b = i as i8;
+        }
+        let mut dma = Dma::new();
+        dma.start(DmaDir::MemToSpad, 100, 2, 2, &mem);
+        let mut cycles = 0;
+        while dma.busy() {
+            spad.tick();
+            dma.tick(&mut mem, &mut spad).unwrap();
+            cycles += 1;
+            assert!(cycles < 100);
+        }
+        assert_eq!(cycles, 3 + 2, "setup latency + one row per cycle");
+        assert_eq!(spad.read_row(2).unwrap().0, vec![0, 1, 2, 3]);
+        assert_eq!(spad.read_row(3).unwrap().0, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn mvout_round_trips() {
+        let mut mem = MainMemory::new(256, 1);
+        let mut spad = Scratchpad::new(2, 8, 4);
+        spad.write_row(0, &[9, 8, 7, 6]).unwrap();
+        spad.tick();
+        let mut dma = Dma::new();
+        dma.start(DmaDir::SpadToMem, 32, 0, 1, &mem);
+        while dma.busy() {
+            spad.tick();
+            dma.tick(&mut mem, &mut spad).unwrap();
+        }
+        assert_eq!(&mem.bytes[32..36], &[9, 8, 7, 6]);
+        assert_eq!(dma.rows_moved, 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Full-SoC RTL-level baseline (paper Fig. 3): Rocket-like core, L1
+//! caches, interconnect, DMA, scratchpad, Gemmini controller and the
+//! mesh — every block evaluated every cycle, like a verilated Chipyard
+//! SoC. This is what ENFOR-SA's mesh isolation is benchmarked against.
+
+pub mod cache;
+pub mod controller;
+pub mod core;
+pub mod detail;
+pub mod dma;
+pub mod scratchpad;
+#[allow(clippy::module_inception)]
+pub mod soc;
+
+pub use controller::Controller;
+pub use soc::Soc;

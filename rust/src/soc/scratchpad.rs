@@ -1,0 +1,184 @@
+//! Gemmini's banked scratchpad and accumulator SRAM.
+//!
+//! The real design has N banks of single-ported SRAM with row-wide
+//! read/write ports feeding the mesh edge, plus a separate 32-bit
+//! accumulator memory. Bank-conflict arbitration is per-cycle logic in
+//! the verilated SoC; the model reproduces it (one read + one write port
+//! per bank per cycle).
+
+use anyhow::{bail, Result};
+
+/// Banked int8 scratchpad with row-granularity ports (one row = DIM bytes).
+pub struct Scratchpad {
+    banks: usize,
+    rows_per_bank: usize,
+    row_bytes: usize,
+    data: Vec<i8>,
+    /// Per-cycle port occupancy (cleared by `tick`).
+    read_busy: Vec<bool>,
+    write_busy: Vec<bool>,
+    pub conflicts: u64,
+}
+
+impl Scratchpad {
+    pub fn new(banks: usize, rows_per_bank: usize, row_bytes: usize) -> Self {
+        Scratchpad {
+            banks,
+            rows_per_bank,
+            row_bytes,
+            data: vec![0; banks * rows_per_bank * row_bytes],
+            read_busy: vec![false; banks],
+            write_busy: vec![false; banks],
+            conflicts: 0,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.banks * self.rows_per_bank
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    fn locate(&self, row: usize) -> Result<(usize, usize)> {
+        if row >= self.rows() {
+            bail!("scratchpad row {row} out of range ({} rows)", self.rows());
+        }
+        Ok((row % self.banks, row / self.banks))
+    }
+
+    /// Read a full row. Returns (data, stall): stall = 1 if the bank's
+    /// read port was already claimed this cycle.
+    pub fn read_row(&mut self, row: usize) -> Result<(Vec<i8>, u32)> {
+        let (bank, local) = self.locate(row)?;
+        let stall = if self.read_busy[bank] {
+            self.conflicts += 1;
+            1
+        } else {
+            self.read_busy[bank] = true;
+            0
+        };
+        let off = (bank * self.rows_per_bank + local) * self.row_bytes;
+        Ok((self.data[off..off + self.row_bytes].to_vec(), stall))
+    }
+
+    /// Write a full row (port-arbitrated like reads).
+    pub fn write_row(&mut self, row: usize, bytes: &[i8]) -> Result<u32> {
+        let (bank, local) = self.locate(row)?;
+        if bytes.len() != self.row_bytes {
+            bail!("row write of {} bytes into {}-byte rows", bytes.len(), self.row_bytes);
+        }
+        let stall = if self.write_busy[bank] {
+            self.conflicts += 1;
+            1
+        } else {
+            self.write_busy[bank] = true;
+            0
+        };
+        let off = (bank * self.rows_per_bank + local) * self.row_bytes;
+        self.data[off..off + self.row_bytes].copy_from_slice(bytes);
+        Ok(stall)
+    }
+
+    /// Release the per-cycle ports (clock edge).
+    pub fn tick(&mut self) {
+        self.read_busy.fill(false);
+        self.write_busy.fill(false);
+    }
+
+    pub fn state_elements(&self) -> usize {
+        // ports + arbitration per bank; the SRAM macro itself is not
+        // swept per cycle by Verilator either.
+        self.banks * 4
+    }
+}
+
+/// The 32-bit accumulator SRAM (bias staging / result landing zone).
+pub struct AccMem {
+    rows: usize,
+    row_elems: usize,
+    data: Vec<i32>,
+}
+
+impl AccMem {
+    pub fn new(rows: usize, row_elems: usize) -> Self {
+        AccMem {
+            rows,
+            row_elems,
+            data: vec![0; rows * row_elems],
+        }
+    }
+
+    pub fn read_row(&self, row: usize) -> Result<&[i32]> {
+        if row >= self.rows {
+            bail!("accmem row {row} out of range");
+        }
+        Ok(&self.data[row * self.row_elems..(row + 1) * self.row_elems])
+    }
+
+    pub fn write_row(&mut self, row: usize, vals: &[i32]) -> Result<()> {
+        if row >= self.rows {
+            bail!("accmem row {row} out of range");
+        }
+        if vals.len() != self.row_elems {
+            bail!("accmem row width mismatch");
+        }
+        self.data[row * self.row_elems..(row + 1) * self.row_elems].copy_from_slice(vals);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_round_trip() {
+        let mut sp = Scratchpad::new(4, 16, 8);
+        let row = vec![1i8, -2, 3, -4, 5, -6, 7, -8];
+        sp.write_row(5, &row).unwrap();
+        sp.tick();
+        let (got, stall) = sp.read_row(5).unwrap();
+        assert_eq!(got, row);
+        assert_eq!(stall, 0);
+    }
+
+    #[test]
+    fn same_bank_double_read_conflicts() {
+        let mut sp = Scratchpad::new(4, 16, 8);
+        // rows 0 and 4 both live in bank 0
+        let (_v, s1) = sp.read_row(0).unwrap();
+        let (_v, s2) = sp.read_row(4).unwrap();
+        assert_eq!(s1, 0);
+        assert_eq!(s2, 1);
+        assert_eq!(sp.conflicts, 1);
+        sp.tick();
+        let (_v, s3) = sp.read_row(4).unwrap();
+        assert_eq!(s3, 0, "ports released at the clock edge");
+    }
+
+    #[test]
+    fn different_banks_no_conflict() {
+        let mut sp = Scratchpad::new(4, 16, 8);
+        assert_eq!(sp.read_row(0).unwrap().1, 0);
+        assert_eq!(sp.read_row(1).unwrap().1, 0);
+        assert_eq!(sp.conflicts, 0);
+    }
+
+    #[test]
+    fn out_of_range_errors() {
+        let mut sp = Scratchpad::new(2, 4, 8);
+        assert!(sp.read_row(8).is_err());
+        assert!(sp.write_row(8, &vec![0; 8]).is_err());
+        assert!(sp.write_row(0, &vec![0; 4]).is_err());
+    }
+
+    #[test]
+    fn accmem_round_trip() {
+        let mut am = AccMem::new(8, 4);
+        am.write_row(3, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(am.read_row(3).unwrap(), &[1, 2, 3, 4]);
+        assert!(am.read_row(9).is_err());
+    }
+}

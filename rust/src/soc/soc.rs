@@ -1,0 +1,271 @@
+//! The full-SoC simulation target (paper Fig. 3, Step 1): Rocket-like
+//! core + L1 caches + TileLink-style interconnect + DMA + scratchpad +
+//! Gemmini controller + the mesh — everything evaluated every cycle, the
+//! way Verilator evaluates the whole elaborated design.
+//!
+//! This is the *baseline* ENFOR-SA's mesh isolation is measured against
+//! (Table V): functionally it computes the same matmuls as the mesh-only
+//! wrapper, but each simulated cycle pays for the entire SoC.
+
+use super::controller::{funct, Controller};
+use super::core::{Core, Insn};
+use super::detail::UncoreDetail;
+use super::cache::Cache;
+use super::dma::{Dma, MainMemory};
+use super::scratchpad::{AccMem, Scratchpad};
+use crate::mesh::driver::{MatI32, MatI8};
+use crate::mesh::inject::Fault;
+use anyhow::Result;
+
+/// TileLink-style crossbar: per-cycle arbitration state between the
+/// core, DMA and peripheral ports (round-robin grant counters + request
+/// queues the verilated uncore evaluates every cycle).
+pub struct Interconnect {
+    grant_rr: u32,
+    inflight: [u32; 8],
+    pub beats: u64,
+}
+
+impl Default for Interconnect {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Interconnect {
+    pub fn new() -> Self {
+        Interconnect {
+            grant_rr: 0,
+            inflight: [0; 8],
+            beats: 0,
+        }
+    }
+
+    pub fn tick(&mut self) {
+        self.grant_rr = (self.grant_rr + 1) % 8;
+        for q in self.inflight.iter_mut() {
+            *q = q.saturating_sub(1);
+        }
+        self.beats += 1;
+    }
+}
+
+/// The complete SoC.
+pub struct Soc {
+    pub core: Core,
+    pub icache: Cache,
+    pub dcache: Cache,
+    pub xbar: Interconnect,
+    pub spad: Scratchpad,
+    pub accmem: AccMem,
+    pub dma: Dma,
+    pub mem: MainMemory,
+    pub ctrl: Controller,
+    pub detail: UncoreDetail,
+    pub cycles: u64,
+    icache_stall: u32,
+}
+
+impl Soc {
+    /// Build a SoC around a DIM x DIM mesh with Chipyard-like defaults
+    /// (16 KiB L1s, 256 KiB scratchpad, 64 KiB accumulator).
+    pub fn new(dim: usize) -> Self {
+        let spad_rows = (256 * 1024 / dim).max(4 * dim * dim);
+        Soc {
+            core: Core::new(),
+            icache: Cache::new(16 * 1024, 4, 64, 20),
+            dcache: Cache::new(16 * 1024, 4, 64, 20),
+            xbar: Interconnect::new(),
+            spad: Scratchpad::new(4, spad_rows / 4, dim),
+            accmem: AccMem::new((64 * 1024 / (4 * dim)).max(4 * dim), dim),
+            dma: Dma::new(),
+            mem: MainMemory::new(1 << 22, 4),
+            ctrl: Controller::new(dim),
+            detail: UncoreDetail::new(dim),
+            cycles: 0,
+            icache_stall: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ctrl.dim()
+    }
+
+    /// One SoC clock edge: every block evaluates, like the verilated SoC.
+    pub fn tick(&mut self, prog: &[Insn]) -> Result<()> {
+        self.cycles += 1;
+        // uncore always evaluates (predictors, TLBs, FPU, TileLink,
+        // Gemmini's non-mesh pipelines — the cost mesh isolation removes)
+        self.detail
+            .tick(self.cycles, self.core.pc as u64 * 4, self.spad.rows());
+        self.xbar.tick();
+        self.icache.tick(self.cycles);
+        self.dcache.tick(self.cycles);
+        self.spad.tick();
+        self.dma.tick(&mut self.mem, &mut self.spad)?;
+        // core front-end (with icache stalls)
+        if self.icache_stall > 0 {
+            self.icache_stall -= 1;
+        } else if !self.core.halted() {
+            let pc = self.core.pc as u64 * 4;
+            self.icache_stall = self.icache.access(pc);
+            let rob_busy = self.ctrl.busy() || self.dma.busy();
+            if let Some(cmd) = self.core.step(prog, rob_busy) {
+                self.ctrl.enqueue(cmd);
+            }
+        }
+        // accelerator complex
+        self.ctrl
+            .tick(&mut self.spad, &mut self.accmem, &mut self.dma, &mut self.mem)?;
+        Ok(())
+    }
+
+    /// Total architectural state evaluated per cycle (DESIGN.md D2):
+    /// the quantity that explains why mesh-only simulation wins, and why
+    /// the win shrinks as DIM grows (Table V).
+    pub fn state_elements(&self) -> usize {
+        self.core.state_elements()
+            + self.detail.state_elements()
+            + self.icache.state_elements()
+            + self.dcache.state_elements()
+            + self.spad.state_elements()
+            + 16 // xbar
+            + self.ctrl.mesh.state_elements()
+    }
+
+    /// Run one `C = A . B + D` matmul end-to-end *through the core*:
+    /// the driver program stages operands with MVIN commands, issues
+    /// PRELOAD + COMPUTE, fences, and halts. Returns C.
+    ///
+    /// `fault`: optional transient fault at a mesh-relative cycle of the
+    /// compute (same addressing as the mesh-only wrapper).
+    pub fn run_matmul(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        d: &MatI32,
+        fault: Option<Fault>,
+    ) -> Result<MatI32> {
+        let dim = self.dim();
+        let k = if a.is_empty() { 0 } else { a[0].len() };
+        anyhow::ensure!(a.len() == dim, "A must have DIM rows");
+        anyhow::ensure!(b.len() == k, "B must have K rows");
+        // the driver program runs from reset on every matmul
+        self.core = Core::new();
+
+        // Stage operands in main memory: A as K columns, then B as K rows.
+        let a_mem = 0x1000usize;
+        let b_mem = a_mem + k * dim;
+        for kk in 0..k {
+            for r in 0..dim {
+                self.mem.bytes[a_mem + kk * dim + r] = a[r][kk];
+            }
+            self.mem.bytes[b_mem + kk * dim..b_mem + (kk + 1) * dim]
+                .copy_from_slice(&b[kk]);
+        }
+        for r in 0..dim {
+            self.accmem.write_row(r, &d[r])?;
+        }
+        if let Some(f) = fault {
+            self.ctrl.arm_fault(f);
+        }
+
+        // Driver program the Rocket core executes (rs values via ADDIs —
+        // the pointer arithmetic real driver code performs).
+        let c_base = dim as u64; // accmem landing row
+        let prog = vec![
+            Insn::Addi { rd: 1, rs1: 0, imm: a_mem as i64 },
+            Insn::Addi { rd: 2, rs1: 0, imm: ((k as i64) << 32) | 0 },
+            Insn::Rocc { funct: funct::MVIN, rs1: 1, rs2: 2 }, // A cols -> rows 0..k
+            Insn::Fence,
+            Insn::Addi { rd: 3, rs1: 0, imm: b_mem as i64 },
+            Insn::Addi { rd: 4, rs1: 0, imm: ((k as i64) << 32) | k as i64 },
+            Insn::Rocc { funct: funct::MVIN, rs1: 3, rs2: 4 }, // B rows -> rows k..2k
+            Insn::Fence,
+            Insn::Addi { rd: 5, rs1: 0, imm: k as i64 },
+            Insn::Rocc { funct: funct::CONFIG, rs1: 5, rs2: 0 },
+            Insn::Addi { rd: 6, rs1: 0, imm: 0 },
+            Insn::Addi { rd: 7, rs1: 0, imm: c_base as i64 },
+            Insn::Rocc { funct: funct::PRELOAD, rs1: 6, rs2: 7 },
+            Insn::Addi { rd: 8, rs1: 0, imm: 0 },
+            Insn::Addi { rd: 9, rs1: 0, imm: k as i64 },
+            Insn::Rocc { funct: funct::COMPUTE, rs1: 8, rs2: 9 },
+            Insn::Fence,
+            Insn::Halt,
+        ];
+
+        let mut guard = 0u64;
+        while !self.core.halted() || self.ctrl.busy() || self.dma.busy() {
+            self.tick(&prog)?;
+            guard += 1;
+            anyhow::ensure!(guard < 10_000_000, "SoC run did not terminate");
+        }
+        let mut c = Vec::with_capacity(dim);
+        for r in 0..dim {
+            c.push(self.accmem.read_row(dim + r)?.to_vec());
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::driver::gold_matmul;
+    use crate::util::Rng;
+
+    #[test]
+    fn soc_matmul_matches_gold() {
+        let mut rng = Rng::new(77);
+        for &(dim, k) in &[(2usize, 2usize), (4, 4), (4, 7)] {
+            let mut soc = Soc::new(dim);
+            let a = rng.mat_i8(dim, k);
+            let b = rng.mat_i8(k, dim);
+            let d = rng.mat_i32(dim, dim, 1000);
+            let c = soc.run_matmul(&a, &b, &d, None).unwrap();
+            assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+        }
+    }
+
+    #[test]
+    fn soc_cycle_cost_exceeds_mesh_only() {
+        // The point of Table V: the same matmul costs far more cycles
+        // (and far more work per cycle) on the full SoC.
+        let dim = 4;
+        let mut soc = Soc::new(dim);
+        let mut rng = Rng::new(78);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(dim, dim, 10);
+        soc.run_matmul(&a, &b, &d, None).unwrap();
+        let mesh_only = crate::mesh::driver::os_matmul_cycles(dim, dim);
+        assert!(
+            soc.cycles > 2 * mesh_only,
+            "soc {} vs mesh {}",
+            soc.cycles,
+            mesh_only
+        );
+    }
+
+    #[test]
+    fn soc_state_dominated_by_uncore_at_small_dim() {
+        let soc = Soc::new(4);
+        let mesh_state = soc.ctrl.mesh.state_elements();
+        assert!(soc.state_elements() > 10 * mesh_state);
+    }
+
+    #[test]
+    fn soc_fault_injection_corrupts_output() {
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut rng = Rng::new(79);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(dim, dim, 10);
+        let golden = Soc::new(dim).run_matmul(&a, &b, &d, None).unwrap();
+        let cyc = (2 * dim - 1) as u64 + 3; // mid-compute
+        let f = Fault::new(0, 0, SignalKind::Acc, 20, cyc);
+        let faulty = Soc::new(dim).run_matmul(&a, &b, &d, Some(f)).unwrap();
+        assert_ne!(golden, faulty);
+    }
+}

@@ -1,0 +1,143 @@
+//! Software-level fault injection (the PVF baseline).
+//!
+//! Flips bits directly in software-visible tensors — layer outputs or
+//! weights — exactly like PyTorchFI-class tools (paper §II): no notion
+//! of how tensors map to hardware, hence no HW masking, hence the
+//! systematically pessimistic PVF of Table VI.
+
+use crate::dnn::layers::{Act, GemmCall, GemmHook};
+use crate::dnn::Model;
+use crate::util::bits::flip_i8;
+use crate::util::Rng;
+
+/// Where the software-level flip lands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwTarget {
+    /// Bit of one element of one layer's int8 output tensor.
+    LayerOutput { layer: usize, elem: usize, bit: u8 },
+    /// Bit of one element of the weight operand of one GEMM site.
+    /// (Transient: applied on one forward pass only.)
+    Weight { layer: usize, ordinal: usize, elem: usize, bit: u8 },
+}
+
+/// A hook that applies one software-level fault during a forward pass.
+pub struct SwInjector {
+    pub target: SwTarget,
+    pub applied: bool,
+}
+
+impl SwInjector {
+    pub fn new(target: SwTarget) -> Self {
+        SwInjector {
+            target,
+            applied: false,
+        }
+    }
+}
+
+impl GemmHook for SwInjector {
+    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+        if let SwTarget::Weight { layer, ordinal, elem, bit } = self.target {
+            if call.site.layer == layer && call.site.ordinal == ordinal && !self.applied {
+                self.applied = true;
+                // corrupt one weight element for this call only
+                let mut b = call.b.to_vec();
+                let e = elem % b.len();
+                b[e] = flip_i8(b[e], bit);
+                let mut c = vec![0i32; call.m * call.n];
+                crate::dnn::gemm::gemm_i8(call.m, call.k, call.n, call.a, &b, call.d, &mut c);
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    fn layer_output(&mut self, layer: usize, out: &mut Act) {
+        if let SwTarget::LayerOutput { layer: tl, elem, bit } = self.target {
+            if layer == tl && !self.applied {
+                self.applied = true;
+                let t = out.tensor_mut();
+                let e = elem % t.data.len();
+                t.data[e] = flip_i8(t.data[e], bit);
+            }
+        }
+    }
+}
+
+/// Sample a uniform software fault target for a model (layer outputs).
+pub fn sample_output_fault(model: &Model, rng: &mut Rng) -> SwTarget {
+    let layer = rng.usize_below(model.layers.len());
+    SwTarget::LayerOutput {
+        layer,
+        // element resolved modulo the actual tensor size at apply time
+        elem: rng.next_u64() as usize,
+        bit: rng.below(8) as u8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::engine::synthetic_input;
+    use crate::dnn::models;
+
+    #[test]
+    fn output_flip_changes_logits_or_not_but_applies() {
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(11);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let mut inj = SwInjector::new(SwTarget::LayerOutput {
+            layer: 5,
+            elem: 0,
+            bit: 6,
+        });
+        let faulty = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied);
+        // flipping bit 6 of logit 0 changes the logits tensor itself
+        assert_ne!(golden, faulty);
+    }
+
+    #[test]
+    fn weight_flip_applies_once() {
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(12);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let mut inj = SwInjector::new(SwTarget::Weight {
+            layer: 0,
+            ordinal: 0,
+            elem: 5,
+            bit: 7,
+        });
+        let _ = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied);
+    }
+
+    #[test]
+    fn high_bit_logit_flip_changes_top1() {
+        // a deterministic critical case: flip the sign bit of the argmax
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(13);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden_logits = model.forward(&x, None);
+        let top = crate::dnn::argmax(&golden_logits.data);
+        let mut inj = SwInjector::new(SwTarget::LayerOutput {
+            layer: 5,
+            elem: top,
+            bit: 7,
+        });
+        let faulty = model.forward(&x, Some(&mut inj));
+        assert_ne!(crate::dnn::argmax(&faulty.data), top);
+    }
+
+    #[test]
+    fn sampler_is_deterministic() {
+        let model = models::quicknet(3);
+        let mut r1 = Rng::new(14);
+        let mut r2 = Rng::new(14);
+        assert_eq!(
+            sample_output_fault(&model, &mut r1),
+            sample_output_fault(&model, &mut r2)
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! Bit-flip helpers for transient (SEU) fault models.
+//!
+//! All fault injectors in the crate — mesh, SoC, HDFIT variant and the
+//! software-level injector — share these primitives so a "bit b of signal s"
+//! means exactly the same thing everywhere.
+
+/// Flip bit `bit` of an i8 register value.
+#[inline]
+pub fn flip_i8(v: i8, bit: u8) -> i8 {
+    debug_assert!(bit < 8);
+    (v as u8 ^ (1u8 << bit)) as i8
+}
+
+/// Flip bit `bit` of an i32 register value.
+#[inline]
+pub fn flip_i32(v: i32, bit: u8) -> i32 {
+    debug_assert!(bit < 32);
+    (v as u32 ^ (1u32 << bit)) as i32
+}
+
+/// Flip a single-bit control signal (bit index ignored by construction).
+#[inline]
+pub fn flip_bool(v: bool) -> bool {
+    !v
+}
+
+/// Force bit `bit` of an i8 to `val` (stuck-at fault model).
+#[inline]
+pub fn set_bit_i8(v: i8, bit: u8, val: bool) -> i8 {
+    debug_assert!(bit < 8);
+    let mask = 1u8 << bit;
+    let u = v as u8;
+    (if val { u | mask } else { u & !mask }) as i8
+}
+
+/// Force bit `bit` of an i32 to `val` (stuck-at fault model).
+#[inline]
+pub fn set_bit_i32(v: i32, bit: u8, val: bool) -> i32 {
+    debug_assert!(bit < 32);
+    let mask = 1u32 << bit;
+    let u = v as u32;
+    (if val { u | mask } else { u & !mask }) as i32
+}
+
+/// Count differing bits between two i32 words (multi-bit-error analysis).
+#[inline]
+pub fn hamming_i32(a: i32, b: i32) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Count differing bits between two i8 bytes.
+#[inline]
+pub fn hamming_i8(a: i8, b: i8) -> u32 {
+    ((a ^ b) as u8).count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flip_i8_is_involution() {
+        for v in [-128i8, -1, 0, 1, 127] {
+            for bit in 0..8 {
+                assert_eq!(flip_i8(flip_i8(v, bit), bit), v);
+                assert_ne!(flip_i8(v, bit), v);
+            }
+        }
+    }
+
+    #[test]
+    fn flip_i8_sign_bit() {
+        assert_eq!(flip_i8(0, 7), -128);
+        assert_eq!(flip_i8(-1, 7), 127);
+    }
+
+    #[test]
+    fn flip_i32_is_involution() {
+        for v in [i32::MIN, -1, 0, 1, i32::MAX] {
+            for bit in [0u8, 1, 15, 30, 31] {
+                assert_eq!(flip_i32(flip_i32(v, bit), bit), v);
+                assert_ne!(flip_i32(v, bit), v);
+            }
+        }
+    }
+
+    #[test]
+    fn set_bit_forces_value() {
+        assert_eq!(set_bit_i8(0, 3, true), 8);
+        assert_eq!(set_bit_i8(8, 3, true), 8);
+        assert_eq!(set_bit_i8(-1, 3, false), -9);
+        assert_eq!(set_bit_i32(0, 31, true), i32::MIN);
+        assert_eq!(set_bit_i32(-1, 31, false), i32::MAX);
+    }
+
+    #[test]
+    fn hamming_counts() {
+        assert_eq!(hamming_i32(0, 0), 0);
+        assert_eq!(hamming_i32(0, -1), 32);
+        assert_eq!(hamming_i8(0, -1), 8);
+        assert_eq!(hamming_i8(0b0101, 0b0110), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, bit manipulation, quant arithmetic
+//! and the statistical machinery for fault-sampling campaigns.
+
+pub mod bits;
+pub mod json;
+pub mod quant;
+pub mod rng;
+pub mod stats;
+
+pub use quant::requant;
+pub use rng::Rng;

@@ -1,0 +1,85 @@
+//! Quantization arithmetic — the Rust half of the numeric contract defined
+//! in `python/compile/kernels/ref.py`.
+//!
+//! `requant` must be BIT-EXACT with `requant_ref` / the Pallas
+//! `requant_int32` kernel: one f32 multiply, one f32 add of 0.5, one floor,
+//! clamp to `[-128, 127]`. All three implementations perform the identical
+//! IEEE-754 f32 operation sequence, so results agree exactly across the
+//! PJRT artifacts, the native engine and the mesh-backed path.
+
+/// Requantize an int32 accumulator to int8: `clamp(floor(c*m + 0.5))`.
+#[inline]
+pub fn requant(c: i32, m: f32) -> i8 {
+    let q = (c as f32 * m + 0.5).floor();
+    q.clamp(-128.0, 127.0) as i8
+}
+
+/// Requantize with fused ReLU.
+#[inline]
+pub fn requant_relu(c: i32, m: f32) -> i8 {
+    requant(c, m).max(0)
+}
+
+/// Requantize a whole accumulator slice into an int8 buffer.
+pub fn requant_slice(acc: &[i32], m: f32, relu: bool, out: &mut [i8]) {
+    debug_assert_eq!(acc.len(), out.len());
+    if relu {
+        for (o, &c) in out.iter_mut().zip(acc) {
+            *o = requant_relu(c, m);
+        }
+    } else {
+        for (o, &c) in out.iter_mut().zip(acc) {
+            *o = requant(c, m);
+        }
+    }
+}
+
+/// Quantize an f32 to int8 with the same round-half-up convention
+/// (used for attention probabilities: scale 127).
+#[inline]
+pub fn quant_f32(v: f32, scale: f32) -> i8 {
+    (v * scale + 0.5).floor().clamp(-128.0, 127.0) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_up_matches_python_convention() {
+        // m = 0.5 exactly representable: 0.5 -> 1, -0.5 -> 0, 1.5 -> 2.
+        assert_eq!(requant(1, 0.5), 1);
+        assert_eq!(requant(-1, 0.5), 0);
+        assert_eq!(requant(3, 0.5), 2);
+        assert_eq!(requant(-3, 0.5), -1);
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(requant(1 << 30, 1.0), 127);
+        assert_eq!(requant(-(1 << 30), 1.0), -128);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        assert_eq!(requant_relu(-1000, 1.0), 0);
+        assert_eq!(requant_relu(50, 1.0), 50);
+    }
+
+    #[test]
+    fn identity_scale_passthrough() {
+        for v in -128..=127 {
+            assert_eq!(requant(v, 1.0), v as i8);
+        }
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let acc: Vec<i32> = (-50..50).map(|x| x * 100).collect();
+        let mut out = vec![0i8; acc.len()];
+        requant_slice(&acc, 0.013, false, &mut out);
+        for (i, &c) in acc.iter().enumerate() {
+            assert_eq!(out[i], requant(c, 0.013));
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Statistical machinery for fault-injection campaigns.
+//!
+//! The paper sizes its campaigns "ensuring statistical significance
+//! according to [Ruospo et al., DATE'23]", i.e. the classic
+//! Leveugle/Ruospo statistical fault injection formula; we implement it
+//! plus Wilson score intervals for reporting AVF/PVF confidence.
+
+/// Number of fault-injection trials required to estimate a proportion over
+/// a fault space of size `population` with margin `e` and confidence given
+/// by the normal quantile `t` (1.96 ⇒ 95%, 2.58 ⇒ 99%), assuming worst-case
+/// p = 0.5.
+///
+/// n = N / (1 + e^2 * (N - 1) / (t^2 * p * (1 - p)))
+pub fn required_samples(population: u64, e: f64, t: f64) -> u64 {
+    required_samples_p(population, e, t, 0.5)
+}
+
+/// Same with an explicit prior estimate `p` of the proportion.
+pub fn required_samples_p(population: u64, e: f64, t: f64, p: f64) -> u64 {
+    assert!(population > 0 && e > 0.0 && t > 0.0 && (0.0..=1.0).contains(&p));
+    let n = population as f64;
+    let pq = (p * (1.0 - p)).max(1e-12);
+    let denom = 1.0 + e * e * (n - 1.0) / (t * t * pq);
+    (n / denom).ceil() as u64
+}
+
+/// Wilson score interval for a binomial proportion (`crit` criticals out of
+/// `trials`), at normal quantile `z`. Returns (low, high).
+pub fn wilson_interval(crit: u64, trials: u64, z: f64) -> (f64, f64) {
+    if trials == 0 {
+        return (0.0, 1.0);
+    }
+    let n = trials as f64;
+    let p = crit as f64 / n;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let centre = p + z2 / (2.0 * n);
+    let half = z * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt();
+    (
+        ((centre - half) / denom).max(0.0),
+        ((centre + half) / denom).min(1.0),
+    )
+}
+
+/// Streaming mean/variance accumulator (Welford) for timing measurements.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for fewer than 2 samples.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// A binomial vulnerability estimate (AVF or PVF).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VulnEstimate {
+    pub trials: u64,
+    pub critical: u64,
+}
+
+impl VulnEstimate {
+    pub fn record(&mut self, critical: bool) {
+        self.trials += 1;
+        if critical {
+            self.critical += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &VulnEstimate) {
+        self.trials += other.trials;
+        self.critical += other.critical;
+    }
+
+    /// Point estimate of the vulnerability factor.
+    pub fn vf(&self) -> f64 {
+        if self.trials == 0 {
+            0.0
+        } else {
+            self.critical as f64 / self.trials as f64
+        }
+    }
+
+    /// 95% Wilson interval.
+    pub fn ci95(&self) -> (f64, f64) {
+        wilson_interval(self.critical, self.trials, 1.96)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ruospo_sample_size_matches_reference_values() {
+        // Known anchor: N -> inf, e = 0.01, t = 1.96, p = 0.5 => ~9604.
+        let n = required_samples(u64::MAX / 2, 0.01, 1.96);
+        assert!((9600..9610).contains(&n), "n = {n}");
+        // e = 0.05 => ~384.
+        let n = required_samples(1_000_000_000, 0.05, 1.96);
+        assert!((380..390).contains(&n), "n = {n}");
+    }
+
+    #[test]
+    fn sample_size_small_population_caps_at_population() {
+        let n = required_samples(100, 0.01, 1.96);
+        assert!(n <= 100);
+        assert!(n >= 99); // tiny population: essentially exhaustive
+    }
+
+    #[test]
+    fn wilson_basic_properties() {
+        let (lo, hi) = wilson_interval(50, 100, 1.96);
+        assert!(lo < 0.5 && hi > 0.5);
+        assert!(lo > 0.39 && hi < 0.61);
+        let (lo0, hi0) = wilson_interval(0, 100, 1.96);
+        assert_eq!(lo0, 0.0);
+        assert!(hi0 < 0.05);
+    }
+
+    #[test]
+    fn welford_mean_var() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vuln_estimate_merge() {
+        let mut a = VulnEstimate::default();
+        a.record(true);
+        a.record(false);
+        let mut b = VulnEstimate::default();
+        b.record(true);
+        a.merge(&b);
+        assert_eq!(a.trials, 3);
+        assert_eq!(a.critical, 2);
+        assert!((a.vf() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration tests over the DNN substrate and software fault injector.
+
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::{argmax, models};
+use enfor_sa::swfi::{sample_output_fault, SwInjector, SwTarget};
+use enfor_sa::util::Rng;
+
+#[test]
+fn all_zoo_models_forward_all_shapes() {
+    let mut rng = Rng::new(0xD0D0);
+    for model in models::zoo(123) {
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let logits = model.forward(&x, None);
+        assert_eq!(logits.shape, vec![1, 10], "{}", model.name);
+        // logits must carry signal (not all equal)
+        let first = logits.data[0];
+        assert!(
+            logits.data.iter().any(|&v| v != first),
+            "{}: flat logits",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn zoo_models_have_multiple_gemm_sites() {
+    let mut rng = Rng::new(0xD0D1);
+    for model in models::zoo(123) {
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let sites = model.gemm_sites(&x);
+        assert!(
+            sites.len() >= 3,
+            "{} exposes only {} GEMM sites",
+            model.name,
+            sites.len()
+        );
+        // shapes must be well-formed
+        for s in &sites {
+            assert!(s.m > 0 && s.k > 0 && s.n > 0);
+        }
+    }
+}
+
+#[test]
+fn vit_models_contain_attention_gemms() {
+    let mut rng = Rng::new(0xD0D2);
+    for name in ["DeiT-T", "DeiT-S"] {
+        let model = models::by_name(name, 5).unwrap();
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let sites = model.gemm_sites(&x);
+        // attention blocks emit 6 GEMMs at the same layer index
+        let max_ordinal = sites.iter().map(|s| s.site.ordinal).max().unwrap();
+        assert!(max_ordinal >= 5, "{name}: no attention multi-GEMM layer");
+    }
+}
+
+#[test]
+fn golden_runs_are_stable_across_calls() {
+    let mut rng = Rng::new(0xD0D3);
+    let model = models::resnet50(9);
+    let x = synthetic_input(&model.input_shape, &mut rng);
+    let a = model.forward(&x, None);
+    for _ in 0..3 {
+        assert_eq!(model.forward(&x, None), a);
+    }
+}
+
+#[test]
+fn sw_injection_fuzz_never_panics_and_classifies() {
+    let model = models::quicknet(11);
+    let mut rng = Rng::new(0xD0D4);
+    let x = synthetic_input(&model.input_shape, &mut rng);
+    let golden = model.top1(&x, None);
+    let mut criticals = 0;
+    for _ in 0..300 {
+        let target = sample_output_fault(&model, &mut rng);
+        let mut inj = SwInjector::new(target);
+        let logits = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied, "{target:?} did not apply");
+        if argmax(&logits.data) != golden {
+            criticals += 1;
+        }
+    }
+    // SW-level injection is pessimistic: flipping visible outputs must
+    // produce a clearly nonzero critical rate
+    assert!(criticals > 0, "no critical SW faults in 300 trials");
+}
+
+#[test]
+fn weight_faults_affect_only_that_forward_pass() {
+    let model = models::quicknet(11);
+    let mut rng = Rng::new(0xD0D5);
+    let x = synthetic_input(&model.input_shape, &mut rng);
+    let golden = model.forward(&x, None);
+    let mut inj = SwInjector::new(SwTarget::Weight {
+        layer: 1,
+        ordinal: 0,
+        elem: 17,
+        bit: 6,
+    });
+    let _faulty = model.forward(&x, Some(&mut inj));
+    assert!(inj.applied);
+    // the model itself is unchanged (transient, not permanent)
+    assert_eq!(model.forward(&x, None), golden);
+}
+
+#[test]
+fn param_counts_are_stable() {
+    // regression pin on zoo sizes (Table II ordering is tested in-unit;
+    // here we pin rough magnitudes so refactors don't silently shrink
+    // the models)
+    let m = models::quicknet(1);
+    let p = m.param_count();
+    assert!(p > 30_000 && p < 80_000, "quicknet params {p}");
+    let rn50 = models::resnet50(1).param_count();
+    let rx32 = models::resnext32(1).param_count();
+    assert!(rn50 > 50_000, "resnet50 params {rn50}");
+    assert!(rx32 > 200_000, "resnext32 params {rx32}");
+}

@@ -1,0 +1,303 @@
+//! Integration tests over the mesh substrate: both dataflows, tiling,
+//! masking properties, and the fault model's structural behaviours.
+
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, tiled_matmul_os, MatmulDriver};
+use enfor_sa::mesh::{Fault, Mesh, MeshSim, SignalKind};
+use enfor_sa::util::Rng;
+
+#[test]
+fn os_matmul_fuzz_many_shapes() {
+    let mut rng = Rng::new(0x0501);
+    for trial in 0..60 {
+        let dim = [2, 3, 4, 8][trial % 4];
+        let k = 1 + rng.usize_below(40);
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 1 << 14);
+        assert_eq!(
+            MatmulDriver::new(&mut mesh).matmul(&a, &b, &d),
+            gold_matmul(&a, &b, &d),
+            "dim={dim} k={k}"
+        );
+    }
+}
+
+#[test]
+fn ws_matmul_fuzz_many_shapes() {
+    let mut rng = Rng::new(0x0502);
+    for trial in 0..40 {
+        let dim = [2, 4, 8][trial % 3];
+        let m = 1 + rng.usize_below(30);
+        let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+        let a = rng.mat_i8(m, dim);
+        let w = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(m, dim, 1 << 14);
+        assert_eq!(
+            MatmulDriver::new(&mut mesh).matmul(&a, &w, &d),
+            gold_matmul(&a, &w, &d),
+            "dim={dim} m={m}"
+        );
+    }
+}
+
+#[test]
+fn os_and_ws_agree_on_square_problems() {
+    let mut rng = Rng::new(0x0503);
+    for _ in 0..10 {
+        let dim = 4;
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(dim, dim, 100);
+        let mut os = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut ws = Mesh::new(dim, Dataflow::WeightStationary);
+        let c_os = MatmulDriver::new(&mut os).matmul(&a, &b, &d);
+        let c_ws = MatmulDriver::new(&mut ws).matmul(&a, &b, &d);
+        assert_eq!(c_os, c_ws);
+    }
+}
+
+#[test]
+fn tiled_matmul_fuzz() {
+    let mut rng = Rng::new(0x0504);
+    let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+    for _ in 0..12 {
+        let m = 1 + rng.usize_below(40);
+        let k = 1 + rng.usize_below(40);
+        let n = 1 + rng.usize_below(40);
+        let a = rng.mat_i8(m, k);
+        let b = rng.mat_i8(k, n);
+        let d = rng.mat_i32(m, n, 1000);
+        assert_eq!(
+            tiled_matmul_os(&mut mesh, &a, &b, &d),
+            gold_matmul(&a, &b, &d),
+            "m={m} k={k} n={n}"
+        );
+    }
+}
+
+#[test]
+fn every_signal_kind_can_corrupt_an_output() {
+    // For each signal kind there must exist a (cycle, bit) that visibly
+    // corrupts some matmul — no signal class is dead in the fault model.
+    let dim = 4;
+    let mut rng = Rng::new(0x0505);
+    let a = rng.mat_i8(dim, dim);
+    let b: Vec<Vec<i8>> = (0..dim)
+        .map(|_| (0..dim).map(|_| rng.i8().max(1)).collect())
+        .collect();
+    let d = rng.mat_i32(dim, dim, 50);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    for kind in SignalKind::ALL {
+        let mut hit = false;
+        'outer: for cycle in 0..os_matmul_cycles(dim, dim) {
+            for bit in 0..kind.width().min(8) {
+                let f = Fault::new(1, 1, kind, bit, cycle);
+                let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+                if faulty != golden {
+                    hit = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(hit, "signal kind {kind} never corrupted any output");
+    }
+}
+
+#[test]
+fn fault_free_rerun_after_fault_is_clean() {
+    // no state leaks across driver invocations
+    let dim = 8;
+    let mut rng = Rng::new(0x0506);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let a = rng.mat_i8(dim, dim);
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    for kind in SignalKind::ALL {
+        let f = Fault::new(2, 3, kind, 0, 10);
+        let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        assert_eq!(
+            MatmulDriver::new(&mut mesh).matmul(&a, &b, &d),
+            golden,
+            "state leaked after {kind} fault"
+        );
+    }
+}
+
+#[test]
+fn weight_fault_row_locality() {
+    // A weight-path fault in row r must corrupt only output row r (the
+    // corrupted operand travels east within its row in OS dataflow).
+    let dim = 4;
+    let mut rng = Rng::new(0x0507);
+    let a = rng.mat_i8(dim, dim);
+    let b: Vec<Vec<i8>> = (0..dim)
+        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
+        .collect();
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let mut corrupted_rows = std::collections::BTreeSet::new();
+    for cycle in 0..os_matmul_cycles(dim, dim) {
+        let f = Fault::new(2, 1, SignalKind::Weight, 5, cycle);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        for (r, (fr, gr)) in faulty.iter().zip(&golden).enumerate() {
+            if fr != gr {
+                corrupted_rows.insert(r);
+            }
+        }
+    }
+    assert!(!corrupted_rows.is_empty());
+    assert_eq!(
+        corrupted_rows.into_iter().collect::<Vec<_>>(),
+        vec![2],
+        "weight fault must stay in its mesh row"
+    );
+}
+
+#[test]
+fn act_fault_column_locality() {
+    // Symmetric: an activation-path fault in column c corrupts only
+    // output column c.
+    let dim = 4;
+    let mut rng = Rng::new(0x0508);
+    let a: Vec<Vec<i8>> = (0..dim)
+        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
+        .collect();
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let mut corrupted_cols = std::collections::BTreeSet::new();
+    for cycle in 0..os_matmul_cycles(dim, dim) {
+        let f = Fault::new(1, 2, SignalKind::Act, 5, cycle);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        for r in 0..dim {
+            for c in 0..dim {
+                if faulty[r][c] != golden[r][c] {
+                    corrupted_cols.insert(c);
+                }
+            }
+        }
+    }
+    assert!(!corrupted_cols.is_empty());
+    assert_eq!(
+        corrupted_cols.into_iter().collect::<Vec<_>>(),
+        vec![2],
+        "act fault must stay in its mesh column"
+    );
+}
+
+#[test]
+fn single_bit_hw_fault_can_produce_multibit_sw_error() {
+    // The paper's core motivation for HW-aware injection: one flipped
+    // register bit can corrupt MANY output values/bits.
+    let dim = 4;
+    let mut rng = Rng::new(0x0509);
+    let a = rng.mat_i8(dim, dim);
+    let b: Vec<Vec<i8>> = (0..dim)
+        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
+        .collect();
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    // a propag fault mid-compute hijacks the whole column below
+    let f = Fault::new(0, 1, SignalKind::Propag, 0, (2 * dim) as u64 + 2);
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+    let diffs: usize = faulty
+        .iter()
+        .zip(&golden)
+        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
+        .sum();
+    assert!(
+        diffs > 1,
+        "a single control-bit flip must corrupt multiple outputs, got {diffs}"
+    );
+}
+
+#[test]
+fn cycle_accounting_matches_formula_across_dims() {
+    let mut rng = Rng::new(0x050A);
+    for &(dim, k) in &[(2usize, 5usize), (4, 4), (8, 16), (16, 8)] {
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 10);
+        MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        assert_eq!(mesh.cycle(), os_matmul_cycles(dim, k));
+    }
+}
+
+#[test]
+fn stuck_at_fault_corrupts_persistently() {
+    // Extension: a stuck-at-1 weight-path bit corrupts MANY stream
+    // elements (vs a transient's single element), and a stuck-at fault
+    // re-applied every cycle is strictly at least as damaging.
+    use enfor_sa::mesh::inject::Persistence;
+    let dim = 4;
+    let mut rng = Rng::new(0x57AC);
+    let a = rng.mat_i8(dim, 12);
+    let b: Vec<Vec<i8>> = (0..12)
+        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
+        .collect();
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+
+    let sa = Fault::stuck_at(1, 1, SignalKind::Weight, 6, true, 0);
+    assert_eq!(sa.persistence, Persistence::StuckAt(true));
+    assert!(sa.fires_at(0) && sa.fires_at(100));
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
+    // row 1 outputs east of column 0 must be corrupted
+    let row_diffs = faulty[1]
+        .iter()
+        .zip(&golden[1])
+        .filter(|(x, y)| x != y)
+        .count();
+    assert!(row_diffs >= 2, "stuck-at weight bit corrupted {row_diffs} outputs");
+    // transient at one cycle corrupts no more than the stuck-at does
+    let tr = Fault::new(1, 1, SignalKind::Weight, 6, (2 * dim) as u64 + 2);
+    let faulty_tr = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &tr);
+    let tr_diffs: usize = faulty_tr
+        .iter()
+        .zip(&golden)
+        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
+        .sum();
+    let sa_diffs: usize = faulty
+        .iter()
+        .zip(&golden)
+        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
+        .sum();
+    assert!(sa_diffs >= tr_diffs);
+}
+
+#[test]
+fn stuck_at_zero_on_zero_bit_is_masked() {
+    // forcing a bit to the value it already has must be invisible
+    let dim = 4;
+    let a = vec![vec![0i8; dim]; dim];
+    let b = vec![vec![0i8; dim]; dim];
+    let d = vec![vec![0i32; dim]; dim];
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let sa = Fault::stuck_at(2, 2, SignalKind::Acc, 5, false, 0);
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
+    assert_eq!(golden, faulty);
+}
+
+#[test]
+fn stuck_at_no_state_leak_after_disarm() {
+    let dim = 4;
+    let mut rng = Rng::new(0x57AD);
+    let a = rng.mat_i8(dim, dim);
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let sa = Fault::stuck_at(0, 0, SignalKind::Acc, 30, true, 0);
+    let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
+    assert_eq!(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d), golden);
+}

@@ -1,0 +1,192 @@
+//! PJRT runtime integration: the AOT artifacts (L1 Pallas kernels inside
+//! L2 JAX graphs, lowered to HLO text) must load, compile and agree
+//! bit-exactly with the native Rust engine — the contract that makes the
+//! cross-layer splice valid.
+//!
+//! These tests require `artifacts/` (run `make artifacts`); they are
+//! skipped gracefully if it is absent so `cargo test` works in a fresh
+//! checkout.
+
+use enfor_sa::campaign::TrialFault;
+use enfor_sa::config::Dataflow;
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::gemm::gemm_i8_alloc;
+use enfor_sa::dnn::GemmSiteId;
+use enfor_sa::mesh::{Fault, Mesh, SignalKind};
+use enfor_sa::runtime::quicknet::QuicknetPjrt;
+use enfor_sa::runtime::PjrtRuntime;
+use enfor_sa::util::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::load("artifacts").expect("loading artifacts"))
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "quicknet_conv1",
+        "quicknet_conv2",
+        "quicknet_conv3",
+        "quicknet_conv4",
+        "quicknet_fc",
+        "gemm_8x8x8",
+        "gemm_64x64x64",
+        "attention_64",
+    ] {
+        assert!(
+            rt.manifest.artifacts.contains_key(name),
+            "missing artifact {name}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_gemm_matches_native_gemm() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(0x9A);
+    for &n in &[8usize, 16, 64] {
+        let mut a = vec![0i8; n * n];
+        let mut b = vec![0i8; n * n];
+        rng.fill_i8(&mut a);
+        rng.fill_i8(&mut b);
+        let d: Vec<i32> = (0..n * n).map(|i| i as i32 - 100).collect();
+        let got = rt.gemm(n, n, n, &a, &b, &d).expect("pjrt gemm");
+        let want = gemm_i8_alloc(n, n, n, &a, &b, &d);
+        assert_eq!(got, want, "gemm {n}x{n}x{n} diverged");
+    }
+}
+
+#[test]
+fn pjrt_gemm_matches_mesh_rtl() {
+    // the three-layer agreement: XLA artifact == native SW == RTL mesh
+    let Some(mut rt) = runtime() else { return };
+    use enfor_sa::mesh::driver::MatmulDriver;
+    let mut rng = Rng::new(0x3141);
+    let n = 8;
+    let a2 = rng.mat_i8(n, n);
+    let b2 = rng.mat_i8(n, n);
+    let d2 = rng.mat_i32(n, n, 100);
+    let a: Vec<i8> = a2.iter().flatten().copied().collect();
+    let b: Vec<i8> = b2.iter().flatten().copied().collect();
+    let d: Vec<i32> = d2.iter().flatten().copied().collect();
+    let pjrt = rt.gemm(n, n, n, &a, &b, &d).unwrap();
+    let mut mesh = Mesh::new(n, Dataflow::OutputStationary);
+    let rtl = MatmulDriver::new(&mut mesh).matmul(&a2, &b2, &d2);
+    let rtl_flat: Vec<i32> = rtl.into_iter().flatten().collect();
+    assert_eq!(pjrt, rtl_flat);
+}
+
+#[test]
+fn quicknet_pjrt_matches_native_forward() {
+    let Some(mut rt) = runtime() else { return };
+    let qn = QuicknetPjrt::new(0xDEAD);
+    let mut rng = Rng::new(0x51);
+    for _ in 0..3 {
+        let x = synthetic_input(&[3, 32, 32], &mut rng);
+        let pjrt_logits = qn.forward(&mut rt, &x, None).expect("pjrt forward");
+        let native_logits = qn.model.forward(&x, None);
+        assert_eq!(
+            pjrt_logits.data, native_logits.data,
+            "PJRT and native QuickNet diverged"
+        );
+    }
+}
+
+#[test]
+fn quicknet_cross_layer_trial_through_pjrt() {
+    // end-to-end: PJRT software path + RTL mesh tile with a hard fault
+    let Some(mut rt) = runtime() else { return };
+    let qn = QuicknetPjrt::new(0xDEAD);
+    let mut rng = Rng::new(0x52);
+    let x = synthetic_input(&[3, 32, 32], &mut rng);
+    let golden = qn.forward(&mut rt, &x, None).unwrap();
+
+    let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+    let trial = TrialFault {
+        site: GemmSiteId { layer: 1, ordinal: 0 },
+        tile_i: 0,
+        tile_j: 0,
+        fault: Fault::new(0, 0, SignalKind::Acc, 30, 20),
+    };
+    let faulty = qn.forward(&mut rt, &x, Some((trial, &mut mesh))).unwrap();
+    assert_ne!(golden.data, faulty.data, "acc bit-30 fault must be visible");
+
+    // masked fault: identical output
+    let trial2 = TrialFault {
+        site: GemmSiteId { layer: 1, ordinal: 0 },
+        tile_i: 0,
+        tile_j: 0,
+        fault: Fault::new(7, 7, SignalKind::Valid, 0, 1),
+    };
+    let masked = qn.forward(&mut rt, &x, Some((trial2, &mut mesh))).unwrap();
+    assert_eq!(golden.data, masked.data, "idle-cycle fault must be masked");
+}
+
+#[test]
+fn attention_artifact_matches_native_attention() {
+    let Some(mut rt) = runtime() else { return };
+    use enfor_sa::dnn::layers::{ForwardCtx, QAttention};
+    use enfor_sa::dnn::TensorI8;
+    use enfor_sa::runtime::ArgValue;
+    let mut rng = Rng::new(0x53);
+    let l = 64;
+    let dm = 64;
+    // scales must match python/compile/model.py ATTENTION_CFG
+    let attn = QAttention {
+        d_model: dm,
+        wq: TensorI8::random(&[dm * dm], &mut rng).data,
+        wk: TensorI8::random(&[dm * dm], &mut rng).data,
+        wv: TensorI8::random(&[dm * dm], &mut rng).data,
+        wo: TensorI8::random(&[dm * dm], &mut rng).data,
+        mq: 0.01,
+        mk: 0.01,
+        mv: 0.01,
+        ms: 0.05,
+        mo: 0.05,
+        mw: 0.02,
+    };
+    let x = TensorI8::random(&[l, dm], &mut rng);
+    let native = attn.forward(&x, &mut ForwardCtx::plain());
+    let pjrt = rt
+        .exec_i8(
+            "attention_64",
+            &[
+                ArgValue::I8(&x.data, vec![l, dm]),
+                ArgValue::I8(&attn.wq, vec![dm, dm]),
+                ArgValue::I8(&attn.wk, vec![dm, dm]),
+                ArgValue::I8(&attn.wv, vec![dm, dm]),
+                ArgValue::I8(&attn.wo, vec![dm, dm]),
+            ],
+        )
+        .expect("attention artifact");
+    // integer path is exact; the f32 softmax may differ by 1 ulp between
+    // XLA-CPU and Rust libm, which can move a probability by 1 LSB.
+    let mismatches = pjrt
+        .iter()
+        .zip(&native.data)
+        .filter(|(a, b)| a != b)
+        .count();
+    let tol = l * dm / 100; // <1% of elements may differ by quantization LSB
+    assert!(
+        mismatches <= tol,
+        "attention mismatch on {mismatches}/{} elements",
+        l * dm
+    );
+    for (a, b) in pjrt.iter().zip(&native.data) {
+        assert!((*a as i16 - *b as i16).abs() <= 1, "difference beyond 1 LSB");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    use enfor_sa::runtime::ArgValue;
+    let a = vec![0i8; 8];
+    let err = rt.exec_i32("gemm_8x8x8", &[ArgValue::I8(&a, vec![2, 4])]);
+    assert!(err.is_err(), "arity/shape validation must fire");
+}

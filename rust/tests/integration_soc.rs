@@ -1,0 +1,111 @@
+//! Full-SoC integration: functional equivalence with the mesh-only
+//! wrapper (including under faults — the controller reproduces the
+//! MatmulDriver schedule exactly) and the cost structure behind Table V.
+
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use enfor_sa::mesh::{Fault, Mesh, MeshSim, SignalKind};
+use enfor_sa::soc::Soc;
+use enfor_sa::util::Rng;
+
+#[test]
+fn soc_matmul_fuzz_matches_gold() {
+    let mut rng = Rng::new(0x50C1);
+    for rep in 0..8 {
+        let dim = [2usize, 4][rep % 2];
+        let k = 1 + rng.usize_below(12);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 500);
+        let mut soc = Soc::new(dim);
+        let c = soc.run_matmul(&a, &b, &d, None).unwrap();
+        assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+    }
+}
+
+#[test]
+fn soc_and_mesh_agree_on_identical_faults() {
+    // The key cross-backend contract: a fault at mesh-relative cycle t
+    // produces the same faulty C whether the mesh is driven by the
+    // isolated wrapper or by the full SoC's execute FSM.
+    let mut rng = Rng::new(0x50C2);
+    let dim = 4;
+    let k = 6;
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+    for kind in SignalKind::ALL {
+        for cycle in [1u64, 9, 15, os_matmul_cycles(dim, k) - 2] {
+            let fault = Fault::new(1, 2, kind, 0, cycle);
+            let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+            let c_mesh = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+            let mut soc = Soc::new(dim);
+            let c_soc = soc.run_matmul(&a, &b, &d, Some(fault)).unwrap();
+            assert_eq!(c_mesh, c_soc, "{fault} diverged between backends");
+        }
+    }
+}
+
+#[test]
+fn soc_reuse_across_matmuls_is_clean() {
+    let mut rng = Rng::new(0x50C3);
+    let dim = 4;
+    let mut soc = Soc::new(dim);
+    let a = rng.mat_i8(dim, dim);
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+    let c1 = soc.run_matmul(&a, &b, &d, None).unwrap();
+    // a faulty run in between must not poison later runs
+    let f = Fault::new(0, 0, SignalKind::Acc, 25, 10);
+    let _ = soc.run_matmul(&a, &b, &d, Some(f)).unwrap();
+    let c2 = soc.run_matmul(&a, &b, &d, None).unwrap();
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn soc_cycles_scale_beyond_mesh_cycles() {
+    let dim = 4;
+    let k = 8;
+    let mut rng = Rng::new(0x50C4);
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut soc = Soc::new(dim);
+    soc.run_matmul(&a, &b, &d, None).unwrap();
+    let mesh_cycles = os_matmul_cycles(dim, k);
+    assert!(
+        soc.cycles > 2 * mesh_cycles,
+        "SoC used {} cycles vs mesh-only {}",
+        soc.cycles,
+        mesh_cycles
+    );
+    // DMA actually moved both operand matrices
+    assert_eq!(soc.dma.rows_moved as usize, 2 * k);
+}
+
+#[test]
+fn state_ratio_shrinks_with_dim() {
+    // Table V's trend: mesh state grows quadratically, the uncore is
+    // fixed, so the SoC/mesh ratio must fall monotonically with DIM.
+    let mut prev = f64::INFINITY;
+    for dim in [4usize, 8, 16, 32, 64] {
+        let soc = Soc::new(dim);
+        let mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let ratio = soc.state_elements() as f64 / mesh.state_elements() as f64;
+        assert!(ratio < prev, "ratio not decreasing at DIM{dim}");
+        assert!(ratio > 1.0);
+        prev = ratio;
+    }
+}
+
+#[test]
+fn icache_warms_up() {
+    let dim = 2;
+    let mut rng = Rng::new(0x50C5);
+    let a = rng.mat_i8(dim, dim);
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 10);
+    let mut soc = Soc::new(dim);
+    soc.run_matmul(&a, &b, &d, None).unwrap();
+    assert!(soc.icache.hits > soc.icache.misses, "icache must mostly hit");
+}

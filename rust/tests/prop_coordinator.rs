@@ -1,0 +1,134 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state management). The offline environment has no proptest crate, so
+//! properties are checked over seeded random configuration sweeps with
+//! the crate's own deterministic RNG — each case reports its seed on
+//! failure for direct reproduction.
+
+use enfor_sa::campaign::campaign::run_input;
+use enfor_sa::campaign::{run_campaign, sample_trial};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::models;
+use enfor_sa::dnn::GemmSiteId;
+use enfor_sa::util::Rng;
+
+fn random_cfg(rng: &mut Rng) -> CampaignConfig {
+    CampaignConfig {
+        seed: rng.next_u64(),
+        faults_per_layer: 1 + rng.below(4),
+        inputs: 1 + rng.below(3),
+        backend: Backend::EnforSa,
+        offload_scope: if rng.chance(0.5) {
+            OffloadScope::SingleTile
+        } else {
+            OffloadScope::Layer
+        },
+        signals: vec![],
+        workers: 1 + rng.usize_below(4),
+    }
+}
+
+/// Property: campaign outcomes are a pure function of (model, seed,
+/// shape parameters) — never of worker count.
+#[test]
+fn prop_worker_count_never_changes_results() {
+    let model = models::quicknet(3);
+    let mesh = MeshConfig::default();
+    let mut meta_rng = Rng::new(0x9001);
+    for case in 0..6 {
+        let mut cfg = random_cfg(&mut meta_rng);
+        cfg.workers = 1;
+        let base = run_parallel(&model, &mesh, &cfg, None).unwrap();
+        for workers in [2usize, 3] {
+            cfg.workers = workers;
+            let got = run_parallel(&model, &mesh, &cfg, None).unwrap();
+            assert_eq!(
+                (base.vuln.trials, base.vuln.critical, base.exposed_trials),
+                (got.vuln.trials, got.vuln.critical, got.exposed_trials),
+                "case {case}: seed {} diverged at workers={workers}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Property: per-input work units partition the campaign exactly: the
+/// merge of all run_input results equals the parallel run.
+#[test]
+fn prop_input_partition_is_exact() {
+    let model = models::quicknet(3);
+    let mesh = MeshConfig::default();
+    let mut meta_rng = Rng::new(0x9A57);
+    for _ in 0..4 {
+        let mut cfg = random_cfg(&mut meta_rng);
+        cfg.workers = 1;
+        let whole = run_parallel(&model, &mesh, &cfg, None).unwrap();
+        let mut manual_trials = 0;
+        let mut manual_crit = 0;
+        for i in 0..cfg.inputs {
+            let part = run_input(&model, &mesh, &cfg, i).unwrap();
+            manual_trials += part.vuln.trials;
+            manual_crit += part.vuln.critical;
+        }
+        assert_eq!(whole.vuln.trials, manual_trials);
+        assert_eq!(whole.vuln.critical, manual_crit);
+    }
+}
+
+/// Property: trial sampling stays in bounds for arbitrary GEMM shapes
+/// and mesh dims.
+#[test]
+fn prop_sampled_trials_always_in_bounds() {
+    let mut rng = Rng::new(0xB07);
+    for _ in 0..2000 {
+        let m = 1 + rng.usize_below(300);
+        let k = 1 + rng.usize_below(300);
+        let n = 1 + rng.usize_below(300);
+        let dim = [2, 4, 8, 16][rng.usize_below(4)];
+        let site = GemmSiteId { layer: rng.usize_below(20), ordinal: 0 };
+        let t = sample_trial(site, m, k, n, dim, &mut rng, &[]);
+        assert!(t.tile_i < m.div_ceil(dim));
+        assert!(t.tile_j < n.div_ceil(dim));
+        assert!(t.fault.addr.row < dim && t.fault.addr.col < dim);
+        assert!(t.fault.bit < t.fault.addr.kind.width());
+        assert!(t.fault.cycle < enfor_sa::mesh::driver::os_matmul_cycles(dim, k));
+    }
+}
+
+/// Property: outcome classification is total — every trial lands in
+/// exactly one of masked / exposed / critical.
+#[test]
+fn prop_outcomes_partition_trials() {
+    let model = models::quicknet(3);
+    let mesh = MeshConfig::default();
+    let mut meta_rng = Rng::new(0x707A1);
+    for _ in 0..4 {
+        let cfg = random_cfg(&mut meta_rng);
+        let r = run_campaign(&model, &mesh, &cfg).unwrap();
+        assert_eq!(
+            r.vuln.trials,
+            r.masked_trials + r.exposed_trials + r.vuln.critical
+        );
+        let per_layer_sum: u64 = r.per_layer.values().map(|v| v.trials).sum();
+        assert_eq!(per_layer_sum, r.vuln.trials, "per-layer routing lost trials");
+    }
+}
+
+/// Property: the same campaign on different backends (mesh vs HDFIT)
+/// yields identical outcome counts for any configuration.
+#[test]
+fn prop_backend_equivalence_random_configs() {
+    let model = models::quicknet(3);
+    let mesh = MeshConfig::default();
+    let mut meta_rng = Rng::new(0xE9);
+    for _ in 0..3 {
+        let mut cfg = random_cfg(&mut meta_rng);
+        cfg.offload_scope = OffloadScope::SingleTile;
+        cfg.backend = Backend::EnforSa;
+        let a = run_campaign(&model, &mesh, &cfg).unwrap();
+        cfg.backend = Backend::Hdfit;
+        let b = run_campaign(&model, &mesh, &cfg).unwrap();
+        assert_eq!(a.vuln.critical, b.vuln.critical, "seed {}", cfg.seed);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+    }
+}

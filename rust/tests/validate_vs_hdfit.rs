@@ -1,0 +1,119 @@
+//! The paper's §IV-B accuracy validation: ENFOR-SA's source-register
+//! injection and HDFIT's per-assignment instrumentation must produce
+//! **identical faulty output matrices** for the same input matrices,
+//! fault locations and injection cycles.
+
+use enfor_sa::campaign::sample_mesh_fault;
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use enfor_sa::mesh::hdfit::InstrumentedMesh;
+use enfor_sa::mesh::{Fault, Mesh, SignalKind};
+use enfor_sa::util::Rng;
+
+fn both_backends(dim: usize, k: usize, seed: u64, fault: &Fault) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+    let mut rng = Rng::new(seed);
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 1000);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut hm = InstrumentedMesh::new(dim);
+    let c1 = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, fault);
+    let c2 = MatmulDriver::new(&mut hm).matmul_with_fault(&a, &b, &d, fault);
+    (c1, c2)
+}
+
+#[test]
+fn identical_outputs_random_faults() {
+    // the paper's validation experiment: same inputs, same fault list
+    let mut rng = Rng::new(0xACC1);
+    for rep in 0..300 {
+        let dim = [4usize, 8][rep % 2];
+        let k = 1 + rng.usize_below(20);
+        let fault = sample_mesh_fault(dim, k, &mut rng, &[]);
+        let (c1, c2) = both_backends(dim, k, 1000 + rep as u64, &fault);
+        assert_eq!(c1, c2, "rep {rep}: fault {fault} diverged");
+    }
+}
+
+#[test]
+fn identical_outputs_exhaustive_small_mesh() {
+    // every PE x signal kind x a bit x every cycle on a 2x2 mesh
+    let dim = 2;
+    let k = 3;
+    for r in 0..dim {
+        for c in 0..dim {
+            for kind in SignalKind::ALL {
+                for cycle in 0..os_matmul_cycles(dim, k) {
+                    for bit in [0u8, kind.width() - 1] {
+                        let fault = Fault::new(r, c, kind, bit, cycle);
+                        let (c1, c2) = both_backends(dim, k, 7, &fault);
+                        assert_eq!(c1, c2, "fault {fault} diverged");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_free_runs_match_software_gold() {
+    let mut rng = Rng::new(0xACC2);
+    for _ in 0..50 {
+        let dim = 8;
+        let k = 1 + rng.usize_below(24);
+        let a = rng.mat_i8(dim, k);
+        let b = rng.mat_i8(k, dim);
+        let d = rng.mat_i32(dim, dim, 1000);
+        let gold = gold_matmul(&a, &b, &d);
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut hm = InstrumentedMesh::new(dim);
+        assert_eq!(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d), gold);
+        assert_eq!(MatmulDriver::new(&mut hm).matmul(&a, &b, &d), gold);
+    }
+}
+
+#[test]
+fn injected_faults_do_corrupt_sometimes() {
+    // sanity against vacuous equality: a decent fraction of sampled
+    // faults must actually corrupt the output on dense operands
+    let mut rng = Rng::new(0xACC3);
+    let dim = 8;
+    let k = 8;
+    let a = rng.mat_i8(dim, k);
+    let b: Vec<Vec<i8>> = (0..k)
+        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
+        .collect();
+    let d = rng.mat_i32(dim, dim, 100);
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let mut corrupted = 0;
+    let reps = 200;
+    for _ in 0..reps {
+        let fault = sample_mesh_fault(dim, k, &mut rng, &[]);
+        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+        if faulty != golden {
+            corrupted += 1;
+        }
+    }
+    assert!(
+        corrupted > reps / 10,
+        "only {corrupted}/{reps} faults corrupted output"
+    );
+}
+
+#[test]
+fn hdfit_pays_per_assignment_bookkeeping() {
+    // cost-structure check: hooks fire on every assignment even with no
+    // fault armed — the overhead ENFOR-SA eliminates
+    let dim = 8;
+    let mut hm = InstrumentedMesh::new(dim);
+    let mut rng = Rng::new(0xACC4);
+    let a = rng.mat_i8(dim, dim);
+    let b = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(dim, dim, 10);
+    let before = hm.hook_calls;
+    MatmulDriver::new(&mut hm).matmul(&a, &b, &d);
+    let calls = hm.hook_calls - before;
+    let cycles = os_matmul_cycles(dim, dim);
+    assert_eq!(calls, cycles * (dim * dim) as u64 * 12);
+}
