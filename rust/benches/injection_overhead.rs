@@ -6,9 +6,14 @@
 //! few hundred trials per model — override with env:
 //!   BENCH_FAULTS=..  BENCH_INPUTS=..  BENCH_MODELS=quicknet,ResNet18
 //!
+//! Set BENCH_OUT=path.json to also write a machine-readable snapshot
+//! (`benchkit::injection_snapshot_json` — the schema stored under
+//! `benchmarks/BENCH_injection_overhead.json`) so the RTL-offload
+//! overhead trajectory can be diffed across PRs.
+//!
 //! Run: `cargo bench --bench injection_overhead`
 
-use enfor_sa::benchkit::injection_table;
+use enfor_sa::benchkit::{injection_snapshot_json, injection_table};
 use enfor_sa::config::{CampaignConfig, MeshConfig};
 use enfor_sa::dnn::models;
 use enfor_sa::report::human_time;
@@ -73,5 +78,11 @@ fn main() {
             r.pvf_pct(),
             r.avf_pct()
         );
+    }
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+        let snap = injection_snapshot_json(&rows, faults, inputs, &label);
+        std::fs::write(&path, snap.pretty()).expect("writing BENCH_OUT snapshot");
+        eprintln!("wrote snapshot {path}");
     }
 }

@@ -125,7 +125,7 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..mesh_tile_reps {
         std::hint::black_box(
             enfor_sa::mesh::driver::MatmulDriver::new(&mut mesh)
-                .matmul(&a_tile, &b_tile, &d_tile),
+                .matmul(a_tile.view(), b_tile.view(), d_tile.view()),
         );
     }
     let mesh_tile_s = t_mesh_tile.elapsed().as_secs_f64() / mesh_tile_reps as f64;
@@ -133,7 +133,9 @@ fn main() -> anyhow::Result<()> {
     {
         let mut soc = Soc::new(dim);
         for _ in 0..soc_trials {
-            std::hint::black_box(soc.run_matmul(&a_tile, &b_tile, &d_tile, None)?);
+            std::hint::black_box(
+                soc.run_matmul(a_tile.view(), b_tile.view(), d_tile.view(), None)?,
+            );
         }
     }
     let soc_tile_s = t_soc.elapsed().as_secs_f64() / soc_trials as f64;

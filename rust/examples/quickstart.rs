@@ -21,8 +21,8 @@ fn main() {
     let d = rng.mat_i32(dim, dim, 100);
 
     // golden run: the mesh must agree with plain software arithmetic
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
-    assert_eq!(golden, gold_matmul(&a, &b, &d));
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+    assert_eq!(golden, gold_matmul(a.view(), b.view(), d.view()));
     println!(
         "golden matmul OK on a {dim}x{dim} OS mesh ({} cycles)",
         os_matmul_cycles(dim, k)
@@ -32,20 +32,21 @@ fn main() {
     // the middle of the compute phase — ENFOR-SA injects it by flipping
     // the SOURCE register in the simulation wrapper, no instrumentation.
     let fault = Fault::new(2, 3, SignalKind::Propag, 0, (2 * dim) as u64 + 6);
-    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+    let faulty =
+        MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &fault);
 
     println!("injected: {fault}");
     let mut corrupted = 0;
     for r in 0..dim {
         for c in 0..dim {
-            if faulty[r][c] != golden[r][c] {
+            if faulty[(r, c)] != golden[(r, c)] {
                 corrupted += 1;
                 if corrupted <= 6 {
                     println!(
                         "  C[{r}][{c}]: {} -> {} (xor {:#x})",
-                        golden[r][c],
-                        faulty[r][c],
-                        golden[r][c] ^ faulty[r][c]
+                        golden[(r, c)],
+                        faulty[(r, c)],
+                        golden[(r, c)] ^ faulty[(r, c)]
                     );
                 }
             }

@@ -6,11 +6,13 @@
 use crate::campaign::{run_campaign, CampaignResult};
 use crate::config::{Backend, CampaignConfig, Dataflow, MeshConfig};
 use crate::dnn::models;
-use crate::mesh::driver::{tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+use crate::mat::Mat;
+use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
 use crate::mesh::hdfit::InstrumentedMesh;
 use crate::mesh::inject::idle_cycles;
 use crate::mesh::{Mesh, MeshSim};
 use crate::soc::Soc;
+use crate::util::json::Json;
 use crate::util::Rng;
 use anyhow::Result;
 use std::time::Instant;
@@ -79,14 +81,18 @@ pub fn matmul_time(dims: &[usize], reps: u64) -> Vec<MatmulTimeRow> {
             let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
             let t0 = Instant::now();
             for _ in 0..reps {
-                std::hint::black_box(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d));
+                std::hint::black_box(
+                    MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view()),
+                );
             }
             let enforsa_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
 
             let mut hm = InstrumentedMesh::new(dim);
             let t0 = Instant::now();
             for _ in 0..reps {
-                std::hint::black_box(MatmulDriver::new(&mut hm).matmul(&a, &b, &d));
+                std::hint::black_box(
+                    MatmulDriver::new(&mut hm).matmul(a.view(), b.view(), d.view()),
+                );
             }
             let hdfit_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
             MatmulTimeRow { dim, enforsa_ms, hdfit_ms }
@@ -116,7 +122,7 @@ impl LayerForwardRow {
 
 /// The GEMM operands of our scaled ResNet50's first convolution
 /// (im2col-lowered), shared by all three backends.
-pub fn resnet50_conv1_operands(rng: &mut Rng) -> (MatI8, MatI8, MatI32) {
+pub fn resnet50_conv1_operands(rng: &mut Rng) -> (Mat<i8>, Mat<i8>, Mat<i32>) {
     // conv1: cin=3, 32x32 input, cout=24, 3x3, stride 2, pad 1
     // im2col: M = 16*16 = 256 pixels, K = 27, N = 24
     let (m, k, n) = (256usize, 27usize, 24usize);
@@ -132,54 +138,31 @@ pub fn layer_forward(dims: &[usize]) -> Result<Vec<LayerForwardRow>> {
     for &dim in dims {
         let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
         let t0 = Instant::now();
-        std::hint::black_box(tiled_matmul_os(&mut mesh, &a, &b, &d));
+        std::hint::black_box(tiled_matmul_os(&mut mesh, a.view(), b.view(), d.view()));
         let enforsa_s = t0.elapsed().as_secs_f64();
 
         let mut hm = InstrumentedMesh::new(dim);
         let t0 = Instant::now();
-        std::hint::black_box(tiled_matmul_os(&mut hm, &a, &b, &d));
+        std::hint::black_box(tiled_matmul_os(&mut hm, a.view(), b.view(), d.view()));
         let hdfit_s = t0.elapsed().as_secs_f64();
 
-        // full SoC: each output tile through the whole chip
+        // full SoC: each output tile through the whole chip; tiles are
+        // zero-copy padded windows of the shared flat operands
         let mut soc = Soc::new(dim);
         let t0 = Instant::now();
-        let m = a.len();
-        let n = b[0].len();
+        let m = a.rows();
+        let k = a.cols();
+        let n = b.cols();
         let mut ti = 0;
         while ti < m {
             let mut tj = 0;
             while tj < n {
-                let a_tile: MatI8 = (0..dim)
-                    .map(|r| {
-                        if ti + r < m {
-                            a[ti + r].clone()
-                        } else {
-                            vec![0; a[0].len()]
-                        }
-                    })
-                    .collect();
-                let b_tile: MatI8 = b
-                    .iter()
-                    .map(|row| {
-                        (0..dim)
-                            .map(|cc| if tj + cc < n { row[tj + cc] } else { 0 })
-                            .collect()
-                    })
-                    .collect();
-                let d_tile: MatI32 = (0..dim)
-                    .map(|r| {
-                        (0..dim)
-                            .map(|cc| {
-                                if ti + r < m && tj + cc < n {
-                                    d[ti + r][tj + cc]
-                                } else {
-                                    0
-                                }
-                            })
-                            .collect()
-                    })
-                    .collect();
-                std::hint::black_box(soc.run_matmul(&a_tile, &b_tile, &d_tile, None)?);
+                std::hint::black_box(soc.run_matmul(
+                    a.window(ti, 0, dim, k),
+                    b.window(0, tj, k, dim),
+                    d.window(ti, tj, dim, dim),
+                    None,
+                )?);
                 tj += dim;
             }
             ti += dim;
@@ -235,6 +218,44 @@ pub fn injection_table(
         });
     }
     Ok(rows)
+}
+
+/// Serialize Table VI rows as the `BENCH_injection_overhead.json`
+/// snapshot schema (see `benchmarks/` in the repo root): per-model
+/// SW/RTL wall clocks, slowdown and vulnerability factors, so future
+/// PRs can diff the RTL-offload overhead trajectory.
+pub fn injection_snapshot_json(
+    rows: &[InjectionRow],
+    faults_per_layer: u64,
+    inputs: u64,
+    label: &str,
+) -> Json {
+    let models: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("model", Json::str(r.model.clone())),
+                ("sw_wall_s", Json::num(r.sw.wall.as_secs_f64())),
+                ("rtl_wall_s", Json::num(r.rtl.wall.as_secs_f64())),
+                ("slowdown_pct", Json::num(r.slowdown_pct())),
+                ("pvf_pct", Json::num(r.pvf_pct())),
+                ("avf_pct", Json::num(r.avf_pct())),
+                ("trials", Json::num(r.rtl.vuln.trials as f64)),
+            ])
+        })
+        .collect();
+    let n = rows.len().max(1) as f64;
+    Json::obj(vec![
+        ("schema", Json::str("enfor-sa/injection-overhead/v1")),
+        ("label", Json::str(label)),
+        ("faults_per_layer", Json::num(faults_per_layer as f64)),
+        ("inputs", Json::num(inputs as f64)),
+        (
+            "mean_slowdown_pct",
+            Json::num(rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n),
+        ),
+        ("models", Json::Arr(models)),
+    ])
 }
 
 #[cfg(test)]

@@ -122,22 +122,20 @@ pub fn exposure_map(
     // own, different spatial profile.
     let compute_start = (2 * dim - 1) as u64;
     let compute_len = (k_inner + 2 * dim - 2) as u64;
+    let d = crate::mat::Mat::zeros(dim, dim);
     for r in 0..dim {
         for c in 0..dim {
             for _ in 0..trials_per_pe {
                 // weights dense, activations ReLU-sparse (half zeros)
                 let a = rng.mat_i8(dim, k_inner);
                 let mut b = rng.mat_i8(k_inner, dim);
-                for row in b.iter_mut() {
-                    for v in row.iter_mut() {
-                        if rng.chance(0.5) {
-                            *v = 0;
-                        } else {
-                            *v = (*v).max(0); // post-ReLU activations
-                        }
+                for v in b.data_mut() {
+                    if rng.chance(0.5) {
+                        *v = 0;
+                    } else {
+                        *v = (*v).max(0); // post-ReLU activations
                     }
                 }
-                let d = vec![vec![0i32; dim]; dim];
                 let fault = Fault::new(
                     r,
                     c,
@@ -145,13 +143,12 @@ pub fn exposure_map(
                     rng.below(kind.width() as u64) as u8,
                     compute_start + rng.below(compute_len),
                 );
-                let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
-                let gold = gold_matmul(&a, &b, &d);
+                let faulty = MatmulDriver::new(&mut mesh)
+                    .matmul_with_fault(a.view(), b.view(), d.view(), &fault);
+                let gold = gold_matmul(a.view(), b.view(), d.view());
                 let cell = &mut map.cells[r * dim + c];
-                for (fr, gr) in faulty.iter().zip(&gold) {
-                    for (fv, gv) in fr.iter().zip(gr) {
-                        cell.record(fv != gv);
-                    }
+                for (fv, gv) in faulty.data().iter().zip(gold.data()) {
+                    cell.record(fv != gv);
                 }
             }
         }

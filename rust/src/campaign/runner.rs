@@ -3,16 +3,19 @@
 //!
 //! Implemented as a [`GemmHook`]: the forward pass runs on the native
 //! software path until the target GEMM site is reached; there, the
-//! runner extracts the one DIM-padded operand tile the sampled fault
-//! lands in, executes it on the RTL backend with the fault armed, and
-//! splices the (possibly corrupted) int32 tile back into the layer's
-//! accumulator — the rest of the inference continues in software.
+//! runner hands the RTL backend a zero-copy, DIM-padded [`MatView`]
+//! window into the layer's existing flat operand buffers, executes it
+//! with the fault armed, and splices the (possibly corrupted) int32 tile
+//! back into the layer's accumulator with one strided copy — the rest of
+//! the inference continues in software. No per-trial tile allocation
+//! happens on this path (the hot path of the whole Table VI comparison).
 
 use super::fault::TrialFault;
 use crate::config::OffloadScope;
 use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
-use crate::mesh::driver::{tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+use crate::mat::{Mat, MatView, MatViewMut};
+use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
 use crate::mesh::hdfit::InstrumentedMesh;
 
 use crate::mesh::{Fault, Mesh, MeshSim};
@@ -38,14 +41,15 @@ impl<'a> TileBackend<'a> {
     }
 
     /// Run one DIM x DIM-output tile matmul (full-K stream), with an
-    /// optional transient fault.
+    /// optional transient fault. The public software↔RTL seam: operands
+    /// are borrowed windows into the caller's flat buffers.
     pub fn run_tile(
         &mut self,
-        a: &MatI8,
-        b: &MatI8,
-        d: &MatI32,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
         fault: Option<&Fault>,
-    ) -> anyhow::Result<MatI32> {
+    ) -> anyhow::Result<Mat<i32>> {
         Ok(match self {
             TileBackend::Mesh(m) => match fault {
                 Some(f) => MatmulDriver::new(*m).matmul_with_fault(a, b, d, f),
@@ -61,20 +65,16 @@ impl<'a> TileBackend<'a> {
 
     /// Whole-layer offload (ablation D3): every tile through RTL, the
     /// fault armed only on the target tile.
-    #[allow(clippy::too_many_arguments)]
     pub fn run_layer(
         &mut self,
-        a: &MatI8,
-        b: &MatI8,
-        d: &MatI32,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
         fault: &Fault,
         tile_i: usize,
         tile_j: usize,
-    ) -> anyhow::Result<MatI32> {
-        let dim = self.dim();
-        let m = a.len();
-        let n = if b.is_empty() { 0 } else { b[0].len() };
-        // fault tile computed with fault, all others fault-free
+    ) -> anyhow::Result<Mat<i32>> {
+        // unsupported-backend check first: no tile work before the bail
         let mut c = match self {
             TileBackend::Mesh(mesh) => tiled_matmul_os(*mesh, a, b, d),
             TileBackend::Hdfit(mesh) => tiled_matmul_os(*mesh, a, b, d),
@@ -82,40 +82,18 @@ impl<'a> TileBackend<'a> {
                 anyhow::bail!("whole-layer offload through the SoC is not supported")
             }
         };
-        // redo the faulty tile with the fault and splice
+        // redo the faulty tile with the fault and splice. The tile gets
+        // the full-K stream, exactly like every tile of tiled_matmul_os.
+        let dim = self.dim();
+        let k = a.cols();
         let (ti, tj) = (tile_i * dim, tile_j * dim);
-        let k = if m == 0 { 0 } else { a[0].len() };
-        let a_tile: MatI8 = (0..dim)
-            .map(|r| if ti + r < m { a[ti + r].clone() } else { vec![0; k] })
-            .collect();
-        let b_tile: MatI8 = (0..k)
-            .map(|r| {
-                (0..dim)
-                    .map(|cc| if tj + cc < n { b[r][tj + cc] } else { 0 })
-                    .collect()
-            })
-            .collect();
-        let d_tile: MatI32 = (0..dim)
-            .map(|r| {
-                (0..dim)
-                    .map(|cc| {
-                        if ti + r < m && tj + cc < n {
-                            d[ti + r][tj + cc]
-                        } else {
-                            0
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
-        let c_tile = self.run_tile(&a_tile, &b_tile, &d_tile, Some(fault))?;
-        for r in 0..dim {
-            for cc in 0..dim {
-                if ti + r < m && tj + cc < n {
-                    c[ti + r][tj + cc] = c_tile[r][cc];
-                }
-            }
-        }
+        let c_tile = self.run_tile(
+            a.sub(ti, 0, dim, k),
+            b.sub(0, tj, k, dim),
+            d.sub(ti, tj, dim, dim),
+            Some(fault),
+        )?;
+        c.window_mut(ti, tj, dim, dim).splice_from(&c_tile);
         Ok(c)
     }
 }
@@ -157,70 +135,43 @@ impl GemmHook for CrossLayerRunner<'_> {
         let ti = self.trial.tile_i.min(m.div_ceil(dim) - 1);
         let tj = self.trial.tile_j.min(n.div_ceil(dim) - 1);
 
+        // the layer's operands, viewed in place (flat row-major buffers)
+        let a_full = MatView::full(call.a, m, k);
+        let b_full = MatView::full(call.b, k, n);
+        let d_full = MatView::full(call.d, m, n);
+
         // native full result first
         let mut c = vec![0i32; m * n];
         gemm_i8(m, k, n, call.a, call.b, call.d, &mut c);
 
         if self.scope == OffloadScope::Layer {
             // ablation: run the ENTIRE layer through RTL
-            let a2: MatI8 = (0..m).map(|r| call.a[r * k..(r + 1) * k].to_vec()).collect();
-            let b2: MatI8 = (0..k).map(|r| call.b[r * n..(r + 1) * n].to_vec()).collect();
-            let d2: MatI32 = (0..m).map(|r| call.d[r * n..(r + 1) * n].to_vec()).collect();
             let cf = self
                 .backend
-                .run_layer(&a2, &b2, &d2, &self.trial.fault, ti, tj)
+                .run_layer(a_full, b_full, d_full, &self.trial.fault, ti, tj)
                 .expect("layer offload failed");
-            let flat: Vec<i32> = cf.into_iter().flatten().collect();
+            let flat = cf.into_vec();
             self.exposed = flat != c;
             return Some(flat);
         }
 
-        // ENFOR-SA single-tile offload: extract the DIM-padded tile
+        // ENFOR-SA single-tile offload: the DIM-padded tile is a
+        // zero-copy window into the layer's buffers
         let (ri, cj) = (ti * dim, tj * dim);
-        let a_tile: MatI8 = (0..dim)
-            .map(|r| {
-                if ri + r < m {
-                    call.a[(ri + r) * k..(ri + r + 1) * k].to_vec()
-                } else {
-                    vec![0; k]
-                }
-            })
-            .collect();
-        let b_tile: MatI8 = (0..k)
-            .map(|r| {
-                (0..dim)
-                    .map(|cc| if cj + cc < n { call.b[r * n + cj + cc] } else { 0 })
-                    .collect()
-            })
-            .collect();
-        let d_tile: MatI32 = (0..dim)
-            .map(|r| {
-                (0..dim)
-                    .map(|cc| {
-                        if ri + r < m && cj + cc < n {
-                            call.d[(ri + r) * n + cj + cc]
-                        } else {
-                            0
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
         let c_tile = self
             .backend
-            .run_tile(&a_tile, &b_tile, &d_tile, Some(&self.trial.fault))
+            .run_tile(
+                a_full.sub(ri, 0, dim, k),
+                b_full.sub(0, cj, k, dim),
+                d_full.sub(ri, cj, dim, dim),
+                Some(&self.trial.fault),
+            )
             .expect("tile offload failed");
-        // splice the RTL tile back into the accumulator
-        for r in 0..dim {
-            for cc in 0..dim {
-                if ri + r < m && cj + cc < n {
-                    let idx = (ri + r) * n + cj + cc;
-                    if c[idx] != c_tile[r][cc] {
-                        self.exposed = true;
-                        c[idx] = c_tile[r][cc];
-                    }
-                }
-            }
+        // splice the RTL tile back into the accumulator (one strided
+        // copy; a changed element means the fault escaped the array)
+        let mut target = MatViewMut::window(&mut c, m, n, n, ri, cj, dim, dim);
+        if target.splice_from(&c_tile) {
+            self.exposed = true;
         }
         Some(c)
     }
@@ -331,5 +282,21 @@ mod tests {
         );
         let out_hdfit = model.forward(&x, Some(&mut r2));
         assert_eq!(out_mesh, out_hdfit);
+    }
+
+    #[test]
+    fn soc_layer_offload_bails_before_any_work() {
+        let dim = 4;
+        let mut soc = Soc::new(dim);
+        let mut backend = TileBackend::Soc(&mut soc);
+        let mut rng = Rng::new(75);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(dim, dim, 10);
+        let f = Fault::new(0, 0, SignalKind::Acc, 0, 0);
+        let err = backend
+            .run_layer(a.view(), b.view(), d.view(), &f, 0, 0)
+            .unwrap_err();
+        assert!(format!("{err}").contains("not supported"));
     }
 }

@@ -89,20 +89,17 @@ mod tests {
 
     #[test]
     fn matches_mesh_gold_matmul() {
-        // one arithmetic definition across the whole stack
+        // one arithmetic definition across the whole stack — and one
+        // data layout: the GEMM consumes the Mat's flat buffer directly
         use crate::mesh::driver::gold_matmul;
         let mut rng = Rng::new(33);
         let (m, k, n) = (5usize, 6usize, 7usize);
         let a2 = rng.mat_i8(m, k);
         let b2 = rng.mat_i8(k, n);
         let d2 = rng.mat_i32(m, n, 100);
-        let a: Vec<i8> = a2.iter().flatten().copied().collect();
-        let b: Vec<i8> = b2.iter().flatten().copied().collect();
-        let d: Vec<i32> = d2.iter().flatten().copied().collect();
-        let flat = gemm_i8_alloc(m, k, n, &a, &b, &d);
-        let gold = gold_matmul(&a2, &b2, &d2);
-        let gold_flat: Vec<i32> = gold.iter().flatten().copied().collect();
-        assert_eq!(flat, gold_flat);
+        let flat = gemm_i8_alloc(m, k, n, a2.data(), b2.data(), d2.data());
+        let gold = gold_matmul(a2.view(), b2.view(), d2.view());
+        assert_eq!(flat, gold.into_vec());
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! enfor-sa report --state-inventory        DESIGN.md D2 ablation data
 //! ```
 
+#![allow(clippy::needless_range_loop)]
+
 use anyhow::{bail, Result};
 use enfor_sa::benchkit;
 use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
@@ -354,16 +356,22 @@ fn cmd_validate(args: &Args) -> Result<()> {
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 1000);
         let fault = enfor_sa::campaign::sample_mesh_fault(dim, k, &mut rng, &[]);
-        let c1 = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
-        let c2 = MatmulDriver::new(&mut hm).matmul_with_fault(&a, &b, &d, &fault);
+        let c1 =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &fault);
+        let c2 =
+            MatmulDriver::new(&mut hm).matmul_with_fault(a.view(), b.view(), d.view(), &fault);
         if c1 == c2 {
             identical += 1;
         } else {
             eprintln!("MISMATCH at rep {i}: fault {fault}");
         }
         // also confirm fault-free equality with the software gold
-        let g1 = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
-        assert_eq!(g1, gold_matmul(&a, &b, &d), "fault-free RTL != SW gold");
+        let g1 = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+        assert_eq!(
+            g1,
+            gold_matmul(a.view(), b.view(), d.view()),
+            "fault-free RTL != SW gold"
+        );
     }
     println!(
         "accuracy validation vs HDFIT: {identical}/{reps} identical faulty outputs"

@@ -1,0 +1,497 @@
+//! Flat, stride-aware matrices — the data-layout contract across the
+//! software ↔ RTL boundary.
+//!
+//! # Why this module exists
+//!
+//! ENFOR-SA's headline claim is that RTL-accurate injection costs only a
+//! few percent over software-only injection. That margin dies if every
+//! tile crossing the software↔RTL seam is marshalled through nested
+//! `Vec<Vec<T>>` matrices: one heap allocation per row, row-by-row
+//! clones on tile extraction, and pointer-chasing in the mesh streaming
+//! loops. The DNN side already computes on flat row-major buffers
+//! ([`crate::dnn::gemm::gemm_i8`]), so the nested representation was a
+//! seam artifact, not a design choice.
+//!
+//! # The contract
+//!
+//! * [`Mat<T>`] — an owned, contiguous, row-major `rows x cols` matrix.
+//!   Element `(r, c)` lives at `data[r * cols + c]`. This is exactly the
+//!   layout of the DNN layer buffers (`GemmCall::a/b/d`), the Pallas
+//!   kernels' operands, and the scratchpad rows of the SoC model.
+//! * [`MatView<T>`] — a borrowed, stride-aware window into a flat
+//!   buffer. Reads outside the in-bounds region of the parent return
+//!   `T::default()` (zero): the view *is* the DIM-padded tile the mesh
+//!   drivers need, with no copy and no allocation. Extracting the
+//!   operand tile a sampled fault lands in is O(1).
+//! * [`MatViewMut<T>`] — the mutable counterpart, used to splice a
+//!   (possibly corrupted) result tile back into the layer's flat
+//!   accumulator with one strided copy. Writes that fall in the
+//!   zero-padding are dropped, mirroring how the real drain FSM discards
+//!   out-of-bounds lanes.
+//!
+//! Every layer that crosses the boundary — `mesh/driver.rs`,
+//! `mesh/adapters.rs`, `campaign/runner.rs`, `soc/soc.rs` — speaks these
+//! types; `rust/tests/prop_mat.rs` pins the view semantics against a
+//! nested-matrix extraction oracle.
+
+use std::ops::{Index, IndexMut};
+
+/// Owned, contiguous, row-major matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Mat<T> {
+    /// A `rows x cols` matrix of `T::default()`.
+    pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
+        Mat {
+            rows,
+            cols,
+            data: vec![T::default(); rows * cols],
+        }
+    }
+
+    /// A matrix filled with one value.
+    pub fn filled(rows: usize, cols: usize, value: T) -> Mat<T> {
+        Mat {
+            rows,
+            cols,
+            data: vec![value; rows * cols],
+        }
+    }
+
+    /// Wrap an existing flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Mat<T> {
+        assert_eq!(data.len(), rows * cols, "flat buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build element-wise in row-major order (row 0 first — the order
+    /// matters for deterministic RNG-driven fills).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Mat<T> {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The flat row-major buffer.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat row-major buffer.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// One row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..r * self.cols + self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..r * self.cols + self.cols]
+    }
+
+    /// Iterate rows as slices.
+    pub fn row_iter(&self) -> impl Iterator<Item = &[T]> {
+        (0..self.rows).map(move |r| self.row(r))
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> T {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow the whole matrix as a view.
+    #[inline]
+    pub fn view(&self) -> MatView<'_, T> {
+        MatView::full(&self.data, self.rows, self.cols)
+    }
+
+    /// A zero-padded `rows x cols` window starting at `(r0, c0)`.
+    #[inline]
+    pub fn window(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatView<'_, T> {
+        self.view().sub(r0, c0, rows, cols)
+    }
+
+    /// Mutable window (out-of-bounds writes are dropped).
+    #[inline]
+    pub fn window_mut(
+        &mut self,
+        r0: usize,
+        c0: usize,
+        rows: usize,
+        cols: usize,
+    ) -> MatViewMut<'_, T> {
+        let (sr, sc) = (self.rows, self.cols);
+        MatViewMut::window(&mut self.data, sr, sc, sc, r0, c0, rows, cols)
+    }
+}
+
+impl<T> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl<T> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut T {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Clamp a `rows x cols` window at `(r0, c0)` against the in-bounds
+/// `src_rows x src_cols` region of a strided buffer. Returns the
+/// in-bounds extent and the backing element range (empty when the
+/// window lies entirely in the padding). Single home of the window
+/// bounds arithmetic shared by [`MatView::sub`] and
+/// [`MatViewMut::window`].
+#[allow(clippy::too_many_arguments)]
+fn clamp_window(
+    src_rows: usize,
+    src_cols: usize,
+    stride: usize,
+    r0: usize,
+    c0: usize,
+    rows: usize,
+    cols: usize,
+) -> (usize, usize, std::ops::Range<usize>) {
+    let in_rows = src_rows.saturating_sub(r0).min(rows);
+    let in_cols = src_cols.saturating_sub(c0).min(cols);
+    let range = if in_rows == 0 || in_cols == 0 {
+        0..0
+    } else {
+        let start = r0 * stride + c0;
+        start..start + (in_rows - 1) * stride + in_cols
+    };
+    (in_rows, in_cols, range)
+}
+
+/// Borrowed, stride-aware window with implicit zero padding outside the
+/// parent's bounds. `Copy`, pointer-sized: passing one is free.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a, T> {
+    /// Backing elements, starting at the window origin. Covers only the
+    /// in-bounds region; the last in-bounds row extends `in_cols`, not
+    /// `stride`.
+    data: &'a [T],
+    /// Parent row stride (elements between vertically adjacent cells).
+    stride: usize,
+    /// Logical window height (includes zero padding).
+    rows: usize,
+    /// Logical window width (includes zero padding).
+    cols: usize,
+    /// Rows actually backed by the parent (`<= rows`).
+    in_rows: usize,
+    /// Columns actually backed by the parent (`<= cols`).
+    in_cols: usize,
+}
+
+impl<'a, T: Copy + Default> MatView<'a, T> {
+    /// View an entire flat row-major `rows x cols` buffer.
+    #[inline]
+    pub fn full(data: &'a [T], rows: usize, cols: usize) -> MatView<'a, T> {
+        assert_eq!(data.len(), rows * cols, "flat buffer length mismatch");
+        MatView {
+            data,
+            stride: cols,
+            rows,
+            cols,
+            in_rows: rows,
+            in_cols: cols,
+        }
+    }
+
+    /// Logical window height (padding included).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical window width (padding included).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read `(r, c)`; zero (`T::default()`) outside the parent's bounds.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols, "view read out of window");
+        if r < self.in_rows && c < self.in_cols {
+            self.data[r * self.stride + c]
+        } else {
+            T::default()
+        }
+    }
+
+    /// A zero-padded sub-window (window coordinates). Padding composes:
+    /// a sub-window of a padded region reads as zeros.
+    pub fn sub(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatView<'a, T> {
+        let (in_rows, in_cols, range) =
+            clamp_window(self.in_rows, self.in_cols, self.stride, r0, c0, rows, cols);
+        MatView {
+            data: &self.data[range],
+            stride: self.stride,
+            rows,
+            cols,
+            in_rows,
+            in_cols,
+        }
+    }
+
+    /// Copy row `r` (zero-padded) into `out` (`out.len() == cols`).
+    /// Allocation-free staging for the SoC memory/scratchpad paths.
+    pub fn copy_row_into(&self, r: usize, out: &mut [T]) {
+        debug_assert_eq!(out.len(), self.cols);
+        if r < self.in_rows {
+            let src = &self.data[r * self.stride..r * self.stride + self.in_cols];
+            out[..self.in_cols].copy_from_slice(src);
+            out[self.in_cols..].fill(T::default());
+        } else {
+            out.fill(T::default());
+        }
+    }
+
+    /// Materialize the (padded) window as an owned [`Mat`].
+    pub fn to_mat(&self) -> Mat<T> {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.in_rows {
+            m.row_mut(r)[..self.in_cols]
+                .copy_from_slice(&self.data[r * self.stride..r * self.stride + self.in_cols]);
+        }
+        m
+    }
+}
+
+/// Mutable stride-aware window: the splice path back into a layer's flat
+/// accumulator. Writes landing in the zero-padding are dropped.
+#[derive(Debug)]
+pub struct MatViewMut<'a, T> {
+    data: &'a mut [T],
+    stride: usize,
+    rows: usize,
+    cols: usize,
+    in_rows: usize,
+    in_cols: usize,
+}
+
+impl<'a, T: Copy + Default> MatViewMut<'a, T> {
+    /// Mutable `rows x cols` window at `(r0, c0)` of a flat
+    /// `src_rows x src_cols` buffer with row stride `stride`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn window(
+        data: &'a mut [T],
+        src_rows: usize,
+        src_cols: usize,
+        stride: usize,
+        r0: usize,
+        c0: usize,
+        rows: usize,
+        cols: usize,
+    ) -> MatViewMut<'a, T> {
+        let (in_rows, in_cols, range) =
+            clamp_window(src_rows, src_cols, stride, r0, c0, rows, cols);
+        MatViewMut {
+            data: &mut data[range],
+            stride,
+            rows,
+            cols,
+            in_rows,
+            in_cols,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+impl<'a, T: Copy + Default + PartialEq> MatViewMut<'a, T> {
+    /// Splice `src`'s top-left `rows x cols` region into the window's
+    /// in-bounds cells (one strided copy; padding cells are dropped).
+    /// Returns true iff any destination element changed — the campaign
+    /// runner's fault-exposure signal.
+    pub fn splice_from(&mut self, src: &Mat<T>) -> bool {
+        debug_assert!(
+            src.rows() >= self.in_rows && src.cols() >= self.in_cols,
+            "splice source smaller than window"
+        );
+        let mut changed = false;
+        for r in 0..self.in_rows {
+            let dst = &mut self.data[r * self.stride..r * self.stride + self.in_cols];
+            let s = &src.row(r)[..self.in_cols];
+            if dst != s {
+                changed = true;
+                dst.copy_from_slice(s);
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numbered(rows: usize, cols: usize) -> Mat<i32> {
+        Mat::from_fn(rows, cols, |r, c| (r * cols + c) as i32 + 1)
+    }
+
+    #[test]
+    fn mat_layout_is_row_major() {
+        let m = numbered(2, 3);
+        assert_eq!(m.data(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(m.row(1), &[4, 5, 6]);
+        assert_eq!(m[(1, 2)], 6);
+        assert_eq!(m.at(0, 1), 2);
+    }
+
+    #[test]
+    fn full_view_reads_every_cell() {
+        let m = numbered(3, 4);
+        let v = m.view();
+        for r in 0..3 {
+            for c in 0..4 {
+                assert_eq!(v.at(r, c), m[(r, c)]);
+            }
+        }
+    }
+
+    #[test]
+    fn window_zero_pads_overhang() {
+        let m = numbered(3, 3);
+        // 4x4 window at (1, 1): bottom/right overhang out of the parent.
+        let v = m.window(1, 1, 4, 4);
+        assert_eq!(v.at(0, 0), m[(1, 1)]);
+        assert_eq!(v.at(1, 1), m[(2, 2)]);
+        assert_eq!(v.at(2, 0), 0, "row overhang reads zero");
+        assert_eq!(v.at(0, 2), 0, "col overhang reads zero");
+        assert_eq!(v.at(3, 3), 0);
+    }
+
+    #[test]
+    fn window_fully_outside_is_all_zeros() {
+        let m = numbered(2, 2);
+        let v = m.window(5, 7, 3, 3);
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(v.at(r, c), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sub_composes_with_padding() {
+        let m = numbered(4, 4);
+        let outer = m.window(2, 2, 4, 4); // in-bounds 2x2
+        let inner = outer.sub(1, 1, 3, 3); // in-bounds 1x1 at parent (3,3)
+        assert_eq!(inner.at(0, 0), m[(3, 3)]);
+        assert_eq!(inner.at(0, 1), 0);
+        assert_eq!(inner.at(2, 2), 0);
+    }
+
+    #[test]
+    fn to_mat_materializes_padding() {
+        let m = numbered(2, 2);
+        let t = m.window(1, 0, 2, 3).to_mat();
+        assert_eq!(t, Mat::from_vec(2, 3, vec![3, 4, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn copy_row_into_pads() {
+        let m = numbered(2, 2);
+        let v = m.window(0, 1, 3, 3);
+        let mut buf = [9i32; 3];
+        v.copy_row_into(0, &mut buf);
+        assert_eq!(buf, [2, 0, 0]);
+        v.copy_row_into(2, &mut buf);
+        assert_eq!(buf, [0, 0, 0]);
+    }
+
+    #[test]
+    fn splice_writes_in_bounds_only_and_reports_change() {
+        let mut m = Mat::zeros(3, 3);
+        let tile = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        // window overhangs right edge: only column 2 of the tile lands
+        let changed = m.window_mut(1, 2, 2, 2).splice_from(&tile);
+        assert!(changed);
+        assert_eq!(m.data(), &[0, 0, 0, 0, 0, 1, 0, 0, 3]);
+        // splicing identical data reports no change
+        let changed = m.window_mut(1, 2, 2, 2).splice_from(&tile);
+        assert!(!changed);
+    }
+
+    #[test]
+    fn zero_sized_windows_are_safe() {
+        let m: Mat<i8> = Mat::zeros(0, 0);
+        let v = m.window(0, 0, 2, 2);
+        assert_eq!(v.at(1, 1), 0);
+        let m2 = numbered(2, 2);
+        let v2 = m2.window(0, 0, 0, 0);
+        assert_eq!(v2.rows(), 0);
+    }
+
+    #[test]
+    fn view_matches_nested_extraction_small_case() {
+        // the nested-matrix tile extraction this module replaces
+        let m = numbered(5, 7);
+        let (r0, c0, th, tw) = (3, 5, 4, 4);
+        let nested: Vec<Vec<i32>> = (0..th)
+            .map(|r| {
+                (0..tw)
+                    .map(|c| {
+                        if r0 + r < 5 && c0 + c < 7 {
+                            m[(r0 + r, c0 + c)]
+                        } else {
+                            0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let v = m.window(r0, c0, th, tw);
+        for r in 0..th {
+            for c in 0..tw {
+                assert_eq!(v.at(r, c), nested[r][c]);
+            }
+        }
+    }
+}

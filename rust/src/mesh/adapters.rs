@@ -5,45 +5,62 @@
 //! the accumulator drain logic — is emulated by these cheap adapters.
 //! They reproduce the *boundary timing* of the real blocks (one column of
 //! skew registers per row/column) without simulating their internals.
+//!
+//! Since the flat-matrix refactor the feeders are **zero-copy**: a
+//! [`SkewFeeder`] is a [`MatView`] plus an orientation bit, so feeding a
+//! DIM-padded operand tile into the mesh allocates nothing — the view's
+//! implicit zero padding plays the role of the zero-padded scratchpad
+//! read the real frontend performs.
 
-/// Emulates the bank of skew shift-registers that staggers operand row
+use crate::mat::{Mat, MatView};
+
+/// Emulates the bank of skew shift-registers that staggers operand lane
 /// `i` by `i` cycles on its way into the array.
 ///
-/// `feed(t)` returns the edge value for lane `i` at cycle `t` given the
-/// dense operand matrix: lane `i` sees element `t - i` of its stream, or
-/// 0 outside the stream window (matching a zero-padded scratchpad read).
-#[derive(Clone, Debug)]
-pub struct SkewFeeder<T = i8> {
-    /// streams[lane][k] = k-th element of the lane's operand stream.
-    streams: Vec<Vec<T>>,
+/// `at(lane, t)` returns the edge value for `lane` at cycle `t`: lane
+/// `i` sees element `t - i` of its stream, or 0 outside the stream
+/// window (matching a zero-padded scratchpad read). Lanes are either the
+/// rows of the backing view (`from_rows`) or its columns (`from_cols`,
+/// the "transposer" path of the real Gemmini frontend).
+#[derive(Clone, Copy, Debug)]
+pub struct SkewFeeder<'a, T = i8> {
+    view: MatView<'a, T>,
+    /// Lanes are the view's columns (stream index walks down a column).
+    by_cols: bool,
 }
 
-impl<T: Copy + Default> SkewFeeder<T> {
-    /// Build from row streams: lane i carries `rows[i]`.
-    pub fn from_rows(rows: &[Vec<T>]) -> Self {
+impl<'a, T: Copy + Default> SkewFeeder<'a, T> {
+    /// Lane `i` carries row `i` of `view`.
+    pub fn from_rows(view: MatView<'a, T>) -> Self {
         SkewFeeder {
-            streams: rows.to_vec(),
+            view,
+            by_cols: false,
         }
     }
 
-    /// Build from the columns of a K x N matrix: lane c carries column c
-    /// (this is the "transposer" path of the real Gemmini frontend).
-    pub fn from_cols(mat: &[Vec<T>]) -> Self {
-        let k = mat.len();
-        let n = if k == 0 { 0 } else { mat[0].len() };
-        let streams = (0..n)
-            .map(|c| (0..k).map(|r| mat[r][c]).collect())
-            .collect();
-        SkewFeeder { streams }
+    /// Lane `c` carries column `c` of `view` (transposer path).
+    pub fn from_cols(view: MatView<'a, T>) -> Self {
+        SkewFeeder {
+            view,
+            by_cols: true,
+        }
     }
 
     pub fn lanes(&self) -> usize {
-        self.streams.len()
+        if self.by_cols {
+            self.view.cols()
+        } else {
+            self.view.rows()
+        }
     }
 
     /// Stream length (all lanes equal by construction).
     pub fn len(&self) -> usize {
-        self.streams.first().map_or(0, |s| s.len())
+        if self.by_cols {
+            self.view.rows()
+        } else {
+            self.view.cols()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -53,21 +70,24 @@ impl<T: Copy + Default> SkewFeeder<T> {
     /// Edge value for `lane` at cycle `t` (skewed by `lane`).
     #[inline]
     pub fn at(&self, lane: usize, t: usize) -> T {
-        let s = &self.streams[lane];
         if t >= lane {
             let k = t - lane;
-            if k < s.len() {
-                return s[k];
+            if k < self.len() {
+                return if self.by_cols {
+                    self.view.at(k, lane)
+                } else {
+                    self.view.at(lane, k)
+                };
             }
         }
         T::default()
     }
 
-    /// Whether lane `lane` carries live data at cycle `t` (the valid bit
-    /// that travels with the stream).
+    /// Whether `lane` carries live data at cycle `t` (the valid bit that
+    /// travels with the stream).
     #[inline]
     pub fn live(&self, lane: usize, t: usize) -> bool {
-        t >= lane && t - lane < self.streams[lane].len()
+        t >= lane && t - lane < self.len()
     }
 
     /// Cycles until every lane has drained.
@@ -80,16 +100,6 @@ impl<T: Copy + Default> SkewFeeder<T> {
     }
 }
 
-impl SkewFeeder<i8> {
-    /// Mutable access to a stream element (fault injection into the
-    /// emulated scratchpad-read pipeline feeding the mesh edge).
-    pub fn flip_element(&mut self, lane: usize, k: usize, bit: u8) {
-        if let Some(v) = self.streams.get_mut(lane).and_then(|s| s.get_mut(k)) {
-            *v = crate::util::bits::flip_i8(*v, bit);
-        }
-    }
-}
-
 /// Collects the result matrix from the south edge during flush: the
 /// accumulator chain emits row DIM-1 first, so the collector writes rows
 /// in reverse order (the "un-staircasing" the real drain FSM performs).
@@ -98,8 +108,8 @@ pub struct FlushCollector {
     dim: usize,
     /// Per column, how many values have been captured so far.
     taken: Vec<usize>,
-    /// Collected matrix, row-major dim x dim.
-    pub c: Vec<Vec<i32>>,
+    /// Collected matrix, dim x dim.
+    pub c: Mat<i32>,
 }
 
 impl FlushCollector {
@@ -107,7 +117,7 @@ impl FlushCollector {
         FlushCollector {
             dim,
             taken: vec![0; dim],
-            c: vec![vec![0; dim]; dim],
+            c: Mat::zeros(dim, dim),
         }
     }
 
@@ -117,7 +127,7 @@ impl FlushCollector {
             if let Some(v) = *v {
                 let k = self.taken[col];
                 if k < self.dim {
-                    self.c[self.dim - 1 - k][col] = v;
+                    self.c.set(self.dim - 1 - k, col, v);
                     self.taken[col] += 1;
                 }
             }
@@ -136,8 +146,8 @@ mod tests {
 
     #[test]
     fn skew_feeder_delays_by_lane() {
-        let rows = vec![vec![1i8, 2, 3], vec![4, 5, 6]];
-        let f = SkewFeeder::from_rows(&rows);
+        let rows = Mat::from_vec(2, 3, vec![1i8, 2, 3, 4, 5, 6]);
+        let f = SkewFeeder::from_rows(rows.view());
         assert_eq!(f.at(0, 0), 1);
         assert_eq!(f.at(0, 2), 3);
         assert_eq!(f.at(1, 0), 0); // not arrived yet
@@ -150,8 +160,8 @@ mod tests {
     #[test]
     fn skew_feeder_from_cols_transposes() {
         // 2x3 matrix; lane c = column c.
-        let m = vec![vec![1i8, 2, 3], vec![4, 5, 6]];
-        let f = SkewFeeder::from_cols(&m);
+        let m = Mat::from_vec(2, 3, vec![1i8, 2, 3, 4, 5, 6]);
+        let f = SkewFeeder::from_cols(m.view());
         assert_eq!(f.lanes(), 3);
         assert_eq!(f.at(0, 0), 1);
         assert_eq!(f.at(0, 1), 4);
@@ -161,12 +171,27 @@ mod tests {
 
     #[test]
     fn live_matches_at_window() {
-        let f = SkewFeeder::from_rows(&[vec![9i8; 4], vec![9i8; 4]]);
+        let m = Mat::filled(2, 4, 9i8);
+        let f = SkewFeeder::from_rows(m.view());
         for lane in 0..2 {
             for t in 0..8 {
                 assert_eq!(f.live(lane, t), t >= lane && t - lane < 4);
             }
         }
+    }
+
+    #[test]
+    fn padded_window_feeds_zeros_in_overhang() {
+        // a 4x4 window over a 2x2 parent: lanes 2..4 are pure padding,
+        // exactly what the nested-matrix extraction used to materialize
+        let m = Mat::from_vec(2, 2, vec![1i8, 2, 3, 4]);
+        let f = SkewFeeder::from_rows(m.window(0, 0, 4, 4));
+        assert_eq!(f.lanes(), 4);
+        assert_eq!(f.len(), 4);
+        assert_eq!(f.at(0, 0), 1);
+        assert_eq!(f.at(0, 2), 0, "col overhang");
+        assert_eq!(f.at(2, 2), 0, "row overhang");
+        assert!(f.live(3, 3), "padding lanes still carry the valid window");
     }
 
     #[test]
@@ -176,13 +201,6 @@ mod tests {
         assert!(!fc.complete());
         fc.absorb(&[Some(10), Some(20)]); // then row 0
         assert!(fc.complete());
-        assert_eq!(fc.c, vec![vec![10, 20], vec![30, 40]]);
-    }
-
-    #[test]
-    fn flip_element_targets_stream() {
-        let mut f = SkewFeeder::from_rows(&[vec![0i8, 0]]);
-        f.flip_element(0, 1, 3);
-        assert_eq!(f.at(0, 1), 8);
+        assert_eq!(fc.c, Mat::from_vec(2, 2, vec![10, 20, 30, 40]));
     }
 }

@@ -3,6 +3,13 @@
 //! compare-and-branch per cycle for fault injection — the ENFOR-SA
 //! alternative to per-assignment instrumentation.
 //!
+//! Operands cross the software↔RTL boundary as flat, stride-aware
+//! [`MatView`]s (see [`crate::mat`]): a DIM-padded tile of a layer's
+//! flat buffer is a zero-copy window, and the implicit zero padding of
+//! the view doubles as the zero-padded scratchpad read of the real
+//! frontend. No per-matmul operand allocation happens anywhere in this
+//! module; the only allocation is the returned result [`Mat`].
+//!
 //! Output-stationary schedule (the paper's configuration):
 //!
 //! 1. **Preload** (2*DIM-1 cycles): propagate asserted at the north edge
@@ -23,10 +30,7 @@ use super::adapters::{FlushCollector, SkewFeeder};
 use super::inject::{Fault, Injectable};
 use super::mesh::{MeshInputs, StepOutput};
 use crate::config::Dataflow;
-
-/// Matrix aliases used throughout the mesh layer (row-major vec-of-rows).
-pub type MatI8 = Vec<Vec<i8>>;
-pub type MatI32 = Vec<Vec<i32>>;
+use crate::mat::{Mat, MatView};
 
 /// Cycle count of one OS matmul on a DIM mesh with inner dimension K.
 pub fn os_matmul_cycles(dim: usize, k: usize) -> u64 {
@@ -49,7 +53,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
     }
 
     /// Golden (fault-free) matmul.
-    pub fn matmul(&mut self, a: &MatI8, b: &MatI8, d: &MatI32) -> MatI32 {
+    pub fn matmul(&mut self, a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Mat<i32> {
         self.run(a, b, d, None)
     }
 
@@ -57,15 +61,21 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
     /// (relative to the start of this matmul).
     pub fn matmul_with_fault(
         &mut self,
-        a: &MatI8,
-        b: &MatI8,
-        d: &MatI32,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
         fault: &Fault,
-    ) -> MatI32 {
+    ) -> Mat<i32> {
         self.run(a, b, d, Some(fault))
     }
 
-    fn run(&mut self, a: &MatI8, b: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+    fn run(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        fault: Option<&Fault>,
+    ) -> Mat<i32> {
         if let Some(f) = fault {
             self.mesh.arm(f);
         }
@@ -93,14 +103,19 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
     /// Output-stationary: A is DIM x K (weights), B is K x DIM
     /// (activations), D and C are DIM x DIM.
-    fn run_os(&mut self, a: &MatI8, b: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+    fn run_os(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        fault: Option<&Fault>,
+    ) -> Mat<i32> {
         let dim = self.mesh.dim();
-        let k = if a.is_empty() { 0 } else { a[0].len() };
-        assert_eq!(a.len(), dim, "A must have DIM rows");
-        assert!(a.iter().all(|r| r.len() == k), "ragged A");
-        assert_eq!(b.len(), k, "B must have K rows");
-        assert!(b.iter().all(|r| r.len() == dim), "B must have DIM cols");
-        assert_eq!(d.len(), dim, "D must be DIM x DIM");
+        let k = a.cols();
+        assert_eq!(a.rows(), dim, "A must have DIM rows");
+        assert_eq!(b.rows(), k, "B must have K rows");
+        assert_eq!(b.cols(), dim, "B must have DIM cols");
+        assert_eq!((d.rows(), d.cols()), (dim, dim), "D must be DIM x DIM");
 
         self.mesh.reset();
         let mut inp = MeshInputs::idle(dim);
@@ -113,7 +128,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             if p < dim {
                 for c in 0..dim {
                     inp.north_propag[c] = true;
-                    inp.north_d[c] = d[dim - 1 - p][c];
+                    inp.north_d[c] = d.at(dim - 1 - p, c);
                 }
             }
             self.maybe_inject(fault, t, &mut inp);
@@ -122,9 +137,10 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         }
 
         // Phase 2: compute. Row skew on A, column skew on B; valid rides
-        // with the activation stream.
-        let a_feed: SkewFeeder<i8> = SkewFeeder::from_rows(a);
-        let b_feed: SkewFeeder<i8> = SkewFeeder::from_cols(b);
+        // with the activation stream. The feeders read the operand views
+        // in place — zero copies.
+        let a_feed = SkewFeeder::from_rows(a);
+        let b_feed = SkewFeeder::from_cols(b);
         let compute_len = k + 2 * dim - 2;
         for tau in 0..compute_len {
             inp.clear();
@@ -170,12 +186,19 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
     /// Weight-stationary: B here is the stationary DIM x DIM weight tile,
     /// A is M x DIM (activations streaming), D is M x DIM (bias rows).
     /// Returns C = A . B + D (M x DIM).
-    fn run_ws(&mut self, a: &MatI8, w: &MatI8, d: &MatI32, fault: Option<&Fault>) -> MatI32 {
+    fn run_ws(
+        &mut self,
+        a: MatView<i8>,
+        w: MatView<i8>,
+        d: MatView<i32>,
+        fault: Option<&Fault>,
+    ) -> Mat<i32> {
         let dim = self.mesh.dim();
-        let m = a.len();
-        assert!(a.iter().all(|r| r.len() == dim), "A must have DIM cols");
-        assert_eq!(w.len(), dim, "W must be DIM x DIM");
-        assert_eq!(d.len(), m, "D must have M rows");
+        let m = a.rows();
+        assert_eq!(a.cols(), dim, "A must have DIM cols");
+        assert_eq!((w.rows(), w.cols()), (dim, dim), "W must be DIM x DIM");
+        assert_eq!(d.rows(), m, "D must have M rows");
+        assert_eq!(d.cols(), dim, "D must have DIM cols");
 
         self.mesh.reset();
         let mut inp = MeshInputs::idle(dim);
@@ -188,7 +211,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             if p < dim {
                 for c in 0..dim {
                     inp.north_propag[c] = true;
-                    inp.north_d[c] = w[dim - 1 - p][c] as i32;
+                    inp.north_d[c] = w.at(dim - 1 - p, c) as i32;
                 }
             }
             self.maybe_inject(fault, t, &mut inp);
@@ -198,10 +221,10 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
         // Phase 2: stream activations (columns of A with row skew) and
         // psum bias rows (columns of D with column skew at the top).
-        let a_feed: SkewFeeder<i8> = SkewFeeder::from_cols(a);
-        let d_feed: SkewFeeder<i32> = SkewFeeder::from_cols(d);
+        let a_feed = SkewFeeder::from_cols(a);
+        let d_feed = SkewFeeder::from_cols(d);
         let compute_len = m + 2 * dim - 2;
-        let mut c_out = vec![vec![0i32; dim]; m];
+        let mut c_out = Mat::zeros(m, dim);
         let mut taken = vec![0usize; dim];
         for tau in 0..compute_len {
             inp.clear();
@@ -218,7 +241,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             for cc in 0..dim {
                 if let Some(ps) = out.south_psum[cc] {
                     if taken[cc] < m {
-                        c_out[taken[cc]][cc] = ps;
+                        c_out.set(taken[cc], cc, ps);
                         taken[cc] += 1;
                     }
                 }
@@ -235,61 +258,28 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
 /// Reference tiled matmul over the mesh: decomposes an arbitrary
 /// (M x K) . (K x N) into DIM x DIM output tiles, each computed by one
-/// OS pass with the full K stream. Used by tests and by the whole-layer
-/// RTL offload ablation (DESIGN.md D3).
+/// OS pass with the full K stream. Each tile is a zero-copy, zero-padded
+/// window of the operand views; results splice back with one strided
+/// copy per tile. Used by tests and by the whole-layer RTL offload
+/// ablation (DESIGN.md D3).
 pub fn tiled_matmul_os<S: Injectable>(
     mesh: &mut S,
-    a: &MatI8,
-    b: &MatI8,
-    d: &MatI32,
-) -> MatI32 {
+    a: MatView<i8>,
+    b: MatView<i8>,
+    d: MatView<i32>,
+) -> Mat<i32> {
     let dim = mesh.dim();
-    let m = a.len();
-    let k = if m == 0 { 0 } else { a[0].len() };
-    let n = if b.is_empty() { 0 } else { b[0].len() };
-    let mut c = vec![vec![0i32; n]; m];
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
     let mut ti = 0;
     while ti < m {
         let mut tj = 0;
         while tj < n {
-            // Extract (and zero-pad) the operand tiles.
-            let a_tile: MatI8 = (0..dim)
-                .map(|r| {
-                    if ti + r < m {
-                        a[ti + r].clone()
-                    } else {
-                        vec![0; k]
-                    }
-                })
-                .collect();
-            let b_tile: MatI8 = (0..k)
-                .map(|r| {
-                    (0..dim)
-                        .map(|cc| if tj + cc < n { b[r][tj + cc] } else { 0 })
-                        .collect()
-                })
-                .collect();
-            let d_tile: MatI32 = (0..dim)
-                .map(|r| {
-                    (0..dim)
-                        .map(|cc| {
-                            if ti + r < m && tj + cc < n {
-                                d[ti + r][tj + cc]
-                            } else {
-                                0
-                            }
-                        })
-                        .collect()
-                })
-                .collect();
-            let c_tile = MatmulDriver::new(mesh).matmul(&a_tile, &b_tile, &d_tile);
-            for r in 0..dim {
-                for cc in 0..dim {
-                    if ti + r < m && tj + cc < n {
-                        c[ti + r][tj + cc] = c_tile[r][cc];
-                    }
-                }
-            }
+            let a_tile = a.sub(ti, 0, dim, k);
+            let b_tile = b.sub(0, tj, k, dim);
+            let d_tile = d.sub(ti, tj, dim, dim);
+            let c_tile = MatmulDriver::new(mesh).matmul(a_tile, b_tile, d_tile);
+            c.window_mut(ti, tj, dim, dim).splice_from(&c_tile);
             tj += dim;
         }
         ti += dim;
@@ -299,18 +289,16 @@ pub fn tiled_matmul_os<S: Injectable>(
 
 /// Pure-software golden matmul (the oracle for all mesh tests; the same
 /// arithmetic as the Pallas kernel's ref.py).
-pub fn gold_matmul(a: &MatI8, b: &MatI8, d: &MatI32) -> MatI32 {
-    let m = a.len();
-    let k = if m == 0 { 0 } else { a[0].len() };
-    let n = if b.is_empty() { 0 } else { b[0].len() };
-    let mut c = vec![vec![0i32; n]; m];
+pub fn gold_matmul(a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Mat<i32> {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
     for i in 0..m {
         for j in 0..n {
-            let mut acc = d[i][j];
+            let mut acc = d.at(i, j);
             for kk in 0..k {
-                acc = acc.wrapping_add(a[i][kk] as i32 * b[kk][j] as i32);
+                acc = acc.wrapping_add(a.at(i, kk) as i32 * b.at(kk, j) as i32);
             }
-            c[i][j] = acc;
+            c.set(i, j, acc);
         }
     }
     c
@@ -327,15 +315,11 @@ mod tests {
     fn os_identity_matmul() {
         let dim = 4;
         let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-        let eye: MatI8 = (0..dim)
-            .map(|r| (0..dim).map(|c| (r == c) as i8).collect())
-            .collect();
-        let b: MatI8 = (0..dim)
-            .map(|r| (0..dim).map(|c| (r * dim + c) as i8).collect())
-            .collect();
-        let d = vec![vec![0i32; dim]; dim];
-        let c = MatmulDriver::new(&mut mesh).matmul(&eye, &b, &d);
-        let want = gold_matmul(&eye, &b, &d);
+        let eye = Mat::from_fn(dim, dim, |r, c| (r == c) as i8);
+        let b = Mat::from_fn(dim, dim, |r, c| (r * dim + c) as i8);
+        let d = Mat::zeros(dim, dim);
+        let c = MatmulDriver::new(&mut mesh).matmul(eye.view(), b.view(), d.view());
+        let want = gold_matmul(eye.view(), b.view(), d.view());
         assert_eq!(c, want);
     }
 
@@ -347,8 +331,8 @@ mod tests {
             let a = rng.mat_i8(dim, k);
             let b = rng.mat_i8(k, dim);
             let d = rng.mat_i32(dim, dim, 1 << 12);
-            let c = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
-            assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+            let c = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
         }
     }
 
@@ -357,10 +341,10 @@ mod tests {
         let dim = 4;
         let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
         let mut rng = Rng::new(2);
-        let a = vec![vec![0i8; 4]; dim];
-        let b = vec![vec![0i8; dim]; 4];
+        let a = Mat::zeros(dim, 4);
+        let b = Mat::zeros(4, dim);
         let d = rng.mat_i32(dim, dim, 1000);
-        let c = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let c = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         assert_eq!(c, d);
     }
 
@@ -372,12 +356,32 @@ mod tests {
         let a1 = rng.mat_i8(dim, 6);
         let b1 = rng.mat_i8(6, dim);
         let d1 = rng.mat_i32(dim, dim, 100);
-        let c1a = MatmulDriver::new(&mut mesh).matmul(&a1, &b1, &d1);
+        let c1a = MatmulDriver::new(&mut mesh).matmul(a1.view(), b1.view(), d1.view());
         let a2 = rng.mat_i8(dim, 5);
         let b2 = rng.mat_i8(5, dim);
-        let _noise = MatmulDriver::new(&mut mesh).matmul(&a2, &b2, &d1);
-        let c1b = MatmulDriver::new(&mut mesh).matmul(&a1, &b1, &d1);
+        let _noise = MatmulDriver::new(&mut mesh).matmul(a2.view(), b2.view(), d1.view());
+        let c1b = MatmulDriver::new(&mut mesh).matmul(a1.view(), b1.view(), d1.view());
         assert_eq!(c1a, c1b);
+    }
+
+    #[test]
+    fn os_padded_window_operands_match_materialized() {
+        // the zero-copy path: running a DIM-padded *window* of a small
+        // operand must equal running the materialized padded tile
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(12);
+        let a_small = rng.mat_i8(3, 5); // fewer rows than DIM
+        let b_small = rng.mat_i8(5, 2); // fewer cols than DIM
+        let d_small = rng.mat_i32(3, 2, 100);
+        let a_win = a_small.window(0, 0, dim, 5);
+        let b_win = b_small.window(0, 0, 5, dim);
+        let d_win = d_small.window(0, 0, dim, dim);
+        let via_window = MatmulDriver::new(&mut mesh).matmul(a_win, b_win, d_win);
+        let (am, bm, dm) = (a_win.to_mat(), b_win.to_mat(), d_win.to_mat());
+        let via_mat = MatmulDriver::new(&mut mesh).matmul(am.view(), bm.view(), dm.view());
+        assert_eq!(via_window, via_mat);
+        assert_eq!(via_window, gold_matmul(am.view(), bm.view(), dm.view()));
     }
 
     #[test]
@@ -388,8 +392,8 @@ mod tests {
             let a = rng.mat_i8(m, dim);
             let w = rng.mat_i8(dim, dim);
             let d = rng.mat_i32(m, dim, 1 << 12);
-            let c = MatmulDriver::new(&mut mesh).matmul(&a, &w, &d);
-            assert_eq!(c, gold_matmul(&a, &w, &d), "dim={dim} m={m}");
+            let c = MatmulDriver::new(&mut mesh).matmul(a.view(), w.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), w.view(), d.view()), "dim={dim} m={m}");
         }
     }
 
@@ -401,8 +405,8 @@ mod tests {
             let a = rng.mat_i8(m, k);
             let b = rng.mat_i8(k, n);
             let d = rng.mat_i32(m, n, 500);
-            let c = tiled_matmul_os(&mut mesh, &a, &b, &d);
-            assert_eq!(c, gold_matmul(&a, &b, &d), "m={m} k={k} n={n}");
+            let c = tiled_matmul_os(&mut mesh, a.view(), b.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "m={m} k={k} n={n}");
         }
     }
 
@@ -414,12 +418,13 @@ mod tests {
         let mut rng = Rng::new(6);
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
-        let d = vec![vec![0i32; dim]; dim];
-        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let d = Mat::zeros(dim, dim);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         // Propag fault in the middle of the compute phase of PE(0,1).
         let cyc = (2 * dim - 1) as u64 + 3;
         let f = Fault::new(0, 1, SignalKind::Propag, 0, cyc);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_ne!(golden, faulty);
     }
 
@@ -431,13 +436,14 @@ mod tests {
         let mut rng = Rng::new(7);
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
-        let d = vec![vec![0i32; dim]; dim];
-        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let d = Mat::zeros(dim, dim);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         // A weight-path fault injected in the very first preload cycle:
         // the operand pipelines carry no live data yet, and the corrupted
         // stream element drains before compute => fully masked.
         let f = Fault::new(0, 3, SignalKind::Weight, 6, 0);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_eq!(golden, faulty);
     }
 
@@ -451,12 +457,13 @@ mod tests {
         let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
         let mut rng = Rng::new(8);
         let a = rng.mat_i8(dim, dim);
-        let b = vec![vec![0i8; dim]; dim];
+        let b = Mat::zeros(dim, dim);
         let d = rng.mat_i32(dim, dim, 100);
-        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         let cyc = (2 * dim - 1) as u64 + 2;
         let f = Fault::new(1, 1, SignalKind::Weight, 3, cyc);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_eq!(golden, faulty);
     }
 
@@ -469,7 +476,7 @@ mod tests {
         let a = rng.mat_i8(dim, k);
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         assert_eq!(mesh.cycle, os_matmul_cycles(dim, k));
     }
 }

@@ -301,8 +301,8 @@ mod tests {
             let a = rng.mat_i8(dim, k);
             let b = rng.mat_i8(k, dim);
             let d = rng.mat_i32(dim, dim, 1 << 10);
-            let c = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
-            assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+            let c = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
         }
     }
 
@@ -349,15 +349,16 @@ mod tests {
         let mut rng = Rng::new(22);
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
-        let d = vec![vec![0i32; dim]; dim];
+        let d = crate::mat::Mat::zeros(dim, dim);
         let mut mesh = InstrumentedMesh::new(dim);
-        let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         let cyc = (2 * dim - 1) as u64 + 2;
         let f = Fault::new(0, 0, SignalKind::Act, 6, cyc);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_ne!(golden, faulty);
         // disarm happened: a clean rerun matches golden again
-        let clean = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        let clean = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         assert_eq!(clean, golden);
     }
 }

@@ -14,7 +14,7 @@ pub mod inject;
 pub mod mesh;
 pub mod signal;
 
-pub use driver::{gold_matmul, tiled_matmul_os, MatI32, MatI8, MatmulDriver};
+pub use driver::{gold_matmul, tiled_matmul_os, MatmulDriver};
 pub use inject::{Fault, Injectable};
 pub use mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 pub use signal::{SignalAddr, SignalKind};

@@ -28,14 +28,14 @@ pub fn format_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> Stri
     };
     out.push_str(&line(&widths));
     out.push('|');
-    for (h, w) in headers.iter().zip(&widths) {
+    for (h, &w) in headers.iter().zip(&widths) {
         out.push_str(&format!(" {h:w$} |"));
     }
     out.push('\n');
     out.push_str(&line(&widths));
     for row in rows {
         out.push('|');
-        for (c, w) in row.iter().zip(&widths) {
+        for (c, &w) in row.iter().zip(&widths) {
             out.push_str(&format!(" {c:>w$} |"));
         }
         out.push('\n');

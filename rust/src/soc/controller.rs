@@ -12,6 +12,7 @@
 use super::core::RoccCmd;
 use super::dma::{Dma, DmaDir, MainMemory};
 use super::scratchpad::{AccMem, Scratchpad};
+use crate::mat::Mat;
 use crate::mesh::adapters::FlushCollector;
 use crate::mesh::inject::{Fault, Injectable};
 use crate::mesh::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
@@ -48,9 +49,10 @@ pub struct Controller {
     /// accmem row holding D (set by PRELOAD) and landing row for C.
     d_base: usize,
     c_base: usize,
-    /// ring buffers implementing the skew shift registers at the edges.
-    ring_a: Vec<Vec<i8>>,
-    ring_b: Vec<Vec<i8>>,
+    /// ring buffers implementing the skew shift registers at the edges
+    /// (flat DIM x DIM matrices; row = ring slot).
+    ring_a: Mat<i8>,
+    ring_b: Mat<i8>,
     /// mesh-relative cycle counter for the in-flight matmul.
     mesh_t: u64,
     /// optional armed fault (mesh-relative cycle).
@@ -73,8 +75,8 @@ impl Controller {
             b_base: 0,
             d_base: 0,
             c_base: 0,
-            ring_a: vec![vec![0; dim]; dim],
-            ring_b: vec![vec![0; dim]; dim],
+            ring_a: Mat::zeros(dim, dim),
+            ring_b: Mat::zeros(dim, dim),
             mesh_t: 0,
             fault: None,
             collector: None,
@@ -161,12 +163,8 @@ impl Controller {
                             self.mesh.reset();
                             self.mesh_t = 0;
                             self.collector = Some(FlushCollector::new(dim));
-                            for r in &mut self.ring_a {
-                                r.fill(0);
-                            }
-                            for r in &mut self.ring_b {
-                                r.fill(0);
-                            }
+                            self.ring_a.data_mut().fill(0);
+                            self.ring_b.data_mut().fill(0);
                             self.state = ExecState::Preload { p: 0 };
                         }
                         other => anyhow::bail!("unknown RoCC funct {other}"),
@@ -199,19 +197,19 @@ impl Controller {
                 if tau < k {
                     let (a_col, _s1) = spad.read_row(self.a_base + tau)?;
                     let (b_row, _s2) = spad.read_row(self.b_base + tau)?;
-                    self.ring_a[tau % dim].copy_from_slice(&a_col);
-                    self.ring_b[tau % dim].copy_from_slice(&b_row);
+                    self.ring_a.row_mut(tau % dim).copy_from_slice(&a_col);
+                    self.ring_b.row_mut(tau % dim).copy_from_slice(&b_row);
                 }
                 self.inp.clear();
                 for r in 0..dim {
                     // lane r sees stream element tau - r (skew registers)
                     if tau >= r && tau - r < k {
-                        self.inp.west_a[r] = self.ring_a[(tau - r) % dim][r];
+                        self.inp.west_a[r] = self.ring_a.at((tau - r) % dim, r);
                     }
                 }
                 for c in 0..dim {
                     if tau >= c && tau - c < k {
-                        self.inp.north_b[c] = self.ring_b[(tau - c) % dim][c];
+                        self.inp.north_b[c] = self.ring_b.at((tau - c) % dim, c);
                         self.inp.north_valid[c] = true;
                     }
                 }
@@ -238,7 +236,7 @@ impl Controller {
                     // land C into the accumulator memory
                     let col = self.collector.take().expect("flush without collector");
                     debug_assert!(col.complete());
-                    for (r, row) in col.c.iter().enumerate() {
+                    for (r, row) in col.c.row_iter().enumerate() {
                         accmem.write_row(self.c_base + r, row)?;
                     }
                     self.fault = None;
@@ -268,7 +266,7 @@ mod tests {
     use super::*;
 
     /// Drive the controller directly (no core) through one matmul.
-    fn run_matmul_direct(dim: usize, k: usize, seed: u64) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+    fn run_matmul_direct(dim: usize, k: usize, seed: u64) -> (Mat<i32>, Mat<i32>) {
         use crate::mesh::driver::gold_matmul;
         use crate::util::Rng;
         let mut rng = Rng::new(seed);
@@ -284,13 +282,13 @@ mod tests {
 
         // stage operands: spad rows [0..k) = A columns, [k..2k) = B rows
         for kk in 0..k {
-            let col: Vec<i8> = (0..dim).map(|r| a[r][kk]).collect();
+            let col: Vec<i8> = (0..dim).map(|r| a.at(r, kk)).collect();
             spad.write_row(kk, &col).unwrap();
-            spad.write_row(k + kk, &b[kk]).unwrap();
+            spad.write_row(k + kk, b.row(kk)).unwrap();
             spad.tick();
         }
         for r in 0..dim {
-            accmem.write_row(r, &d[r]).unwrap();
+            accmem.write_row(r, d.row(r)).unwrap();
         }
         ctrl.enqueue(RoccCmd { funct: funct::CONFIG, rs1: k as u64, rs2: 0 });
         ctrl.enqueue(RoccCmd { funct: funct::PRELOAD, rs1: 0, rs2: 16 });
@@ -302,10 +300,12 @@ mod tests {
             guard += 1;
             assert!(guard < 100_000);
         }
-        let c: Vec<Vec<i32>> = (0..dim)
-            .map(|r| accmem.read_row(16 + r).unwrap().to_vec())
-            .collect();
-        (c, gold_matmul(&a, &b, &d))
+        let mut c = Mat::zeros(dim, dim);
+        for r in 0..dim {
+            c.row_mut(r)
+                .copy_from_slice(accmem.read_row(16 + r).unwrap());
+        }
+        (c, gold_matmul(a.view(), b.view(), d.view()))
     }
 
     #[test]

@@ -13,7 +13,7 @@ use super::detail::UncoreDetail;
 use super::cache::Cache;
 use super::dma::{Dma, MainMemory};
 use super::scratchpad::{AccMem, Scratchpad};
-use crate::mesh::driver::{MatI32, MatI8};
+use crate::mat::{Mat, MatView};
 use crate::mesh::inject::Fault;
 use anyhow::Result;
 
@@ -141,30 +141,38 @@ impl Soc {
     /// compute (same addressing as the mesh-only wrapper).
     pub fn run_matmul(
         &mut self,
-        a: &MatI8,
-        b: &MatI8,
-        d: &MatI32,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
         fault: Option<Fault>,
-    ) -> Result<MatI32> {
+    ) -> Result<Mat<i32>> {
         let dim = self.dim();
-        let k = if a.is_empty() { 0 } else { a[0].len() };
-        anyhow::ensure!(a.len() == dim, "A must have DIM rows");
-        anyhow::ensure!(b.len() == k, "B must have K rows");
+        let k = a.cols();
+        anyhow::ensure!(a.rows() == dim, "A must have DIM rows");
+        anyhow::ensure!(b.rows() == k, "B must have K rows");
+        anyhow::ensure!(b.cols() == dim, "B must have DIM cols");
+        anyhow::ensure!((d.rows(), d.cols()) == (dim, dim), "D must be DIM x DIM");
         // the driver program runs from reset on every matmul
         self.core = Core::new();
 
         // Stage operands in main memory: A as K columns, then B as K rows.
+        // Views may be zero-padded windows, so stage element-wise through
+        // `at` (padding reads as zero, like a padded scratchpad line).
         let a_mem = 0x1000usize;
         let b_mem = a_mem + k * dim;
+        let mut row_buf = vec![0i8; dim];
         for kk in 0..k {
             for r in 0..dim {
-                self.mem.bytes[a_mem + kk * dim + r] = a[r][kk];
+                self.mem.bytes[a_mem + kk * dim + r] = a.at(r, kk);
             }
+            b.copy_row_into(kk, &mut row_buf);
             self.mem.bytes[b_mem + kk * dim..b_mem + (kk + 1) * dim]
-                .copy_from_slice(&b[kk]);
+                .copy_from_slice(&row_buf);
         }
+        let mut d_buf = vec![0i32; dim];
         for r in 0..dim {
-            self.accmem.write_row(r, &d[r])?;
+            d.copy_row_into(r, &mut d_buf);
+            self.accmem.write_row(r, &d_buf)?;
         }
         if let Some(f) = fault {
             self.ctrl.arm_fault(f);
@@ -200,9 +208,9 @@ impl Soc {
             guard += 1;
             anyhow::ensure!(guard < 10_000_000, "SoC run did not terminate");
         }
-        let mut c = Vec::with_capacity(dim);
+        let mut c = Mat::zeros(dim, dim);
         for r in 0..dim {
-            c.push(self.accmem.read_row(dim + r)?.to_vec());
+            c.row_mut(r).copy_from_slice(self.accmem.read_row(dim + r)?);
         }
         Ok(c)
     }
@@ -222,8 +230,8 @@ mod tests {
             let a = rng.mat_i8(dim, k);
             let b = rng.mat_i8(k, dim);
             let d = rng.mat_i32(dim, dim, 1000);
-            let c = soc.run_matmul(&a, &b, &d, None).unwrap();
-            assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+            let c = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+            assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
         }
     }
 
@@ -237,7 +245,7 @@ mod tests {
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        soc.run_matmul(&a, &b, &d, None).unwrap();
+        soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
         let mesh_only = crate::mesh::driver::os_matmul_cycles(dim, dim);
         assert!(
             soc.cycles > 2 * mesh_only,
@@ -262,10 +270,14 @@ mod tests {
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        let golden = Soc::new(dim).run_matmul(&a, &b, &d, None).unwrap();
+        let golden = Soc::new(dim)
+            .run_matmul(a.view(), b.view(), d.view(), None)
+            .unwrap();
         let cyc = (2 * dim - 1) as u64 + 3; // mid-compute
         let f = Fault::new(0, 0, SignalKind::Acc, 20, cyc);
-        let faulty = Soc::new(dim).run_matmul(&a, &b, &d, Some(f)).unwrap();
+        let faulty = Soc::new(dim)
+            .run_matmul(a.view(), b.view(), d.view(), Some(f))
+            .unwrap();
         assert_ne!(golden, faulty);
     }
 }

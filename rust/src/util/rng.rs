@@ -103,22 +103,18 @@ impl Rng {
         }
     }
 
-    /// Random i8 matrix (row-major vec-of-vecs, mesh driver layout).
-    pub fn mat_i8(&mut self, rows: usize, cols: usize) -> Vec<Vec<i8>> {
-        (0..rows)
-            .map(|_| (0..cols).map(|_| self.i8()).collect())
-            .collect()
+    /// Random i8 matrix (flat row-major [`Mat`], the mesh driver layout).
+    /// Draws in row-major order, so the value sequence is identical to
+    /// the old nested-matrix fill for any fixed seed.
+    pub fn mat_i8(&mut self, rows: usize, cols: usize) -> crate::mat::Mat<i8> {
+        let mut m = crate::mat::Mat::zeros(rows, cols);
+        self.fill_i8(m.data_mut());
+        m
     }
 
     /// Random i32 matrix bounded to `|v| < span`.
-    pub fn mat_i32(&mut self, rows: usize, cols: usize, span: i32) -> Vec<Vec<i32>> {
-        (0..rows)
-            .map(|_| {
-                (0..cols)
-                    .map(|_| (self.below(2 * span as u64) as i32) - span)
-                    .collect()
-            })
-            .collect()
+    pub fn mat_i32(&mut self, rows: usize, cols: usize, span: i32) -> crate::mat::Mat<i32> {
+        crate::mat::Mat::from_fn(rows, cols, |_, _| (self.below(2 * span as u64) as i32) - span)
     }
 }
 

@@ -2,6 +2,7 @@
 //! masking properties, and the fault model's structural behaviours.
 
 use enfor_sa::config::Dataflow;
+use enfor_sa::mat::Mat;
 use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, tiled_matmul_os, MatmulDriver};
 use enfor_sa::mesh::{Fault, Mesh, MeshSim, SignalKind};
 use enfor_sa::util::Rng;
@@ -17,8 +18,8 @@ fn os_matmul_fuzz_many_shapes() {
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 1 << 14);
         assert_eq!(
-            MatmulDriver::new(&mut mesh).matmul(&a, &b, &d),
-            gold_matmul(&a, &b, &d),
+            MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view()),
+            gold_matmul(a.view(), b.view(), d.view()),
             "dim={dim} k={k}"
         );
     }
@@ -35,8 +36,8 @@ fn ws_matmul_fuzz_many_shapes() {
         let w = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(m, dim, 1 << 14);
         assert_eq!(
-            MatmulDriver::new(&mut mesh).matmul(&a, &w, &d),
-            gold_matmul(&a, &w, &d),
+            MatmulDriver::new(&mut mesh).matmul(a.view(), w.view(), d.view()),
+            gold_matmul(a.view(), w.view(), d.view()),
             "dim={dim} m={m}"
         );
     }
@@ -52,8 +53,8 @@ fn os_and_ws_agree_on_square_problems() {
         let d = rng.mat_i32(dim, dim, 100);
         let mut os = Mesh::new(dim, Dataflow::OutputStationary);
         let mut ws = Mesh::new(dim, Dataflow::WeightStationary);
-        let c_os = MatmulDriver::new(&mut os).matmul(&a, &b, &d);
-        let c_ws = MatmulDriver::new(&mut ws).matmul(&a, &b, &d);
+        let c_os = MatmulDriver::new(&mut os).matmul(a.view(), b.view(), d.view());
+        let c_ws = MatmulDriver::new(&mut ws).matmul(a.view(), b.view(), d.view());
         assert_eq!(c_os, c_ws);
     }
 }
@@ -70,8 +71,8 @@ fn tiled_matmul_fuzz() {
         let b = rng.mat_i8(k, n);
         let d = rng.mat_i32(m, n, 1000);
         assert_eq!(
-            tiled_matmul_os(&mut mesh, &a, &b, &d),
-            gold_matmul(&a, &b, &d),
+            tiled_matmul_os(&mut mesh, a.view(), b.view(), d.view()),
+            gold_matmul(a.view(), b.view(), d.view()),
             "m={m} k={k} n={n}"
         );
     }
@@ -84,18 +85,17 @@ fn every_signal_kind_can_corrupt_an_output() {
     let dim = 4;
     let mut rng = Rng::new(0x0505);
     let a = rng.mat_i8(dim, dim);
-    let b: Vec<Vec<i8>> = (0..dim)
-        .map(|_| (0..dim).map(|_| rng.i8().max(1)).collect())
-        .collect();
+    let b = Mat::from_fn(dim, dim, |_, _| rng.i8().max(1));
     let d = rng.mat_i32(dim, dim, 50);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     for kind in SignalKind::ALL {
         let mut hit = false;
         'outer: for cycle in 0..os_matmul_cycles(dim, dim) {
             for bit in 0..kind.width().min(8) {
                 let f = Fault::new(1, 1, kind, bit, cycle);
-                let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+                let faulty = MatmulDriver::new(&mut mesh)
+                    .matmul_with_fault(a.view(), b.view(), d.view(), &f);
                 if faulty != golden {
                     hit = true;
                     break 'outer;
@@ -115,12 +115,12 @@ fn fault_free_rerun_after_fault_is_clean() {
     let a = rng.mat_i8(dim, dim);
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 100);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     for kind in SignalKind::ALL {
         let f = Fault::new(2, 3, kind, 0, 10);
-        let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_eq!(
-            MatmulDriver::new(&mut mesh).matmul(&a, &b, &d),
+            MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view()),
             golden,
             "state leaked after {kind} fault"
         );
@@ -134,17 +134,16 @@ fn weight_fault_row_locality() {
     let dim = 4;
     let mut rng = Rng::new(0x0507);
     let a = rng.mat_i8(dim, dim);
-    let b: Vec<Vec<i8>> = (0..dim)
-        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
-        .collect();
+    let b = Mat::from_fn(dim, dim, |_, _| rng.i8() | 1);
     let d = rng.mat_i32(dim, dim, 10);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     let mut corrupted_rows = std::collections::BTreeSet::new();
     for cycle in 0..os_matmul_cycles(dim, dim) {
         let f = Fault::new(2, 1, SignalKind::Weight, 5, cycle);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
-        for (r, (fr, gr)) in faulty.iter().zip(&golden).enumerate() {
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
+        for (r, (fr, gr)) in faulty.row_iter().zip(golden.row_iter()).enumerate() {
             if fr != gr {
                 corrupted_rows.insert(r);
             }
@@ -164,20 +163,19 @@ fn act_fault_column_locality() {
     // output column c.
     let dim = 4;
     let mut rng = Rng::new(0x0508);
-    let a: Vec<Vec<i8>> = (0..dim)
-        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
-        .collect();
+    let a = Mat::from_fn(dim, dim, |_, _| rng.i8() | 1);
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     let mut corrupted_cols = std::collections::BTreeSet::new();
     for cycle in 0..os_matmul_cycles(dim, dim) {
         let f = Fault::new(1, 2, SignalKind::Act, 5, cycle);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         for r in 0..dim {
             for c in 0..dim {
-                if faulty[r][c] != golden[r][c] {
+                if faulty[(r, c)] != golden[(r, c)] {
                     corrupted_cols.insert(c);
                 }
             }
@@ -198,20 +196,19 @@ fn single_bit_hw_fault_can_produce_multibit_sw_error() {
     let dim = 4;
     let mut rng = Rng::new(0x0509);
     let a = rng.mat_i8(dim, dim);
-    let b: Vec<Vec<i8>> = (0..dim)
-        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
-        .collect();
+    let b = Mat::from_fn(dim, dim, |_, _| rng.i8() | 1);
     let d = rng.mat_i32(dim, dim, 10);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     // a propag fault mid-compute hijacks the whole column below
     let f = Fault::new(0, 1, SignalKind::Propag, 0, (2 * dim) as u64 + 2);
-    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &f);
-    let diffs: usize = faulty
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
+    let diffs = faulty
+        .data()
         .iter()
-        .zip(&golden)
-        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
-        .sum();
+        .zip(golden.data())
+        .filter(|(x, y)| x != y)
+        .count();
     assert!(
         diffs > 1,
         "a single control-bit flip must corrupt multiple outputs, got {diffs}"
@@ -226,7 +223,7 @@ fn cycle_accounting_matches_formula_across_dims() {
         let a = rng.mat_i8(dim, k);
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+        MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
         assert_eq!(mesh.cycle(), os_matmul_cycles(dim, k));
     }
 }
@@ -240,37 +237,39 @@ fn stuck_at_fault_corrupts_persistently() {
     let dim = 4;
     let mut rng = Rng::new(0x57AC);
     let a = rng.mat_i8(dim, 12);
-    let b: Vec<Vec<i8>> = (0..12)
-        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
-        .collect();
+    let b = Mat::from_fn(12, dim, |_, _| rng.i8() | 1);
     let d = rng.mat_i32(dim, dim, 10);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
 
     let sa = Fault::stuck_at(1, 1, SignalKind::Weight, 6, true, 0);
     assert_eq!(sa.persistence, Persistence::StuckAt(true));
     assert!(sa.fires_at(0) && sa.fires_at(100));
-    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &sa);
     // row 1 outputs east of column 0 must be corrupted
-    let row_diffs = faulty[1]
+    let row_diffs = faulty
+        .row(1)
         .iter()
-        .zip(&golden[1])
+        .zip(golden.row(1))
         .filter(|(x, y)| x != y)
         .count();
     assert!(row_diffs >= 2, "stuck-at weight bit corrupted {row_diffs} outputs");
     // transient at one cycle corrupts no more than the stuck-at does
     let tr = Fault::new(1, 1, SignalKind::Weight, 6, (2 * dim) as u64 + 2);
-    let faulty_tr = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &tr);
-    let tr_diffs: usize = faulty_tr
+    let faulty_tr =
+        MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &tr);
+    let tr_diffs = faulty_tr
+        .data()
         .iter()
-        .zip(&golden)
-        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
-        .sum();
-    let sa_diffs: usize = faulty
+        .zip(golden.data())
+        .filter(|(x, y)| x != y)
+        .count();
+    let sa_diffs = faulty
+        .data()
         .iter()
-        .zip(&golden)
-        .map(|(fr, gr)| fr.iter().zip(gr).filter(|(x, y)| x != y).count())
-        .sum();
+        .zip(golden.data())
+        .filter(|(x, y)| x != y)
+        .count();
     assert!(sa_diffs >= tr_diffs);
 }
 
@@ -278,13 +277,13 @@ fn stuck_at_fault_corrupts_persistently() {
 fn stuck_at_zero_on_zero_bit_is_masked() {
     // forcing a bit to the value it already has must be invisible
     let dim = 4;
-    let a = vec![vec![0i8; dim]; dim];
-    let b = vec![vec![0i8; dim]; dim];
-    let d = vec![vec![0i32; dim]; dim];
+    let a: Mat<i8> = Mat::zeros(dim, dim);
+    let b: Mat<i8> = Mat::zeros(dim, dim);
+    let d: Mat<i32> = Mat::zeros(dim, dim);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     let sa = Fault::stuck_at(2, 2, SignalKind::Acc, 5, false, 0);
-    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
+    let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &sa);
     assert_eq!(golden, faulty);
 }
 
@@ -296,8 +295,11 @@ fn stuck_at_no_state_leak_after_disarm() {
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     let sa = Fault::stuck_at(0, 0, SignalKind::Acc, 30, true, 0);
-    let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &sa);
-    assert_eq!(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d), golden);
+    let _ = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &sa);
+    assert_eq!(
+        MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view()),
+        golden
+    );
 }

@@ -71,14 +71,10 @@ fn pjrt_gemm_matches_mesh_rtl() {
     let a2 = rng.mat_i8(n, n);
     let b2 = rng.mat_i8(n, n);
     let d2 = rng.mat_i32(n, n, 100);
-    let a: Vec<i8> = a2.iter().flatten().copied().collect();
-    let b: Vec<i8> = b2.iter().flatten().copied().collect();
-    let d: Vec<i32> = d2.iter().flatten().copied().collect();
-    let pjrt = rt.gemm(n, n, n, &a, &b, &d).unwrap();
+    let pjrt = rt.gemm(n, n, n, a2.data(), b2.data(), d2.data()).unwrap();
     let mut mesh = Mesh::new(n, Dataflow::OutputStationary);
-    let rtl = MatmulDriver::new(&mut mesh).matmul(&a2, &b2, &d2);
-    let rtl_flat: Vec<i32> = rtl.into_iter().flatten().collect();
-    assert_eq!(pjrt, rtl_flat);
+    let rtl = MatmulDriver::new(&mut mesh).matmul(a2.view(), b2.view(), d2.view());
+    assert_eq!(pjrt, rtl.into_vec());
 }
 
 #[test]

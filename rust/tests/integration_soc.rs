@@ -18,8 +18,8 @@ fn soc_matmul_fuzz_matches_gold() {
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 500);
         let mut soc = Soc::new(dim);
-        let c = soc.run_matmul(&a, &b, &d, None).unwrap();
-        assert_eq!(c, gold_matmul(&a, &b, &d), "dim={dim} k={k}");
+        let c = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+        assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
     }
 }
 
@@ -38,9 +38,12 @@ fn soc_and_mesh_agree_on_identical_faults() {
         for cycle in [1u64, 9, 15, os_matmul_cycles(dim, k) - 2] {
             let fault = Fault::new(1, 2, kind, 0, cycle);
             let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-            let c_mesh = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+            let c_mesh = MatmulDriver::new(&mut mesh)
+                .matmul_with_fault(a.view(), b.view(), d.view(), &fault);
             let mut soc = Soc::new(dim);
-            let c_soc = soc.run_matmul(&a, &b, &d, Some(fault)).unwrap();
+            let c_soc = soc
+                .run_matmul(a.view(), b.view(), d.view(), Some(fault))
+                .unwrap();
             assert_eq!(c_mesh, c_soc, "{fault} diverged between backends");
         }
     }
@@ -54,12 +57,30 @@ fn soc_reuse_across_matmuls_is_clean() {
     let a = rng.mat_i8(dim, dim);
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 100);
-    let c1 = soc.run_matmul(&a, &b, &d, None).unwrap();
+    let c1 = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
     // a faulty run in between must not poison later runs
     let f = Fault::new(0, 0, SignalKind::Acc, 25, 10);
-    let _ = soc.run_matmul(&a, &b, &d, Some(f)).unwrap();
-    let c2 = soc.run_matmul(&a, &b, &d, None).unwrap();
+    let _ = soc.run_matmul(a.view(), b.view(), d.view(), Some(f)).unwrap();
+    let c2 = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
     assert_eq!(c1, c2);
+}
+
+#[test]
+fn soc_accepts_zero_padded_window_operands() {
+    // the campaign hands the SoC zero-copy padded windows; they must
+    // behave exactly like materialized padded tiles
+    let mut rng = Rng::new(0x50C6);
+    let dim = 4;
+    let k = 5;
+    let a_small = rng.mat_i8(3, k); // fewer rows than DIM
+    let b = rng.mat_i8(k, dim);
+    let d_small = rng.mat_i32(3, dim, 100);
+    let a_win = a_small.window(0, 0, dim, k);
+    let d_win = d_small.window(0, 0, dim, dim);
+    let mut soc = Soc::new(dim);
+    let c = soc.run_matmul(a_win, b.view(), d_win, None).unwrap();
+    let (am, dm) = (a_win.to_mat(), d_win.to_mat());
+    assert_eq!(c, gold_matmul(am.view(), b.view(), dm.view()));
 }
 
 #[test]
@@ -71,7 +92,7 @@ fn soc_cycles_scale_beyond_mesh_cycles() {
     let b = rng.mat_i8(k, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut soc = Soc::new(dim);
-    soc.run_matmul(&a, &b, &d, None).unwrap();
+    soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
     let mesh_cycles = os_matmul_cycles(dim, k);
     assert!(
         soc.cycles > 2 * mesh_cycles,
@@ -106,6 +127,6 @@ fn icache_warms_up() {
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut soc = Soc::new(dim);
-    soc.run_matmul(&a, &b, &d, None).unwrap();
+    soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
     assert!(soc.icache.hits > soc.icache.misses, "icache must mostly hit");
 }

@@ -1,0 +1,186 @@
+//! Property tests for the flat-matrix layer (`enfor_sa::mat`): the
+//! stride-aware, zero-padded `MatView` must agree exactly with the old
+//! nested-matrix (`Vec<Vec<T>>`) tile extraction it replaced, for random
+//! shapes, offsets and out-of-bounds overhang.
+//!
+//! The offline environment has no proptest crate, so properties are
+//! checked over seeded random sweeps with the crate's deterministic RNG;
+//! each case asserts with enough context to reproduce directly.
+
+use enfor_sa::mat::{Mat, MatView, MatViewMut};
+use enfor_sa::util::Rng;
+
+/// The nested-matrix extraction the `mesh`/`campaign` layers used before
+/// the flat refactor: window `(r0, c0, rows, cols)` of `src`, zero-padded
+/// outside the parent bounds.
+fn nested_extract(src: &[Vec<i32>], r0: usize, c0: usize, rows: usize, cols: usize) -> Vec<Vec<i32>> {
+    (0..rows)
+        .map(|r| {
+            (0..cols)
+                .map(|c| {
+                    src.get(r0 + r)
+                        .and_then(|row| row.get(c0 + c))
+                        .copied()
+                        .unwrap_or(0)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn random_parent(rng: &mut Rng, rows: usize, cols: usize) -> (Mat<i32>, Vec<Vec<i32>>) {
+    let flat = rng.mat_i32(rows, cols, 1 << 20);
+    let nested: Vec<Vec<i32>> = (0..rows).map(|r| flat.row(r).to_vec()).collect();
+    (flat, nested)
+}
+
+#[test]
+fn prop_window_matches_nested_extraction() {
+    let mut rng = Rng::new(0x3A7_001);
+    for case in 0..500 {
+        let rows = 1 + rng.usize_below(24);
+        let cols = 1 + rng.usize_below(24);
+        let (flat, nested) = random_parent(&mut rng, rows, cols);
+        // offsets beyond the parent and window sizes with overhang
+        let r0 = rng.usize_below(rows + 6);
+        let c0 = rng.usize_below(cols + 6);
+        let wr = 1 + rng.usize_below(16);
+        let wc = 1 + rng.usize_below(16);
+        let want = nested_extract(&nested, r0, c0, wr, wc);
+        let view = flat.window(r0, c0, wr, wc);
+        assert_eq!((view.rows(), view.cols()), (wr, wc));
+        for r in 0..wr {
+            for c in 0..wc {
+                assert_eq!(
+                    view.at(r, c),
+                    want[r][c],
+                    "case {case}: parent {rows}x{cols}, window {wr}x{wc} at ({r0},{c0}), cell ({r},{c})"
+                );
+            }
+        }
+        // materialization agrees cell-for-cell too
+        let mat = view.to_mat();
+        for r in 0..wr {
+            assert_eq!(mat.row(r), &want[r][..], "case {case} row {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_subview_composes_like_double_extraction() {
+    // sub() of a window must equal extracting from the already-padded
+    // nested extraction — padding composes.
+    let mut rng = Rng::new(0x3A7_002);
+    for case in 0..300 {
+        let rows = 1 + rng.usize_below(16);
+        let cols = 1 + rng.usize_below(16);
+        let (flat, nested) = random_parent(&mut rng, rows, cols);
+        let r0 = rng.usize_below(rows + 3);
+        let c0 = rng.usize_below(cols + 3);
+        let (wr, wc) = (1 + rng.usize_below(12), 1 + rng.usize_below(12));
+        let r1 = rng.usize_below(wr + 2);
+        let c1 = rng.usize_below(wc + 2);
+        let (sr, sc) = (1 + rng.usize_below(8), 1 + rng.usize_below(8));
+
+        let outer_nested = nested_extract(&nested, r0, c0, wr, wc);
+        let want = nested_extract(&outer_nested, r1, c1, sr, sc);
+
+        let sub = flat.window(r0, c0, wr, wc).sub(r1, c1, sr, sc);
+        for r in 0..sr {
+            for c in 0..sc {
+                assert_eq!(
+                    sub.at(r, c),
+                    want[r][c],
+                    "case {case}: sub ({sr}x{sc})@({r1},{c1}) of window ({wr}x{wc})@({r0},{c0})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_full_view_of_flat_slice_matches_mat() {
+    let mut rng = Rng::new(0x3A7_003);
+    for _ in 0..100 {
+        let rows = 1 + rng.usize_below(12);
+        let cols = 1 + rng.usize_below(12);
+        let m = rng.mat_i32(rows, cols, 1000);
+        // viewing the raw flat buffer reproduces the owning matrix
+        let v = MatView::full(m.data(), rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(v.at(r, c), m[(r, c)]);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_splice_is_inverse_of_window_read() {
+    // writing a tile through MatViewMut then reading it back through a
+    // window returns the in-bounds part of the tile unchanged, and
+    // leaves every cell outside the window untouched.
+    let mut rng = Rng::new(0x3A7_004);
+    for case in 0..300 {
+        let rows = 1 + rng.usize_below(16);
+        let cols = 1 + rng.usize_below(16);
+        let mut dst = rng.mat_i32(rows, cols, 1000);
+        let before = dst.clone();
+        let r0 = rng.usize_below(rows + 3);
+        let c0 = rng.usize_below(cols + 3);
+        let t = 1 + rng.usize_below(8);
+        let tile = rng.mat_i32(t, t, 1000);
+
+        dst.window_mut(r0, c0, t, t).splice_from(&tile);
+
+        for r in 0..rows {
+            for c in 0..cols {
+                let inside =
+                    r >= r0 && r < r0 + t && c >= c0 && c < c0 + t;
+                let want = if inside {
+                    tile[(r - r0, c - c0)]
+                } else {
+                    before[(r, c)]
+                };
+                assert_eq!(dst[(r, c)], want, "case {case}: cell ({r},{c})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_splice_change_flag_detects_exposure() {
+    // the campaign runner uses the splice return value as its
+    // fault-exposed signal: true iff an in-bounds cell changed
+    let mut rng = Rng::new(0x3A7_005);
+    for _ in 0..200 {
+        let n = 2 + rng.usize_below(10);
+        let dst = rng.mat_i32(n, n, 1000);
+        let r0 = rng.usize_below(n);
+        let c0 = rng.usize_below(n);
+        let t = 1 + rng.usize_below(6);
+
+        // splicing back exactly what the window reads: no change
+        let same = dst.window(r0, c0, t, t).to_mat();
+        let mut d1 = dst.clone();
+        assert!(!d1.window_mut(r0, c0, t, t).splice_from(&same));
+
+        // flip one in-bounds cell: change must be reported
+        let mut tile = same.clone();
+        tile[(0, 0)] ^= 1; // (r0, c0) is always in bounds here
+        let mut d2 = dst.clone();
+        assert!(d2.window_mut(r0, c0, t, t).splice_from(&tile));
+        assert_eq!(d2[(r0, c0)], dst[(r0, c0)] ^ 1);
+    }
+}
+
+#[test]
+fn prop_mutable_window_fully_outside_is_noop() {
+    let mut rng = Rng::new(0x3A7_006);
+    let mut m = rng.mat_i32(4, 4, 100);
+    let before = m.clone();
+    let tile = rng.mat_i32(3, 3, 100);
+    let changed = MatViewMut::window(m.data_mut(), 4, 4, 4, 9, 9, 3, 3).splice_from(&tile);
+    assert!(!changed);
+    assert_eq!(m, before);
+}

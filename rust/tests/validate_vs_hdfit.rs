@@ -5,20 +5,21 @@
 
 use enfor_sa::campaign::sample_mesh_fault;
 use enfor_sa::config::Dataflow;
+use enfor_sa::mat::Mat;
 use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
 use enfor_sa::mesh::hdfit::InstrumentedMesh;
 use enfor_sa::mesh::{Fault, Mesh, SignalKind};
 use enfor_sa::util::Rng;
 
-fn both_backends(dim: usize, k: usize, seed: u64, fault: &Fault) -> (Vec<Vec<i32>>, Vec<Vec<i32>>) {
+fn both_backends(dim: usize, k: usize, seed: u64, fault: &Fault) -> (Mat<i32>, Mat<i32>) {
     let mut rng = Rng::new(seed);
     let a = rng.mat_i8(dim, k);
     let b = rng.mat_i8(k, dim);
     let d = rng.mat_i32(dim, dim, 1000);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
     let mut hm = InstrumentedMesh::new(dim);
-    let c1 = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, fault);
-    let c2 = MatmulDriver::new(&mut hm).matmul_with_fault(&a, &b, &d, fault);
+    let c1 = MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), fault);
+    let c2 = MatmulDriver::new(&mut hm).matmul_with_fault(a.view(), b.view(), d.view(), fault);
     (c1, c2)
 }
 
@@ -64,11 +65,17 @@ fn fault_free_runs_match_software_gold() {
         let a = rng.mat_i8(dim, k);
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 1000);
-        let gold = gold_matmul(&a, &b, &d);
+        let gold = gold_matmul(a.view(), b.view(), d.view());
         let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
         let mut hm = InstrumentedMesh::new(dim);
-        assert_eq!(MatmulDriver::new(&mut mesh).matmul(&a, &b, &d), gold);
-        assert_eq!(MatmulDriver::new(&mut hm).matmul(&a, &b, &d), gold);
+        assert_eq!(
+            MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view()),
+            gold
+        );
+        assert_eq!(
+            MatmulDriver::new(&mut hm).matmul(a.view(), b.view(), d.view()),
+            gold
+        );
     }
 }
 
@@ -80,17 +87,16 @@ fn injected_faults_do_corrupt_sometimes() {
     let dim = 8;
     let k = 8;
     let a = rng.mat_i8(dim, k);
-    let b: Vec<Vec<i8>> = (0..k)
-        .map(|_| (0..dim).map(|_| rng.i8() | 1).collect())
-        .collect();
+    let b = Mat::from_fn(k, dim, |_, _| rng.i8() | 1);
     let d = rng.mat_i32(dim, dim, 100);
     let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    let golden = MatmulDriver::new(&mut mesh).matmul(&a, &b, &d);
+    let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
     let mut corrupted = 0;
     let reps = 200;
     for _ in 0..reps {
         let fault = sample_mesh_fault(dim, k, &mut rng, &[]);
-        let faulty = MatmulDriver::new(&mut mesh).matmul_with_fault(&a, &b, &d, &fault);
+        let faulty =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &fault);
         if faulty != golden {
             corrupted += 1;
         }
@@ -112,7 +118,7 @@ fn hdfit_pays_per_assignment_bookkeeping() {
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let before = hm.hook_calls;
-    MatmulDriver::new(&mut hm).matmul(&a, &b, &d);
+    MatmulDriver::new(&mut hm).matmul(a.view(), b.view(), d.view());
     let calls = hm.hook_calls - before;
     let cycles = os_matmul_cycles(dim, dim);
     assert_eq!(calls, cycles * (dim * dim) as u64 * 12);
