@@ -46,37 +46,45 @@ fn main() {
         "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, DIM8 OS)"
     );
     println!(
-        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8}",
-        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF"
+        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9}",
+        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s", "resume-x"
     );
     let rows = injection_table(&names, &mesh_cfg, &cc).expect("campaigns");
     for r in &rows {
         println!(
-            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}%",
+            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x",
             r.model,
             human_time(r.sw.wall.as_secs_f64()),
             human_time(r.rtl.wall.as_secs_f64()),
             r.slowdown_pct(),
             r.pvf_pct(),
-            r.avf_pct()
+            r.avf_pct(),
+            r.trials_per_sec(),
+            r.resume_speedup_vs_full_forward()
         );
     }
     let n = rows.len() as f64;
     println!(
-        "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%",
+        "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x",
         rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.avf_pct()).sum::<f64>() / n,
+        rows.iter()
+            .map(|r| r.resume_speedup_vs_full_forward())
+            .sum::<f64>()
+            / n,
     );
     for r in &rows {
         println!(
-            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4}",
+            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4}",
             r.model,
             r.sw.wall.as_secs_f64(),
             r.rtl.wall.as_secs_f64(),
             r.slowdown_pct(),
             r.pvf_pct(),
-            r.avf_pct()
+            r.avf_pct(),
+            r.trials_per_sec(),
+            r.resume_speedup_vs_full_forward()
         );
     }
     if let Ok(path) = std::env::var("BENCH_OUT") {

@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example vit_attention -- --faults 100`
 
 use enfor_sa::campaign::run_campaign;
-use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
 use enfor_sa::coordinator::Args;
 use enfor_sa::dnn::engine::synthetic_input;
 use enfor_sa::dnn::models;
@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
             inputs,
             backend: Backend::EnforSa,
             offload_scope: OffloadScope::SingleTile,
+            engine: TrialEngine::SiteResume,
             signals: vec![],
             workers: 1,
         };

@@ -4,16 +4,40 @@
 //! classifies each trial (masked / exposed / critical) and accumulates
 //! AVF (RTL backends) or PVF (software-only backend) with wall-clock
 //! accounting for the Table VI timing comparison.
+//!
+//! # The site-resume trial engine
+//!
+//! The trial loop is **site-major with per-site batches**: per input,
+//! one golden pass records an activation checkpoint per top-level layer
+//! ([`Model::forward_checkpointed`]), then all `faults_per_layer`
+//! trials of a site run back-to-back against the same checkpoint, the
+//! same persistent simulator and the same scratch result tile. Each
+//! trial replays only the faulty layer ([`Model::forward_layers`]); if
+//! the splice change-flag reports the fault hardware-masked, the
+//! downstream recompute is skipped entirely (logits := golden logits —
+//! the masked invariant), otherwise only the *downstream* layers run.
+//! The legacy whole-network path stays available as
+//! [`TrialEngine::FullForward`] and is the bit-exactness oracle: both
+//! engines produce identical trials / critical / exposed counts and
+//! per-layer maps for a fixed seed (pinned by
+//! `rust/tests/prop_resume.rs`).
+//!
+//! Sampling is split from execution: [`plan_one`] pre-draws every
+//! trial of an input in the canonical RNG order (input tensor first,
+//! then trials site-major), so execution order no longer touches the
+//! RNG and the coordinator can shard work at `(input, site)`
+//! granularity while staying bit-identical per `(seed, input_idx)`.
 
 use super::fault::{sample_trial, TrialFault};
 use super::runner::{CrossLayerRunner, TileBackend};
-use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
+use crate::dnn::engine::probe_input;
 use crate::dnn::engine::synthetic_input;
-use crate::dnn::{argmax, GemmSiteInfo, Model};
+use crate::dnn::{argmax, ActivationCheckpoints, GemmSiteInfo, Model, TensorI8};
 use crate::mesh::hdfit::InstrumentedMesh;
 use crate::mesh::{Mesh, SignalKind};
 use crate::soc::Soc;
-use crate::swfi::{sample_output_fault, SwInjector};
+use crate::swfi::{sample_output_fault, SwInjector, SwTarget};
 use crate::util::stats::VulnEstimate;
 use crate::util::Rng;
 use anyhow::Result;
@@ -75,9 +99,279 @@ impl CampaignResult {
     }
 }
 
+/// One pre-sampled fault trial (the backend decides which arm is used).
+#[derive(Clone, Copy, Debug)]
+pub enum PlannedTrial {
+    /// Cross-layer RTL trial (EnforSa / Hdfit / FullSoc backends).
+    Rtl(TrialFault),
+    /// Software-level flip (SwOnly backend).
+    Sw(SwTarget),
+}
+
+/// All `faults_per_layer` trials of one GEMM site, run back-to-back
+/// against the same checkpoint — the coordinator's shardable work unit.
+#[derive(Clone, Debug)]
+pub struct SiteBatch {
+    pub info: GemmSiteInfo,
+    pub trials: Vec<PlannedTrial>,
+}
+
+/// Everything needed to execute any site batch of one input: the input
+/// tensor, the golden reference, the per-layer activation checkpoints
+/// (site-resume engine only) and the pre-sampled trial batches.
+#[derive(Clone, Debug)]
+pub struct InputPlan {
+    pub x: TensorI8,
+    pub golden_logits: TensorI8,
+    pub golden_top1: usize,
+    /// Per-layer resume points; `None` under [`TrialEngine::FullForward`]
+    /// (the oracle path never records checkpoints).
+    pub ckpt: Option<ActivationCheckpoints>,
+    pub batches: Vec<SiteBatch>,
+}
+
+/// Parse the campaign's signal-kind restriction once.
+pub fn signal_kinds(cfg: &CampaignConfig) -> Vec<SignalKind> {
+    cfg.signals
+        .iter()
+        .filter_map(|s| SignalKind::parse(s))
+        .collect()
+}
+
+/// Discover the campaign's GEMM sites once per campaign: site shapes
+/// depend only on the model topology and input *shape* (never on input
+/// values), so a zero probe input suffices and no campaign RNG is
+/// consumed.
+pub fn campaign_sites(model: &Model) -> Vec<GemmSiteInfo> {
+    model.gemm_sites(&probe_input(&model.input_shape))
+}
+
+/// The coordinator's per-input seed derivation: results depend only on
+/// `(seed, input_idx)`, never on worker count or execution order.
+pub fn derived_input_seed(seed: u64, input_idx: u64) -> u64 {
+    seed ^ (input_idx + 1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Build one input's execution plan, drawing from `rng` in the
+/// canonical order (input tensor first, then trials site-major) — the
+/// exact stream the legacy per-trial loop consumed, so plans are
+/// bit-identical across trial engines, worker counts and shardings.
+pub fn plan_one(
+    model: &Model,
+    cfg: &CampaignConfig,
+    sites: &[GemmSiteInfo],
+    kinds: &[SignalKind],
+    dim: usize,
+    rng: &mut Rng,
+) -> InputPlan {
+    let x = synthetic_input(&model.input_shape, rng);
+    let (golden_logits, ckpt) = match cfg.engine {
+        TrialEngine::SiteResume => {
+            let (logits, ckpt) = model.forward_checkpointed(&x);
+            (logits, Some(ckpt))
+        }
+        TrialEngine::FullForward => (model.forward(&x, None), None),
+    };
+    let golden_top1 = argmax(&golden_logits.data);
+    let batches = sites
+        .iter()
+        .map(|info| SiteBatch {
+            info: *info,
+            trials: (0..cfg.faults_per_layer)
+                .map(|_| match cfg.backend {
+                    Backend::SwOnly => PlannedTrial::Sw(sample_output_fault(model, rng)),
+                    _ => PlannedTrial::Rtl(sample_trial(
+                        info.site, info.m, info.k, info.n, dim, rng, kinds,
+                    )),
+                })
+                .collect(),
+        })
+        .collect();
+    InputPlan {
+        x,
+        golden_logits,
+        golden_top1,
+        ckpt,
+        batches,
+    }
+}
+
+/// The stateful simulator a worker owns for the whole campaign.
+enum Sim {
+    Mesh(Mesh),
+    Hdfit(InstrumentedMesh),
+    /// Boxed: the SoC carries MiBs of memory model; persistent across
+    /// trials via [`Soc::reset`] instead of per-trial construction.
+    Soc(Box<Soc>),
+    Sw,
+}
+
+/// Executes planned trial batches against a persistent simulator. One
+/// executor per worker thread; simulators never cross threads.
+pub struct TrialExecutor {
+    engine: TrialEngine,
+    scope: OffloadScope,
+    sim: Sim,
+}
+
+impl TrialExecutor {
+    pub fn new(mesh_cfg: &MeshConfig, cfg: &CampaignConfig) -> TrialExecutor {
+        let sim = match cfg.backend {
+            Backend::EnforSa => Sim::Mesh(Mesh::new(mesh_cfg.dim, mesh_cfg.dataflow)),
+            Backend::Hdfit => Sim::Hdfit(InstrumentedMesh::new(mesh_cfg.dim)),
+            Backend::FullSoc => Sim::Soc(Box::new(Soc::new(mesh_cfg.dim))),
+            Backend::SwOnly => Sim::Sw,
+        };
+        TrialExecutor {
+            engine: cfg.engine,
+            scope: cfg.offload_scope,
+            sim,
+        }
+    }
+
+    /// Run one site batch of one input's plan, recording every outcome
+    /// into `result`.
+    pub fn run_batch(
+        &mut self,
+        model: &Model,
+        plan: &InputPlan,
+        batch: &SiteBatch,
+        result: &mut CampaignResult,
+    ) {
+        let layer = batch.info.site.layer;
+        match &mut self.sim {
+            Sim::Sw => {
+                for t in &batch.trials {
+                    let PlannedTrial::Sw(target) = t else {
+                        unreachable!("RTL trial routed to the SW backend")
+                    };
+                    let outcome = run_sw_trial(model, plan, *target, self.engine);
+                    record(result, layer, outcome);
+                }
+            }
+            Sim::Mesh(m) => run_rtl_batch(
+                model,
+                plan,
+                batch,
+                TileBackend::Mesh(m),
+                self.scope,
+                self.engine,
+                result,
+            ),
+            Sim::Hdfit(m) => run_rtl_batch(
+                model,
+                plan,
+                batch,
+                TileBackend::Hdfit(m),
+                self.scope,
+                self.engine,
+                result,
+            ),
+            // the SoC path always offloads a single tile (whole-layer
+            // offload through the core is unsupported)
+            Sim::Soc(s) => run_rtl_batch(
+                model,
+                plan,
+                batch,
+                TileBackend::Soc(s.as_mut()),
+                OffloadScope::SingleTile,
+                self.engine,
+                result,
+            ),
+        }
+    }
+}
+
+/// Run every RTL trial of a batch through one runner: the backend
+/// borrow and the scratch result tile persist across the whole batch
+/// ([`CrossLayerRunner::arm`] re-arms between trials).
+fn run_rtl_batch(
+    model: &Model,
+    plan: &InputPlan,
+    batch: &SiteBatch,
+    backend: TileBackend<'_>,
+    scope: OffloadScope,
+    engine: TrialEngine,
+    result: &mut CampaignResult,
+) {
+    let layer = batch.info.site.layer;
+    let Some((first, rest)) = batch.trials.split_first() else {
+        return;
+    };
+    let PlannedTrial::Rtl(first) = first else {
+        unreachable!("SW trial routed to an RTL backend")
+    };
+    let mut runner = CrossLayerRunner::new(*first, backend, scope);
+    runner.backend.reset();
+    record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+    for t in rest {
+        let PlannedTrial::Rtl(trial) = t else {
+            unreachable!("SW trial routed to an RTL backend")
+        };
+        runner.arm(*trial);
+        runner.backend.reset();
+        record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+    }
+}
+
+fn run_rtl_trial(
+    model: &Model,
+    plan: &InputPlan,
+    runner: &mut CrossLayerRunner<'_>,
+    engine: TrialEngine,
+) -> TrialOutcome {
+    match engine {
+        TrialEngine::FullForward => {
+            let logits = model.forward(&plan.x, Some(&mut *runner));
+            debug_assert!(runner.hit, "trial site must be reached");
+            classify(runner.exposed, argmax(&logits.data) != plan.golden_top1)
+        }
+        TrialEngine::SiteResume => {
+            let li = runner.trial.site.layer;
+            let ckpt = plan
+                .ckpt
+                .as_ref()
+                .expect("site-resume plan carries checkpoints");
+            // phase 1: replay only the faulty layer from its checkpoint
+            let act =
+                model.forward_layers(li, li + 1, ckpt.at(li).clone(), Some(&mut *runner));
+            debug_assert!(runner.hit, "trial site must be reached");
+            if !runner.exposed {
+                // The splice change-flag says the fault never escaped
+                // the array: the layer output is bit-identical to the
+                // golden pass, so the downstream recompute is skipped
+                // entirely (logits := golden logits).
+                return TrialOutcome::Masked;
+            }
+            // phase 2: only the downstream layers run, hook-free
+            let logits = model.resume_logits(li + 1, act, None);
+            classify(true, argmax(&logits.data) != plan.golden_top1)
+        }
+    }
+}
+
+fn run_sw_trial(
+    model: &Model,
+    plan: &InputPlan,
+    target: SwTarget,
+    engine: TrialEngine,
+) -> TrialOutcome {
+    let mut inj = SwInjector::new(target);
+    let logits = match (engine, &plan.ckpt) {
+        (TrialEngine::SiteResume, Some(ckpt)) => {
+            // the flip applies at its target layer: resume there
+            model.forward_from(target.layer(), ckpt, Some(&mut inj))
+        }
+        _ => model.forward(&plan.x, Some(&mut inj)),
+    };
+    let corrupted = logits != plan.golden_logits;
+    classify(corrupted, argmax(&logits.data) != plan.golden_top1)
+}
+
 /// Run the trials of a single input index with its own derived RNG
-/// stream — the unit of work the coordinator distributes to workers.
-/// Worker-count invariant: results depend only on (seed, input_idx).
+/// stream — the coarse unit of work the coordinator distributes (the
+/// fine unit is one [`SiteBatch`] of an [`InputPlan`]). Worker-count
+/// invariant: results depend only on `(seed, input_idx)`.
 pub fn run_input(
     model: &Model,
     mesh_cfg: &MeshConfig,
@@ -86,7 +380,7 @@ pub fn run_input(
 ) -> Result<CampaignResult> {
     let mut one = cfg.clone();
     one.inputs = 1;
-    one.seed = cfg.seed ^ (input_idx + 1).wrapping_mul(0x9E3779B97F4A7C15);
+    one.seed = derived_input_seed(cfg.seed, input_idx);
     run_campaign(model, mesh_cfg, &one)
 }
 
@@ -96,97 +390,22 @@ pub fn run_campaign(
     mesh_cfg: &MeshConfig,
     cfg: &CampaignConfig,
 ) -> Result<CampaignResult> {
-    let kinds: Vec<SignalKind> = cfg
-        .signals
-        .iter()
-        .filter_map(|s| SignalKind::parse(s))
-        .collect();
+    let kinds = signal_kinds(cfg);
+    // site list computed once per campaign and borrowed from here on
+    let sites = campaign_sites(model);
     let mut rng = Rng::new(cfg.seed);
-    let mut result = CampaignResult {
-        model: model.name.clone(),
-        backend: cfg.backend,
-        vuln: VulnEstimate::default(),
-        exposed_trials: 0,
-        masked_trials: 0,
-        wall: Duration::ZERO,
-        per_layer: BTreeMap::new(),
-    };
-    // persistent backends (reset per matmul by the drivers)
-    let mut mesh = Mesh::new(mesh_cfg.dim, mesh_cfg.dataflow);
-    let mut hdfit = InstrumentedMesh::new(mesh_cfg.dim);
+    let mut result = CampaignResult::empty(&model.name, cfg.backend);
+    let mut exec = TrialExecutor::new(mesh_cfg, cfg);
 
     let t0 = Instant::now();
-    let mut sites: Option<Vec<GemmSiteInfo>> = None;
     for _input in 0..cfg.inputs {
-        let x = synthetic_input(&model.input_shape, &mut rng);
-        let golden_logits = model.forward(&x, None);
-        let golden = argmax(&golden_logits.data);
-        let sites =
-            sites.get_or_insert_with(|| model.gemm_sites(&x)).clone();
-        for info in &sites {
-            for _ in 0..cfg.faults_per_layer {
-                let outcome = match cfg.backend {
-                    Backend::SwOnly => {
-                        let target = sample_output_fault(model, &mut rng);
-                        let mut inj = SwInjector::new(target);
-                        let logits = model.forward(&x, Some(&mut inj));
-                        let corrupted = logits != golden_logits;
-                        classify(corrupted, argmax(&logits.data) != golden)
-                    }
-                    Backend::FullSoc => {
-                        let trial = sample_trial(
-                            info.site, info.m, info.k, info.n, mesh_cfg.dim, &mut rng,
-                            &kinds,
-                        );
-                        // a fresh SoC per trial (the core re-runs its
-                        // driver program from reset)
-                        run_soc_trial(model, &x, golden, trial, mesh_cfg.dim)?
-                    }
-                    _ => {
-                        let trial = sample_trial(
-                            info.site, info.m, info.k, info.n, mesh_cfg.dim, &mut rng,
-                            &kinds,
-                        );
-                        let backend = match cfg.backend {
-                            Backend::EnforSa => TileBackend::Mesh(&mut mesh),
-                            Backend::Hdfit => TileBackend::Hdfit(&mut hdfit),
-                            _ => unreachable!(),
-                        };
-                        let mut runner =
-                            CrossLayerRunner::new(trial, backend, cfg.offload_scope);
-                        let logits = model.forward(&x, Some(&mut runner));
-                        debug_assert!(runner.hit, "trial site must be reached");
-                        classify(runner.exposed, argmax(&logits.data) != golden)
-                    }
-                };
-                record(&mut result, info.site.layer, outcome);
-            }
+        let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg.dim, &mut rng);
+        for batch in &plan.batches {
+            exec.run_batch(model, &plan, batch, &mut result);
         }
     }
     result.wall = t0.elapsed();
     Ok(result)
-}
-
-// The FullSoc arm needs its own flow (the backend owns big state);
-// factored out to keep the loop readable.
-fn run_soc_trial(
-    model: &Model,
-    x: &crate::dnn::TensorI8,
-    golden: usize,
-    trial: TrialFault,
-    dim: usize,
-) -> Result<TrialOutcome> {
-    let mut soc = Soc::new(dim);
-    let mut runner = CrossLayerRunner::new(
-        trial,
-        TileBackend::Soc(&mut soc),
-        OffloadScope::SingleTile,
-    );
-    let logits = model.forward(x, Some(&mut runner));
-    Ok(classify(
-        runner.exposed,
-        argmax(&logits.data) != golden,
-    ))
 }
 
 fn classify(exposed: bool, critical: bool) -> TrialOutcome {
@@ -224,6 +443,7 @@ mod tests {
                 inputs: 2,
                 backend,
                 offload_scope: OffloadScope::SingleTile,
+                engine: TrialEngine::SiteResume,
                 signals: vec![],
                 workers: 1,
             },
@@ -269,5 +489,50 @@ mod tests {
         cfg.signals = vec!["propag".into(), "valid".into()];
         let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
         assert_eq!(r.vuln.trials, 40);
+    }
+
+    #[test]
+    fn site_resume_matches_full_forward_oracle() {
+        // the acceptance invariant: both engines produce bit-identical
+        // campaign results for a fixed seed
+        let model = models::quicknet(5);
+        for backend in [Backend::EnforSa, Backend::SwOnly] {
+            let (mesh_cfg, mut cfg) = small_cfg(backend);
+            cfg.engine = TrialEngine::SiteResume;
+            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            cfg.engine = TrialEngine::FullForward;
+            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(a.vuln.trials, b.vuln.trials, "{backend}");
+            assert_eq!(a.vuln.critical, b.vuln.critical, "{backend}");
+            assert_eq!(a.exposed_trials, b.exposed_trials, "{backend}");
+            assert_eq!(a.masked_trials, b.masked_trials, "{backend}");
+        }
+    }
+
+    #[test]
+    fn plan_one_is_deterministic_and_covers_all_sites() {
+        let model = models::quicknet(5);
+        let (mesh_cfg, cfg) = small_cfg(Backend::EnforSa);
+        let sites = campaign_sites(&model);
+        let kinds = signal_kinds(&cfg);
+        let mut r1 = Rng::new(cfg.seed);
+        let mut r2 = Rng::new(cfg.seed);
+        let p1 = plan_one(&model, &cfg, &sites, &kinds, mesh_cfg.dim, &mut r1);
+        let p2 = plan_one(&model, &cfg, &sites, &kinds, mesh_cfg.dim, &mut r2);
+        assert_eq!(p1.batches.len(), sites.len());
+        assert_eq!(p1.golden_top1, p2.golden_top1);
+        assert_eq!(p1.golden_logits, p2.golden_logits);
+        for (b1, b2) in p1.batches.iter().zip(&p2.batches) {
+            assert_eq!(b1.trials.len() as u64, cfg.faults_per_layer);
+            for (t1, t2) in b1.trials.iter().zip(&b2.trials) {
+                match (t1, t2) {
+                    (PlannedTrial::Rtl(a), PlannedTrial::Rtl(b)) => assert_eq!(a, b),
+                    (PlannedTrial::Sw(a), PlannedTrial::Sw(b)) => assert_eq!(a, b),
+                    _ => panic!("plan arms diverged"),
+                }
+            }
+        }
+        let ckpt = p1.ckpt.expect("site-resume plans carry checkpoints");
+        assert_eq!(ckpt.layers(), model.layers.len());
     }
 }

@@ -7,7 +7,10 @@ pub mod fault;
 pub mod maps;
 pub mod runner;
 
-pub use campaign::{run_campaign, CampaignResult, TrialOutcome};
+pub use campaign::{
+    campaign_sites, derived_input_seed, plan_one, run_campaign, run_input, signal_kinds,
+    CampaignResult, InputPlan, PlannedTrial, SiteBatch, TrialExecutor, TrialOutcome,
+};
 pub use fault::{sample_mesh_fault, sample_trial, TrialFault};
 pub use maps::{control_avf_map, exposure_map, weight_exposure_map, PeMap};
 pub use runner::{CrossLayerRunner, TileBackend};

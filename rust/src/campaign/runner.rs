@@ -50,17 +50,39 @@ impl<'a> TileBackend<'a> {
         d: MatView<i32>,
         fault: Option<&Fault>,
     ) -> anyhow::Result<Mat<i32>> {
-        Ok(match self {
-            TileBackend::Mesh(m) => match fault {
-                Some(f) => MatmulDriver::new(*m).matmul_with_fault(a, b, d, f),
-                None => MatmulDriver::new(*m).matmul(a, b, d),
-            },
-            TileBackend::Hdfit(m) => match fault {
-                Some(f) => MatmulDriver::new(*m).matmul_with_fault(a, b, d, f),
-                None => MatmulDriver::new(*m).matmul(a, b, d),
-            },
-            TileBackend::Soc(s) => s.run_matmul(a, b, d, fault.copied())?,
-        })
+        let mut out = Mat::default();
+        self.run_tile_into(a, b, d, fault, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`TileBackend::run_tile`] into a caller-provided result buffer
+    /// (reshaped and zeroed in place): the campaign's per-site trial
+    /// batches drain every RTL tile into the same scratch `Mat`, so the
+    /// hot path performs no per-trial result allocation at all.
+    pub fn run_tile_into(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        fault: Option<&Fault>,
+        out: &mut Mat<i32>,
+    ) -> anyhow::Result<()> {
+        match self {
+            TileBackend::Mesh(m) => MatmulDriver::new(*m).matmul_into(a, b, d, fault, out),
+            TileBackend::Hdfit(m) => MatmulDriver::new(*m).matmul_into(a, b, d, fault, out),
+            TileBackend::Soc(s) => s.run_matmul_into(a, b, d, fault.copied(), out)?,
+        }
+        Ok(())
+    }
+
+    /// Prepare the backend for the next trial of a batch. The mesh
+    /// drivers reset the array at the start of every matmul, so only the
+    /// whole-SoC backend (persistent across a campaign since the
+    /// fresh-`Soc`-per-trial path was retired) has work to do here.
+    pub fn reset(&mut self) {
+        if let TileBackend::Soc(s) = self {
+            s.reset();
+        }
     }
 
     /// Whole-layer offload (ablation D3): every tile through RTL, the
@@ -99,6 +121,12 @@ impl<'a> TileBackend<'a> {
 }
 
 /// GEMM hook that performs the cross-layer offload for one trial.
+///
+/// A runner is built once per **site batch** and re-armed per trial
+/// ([`CrossLayerRunner::arm`]): the backend borrow and the scratch
+/// result tile persist across all `faults_per_layer` trials of a site,
+/// so back-to-back trials amortize both the backend state and every
+/// result allocation.
 pub struct CrossLayerRunner<'a> {
     pub trial: TrialFault,
     pub backend: TileBackend<'a>,
@@ -108,17 +136,30 @@ pub struct CrossLayerRunner<'a> {
     /// Set when the RTL tile differed from the fault-free tile (the
     /// fault was *exposed* to the software layer — paper Fig. 5b).
     pub exposed: bool,
+    /// Reusable DIM x DIM result tile shared by every trial in a batch
+    /// (the ROADMAP "arena for the per-trial result Mat" item).
+    scratch: Mat<i32>,
 }
 
 impl<'a> CrossLayerRunner<'a> {
     pub fn new(trial: TrialFault, backend: TileBackend<'a>, scope: OffloadScope) -> Self {
+        let dim = backend.dim();
         CrossLayerRunner {
             trial,
             backend,
             scope,
             hit: false,
             exposed: false,
+            scratch: Mat::zeros(dim, dim),
         }
+    }
+
+    /// Re-arm for the next trial of a batch: fresh trial and flags, same
+    /// backend borrow, same scratch buffer.
+    pub fn arm(&mut self, trial: TrialFault) {
+        self.trial = trial;
+        self.hit = false;
+        self.exposed = false;
     }
 }
 
@@ -156,21 +197,22 @@ impl GemmHook for CrossLayerRunner<'_> {
         }
 
         // ENFOR-SA single-tile offload: the DIM-padded tile is a
-        // zero-copy window into the layer's buffers
+        // zero-copy window into the layer's buffers; the RTL result
+        // drains into the runner's scratch tile (no allocation)
         let (ri, cj) = (ti * dim, tj * dim);
-        let c_tile = self
-            .backend
-            .run_tile(
+        self.backend
+            .run_tile_into(
                 a_full.sub(ri, 0, dim, k),
                 b_full.sub(0, cj, k, dim),
                 d_full.sub(ri, cj, dim, dim),
                 Some(&self.trial.fault),
+                &mut self.scratch,
             )
             .expect("tile offload failed");
         // splice the RTL tile back into the accumulator (one strided
         // copy; a changed element means the fault escaped the array)
         let mut target = MatViewMut::window(&mut c, m, n, n, ri, cj, dim, dim);
-        if target.splice_from(&c_tile) {
+        if target.splice_from(&self.scratch) {
             self.exposed = true;
         }
         Some(c)
@@ -257,6 +299,44 @@ mod tests {
         let out2 = model.forward(&x, Some(&mut r2));
 
         assert_eq!(out1, out2, "both scopes yield identical faulty outputs");
+    }
+
+    #[test]
+    fn rearmed_runner_reproduces_fresh_runners() {
+        // One runner re-armed across a batch (persistent mesh + scratch
+        // tile) must match a fresh mesh + runner per trial bit-exactly.
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(76);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trials = [a_trial(20), a_trial(2), a_trial(33)];
+
+        let mut fresh = Vec::new();
+        for t in trials {
+            let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+            let mut r = CrossLayerRunner::new(
+                t,
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+            );
+            let out = model.forward(&x, Some(&mut r));
+            fresh.push((out, r.exposed));
+        }
+
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r = CrossLayerRunner::new(
+            trials[0],
+            TileBackend::Mesh(&mut mesh),
+            OffloadScope::SingleTile,
+        );
+        for (i, t) in trials.iter().enumerate() {
+            if i > 0 {
+                r.arm(*t);
+            }
+            r.backend.reset();
+            let out = model.forward(&x, Some(&mut r));
+            assert_eq!(out, fresh[i].0, "trial {i} output");
+            assert_eq!(r.exposed, fresh[i].1, "trial {i} exposure");
+        }
     }
 
     #[test]

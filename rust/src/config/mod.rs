@@ -100,6 +100,40 @@ impl OffloadScope {
     }
 }
 
+/// How each fault trial executes the network around the injected tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TrialEngine {
+    /// Resume inference at the injection site from per-layer activation
+    /// checkpoints recorded during the golden pass; masked trials skip
+    /// the downstream recompute entirely (logits := golden logits).
+    #[default]
+    SiteResume,
+    /// Re-run the whole forward pass from the input for every trial —
+    /// the legacy path, kept as the bit-exactness oracle for the
+    /// site-resume engine.
+    FullForward,
+}
+
+impl TrialEngine {
+    pub fn parse(s: &str) -> Option<TrialEngine> {
+        match s.to_ascii_lowercase().as_str() {
+            "site-resume" | "site_resume" | "resume" => Some(TrialEngine::SiteResume),
+            "full-forward" | "full_forward" | "full" => Some(TrialEngine::FullForward),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TrialEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            TrialEngine::SiteResume => "site-resume",
+            TrialEngine::FullForward => "full-forward",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// Hardware (mesh) configuration — the paper's "compilation phase" knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct MeshConfig {
@@ -138,6 +172,9 @@ pub struct CampaignConfig {
     /// Backend for the injected tile.
     pub backend: Backend,
     pub offload_scope: OffloadScope,
+    /// Trial execution engine (site-resume by default; full-forward is
+    /// the bit-exactness oracle). Results are bit-identical either way.
+    pub engine: TrialEngine,
     /// Restrict injection to these signal kinds (empty = all).
     pub signals: Vec<String>,
     /// Worker threads for the campaign coordinator.
@@ -152,6 +189,7 @@ impl Default for CampaignConfig {
             inputs: 8,
             backend: Backend::EnforSa,
             offload_scope: OffloadScope::SingleTile,
+            engine: TrialEngine::SiteResume,
             signals: vec![],
             workers: 1,
         }
@@ -233,6 +271,10 @@ impl Config {
                 cfg.campaign.offload_scope = OffloadScope::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad offload_scope {v}"))?;
             }
+            if let Some(v) = c.get("trial_engine").and_then(Json::as_str) {
+                cfg.campaign.engine = TrialEngine::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad trial_engine {v}"))?;
+            }
             if let Some(v) = c.get("workers").and_then(Json::as_usize) {
                 cfg.campaign.workers = v;
             }
@@ -296,6 +338,7 @@ mod tests {
               "mesh": {"dim": 4, "dataflow": "ws"},
               "campaign": {"seed": 7, "faults_per_layer": 10, "inputs": 2,
                            "backend": "hdfit", "offload_scope": "layer",
+                           "trial_engine": "full-forward",
                            "workers": 2, "signals": ["propag", "valid"]},
               "artifacts_dir": "art"
             }"#,
@@ -305,6 +348,7 @@ mod tests {
         assert_eq!(c.mesh.dataflow, Dataflow::WeightStationary);
         assert_eq!(c.campaign.backend, Backend::Hdfit);
         assert_eq!(c.campaign.offload_scope, OffloadScope::Layer);
+        assert_eq!(c.campaign.engine, TrialEngine::FullForward);
         assert_eq!(c.campaign.signals.len(), 2);
         assert_eq!(c.artifacts_dir, "art");
     }
@@ -315,6 +359,17 @@ mod tests {
         assert!(
             Config::from_json_str(r#"{"campaign": {"backend": "bogus"}}"#).is_err()
         );
+        assert!(
+            Config::from_json_str(r#"{"campaign": {"trial_engine": "bogus"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn trial_engine_defaults_to_site_resume() {
+        assert_eq!(Config::default().campaign.engine, TrialEngine::SiteResume);
+        assert_eq!(TrialEngine::parse("resume"), Some(TrialEngine::SiteResume));
+        assert_eq!(TrialEngine::parse("full"), Some(TrialEngine::FullForward));
+        assert_eq!(TrialEngine::SiteResume.to_string(), "site-resume");
     }
 
     #[test]

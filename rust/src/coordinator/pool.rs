@@ -1,18 +1,28 @@
 //! The campaign coordinator: distributes fault-trial work across worker
 //! threads and aggregates results.
 //!
-//! Each worker owns its own mesh simulator and model clone (simulators
-//! are stateful); the work unit is one *input* (all its per-layer fault
-//! trials), seeded from `(campaign seed, input index)` so results are
-//! bit-identical regardless of worker count — required for the paper's
+//! Since the site-resume refactor the schedulable unit is one **site
+//! batch** of one input: sampling is split from execution
+//! ([`plan_one`]), so an input's plan — input tensor, golden reference,
+//! activation checkpoints and every pre-sampled trial — is built once
+//! (lazily, by whichever worker first touches that input) and shared
+//! read-only, while `(input, site)` batches are claimed from a single
+//! atomic counter. Each worker owns its own simulator state (a
+//! [`TrialExecutor`]); plans are seeded from
+//! `(campaign seed, input index)` so results are bit-identical
+//! regardless of worker count or claim order — required for the paper's
 //! reproducibility claims and pinned by `rust/tests/prop_coordinator.rs`.
 
-use crate::campaign::campaign::{run_input, CampaignResult};
+use crate::campaign::campaign::{
+    campaign_sites, derived_input_seed, plan_one, signal_kinds, CampaignResult, InputPlan,
+    TrialExecutor,
+};
 use crate::config::{CampaignConfig, MeshConfig};
 use crate::dnn::Model;
+use crate::util::Rng;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Live progress counters shared with observers (CLI progress line).
@@ -30,44 +40,100 @@ pub fn run_parallel(
     progress: Option<Arc<Progress>>,
 ) -> Result<CampaignResult> {
     let t0 = Instant::now();
-    let workers = cfg.workers.max(1).min((cfg.inputs as usize).max(1));
+    let sites = campaign_sites(model);
+    let kinds = signal_kinds(cfg);
+    let n_sites = sites.len() as u64;
+    let total_units = cfg.inputs * n_sites;
+    let workers = cfg.workers.clamp(1, (total_units as usize).max(1));
     let mut merged = CampaignResult::empty(&model.name, cfg.backend);
     if workers <= 1 {
+        let mut exec = TrialExecutor::new(mesh_cfg, cfg);
         for input_idx in 0..cfg.inputs {
-            let part = run_input(model, mesh_cfg, cfg, input_idx)?;
+            let mut rng = Rng::new(derived_input_seed(cfg.seed, input_idx));
+            let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg.dim, &mut rng);
+            let mut part = CampaignResult::empty(&model.name, cfg.backend);
+            for batch in &plan.batches {
+                exec.run_batch(model, &plan, batch, &mut part);
+            }
             bump(&progress, &part);
             merged.merge(&part);
         }
     } else {
-        let next = Arc::new(AtomicU64::new(0));
-        let results: Vec<Result<Vec<CampaignResult>>> = std::thread::scope(|scope| {
+        // Lazily built, shared read-only per-input plans. A slot is
+        // populated by whichever worker first touches the input (the
+        // lock serializes the build) and DROPPED once its last site
+        // batch completes, so peak memory is bounded by the inputs in
+        // flight, not the whole campaign (plans carry activation
+        // checkpoints).
+        let plans: Vec<Mutex<Option<Arc<InputPlan>>>> =
+            (0..cfg.inputs).map(|_| Mutex::new(None)).collect();
+        // per-input count of outstanding site batches (drives plan
+        // drop + the inputs_done progress counter)
+        let remaining: Vec<AtomicU64> = (0..cfg.inputs)
+            .map(|_| AtomicU64::new(n_sites))
+            .collect();
+        let next = AtomicU64::new(0);
+        let results: Vec<Result<CampaignResult>> = std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for _ in 0..workers {
-                let next = Arc::clone(&next);
+                let (plans, remaining, next) = (&plans, &remaining, &next);
+                let (sites, kinds) = (&sites, &kinds);
                 let progress = progress.clone();
-                let model = model.clone();
-                handles.push(scope.spawn(move || -> Result<Vec<CampaignResult>> {
-                    let mut parts = Vec::new();
+                handles.push(scope.spawn(move || -> Result<CampaignResult> {
+                    let mut exec = TrialExecutor::new(mesh_cfg, cfg);
+                    let mut part = CampaignResult::empty(&model.name, cfg.backend);
                     loop {
-                        let input_idx = next.fetch_add(1, Ordering::Relaxed);
-                        if input_idx >= cfg.inputs {
+                        let unit = next.fetch_add(1, Ordering::Relaxed);
+                        if unit >= total_units {
                             break;
                         }
-                        let part = run_input(&model, mesh_cfg, cfg, input_idx)?;
-                        bump(&progress, &part);
-                        parts.push(part);
+                        let input_idx = unit / n_sites;
+                        let site_idx = (unit % n_sites) as usize;
+                        let plan = {
+                            let mut slot = plans[input_idx as usize].lock().unwrap();
+                            match slot.as_ref() {
+                                Some(p) => Arc::clone(p),
+                                None => {
+                                    let mut rng =
+                                        Rng::new(derived_input_seed(cfg.seed, input_idx));
+                                    let p = Arc::new(plan_one(
+                                        model,
+                                        cfg,
+                                        sites,
+                                        kinds,
+                                        mesh_cfg.dim,
+                                        &mut rng,
+                                    ));
+                                    *slot = Some(Arc::clone(&p));
+                                    p
+                                }
+                            }
+                        };
+                        let before = part.vuln.trials;
+                        exec.run_batch(model, &plan, &plan.batches[site_idx], &mut part);
+                        if let Some(p) = &progress {
+                            p.trials_done
+                                .fetch_add(part.vuln.trials - before, Ordering::Relaxed);
+                        }
+                        // last batch of this input: free its plan (no
+                        // future unit can claim this input again)
+                        if remaining[input_idx as usize].fetch_sub(1, Ordering::Relaxed)
+                            == 1
+                        {
+                            *plans[input_idx as usize].lock().unwrap() = None;
+                            if let Some(p) = &progress {
+                                p.inputs_done.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
                     }
-                    Ok(parts)
+                    Ok(part)
                 }));
             }
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
-        // merge in deterministic order (sort by nothing needed: merge is
-        // commutative over counters)
+        // merge is commutative over counters, so claim order is free
         for r in results {
-            for part in r? {
-                merged.merge(&part);
-            }
+            merged.merge(&r?);
         }
     }
     merged.wall = t0.elapsed(); // wall clock, not summed worker time
@@ -84,7 +150,7 @@ fn bump(progress: &Option<Arc<Progress>>, part: &CampaignResult) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Backend;
+    use crate::config::{Backend, TrialEngine};
     use crate::dnn::models;
 
     fn cfg(workers: usize) -> (MeshConfig, CampaignConfig) {
@@ -96,6 +162,7 @@ mod tests {
                 inputs: 4,
                 backend: Backend::EnforSa,
                 offload_scope: Default::default(),
+                engine: TrialEngine::SiteResume,
                 signals: vec![],
                 workers,
             },
@@ -121,6 +188,25 @@ mod tests {
         assert_eq!(a.vuln.critical, b.vuln.critical);
         assert_eq!(a.exposed_trials, b.exposed_trials);
         assert_eq!(a.per_layer.len(), b.per_layer.len());
+    }
+
+    #[test]
+    fn site_sharding_can_use_more_workers_than_inputs() {
+        // (input, site) units: 4 inputs x 5 sites = 20 units, so 8
+        // workers are all useful — and results still match 1 worker
+        let model = models::quicknet(7);
+        let (m, c1) = cfg(1);
+        let (_, c8) = cfg(8);
+        let a = run_parallel(&model, &m, &c1, None).unwrap();
+        let b = run_parallel(&model, &m, &c8, None).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        for (la, lb) in a.per_layer.iter().zip(b.per_layer.iter()) {
+            assert_eq!(la.0, lb.0);
+            assert_eq!(la.1.trials, lb.1.trials);
+            assert_eq!(la.1.critical, lb.1.critical);
+        }
     }
 
     #[test]

@@ -1,5 +1,22 @@
 //! Inference engine: sequential layer stacks, forward hooks, GEMM-site
-//! discovery and post-training calibration of requantization scales.
+//! discovery, post-training calibration of requantization scales, and
+//! the **checkpoint / resume** machinery of the site-resume trial
+//! engine.
+//!
+//! # Checkpoint / resume contract
+//!
+//! A fault trial only ever perturbs the network from its injection site
+//! onward: everything upstream of the faulty GEMM is bit-identical to
+//! the golden pass. [`Model::forward_checkpointed`] therefore snapshots
+//! the input activation of every top-level layer once per input, and
+//! [`Model::forward_from`] resumes inference at the target layer from
+//! that snapshot — each trial then costs one RTL tile plus only the
+//! *downstream* software layers instead of the whole network. Nested
+//! layers (residual bodies, parallel branches, attention ordinals)
+//! share their parent's flat layer index, so one checkpoint per
+//! top-level layer covers every GEMM site inside it. Resumed passes are
+//! bit-identical to full passes with the same hook (pinned by
+//! `rust/tests/prop_resume.rs`).
 
 use super::layers::{Act, ForwardCtx, GemmCall, GemmHook, GemmSiteId, Layer};
 use super::tensor::TensorI8;
@@ -22,25 +39,81 @@ impl Model {
     }
 
     /// Full forward pass; returns the logits row [1, classes].
-    pub fn forward(&self, x: &TensorI8, mut hook: Option<&mut dyn GemmHook>) -> TensorI8 {
-        let mut act = Act::Chw(x.clone());
-        let mut ctx = ForwardCtx::new(match &mut hook {
-            Some(h) => Some(&mut **h),
-            None => None,
-        });
-        for (li, layer) in self.layers.iter().enumerate() {
-            act = layer.forward(&act, li, &mut ctx);
+    pub fn forward(&self, x: &TensorI8, hook: Option<&mut dyn GemmHook>) -> TensorI8 {
+        let act = self.forward_layers(0, self.layers.len(), Act::Chw(x.clone()), hook);
+        self.into_logits(act)
+    }
+
+    /// Run the half-open span of top-level layers `start..end` on `act`
+    /// (the input activation of layer `start`), offering every GEMM and
+    /// every layer output to `hook`. `forward` is the `0..len` span;
+    /// trial resume runs `site..site+1` and then `site+1..len`. Spans
+    /// compose: chaining two adjacent spans is bit-identical to the
+    /// combined span.
+    pub fn forward_layers(
+        &self,
+        start: usize,
+        end: usize,
+        mut act: Act,
+        hook: Option<&mut dyn GemmHook>,
+    ) -> Act {
+        let mut ctx = ForwardCtx::new(hook);
+        for li in start..end {
+            act = self.layers[li].forward(&act, li, &mut ctx);
             if let Some(h) = ctx.hook.as_deref_mut() {
                 h.layer_output(li, &mut act);
             }
         }
-        let t = act.tensor();
+        act
+    }
+
+    /// Run layers `start..` on `act` and return the logits.
+    pub fn resume_logits(
+        &self,
+        start: usize,
+        act: Act,
+        hook: Option<&mut dyn GemmHook>,
+    ) -> TensorI8 {
+        let act = self.forward_layers(start, self.layers.len(), act, hook);
+        self.into_logits(act)
+    }
+
+    /// Golden forward pass that additionally snapshots the input
+    /// activation of every top-level layer. Logits are bit-identical to
+    /// `forward(x, None)`; the returned checkpoints are the resume
+    /// points for this input's fault trials.
+    pub fn forward_checkpointed(&self, x: &TensorI8) -> (TensorI8, ActivationCheckpoints) {
+        let mut acts = Vec::with_capacity(self.layers.len());
+        let mut act = Act::Chw(x.clone());
+        let mut ctx = ForwardCtx::plain();
+        for (li, layer) in self.layers.iter().enumerate() {
+            acts.push(act.clone());
+            act = layer.forward(&act, li, &mut ctx);
+        }
+        (self.into_logits(act), ActivationCheckpoints { acts })
+    }
+
+    /// Resume a checkpointed forward pass at top-level layer `layer`:
+    /// bit-identical to `forward(x, hook)` whenever the hook leaves
+    /// layers `0..layer` untouched (the cross-layer trial case).
+    pub fn forward_from(
+        &self,
+        layer: usize,
+        ckpt: &ActivationCheckpoints,
+        hook: Option<&mut dyn GemmHook>,
+    ) -> TensorI8 {
+        self.resume_logits(layer, ckpt.at(layer).clone(), hook)
+    }
+
+    /// Check the classifier contract and extract the logits row.
+    fn into_logits(&self, act: Act) -> TensorI8 {
+        let t = act.into_tensor();
         assert_eq!(
             t.shape,
             vec![1, self.classes],
             "model must end in a [1, classes] classifier"
         );
-        t.clone()
+        t
     }
 
     /// Top-1 class of an input (the paper's criticality criterion
@@ -87,6 +160,41 @@ pub struct GemmSiteInfo {
     pub m: usize,
     pub k: usize,
     pub n: usize,
+}
+
+/// Per-layer activation snapshots from one golden forward pass — the
+/// resume points of the site-resume trial engine. `at(li)` is the input
+/// activation of top-level layer `li`; every GEMM ordinal inside that
+/// layer (residual bodies, attention matmuls, conv groups) shares it.
+#[derive(Clone, Debug)]
+pub struct ActivationCheckpoints {
+    acts: Vec<Act>,
+}
+
+impl ActivationCheckpoints {
+    /// Input activation of top-level layer `layer`.
+    pub fn at(&self, layer: usize) -> &Act {
+        &self.acts[layer]
+    }
+
+    /// Number of checkpointed layers (== the model's layer count).
+    pub fn layers(&self) -> usize {
+        self.acts.len()
+    }
+
+    /// Total checkpoint footprint in bytes (campaign memory accounting).
+    pub fn byte_len(&self) -> usize {
+        self.acts.iter().map(Act::byte_len).sum()
+    }
+}
+
+/// Shape-probe input for GEMM-site discovery: the site list (layer,
+/// ordinal, m, k, n) depends only on the model topology and the input
+/// *shape*, never on input values, so a zero tensor suffices — and no
+/// campaign RNG is consumed, which lets campaigns discover sites once
+/// up front without perturbing the per-input fault streams.
+pub fn probe_input(shape: &[usize]) -> TensorI8 {
+    TensorI8::zeros(shape)
 }
 
 #[derive(Default)]
@@ -206,6 +314,50 @@ mod tests {
         assert_eq!(sites.len(), 5);
         assert_eq!(sites[0].k, 27); // conv1: 3*3*3
         assert_eq!(sites[4].n, 10); // classifier
+    }
+
+    #[test]
+    fn forward_layers_spans_compose() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(5);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        for split in 0..=model.layers.len() {
+            let mid = model.forward_layers(0, split, Act::Chw(x.clone()), None);
+            let logits = model.resume_logits(split, mid, None);
+            assert_eq!(logits, golden, "split at layer {split}");
+        }
+    }
+
+    #[test]
+    fn checkpointed_resume_matches_full_forward() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(6);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let (logits, ckpt) = model.forward_checkpointed(&x);
+        assert_eq!(logits, golden);
+        assert_eq!(ckpt.layers(), model.layers.len());
+        assert!(ckpt.byte_len() > 0);
+        for layer in 0..model.layers.len() {
+            assert_eq!(
+                model.forward_from(layer, &ckpt, None),
+                golden,
+                "resume at layer {layer}"
+            );
+        }
+    }
+
+    #[test]
+    fn probe_input_discovers_identical_sites() {
+        let model = models::quicknet(0xDEAD);
+        let mut rng = Rng::new(7);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        assert_eq!(
+            model.gemm_sites(&probe_input(&model.input_shape)),
+            model.gemm_sites(&x),
+            "site shapes must not depend on input values"
+        );
     }
 
     #[test]

@@ -9,6 +9,8 @@ pub mod layers;
 pub mod models;
 pub mod tensor;
 
-pub use engine::{argmax, synthetic_input, GemmSiteInfo, Model};
+pub use engine::{
+    argmax, probe_input, synthetic_input, ActivationCheckpoints, GemmSiteInfo, Model,
+};
 pub use layers::{ForwardCtx, GemmCall, GemmHook, GemmSiteId, Layer};
 pub use tensor::{Act, TensorI32, TensorI8};

@@ -120,6 +120,19 @@ impl Act {
         }
     }
 
+    /// Consume into the underlying tensor — the classifier seam uses
+    /// this instead of cloning the logits row out of a borrowed `Act`.
+    pub fn into_tensor(self) -> TensorI8 {
+        match self {
+            Act::Chw(t) | Act::Tokens(t) => t,
+        }
+    }
+
+    /// Size in bytes of the underlying buffer (checkpoint accounting).
+    pub fn byte_len(&self) -> usize {
+        self.tensor().data.len()
+    }
+
     pub fn chw(&self) -> &TensorI8 {
         match self {
             Act::Chw(t) => t,

@@ -20,7 +20,9 @@
 use anyhow::{bail, Result};
 use enfor_sa::benchkit;
 use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
-use enfor_sa::config::{Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope};
+use enfor_sa::config::{
+    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, TrialEngine,
+};
 use enfor_sa::coordinator::{run_parallel, Args};
 use enfor_sa::dnn::models;
 use enfor_sa::mesh::driver::{gold_matmul, MatmulDriver};
@@ -90,6 +92,10 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
     if let Some(s) = args.get("offload-scope") {
         cfg.campaign.offload_scope = OffloadScope::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --offload-scope {s}"))?;
+    }
+    if let Some(s) = args.get("trial-engine") {
+        cfg.campaign.engine = TrialEngine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --trial-engine {s} (site-resume|full-forward)"))?;
     }
     if let Some(s) = args.get("signals") {
         cfg.campaign.signals = s.split(',').map(str::to_string).collect();
@@ -216,8 +222,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let model = models::by_name(&name, cc.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
-        "campaign: model={name} backend={} dim={} inputs={} faults/layer={}",
-        cc.backend, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
+        "campaign: model={name} backend={} engine={} dim={} inputs={} faults/layer={}",
+        cc.backend, cc.engine, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
     );
     let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
     let (lo, hi) = r.vuln.ci95();
@@ -282,6 +288,7 @@ fn cmd_suite(args: &Args) -> Result<()> {
                 format!("{:.2}%", r.slowdown_pct()),
                 format!("{:.2}%", r.pvf_pct()),
                 format!("{:.2}%", r.avf_pct()),
+                format!("{:.2}x", r.resume_speedup_vs_full_forward()),
             ]
         })
         .collect();
@@ -289,7 +296,15 @@ fn cmd_suite(args: &Args) -> Result<()> {
         "{}",
         format_table(
             "TABLE VI: injection time and AVF/PVF vulnerability factors",
-            &["Model", "SW (inputs)", "ENFOR-SA (RTL)", "Slowdown", "PVF*", "AVF*"],
+            &[
+                "Model",
+                "SW (inputs)",
+                "ENFOR-SA (RTL)",
+                "Slowdown",
+                "PVF*",
+                "AVF*",
+                "Resume speedup",
+            ],
             &table,
         )
     );

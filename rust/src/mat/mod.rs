@@ -44,6 +44,18 @@ pub struct Mat<T> {
     data: Vec<T>,
 }
 
+impl<T> Default for Mat<T> {
+    /// An empty `0 x 0` matrix — no allocation; the seed value for
+    /// buffers that are later reshaped in place with [`Mat::reset`].
+    fn default() -> Mat<T> {
+        Mat {
+            rows: 0,
+            cols: 0,
+            data: Vec::new(),
+        }
+    }
+}
+
 impl<T: Copy + Default> Mat<T> {
     /// A `rows x cols` matrix of `T::default()`.
     pub fn zeros(rows: usize, cols: usize) -> Mat<T> {
@@ -127,6 +139,22 @@ impl<T: Copy + Default> Mat<T> {
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: T) {
         self.data[r * self.cols + c] = v;
+    }
+
+    /// Reshape to `rows x cols` and zero-fill, reusing the existing
+    /// allocation whenever the element count matches. This is the arena
+    /// primitive behind per-trial result-buffer reuse: the campaign
+    /// runner and the matmul drivers call it instead of allocating a
+    /// fresh result [`Mat`] per trial.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        if self.data.len() == rows * cols {
+            self.data.fill(T::default());
+        } else {
+            self.data.clear();
+            self.data.resize(rows * cols, T::default());
+        }
     }
 
     /// Borrow the whole matrix as a view.
@@ -457,6 +485,21 @@ mod tests {
         // splicing identical data reports no change
         let changed = m.window_mut(1, 2, 2, 2).splice_from(&tile);
         assert!(!changed);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_zeroes() {
+        let mut m = numbered(3, 4);
+        let ptr = m.data().as_ptr();
+        m.reset(4, 3); // same element count: allocation must survive
+        assert_eq!((m.rows(), m.cols()), (4, 3));
+        assert_eq!(m.data().as_ptr(), ptr);
+        assert!(m.data().iter().all(|&v| v == 0));
+        m.set(0, 0, 7);
+        m.reset(2, 2); // shrink: still zeroed
+        assert_eq!(m.data(), &[0, 0, 0, 0]);
+        let empty: Mat<i32> = Mat::default();
+        assert_eq!((empty.rows(), empty.cols()), (0, 0));
     }
 
     #[test]

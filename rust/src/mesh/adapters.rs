@@ -114,11 +114,25 @@ pub struct FlushCollector {
 
 impl FlushCollector {
     pub fn new(dim: usize) -> Self {
+        Self::reusing(dim, Mat::default())
+    }
+
+    /// Like [`FlushCollector::new`], but recycles `buf`'s allocation for
+    /// the collected matrix (reshaped and zeroed first) — the
+    /// allocation-free path the trial batches use to drain every RTL
+    /// tile of a site into the same scratch buffer.
+    pub fn reusing(dim: usize, mut buf: Mat<i32>) -> Self {
+        buf.reset(dim, dim);
         FlushCollector {
             dim,
             taken: vec![0; dim],
-            c: Mat::zeros(dim, dim),
+            c: buf,
         }
+    }
+
+    /// Consume into the collected matrix.
+    pub fn into_mat(self) -> Mat<i32> {
+        self.c
     }
 
     /// Record this cycle's south-edge flush outputs.

@@ -8,7 +8,9 @@
 //! flat buffer is a zero-copy window, and the implicit zero padding of
 //! the view doubles as the zero-padded scratchpad read of the real
 //! frontend. No per-matmul operand allocation happens anywhere in this
-//! module; the only allocation is the returned result [`Mat`].
+//! module; the only allocation is the result [`Mat`] — and callers on
+//! the campaign hot path avoid even that by draining into a persistent
+//! buffer via [`MatmulDriver::matmul_into`].
 //!
 //! Output-stationary schedule (the paper's configuration):
 //!
@@ -54,7 +56,9 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
     /// Golden (fault-free) matmul.
     pub fn matmul(&mut self, a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Mat<i32> {
-        self.run(a, b, d, None)
+        let mut out = Mat::default();
+        self.matmul_into(a, b, d, None, &mut out);
+        out
     }
 
     /// Matmul with a single transient fault injected at `fault.cycle`
@@ -66,27 +70,33 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         d: MatView<i32>,
         fault: &Fault,
     ) -> Mat<i32> {
-        self.run(a, b, d, Some(fault))
+        let mut out = Mat::default();
+        self.matmul_into(a, b, d, Some(fault), &mut out);
+        out
     }
 
-    fn run(
+    /// Matmul into a caller-provided result buffer: `out` is reshaped and
+    /// zeroed in place (reusing its allocation), so back-to-back trials
+    /// against the same buffer allocate nothing. This is the hot entry of
+    /// the site-major campaign batches.
+    pub fn matmul_into(
         &mut self,
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
         fault: Option<&Fault>,
-    ) -> Mat<i32> {
+        out: &mut Mat<i32>,
+    ) {
         if let Some(f) = fault {
             self.mesh.arm(f);
         }
-        let c = match self.mesh.dataflow() {
-            Dataflow::OutputStationary => self.run_os(a, b, d, fault),
-            Dataflow::WeightStationary => self.run_ws(a, b, d, fault),
-        };
+        match self.mesh.dataflow() {
+            Dataflow::OutputStationary => self.run_os(a, b, d, fault, out),
+            Dataflow::WeightStationary => self.run_ws(a, b, d, fault, out),
+        }
         if fault.is_some() {
             self.mesh.disarm();
         }
-        c
     }
 
     /// One compare per cycle: the entire injection overhead of ENFOR-SA.
@@ -109,7 +119,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         b: MatView<i8>,
         d: MatView<i32>,
         fault: Option<&Fault>,
-    ) -> Mat<i32> {
+        out: &mut Mat<i32>,
+    ) {
         let dim = self.mesh.dim();
         let k = a.cols();
         assert_eq!(a.rows(), dim, "A must have DIM rows");
@@ -119,7 +130,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
         self.mesh.reset();
         let mut inp = MeshInputs::idle(dim);
-        let mut out = StepOutput::new(dim);
+        let mut step_out = StepOutput::new(dim);
         let mut t: u64 = 0;
 
         // Phase 1: preload D (reversed rows down the accumulator chain).
@@ -132,7 +143,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 }
             }
             self.maybe_inject(fault, t, &mut inp);
-            self.mesh.step(&inp, &mut out);
+            self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
 
@@ -152,23 +163,24 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 inp.north_valid[c] = b_feed.live(c, tau);
             }
             self.maybe_inject(fault, t, &mut inp);
-            self.mesh.step(&inp, &mut out);
+            self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
 
-        // Phase 3: flush C through the south edge.
-        let mut collector = FlushCollector::new(dim);
+        // Phase 3: flush C through the south edge, draining into the
+        // caller's result buffer (recycled allocation, zeroed first).
+        let mut collector = FlushCollector::reusing(dim, std::mem::take(out));
         for p in 0..(2 * dim - 1) {
             inp.clear();
-            out.clear();
+            step_out.clear();
             if p < dim {
                 for c in 0..dim {
                     inp.north_propag[c] = true;
                 }
             }
             self.maybe_inject(fault, t, &mut inp);
-            self.mesh.step(&inp, &mut out);
-            collector.absorb(&out.south_c);
+            self.mesh.step(&inp, &mut step_out);
+            collector.absorb(&step_out.south_c);
             t += 1;
         }
         // A control-signal fault during the flush window can legitimately
@@ -180,7 +192,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             "fault-free flush did not drain DIM rows"
         );
         debug_assert_eq!(t, os_matmul_cycles(dim, k));
-        collector.c
+        *out = collector.into_mat();
     }
 
     /// Weight-stationary: B here is the stationary DIM x DIM weight tile,
@@ -192,7 +204,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         w: MatView<i8>,
         d: MatView<i32>,
         fault: Option<&Fault>,
-    ) -> Mat<i32> {
+        out: &mut Mat<i32>,
+    ) {
         let dim = self.mesh.dim();
         let m = a.rows();
         assert_eq!(a.cols(), dim, "A must have DIM cols");
@@ -202,7 +215,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
 
         self.mesh.reset();
         let mut inp = MeshInputs::idle(dim);
-        let mut out = StepOutput::new(dim);
+        let mut step_out = StepOutput::new(dim);
         let mut t: u64 = 0;
 
         // Phase 1: preload W through the d-chain (reversed rows).
@@ -215,7 +228,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 }
             }
             self.maybe_inject(fault, t, &mut inp);
-            self.mesh.step(&inp, &mut out);
+            self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
 
@@ -224,11 +237,11 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         let a_feed = SkewFeeder::from_cols(a);
         let d_feed = SkewFeeder::from_cols(d);
         let compute_len = m + 2 * dim - 2;
-        let mut c_out = Mat::zeros(m, dim);
+        out.reset(m, dim);
         let mut taken = vec![0usize; dim];
         for tau in 0..compute_len {
             inp.clear();
-            out.clear();
+            step_out.clear();
             for r in 0..dim {
                 inp.west_a[r] = a_feed.at(r, tau);
             }
@@ -237,11 +250,11 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 inp.north_valid[cc] = d_feed.live(cc, tau);
             }
             self.maybe_inject(fault, t, &mut inp);
-            self.mesh.step(&inp, &mut out);
+            self.mesh.step(&inp, &mut step_out);
             for cc in 0..dim {
-                if let Some(ps) = out.south_psum[cc] {
+                if let Some(ps) = step_out.south_psum[cc] {
                     if taken[cc] < m {
-                        c_out.set(taken[cc], cc, ps);
+                        out.set(taken[cc], cc, ps);
                         taken[cc] += 1;
                     }
                 }
@@ -252,7 +265,6 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             fault.is_some() || taken.iter().all(|&x| x == m),
             "fault-free WS drain incomplete"
         );
-        c_out
     }
 }
 

@@ -37,6 +37,15 @@ impl Cache {
         }
     }
 
+    /// Invalidate every line and clear statistics (power-on state),
+    /// keeping the tag/age allocations.
+    pub fn reset(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.age.fill(0);
+        self.hits = 0;
+        self.misses = 0;
+    }
+
     /// Look up `addr`; returns the stall cycles this access incurs.
     pub fn access(&mut self, addr: u64) -> u32 {
         let line = addr / self.line_bytes as u64;

@@ -105,6 +105,28 @@ impl Controller {
         self.fault = Some(fault);
     }
 
+    /// Power-on state: idle FSM, empty ROB, cleared rings, disarmed
+    /// fault, zeroed counters. Keeps every allocation.
+    pub fn reset(&mut self) {
+        let dim = self.dim();
+        self.mesh.reset();
+        self.rob.clear();
+        self.state = ExecState::Idle;
+        self.cfg_k = dim;
+        self.a_base = 0;
+        self.b_base = 0;
+        self.d_base = 0;
+        self.c_base = 0;
+        self.ring_a.data_mut().fill(0);
+        self.ring_b.data_mut().fill(0);
+        self.mesh_t = 0;
+        self.fault = None;
+        self.collector = None;
+        self.inp.clear();
+        self.out.clear();
+        self.matmuls_done = 0;
+    }
+
     /// One clock edge of the controller + mesh complex.
     pub fn tick(
         &mut self,

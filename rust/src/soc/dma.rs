@@ -19,6 +19,12 @@ impl MainMemory {
             burst_latency,
         }
     }
+
+    /// Zero the backing store without reallocating (the dominant cost a
+    /// per-trial `Soc::new` used to pay).
+    pub fn reset(&mut self) {
+        self.bytes.fill(0);
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +70,13 @@ impl Dma {
             xfer: None,
             rows_moved: 0,
         }
+    }
+
+    /// Abort any in-flight transfer and clear statistics (power-on state).
+    pub fn reset(&mut self) {
+        self.state = DmaState::Idle;
+        self.xfer = None;
+        self.rows_moved = 0;
     }
 
     pub fn busy(&self) -> bool {

@@ -33,6 +33,15 @@ impl Scratchpad {
         }
     }
 
+    /// Zero the SRAM, release the ports and clear statistics (power-on
+    /// state) without reallocating.
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+        self.read_busy.fill(false);
+        self.write_busy.fill(false);
+        self.conflicts = 0;
+    }
+
     pub fn rows(&self) -> usize {
         self.banks * self.rows_per_bank
     }
@@ -108,6 +117,11 @@ impl AccMem {
             row_elems,
             data: vec![0; rows * row_elems],
         }
+    }
+
+    /// Zero the accumulator SRAM (power-on state) without reallocating.
+    pub fn reset(&mut self) {
+        self.data.fill(0);
     }
 
     pub fn read_row(&self, row: usize) -> Result<&[i32]> {

@@ -91,6 +91,28 @@ impl Soc {
         self.ctrl.dim()
     }
 
+    /// Return the SoC to power-on state **without reallocating** its
+    /// large memories (4 MiB main memory, 256 KiB scratchpad, cache tag
+    /// arrays). Campaigns reuse one SoC across all `FullSoc` trials via
+    /// this reset instead of constructing a fresh `Soc::new(dim)` per
+    /// trial; `run_matmul` results after a reset are bit-identical to a
+    /// freshly built SoC (fault cycles are mesh-relative).
+    pub fn reset(&mut self) {
+        let dim = self.dim();
+        self.core = Core::new();
+        self.icache.reset();
+        self.dcache.reset();
+        self.xbar = Interconnect::new();
+        self.spad.reset();
+        self.accmem.reset();
+        self.dma.reset();
+        self.mem.reset();
+        self.ctrl.reset();
+        self.detail = UncoreDetail::new(dim);
+        self.cycles = 0;
+        self.icache_stall = 0;
+    }
+
     /// One SoC clock edge: every block evaluates, like the verilated SoC.
     pub fn tick(&mut self, prog: &[Insn]) -> Result<()> {
         self.cycles += 1;
@@ -146,6 +168,22 @@ impl Soc {
         d: MatView<i32>,
         fault: Option<Fault>,
     ) -> Result<Mat<i32>> {
+        let mut c = Mat::default();
+        self.run_matmul_into(a, b, d, fault, &mut c)?;
+        Ok(c)
+    }
+
+    /// [`Soc::run_matmul`] into a caller-provided buffer (reshaped and
+    /// zeroed in place) — the allocation-free seam the site-major trial
+    /// batches drive.
+    pub fn run_matmul_into(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        fault: Option<Fault>,
+        out: &mut Mat<i32>,
+    ) -> Result<()> {
         let dim = self.dim();
         let k = a.cols();
         anyhow::ensure!(a.rows() == dim, "A must have DIM rows");
@@ -208,11 +246,11 @@ impl Soc {
             guard += 1;
             anyhow::ensure!(guard < 10_000_000, "SoC run did not terminate");
         }
-        let mut c = Mat::zeros(dim, dim);
+        out.reset(dim, dim);
         for r in 0..dim {
-            c.row_mut(r).copy_from_slice(self.accmem.read_row(dim + r)?);
+            out.row_mut(r).copy_from_slice(self.accmem.read_row(dim + r)?);
         }
-        Ok(c)
+        Ok(())
     }
 }
 
@@ -260,6 +298,50 @@ mod tests {
         let soc = Soc::new(4);
         let mesh_state = soc.ctrl.mesh.state_elements();
         assert!(soc.state_elements() > 10 * mesh_state);
+    }
+
+    #[test]
+    fn reset_soc_matches_fresh_soc_bit_exactly() {
+        use crate::mesh::signal::SignalKind;
+        // Reusing one SoC via reset() must reproduce the fresh-SoC
+        // results bit-exactly, golden and faulty alike — the invariant
+        // the campaign's persistent-SoC trial batches rely on.
+        let dim = 4;
+        let mut rng = Rng::new(80);
+        let a1 = rng.mat_i8(dim, 6);
+        let b1 = rng.mat_i8(6, dim);
+        let d1 = rng.mat_i32(dim, dim, 50);
+        let a2 = rng.mat_i8(dim, dim);
+        let b2 = rng.mat_i8(dim, dim);
+        let d2 = rng.mat_i32(dim, dim, 50);
+        let f = Fault::new(1, 2, SignalKind::Acc, 12, (2 * dim - 1) as u64 + 2);
+
+        let fresh1 = Soc::new(dim)
+            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .unwrap();
+        let fresh2 = Soc::new(dim)
+            .run_matmul(a2.view(), b2.view(), d2.view(), None)
+            .unwrap();
+
+        let mut soc = Soc::new(dim);
+        let r1 = soc
+            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .unwrap();
+        let cycles_first = soc.cycles;
+        soc.reset();
+        assert_eq!(soc.cycles, 0);
+        let r2 = soc
+            .run_matmul(a2.view(), b2.view(), d2.view(), None)
+            .unwrap();
+        assert_eq!(r1, fresh1);
+        assert_eq!(r2, fresh2);
+        // reset also restores the timing state (cold caches), not just
+        // the architectural state
+        soc.reset();
+        let _ = soc
+            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .unwrap();
+        assert_eq!(soc.cycles, cycles_first);
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub enum SwTarget {
     Weight { layer: usize, ordinal: usize, elem: usize, bit: u8 },
 }
 
+impl SwTarget {
+    /// The top-level layer the flip applies at — the resume point when
+    /// the campaign replays only the suffix of the network.
+    pub fn layer(&self) -> usize {
+        match self {
+            SwTarget::LayerOutput { layer, .. } | SwTarget::Weight { layer, .. } => *layer,
+        }
+    }
+}
+
 /// A hook that applies one software-level fault during a forward pass.
 pub struct SwInjector {
     pub target: SwTarget,

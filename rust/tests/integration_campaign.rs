@@ -2,7 +2,7 @@
 //! end on small budgets — AVF vs PVF gap, backend equivalences, maps.
 
 use enfor_sa::campaign::{run_campaign, weight_exposure_map};
-use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
 use enfor_sa::dnn::models;
 
 fn cfg(backend: Backend, faults: u64, inputs: u64) -> CampaignConfig {
@@ -12,6 +12,7 @@ fn cfg(backend: Backend, faults: u64, inputs: u64) -> CampaignConfig {
         inputs,
         backend,
         offload_scope: OffloadScope::SingleTile,
+        engine: TrialEngine::SiteResume,
         signals: vec![],
         workers: 1,
     }

@@ -6,7 +6,7 @@
 
 use enfor_sa::campaign::campaign::run_input;
 use enfor_sa::campaign::{run_campaign, sample_trial};
-use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
 use enfor_sa::coordinator::run_parallel;
 use enfor_sa::dnn::models;
 use enfor_sa::dnn::GemmSiteId;
@@ -22,6 +22,12 @@ fn random_cfg(rng: &mut Rng) -> CampaignConfig {
             OffloadScope::SingleTile
         } else {
             OffloadScope::Layer
+        },
+        // both trial engines must satisfy every coordinator property
+        engine: if rng.chance(0.5) {
+            TrialEngine::SiteResume
+        } else {
+            TrialEngine::FullForward
         },
         signals: vec![],
         workers: 1 + rng.usize_below(4),

@@ -1,0 +1,144 @@
+//! Property tests pinning the site-resume trial engine against the
+//! full-forward oracle.
+//!
+//! Two invariants:
+//! 1. `forward_from(site, checkpoint)` is bit-identical to the full
+//!    `forward` for every resume layer of every model topology
+//!    (CNNs, residual/grouped/depthwise convs, token/attention stacks).
+//! 2. Fixed-seed campaigns produce identical results — trials,
+//!    critical, exposed, masked and the per-layer map — on both trial
+//!    engines, across backends and offload scopes, and across worker
+//!    counts (the site-major loop must preserve the coordinator's
+//!    worker-count invariance).
+
+use enfor_sa::campaign::{run_campaign, CampaignResult};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::models;
+use enfor_sa::util::Rng;
+
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.vuln.trials, b.vuln.trials, "{label}: trials");
+    assert_eq!(a.vuln.critical, b.vuln.critical, "{label}: critical");
+    assert_eq!(a.exposed_trials, b.exposed_trials, "{label}: exposed");
+    assert_eq!(a.masked_trials, b.masked_trials, "{label}: masked");
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{label}: layer map size");
+    for ((la, va), (lb, vb)) in a.per_layer.iter().zip(b.per_layer.iter()) {
+        assert_eq!(la, lb, "{label}: layer ids");
+        assert_eq!(va.trials, vb.trials, "{label}: layer {la} trials");
+        assert_eq!(va.critical, vb.critical, "{label}: layer {la} critical");
+    }
+}
+
+fn cfg(backend: Backend, engine: TrialEngine, scope: OffloadScope) -> CampaignConfig {
+    CampaignConfig {
+        seed: 0x5E5A_1E,
+        faults_per_layer: 3,
+        inputs: 2,
+        backend,
+        offload_scope: scope,
+        engine,
+        signals: vec![],
+        workers: 1,
+    }
+}
+
+/// Property 1: resumed passes equal full passes for every topology in
+/// the zoo's structural families and every resume layer.
+#[test]
+fn prop_forward_from_matches_forward_oracle() {
+    let zoo: Vec<enfor_sa::dnn::Model> = vec![
+        models::quicknet(11),
+        models::mobilenet_v2(12), // residual + depthwise + pointwise
+        models::deit_t(13),       // tokens + attention ordinals
+        models::googlenet(14),    // parallel concat branches
+    ];
+    let mut rng = Rng::new(0xF0);
+    for model in &zoo {
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let (logits, ckpt) = model.forward_checkpointed(&x);
+        assert_eq!(logits, golden, "{}: checkpointed golden pass", model.name);
+        for layer in 0..model.layers.len() {
+            let resumed = model.forward_from(layer, &ckpt, None);
+            assert_eq!(resumed, golden, "{}: resume at layer {layer}", model.name);
+        }
+    }
+}
+
+/// Property 2a: both trial engines are bit-identical across the
+/// mesh-level backends and both offload scopes.
+#[test]
+fn prop_engines_agree_across_backends_and_scopes() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    for backend in [Backend::EnforSa, Backend::Hdfit, Backend::SwOnly] {
+        for scope in [OffloadScope::SingleTile, OffloadScope::Layer] {
+            let resume = run_campaign(
+                &model,
+                &mesh,
+                &cfg(backend, TrialEngine::SiteResume, scope),
+            )
+            .unwrap();
+            let full = run_campaign(
+                &model,
+                &mesh,
+                &cfg(backend, TrialEngine::FullForward, scope),
+            )
+            .unwrap();
+            assert_bit_identical(&resume, &full, &format!("{backend}/{scope:?}"));
+        }
+    }
+}
+
+/// Property 2b: the whole-SoC backend (persistent SoC + reset between
+/// trials) agrees with the full-forward oracle too. Small budget: every
+/// trial drives the entire SoC model.
+#[test]
+fn prop_engines_agree_on_full_soc() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dim: 4,
+        ..Default::default()
+    };
+    let mut base = cfg(
+        Backend::FullSoc,
+        TrialEngine::SiteResume,
+        OffloadScope::SingleTile,
+    );
+    base.faults_per_layer = 1;
+    base.inputs = 1;
+    let resume = run_campaign(&model, &mesh, &base).unwrap();
+    base.engine = TrialEngine::FullForward;
+    let full = run_campaign(&model, &mesh, &base).unwrap();
+    assert_eq!(resume.vuln.trials, 5);
+    assert_bit_identical(&resume, &full, "full-soc");
+}
+
+/// Property 2c: the site-major (input, site)-sharded coordinator loop
+/// preserves worker-count invariance on both engines, and the engines
+/// agree under parallel execution as well.
+#[test]
+fn prop_site_major_loop_preserves_worker_invariance() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    for engine in [TrialEngine::SiteResume, TrialEngine::FullForward] {
+        let mut c = cfg(Backend::EnforSa, engine, OffloadScope::SingleTile);
+        c.workers = 1;
+        let one = run_parallel(&model, &mesh, &c, None).unwrap();
+        for workers in [2usize, 4, 7] {
+            c.workers = workers;
+            let many = run_parallel(&model, &mesh, &c, None).unwrap();
+            assert_bit_identical(&one, &many, &format!("{engine} workers={workers}"));
+        }
+    }
+    // and across engines under max sharding
+    let mut a = cfg(Backend::EnforSa, TrialEngine::SiteResume, OffloadScope::SingleTile);
+    let mut b = cfg(Backend::EnforSa, TrialEngine::FullForward, OffloadScope::SingleTile);
+    a.workers = 7;
+    b.workers = 3;
+    let ra = run_parallel(&model, &mesh, &a, None).unwrap();
+    let rb = run_parallel(&model, &mesh, &b, None).unwrap();
+    assert_bit_identical(&ra, &rb, "engines under parallel execution");
+}
