@@ -5,6 +5,7 @@
 //! (~42M faults, hours per model); this scaled harness defaults to a
 //! few hundred trials per model — override with env:
 //!   BENCH_FAULTS=..  BENCH_INPUTS=..  BENCH_MODELS=quicknet,ResNet18
+//!   BENCH_SCENARIO=seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>
 //!
 //! Set BENCH_OUT=path.json to also write a machine-readable snapshot
 //! (`benchkit::injection_snapshot_json` — the schema stored under
@@ -14,7 +15,7 @@
 //! Run: `cargo bench --bench injection_overhead`
 
 use enfor_sa::benchkit::{injection_snapshot_json, injection_table};
-use enfor_sa::config::{CampaignConfig, MeshConfig};
+use enfor_sa::config::{CampaignConfig, MeshConfig, Scenario};
 use enfor_sa::dnn::models;
 use enfor_sa::report::human_time;
 
@@ -36,14 +37,20 @@ fn main() {
                 .map(|i| i.name.to_string())
                 .collect()
         });
+    let scenario = std::env::var("BENCH_SCENARIO")
+        .ok()
+        .map(|s| Scenario::parse(&s).expect("bad BENCH_SCENARIO"))
+        .unwrap_or_default();
     let mesh_cfg = MeshConfig::default();
     let cc = CampaignConfig {
         faults_per_layer: faults,
         inputs,
+        scenario,
         ..Default::default()
     };
     println!(
-        "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, DIM8 OS)"
+        "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, \
+         scenario {scenario}, DIM8 OS)"
     );
     println!(
         "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9}",
@@ -89,7 +96,7 @@ fn main() {
     }
     if let Ok(path) = std::env::var("BENCH_OUT") {
         let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
-        let snap = injection_snapshot_json(&rows, faults, inputs, &label);
+        let snap = injection_snapshot_json(&rows, faults, inputs, scenario, &label);
         std::fs::write(&path, snap.pretty()).expect("writing BENCH_OUT snapshot");
         eprintln!("wrote snapshot {path}");
     }

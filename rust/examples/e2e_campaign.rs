@@ -16,7 +16,7 @@
 //! Results are recorded in EXPERIMENTS.md §E2E.
 
 use enfor_sa::campaign::{sample_trial, TrialFault};
-use enfor_sa::config::Dataflow;
+use enfor_sa::config::{Dataflow, Scenario};
 use enfor_sa::coordinator::Args;
 use enfor_sa::dnn::engine::synthetic_input;
 use enfor_sa::dnn::{argmax, models};
@@ -25,7 +25,7 @@ use enfor_sa::report::{format_table, human_time};
 use enfor_sa::runtime::quicknet::QuicknetPjrt;
 use enfor_sa::runtime::PjrtRuntime;
 use enfor_sa::soc::Soc;
-use enfor_sa::swfi::{sample_output_fault, SwInjector};
+use enfor_sa::swfi::sample_output_fault;
 use enfor_sa::util::Rng;
 use std::time::Instant;
 
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
         for info in &sites {
             for _ in 0..faults_per_layer {
                 let trial: TrialFault = sample_trial(
-                    info.site, info.m, info.k, info.n, dim, &mut irng, &[],
+                    Scenario::Seu, info.site, info.m, info.k, info.n, dim, &mut irng, &[],
                 );
                 let logits = qn.forward(&mut rt, &x, Some((trial, &mut mesh)))?;
                 rtl_trials += 1;
@@ -133,9 +133,12 @@ fn main() -> anyhow::Result<()> {
     {
         let mut soc = Soc::new(dim);
         for _ in 0..soc_trials {
-            std::hint::black_box(
-                soc.run_matmul(a_tile.view(), b_tile.view(), d_tile.view(), None)?,
-            );
+            std::hint::black_box(soc.run_matmul(
+                a_tile.view(),
+                b_tile.view(),
+                d_tile.view(),
+                &enfor_sa::mesh::FaultPlan::empty(),
+            )?);
         }
     }
     let soc_tile_s = t_soc.elapsed().as_secs_f64() / soc_trials as f64;

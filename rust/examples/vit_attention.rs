@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
             signals: vec![],
+            scenario: Default::default(),
             workers: 1,
         };
         let r = run_campaign(&model, &mesh_cfg, &cfg)?;

@@ -4,7 +4,7 @@
 //! code regenerates the paper's artifacts either way.
 
 use crate::campaign::{run_campaign, CampaignResult};
-use crate::config::{Backend, CampaignConfig, Dataflow, MeshConfig, TrialEngine};
+use crate::config::{Backend, CampaignConfig, Dataflow, MeshConfig, Scenario, TrialEngine};
 use crate::dnn::models;
 use crate::mat::Mat;
 use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
@@ -161,7 +161,7 @@ pub fn layer_forward(dims: &[usize]) -> Result<Vec<LayerForwardRow>> {
                     a.window(ti, 0, dim, k),
                     b.window(0, tj, k, dim),
                     d.window(ti, tj, dim, dim),
-                    None,
+                    &crate::mesh::FaultPlan::empty(),
                 )?);
                 tj += dim;
             }
@@ -249,14 +249,17 @@ pub fn injection_table(
 
 /// Serialize Table VI rows as the `BENCH_injection_overhead.json`
 /// snapshot schema (see `benchmarks/` in the repo root): per-model
-/// SW/RTL wall clocks, slowdown and vulnerability factors, campaign
+/// SW/RTL wall clocks, slowdown and vulnerability factors, the
+/// per-scenario outcome counts (masked / exposed / critical), campaign
 /// throughput and the site-resume speedup over the full-forward
-/// oracle, so future PRs can diff both the RTL-offload overhead and
-/// the trial-engine trajectory.
+/// oracle, so future PRs can diff the RTL-offload overhead, the
+/// trial-engine trajectory and the scenario mix. Schema v3 adds the
+/// campaign `scenario` label and per-model outcome rows.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
     inputs: u64,
+    scenario: Scenario,
     label: &str,
 ) -> Json {
     let models: Vec<Json> = rows
@@ -264,6 +267,7 @@ pub fn injection_snapshot_json(
         .map(|r| {
             Json::obj(vec![
                 ("model", Json::str(r.model.clone())),
+                ("scenario", Json::str(r.rtl.scenario.to_string())),
                 ("sw_wall_s", Json::num(r.sw.wall.as_secs_f64())),
                 ("rtl_wall_s", Json::num(r.rtl.wall.as_secs_f64())),
                 ("rtl_full_forward_wall_s", Json::num(r.rtl_full.wall.as_secs_f64())),
@@ -271,6 +275,9 @@ pub fn injection_snapshot_json(
                 ("pvf_pct", Json::num(r.pvf_pct())),
                 ("avf_pct", Json::num(r.avf_pct())),
                 ("trials", Json::num(r.rtl.vuln.trials as f64)),
+                ("masked", Json::num(r.rtl.masked_trials as f64)),
+                ("exposed", Json::num(r.rtl.exposed_trials as f64)),
+                ("critical", Json::num(r.rtl.vuln.critical as f64)),
                 ("trials_per_sec", Json::num(r.trials_per_sec())),
                 (
                     "resume_speedup_vs_full_forward",
@@ -281,8 +288,9 @@ pub fn injection_snapshot_json(
         .collect();
     let n = rows.len().max(1) as f64;
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v2")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v3")),
         ("label", Json::str(label)),
+        ("scenario", Json::str(scenario.to_string())),
         ("faults_per_layer", Json::num(faults_per_layer as f64)),
         ("inputs", Json::num(inputs as f64)),
         (
@@ -329,6 +337,33 @@ mod tests {
         let rows = layer_forward(&[4]).unwrap();
         assert!(rows[0].vs_full_soc() > 5.0, "{:?}", rows[0]);
         assert!(rows[0].vs_hdfit() > 1.0, "{:?}", rows[0]);
+    }
+
+    #[test]
+    fn snapshot_schema_v3_carries_the_scenario() {
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 2,
+            inputs: 1,
+            scenario: Scenario::Mbu { bits: 2 },
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some("enfor-sa/injection-overhead/v3")
+        );
+        assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
+        let models = j.get("models").and_then(Json::as_arr).unwrap();
+        let m0 = &models[0];
+        assert_eq!(m0.get("scenario").and_then(Json::as_str), Some("mbu:2"));
+        let trials = m0.get("trials").and_then(Json::as_f64).unwrap();
+        let masked = m0.get("masked").and_then(Json::as_f64).unwrap();
+        let exposed = m0.get("exposed").and_then(Json::as_f64).unwrap();
+        let critical = m0.get("critical").and_then(Json::as_f64).unwrap();
+        assert_eq!(trials, masked + exposed + critical);
+        assert!(trials > 0.0);
     }
 
     #[test]

@@ -27,17 +27,21 @@
 //! then trials site-major), so execution order no longer touches the
 //! RNG and the coordinator can shard work at `(input, site)`
 //! granularity while staying bit-identical per `(seed, input_idx)`.
+//! Each trial carries a whole fault *plan* sampled by the campaign's
+//! [`Scenario`] (`seu` default — bit-identical to the legacy
+//! single-fault campaigns; `mbu:<k>`, `burst:<r>`, `double-seu`,
+//! `stuck:<0|1>` — see the ROADMAP "Fault scenario API" contract).
 
 use super::fault::{sample_trial, TrialFault};
 use super::runner::{CrossLayerRunner, TileBackend};
-use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
+use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TrialEngine};
 use crate::dnn::engine::probe_input;
 use crate::dnn::engine::synthetic_input;
 use crate::dnn::{argmax, ActivationCheckpoints, GemmSiteInfo, Model, TensorI8};
 use crate::mesh::hdfit::InstrumentedMesh;
 use crate::mesh::{Mesh, SignalKind};
 use crate::soc::Soc;
-use crate::swfi::{sample_output_fault, SwInjector, SwTarget};
+use crate::swfi::{sample_sw_plan, SwInjector, SwPlan};
 use crate::util::stats::VulnEstimate;
 use crate::util::Rng;
 use anyhow::Result;
@@ -60,6 +64,8 @@ pub enum TrialOutcome {
 pub struct CampaignResult {
     pub model: String,
     pub backend: Backend,
+    /// The fault scenario every trial of this campaign sampled.
+    pub scenario: Scenario,
     pub vuln: VulnEstimate,
     pub exposed_trials: u64,
     pub masked_trials: u64,
@@ -86,10 +92,11 @@ impl CampaignResult {
         }
     }
 
-    pub fn empty(model: &str, backend: Backend) -> CampaignResult {
+    pub fn empty(model: &str, backend: Backend, scenario: Scenario) -> CampaignResult {
         CampaignResult {
             model: model.to_string(),
             backend,
+            scenario,
             vuln: VulnEstimate::default(),
             exposed_trials: 0,
             masked_trials: 0,
@@ -100,12 +107,14 @@ impl CampaignResult {
 }
 
 /// One pre-sampled fault trial (the backend decides which arm is used).
-#[derive(Clone, Copy, Debug)]
+/// Both arms carry a whole scenario plan; executors borrow trials from
+/// the shared input plan, so nothing here is cloned on the hot path.
+#[derive(Clone, Debug)]
 pub enum PlannedTrial {
     /// Cross-layer RTL trial (EnforSa / Hdfit / FullSoc backends).
     Rtl(TrialFault),
-    /// Software-level flip (SwOnly backend).
-    Sw(SwTarget),
+    /// Software-level fault plan (SwOnly backend).
+    Sw(SwPlan),
 }
 
 /// All `faults_per_layer` trials of one GEMM site, run back-to-back
@@ -179,9 +188,18 @@ pub fn plan_one(
             info: *info,
             trials: (0..cfg.faults_per_layer)
                 .map(|_| match cfg.backend {
-                    Backend::SwOnly => PlannedTrial::Sw(sample_output_fault(model, rng)),
+                    Backend::SwOnly => {
+                        PlannedTrial::Sw(sample_sw_plan(model, cfg.scenario, rng))
+                    }
                     _ => PlannedTrial::Rtl(sample_trial(
-                        info.site, info.m, info.k, info.n, dim, rng, kinds,
+                        cfg.scenario,
+                        info.site,
+                        info.m,
+                        info.k,
+                        info.n,
+                        dim,
+                        rng,
+                        kinds,
                     )),
                 })
                 .collect(),
@@ -242,10 +260,10 @@ impl TrialExecutor {
         match &mut self.sim {
             Sim::Sw => {
                 for t in &batch.trials {
-                    let PlannedTrial::Sw(target) = t else {
+                    let PlannedTrial::Sw(sw_plan) = t else {
                         unreachable!("RTL trial routed to the SW backend")
                     };
-                    let outcome = run_sw_trial(model, plan, *target, self.engine);
+                    let outcome = run_sw_trial(model, plan, sw_plan, self.engine);
                     record(result, layer, outcome);
                 }
             }
@@ -301,14 +319,14 @@ fn run_rtl_batch(
     let PlannedTrial::Rtl(first) = first else {
         unreachable!("SW trial routed to an RTL backend")
     };
-    let mut runner = CrossLayerRunner::new(*first, backend, scope);
+    let mut runner = CrossLayerRunner::new(first, backend, scope);
     runner.backend.reset();
     record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
     for t in rest {
         let PlannedTrial::Rtl(trial) = t else {
             unreachable!("SW trial routed to an RTL backend")
         };
-        runner.arm(*trial);
+        runner.arm(trial);
         runner.backend.reset();
         record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
     }
@@ -323,7 +341,7 @@ fn run_rtl_trial(
     match engine {
         TrialEngine::FullForward => {
             let logits = model.forward(&plan.x, Some(&mut *runner));
-            debug_assert!(runner.hit, "trial site must be reached");
+            debug_assert!(runner.hit, "trial site not reached: [{}]", runner.trial);
             classify(runner.exposed, argmax(&logits.data) != plan.golden_top1)
         }
         TrialEngine::SiteResume => {
@@ -335,7 +353,7 @@ fn run_rtl_trial(
             // phase 1: replay only the faulty layer from its checkpoint
             let act =
                 model.forward_layers(li, li + 1, ckpt.at(li).clone(), Some(&mut *runner));
-            debug_assert!(runner.hit, "trial site must be reached");
+            debug_assert!(runner.hit, "trial site not reached: [{}]", runner.trial);
             if !runner.exposed {
                 // The splice change-flag says the fault never escaped
                 // the array: the layer output is bit-identical to the
@@ -353,14 +371,15 @@ fn run_rtl_trial(
 fn run_sw_trial(
     model: &Model,
     plan: &InputPlan,
-    target: SwTarget,
+    sw_plan: &SwPlan,
     engine: TrialEngine,
 ) -> TrialOutcome {
-    let mut inj = SwInjector::new(target);
+    let mut inj = SwInjector::new(sw_plan);
     let logits = match (engine, &plan.ckpt) {
         (TrialEngine::SiteResume, Some(ckpt)) => {
-            // the flip applies at its target layer: resume there
-            model.forward_from(target.layer(), ckpt, Some(&mut inj))
+            // every target applies at or after the plan's earliest
+            // target layer: resume there
+            model.forward_from(sw_plan.resume_layer(), ckpt, Some(&mut inj))
         }
         _ => model.forward(&plan.x, Some(&mut inj)),
     };
@@ -394,7 +413,7 @@ pub fn run_campaign(
     // site list computed once per campaign and borrowed from here on
     let sites = campaign_sites(model);
     let mut rng = Rng::new(cfg.seed);
-    let mut result = CampaignResult::empty(&model.name, cfg.backend);
+    let mut result = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
     let mut exec = TrialExecutor::new(mesh_cfg, cfg);
 
     let t0 = Instant::now();
@@ -445,6 +464,7 @@ mod tests {
                 offload_scope: OffloadScope::SingleTile,
                 engine: TrialEngine::SiteResume,
                 signals: vec![],
+                scenario: Scenario::Seu,
                 workers: 1,
             },
         )
@@ -506,6 +526,54 @@ mod tests {
             assert_eq!(a.vuln.critical, b.vuln.critical, "{backend}");
             assert_eq!(a.exposed_trials, b.exposed_trials, "{backend}");
             assert_eq!(a.masked_trials, b.masked_trials, "{backend}");
+        }
+    }
+
+    #[test]
+    fn every_scenario_campaign_runs_and_partitions_outcomes() {
+        let model = models::quicknet(5);
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 2 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ] {
+            for backend in [Backend::EnforSa, Backend::SwOnly] {
+                let (mesh_cfg, mut cfg) = small_cfg(backend);
+                cfg.scenario = scenario;
+                let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+                assert_eq!(r.scenario, scenario);
+                assert_eq!(r.vuln.trials, 40, "{scenario}/{backend}");
+                assert_eq!(
+                    r.vuln.trials,
+                    r.masked_trials + r.exposed_trials + r.vuln.critical,
+                    "{scenario}/{backend}: outcomes must partition trials"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_campaigns_agree_across_trial_engines() {
+        // the engine-oracle invariant holds for every scenario, not
+        // just the paper's single-SEU model
+        let model = models::quicknet(5);
+        for scenario in [
+            Scenario::Mbu { bits: 2 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: false },
+        ] {
+            let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+            cfg.scenario = scenario;
+            cfg.engine = TrialEngine::SiteResume;
+            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            cfg.engine = TrialEngine::FullForward;
+            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(a.vuln.critical, b.vuln.critical, "{scenario}");
+            assert_eq!(a.exposed_trials, b.exposed_trials, "{scenario}");
+            assert_eq!(a.masked_trials, b.masked_trials, "{scenario}");
         }
     }
 

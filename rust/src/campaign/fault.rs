@@ -1,25 +1,56 @@
 //! Fault sampling for statistical injection campaigns.
 //!
 //! A *trial fault* picks (uniformly over the bit-weighted fault space):
-//! which GEMM tile of which layer is offloaded to RTL, which PE signal
-//! bit inside the mesh flips, and at which cycle of the offloaded
-//! matmul. This mirrors the paper's setup: one transient fault per
-//! inference, injected into the mesh while it computes one tile.
+//! which GEMM tile of which layer is offloaded to RTL, and a
+//! [`FaultPlan`] of mesh-level faults to inject while it computes —
+//! sampled by the campaign's [`Scenario`]. The default `seu` scenario
+//! mirrors the paper's setup (one transient fault per inference) and
+//! consumes the RNG stream in exactly the legacy order
+//! (`tile_i`, `tile_j`, signal+bit, row, col, cycle), so fixed-seed
+//! `--scenario seu` campaigns are bit-identical to the pre-redesign
+//! single-fault path. Every other scenario derives its plan from the
+//! same base draw (plus, for `double-seu`, one extra independent draw),
+//! keeping sampling deterministic per `(seed, scenario)`.
 
+use crate::config::Scenario;
 use crate::dnn::GemmSiteId;
 use crate::mesh::driver::os_matmul_cycles;
-use crate::mesh::{Fault, SignalKind};
+use crate::mesh::inject::Persistence;
+use crate::mesh::{Fault, FaultPlan, SignalAddr, SignalKind};
 use crate::util::Rng;
 
-/// A fully-specified cross-layer fault trial.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// A fully-specified cross-layer fault trial: one offloaded tile plus
+/// the fault plan injected while the RTL computes it.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TrialFault {
     pub site: GemmSiteId,
     /// Output-tile coordinates (units of DIM).
     pub tile_i: usize,
     pub tile_j: usize,
-    /// The mesh-level transient fault (cycle relative to the tile matmul).
-    pub fault: Fault,
+    /// The mesh-level fault plan (cycles relative to the tile matmul).
+    pub plan: FaultPlan,
+}
+
+impl TrialFault {
+    /// The legacy shape: a single-SEU trial.
+    pub fn single(site: GemmSiteId, tile_i: usize, tile_j: usize, fault: Fault) -> Self {
+        TrialFault {
+            site,
+            tile_i,
+            tile_j,
+            plan: FaultPlan::single(fault),
+        }
+    }
+}
+
+impl std::fmt::Display for TrialFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "site L{}#{} tile({},{}): {}",
+            self.site.layer, self.site.ordinal, self.tile_i, self.tile_j, self.plan
+        )
+    }
 }
 
 /// Sample a signal kind proportionally to its bit width, optionally
@@ -56,9 +87,68 @@ pub fn sample_mesh_fault(
     Fault::new(row, col, kind, bit, cycle)
 }
 
-/// Sample a complete trial for one GEMM site of shape (m, k, n).
+/// Derive a scenario's fault plan from its base SEU draw. Deterministic:
+/// only `double-seu` consumes additional RNG (one more base draw).
+fn scenario_plan(
+    scenario: Scenario,
+    base: Fault,
+    dim: usize,
+    k_inner: usize,
+    rng: &mut Rng,
+    kinds: &[SignalKind],
+) -> FaultPlan {
+    match scenario {
+        Scenario::Seu => FaultPlan::single(base),
+        Scenario::Mbu { bits } => {
+            // k adjacent bits of the SAME signal flip in the same cycle;
+            // the run is clamped into the signal's width so mbu:k on a
+            // 1-bit control signal degrades to an SEU
+            let width = base.addr.kind.width();
+            let n = bits.min(width);
+            let start = base.bit.min(width - n);
+            FaultPlan::new(
+                (start..start + n)
+                    .map(|bit| Fault { bit, ..base })
+                    .collect(),
+            )
+        }
+        Scenario::Burst { radius } => {
+            // same-cycle SEUs across every PE within Chebyshev radius r
+            // of the struck PE (clipped at the mesh edges), same signal
+            // and bit — a spatially-correlated particle strike
+            let r0 = base.addr.row.saturating_sub(radius);
+            let r1 = (base.addr.row + radius).min(dim - 1);
+            let c0 = base.addr.col.saturating_sub(radius);
+            let c1 = (base.addr.col + radius).min(dim - 1);
+            let mut faults = Vec::with_capacity((r1 - r0 + 1) * (c1 - c0 + 1));
+            for row in r0..=r1 {
+                for col in c0..=c1 {
+                    faults.push(Fault {
+                        addr: SignalAddr::new(row, col, base.addr.kind),
+                        ..base
+                    });
+                }
+            }
+            FaultPlan::new(faults)
+        }
+        Scenario::DoubleSeu => {
+            // two independent space/time draws in one tile
+            let second = sample_mesh_fault(dim, k_inner, rng, kinds);
+            FaultPlan::new(vec![base, second])
+        }
+        Scenario::StuckAt { value } => FaultPlan::single(Fault {
+            persistence: Persistence::StuckAt(value),
+            ..base
+        }),
+    }
+}
+
+/// Sample a complete trial for one GEMM site of shape (m, k, n) under
+/// `scenario`. For [`Scenario::Seu`] this consumes the RNG stream in
+/// exactly the legacy single-fault order.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_trial(
+    scenario: Scenario,
     site: GemmSiteId,
     m: usize,
     k: usize,
@@ -69,17 +159,22 @@ pub fn sample_trial(
 ) -> TrialFault {
     let tiles_i = m.div_ceil(dim);
     let tiles_j = n.div_ceil(dim);
+    let tile_i = rng.usize_below(tiles_i);
+    let tile_j = rng.usize_below(tiles_j);
+    let base = sample_mesh_fault(dim, k, rng, kinds);
     TrialFault {
         site,
-        tile_i: rng.usize_below(tiles_i),
-        tile_j: rng.usize_below(tiles_j),
-        fault: sample_mesh_fault(dim, k, rng, kinds),
+        tile_i,
+        tile_j,
+        plan: scenario_plan(scenario, base, dim, k, rng, kinds),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const SITE: GemmSiteId = GemmSiteId { layer: 1, ordinal: 0 };
 
     #[test]
     fn signal_sampling_is_bit_weighted() {
@@ -115,26 +210,154 @@ mod tests {
     #[test]
     fn trial_bounds_respected() {
         let mut rng = Rng::new(63);
-        let site = GemmSiteId { layer: 1, ordinal: 0 };
         for _ in 0..500 {
-            let t = sample_trial(site, 100, 27, 16, 8, &mut rng, &[]);
+            let t = sample_trial(Scenario::Seu, SITE, 100, 27, 16, 8, &mut rng, &[]);
             assert!(t.tile_i < 13);
             assert!(t.tile_j < 2);
-            assert!(t.fault.addr.row < 8 && t.fault.addr.col < 8);
-            assert!(t.fault.cycle < os_matmul_cycles(8, 27));
+            assert_eq!(t.plan.len(), 1);
+            let f = t.plan.faults()[0];
+            assert!(f.addr.row < 8 && f.addr.col < 8);
+            assert!(f.cycle < os_matmul_cycles(8, 27));
         }
     }
 
     #[test]
-    fn sampling_is_deterministic() {
-        let site = GemmSiteId { layer: 0, ordinal: 0 };
-        let mut r1 = Rng::new(64);
-        let mut r2 = Rng::new(64);
-        for _ in 0..50 {
+    fn sampling_is_deterministic_per_scenario() {
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 3 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ] {
+            let mut r1 = Rng::new(64);
+            let mut r2 = Rng::new(64);
+            for _ in 0..50 {
+                assert_eq!(
+                    sample_trial(scenario, SITE, 64, 64, 64, 8, &mut r1, &[]),
+                    sample_trial(scenario, SITE, 64, 64, 64, 8, &mut r2, &[]),
+                    "{scenario}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seu_scenario_reproduces_the_legacy_rng_order() {
+        // the compatibility contract: `seu` consumes exactly the draws
+        // of the pre-redesign sampler, in the same order
+        let mut s_rng = Rng::new(65);
+        let mut l_rng = Rng::new(65);
+        for _ in 0..200 {
+            let t = sample_trial(Scenario::Seu, SITE, 100, 27, 16, 8, &mut s_rng, &[]);
+            // legacy order, drawn manually:
+            let tile_i = l_rng.usize_below(100usize.div_ceil(8));
+            let tile_j = l_rng.usize_below(16usize.div_ceil(8));
+            let fault = sample_mesh_fault(8, 27, &mut l_rng, &[]);
+            assert_eq!(t, TrialFault::single(SITE, tile_i, tile_j, fault));
+        }
+        // and the streams stay in lockstep afterwards
+        assert_eq!(s_rng.next_u64(), l_rng.next_u64());
+    }
+
+    #[test]
+    fn mbu_flips_adjacent_bits_of_one_signal() {
+        let mut rng = Rng::new(66);
+        for bits in [1u8, 2, 4, 8, 32] {
+            for _ in 0..100 {
+                let t = sample_trial(
+                    Scenario::Mbu { bits },
+                    SITE,
+                    64,
+                    27,
+                    64,
+                    8,
+                    &mut rng,
+                    &[],
+                );
+                let fs = t.plan.faults();
+                let kind = fs[0].addr.kind;
+                let want = bits.min(kind.width()) as usize;
+                assert_eq!(fs.len(), want, "bits={bits} kind={kind}");
+                for w in fs.windows(2) {
+                    assert_eq!(w[1].bit, w[0].bit + 1, "adjacent bits");
+                    assert_eq!(w[0].addr, w[1].addr, "same signal");
+                    assert_eq!(w[0].cycle, w[1].cycle, "same cycle");
+                }
+                assert!(fs.last().unwrap().bit < kind.width());
+            }
+        }
+    }
+
+    #[test]
+    fn burst_covers_the_chebyshev_ball_clipped_to_the_mesh() {
+        let mut rng = Rng::new(67);
+        let dim = 8;
+        for radius in [0usize, 1, 2, 7] {
+            for _ in 0..100 {
+                let t = sample_trial(
+                    Scenario::Burst { radius },
+                    SITE,
+                    64,
+                    27,
+                    64,
+                    dim,
+                    &mut rng,
+                    &[],
+                );
+                let fs = t.plan.faults();
+                let full = (2 * radius + 1) * (2 * radius + 1);
+                assert!(fs.len() <= full && !fs.is_empty());
+                let base = fs[0];
+                for f in fs {
+                    assert!(f.addr.row < dim && f.addr.col < dim);
+                    assert_eq!(f.bit, base.bit);
+                    assert_eq!(f.cycle, base.cycle);
+                    assert_eq!(f.addr.kind, base.addr.kind);
+                }
+                // pairwise-distinct PEs
+                let set: std::collections::HashSet<_> =
+                    fs.iter().map(|f| (f.addr.row, f.addr.col)).collect();
+                assert_eq!(set.len(), fs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn double_seu_draws_two_independent_faults() {
+        let mut rng = Rng::new(68);
+        let t = sample_trial(Scenario::DoubleSeu, SITE, 64, 27, 64, 8, &mut rng, &[]);
+        assert_eq!(t.plan.len(), 2);
+    }
+
+    #[test]
+    fn stuck_scenario_activates_stuck_at_persistence() {
+        let mut rng = Rng::new(69);
+        for value in [false, true] {
+            let t = sample_trial(
+                Scenario::StuckAt { value },
+                SITE,
+                64,
+                27,
+                64,
+                8,
+                &mut rng,
+                &[],
+            );
+            assert_eq!(t.plan.len(), 1);
             assert_eq!(
-                sample_trial(site, 64, 64, 64, 8, &mut r1, &[]),
-                sample_trial(site, 64, 64, 64, 8, &mut r2, &[])
+                t.plan.faults()[0].persistence,
+                Persistence::StuckAt(value)
             );
         }
+    }
+
+    #[test]
+    fn display_includes_site_and_plan() {
+        let t = TrialFault::single(SITE, 2, 1, Fault::new(0, 3, SignalKind::Acc, 7, 11));
+        assert_eq!(
+            t.to_string(),
+            "site L1#0 tile(2,1): PE(0,3).acc[bit 7] @ cycle 11"
+        );
     }
 }

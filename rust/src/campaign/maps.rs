@@ -75,14 +75,14 @@ pub fn control_avf_map(
     for r in 0..dim {
         for c in 0..dim {
             for _ in 0..trials_per_pe {
-                let trial = TrialFault {
-                    site: info.site,
-                    tile_i: rng.usize_below(info.m.div_ceil(dim)),
-                    tile_j: rng.usize_below(info.n.div_ceil(dim)),
-                    fault: Fault::new(r, c, kind, 0, rng.below(cycles)),
-                };
+                let trial = TrialFault::single(
+                    info.site,
+                    rng.usize_below(info.m.div_ceil(dim)),
+                    rng.usize_below(info.n.div_ceil(dim)),
+                    Fault::new(r, c, kind, 0, rng.below(cycles)),
+                );
                 let mut runner = CrossLayerRunner::new(
-                    trial,
+                    &trial,
                     TileBackend::Mesh(&mut mesh),
                     OffloadScope::SingleTile,
                 );

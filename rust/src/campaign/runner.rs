@@ -5,10 +5,13 @@
 //! software path until the target GEMM site is reached; there, the
 //! runner hands the RTL backend a zero-copy, DIM-padded [`MatView`]
 //! window into the layer's existing flat operand buffers, executes it
-//! with the fault armed, and splices the (possibly corrupted) int32 tile
-//! back into the layer's accumulator with one strided copy — the rest of
-//! the inference continues in software. No per-trial tile allocation
-//! happens on this path (the hot path of the whole Table VI comparison).
+//! with the trial's [`FaultPlan`] armed, and splices the (possibly
+//! corrupted) int32 tile back into the layer's accumulator with one
+//! strided copy — the rest of the inference continues in software. No
+//! per-trial allocation happens on this path (the hot path of the whole
+//! Table VI comparison): the native result is computed directly into
+//! the layer's reusable accumulator and the RTL tile drains into the
+//! runner's persistent scratch.
 
 use super::fault::TrialFault;
 use crate::config::OffloadScope;
@@ -18,7 +21,7 @@ use crate::mat::{Mat, MatView, MatViewMut};
 use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
 use crate::mesh::hdfit::InstrumentedMesh;
 
-use crate::mesh::{Fault, Mesh, MeshSim};
+use crate::mesh::{FaultPlan, Mesh, MeshSim};
 use crate::soc::Soc;
 
 /// Which simulator executes the offloaded tile.
@@ -40,18 +43,19 @@ impl<'a> TileBackend<'a> {
         }
     }
 
-    /// Run one DIM x DIM-output tile matmul (full-K stream), with an
-    /// optional transient fault. The public software↔RTL seam: operands
-    /// are borrowed windows into the caller's flat buffers.
+    /// Run one DIM x DIM-output tile matmul (full-K stream), injecting
+    /// the scenario's fault plan (empty plan = golden). The public
+    /// software↔RTL seam: operands are borrowed windows into the
+    /// caller's flat buffers.
     pub fn run_tile(
         &mut self,
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<&Fault>,
+        plan: &FaultPlan,
     ) -> anyhow::Result<Mat<i32>> {
         let mut out = Mat::default();
-        self.run_tile_into(a, b, d, fault, &mut out)?;
+        self.run_tile_into(a, b, d, plan, &mut out)?;
         Ok(out)
     }
 
@@ -64,13 +68,13 @@ impl<'a> TileBackend<'a> {
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<&Fault>,
+        plan: &FaultPlan,
         out: &mut Mat<i32>,
     ) -> anyhow::Result<()> {
         match self {
-            TileBackend::Mesh(m) => MatmulDriver::new(*m).matmul_into(a, b, d, fault, out),
-            TileBackend::Hdfit(m) => MatmulDriver::new(*m).matmul_into(a, b, d, fault, out),
-            TileBackend::Soc(s) => s.run_matmul_into(a, b, d, fault.copied(), out)?,
+            TileBackend::Mesh(m) => MatmulDriver::new(*m).matmul_into(a, b, d, plan, out),
+            TileBackend::Hdfit(m) => MatmulDriver::new(*m).matmul_into(a, b, d, plan, out),
+            TileBackend::Soc(s) => s.run_matmul_into(a, b, d, plan, out)?,
         }
         Ok(())
     }
@@ -86,13 +90,13 @@ impl<'a> TileBackend<'a> {
     }
 
     /// Whole-layer offload (ablation D3): every tile through RTL, the
-    /// fault armed only on the target tile.
+    /// fault plan armed only on the target tile.
     pub fn run_layer(
         &mut self,
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: &Fault,
+        plan: &FaultPlan,
         tile_i: usize,
         tile_j: usize,
     ) -> anyhow::Result<Mat<i32>> {
@@ -104,7 +108,7 @@ impl<'a> TileBackend<'a> {
                 anyhow::bail!("whole-layer offload through the SoC is not supported")
             }
         };
-        // redo the faulty tile with the fault and splice. The tile gets
+        // redo the faulty tile with the plan and splice. The tile gets
         // the full-K stream, exactly like every tile of tiled_matmul_os.
         let dim = self.dim();
         let k = a.cols();
@@ -113,7 +117,7 @@ impl<'a> TileBackend<'a> {
             a.sub(ti, 0, dim, k),
             b.sub(0, tj, k, dim),
             d.sub(ti, tj, dim, dim),
-            Some(fault),
+            plan,
         )?;
         c.window_mut(ti, tj, dim, dim).splice_from(&c_tile);
         Ok(c)
@@ -123,12 +127,12 @@ impl<'a> TileBackend<'a> {
 /// GEMM hook that performs the cross-layer offload for one trial.
 ///
 /// A runner is built once per **site batch** and re-armed per trial
-/// ([`CrossLayerRunner::arm`]): the backend borrow and the scratch
-/// result tile persist across all `faults_per_layer` trials of a site,
-/// so back-to-back trials amortize both the backend state and every
-/// result allocation.
+/// ([`CrossLayerRunner::arm`]): the backend borrow, the borrowed trial
+/// (plans live in the input's pre-sampled batch, so re-arming allocates
+/// nothing) and the scratch result tile persist across all
+/// `faults_per_layer` trials of a site.
 pub struct CrossLayerRunner<'a> {
-    pub trial: TrialFault,
+    pub trial: &'a TrialFault,
     pub backend: TileBackend<'a>,
     pub scope: OffloadScope,
     /// Set when the target site was reached.
@@ -136,13 +140,12 @@ pub struct CrossLayerRunner<'a> {
     /// Set when the RTL tile differed from the fault-free tile (the
     /// fault was *exposed* to the software layer — paper Fig. 5b).
     pub exposed: bool,
-    /// Reusable DIM x DIM result tile shared by every trial in a batch
-    /// (the ROADMAP "arena for the per-trial result Mat" item).
+    /// Reusable DIM x DIM result tile shared by every trial in a batch.
     scratch: Mat<i32>,
 }
 
 impl<'a> CrossLayerRunner<'a> {
-    pub fn new(trial: TrialFault, backend: TileBackend<'a>, scope: OffloadScope) -> Self {
+    pub fn new(trial: &'a TrialFault, backend: TileBackend<'a>, scope: OffloadScope) -> Self {
         let dim = backend.dim();
         CrossLayerRunner {
             trial,
@@ -156,7 +159,7 @@ impl<'a> CrossLayerRunner<'a> {
 
     /// Re-arm for the next trial of a batch: fresh trial and flags, same
     /// backend borrow, same scratch buffer.
-    pub fn arm(&mut self, trial: TrialFault) {
+    pub fn arm(&mut self, trial: &'a TrialFault) {
         self.trial = trial;
         self.hit = false;
         self.exposed = false;
@@ -164,9 +167,9 @@ impl<'a> CrossLayerRunner<'a> {
 }
 
 impl GemmHook for CrossLayerRunner<'_> {
-    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
         if call.site != self.trial.site || self.hit {
-            return None;
+            return false;
         }
         self.hit = true;
         let dim = self.backend.dim();
@@ -181,41 +184,42 @@ impl GemmHook for CrossLayerRunner<'_> {
         let b_full = MatView::full(call.b, k, n);
         let d_full = MatView::full(call.d, m, n);
 
-        // native full result first
-        let mut c = vec![0i32; m * n];
-        gemm_i8(m, k, n, call.a, call.b, call.d, &mut c);
+        // native full result first, computed directly into the layer's
+        // reusable accumulator — no per-trial allocation
+        out.resize(m * n, 0);
+        gemm_i8(m, k, n, call.a, call.b, call.d, out);
 
         if self.scope == OffloadScope::Layer {
             // ablation: run the ENTIRE layer through RTL
             let cf = self
                 .backend
-                .run_layer(a_full, b_full, d_full, &self.trial.fault, ti, tj)
-                .expect("layer offload failed");
-            let flat = cf.into_vec();
-            self.exposed = flat != c;
-            return Some(flat);
+                .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
+                .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
+            self.exposed = cf.data() != &out[..];
+            out.copy_from_slice(cf.data());
+            return true;
         }
 
         // ENFOR-SA single-tile offload: the DIM-padded tile is a
         // zero-copy window into the layer's buffers; the RTL result
         // drains into the runner's scratch tile (no allocation)
         let (ri, cj) = (ti * dim, tj * dim);
-        self.backend
-            .run_tile_into(
-                a_full.sub(ri, 0, dim, k),
-                b_full.sub(0, cj, k, dim),
-                d_full.sub(ri, cj, dim, dim),
-                Some(&self.trial.fault),
-                &mut self.scratch,
-            )
-            .expect("tile offload failed");
+        if let Err(e) = self.backend.run_tile_into(
+            a_full.sub(ri, 0, dim, k),
+            b_full.sub(0, cj, k, dim),
+            d_full.sub(ri, cj, dim, dim),
+            &self.trial.plan,
+            &mut self.scratch,
+        ) {
+            panic!("tile offload failed for [{}]: {e:#}", self.trial);
+        }
         // splice the RTL tile back into the accumulator (one strided
         // copy; a changed element means the fault escaped the array)
-        let mut target = MatViewMut::window(&mut c, m, n, n, ri, cj, dim, dim);
+        let mut target = MatViewMut::window(out, m, n, n, ri, cj, dim, dim);
         if target.splice_from(&self.scratch) {
             self.exposed = true;
         }
-        Some(c)
+        true
     }
 }
 
@@ -226,16 +230,16 @@ mod tests {
     use crate::dnn::engine::synthetic_input;
     use crate::dnn::models;
     use crate::dnn::GemmSiteId;
-    use crate::mesh::SignalKind;
+    use crate::mesh::{Fault, SignalKind};
     use crate::util::Rng;
 
     fn a_trial(cycle: u64) -> TrialFault {
-        TrialFault {
-            site: GemmSiteId { layer: 1, ordinal: 0 },
-            tile_i: 0,
-            tile_j: 0,
-            fault: Fault::new(0, 0, SignalKind::Acc, 30, cycle),
-        }
+        TrialFault::single(
+            GemmSiteId { layer: 1, ordinal: 0 },
+            0,
+            0,
+            Fault::new(0, 0, SignalKind::Acc, 30, cycle),
+        )
     }
 
     #[test]
@@ -246,17 +250,17 @@ mod tests {
         let mut rng = Rng::new(71);
         let x = synthetic_input(&model.input_shape, &mut rng);
         let golden = model.forward(&x, None);
-        // a propag fault during an idle edge cycle: fully masked
+        // a valid-flip during an idle edge cycle: fully masked
         let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
-        let trial = TrialFault {
-            site: GemmSiteId { layer: 1, ordinal: 0 },
-            tile_i: 0,
-            tile_j: 0,
+        let trial = TrialFault::single(
+            GemmSiteId { layer: 1, ordinal: 0 },
+            0,
+            0,
             // valid-flip at the very last flush cycle: no effect
-            fault: Fault::new(7, 7, SignalKind::Valid, 0, 1),
-        };
+            Fault::new(7, 7, SignalKind::Valid, 0, 1),
+        );
         let mut runner =
-            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
         let out = model.forward(&x, Some(&mut runner));
         assert!(runner.hit);
         assert!(!runner.exposed);
@@ -272,7 +276,7 @@ mod tests {
         // bit 30 of an accumulator mid-compute: massive corruption
         let trial = a_trial(20);
         let mut runner =
-            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
         let _ = model.forward(&x, Some(&mut runner));
         assert!(runner.hit);
         assert!(runner.exposed);
@@ -287,7 +291,7 @@ mod tests {
 
         let mut mesh1 = Mesh::new(8, Dataflow::OutputStationary);
         let mut r1 = CrossLayerRunner::new(
-            trial,
+            &trial,
             TileBackend::Mesh(&mut mesh1),
             OffloadScope::SingleTile,
         );
@@ -295,7 +299,7 @@ mod tests {
 
         let mut mesh2 = Mesh::new(8, Dataflow::OutputStationary);
         let mut r2 =
-            CrossLayerRunner::new(trial, TileBackend::Mesh(&mut mesh2), OffloadScope::Layer);
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh2), OffloadScope::Layer);
         let out2 = model.forward(&x, Some(&mut r2));
 
         assert_eq!(out1, out2, "both scopes yield identical faulty outputs");
@@ -311,7 +315,7 @@ mod tests {
         let trials = [a_trial(20), a_trial(2), a_trial(33)];
 
         let mut fresh = Vec::new();
-        for t in trials {
+        for t in &trials {
             let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
             let mut r = CrossLayerRunner::new(
                 t,
@@ -324,13 +328,13 @@ mod tests {
 
         let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
         let mut r = CrossLayerRunner::new(
-            trials[0],
+            &trials[0],
             TileBackend::Mesh(&mut mesh),
             OffloadScope::SingleTile,
         );
         for (i, t) in trials.iter().enumerate() {
             if i > 0 {
-                r.arm(*t);
+                r.arm(t);
             }
             r.backend.reset();
             let out = model.forward(&x, Some(&mut r));
@@ -348,7 +352,7 @@ mod tests {
 
         let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
         let mut r1 = CrossLayerRunner::new(
-            trial,
+            &trial,
             TileBackend::Mesh(&mut mesh),
             OffloadScope::SingleTile,
         );
@@ -356,12 +360,38 @@ mod tests {
 
         let mut hm = InstrumentedMesh::new(8);
         let mut r2 = CrossLayerRunner::new(
-            trial,
+            &trial,
             TileBackend::Hdfit(&mut hm),
             OffloadScope::SingleTile,
         );
         let out_hdfit = model.forward(&x, Some(&mut r2));
         assert_eq!(out_mesh, out_hdfit);
+    }
+
+    #[test]
+    fn multi_fault_trial_runs_through_the_hook() {
+        // an MBU-style plan (two adjacent Acc bits) must expose at least
+        // as much as either single flip, and the hook must classify it
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(77);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let site = GemmSiteId { layer: 1, ordinal: 0 };
+        let f1 = Fault::new(0, 0, SignalKind::Acc, 30, 20);
+        let f2 = Fault::new(0, 0, SignalKind::Acc, 29, 20);
+        let trial = TrialFault {
+            site,
+            tile_i: 0,
+            tile_j: 0,
+            plan: FaultPlan::new(vec![f1, f2]),
+        };
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut runner =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let out = model.forward(&x, Some(&mut runner));
+        assert!(runner.hit);
+        assert!(runner.exposed, "two high Acc bits mid-compute must escape");
+        assert_ne!(out, golden);
     }
 
     #[test]
@@ -373,9 +403,9 @@ mod tests {
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        let f = Fault::new(0, 0, SignalKind::Acc, 0, 0);
+        let plan = FaultPlan::single(Fault::new(0, 0, SignalKind::Acc, 0, 0));
         let err = backend
-            .run_layer(a.view(), b.view(), d.view(), &f, 0, 0)
+            .run_layer(a.view(), b.view(), d.view(), &plan, 0, 0)
             .unwrap_err();
         assert!(format!("{err}").contains("not supported"));
     }

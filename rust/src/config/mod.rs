@@ -134,6 +134,76 @@ impl std::fmt::Display for TrialEngine {
     }
 }
 
+/// Fault scenario sampled for every trial of a campaign. Each scenario
+/// is a deterministic sampler producing a `FaultPlan` per trial; `seu`
+/// (the paper's model, the default) reproduces the legacy single-fault
+/// sampling bit-exactly for a fixed seed.
+///
+/// CLI / JSON grammar (`--scenario` / `"scenario"`):
+///
+/// * `seu` — one transient single-bit flip (default)
+/// * `mbu:<k>` — multi-bit upset: `k >= 1` adjacent bits of one sampled
+///   signal flip in the same cycle (clamped to the signal width)
+/// * `burst:<r>` — spatially-correlated strike: the sampled SEU is
+///   replicated same-cycle across every PE within Chebyshev radius `r`
+/// * `double-seu` — two independent space/time SEU draws in one tile
+/// * `stuck:<0|1>` — permanent stuck-at-`v` defect active from the
+///   sampled cycle onward (the dormant `Persistence::StuckAt` model)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Scenario {
+    #[default]
+    Seu,
+    Mbu {
+        bits: u8,
+    },
+    Burst {
+        radius: usize,
+    },
+    DoubleSeu,
+    StuckAt {
+        value: bool,
+    },
+}
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "seu" => Some(Scenario::Seu),
+            "double-seu" | "double_seu" | "doubleseu" => Some(Scenario::DoubleSeu),
+            _ => {
+                if let Some(v) = s.strip_prefix("mbu:") {
+                    let bits: u8 = v.parse().ok()?;
+                    (bits >= 1).then_some(Scenario::Mbu { bits })
+                } else if let Some(v) = s.strip_prefix("burst:") {
+                    let radius: usize = v.parse().ok()?;
+                    (radius <= 255).then_some(Scenario::Burst { radius })
+                } else if let Some(v) = s.strip_prefix("stuck:") {
+                    match v {
+                        "0" => Some(Scenario::StuckAt { value: false }),
+                        "1" => Some(Scenario::StuckAt { value: true }),
+                        _ => None,
+                    }
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scenario::Seu => write!(f, "seu"),
+            Scenario::Mbu { bits } => write!(f, "mbu:{bits}"),
+            Scenario::Burst { radius } => write!(f, "burst:{radius}"),
+            Scenario::DoubleSeu => write!(f, "double-seu"),
+            Scenario::StuckAt { value } => write!(f, "stuck:{}", *value as u8),
+        }
+    }
+}
+
 /// Hardware (mesh) configuration — the paper's "compilation phase" knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct MeshConfig {
@@ -177,6 +247,9 @@ pub struct CampaignConfig {
     pub engine: TrialEngine,
     /// Restrict injection to these signal kinds (empty = all).
     pub signals: Vec<String>,
+    /// Fault scenario sampled per trial (`seu` reproduces the legacy
+    /// single-fault campaigns bit-exactly).
+    pub scenario: Scenario,
     /// Worker threads for the campaign coordinator.
     pub workers: usize,
 }
@@ -191,6 +264,7 @@ impl Default for CampaignConfig {
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
             signals: vec![],
+            scenario: Scenario::Seu,
             workers: 1,
         }
     }
@@ -275,6 +349,10 @@ impl Config {
                 cfg.campaign.engine = TrialEngine::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad trial_engine {v}"))?;
             }
+            if let Some(v) = c.get("scenario").and_then(Json::as_str) {
+                cfg.campaign.scenario = Scenario::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad scenario {v}"))?;
+            }
             if let Some(v) = c.get("workers").and_then(Json::as_usize) {
                 cfg.campaign.workers = v;
             }
@@ -339,6 +417,7 @@ mod tests {
               "campaign": {"seed": 7, "faults_per_layer": 10, "inputs": 2,
                            "backend": "hdfit", "offload_scope": "layer",
                            "trial_engine": "full-forward",
+                           "scenario": "mbu:2",
                            "workers": 2, "signals": ["propag", "valid"]},
               "artifacts_dir": "art"
             }"#,
@@ -349,6 +428,7 @@ mod tests {
         assert_eq!(c.campaign.backend, Backend::Hdfit);
         assert_eq!(c.campaign.offload_scope, OffloadScope::Layer);
         assert_eq!(c.campaign.engine, TrialEngine::FullForward);
+        assert_eq!(c.campaign.scenario, Scenario::Mbu { bits: 2 });
         assert_eq!(c.campaign.signals.len(), 2);
         assert_eq!(c.artifacts_dir, "art");
     }
@@ -362,6 +442,32 @@ mod tests {
         assert!(
             Config::from_json_str(r#"{"campaign": {"trial_engine": "bogus"}}"#).is_err()
         );
+        assert!(
+            Config::from_json_str(r#"{"campaign": {"scenario": "bogus"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn scenario_grammar_round_trips() {
+        let cases = [
+            ("seu", Scenario::Seu),
+            ("mbu:2", Scenario::Mbu { bits: 2 }),
+            ("mbu:8", Scenario::Mbu { bits: 8 }),
+            ("burst:1", Scenario::Burst { radius: 1 }),
+            ("burst:0", Scenario::Burst { radius: 0 }),
+            ("double-seu", Scenario::DoubleSeu),
+            ("stuck:0", Scenario::StuckAt { value: false }),
+            ("stuck:1", Scenario::StuckAt { value: true }),
+        ];
+        for (s, want) in cases {
+            assert_eq!(Scenario::parse(s), Some(want), "{s}");
+            assert_eq!(want.to_string(), s, "display round-trip");
+            assert_eq!(Scenario::parse(&want.to_string()), Some(want));
+        }
+        for bad in ["mbu:0", "mbu:", "mbu:x", "burst:-1", "stuck:2", "stuck:", ""] {
+            assert_eq!(Scenario::parse(bad), None, "{bad}");
+        }
+        assert_eq!(Scenario::default(), Scenario::Seu);
     }
 
     #[test]

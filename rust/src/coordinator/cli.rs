@@ -1,7 +1,10 @@
 //! Minimal CLI argument parser (offline environment: no clap).
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
-//! positional arguments. Unknown-flag detection is the caller's job via
+//! positional arguments. Negative values are accepted in both forms
+//! (`--offset -3`, `--offset=-3`): the lookahead only rejects
+//! `--`-prefixed tokens as values, so a single-dash number is consumed
+//! as the flag's value. Unknown-flag detection is the caller's job via
 //! [`Args::finish`].
 
 use anyhow::{anyhow, bail, Result};
@@ -66,6 +69,16 @@ impl Args {
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    /// Signed integer flag — accepts `--flag -3` and `--flag=-3`.
+    pub fn i64_or(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
     }
 
     pub fn bool(&self, key: &str) -> bool {
@@ -146,6 +159,25 @@ mod tests {
     fn bad_int_errors() {
         let a = parse("--dim eight");
         assert!(a.usize_or("dim", 0).is_err());
+    }
+
+    #[test]
+    fn negative_values_accepted_in_both_forms() {
+        // `--flag -3`: the lookahead must treat "-3" (single dash) as a
+        // value, not a flag — only "--"-prefixed tokens are rejected
+        let a = parse("--offset -3 --bias=-7 --dim 8");
+        assert_eq!(a.get("offset"), Some("-3"));
+        assert_eq!(a.i64_or("offset", 0).unwrap(), -3);
+        assert_eq!(a.i64_or("bias", 0).unwrap(), -7);
+        assert_eq!(a.i64_or("missing", -11).unwrap(), -11);
+        assert_eq!(a.usize_or("dim", 0).unwrap(), 8);
+        assert!(a.finish().is_ok());
+        // unsigned accessors reject negatives instead of wrapping
+        assert!(a.u64_or("offset", 0).is_err());
+        // and a "--"-prefixed token after a flag stays a flag
+        let b = parse("--verbose --offset=-3");
+        assert!(b.bool("verbose"));
+        assert_eq!(b.i64_or("offset", 0).unwrap(), -3);
     }
 
     #[test]

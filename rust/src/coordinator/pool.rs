@@ -45,13 +45,13 @@ pub fn run_parallel(
     let n_sites = sites.len() as u64;
     let total_units = cfg.inputs * n_sites;
     let workers = cfg.workers.clamp(1, (total_units as usize).max(1));
-    let mut merged = CampaignResult::empty(&model.name, cfg.backend);
+    let mut merged = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
     if workers <= 1 {
         let mut exec = TrialExecutor::new(mesh_cfg, cfg);
         for input_idx in 0..cfg.inputs {
             let mut rng = Rng::new(derived_input_seed(cfg.seed, input_idx));
             let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg.dim, &mut rng);
-            let mut part = CampaignResult::empty(&model.name, cfg.backend);
+            let mut part = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
             for batch in &plan.batches {
                 exec.run_batch(model, &plan, batch, &mut part);
             }
@@ -81,7 +81,7 @@ pub fn run_parallel(
                 let progress = progress.clone();
                 handles.push(scope.spawn(move || -> Result<CampaignResult> {
                     let mut exec = TrialExecutor::new(mesh_cfg, cfg);
-                    let mut part = CampaignResult::empty(&model.name, cfg.backend);
+                    let mut part = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
                     loop {
                         let unit = next.fetch_add(1, Ordering::Relaxed);
                         if unit >= total_units {
@@ -164,6 +164,7 @@ mod tests {
                 offload_scope: Default::default(),
                 engine: TrialEngine::SiteResume,
                 signals: vec![],
+                scenario: Default::default(),
                 workers,
             },
         )

@@ -203,14 +203,14 @@ struct Recorder {
 }
 
 impl GemmHook for Recorder {
-    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+    fn gemm(&mut self, call: &GemmCall<'_>, _out: &mut Vec<i32>) -> bool {
         self.sites.push(GemmSiteInfo {
             site: call.site,
             m: call.m,
             k: call.k,
             n: call.n,
         });
-        None
+        false
     }
 }
 
@@ -220,14 +220,14 @@ struct Calibrator {
 }
 
 impl GemmHook for Calibrator {
-    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
-        // run natively, observe the accumulator range
-        let mut c = vec![0i32; call.m * call.n];
-        super::gemm::gemm_i8(call.m, call.k, call.n, call.a, call.b, call.d, &mut c);
-        let peak = c.iter().map(|v| v.saturating_abs()).max().unwrap_or(0);
+    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
+        // run natively into the layer's buffer, observe the range
+        out.resize(call.m * call.n, 0);
+        super::gemm::gemm_i8(call.m, call.k, call.n, call.a, call.b, call.d, out);
+        let peak = out.iter().map(|v| v.saturating_abs()).max().unwrap_or(0);
         let e = self.peak.entry(call.site.layer).or_insert(0);
         *e = (*e).max(peak);
-        Some(c)
+        true
     }
 }
 

@@ -36,9 +36,12 @@ pub struct GemmCall<'s> {
 /// Intercepts GEMMs during a forward pass (cross-layer offload, software
 /// fault injection, call tracing...).
 pub trait GemmHook {
-    /// Return `Some(c)` to take over the call, `None` to let the native
-    /// path run it.
-    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>>;
+    /// Return `true` to take over the call, leaving `C = A.B + D` in
+    /// `out` (resized by the callee to `m * n`); return `false` — with
+    /// `out` untouched — to let the native path run it. `out` is the
+    /// layer's reusable accumulator, so a hook that computes into it
+    /// allocates nothing per call (the campaign hot path).
+    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool;
 
     /// Offered the requantized int8 output of every layer (SW-level
     /// output injection); may mutate it in place.
@@ -76,7 +79,11 @@ impl<'h> ForwardCtx<'h> {
     }
 }
 
-/// All GEMMs funnel through here.
+/// All GEMMs funnel through here, draining into `acc` — the layer's
+/// reusable accumulator buffer (cleared and resized in place, so
+/// back-to-back GEMMs of one layer, and back-to-back trials replaying
+/// it, reuse one allocation).
+#[allow(clippy::too_many_arguments)]
 pub fn run_gemm(
     ctx: &mut ForwardCtx<'_>,
     m: usize,
@@ -85,22 +92,24 @@ pub fn run_gemm(
     a: &[i8],
     b: &[i8],
     d: &[i32],
-) -> Vec<i32> {
+    acc: &mut Vec<i32>,
+) {
     let site = GemmSiteId {
         layer: ctx.layer,
         ordinal: ctx.ordinal,
     };
     ctx.ordinal += 1;
+    acc.clear();
     if let Some(hook) = ctx.hook.as_deref_mut() {
         let call = GemmCall { site, m, k, n, a, b, d };
-        if let Some(c) = hook.gemm(&call) {
-            debug_assert_eq!(c.len(), m * n);
-            return c;
+        if hook.gemm(&call, acc) {
+            debug_assert_eq!(acc.len(), m * n);
+            return;
         }
+        debug_assert!(acc.is_empty(), "declined hooks must leave `out` untouched");
     }
-    let mut c = vec![0i32; m * n];
-    gemm_i8(m, k, n, a, b, d, &mut c);
-    c
+    acc.resize(m * n, 0);
+    gemm_i8(m, k, n, a, b, d, acc);
 }
 
 // ---------------------------------------------------------------------
@@ -149,6 +158,8 @@ impl QConv2d {
         let p = oh * ow;
         let mut out = TensorI8::zeros(&[self.cout, oh, ow]);
         let mut q = vec![0i8; p * cout_g];
+        // one accumulator buffer shared by every group's GEMM
+        let mut acc = Vec::new();
         for g in 0..self.groups {
             let (patches, _, _) = im2col_group(
                 x,
@@ -166,7 +177,7 @@ impl QConv2d {
             for pix in 0..p {
                 d[pix * cout_g..(pix + 1) * cout_g].copy_from_slice(bias_g);
             }
-            let acc = run_gemm(ctx, p, kelems, cout_g, &patches, w_g, &d);
+            run_gemm(ctx, p, kelems, cout_g, &patches, w_g, &d, &mut acc);
             requant_slice(&acc, self.m, self.relu, &mut q);
             // [P, cout_g] -> CHW
             for oc in 0..cout_g {
@@ -204,7 +215,8 @@ impl QLinear {
         for row in 0..l {
             d[row * self.out_f..(row + 1) * self.out_f].copy_from_slice(&self.bias);
         }
-        let acc = run_gemm(ctx, l, self.in_f, self.out_f, &x.data, &self.w, &d);
+        let mut acc = Vec::new();
+        run_gemm(ctx, l, self.in_f, self.out_f, &x.data, &self.w, &d, &mut acc);
         let mut q = vec![0i8; l * self.out_f];
         requant_slice(&acc, self.m, self.relu, &mut q);
         TensorI8::from_vec(&[l, self.out_f], q)
@@ -240,15 +252,17 @@ impl QAttention {
         let dm = self.d_model;
         assert_eq!(x.shape[1], dm);
         let zeros_ld = vec![0i32; l * dm];
-        let proj = |ctx: &mut ForwardCtx<'_>, w: &[i8], m: f32| -> Vec<i8> {
-            let acc = run_gemm(ctx, l, dm, dm, &x.data, w, &zeros_ld);
+        // one accumulator buffer shared by all six GEMMs of the block
+        let mut acc = Vec::new();
+        let proj = |ctx: &mut ForwardCtx<'_>, acc: &mut Vec<i32>, w: &[i8], m: f32| {
+            run_gemm(ctx, l, dm, dm, &x.data, w, &zeros_ld, acc);
             let mut q = vec![0i8; l * dm];
-            requant_slice(&acc, m, false, &mut q);
+            requant_slice(acc, m, false, &mut q);
             q
         };
-        let q = proj(ctx, &self.wq, self.mq);
-        let k = proj(ctx, &self.wk, self.mk);
-        let v = proj(ctx, &self.wv, self.mv);
+        let q = proj(ctx, &mut acc, &self.wq, self.mq);
+        let k = proj(ctx, &mut acc, &self.wk, self.mk);
+        let v = proj(ctx, &mut acc, &self.wv, self.mv);
         // S = Q . K^T  (transpose K into GEMM layout)
         let mut kt = vec![0i8; dm * l];
         for i in 0..l {
@@ -257,7 +271,8 @@ impl QAttention {
             }
         }
         let zeros_ll = vec![0i32; l * l];
-        let s = run_gemm(ctx, l, dm, l, &q, &kt, &zeros_ll);
+        run_gemm(ctx, l, dm, l, &q, &kt, &zeros_ll, &mut acc);
+        let s = &acc;
         // f32 softmax over rows, probabilities quantized to [0, 127]
         let mut p_i8 = vec![0i8; l * l];
         for row in 0..l {
@@ -276,12 +291,12 @@ impl QAttention {
             }
         }
         // O = P . V, Y = O . Wo
-        let o_acc = run_gemm(ctx, l, l, dm, &p_i8, &v, &zeros_ld);
+        run_gemm(ctx, l, l, dm, &p_i8, &v, &zeros_ld, &mut acc);
         let mut o = vec![0i8; l * dm];
-        requant_slice(&o_acc, self.mo, false, &mut o);
-        let y_acc = run_gemm(ctx, l, dm, dm, &o, &self.wo, &zeros_ld);
+        requant_slice(&acc, self.mo, false, &mut o);
+        run_gemm(ctx, l, dm, dm, &o, &self.wo, &zeros_ld, &mut acc);
         let mut y = vec![0i8; l * dm];
-        requant_slice(&y_acc, self.mw, false, &mut y);
+        requant_slice(&acc, self.mw, false, &mut y);
         TensorI8::from_vec(&[l, dm], y)
     }
 }
@@ -664,9 +679,9 @@ mod tests {
     fn gemm_hook_sees_all_sites() {
         struct Counter(Vec<GemmSiteId>);
         impl GemmHook for Counter {
-            fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
+            fn gemm(&mut self, call: &GemmCall<'_>, _out: &mut Vec<i32>) -> bool {
                 self.0.push(call.site);
-                None
+                false
             }
         }
         let mut rng = Rng::new(55);
@@ -702,8 +717,9 @@ mod tests {
     fn hook_can_override_gemm() {
         struct Zeroer;
         impl GemmHook for Zeroer {
-            fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
-                Some(vec![0; call.m * call.n])
+            fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
+                out.resize(call.m * call.n, 0);
+                true
             }
         }
         let lin = QLinear {

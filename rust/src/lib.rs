@@ -34,6 +34,15 @@
 //! let faulty =
 //!     MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &fault);
 //! assert_ne!(golden, faulty);
+//!
+//! // scenario plans: any cycle-sorted set of faults in ONE run (MBU,
+//! // spatial burst, double SEU, stuck-at...) — see `config::Scenario`
+//! use enfor_sa::mesh::FaultPlan;
+//! let mbu = FaultPlan::new(vec![
+//!     Fault::new(3, 4, SignalKind::Weight, 2, 10),
+//!     Fault::new(3, 4, SignalKind::Weight, 3, 10),
+//! ]);
+//! let _ = MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), b.view(), d.view(), &mbu);
 //! ```
 
 // Style lints that fight cycle-accurate, index-addressed simulator code

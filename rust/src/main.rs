@@ -14,6 +14,23 @@
 //! enfor-sa validate                        §IV-B accuracy validation
 //! enfor-sa report --state-inventory        DESIGN.md D2 ablation data
 //! ```
+//!
+//! Campaign-bearing subcommands (`campaign`, `suite`) take a fault
+//! scenario via `--scenario <spec>` (also JSON `campaign.scenario`):
+//!
+//! ```text
+//! --scenario seu          one transient single-bit flip (default; the
+//!                         paper's model — bit-identical to the legacy
+//!                         single-fault campaigns for a fixed seed)
+//! --scenario mbu:<k>      multi-bit upset: k >= 1 adjacent bits of one
+//!                         sampled signal flip in the same cycle
+//! --scenario burst:<r>    spatially-correlated strike: the sampled SEU
+//!                         replicated same-cycle across every PE within
+//!                         Chebyshev radius r
+//! --scenario double-seu   two independent space/time draws in one tile
+//! --scenario stuck:<0|1>  permanent stuck-at-v defect from the sampled
+//!                         cycle onward
+//! ```
 
 #![allow(clippy::needless_range_loop)]
 
@@ -21,7 +38,7 @@ use anyhow::{bail, Result};
 use enfor_sa::benchkit;
 use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
 use enfor_sa::config::{
-    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, TrialEngine,
+    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TrialEngine,
 };
 use enfor_sa::coordinator::{run_parallel, Args};
 use enfor_sa::dnn::models;
@@ -96,6 +113,11 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
     if let Some(s) = args.get("trial-engine") {
         cfg.campaign.engine = TrialEngine::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --trial-engine {s} (site-resume|full-forward)"))?;
+    }
+    if let Some(s) = args.get("scenario") {
+        cfg.campaign.scenario = Scenario::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("bad --scenario {s} (seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>)")
+        })?;
     }
     if let Some(s) = args.get("signals") {
         cfg.campaign.signals = s.split(',').map(str::to_string).collect();
@@ -222,14 +244,19 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let model = models::by_name(&name, cc.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
-        "campaign: model={name} backend={} engine={} dim={} inputs={} faults/layer={}",
-        cc.backend, cc.engine, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
+        "campaign: model={name} backend={} engine={} scenario={} dim={} inputs={} faults/layer={}",
+        cc.backend, cc.engine, cc.scenario, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
     );
     let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
     let (lo, hi) = r.vuln.ci95();
     println!(
         "{}: trials={} critical={} exposed={} masked={}",
         r.model, r.vuln.trials, r.vuln.critical, r.exposed_trials, r.masked_trials
+    );
+    // per-scenario outcome row: masked / exposed / SDC (Top-1 flips)
+    println!(
+        "scenario {}: masked={} exposed={} sdc={}",
+        r.scenario, r.masked_trials, r.exposed_trials, r.vuln.critical
     );
     println!(
         "VF = {:.4}% (95% CI [{:.4}%, {:.4}%])  wall = {}",
@@ -245,6 +272,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         let j = Json::obj(vec![
             ("model", Json::str(r.model.clone())),
             ("backend", Json::str(r.backend.to_string())),
+            ("scenario", Json::str(r.scenario.to_string())),
             ("trials", Json::num(r.vuln.trials as f64)),
             ("critical", Json::num(r.vuln.critical as f64)),
             ("exposed", Json::num(r.exposed_trials as f64)),
@@ -314,6 +342,17 @@ fn cmd_suite(args: &Args) -> Result<()> {
     let mean_avf: f64 = rows.iter().map(|r| r.avf_pct()).sum::<f64>() / rows.len() as f64;
     println!("Mean slowdown {mean_slow:.2}%  mean PVF {mean_pvf:.2}%  mean AVF {mean_avf:.2}%");
     println!("*percentage of critical inferences");
+    // per-scenario outcome rows (masked / exposed / SDC) for the RTL arm
+    for r in &rows {
+        println!(
+            "scenario {} [{}]: masked={} exposed={} sdc={}",
+            r.rtl.scenario,
+            r.model,
+            r.rtl.masked_trials,
+            r.rtl.exposed_trials,
+            r.rtl.vuln.critical
+        );
+    }
     Ok(())
 }
 

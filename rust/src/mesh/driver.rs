@@ -29,7 +29,7 @@
 //! rows at the north edge) flow down and exit south every cycle.
 
 use super::adapters::{FlushCollector, SkewFeeder};
-use super::inject::{Fault, Injectable};
+use super::inject::{Fault, FaultPlan, Injectable, PlanCursor};
 use super::mesh::{MeshInputs, StepOutput};
 use crate::config::Dataflow;
 use crate::mat::{Mat, MatView};
@@ -57,12 +57,13 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
     /// Golden (fault-free) matmul.
     pub fn matmul(&mut self, a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Mat<i32> {
         let mut out = Mat::default();
-        self.matmul_into(a, b, d, None, &mut out);
+        self.matmul_into(a, b, d, &FaultPlan::empty(), &mut out);
         out
     }
 
     /// Matmul with a single transient fault injected at `fault.cycle`
-    /// (relative to the start of this matmul).
+    /// (relative to the start of this matmul) — the legacy single-SEU
+    /// convenience over [`MatmulDriver::matmul_with_plan`].
     pub fn matmul_with_fault(
         &mut self,
         a: MatView<i8>,
@@ -70,44 +71,62 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         d: MatView<i32>,
         fault: &Fault,
     ) -> Mat<i32> {
+        self.matmul_with_plan(a, b, d, &FaultPlan::single(*fault))
+    }
+
+    /// Matmul with a whole fault scenario (MBU, burst, double SEU,
+    /// stuck-at...) injected at the plan's cycles.
+    pub fn matmul_with_plan(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        plan: &FaultPlan,
+    ) -> Mat<i32> {
         let mut out = Mat::default();
-        self.matmul_into(a, b, d, Some(fault), &mut out);
+        self.matmul_into(a, b, d, plan, &mut out);
         out
     }
 
     /// Matmul into a caller-provided result buffer: `out` is reshaped and
     /// zeroed in place (reusing its allocation), so back-to-back trials
     /// against the same buffer allocate nothing. This is the hot entry of
-    /// the site-major campaign batches.
+    /// the site-major campaign batches. An empty plan is a golden run.
     pub fn matmul_into(
         &mut self,
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<&Fault>,
+        plan: &FaultPlan,
         out: &mut Mat<i32>,
     ) {
-        if let Some(f) = fault {
-            self.mesh.arm(f);
+        if !plan.is_empty() {
+            self.mesh.arm(plan);
         }
+        let cursor = PlanCursor::start(plan);
         match self.mesh.dataflow() {
-            Dataflow::OutputStationary => self.run_os(a, b, d, fault, out),
-            Dataflow::WeightStationary => self.run_ws(a, b, d, fault, out),
+            Dataflow::OutputStationary => self.run_os(a, b, d, plan, cursor, out),
+            Dataflow::WeightStationary => self.run_ws(a, b, d, plan, cursor, out),
         }
-        if fault.is_some() {
+        if !plan.is_empty() {
             self.mesh.disarm();
         }
     }
 
-    /// One compare per cycle: the entire injection overhead of ENFOR-SA.
-    /// (Transient faults fire once; stuck-at faults re-apply the forcing
-    /// every cycle from their onset — still wrapper-only.)
+    /// One compare per cycle: the entire injection overhead of ENFOR-SA,
+    /// unchanged by the scenario redesign. (Transient faults fire once;
+    /// stuck-at faults keep the cursor re-armed so the forcing re-applies
+    /// every cycle from onset — still wrapper-only.)
     #[inline]
-    fn maybe_inject(&mut self, fault: Option<&Fault>, t: u64, inp: &mut MeshInputs) {
-        if let Some(f) = fault {
-            if f.fires_at(t) {
-                self.mesh.inject_now(f, inp);
-            }
+    fn maybe_inject(
+        &mut self,
+        plan: &FaultPlan,
+        cursor: &mut PlanCursor,
+        t: u64,
+        inp: &mut MeshInputs,
+    ) {
+        if cursor.next_cycle() == t {
+            cursor.fire(plan, t, self.mesh, inp);
         }
     }
 
@@ -118,7 +137,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<&Fault>,
+        plan: &FaultPlan,
+        mut cursor: PlanCursor,
         out: &mut Mat<i32>,
     ) {
         let dim = self.mesh.dim();
@@ -142,7 +162,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                     inp.north_d[c] = d.at(dim - 1 - p, c);
                 }
             }
-            self.maybe_inject(fault, t, &mut inp);
+            self.maybe_inject(plan, &mut cursor, t, &mut inp);
             self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
@@ -162,7 +182,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 inp.north_b[c] = b_feed.at(c, tau);
                 inp.north_valid[c] = b_feed.live(c, tau);
             }
-            self.maybe_inject(fault, t, &mut inp);
+            self.maybe_inject(plan, &mut cursor, t, &mut inp);
             self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
@@ -178,7 +198,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                     inp.north_propag[c] = true;
                 }
             }
-            self.maybe_inject(fault, t, &mut inp);
+            self.maybe_inject(plan, &mut cursor, t, &mut inp);
             self.mesh.step(&inp, &mut step_out);
             collector.absorb(&step_out.south_c);
             t += 1;
@@ -188,7 +208,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         // drain FSM also just latches whatever arrives in its fixed
         // window. Only fault-free runs must drain exactly DIM rows.
         debug_assert!(
-            fault.is_some() || collector.complete(),
+            !plan.is_empty() || collector.complete(),
             "fault-free flush did not drain DIM rows"
         );
         debug_assert_eq!(t, os_matmul_cycles(dim, k));
@@ -203,7 +223,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         a: MatView<i8>,
         w: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<&Fault>,
+        plan: &FaultPlan,
+        mut cursor: PlanCursor,
         out: &mut Mat<i32>,
     ) {
         let dim = self.mesh.dim();
@@ -227,7 +248,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                     inp.north_d[c] = w.at(dim - 1 - p, c) as i32;
                 }
             }
-            self.maybe_inject(fault, t, &mut inp);
+            self.maybe_inject(plan, &mut cursor, t, &mut inp);
             self.mesh.step(&inp, &mut step_out);
             t += 1;
         }
@@ -249,7 +270,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
                 inp.north_d[cc] = d_feed.at(cc, tau);
                 inp.north_valid[cc] = d_feed.live(cc, tau);
             }
-            self.maybe_inject(fault, t, &mut inp);
+            self.maybe_inject(plan, &mut cursor, t, &mut inp);
             self.mesh.step(&inp, &mut step_out);
             for cc in 0..dim {
                 if let Some(ps) = step_out.south_psum[cc] {
@@ -262,7 +283,7 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             t += 1;
         }
         debug_assert!(
-            fault.is_some() || taken.iter().all(|&x| x == m),
+            !plan.is_empty() || taken.iter().all(|&x| x == m),
             "fault-free WS drain incomplete"
         );
     }
@@ -477,6 +498,84 @@ mod tests {
         let faulty =
             MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
         assert_eq!(golden, faulty);
+    }
+
+    #[test]
+    fn single_fault_plan_matches_legacy_fault_path() {
+        // FaultPlan::single must be bit-identical to the pre-redesign
+        // single-`Fault` argument — the compatibility contract of the
+        // scenario-first seam.
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(40);
+        let a = rng.mat_i8(dim, 9);
+        let b = rng.mat_i8(9, dim);
+        let d = rng.mat_i32(dim, dim, 64);
+        for kind in crate::mesh::signal::SignalKind::ALL {
+            let f = Fault::new(1, 2, kind, 0, (2 * dim) as u64 + 1);
+            let legacy = MatmulDriver::new(&mut mesh)
+                .matmul_with_fault(a.view(), b.view(), d.view(), &f);
+            let plan = MatmulDriver::new(&mut mesh).matmul_with_plan(
+                a.view(),
+                b.view(),
+                d.view(),
+                &FaultPlan::single(f),
+            );
+            assert_eq!(legacy, plan, "kind={kind}");
+        }
+        // empty plan == golden
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+        let via_empty = MatmulDriver::new(&mut mesh).matmul_with_plan(
+            a.view(),
+            b.view(),
+            d.view(),
+            &FaultPlan::empty(),
+        );
+        assert_eq!(golden, via_empty);
+        let sa = Fault::stuck_at(0, 1, SignalKind::Weight, 3, true, 0);
+        assert_eq!(
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &sa),
+            MatmulDriver::new(&mut mesh).matmul_with_plan(
+                a.view(),
+                b.view(),
+                d.view(),
+                &FaultPlan::single(sa)
+            ),
+            "stuck-at through a plan"
+        );
+    }
+
+    #[test]
+    fn multi_fault_plan_fires_every_fault() {
+        // a two-transient plan must differ from either single-fault run
+        // when the faults hit disjoint accumulators
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let mut rng = Rng::new(41);
+        let a = rng.mat_i8(dim, dim);
+        let b = rng.mat_i8(dim, dim);
+        let d = Mat::zeros(dim, dim);
+        let cyc = (2 * dim) as u64 + 1;
+        let f1 = Fault::new(0, 0, SignalKind::Acc, 30, cyc);
+        let f2 = Fault::new(3, 3, SignalKind::Acc, 30, cyc + 2);
+        let both = MatmulDriver::new(&mut mesh).matmul_with_plan(
+            a.view(),
+            b.view(),
+            d.view(),
+            &FaultPlan::new(vec![f1, f2]),
+        );
+        let only1 =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f1);
+        let only2 =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f2);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+        assert_ne!(both, only1);
+        assert_ne!(both, only2);
+        // disjoint Acc flips compose: both corruptions present
+        assert_ne!(both[(0, 0)], golden[(0, 0)]);
+        assert_ne!(both[(3, 3)], golden[(3, 3)]);
     }
 
     #[test]

@@ -18,7 +18,7 @@
 //! `rust/tests/validate_vs_hdfit.rs` depend on it); only its *cost per
 //! cycle* differs.
 
-use super::inject::{Fault, Injectable};
+use super::inject::{Fault, FaultPlan, Injectable, Persistence};
 use super::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 use super::signal::SignalKind;
 use crate::config::Dataflow;
@@ -61,23 +61,26 @@ pub struct HdfitFault {
 /// paper benchmarks HDFIT in).
 pub struct InstrumentedMesh {
     pub base: Mesh,
-    /// At most one armed fault (HDFIT configures one injection per run);
-    /// kept flat so the hook is a compare, like HDFIT's generated code.
-    armed: Option<HdfitFault>,
+    /// Armed hook-faults — one per planned fault (HDFIT configures its
+    /// injections per run); kept as a flat small list so each hook is a
+    /// short compare chain, like HDFIT's generated code. Single-SEU
+    /// plans keep the historical one-compare shape.
+    armed: Vec<HdfitFault>,
     /// Total hook invocations — the per-assignment bookkeeping HDFIT pays.
     pub hook_calls: u64,
-    /// Fallback for Acc/DReg faults at cycle 0 (no previous assignment
-    /// exists to instrument): applied as a direct pre-step flip.
-    pending_direct: Option<Fault>,
+    /// Fallbacks the hooks cannot express: Acc/DReg faults at cycle 0
+    /// (no previous assignment exists to instrument) and stuck-at
+    /// forcings — applied as direct pre-step flips by the wrapper.
+    pending_direct: Vec<Fault>,
 }
 
 impl InstrumentedMesh {
     pub fn new(dim: usize) -> Self {
         InstrumentedMesh {
             base: Mesh::new(dim, Dataflow::OutputStationary),
-            armed: None,
+            armed: Vec::new(),
             hook_calls: 0,
-            pending_direct: None,
+            pending_direct: Vec::new(),
         }
     }
 
@@ -133,9 +136,13 @@ impl InstrumentedMesh {
     #[inline(always)]
     fn hook8(&mut self, id: u32, v: i8) -> i8 {
         self.hook_calls = self.hook_calls.wrapping_add(1);
-        if let Some(f) = self.armed {
+        let mut v = v;
+        // every armed fault is tested (and every match applied — an MBU
+        // arms several hooks on the same assignment), mirroring HDFIT's
+        // generated compare chain
+        for f in &self.armed {
             if f.cycle == self.base.cycle && f.sig_id == id {
-                return flip_i8(v, f.bit);
+                v = flip_i8(v, f.bit);
             }
         }
         v
@@ -144,9 +151,10 @@ impl InstrumentedMesh {
     #[inline(always)]
     fn hook32(&mut self, id: u32, v: i32) -> i32 {
         self.hook_calls = self.hook_calls.wrapping_add(1);
-        if let Some(f) = self.armed {
+        let mut v = v;
+        for f in &self.armed {
             if f.cycle == self.base.cycle && f.sig_id == id {
-                return flip_i32(v, f.bit);
+                v = flip_i32(v, f.bit);
             }
         }
         v
@@ -155,9 +163,10 @@ impl InstrumentedMesh {
     #[inline(always)]
     fn hookb(&mut self, id: u32, v: bool) -> bool {
         self.hook_calls = self.hook_calls.wrapping_add(1);
-        if let Some(f) = self.armed {
+        let mut v = v;
+        for f in &self.armed {
             if f.cycle == self.base.cycle && f.sig_id == id {
-                return !v;
+                v = !v;
             }
         }
         v
@@ -260,30 +269,36 @@ impl MeshSim for InstrumentedMesh {
 }
 
 impl Injectable for InstrumentedMesh {
-    fn arm(&mut self, fault: &Fault) {
-        match self.translate(fault) {
-            Some(h) => self.armed = Some(h),
-            None => self.pending_direct = Some(*fault),
+    fn arm(&mut self, plan: &FaultPlan) {
+        self.armed.clear();
+        self.pending_direct.clear();
+        for f in plan.faults() {
+            match self.translate(f) {
+                Some(h) => self.armed.push(h),
+                None => self.pending_direct.push(*f),
+            }
         }
     }
 
     fn inject_now(&mut self, fault: &Fault, inp: &mut MeshInputs) {
         // HDFIT applies transient faults through the always-on hooks;
         // the wrapper handles the cycle-0 storage fallback and the
-        // stuck-at extension (re-applied every firing cycle).
-        if let Some(pf) = self.pending_direct {
-            if pf.fires_at(self.base.cycle) && pf.addr == fault.addr {
+        // stuck-at extension (re-applied every firing cycle). The cursor
+        // hands us the exact due fault, so matching is by value.
+        if let Some(pos) = self.pending_direct.iter().position(|pf| pf == fault) {
+            let pf = self.pending_direct[pos];
+            if pf.fires_at(self.base.cycle) {
                 super::inject::apply_enforsa(&mut self.base, inp, &pf);
-                if pf.persistence == super::inject::Persistence::Transient {
-                    self.pending_direct = None;
+                if pf.persistence == Persistence::Transient {
+                    self.pending_direct.remove(pos);
                 }
             }
         }
     }
 
     fn disarm(&mut self) {
-        self.armed = None;
-        self.pending_direct = None;
+        self.armed.clear();
+        self.pending_direct.clear();
     }
 }
 

@@ -107,7 +107,178 @@ impl std::fmt::Display for Fault {
             f,
             "PE({},{}).{}[bit {}] @ cycle {}",
             self.addr.row, self.addr.col, self.addr.kind, self.bit, self.cycle
-        )
+        )?;
+        if let Persistence::StuckAt(v) = self.persistence {
+            write!(f, " (stuck-at-{})", v as u8)?;
+        }
+        Ok(())
+    }
+}
+
+/// A cycle-sorted set of faults injected during ONE offloaded matmul —
+/// the unit every injection seam speaks since the scenario redesign
+/// (single SEU, MBU, spatial burst, double SEU, stuck-at... each
+/// scenario is just a different sampler producing a plan).
+///
+/// * An **empty plan is a golden run** — the drivers skip `arm`/`disarm`
+///   and the per-cycle check never fires.
+/// * [`FaultPlan::single`] expresses every legacy single-`Fault` call
+///   site; [`Fault`] stays the atom.
+/// * Faults are kept **sorted by cycle** (stable, so same-cycle faults
+///   fire in sample order), which is what lets the wrapper's per-cycle
+///   check stay a single compare via [`PlanCursor::next_cycle`] — the
+///   whole point of the paper's §III-A technique, preserved for
+///   multi-fault scenarios.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Build a plan from arbitrary faults (sorted by cycle; stable).
+    pub fn new(mut faults: Vec<Fault>) -> Self {
+        faults.sort_by_key(|f| f.cycle);
+        FaultPlan { faults }
+    }
+
+    /// The legacy shape: exactly one fault.
+    pub fn single(fault: Fault) -> Self {
+        FaultPlan { faults: vec![fault] }
+    }
+
+    /// Golden run (no faults).
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// The faults, cycle-sorted.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Onset cycle of the earliest fault (`u64::MAX` when empty).
+    pub fn first_cycle(&self) -> u64 {
+        self.faults.first().map_or(u64::MAX, |f| f.cycle)
+    }
+
+    /// Copy `src` into this plan in place, reusing the existing
+    /// allocation (the derived `clone` would allocate per call — this is
+    /// the per-trial re-arm path of persistent backends like the SoC).
+    pub fn clone_from_plan(&mut self, src: &FaultPlan) {
+        self.faults.clear();
+        self.faults.extend_from_slice(&src.faults);
+    }
+
+    /// Empty the plan in place, keeping the allocation (disarm).
+    pub fn clear(&mut self) {
+        self.faults.clear();
+    }
+}
+
+impl From<Fault> for FaultPlan {
+    fn from(f: Fault) -> Self {
+        FaultPlan::single(f)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.faults.is_empty() {
+            return write!(f, "golden (no faults)");
+        }
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, " + ")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-run firing state over a [`FaultPlan`]. The plan itself is shared
+/// immutably across trials; the cursor is the tiny mutable part a driver
+/// (or the SoC controller) owns for the duration of one matmul.
+///
+/// Hot-path contract: the wrapper performs exactly **one compare per
+/// cycle** — `cursor.next_cycle() == t` — and only on a hit walks the
+/// due faults. Stuck-at faults re-arm the cursor for `t + 1` so their
+/// forcing is re-applied every cycle from onset, still wrapper-only.
+#[derive(Clone, Debug)]
+pub struct PlanCursor {
+    /// Index of the next not-yet-started fault in the sorted plan.
+    next: usize,
+    /// Cycle of the next due injection (`u64::MAX` when nothing pends).
+    due: u64,
+    /// Stuck-at forcings already begun (re-applied every cycle). Empty
+    /// for pure-transient plans — `Vec::new` never allocates.
+    active: Vec<Fault>,
+}
+
+impl Default for PlanCursor {
+    fn default() -> Self {
+        PlanCursor {
+            next: 0,
+            due: u64::MAX,
+            active: Vec::new(),
+        }
+    }
+}
+
+impl PlanCursor {
+    /// Start a cursor at the beginning of `plan`.
+    pub fn start(plan: &FaultPlan) -> PlanCursor {
+        PlanCursor {
+            next: 0,
+            due: plan.first_cycle(),
+            active: Vec::new(),
+        }
+    }
+
+    /// The single hot-path compare: cycle of the next due injection.
+    #[inline]
+    pub fn next_cycle(&self) -> u64 {
+        self.due
+    }
+
+    /// Fire every fault of `plan` due at cycle `t` (cold path; call only
+    /// when `next_cycle() == t`, immediately before the `step()` of `t`).
+    /// Active stuck-at forcings are re-applied first, then any fault
+    /// whose onset is `t` starts, in plan (cycle-then-sample) order.
+    pub fn fire<S: Injectable>(
+        &mut self,
+        plan: &FaultPlan,
+        t: u64,
+        mesh: &mut S,
+        inp: &mut MeshInputs,
+    ) {
+        for f in &self.active {
+            mesh.inject_now(f, inp);
+        }
+        let faults = plan.faults();
+        while self.next < faults.len() && faults[self.next].cycle == t {
+            let f = faults[self.next];
+            mesh.inject_now(&f, inp);
+            if matches!(f.persistence, Persistence::StuckAt(_)) {
+                self.active.push(f);
+            }
+            self.next += 1;
+        }
+        self.due = if !self.active.is_empty() {
+            t + 1
+        } else if self.next < faults.len() {
+            faults[self.next].cycle
+        } else {
+            u64::MAX
+        };
     }
 }
 
@@ -182,14 +353,17 @@ impl Mesh {
 
 /// Backend-polymorphic injection interface for the matmul drivers.
 ///
-/// * `arm` / `disarm` bracket a run — HDFIT-style backends pre-configure
-///   their instrumentation hooks here (HDFIT faults are part of the
-///   elaborated design), while ENFOR-SA's mesh needs nothing.
-/// * `inject_now` is called by the wrapper exactly once, right before the
-///   `step()` of `fault.cycle` — a single compare+branch per cycle, which
-///   is the whole point of the technique.
+/// * `arm` / `disarm` bracket a run and speak whole [`FaultPlan`]s —
+///   HDFIT-style backends pre-configure one instrumentation hook per
+///   planned fault here (HDFIT faults are part of the elaborated
+///   design), while ENFOR-SA's mesh needs nothing.
+/// * `inject_now` fires ONE due fault and is called by the wrapper's
+///   [`PlanCursor`] right before the `step()` of that fault's firing
+///   cycle — the per-cycle overhead stays a single compare+branch
+///   (`PlanCursor::next_cycle() == t`), which is the whole point of the
+///   technique; [`Fault`] remains the firing atom.
 pub trait Injectable: MeshSim {
-    fn arm(&mut self, _fault: &Fault) {}
+    fn arm(&mut self, _plan: &FaultPlan) {}
     fn inject_now(&mut self, _fault: &Fault, _inp: &mut MeshInputs) {}
     fn disarm(&mut self) {}
 }
@@ -363,5 +537,69 @@ mod tests {
     fn display_formats() {
         let f = Fault::new(3, 4, SignalKind::Propag, 0, 17);
         assert_eq!(f.to_string(), "PE(3,4).propag[bit 0] @ cycle 17");
+        let sa = Fault::stuck_at(1, 2, SignalKind::Acc, 5, true, 3);
+        assert_eq!(sa.to_string(), "PE(1,2).acc[bit 5] @ cycle 3 (stuck-at-1)");
+        assert_eq!(FaultPlan::empty().to_string(), "golden (no faults)");
+        let plan = FaultPlan::new(vec![f, Fault::new(0, 0, SignalKind::Acc, 1, 2)]);
+        assert_eq!(
+            plan.to_string(),
+            "PE(0,0).acc[bit 1] @ cycle 2 + PE(3,4).propag[bit 0] @ cycle 17"
+        );
+    }
+
+    #[test]
+    fn plan_is_cycle_sorted_and_stable() {
+        let f9 = Fault::new(0, 0, SignalKind::Acc, 0, 9);
+        let f2a = Fault::new(1, 1, SignalKind::Acc, 2, 2);
+        let f2b = Fault::new(2, 2, SignalKind::Acc, 3, 2);
+        let plan = FaultPlan::new(vec![f9, f2a, f2b]);
+        assert_eq!(plan.faults(), &[f2a, f2b, f9]);
+        assert_eq!(plan.first_cycle(), 2);
+        assert_eq!(plan.len(), 3);
+        assert!(FaultPlan::empty().is_empty());
+        assert_eq!(FaultPlan::empty().first_cycle(), u64::MAX);
+        assert_eq!(FaultPlan::from(f9).faults(), &[f9]);
+    }
+
+    #[test]
+    fn cursor_fires_all_same_cycle_faults_once() {
+        // A same-cycle multi-fault plan (burst/MBU shape) fired through
+        // the cursor must equal N manual inject_now calls.
+        let dim = 4;
+        let (mut m1, mut inp1, _o1) = mesh4();
+        let (mut m2, mut inp2, _o2) = mesh4();
+        for r in 0..dim {
+            let i = m1.idx(r, 1);
+            m1.acc[i] = (r as i32 + 1) * 7;
+            m2.acc[i] = (r as i32 + 1) * 7;
+        }
+        let faults: Vec<Fault> =
+            (0..dim).map(|r| Fault::new(r, 1, SignalKind::Acc, 2, 0)).collect();
+        let plan = FaultPlan::new(faults.clone());
+        let mut cur = PlanCursor::start(&plan);
+        assert_eq!(cur.next_cycle(), 0);
+        cur.fire(&plan, 0, &mut m1, &mut inp1);
+        assert_eq!(cur.next_cycle(), u64::MAX, "transients fire once");
+        for f in &faults {
+            m2.inject_now(f, &mut inp2);
+        }
+        for r in 0..dim {
+            assert_eq!(m1.acc_at(r, 1), m2.acc_at(r, 1), "row {r}");
+        }
+    }
+
+    #[test]
+    fn cursor_rearms_every_cycle_for_stuck_at() {
+        let plan = FaultPlan::single(Fault::stuck_at(0, 0, SignalKind::Acc, 3, true, 5));
+        let (mut m, mut inp, _o) = mesh4();
+        let mut cur = PlanCursor::start(&plan);
+        assert_eq!(cur.next_cycle(), 5);
+        cur.fire(&plan, 5, &mut m, &mut inp);
+        assert_eq!(cur.next_cycle(), 6, "stuck-at keeps the cursor armed");
+        assert_eq!(m.acc_at(0, 0), 1 << 3);
+        m.acc[0] = 0;
+        cur.fire(&plan, 6, &mut m, &mut inp);
+        assert_eq!(m.acc_at(0, 0), 1 << 3, "forcing re-applied");
+        assert_eq!(cur.next_cycle(), 7);
     }
 }

@@ -15,6 +15,6 @@ pub mod mesh;
 pub mod signal;
 
 pub use driver::{gold_matmul, tiled_matmul_os, MatmulDriver};
-pub use inject::{Fault, Injectable};
+pub use inject::{Fault, FaultPlan, Injectable, PlanCursor};
 pub use mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 pub use signal::{SignalAddr, SignalKind};

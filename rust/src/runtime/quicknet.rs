@@ -54,10 +54,13 @@ impl QuicknetPjrt {
             None => (None, None),
         };
         for (li, layer) in self.model.layers.iter().enumerate() {
-            let is_target = trial.map(|t| t.site.layer == li).unwrap_or(false);
+            let is_target = trial
+                .as_ref()
+                .map(|t| t.site.layer == li)
+                .unwrap_or(false);
             act = if is_target {
                 // cross-layer path: native layer with RTL tile offload
-                let t = trial.unwrap();
+                let t = trial.as_ref().expect("is_target implies a trial");
                 let mesh = mesh.as_deref_mut().expect("mesh required for trial");
                 let mut runner = CrossLayerRunner::new(
                     t,

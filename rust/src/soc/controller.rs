@@ -14,7 +14,7 @@ use super::dma::{Dma, DmaDir, MainMemory};
 use super::scratchpad::{AccMem, Scratchpad};
 use crate::mat::Mat;
 use crate::mesh::adapters::FlushCollector;
-use crate::mesh::inject::{Fault, Injectable};
+use crate::mesh::inject::{FaultPlan, PlanCursor};
 use crate::mesh::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -55,8 +55,10 @@ pub struct Controller {
     ring_b: Mat<i8>,
     /// mesh-relative cycle counter for the in-flight matmul.
     mesh_t: u64,
-    /// optional armed fault (mesh-relative cycle).
-    fault: Option<Fault>,
+    /// armed fault plan for the next COMPUTE (mesh-relative cycles;
+    /// empty = golden) and its per-run firing cursor.
+    plan: FaultPlan,
+    cursor: PlanCursor,
     collector: Option<FlushCollector>,
     inp: MeshInputs,
     out: StepOutput,
@@ -78,7 +80,8 @@ impl Controller {
             ring_a: Mat::zeros(dim, dim),
             ring_b: Mat::zeros(dim, dim),
             mesh_t: 0,
-            fault: None,
+            plan: FaultPlan::empty(),
+            cursor: PlanCursor::default(),
             collector: None,
             inp: MeshInputs::idle(dim),
             out: StepOutput::new(dim),
@@ -99,10 +102,13 @@ impl Controller {
         self.rob.push_back(cmd);
     }
 
-    /// Arm a transient fault at a mesh-relative cycle of the *next*
-    /// compute command.
-    pub fn arm_fault(&mut self, fault: Fault) {
-        self.fault = Some(fault);
+    /// Arm a fault plan at mesh-relative cycles of the *next* compute
+    /// command (empty plan = golden; the cursor starts when COMPUTE
+    /// issues, since that is where the mesh-relative clock resets).
+    /// Copies into the controller's persistent plan buffer — no
+    /// per-trial allocation on the campaign's re-arm path.
+    pub fn arm_plan(&mut self, plan: &FaultPlan) {
+        self.plan.clone_from_plan(plan);
     }
 
     /// Power-on state: idle FSM, empty ROB, cleared rings, disarmed
@@ -120,7 +126,8 @@ impl Controller {
         self.ring_a.data_mut().fill(0);
         self.ring_b.data_mut().fill(0);
         self.mesh_t = 0;
-        self.fault = None;
+        self.plan.clear();
+        self.cursor = PlanCursor::default();
         self.collector = None;
         self.inp.clear();
         self.out.clear();
@@ -184,6 +191,7 @@ impl Controller {
                             self.rob.pop_front();
                             self.mesh.reset();
                             self.mesh_t = 0;
+                            self.cursor = PlanCursor::start(&self.plan);
                             self.collector = Some(FlushCollector::new(dim));
                             self.ring_a.data_mut().fill(0);
                             self.ring_b.data_mut().fill(0);
@@ -261,7 +269,10 @@ impl Controller {
                     for (r, row) in col.c.row_iter().enumerate() {
                         accmem.write_row(self.c_base + r, row)?;
                     }
-                    self.fault = None;
+                    // disarm in place (keeps the plan buffer for the
+                    // next trial's re-arm)
+                    self.plan.clear();
+                    self.cursor = PlanCursor::default();
                     self.matmuls_done += 1;
                     self.state = ExecState::Idle;
                 } else {
@@ -273,10 +284,11 @@ impl Controller {
     }
 
     fn step_mesh_with_fault(&mut self) {
-        if let Some(f) = self.fault {
-            if f.fires_at(self.mesh_t) {
-                self.mesh.inject_now(&f, &mut self.inp);
-            }
+        // one compare per mesh cycle — same wrapper contract as the
+        // mesh-only driver (`PlanCursor::next_cycle`)
+        if self.cursor.next_cycle() == self.mesh_t {
+            self.cursor
+                .fire(&self.plan, self.mesh_t, &mut self.mesh, &mut self.inp);
         }
         self.mesh.step(&self.inp, &mut self.out);
         self.mesh_t += 1;

@@ -14,7 +14,7 @@ use super::cache::Cache;
 use super::dma::{Dma, MainMemory};
 use super::scratchpad::{AccMem, Scratchpad};
 use crate::mat::{Mat, MatView};
-use crate::mesh::inject::Fault;
+use crate::mesh::inject::FaultPlan;
 use anyhow::Result;
 
 /// TileLink-style crossbar: per-cycle arbitration state between the
@@ -159,17 +159,17 @@ impl Soc {
     /// the driver program stages operands with MVIN commands, issues
     /// PRELOAD + COMPUTE, fences, and halts. Returns C.
     ///
-    /// `fault`: optional transient fault at a mesh-relative cycle of the
-    /// compute (same addressing as the mesh-only wrapper).
+    /// `plan`: fault plan at mesh-relative cycles of the compute (same
+    /// addressing as the mesh-only wrapper; empty plan = golden run).
     pub fn run_matmul(
         &mut self,
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<Fault>,
+        plan: &FaultPlan,
     ) -> Result<Mat<i32>> {
         let mut c = Mat::default();
-        self.run_matmul_into(a, b, d, fault, &mut c)?;
+        self.run_matmul_into(a, b, d, plan, &mut c)?;
         Ok(c)
     }
 
@@ -181,7 +181,7 @@ impl Soc {
         a: MatView<i8>,
         b: MatView<i8>,
         d: MatView<i32>,
-        fault: Option<Fault>,
+        plan: &FaultPlan,
         out: &mut Mat<i32>,
     ) -> Result<()> {
         let dim = self.dim();
@@ -212,8 +212,8 @@ impl Soc {
             d.copy_row_into(r, &mut d_buf);
             self.accmem.write_row(r, &d_buf)?;
         }
-        if let Some(f) = fault {
-            self.ctrl.arm_fault(f);
+        if !plan.is_empty() {
+            self.ctrl.arm_plan(plan);
         }
 
         // Driver program the Rocket core executes (rs values via ADDIs —
@@ -258,6 +258,7 @@ impl Soc {
 mod tests {
     use super::*;
     use crate::mesh::driver::gold_matmul;
+    use crate::mesh::inject::Fault;
     use crate::util::Rng;
 
     #[test]
@@ -268,7 +269,9 @@ mod tests {
             let a = rng.mat_i8(dim, k);
             let b = rng.mat_i8(k, dim);
             let d = rng.mat_i32(dim, dim, 1000);
-            let c = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+            let c = soc
+                .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty())
+                .unwrap();
             assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
         }
     }
@@ -283,7 +286,8 @@ mod tests {
         let a = rng.mat_i8(dim, dim);
         let b = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(dim, dim, 10);
-        soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+        soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty())
+            .unwrap();
         let mesh_only = crate::mesh::driver::os_matmul_cycles(dim, dim);
         assert!(
             soc.cycles > 2 * mesh_only,
@@ -314,24 +318,30 @@ mod tests {
         let a2 = rng.mat_i8(dim, dim);
         let b2 = rng.mat_i8(dim, dim);
         let d2 = rng.mat_i32(dim, dim, 50);
-        let f = Fault::new(1, 2, SignalKind::Acc, 12, (2 * dim - 1) as u64 + 2);
+        let plan = FaultPlan::single(Fault::new(
+            1,
+            2,
+            SignalKind::Acc,
+            12,
+            (2 * dim - 1) as u64 + 2,
+        ));
 
         let fresh1 = Soc::new(dim)
-            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .run_matmul(a1.view(), b1.view(), d1.view(), &plan)
             .unwrap();
         let fresh2 = Soc::new(dim)
-            .run_matmul(a2.view(), b2.view(), d2.view(), None)
+            .run_matmul(a2.view(), b2.view(), d2.view(), &FaultPlan::empty())
             .unwrap();
 
         let mut soc = Soc::new(dim);
         let r1 = soc
-            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .run_matmul(a1.view(), b1.view(), d1.view(), &plan)
             .unwrap();
         let cycles_first = soc.cycles;
         soc.reset();
         assert_eq!(soc.cycles, 0);
         let r2 = soc
-            .run_matmul(a2.view(), b2.view(), d2.view(), None)
+            .run_matmul(a2.view(), b2.view(), d2.view(), &FaultPlan::empty())
             .unwrap();
         assert_eq!(r1, fresh1);
         assert_eq!(r2, fresh2);
@@ -339,7 +349,7 @@ mod tests {
         // the architectural state
         soc.reset();
         let _ = soc
-            .run_matmul(a1.view(), b1.view(), d1.view(), Some(f))
+            .run_matmul(a1.view(), b1.view(), d1.view(), &plan)
             .unwrap();
         assert_eq!(soc.cycles, cycles_first);
     }
@@ -353,12 +363,12 @@ mod tests {
         let b = rng.mat_i8(dim, dim);
         let d = rng.mat_i32(dim, dim, 10);
         let golden = Soc::new(dim)
-            .run_matmul(a.view(), b.view(), d.view(), None)
+            .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty())
             .unwrap();
         let cyc = (2 * dim - 1) as u64 + 3; // mid-compute
         let f = Fault::new(0, 0, SignalKind::Acc, 20, cyc);
         let faulty = Soc::new(dim)
-            .run_matmul(a.view(), b.view(), d.view(), Some(f))
+            .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::single(f))
             .unwrap();
         assert_ne!(golden, faulty);
     }

@@ -4,13 +4,22 @@
 //! weights — exactly like PyTorchFI-class tools (paper §II): no notion
 //! of how tensors map to hardware, hence no HW masking, hence the
 //! systematically pessimistic PVF of Table VI.
+//!
+//! Since the scenario redesign the unit of injection is an [`SwPlan`]
+//! (one or more targets applied in a single pass), mirroring the RTL
+//! seam's `FaultPlan`: `seu` is a single-target plan sampled with the
+//! legacy RNG order, `mbu:<k>` flips k adjacent bits of one element,
+//! `burst:<r>` flips the same bit of a run of neighbouring elements,
+//! `double-seu` draws two independent targets, and `stuck:<v>` forces a
+//! bit to `v` instead of flipping it.
 
+use crate::config::Scenario;
 use crate::dnn::layers::{Act, GemmCall, GemmHook};
 use crate::dnn::Model;
-use crate::util::bits::flip_i8;
+use crate::util::bits::{flip_i8, set_bit_i8};
 use crate::util::Rng;
 
-/// Where the software-level flip lands.
+/// Where one software-level flip lands.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SwTarget {
     /// Bit of one element of one layer's int8 output tensor.
@@ -18,6 +27,9 @@ pub enum SwTarget {
     /// Bit of one element of the weight operand of one GEMM site.
     /// (Transient: applied on one forward pass only.)
     Weight { layer: usize, ordinal: usize, elem: usize, bit: u8 },
+    /// Bit of one layer-output element FORCED to `value` — the software
+    /// view of a stuck-at defect over one inference.
+    LayerOutputSet { layer: usize, elem: usize, bit: u8, value: bool },
 }
 
 impl SwTarget {
@@ -25,50 +37,116 @@ impl SwTarget {
     /// the campaign replays only the suffix of the network.
     pub fn layer(&self) -> usize {
         match self {
-            SwTarget::LayerOutput { layer, .. } | SwTarget::Weight { layer, .. } => *layer,
+            SwTarget::LayerOutput { layer, .. }
+            | SwTarget::Weight { layer, .. }
+            | SwTarget::LayerOutputSet { layer, .. } => *layer,
         }
     }
 }
 
-/// A hook that applies one software-level fault during a forward pass.
-pub struct SwInjector {
-    pub target: SwTarget,
-    pub applied: bool,
+/// One or more software-level targets applied in a single forward pass
+/// — the SW twin of the RTL seam's `FaultPlan`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SwPlan {
+    pub targets: Vec<SwTarget>,
 }
 
-impl SwInjector {
-    pub fn new(target: SwTarget) -> Self {
+impl SwPlan {
+    pub fn single(target: SwTarget) -> Self {
+        SwPlan { targets: vec![target] }
+    }
+
+    /// Earliest target layer — the checkpoint the site-resume engine
+    /// restarts from (every target applies at or after it).
+    pub fn resume_layer(&self) -> usize {
+        self.targets.iter().map(SwTarget::layer).min().unwrap_or(0)
+    }
+}
+
+/// A hook that applies one software-level fault plan during a forward
+/// pass (each target at most once).
+pub struct SwInjector<'p> {
+    pub plan: &'p SwPlan,
+    applied: Vec<bool>,
+}
+
+impl<'p> SwInjector<'p> {
+    pub fn new(plan: &'p SwPlan) -> Self {
         SwInjector {
-            target,
-            applied: false,
+            plan,
+            applied: vec![false; plan.targets.len()],
         }
+    }
+
+    /// Did every target of the plan apply?
+    pub fn applied_all(&self) -> bool {
+        self.applied.iter().all(|&a| a)
     }
 }
 
-impl GemmHook for SwInjector {
-    fn gemm(&mut self, call: &GemmCall<'_>) -> Option<Vec<i32>> {
-        if let SwTarget::Weight { layer, ordinal, elem, bit } = self.target {
-            if call.site.layer == layer && call.site.ordinal == ordinal && !self.applied {
-                self.applied = true;
-                // corrupt one weight element for this call only
-                let mut b = call.b.to_vec();
-                let e = elem % b.len();
-                b[e] = flip_i8(b[e], bit);
-                let mut c = vec![0i32; call.m * call.n];
-                crate::dnn::gemm::gemm_i8(call.m, call.k, call.n, call.a, &b, call.d, &mut c);
-                return Some(c);
+impl GemmHook for SwInjector<'_> {
+    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
+        // collect every pending weight flip aimed at this call (an MBU
+        // plan lands several flips on one operand), then run natively.
+        // Same set semantics as `layer_output`: targets colliding after
+        // the modulo resolution flip once, never cancel.
+        let mut b: Option<Vec<i8>> = None;
+        let mut flipped: Vec<(usize, u8)> = Vec::new();
+        for (i, t) in self.plan.targets.iter().enumerate() {
+            if self.applied[i] {
+                continue;
+            }
+            if let SwTarget::Weight { layer, ordinal, elem, bit } = *t {
+                if call.site.layer == layer && call.site.ordinal == ordinal {
+                    let buf = b.get_or_insert_with(|| call.b.to_vec());
+                    let e = elem % buf.len();
+                    self.applied[i] = true;
+                    if !flipped.contains(&(e, bit)) {
+                        flipped.push((e, bit));
+                        buf[e] = flip_i8(buf[e], bit);
+                    }
+                }
             }
         }
-        None
+        match b {
+            Some(buf) => {
+                out.resize(call.m * call.n, 0);
+                crate::dnn::gemm::gemm_i8(call.m, call.k, call.n, call.a, &buf, call.d, out);
+                true
+            }
+            None => false,
+        }
     }
 
     fn layer_output(&mut self, layer: usize, out: &mut Act) {
-        if let SwTarget::LayerOutput { layer: tl, elem, bit } = self.target {
-            if layer == tl && !self.applied {
-                self.applied = true;
-                let t = out.tensor_mut();
-                let e = elem % t.data.len();
-                t.data[e] = flip_i8(t.data[e], bit);
+        // A plan's output-flip targets are a SET of (element, bit)
+        // corruptions: targets are resolved modulo the tensor size, so a
+        // burst wider than a small layer wraps onto elements it already
+        // hit — without dedup the second flip would silently cancel the
+        // first and the "burst" would self-neutralize. Distinct resolved
+        // flips apply once each (set-bit targets are idempotent anyway).
+        let mut flipped: Vec<(usize, u8)> = Vec::new();
+        for (i, t) in self.plan.targets.iter().enumerate() {
+            if self.applied[i] {
+                continue;
+            }
+            match *t {
+                SwTarget::LayerOutput { layer: tl, elem, bit } if tl == layer => {
+                    self.applied[i] = true;
+                    let tensor = out.tensor_mut();
+                    let e = elem % tensor.data.len();
+                    if !flipped.contains(&(e, bit)) {
+                        flipped.push((e, bit));
+                        tensor.data[e] = flip_i8(tensor.data[e], bit);
+                    }
+                }
+                SwTarget::LayerOutputSet { layer: tl, elem, bit, value } if tl == layer => {
+                    self.applied[i] = true;
+                    let tensor = out.tensor_mut();
+                    let e = elem % tensor.data.len();
+                    tensor.data[e] = set_bit_i8(tensor.data[e], bit, value);
+                }
+                _ => {}
             }
         }
     }
@@ -85,6 +163,45 @@ pub fn sample_output_fault(model: &Model, rng: &mut Rng) -> SwTarget {
     }
 }
 
+/// Sample a software fault plan under `scenario`. `seu` consumes the
+/// RNG stream exactly like the legacy single-target sampler; the other
+/// scenarios derive their plan from the same base draw (`double-seu`
+/// adds one extra independent draw), mirroring the RTL samplers.
+pub fn sample_sw_plan(model: &Model, scenario: Scenario, rng: &mut Rng) -> SwPlan {
+    let base = sample_output_fault(model, rng);
+    let SwTarget::LayerOutput { layer, elem, bit } = base else {
+        unreachable!("sample_output_fault draws layer-output targets")
+    };
+    let targets = match scenario {
+        Scenario::Seu => vec![base],
+        Scenario::Mbu { bits } => {
+            let n = bits.min(8);
+            let start = bit.min(8 - n);
+            (start..start + n)
+                .map(|bit| SwTarget::LayerOutput { layer, elem, bit })
+                .collect()
+        }
+        Scenario::Burst { radius } => {
+            // spatial burst in tensor space: the same bit of (2r+1)^2
+            // consecutive elements (the SW analogue of a Chebyshev ball;
+            // wraps modulo the tensor size at apply time)
+            let n = (2 * radius + 1) * (2 * radius + 1);
+            (0..n)
+                .map(|i| SwTarget::LayerOutput {
+                    layer,
+                    elem: elem.wrapping_add(i),
+                    bit,
+                })
+                .collect()
+        }
+        Scenario::DoubleSeu => vec![base, sample_output_fault(model, rng)],
+        Scenario::StuckAt { value } => {
+            vec![SwTarget::LayerOutputSet { layer, elem, bit, value }]
+        }
+    };
+    SwPlan { targets }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,13 +214,14 @@ mod tests {
         let mut rng = Rng::new(11);
         let x = synthetic_input(&model.input_shape, &mut rng);
         let golden = model.forward(&x, None);
-        let mut inj = SwInjector::new(SwTarget::LayerOutput {
+        let plan = SwPlan::single(SwTarget::LayerOutput {
             layer: 5,
             elem: 0,
             bit: 6,
         });
+        let mut inj = SwInjector::new(&plan);
         let faulty = model.forward(&x, Some(&mut inj));
-        assert!(inj.applied);
+        assert!(inj.applied_all());
         // flipping bit 6 of logit 0 changes the logits tensor itself
         assert_ne!(golden, faulty);
     }
@@ -113,14 +231,15 @@ mod tests {
         let model = models::quicknet(3);
         let mut rng = Rng::new(12);
         let x = synthetic_input(&model.input_shape, &mut rng);
-        let mut inj = SwInjector::new(SwTarget::Weight {
+        let plan = SwPlan::single(SwTarget::Weight {
             layer: 0,
             ordinal: 0,
             elem: 5,
             bit: 7,
         });
+        let mut inj = SwInjector::new(&plan);
         let _ = model.forward(&x, Some(&mut inj));
-        assert!(inj.applied);
+        assert!(inj.applied_all());
     }
 
     #[test]
@@ -131,13 +250,91 @@ mod tests {
         let x = synthetic_input(&model.input_shape, &mut rng);
         let golden_logits = model.forward(&x, None);
         let top = crate::dnn::argmax(&golden_logits.data);
-        let mut inj = SwInjector::new(SwTarget::LayerOutput {
+        let plan = SwPlan::single(SwTarget::LayerOutput {
             layer: 5,
             elem: top,
             bit: 7,
         });
+        let mut inj = SwInjector::new(&plan);
         let faulty = model.forward(&x, Some(&mut inj));
         assert_ne!(crate::dnn::argmax(&faulty.data), top);
+    }
+
+    #[test]
+    fn stuck_target_forces_the_bit_instead_of_flipping() {
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(15);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        // force bit 6 of logit 0 to its golden value: fully masked
+        let bit6 = (golden.data[0] >> 6) & 1 == 1;
+        let plan = SwPlan::single(SwTarget::LayerOutputSet {
+            layer: 5,
+            elem: 0,
+            bit: 6,
+            value: bit6,
+        });
+        let mut inj = SwInjector::new(&plan);
+        let same = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied_all());
+        assert_eq!(same, golden, "stuck-at matching value is invisible");
+        // force it to the opposite value: identical to a flip
+        let plan2 = SwPlan::single(SwTarget::LayerOutputSet {
+            layer: 5,
+            elem: 0,
+            bit: 6,
+            value: !bit6,
+        });
+        let mut inj2 = SwInjector::new(&plan2);
+        let forced = model.forward(&x, Some(&mut inj2));
+        assert_ne!(forced, golden);
+    }
+
+    #[test]
+    fn multi_target_plan_applies_every_target() {
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(16);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        // MBU-like plan: two adjacent bits of the same logit
+        let plan = SwPlan {
+            targets: vec![
+                SwTarget::LayerOutput { layer: 5, elem: 1, bit: 2 },
+                SwTarget::LayerOutput { layer: 5, elem: 1, bit: 3 },
+            ],
+        };
+        let mut inj = SwInjector::new(&plan);
+        let faulty = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied_all());
+        assert_eq!(
+            faulty.data[1],
+            golden.data[1] ^ 0b1100,
+            "both bits flipped in one pass"
+        );
+        assert_eq!(plan.resume_layer(), 5);
+    }
+
+    #[test]
+    fn wrapped_burst_targets_do_not_cancel() {
+        // a burst wider than the layer wraps modulo the tensor: the
+        // duplicate flips must NOT cancel the first ones (set semantics)
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(20);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        // layer 5 is the 10-logit classifier; 25 consecutive elements
+        // wrap 2.5 times around it
+        let plan = SwPlan {
+            targets: (0..25)
+                .map(|i| SwTarget::LayerOutput { layer: 5, elem: i, bit: 2 })
+                .collect(),
+        };
+        let mut inj = SwInjector::new(&plan);
+        let faulty = model.forward(&x, Some(&mut inj));
+        assert!(inj.applied_all());
+        for (i, (fv, gv)) in faulty.data.iter().zip(&golden.data).enumerate() {
+            assert_eq!(*fv, gv ^ 0b100, "logit {i}: exactly one net flip");
+        }
     }
 
     #[test]
@@ -149,5 +346,49 @@ mod tests {
             sample_output_fault(&model, &mut r1),
             sample_output_fault(&model, &mut r2)
         );
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 3 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: false },
+        ] {
+            let mut r1 = Rng::new(17);
+            let mut r2 = Rng::new(17);
+            assert_eq!(
+                sample_sw_plan(&model, scenario, &mut r1),
+                sample_sw_plan(&model, scenario, &mut r2)
+            );
+        }
+    }
+
+    #[test]
+    fn sw_seu_plan_matches_legacy_target_draw() {
+        let model = models::quicknet(3);
+        let mut r1 = Rng::new(18);
+        let mut r2 = Rng::new(18);
+        for _ in 0..100 {
+            let plan = sample_sw_plan(&model, Scenario::Seu, &mut r1);
+            let legacy = sample_output_fault(&model, &mut r2);
+            assert_eq!(plan, SwPlan::single(legacy));
+        }
+        assert_eq!(r1.next_u64(), r2.next_u64(), "streams stay in lockstep");
+    }
+
+    #[test]
+    fn sw_scenario_plan_shapes() {
+        let model = models::quicknet(3);
+        let mut rng = Rng::new(19);
+        let mbu = sample_sw_plan(&model, Scenario::Mbu { bits: 3 }, &mut rng);
+        assert_eq!(mbu.targets.len(), 3);
+        let burst = sample_sw_plan(&model, Scenario::Burst { radius: 1 }, &mut rng);
+        assert_eq!(burst.targets.len(), 9);
+        let double = sample_sw_plan(&model, Scenario::DoubleSeu, &mut rng);
+        assert_eq!(double.targets.len(), 2);
+        let stuck = sample_sw_plan(&model, Scenario::StuckAt { value: true }, &mut rng);
+        assert!(matches!(
+            stuck.targets[0],
+            SwTarget::LayerOutputSet { value: true, .. }
+        ));
     }
 }

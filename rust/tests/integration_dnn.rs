@@ -2,7 +2,7 @@
 
 use enfor_sa::dnn::engine::synthetic_input;
 use enfor_sa::dnn::{argmax, models};
-use enfor_sa::swfi::{sample_output_fault, SwInjector, SwTarget};
+use enfor_sa::swfi::{sample_output_fault, SwInjector, SwPlan, SwTarget};
 use enfor_sa::util::Rng;
 
 #[test]
@@ -74,9 +74,10 @@ fn sw_injection_fuzz_never_panics_and_classifies() {
     let mut criticals = 0;
     for _ in 0..300 {
         let target = sample_output_fault(&model, &mut rng);
-        let mut inj = SwInjector::new(target);
+        let plan = SwPlan::single(target);
+        let mut inj = SwInjector::new(&plan);
         let logits = model.forward(&x, Some(&mut inj));
-        assert!(inj.applied, "{target:?} did not apply");
+        assert!(inj.applied_all(), "{target:?} did not apply");
         if argmax(&logits.data) != golden {
             criticals += 1;
         }
@@ -92,14 +93,15 @@ fn weight_faults_affect_only_that_forward_pass() {
     let mut rng = Rng::new(0xD0D5);
     let x = synthetic_input(&model.input_shape, &mut rng);
     let golden = model.forward(&x, None);
-    let mut inj = SwInjector::new(SwTarget::Weight {
+    let plan = SwPlan::single(SwTarget::Weight {
         layer: 1,
         ordinal: 0,
         elem: 17,
         bit: 6,
     });
+    let mut inj = SwInjector::new(&plan);
     let _faulty = model.forward(&x, Some(&mut inj));
-    assert!(inj.applied);
+    assert!(inj.applied_all());
     // the model itself is unchanged (transient, not permanent)
     assert_eq!(model.forward(&x, None), golden);
 }

@@ -103,22 +103,22 @@ fn quicknet_cross_layer_trial_through_pjrt() {
     let golden = qn.forward(&mut rt, &x, None).unwrap();
 
     let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
-    let trial = TrialFault {
-        site: GemmSiteId { layer: 1, ordinal: 0 },
-        tile_i: 0,
-        tile_j: 0,
-        fault: Fault::new(0, 0, SignalKind::Acc, 30, 20),
-    };
+    let trial = TrialFault::single(
+        GemmSiteId { layer: 1, ordinal: 0 },
+        0,
+        0,
+        Fault::new(0, 0, SignalKind::Acc, 30, 20),
+    );
     let faulty = qn.forward(&mut rt, &x, Some((trial, &mut mesh))).unwrap();
     assert_ne!(golden.data, faulty.data, "acc bit-30 fault must be visible");
 
     // masked fault: identical output
-    let trial2 = TrialFault {
-        site: GemmSiteId { layer: 1, ordinal: 0 },
-        tile_i: 0,
-        tile_j: 0,
-        fault: Fault::new(7, 7, SignalKind::Valid, 0, 1),
-    };
+    let trial2 = TrialFault::single(
+        GemmSiteId { layer: 1, ordinal: 0 },
+        0,
+        0,
+        Fault::new(7, 7, SignalKind::Valid, 0, 1),
+    );
     let masked = qn.forward(&mut rt, &x, Some((trial2, &mut mesh))).unwrap();
     assert_eq!(golden.data, masked.data, "idle-cycle fault must be masked");
 }

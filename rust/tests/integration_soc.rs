@@ -4,7 +4,7 @@
 
 use enfor_sa::config::Dataflow;
 use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
-use enfor_sa::mesh::{Fault, Mesh, MeshSim, SignalKind};
+use enfor_sa::mesh::{Fault, FaultPlan, Mesh, MeshSim, SignalKind};
 use enfor_sa::soc::Soc;
 use enfor_sa::util::Rng;
 
@@ -18,7 +18,7 @@ fn soc_matmul_fuzz_matches_gold() {
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 500);
         let mut soc = Soc::new(dim);
-        let c = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+        let c = soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty()).unwrap();
         assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "dim={dim} k={k}");
     }
 }
@@ -42,10 +42,50 @@ fn soc_and_mesh_agree_on_identical_faults() {
                 .matmul_with_fault(a.view(), b.view(), d.view(), &fault);
             let mut soc = Soc::new(dim);
             let c_soc = soc
-                .run_matmul(a.view(), b.view(), d.view(), Some(fault))
+                .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::single(fault))
                 .unwrap();
             assert_eq!(c_mesh, c_soc, "{fault} diverged between backends");
         }
+    }
+}
+
+#[test]
+fn soc_and_mesh_agree_on_multi_fault_plans() {
+    // the scenario seam crosses the SoC boundary too: burst, MBU and
+    // stuck-at plans must corrupt identically on both backends
+    let mut rng = Rng::new(0x50C7);
+    let dim = 4;
+    let k = 6;
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+    let plans = vec![
+        // burst: same-cycle propag flips down one column
+        FaultPlan::new(
+            (0..dim)
+                .map(|r| Fault::new(r, 1, SignalKind::Propag, 0, 9))
+                .collect(),
+        ),
+        // MBU: two adjacent Acc bits of one PE, same cycle
+        FaultPlan::new(vec![
+            Fault::new(1, 2, SignalKind::Acc, 3, 9),
+            Fault::new(1, 2, SignalKind::Acc, 4, 9),
+        ]),
+        // double SEU: independent space/time draws
+        FaultPlan::new(vec![
+            Fault::new(0, 0, SignalKind::Weight, 5, 8),
+            Fault::new(3, 3, SignalKind::Act, 2, 12),
+        ]),
+        // stuck-at forcing from mid-preload onward
+        FaultPlan::single(Fault::stuck_at(0, 0, SignalKind::Weight, 2, true, 3)),
+    ];
+    for plan in &plans {
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let c_mesh =
+            MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), b.view(), d.view(), plan);
+        let mut soc = Soc::new(dim);
+        let c_soc = soc.run_matmul(a.view(), b.view(), d.view(), plan).unwrap();
+        assert_eq!(c_mesh, c_soc, "plan [{plan}] diverged between backends");
     }
 }
 
@@ -57,11 +97,11 @@ fn soc_reuse_across_matmuls_is_clean() {
     let a = rng.mat_i8(dim, dim);
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 100);
-    let c1 = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+    let c1 = soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty()).unwrap();
     // a faulty run in between must not poison later runs
     let f = Fault::new(0, 0, SignalKind::Acc, 25, 10);
-    let _ = soc.run_matmul(a.view(), b.view(), d.view(), Some(f)).unwrap();
-    let c2 = soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+    let _ = soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::single(f)).unwrap();
+    let c2 = soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty()).unwrap();
     assert_eq!(c1, c2);
 }
 
@@ -78,7 +118,7 @@ fn soc_accepts_zero_padded_window_operands() {
     let a_win = a_small.window(0, 0, dim, k);
     let d_win = d_small.window(0, 0, dim, dim);
     let mut soc = Soc::new(dim);
-    let c = soc.run_matmul(a_win, b.view(), d_win, None).unwrap();
+    let c = soc.run_matmul(a_win, b.view(), d_win, &FaultPlan::empty()).unwrap();
     let (am, dm) = (a_win.to_mat(), d_win.to_mat());
     assert_eq!(c, gold_matmul(am.view(), b.view(), dm.view()));
 }
@@ -92,7 +132,7 @@ fn soc_cycles_scale_beyond_mesh_cycles() {
     let b = rng.mat_i8(k, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut soc = Soc::new(dim);
-    soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+    soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty()).unwrap();
     let mesh_cycles = os_matmul_cycles(dim, k);
     assert!(
         soc.cycles > 2 * mesh_cycles,
@@ -127,6 +167,6 @@ fn icache_warms_up() {
     let b = rng.mat_i8(dim, dim);
     let d = rng.mat_i32(dim, dim, 10);
     let mut soc = Soc::new(dim);
-    soc.run_matmul(a.view(), b.view(), d.view(), None).unwrap();
+    soc.run_matmul(a.view(), b.view(), d.view(), &FaultPlan::empty()).unwrap();
     assert!(soc.icache.hits > soc.icache.misses, "icache must mostly hit");
 }

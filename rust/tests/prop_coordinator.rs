@@ -6,7 +6,7 @@
 
 use enfor_sa::campaign::campaign::run_input;
 use enfor_sa::campaign::{run_campaign, sample_trial};
-use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, TrialEngine};
+use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TrialEngine};
 use enfor_sa::coordinator::run_parallel;
 use enfor_sa::dnn::models;
 use enfor_sa::dnn::GemmSiteId;
@@ -30,6 +30,14 @@ fn random_cfg(rng: &mut Rng) -> CampaignConfig {
             TrialEngine::FullForward
         },
         signals: vec![],
+        // every scenario must satisfy every coordinator property
+        scenario: [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 2 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: false },
+        ][rng.usize_below(5)],
         workers: 1 + rng.usize_below(4),
     }
 }
@@ -92,12 +100,22 @@ fn prop_sampled_trials_always_in_bounds() {
         let n = 1 + rng.usize_below(300);
         let dim = [2, 4, 8, 16][rng.usize_below(4)];
         let site = GemmSiteId { layer: rng.usize_below(20), ordinal: 0 };
-        let t = sample_trial(site, m, k, n, dim, &mut rng, &[]);
+        let scenario = [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 3 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ][rng.usize_below(5)];
+        let t = sample_trial(scenario, site, m, k, n, dim, &mut rng, &[]);
         assert!(t.tile_i < m.div_ceil(dim));
         assert!(t.tile_j < n.div_ceil(dim));
-        assert!(t.fault.addr.row < dim && t.fault.addr.col < dim);
-        assert!(t.fault.bit < t.fault.addr.kind.width());
-        assert!(t.fault.cycle < enfor_sa::mesh::driver::os_matmul_cycles(dim, k));
+        assert!(!t.plan.is_empty());
+        for f in t.plan.faults() {
+            assert!(f.addr.row < dim && f.addr.col < dim);
+            assert!(f.bit < f.addr.kind.width());
+            assert!(f.cycle < enfor_sa::mesh::driver::os_matmul_cycles(dim, k));
+        }
     }
 }
 

@@ -40,6 +40,7 @@ fn cfg(backend: Backend, engine: TrialEngine, scope: OffloadScope) -> CampaignCo
         offload_scope: scope,
         engine,
         signals: vec![],
+        scenario: Default::default(),
         workers: 1,
     }
 }

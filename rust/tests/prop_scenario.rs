@@ -1,0 +1,329 @@
+//! Property tests pinning the scenario-first injection API.
+//!
+//! Three contracts:
+//! 1. **SEU compatibility** — `--scenario seu` consumes the campaign
+//!    RNG stream in exactly the legacy single-fault order, and a
+//!    single-fault `FaultPlan` executes bit-identically to the
+//!    pre-redesign single-`Fault` argument, across all four backends,
+//!    both trial engines and both offload scopes. Together with
+//!    `prop_resume.rs` (which runs the default `seu` scenario) this
+//!    pins fixed-seed campaign output to the pre-redesign behaviour.
+//! 2. **Plan semantics** — a burst plan fired by the driver's cursor
+//!    reproduces N manual single-fault `inject_now` calls on a raw
+//!    `Mesh`; an MBU plan equals a manual multi-bit flip.
+//! 3. **Scenario campaigns** — every scenario runs end-to-end on every
+//!    backend with identical counts across trial engines and worker
+//!    shardings.
+
+use enfor_sa::campaign::{
+    campaign_sites, derived_input_seed, plan_one, run_campaign, sample_mesh_fault,
+    sample_trial, signal_kinds, CampaignResult, PlannedTrial, TrialFault,
+};
+use enfor_sa::config::{
+    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TrialEngine,
+};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::engine::synthetic_input;
+use enfor_sa::dnn::models;
+use enfor_sa::mesh::driver::MatmulDriver;
+use enfor_sa::mesh::{Fault, FaultPlan, Mesh, MeshInputs, MeshSim, PlanCursor, SignalKind};
+use enfor_sa::soc::Soc;
+use enfor_sa::util::Rng;
+
+fn cfg(backend: Backend, scenario: Scenario) -> CampaignConfig {
+    CampaignConfig {
+        seed: 0x5CE4A_10,
+        faults_per_layer: 3,
+        inputs: 2,
+        backend,
+        offload_scope: OffloadScope::SingleTile,
+        engine: TrialEngine::SiteResume,
+        signals: vec![],
+        scenario,
+        workers: 1,
+    }
+}
+
+fn assert_counts_equal(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.vuln.trials, b.vuln.trials, "{label}: trials");
+    assert_eq!(a.vuln.critical, b.vuln.critical, "{label}: critical");
+    assert_eq!(a.exposed_trials, b.exposed_trials, "{label}: exposed");
+    assert_eq!(a.masked_trials, b.masked_trials, "{label}: masked");
+}
+
+/// Contract 1a: under `seu`, `plan_one` draws every trial exactly as the
+/// legacy sampler did — same stream, same order, single-fault plans.
+#[test]
+fn prop_seu_plans_replay_the_legacy_rng_stream() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    let c = cfg(Backend::EnforSa, Scenario::Seu);
+    let sites = campaign_sites(&model);
+    let kinds = signal_kinds(&c);
+    for input_idx in 0..c.inputs {
+        let seed = derived_input_seed(c.seed, input_idx);
+        let mut rng = Rng::new(seed);
+        let plan = plan_one(&model, &c, &sites, &kinds, mesh.dim, &mut rng);
+        // legacy replica: input tensor first, then trials site-major in
+        // the order (tile_i, tile_j, signal+bit, row, col, cycle)
+        let mut legacy = Rng::new(seed);
+        let _x = synthetic_input(&model.input_shape, &mut legacy);
+        for (batch, info) in plan.batches.iter().zip(&sites) {
+            for t in &batch.trials {
+                let PlannedTrial::Rtl(t) = t else {
+                    panic!("seu RTL campaign must plan RTL trials")
+                };
+                let tile_i = legacy.usize_below(info.m.div_ceil(mesh.dim));
+                let tile_j = legacy.usize_below(info.n.div_ceil(mesh.dim));
+                let fault = sample_mesh_fault(mesh.dim, info.k, &mut legacy, &kinds);
+                assert_eq!(t, &TrialFault::single(info.site, tile_i, tile_j, fault));
+            }
+        }
+    }
+}
+
+/// Contract 1b: a single-fault plan is bit-identical to the legacy
+/// single-`Fault` execution on the mesh drivers and the SoC.
+#[test]
+fn prop_single_fault_plans_match_legacy_execution_everywhere() {
+    let mut rng = Rng::new(0x51E6);
+    let dim = 4;
+    let k = 6;
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 100);
+    for _ in 0..40 {
+        let f = sample_mesh_fault(dim, k, &mut rng, &[]);
+        let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+        let legacy =
+            MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
+        let via_plan = MatmulDriver::new(&mut mesh).matmul_with_plan(
+            a.view(),
+            b.view(),
+            d.view(),
+            &FaultPlan::single(f),
+        );
+        assert_eq!(legacy, via_plan, "{f}");
+        let mut hm = enfor_sa::mesh::hdfit::InstrumentedMesh::new(dim);
+        let hdfit = MatmulDriver::new(&mut hm).matmul_with_plan(
+            a.view(),
+            b.view(),
+            d.view(),
+            &FaultPlan::single(f),
+        );
+        assert_eq!(legacy, hdfit, "{f} on hdfit");
+    }
+    // and through the whole SoC
+    let f = Fault::new(1, 2, SignalKind::Acc, 7, 11);
+    let mut soc = Soc::new(dim);
+    let c_soc = soc
+        .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::single(f))
+        .unwrap();
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let c_mesh =
+        MatmulDriver::new(&mut mesh).matmul_with_fault(a.view(), b.view(), d.view(), &f);
+    assert_eq!(c_soc, c_mesh);
+}
+
+/// Contract 2: a burst plan on one column fired through the cursor
+/// reproduces N manual single-fault `inject_now` calls on a raw `Mesh`,
+/// at the firing cycle and on every downstream cycle. Both meshes run
+/// the identical live MAC stream so the corruption propagates.
+#[test]
+fn burst_plan_reproduces_manual_inject_now_calls() {
+    let dim = 8;
+    let col = 2;
+    let fire_at: u64 = 3;
+    let faults: Vec<Fault> = (0..dim)
+        .map(|r| Fault::new(r, col, SignalKind::Propag, 0, fire_at))
+        .collect();
+    let plan = FaultPlan::new(faults.clone());
+
+    // two raw meshes stepped through the identical input schedule
+    let mut m1 = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut m2 = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut out1 = enfor_sa::mesh::StepOutput::new(dim);
+    let mut out2 = enfor_sa::mesh::StepOutput::new(dim);
+    let mut cursor = PlanCursor::start(&plan);
+    let drive = |inp: &mut MeshInputs, t: u64| {
+        inp.clear();
+        for lane in 0..dim {
+            inp.west_a[lane] = (lane as i8) + 1 + (t as i8);
+            inp.north_b[lane] = 2 * (lane as i8) - (t as i8);
+            inp.north_valid[lane] = true;
+        }
+    };
+    let mut inp1 = MeshInputs::idle(dim);
+    let mut inp2 = MeshInputs::idle(dim);
+    for t in 0..12u64 {
+        drive(&mut inp1, t);
+        drive(&mut inp2, t);
+        // mesh 1: the wrapper's one-compare-per-cycle cursor
+        if cursor.next_cycle() == t {
+            cursor.fire(&plan, t, &mut m1, &mut inp1);
+        }
+        // mesh 2: manual single-fault injections
+        if t == fire_at {
+            for f in &faults {
+                m2.inject_now(f, &mut inp2);
+            }
+        }
+        m1.step(&inp1, &mut out1);
+        m2.step(&inp2, &mut out2);
+        for r in 0..dim {
+            for c in 0..dim {
+                assert_eq!(
+                    m1.acc_at(r, c),
+                    m2.acc_at(r, c),
+                    "cycle {t} PE({r},{c})"
+                );
+            }
+        }
+    }
+    // sanity: the burst actually disturbed the accumulators vs golden
+    let mut golden = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut inp = MeshInputs::idle(dim);
+    let mut out = enfor_sa::mesh::StepOutput::new(dim);
+    for t in 0..12u64 {
+        drive(&mut inp, t);
+        golden.step(&inp, &mut out);
+    }
+    let corrupted = (0..dim)
+        .flat_map(|r| (0..dim).map(move |c| (r, c)))
+        .filter(|&(r, c)| m1.acc_at(r, c) != golden.acc_at(r, c))
+        .count();
+    assert!(corrupted > 0, "burst must corrupt live accumulators");
+}
+
+/// Contract 2b: an MBU plan on an accumulator equals flipping the same
+/// bits manually in one shot.
+#[test]
+fn mbu_plan_equals_manual_multi_bit_flip() {
+    let dim = 4;
+    let bits = [3u8, 4, 5];
+    let plan = FaultPlan::new(
+        bits.iter()
+            .map(|&b| Fault::new(1, 1, SignalKind::Acc, b, 0))
+            .collect(),
+    );
+    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let mut inp = MeshInputs::idle(dim);
+    let mut cursor = PlanCursor::start(&plan);
+    cursor.fire(&plan, 0, &mut mesh, &mut inp);
+    let mask: i32 = bits.iter().map(|&b| 1i32 << b).sum();
+    assert_eq!(mesh.acc_at(1, 1), mask, "all bits flipped from zero");
+    assert_eq!(cursor.next_cycle(), u64::MAX);
+}
+
+/// Contract 3a: every scenario × backend campaign completes with the
+/// full trial budget and identical counts across trial engines.
+#[test]
+fn prop_every_scenario_agrees_across_engines_and_backends() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    let scenarios = [
+        Scenario::Seu,
+        Scenario::Mbu { bits: 2 },
+        Scenario::Burst { radius: 1 },
+        Scenario::DoubleSeu,
+        Scenario::StuckAt { value: true },
+    ];
+    for scenario in scenarios {
+        for backend in [Backend::EnforSa, Backend::Hdfit, Backend::SwOnly] {
+            let mut a_cfg = cfg(backend, scenario);
+            a_cfg.engine = TrialEngine::SiteResume;
+            let a = run_campaign(&model, &mesh, &a_cfg).unwrap();
+            let mut b_cfg = cfg(backend, scenario);
+            b_cfg.engine = TrialEngine::FullForward;
+            let b = run_campaign(&model, &mesh, &b_cfg).unwrap();
+            assert_eq!(a.vuln.trials, 5 * 3 * 2, "{scenario}/{backend}");
+            assert_counts_equal(&a, &b, &format!("{scenario}/{backend}"));
+        }
+    }
+}
+
+/// Contract 3b: the ENFOR-SA and HDFIT backends stay bit-equivalent for
+/// multi-fault scenarios (the per-assignment hooks must apply every
+/// armed fault, including several on one assignment).
+#[test]
+fn prop_backends_agree_on_multi_fault_scenarios() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    for scenario in [
+        Scenario::Mbu { bits: 3 },
+        Scenario::Burst { radius: 1 },
+        Scenario::DoubleSeu,
+        Scenario::StuckAt { value: false },
+    ] {
+        let a = run_campaign(&model, &mesh, &cfg(Backend::EnforSa, scenario)).unwrap();
+        let b = run_campaign(&model, &mesh, &cfg(Backend::Hdfit, scenario)).unwrap();
+        assert_counts_equal(&a, &b, &format!("{scenario}"));
+    }
+}
+
+/// Contract 3c: worker-count invariance holds for every scenario (the
+/// coordinator shards plans, and plans now carry whole scenarios).
+#[test]
+fn prop_scenarios_are_worker_count_invariant() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    for scenario in [Scenario::Mbu { bits: 2 }, Scenario::DoubleSeu] {
+        let mut c = cfg(Backend::EnforSa, scenario);
+        c.workers = 1;
+        let one = run_parallel(&model, &mesh, &c, None).unwrap();
+        c.workers = 4;
+        let many = run_parallel(&model, &mesh, &c, None).unwrap();
+        assert_counts_equal(&one, &many, &format!("{scenario} workers=4"));
+    }
+}
+
+/// Contract 3d: the full-SoC backend executes scenario plans too
+/// (small budget — every trial drives the whole chip).
+#[test]
+fn full_soc_runs_scenario_plans() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dim: 4,
+        ..Default::default()
+    };
+    for scenario in [Scenario::Mbu { bits: 2 }, Scenario::StuckAt { value: true }] {
+        let mut c = cfg(Backend::FullSoc, scenario);
+        c.faults_per_layer = 1;
+        c.inputs = 1;
+        let soc = run_campaign(&model, &mesh, &c).unwrap();
+        assert_eq!(soc.vuln.trials, 5, "{scenario}");
+        // and it matches the mesh backend on the same plans
+        let mut m_cfg = cfg(Backend::EnforSa, scenario);
+        m_cfg.faults_per_layer = 1;
+        m_cfg.inputs = 1;
+        let mesh_r = run_campaign(&model, &mesh, &m_cfg).unwrap();
+        assert_counts_equal(&soc, &mesh_r, &format!("{scenario} soc-vs-mesh"));
+    }
+}
+
+/// Burst plans restricted to one signal class still respect the
+/// campaign's signal filter (sampling draws the base fault from the
+/// filtered pool; derived faults share its kind).
+#[test]
+fn scenario_sampling_respects_signal_filter() {
+    let mut rng = Rng::new(0x51F7);
+    let site = enfor_sa::dnn::GemmSiteId { layer: 0, ordinal: 0 };
+    for _ in 0..100 {
+        let t = sample_trial(
+            Scenario::Burst { radius: 2 },
+            site,
+            64,
+            27,
+            64,
+            8,
+            &mut rng,
+            &[SignalKind::Propag, SignalKind::Valid],
+        );
+        for f in t.plan.faults() {
+            assert!(matches!(
+                f.addr.kind,
+                SignalKind::Propag | SignalKind::Valid
+            ));
+        }
+    }
+}
