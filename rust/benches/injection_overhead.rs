@@ -53,13 +53,14 @@ fn main() {
          scenario {scenario}, DIM8 OS)"
     );
     println!(
-        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9}",
-        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s", "resume-x"
+        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8}",
+        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s", "resume-x",
+        "rtl-cycles", "tile-x"
     );
     let rows = injection_table(&names, &mesh_cfg, &cc).expect("campaigns");
     for r in &rows {
         println!(
-            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x",
+            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} {:>7.2}x",
             r.model,
             human_time(r.sw.wall.as_secs_f64()),
             human_time(r.rtl.wall.as_secs_f64()),
@@ -67,12 +68,15 @@ fn main() {
             r.pvf_pct(),
             r.avf_pct(),
             r.trials_per_sec(),
-            r.resume_speedup_vs_full_forward()
+            r.resume_speedup_vs_full_forward(),
+            r.rtl_cycles_stepped(),
+            r.cycle_resume_speedup()
         );
     }
     let n = rows.len() as f64;
     println!(
-        "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x",
+        "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x  \
+         cycle-resume speedup {:.2}x",
         rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.avf_pct()).sum::<f64>() / n,
@@ -80,10 +84,11 @@ fn main() {
             .map(|r| r.resume_speedup_vs_full_forward())
             .sum::<f64>()
             / n,
+        rows.iter().map(|r| r.cycle_resume_speedup()).sum::<f64>() / n,
     );
     for r in &rows {
         println!(
-            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4}",
+            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4}",
             r.model,
             r.sw.wall.as_secs_f64(),
             r.rtl.wall.as_secs_f64(),
@@ -91,7 +96,9 @@ fn main() {
             r.pvf_pct(),
             r.avf_pct(),
             r.trials_per_sec(),
-            r.resume_speedup_vs_full_forward()
+            r.resume_speedup_vs_full_forward(),
+            r.rtl_cycles_stepped(),
+            r.cycle_resume_speedup()
         );
     }
     if let Ok(path) = std::env::var("BENCH_OUT") {

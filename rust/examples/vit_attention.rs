@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             backend: Backend::EnforSa,
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
+            tile_engine: Default::default(),
             signals: vec![],
             scenario: Default::default(),
             workers: 1,

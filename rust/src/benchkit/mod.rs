@@ -4,7 +4,9 @@
 //! code regenerates the paper's artifacts either way.
 
 use crate::campaign::{run_campaign, CampaignResult};
-use crate::config::{Backend, CampaignConfig, Dataflow, MeshConfig, Scenario, TrialEngine};
+use crate::config::{
+    Backend, CampaignConfig, Dataflow, MeshConfig, Scenario, TileEngine, TrialEngine,
+};
 use crate::dnn::models;
 use crate::mat::Mat;
 use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
@@ -174,15 +176,23 @@ pub fn layer_forward(dims: &[usize]) -> Result<Vec<LayerForwardRow>> {
 }
 
 /// Table VI row: injection time + vulnerability factors for one model,
-/// plus the site-resume vs full-forward timing pair on the RTL backend.
+/// plus the site-resume vs full-forward timing pair and the
+/// cycle-resume vs full tile-engine pair on the RTL backend.
 #[derive(Clone, Debug)]
 pub struct InjectionRow {
     pub model: String,
     pub sw: CampaignResult,
-    /// ENFOR-SA campaign on the site-resume trial engine (the default).
+    /// ENFOR-SA campaign on the default fast path (site-resume trial
+    /// engine, cycle-resume tile engine).
     pub rtl: CampaignResult,
-    /// Identical campaign on the full-forward oracle engine — same
-    /// seed, bit-identical counts, only the wall clock differs.
+    /// Identical campaign with ONLY the tile engine switched to `full`
+    /// — same seed, bit-identical counts; isolates the cycle-resume
+    /// effect as a deterministic RTL-cycle ratio.
+    pub rtl_tile_full: CampaignResult,
+    /// Identical campaign with ONLY the trial engine switched to the
+    /// full-forward oracle (tile engine stays cycle-resume) — same
+    /// seed, bit-identical counts; isolates the site-resume wall-clock
+    /// effect. Each speedup below varies exactly one engine.
     pub rtl_full: CampaignResult,
 }
 
@@ -206,18 +216,39 @@ impl InjectionRow {
 
     /// Wall-clock speedup of site-resume over the full-forward oracle
     /// on the same RTL campaign (> 1 means resume is faster; grows with
-    /// layer count).
+    /// layer count). Both sides run the cycle-resume tile engine, so
+    /// this ratio isolates the TRIAL engine (schema v4 note: v3
+    /// predates cycle-resume, so absolute walls are not comparable
+    /// across schema versions, only the per-factor ratios).
     pub fn resume_speedup_vs_full_forward(&self) -> f64 {
         self.rtl_full.wall.as_secs_f64() / self.rtl.wall.as_secs_f64()
+    }
+
+    /// RTL mesh cycles the (cycle-resume) campaign stepped.
+    pub fn rtl_cycles_stepped(&self) -> u64 {
+        self.rtl.rtl_cycles_stepped
+    }
+
+    /// Architectural speedup of the cycle-resume tile engine: RTL cycles
+    /// the full tile engine steps for the bit-identical campaign,
+    /// divided by cycle-resume's. A pure cycle-count ratio — fully
+    /// deterministic per seed (no wall-clock noise), so CI asserts it.
+    pub fn cycle_resume_speedup(&self) -> f64 {
+        self.rtl_tile_full.rtl_cycles_stepped as f64
+            / self.rtl.rtl_cycles_stepped.max(1) as f64
     }
 }
 
 /// Table VI: run SW-only and ENFOR-SA campaigns for each named model,
-/// plus the full-forward oracle timing of the RTL campaign. The oracle
-/// run is the slowest of the three by design (it is what site-resume
-/// is measured against), so generating the table costs roughly one
-/// extra legacy-speed campaign per model — the price of tracking
-/// `resume_speedup_vs_full_forward` in every snapshot.
+/// plus two single-factor oracle reruns of the RTL campaign: the full
+/// tile engine (same trial engine) isolates the cycle-resume RTL-cycle
+/// saving, and the full-forward trial engine (same tile engine)
+/// isolates the site-resume wall-clock speedup. The oracle runs are
+/// slower by design (they are what the fast path is measured against),
+/// so generating the table costs roughly two extra oracle-speed
+/// campaigns per model — the price of tracking
+/// `resume_speedup_vs_full_forward` and `cycle_resume_speedup` in
+/// every snapshot.
 pub fn injection_table(
     model_names: &[String],
     mesh_cfg: &MeshConfig,
@@ -233,7 +264,11 @@ pub fn injection_table(
         let mut rtl_cfg = base.clone();
         rtl_cfg.backend = Backend::EnforSa;
         rtl_cfg.engine = TrialEngine::SiteResume;
+        rtl_cfg.tile_engine = TileEngine::CycleResume;
         let rtl = run_campaign(&model, mesh_cfg, &rtl_cfg)?;
+        let mut tile_full_cfg = rtl_cfg.clone();
+        tile_full_cfg.tile_engine = TileEngine::Full;
+        let rtl_tile_full = run_campaign(&model, mesh_cfg, &tile_full_cfg)?;
         let mut full_cfg = rtl_cfg.clone();
         full_cfg.engine = TrialEngine::FullForward;
         let rtl_full = run_campaign(&model, mesh_cfg, &full_cfg)?;
@@ -241,6 +276,7 @@ pub fn injection_table(
             model: model.name.clone(),
             sw,
             rtl,
+            rtl_tile_full,
             rtl_full,
         });
     }
@@ -253,8 +289,10 @@ pub fn injection_table(
 /// per-scenario outcome counts (masked / exposed / critical), campaign
 /// throughput and the site-resume speedup over the full-forward
 /// oracle, so future PRs can diff the RTL-offload overhead, the
-/// trial-engine trajectory and the scenario mix. Schema v3 adds the
-/// campaign `scenario` label and per-model outcome rows.
+/// trial-engine trajectory and the scenario mix. Schema v4 adds the
+/// cycle-resume tile-engine accounting: `rtl_cycles_stepped` (the fast
+/// path), `rtl_cycles_stepped_full_tile` (the bit-identical full-tile
+/// oracle) and their deterministic ratio `cycle_resume_speedup`.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -283,12 +321,18 @@ pub fn injection_snapshot_json(
                     "resume_speedup_vs_full_forward",
                     Json::num(r.resume_speedup_vs_full_forward()),
                 ),
+                ("rtl_cycles_stepped", Json::num(r.rtl_cycles_stepped() as f64)),
+                (
+                    "rtl_cycles_stepped_full_tile",
+                    Json::num(r.rtl_tile_full.rtl_cycles_stepped as f64),
+                ),
+                ("cycle_resume_speedup", Json::num(r.cycle_resume_speedup())),
             ])
         })
         .collect();
     let n = rows.len().max(1) as f64;
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v3")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v4")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
         ("faults_per_layer", Json::num(faults_per_layer as f64)),
@@ -305,6 +349,10 @@ pub fn injection_snapshot_json(
                     .sum::<f64>()
                     / n,
             ),
+        ),
+        (
+            "mean_cycle_resume_speedup",
+            Json::num(rows.iter().map(|r| r.cycle_resume_speedup()).sum::<f64>() / n),
         ),
         ("models", Json::Arr(models)),
     ])
@@ -340,7 +388,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v3_carries_the_scenario() {
+    fn snapshot_schema_v4_carries_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -352,9 +400,15 @@ mod tests {
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v3")
+            Some("enfor-sa/injection-overhead/v4")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
+        assert!(
+            j.get("mean_cycle_resume_speedup")
+                .and_then(Json::as_f64)
+                .unwrap()
+                >= 1.0
+        );
         let models = j.get("models").and_then(Json::as_arr).unwrap();
         let m0 = &models[0];
         assert_eq!(m0.get("scenario").and_then(Json::as_str), Some("mbu:2"));
@@ -364,6 +418,41 @@ mod tests {
         let critical = m0.get("critical").and_then(Json::as_f64).unwrap();
         assert_eq!(trials, masked + exposed + critical);
         assert!(trials > 0.0);
+        let cycles = m0.get("rtl_cycles_stepped").and_then(Json::as_f64).unwrap();
+        let cycles_full = m0
+            .get("rtl_cycles_stepped_full_tile")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let speedup = m0.get("cycle_resume_speedup").and_then(Json::as_f64).unwrap();
+        assert!(cycles > 0.0 && cycles_full > 0.0 && speedup > 0.0);
+        assert!(cycles <= cycles_full, "resume never steps MORE cycles");
+    }
+
+    #[test]
+    fn cycle_resume_steps_strictly_fewer_rtl_cycles() {
+        // the tile-engine acceptance bar: bit-identical counts, strictly
+        // fewer RTL cycles stepped. 8 faults/layer pigeonhole trials of
+        // the 2-tile Linear site onto shared tiles, so the saving is
+        // structural for every model in the zoo.
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 8,
+            inputs: 2,
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let r = &rows[0];
+        assert_eq!(r.rtl.vuln.trials, r.rtl_tile_full.vuln.trials);
+        assert_eq!(r.rtl.vuln.critical, r.rtl_tile_full.vuln.critical);
+        assert_eq!(r.rtl.exposed_trials, r.rtl_tile_full.exposed_trials);
+        assert_eq!(r.rtl.masked_trials, r.rtl_tile_full.masked_trials);
+        assert!(
+            r.rtl.rtl_cycles_stepped < r.rtl_tile_full.rtl_cycles_stepped,
+            "cycle-resume stepped {} RTL cycles, full tile engine {}",
+            r.rtl.rtl_cycles_stepped,
+            r.rtl_tile_full.rtl_cycles_stepped
+        );
+        assert!(r.cycle_resume_speedup() > 1.0);
     }
 
     #[test]

@@ -34,7 +34,9 @@
 
 use super::fault::{sample_trial, TrialFault};
 use super::runner::{CrossLayerRunner, TileBackend};
-use crate::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TrialEngine};
+use crate::config::{
+    Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TileEngine, TrialEngine,
+};
 use crate::dnn::engine::probe_input;
 use crate::dnn::engine::synthetic_input;
 use crate::dnn::{argmax, ActivationCheckpoints, GemmSiteInfo, Model, TensorI8};
@@ -69,6 +71,11 @@ pub struct CampaignResult {
     pub vuln: VulnEstimate,
     pub exposed_trials: u64,
     pub masked_trials: u64,
+    /// Total RTL mesh cycles stepped by the campaign's tile runs
+    /// (golden-cursor advances included; 0 on the SW-only backend).
+    /// Deterministic per seed, so the cycle-resume speedup is
+    /// wall-clock-noise-free.
+    pub rtl_cycles_stepped: u64,
     pub wall: Duration,
     pub per_layer: BTreeMap<usize, VulnEstimate>,
 }
@@ -86,6 +93,7 @@ impl CampaignResult {
         self.vuln.merge(&other.vuln);
         self.exposed_trials += other.exposed_trials;
         self.masked_trials += other.masked_trials;
+        self.rtl_cycles_stepped += other.rtl_cycles_stepped;
         self.wall += other.wall;
         for (layer, v) in &other.per_layer {
             self.per_layer.entry(*layer).or_default().merge(v);
@@ -100,6 +108,7 @@ impl CampaignResult {
             vuln: VulnEstimate::default(),
             exposed_trials: 0,
             masked_trials: 0,
+            rtl_cycles_stepped: 0,
             wall: Duration::ZERO,
             per_layer: BTreeMap::new(),
         }
@@ -228,6 +237,7 @@ enum Sim {
 /// executor per worker thread; simulators never cross threads.
 pub struct TrialExecutor {
     engine: TrialEngine,
+    tile_engine: TileEngine,
     scope: OffloadScope,
     sim: Sim,
 }
@@ -242,6 +252,7 @@ impl TrialExecutor {
         };
         TrialExecutor {
             engine: cfg.engine,
+            tile_engine: cfg.tile_engine,
             scope: cfg.offload_scope,
             sim,
         }
@@ -274,6 +285,7 @@ impl TrialExecutor {
                 TileBackend::Mesh(m),
                 self.scope,
                 self.engine,
+                self.tile_engine,
                 result,
             ),
             Sim::Hdfit(m) => run_rtl_batch(
@@ -283,10 +295,14 @@ impl TrialExecutor {
                 TileBackend::Hdfit(m),
                 self.scope,
                 self.engine,
+                self.tile_engine,
                 result,
             ),
             // the SoC path always offloads a single tile (whole-layer
-            // offload through the core is unsupported)
+            // offload through the core is unsupported); it also keeps
+            // the full tile engine — the controller FSM owns the
+            // schedule, so the runner's supports_cycle_resume gate
+            // falls back to full there (pinned by prop_cycle_resume.rs)
             Sim::Soc(s) => run_rtl_batch(
                 model,
                 plan,
@@ -294,6 +310,7 @@ impl TrialExecutor {
                 TileBackend::Soc(s.as_mut()),
                 OffloadScope::SingleTile,
                 self.engine,
+                self.tile_engine,
                 result,
             ),
         }
@@ -301,8 +318,17 @@ impl TrialExecutor {
 }
 
 /// Run every RTL trial of a batch through one runner: the backend
-/// borrow and the scratch result tile persist across the whole batch
-/// ([`CrossLayerRunner::arm`] re-arms between trials).
+/// borrow, the scratch buffers and the golden cycle-cursor persist
+/// across the whole batch ([`CrossLayerRunner::arm`] re-arms between
+/// trials).
+///
+/// Under [`TileEngine::CycleResume`] the batch executes **tile-major,
+/// then by ascending first-effect cycle**, so the golden cursor only
+/// ever steps forward within one tile trajectory and the batch pays
+/// each tile's golden prefix exactly once. Re-ordering execution is
+/// free: sampling order is pinned by [`plan_one`] (the RNG stream is
+/// untouched) and every recorded outcome is order-independent.
+#[allow(clippy::too_many_arguments)]
 fn run_rtl_batch(
     model: &Model,
     plan: &InputPlan,
@@ -310,25 +336,39 @@ fn run_rtl_batch(
     backend: TileBackend<'_>,
     scope: OffloadScope,
     engine: TrialEngine,
+    tile_engine: TileEngine,
     result: &mut CampaignResult,
 ) {
     let layer = batch.info.site.layer;
-    let Some((first, rest)) = batch.trials.split_first() else {
+    if batch.trials.is_empty() {
         return;
-    };
-    let PlannedTrial::Rtl(first) = first else {
-        unreachable!("SW trial routed to an RTL backend")
-    };
-    let mut runner = CrossLayerRunner::new(first, backend, scope);
-    runner.backend.reset();
-    record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
-    for t in rest {
-        let PlannedTrial::Rtl(trial) = t else {
-            unreachable!("SW trial routed to an RTL backend")
-        };
-        runner.arm(trial);
+    }
+    let mut order: Vec<usize> = (0..batch.trials.len()).collect();
+    if tile_engine == TileEngine::CycleResume
+        && scope == OffloadScope::SingleTile
+        && backend.supports_cycle_resume()
+    {
+        order.sort_by_key(|&i| {
+            let t = rtl_trial(batch, i);
+            (t.tile_i, t.tile_j, backend.first_effect_cycle(&t.plan))
+        });
+    }
+    let mut runner =
+        CrossLayerRunner::with_engine(rtl_trial(batch, order[0]), backend, scope, tile_engine);
+    for (idx, &i) in order.iter().enumerate() {
+        if idx > 0 {
+            runner.arm(rtl_trial(batch, i));
+        }
         runner.backend.reset();
         record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+    }
+    result.rtl_cycles_stepped += runner.rtl_cycles;
+}
+
+fn rtl_trial(batch: &SiteBatch, i: usize) -> &TrialFault {
+    match &batch.trials[i] {
+        PlannedTrial::Rtl(t) => t,
+        PlannedTrial::Sw(_) => unreachable!("SW trial routed to an RTL backend"),
     }
 }
 
@@ -463,6 +503,7 @@ mod tests {
                 backend,
                 offload_scope: OffloadScope::SingleTile,
                 engine: TrialEngine::SiteResume,
+                tile_engine: TileEngine::CycleResume,
                 signals: vec![],
                 scenario: Scenario::Seu,
                 workers: 1,
@@ -575,6 +616,33 @@ mod tests {
             assert_eq!(a.exposed_trials, b.exposed_trials, "{scenario}");
             assert_eq!(a.masked_trials, b.masked_trials, "{scenario}");
         }
+    }
+
+    #[test]
+    fn tile_engines_agree_and_cycle_resume_steps_fewer() {
+        // the cycle-resume acceptance pin: bit-identical counts, strictly
+        // fewer RTL cycles. faults_per_layer=16 pigeonholes trials onto
+        // shared tiles (the Linear site has a 1x2 tile grid), so the
+        // golden-prefix saving is structural, not a seed accident.
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.tile_engine = TileEngine::CycleResume;
+        let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::Full;
+        let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        assert_eq!(a.masked_trials, b.masked_trials);
+        assert!(a.rtl_cycles_stepped > 0 && b.rtl_cycles_stepped > 0);
+        assert!(
+            a.rtl_cycles_stepped < b.rtl_cycles_stepped,
+            "cycle-resume must step fewer RTL cycles: {} vs {}",
+            a.rtl_cycles_stepped,
+            b.rtl_cycles_stepped
+        );
     }
 
     #[test]

@@ -14,14 +14,14 @@
 //! runner's persistent scratch.
 
 use super::fault::TrialFault;
-use crate::config::OffloadScope;
+use crate::config::{OffloadScope, TileEngine};
 use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
 use crate::mat::{Mat, MatView, MatViewMut};
-use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
+use crate::mesh::driver::{os_matmul_cycles, tiled_matmul_os, MatmulDriver};
 use crate::mesh::hdfit::InstrumentedMesh;
 
-use crate::mesh::{FaultPlan, Mesh, MeshSim};
+use crate::mesh::{CycleCursor, DriverScratch, FaultPlan, Injectable, Mesh, MeshSim};
 use crate::soc::Soc;
 
 /// Which simulator executes the offloaded tile.
@@ -60,9 +60,7 @@ impl<'a> TileBackend<'a> {
     }
 
     /// [`TileBackend::run_tile`] into a caller-provided result buffer
-    /// (reshaped and zeroed in place): the campaign's per-site trial
-    /// batches drain every RTL tile into the same scratch `Mat`, so the
-    /// hot path performs no per-trial result allocation at all.
+    /// (reshaped and zeroed in place). Returns the RTL cycles stepped.
     pub fn run_tile_into(
         &mut self,
         a: MatView<i8>,
@@ -70,13 +68,90 @@ impl<'a> TileBackend<'a> {
         d: MatView<i32>,
         plan: &FaultPlan,
         out: &mut Mat<i32>,
-    ) -> anyhow::Result<()> {
-        match self {
-            TileBackend::Mesh(m) => MatmulDriver::new(*m).matmul_into(a, b, d, plan, out),
-            TileBackend::Hdfit(m) => MatmulDriver::new(*m).matmul_into(a, b, d, plan, out),
+    ) -> anyhow::Result<u64> {
+        let mut scratch = DriverScratch::default();
+        self.run_tile_with(a, b, d, plan, out, &mut scratch)
+    }
+
+    /// [`TileBackend::run_tile_into`] reusing a caller-owned
+    /// [`DriverScratch`] as well: the campaign's per-site trial batches
+    /// drain every RTL tile into the same scratch `Mat` and boundary
+    /// buffers, so the hot path performs no per-trial allocation at all.
+    pub fn run_tile_with(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        plan: &FaultPlan,
+        out: &mut Mat<i32>,
+        scratch: &mut DriverScratch,
+    ) -> anyhow::Result<u64> {
+        Ok(match self {
+            TileBackend::Mesh(m) => {
+                MatmulDriver::new(*m).matmul_into_with(a, b, d, plan, out, scratch)
+            }
+            TileBackend::Hdfit(m) => {
+                MatmulDriver::new(*m).matmul_into_with(a, b, d, plan, out, scratch)
+            }
             TileBackend::Soc(s) => s.run_matmul_into(a, b, d, plan, out)?,
+        })
+    }
+
+    /// Whether this backend supports the cycle-resume tile engine. The
+    /// whole-SoC backend does not: its controller FSM owns the matmul
+    /// schedule, so the wrapper cannot index it from an arbitrary cycle
+    /// — `full` is silently used instead (ROADMAP "Cycle-resume"
+    /// contract; pinned by the oracle tests).
+    pub fn supports_cycle_resume(&self) -> bool {
+        !matches!(self, TileBackend::Soc(_))
+    }
+
+    /// Earliest cycle this backend's execution of `plan` can diverge
+    /// from the golden trajectory (the cycle-resume restore point; the
+    /// HDFIT backend's storage hooks fire one cycle before the ENFOR-SA
+    /// onset).
+    pub fn first_effect_cycle(&self, plan: &FaultPlan) -> u64 {
+        match self {
+            TileBackend::Mesh(m) => m.first_effect_cycle(plan),
+            TileBackend::Hdfit(m) => m.first_effect_cycle(plan),
+            TileBackend::Soc(_) => plan.first_cycle(),
         }
-        Ok(())
+    }
+
+    /// Cycle-resume tile run: advance the shared golden cursor for tile
+    /// `key` to the plan's first effect cycle, snapshot, and replay only
+    /// the faulty suffix — bit-identical to [`TileBackend::run_tile_with`]
+    /// (pinned by `prop_cycle_resume.rs`). Returns the RTL cycles
+    /// stepped (golden advance + replay). Callers must gate on
+    /// [`TileBackend::supports_cycle_resume`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_tile_resumed(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        plan: &FaultPlan,
+        key: (usize, usize),
+        cur: &mut CycleCursor,
+        out: &mut Mat<i32>,
+        scratch: &mut DriverScratch,
+    ) -> u64 {
+        let resume = self.first_effect_cycle(plan);
+        match self {
+            TileBackend::Mesh(m) => {
+                let cycles =
+                    MatmulDriver::new(*m).advance_golden(a, b, d, key, resume, cur, scratch);
+                cycles + MatmulDriver::new(*m).matmul_resumed(a, b, d, plan, cur, out, scratch)
+            }
+            TileBackend::Hdfit(m) => {
+                let cycles =
+                    MatmulDriver::new(*m).advance_golden(a, b, d, key, resume, cur, scratch);
+                cycles + MatmulDriver::new(*m).matmul_resumed(a, b, d, plan, cur, out, scratch)
+            }
+            TileBackend::Soc(_) => {
+                unreachable!("cycle-resume is mesh-only: the SoC controller owns its schedule")
+            }
+        }
     }
 
     /// Prepare the backend for the next trial of a batch. The mesh
@@ -129,36 +204,66 @@ impl<'a> TileBackend<'a> {
 /// A runner is built once per **site batch** and re-armed per trial
 /// ([`CrossLayerRunner::arm`]): the backend borrow, the borrowed trial
 /// (plans live in the input's pre-sampled batch, so re-arming allocates
-/// nothing) and the scratch result tile persist across all
-/// `faults_per_layer` trials of a site.
+/// nothing), the scratch result tile, the driver scratch and the golden
+/// [`CycleCursor`] persist across all `faults_per_layer` trials of a
+/// site. Under [`TileEngine::CycleResume`] the cursor's snapshots stay
+/// valid across trials because every trial of a batch replays the site
+/// from the same checkpoint, so the tile operands are bit-identical.
 pub struct CrossLayerRunner<'a> {
     pub trial: &'a TrialFault,
     pub backend: TileBackend<'a>,
     pub scope: OffloadScope,
+    /// Tile execution engine (cycle-resume falls back to full on
+    /// backends without [`TileBackend::supports_cycle_resume`]).
+    pub engine: TileEngine,
     /// Set when the target site was reached.
     pub hit: bool,
     /// Set when the RTL tile differed from the fault-free tile (the
     /// fault was *exposed* to the software layer — paper Fig. 5b).
     pub exposed: bool,
+    /// Total RTL mesh cycles stepped by this runner: golden-cursor
+    /// advances plus (full or resumed) tile runs — the campaign's
+    /// `rtl_cycles_stepped` accounting.
+    pub rtl_cycles: u64,
     /// Reusable DIM x DIM result tile shared by every trial in a batch.
     scratch: Mat<i32>,
+    /// Reusable driver boundary buffers + drain counter.
+    drv: DriverScratch,
+    /// Golden trajectory snapshot shared by the batch's trials.
+    cursor: CycleCursor,
 }
 
 impl<'a> CrossLayerRunner<'a> {
+    /// Legacy-shaped constructor: the full tile engine (the oracle the
+    /// pre-resume unit tests pin). Campaign code passes the configured
+    /// engine via [`CrossLayerRunner::with_engine`].
     pub fn new(trial: &'a TrialFault, backend: TileBackend<'a>, scope: OffloadScope) -> Self {
+        Self::with_engine(trial, backend, scope, TileEngine::Full)
+    }
+
+    pub fn with_engine(
+        trial: &'a TrialFault,
+        backend: TileBackend<'a>,
+        scope: OffloadScope,
+        engine: TileEngine,
+    ) -> Self {
         let dim = backend.dim();
         CrossLayerRunner {
             trial,
             backend,
             scope,
+            engine,
             hit: false,
             exposed: false,
+            rtl_cycles: 0,
             scratch: Mat::zeros(dim, dim),
+            drv: DriverScratch::new(dim),
+            cursor: CycleCursor::new(),
         }
     }
 
     /// Re-arm for the next trial of a batch: fresh trial and flags, same
-    /// backend borrow, same scratch buffer.
+    /// backend borrow, same scratch buffers, same golden cursor.
     pub fn arm(&mut self, trial: &'a TrialFault) {
         self.trial = trial;
         self.hit = false;
@@ -190,11 +295,17 @@ impl GemmHook for CrossLayerRunner<'_> {
         gemm_i8(m, k, n, call.a, call.b, call.d, out);
 
         if self.scope == OffloadScope::Layer {
-            // ablation: run the ENTIRE layer through RTL
+            // ablation: run the ENTIRE layer through RTL. Cycle-resume
+            // does not apply here — every trial pays the whole layer by
+            // design, so the tile prefix is noise; the cycle accounting
+            // is the analytic tile count (each tile one full OS pass,
+            // plus the faulty tile's re-run).
             let cf = self
                 .backend
                 .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
                 .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
+            let tiles = (m.div_ceil(dim) * n.div_ceil(dim)) as u64;
+            self.rtl_cycles += (tiles + 1) * os_matmul_cycles(dim, k);
             self.exposed = cf.data() != &out[..];
             out.copy_from_slice(cf.data());
             return true;
@@ -204,14 +315,30 @@ impl GemmHook for CrossLayerRunner<'_> {
         // zero-copy window into the layer's buffers; the RTL result
         // drains into the runner's scratch tile (no allocation)
         let (ri, cj) = (ti * dim, tj * dim);
-        if let Err(e) = self.backend.run_tile_into(
-            a_full.sub(ri, 0, dim, k),
-            b_full.sub(0, cj, k, dim),
-            d_full.sub(ri, cj, dim, dim),
-            &self.trial.plan,
-            &mut self.scratch,
-        ) {
-            panic!("tile offload failed for [{}]: {e:#}", self.trial);
+        let a_t = a_full.sub(ri, 0, dim, k);
+        let b_t = b_full.sub(0, cj, k, dim);
+        let d_t = d_full.sub(ri, cj, dim, dim);
+        if self.engine == TileEngine::CycleResume && self.backend.supports_cycle_resume() {
+            // cycle-resume: skip the golden prefix of the tile — the
+            // batch-shared cursor advances it once per tile
+            self.rtl_cycles += self.backend.run_tile_resumed(
+                a_t,
+                b_t,
+                d_t,
+                &self.trial.plan,
+                (ti, tj),
+                &mut self.cursor,
+                &mut self.scratch,
+                &mut self.drv,
+            );
+        } else {
+            match self
+                .backend
+                .run_tile_with(a_t, b_t, d_t, &self.trial.plan, &mut self.scratch, &mut self.drv)
+            {
+                Ok(cycles) => self.rtl_cycles += cycles,
+                Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
+            }
         }
         // splice the RTL tile back into the accumulator (one strided
         // copy; a changed element means the fault escaped the array)
@@ -392,6 +519,70 @@ mod tests {
         assert!(runner.hit);
         assert!(runner.exposed, "two high Acc bits mid-compute must escape");
         assert_ne!(out, golden);
+    }
+
+    #[test]
+    fn cycle_resume_runner_matches_full_runners_and_steps_fewer_cycles() {
+        // One cycle-resume runner re-armed across a (cycle-sorted) batch
+        // must reproduce fresh full-engine runners bit-exactly while
+        // stepping strictly fewer RTL cycles (the shared tile prefix is
+        // paid once).
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(78);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        // same tile, ascending fault cycles — the order the campaign's
+        // batch sort guarantees
+        let trials = [a_trial(2), a_trial(20), a_trial(33)];
+
+        let mut full = Vec::new();
+        let mut full_cycles = 0u64;
+        for t in &trials {
+            let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+            let mut r = CrossLayerRunner::new(
+                t,
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+            );
+            let out = model.forward(&x, Some(&mut r));
+            full_cycles += r.rtl_cycles;
+            full.push((out, r.exposed));
+        }
+
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r = CrossLayerRunner::with_engine(
+            &trials[0],
+            TileBackend::Mesh(&mut mesh),
+            OffloadScope::SingleTile,
+            TileEngine::CycleResume,
+        );
+        for (i, t) in trials.iter().enumerate() {
+            if i > 0 {
+                r.arm(t);
+            }
+            r.backend.reset();
+            let out = model.forward(&x, Some(&mut r));
+            assert_eq!(out, full[i].0, "trial {i} output");
+            assert_eq!(r.exposed, full[i].1, "trial {i} exposure");
+        }
+        assert!(
+            r.rtl_cycles < full_cycles,
+            "cycle-resume stepped {} cycles, full engine {}",
+            r.rtl_cycles,
+            full_cycles
+        );
+    }
+
+    #[test]
+    fn soc_backend_keeps_the_full_tile_path() {
+        let mut soc = Soc::new(4);
+        assert!(
+            !TileBackend::Soc(&mut soc).supports_cycle_resume(),
+            "the SoC controller FSM owns its schedule: no cycle-resume"
+        );
+        let mut mesh = Mesh::new(4, Dataflow::OutputStationary);
+        assert!(TileBackend::Mesh(&mut mesh).supports_cycle_resume());
+        let mut hm = InstrumentedMesh::new(4);
+        assert!(TileBackend::Hdfit(&mut hm).supports_cycle_resume());
     }
 
     #[test]

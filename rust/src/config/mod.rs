@@ -134,6 +134,44 @@ impl std::fmt::Display for TrialEngine {
     }
 }
 
+/// How the offloaded RTL tile itself is stepped per trial.
+///
+/// CLI / JSON grammar (`--tile-engine` / `"tile_engine"`):
+/// `full | cycle-resume`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TileEngine {
+    /// Snapshot the golden mesh trajectory of each offloaded tile and
+    /// start every trial at its first fault cycle; a site batch pays
+    /// each tile's golden prefix once (the default fast path). The
+    /// whole-SoC backend keeps the full path — its controller FSM owns
+    /// the schedule — so cycle-resume silently falls back there.
+    #[default]
+    CycleResume,
+    /// Step every trial from cycle 0 — the bit-exactness oracle for
+    /// cycle-resume, mirroring [`TrialEngine::FullForward`].
+    Full,
+}
+
+impl TileEngine {
+    pub fn parse(s: &str) -> Option<TileEngine> {
+        match s.to_ascii_lowercase().as_str() {
+            "cycle-resume" | "cycle_resume" | "cycle" => Some(TileEngine::CycleResume),
+            "full" => Some(TileEngine::Full),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TileEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            TileEngine::CycleResume => "cycle-resume",
+            TileEngine::Full => "full",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// Fault scenario sampled for every trial of a campaign. Each scenario
 /// is a deterministic sampler producing a `FaultPlan` per trial; `seu`
 /// (the paper's model, the default) reproduces the legacy single-fault
@@ -245,6 +283,9 @@ pub struct CampaignConfig {
     /// Trial execution engine (site-resume by default; full-forward is
     /// the bit-exactness oracle). Results are bit-identical either way.
     pub engine: TrialEngine,
+    /// RTL tile execution engine (cycle-resume by default; full is the
+    /// bit-exactness oracle). Results are bit-identical either way.
+    pub tile_engine: TileEngine,
     /// Restrict injection to these signal kinds (empty = all).
     pub signals: Vec<String>,
     /// Fault scenario sampled per trial (`seu` reproduces the legacy
@@ -263,6 +304,7 @@ impl Default for CampaignConfig {
             backend: Backend::EnforSa,
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
+            tile_engine: TileEngine::CycleResume,
             signals: vec![],
             scenario: Scenario::Seu,
             workers: 1,
@@ -349,6 +391,10 @@ impl Config {
                 cfg.campaign.engine = TrialEngine::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad trial_engine {v}"))?;
             }
+            if let Some(v) = c.get("tile_engine").and_then(Json::as_str) {
+                cfg.campaign.tile_engine = TileEngine::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad tile_engine {v}"))?;
+            }
             if let Some(v) = c.get("scenario").and_then(Json::as_str) {
                 cfg.campaign.scenario = Scenario::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scenario {v}"))?;
@@ -417,6 +463,7 @@ mod tests {
               "campaign": {"seed": 7, "faults_per_layer": 10, "inputs": 2,
                            "backend": "hdfit", "offload_scope": "layer",
                            "trial_engine": "full-forward",
+                           "tile_engine": "full",
                            "scenario": "mbu:2",
                            "workers": 2, "signals": ["propag", "valid"]},
               "artifacts_dir": "art"
@@ -428,6 +475,7 @@ mod tests {
         assert_eq!(c.campaign.backend, Backend::Hdfit);
         assert_eq!(c.campaign.offload_scope, OffloadScope::Layer);
         assert_eq!(c.campaign.engine, TrialEngine::FullForward);
+        assert_eq!(c.campaign.tile_engine, TileEngine::Full);
         assert_eq!(c.campaign.scenario, Scenario::Mbu { bits: 2 });
         assert_eq!(c.campaign.signals.len(), 2);
         assert_eq!(c.artifacts_dir, "art");
@@ -441,6 +489,9 @@ mod tests {
         );
         assert!(
             Config::from_json_str(r#"{"campaign": {"trial_engine": "bogus"}}"#).is_err()
+        );
+        assert!(
+            Config::from_json_str(r#"{"campaign": {"tile_engine": "bogus"}}"#).is_err()
         );
         assert!(
             Config::from_json_str(r#"{"campaign": {"scenario": "bogus"}}"#).is_err()
@@ -476,6 +527,29 @@ mod tests {
         assert_eq!(TrialEngine::parse("resume"), Some(TrialEngine::SiteResume));
         assert_eq!(TrialEngine::parse("full"), Some(TrialEngine::FullForward));
         assert_eq!(TrialEngine::SiteResume.to_string(), "site-resume");
+    }
+
+    #[test]
+    fn tile_engine_defaults_to_cycle_resume() {
+        assert_eq!(
+            Config::default().campaign.tile_engine,
+            TileEngine::CycleResume
+        );
+        for (s, want) in [
+            ("cycle-resume", TileEngine::CycleResume),
+            ("cycle_resume", TileEngine::CycleResume),
+            ("cycle", TileEngine::CycleResume),
+            ("full", TileEngine::Full),
+        ] {
+            assert_eq!(TileEngine::parse(s), Some(want), "{s}");
+        }
+        assert_eq!(TileEngine::parse("bogus"), None);
+        assert_eq!(TileEngine::CycleResume.to_string(), "cycle-resume");
+        assert_eq!(TileEngine::Full.to_string(), "full");
+        // display round-trips through the grammar
+        for e in [TileEngine::CycleResume, TileEngine::Full] {
+            assert_eq!(TileEngine::parse(&e.to_string()), Some(e));
+        }
     }
 
     #[test]

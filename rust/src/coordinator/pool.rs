@@ -163,6 +163,7 @@ mod tests {
                 backend: Backend::EnforSa,
                 offload_scope: Default::default(),
                 engine: TrialEngine::SiteResume,
+                tile_engine: Default::default(),
                 signals: vec![],
                 scenario: Default::default(),
                 workers,

@@ -31,6 +31,21 @@
 //! --scenario stuck:<0|1>  permanent stuck-at-v defect from the sampled
 //!                         cycle onward
 //! ```
+//!
+//! ... a trial engine via `--trial-engine site-resume|full-forward`
+//! (JSON `campaign.trial_engine`), and an RTL tile engine via
+//! `--tile-engine` (JSON `campaign.tile_engine`):
+//!
+//! ```text
+//! --tile-engine cycle-resume   snapshot the golden mesh trajectory per
+//!                              offloaded tile and start every trial at
+//!                              its first fault cycle; a site batch pays
+//!                              each tile's golden prefix once (default;
+//!                              the whole-SoC backend keeps `full` — its
+//!                              controller FSM owns the schedule)
+//! --tile-engine full           step every trial from cycle 0 — the
+//!                              bit-exactness oracle for cycle-resume
+//! ```
 
 #![allow(clippy::needless_range_loop)]
 
@@ -38,7 +53,8 @@ use anyhow::{bail, Result};
 use enfor_sa::benchkit;
 use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
 use enfor_sa::config::{
-    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TrialEngine,
+    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
+    TrialEngine,
 };
 use enfor_sa::coordinator::{run_parallel, Args};
 use enfor_sa::dnn::models;
@@ -113,6 +129,10 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
     if let Some(s) = args.get("trial-engine") {
         cfg.campaign.engine = TrialEngine::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --trial-engine {s} (site-resume|full-forward)"))?;
+    }
+    if let Some(s) = args.get("tile-engine") {
+        cfg.campaign.tile_engine = TileEngine::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --tile-engine {s} (full|cycle-resume)"))?;
     }
     if let Some(s) = args.get("scenario") {
         cfg.campaign.scenario = Scenario::parse(s).ok_or_else(|| {
@@ -244,8 +264,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let model = models::by_name(&name, cc.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
-        "campaign: model={name} backend={} engine={} scenario={} dim={} inputs={} faults/layer={}",
-        cc.backend, cc.engine, cc.scenario, mesh_cfg.dim, cc.inputs, cc.faults_per_layer
+        "campaign: model={name} backend={} engine={} tile-engine={} scenario={} dim={} \
+         inputs={} faults/layer={}",
+        cc.backend, cc.engine, cc.tile_engine, cc.scenario, mesh_cfg.dim, cc.inputs,
+        cc.faults_per_layer
     );
     let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
     let (lo, hi) = r.vuln.ci95();
@@ -273,10 +295,12 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             ("model", Json::str(r.model.clone())),
             ("backend", Json::str(r.backend.to_string())),
             ("scenario", Json::str(r.scenario.to_string())),
+            ("tile_engine", Json::str(cc.tile_engine.to_string())),
             ("trials", Json::num(r.vuln.trials as f64)),
             ("critical", Json::num(r.vuln.critical as f64)),
             ("exposed", Json::num(r.exposed_trials as f64)),
             ("masked", Json::num(r.masked_trials as f64)),
+            ("rtl_cycles_stepped", Json::num(r.rtl_cycles_stepped as f64)),
             ("vf", Json::num(r.vf())),
             ("wall_s", Json::num(r.wall.as_secs_f64())),
         ]);

@@ -37,11 +37,31 @@
 use std::ops::{Index, IndexMut};
 
 /// Owned, contiguous, row-major matrix.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub struct Mat<T> {
     rows: usize,
     cols: usize,
     data: Vec<T>,
+}
+
+impl<T: Clone> Clone for Mat<T> {
+    fn clone(&self) -> Mat<T> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.clone(),
+        }
+    }
+
+    /// Reshape to `src`'s shape and copy its contents, reusing the
+    /// existing allocation whenever capacity allows — the cycle-resume
+    /// prime path (trial result := golden prefix) calls this per trial,
+    /// so it must not allocate once warm.
+    fn clone_from(&mut self, src: &Mat<T>) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clone_from(&src.data);
+    }
 }
 
 impl<T> Default for Mat<T> {
@@ -536,5 +556,20 @@ mod tests {
                 assert_eq!(v.at(r, c), nested[r][c]);
             }
         }
+    }
+
+    #[test]
+    fn clone_from_reshapes_and_reuses_the_allocation() {
+        let src = numbered(3, 4);
+        let mut dst: Mat<i32> = Mat::zeros(6, 2); // same element count
+        let ptr = dst.data().as_ptr();
+        dst.clone_from(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.data().as_ptr(), ptr, "equal-size copy must not allocate");
+        // shrinking copies also keep the buffer
+        let small = numbered(2, 2);
+        dst.clone_from(&small);
+        assert_eq!(dst, small);
+        assert_eq!(dst.data().as_ptr(), ptr);
     }
 }

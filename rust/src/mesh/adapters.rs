@@ -103,6 +103,10 @@ impl<'a, T: Copy + Default> SkewFeeder<'a, T> {
 /// Collects the result matrix from the south edge during flush: the
 /// accumulator chain emits row DIM-1 first, so the collector writes rows
 /// in reverse order (the "un-staircasing" the real drain FSM performs).
+/// Used by the SoC controller's drain FSM; the mesh-only drivers inline
+/// the same logic in `Schedule::drain` since the cycle-resume refactor
+/// (a resumed trial must prime the drain mid-flush, which needs the
+/// counters in caller-owned scratch).
 #[derive(Clone, Debug)]
 pub struct FlushCollector {
     dim: usize,
@@ -114,19 +118,12 @@ pub struct FlushCollector {
 
 impl FlushCollector {
     pub fn new(dim: usize) -> Self {
-        Self::reusing(dim, Mat::default())
-    }
-
-    /// Like [`FlushCollector::new`], but recycles `buf`'s allocation for
-    /// the collected matrix (reshaped and zeroed first) — the
-    /// allocation-free path the trial batches use to drain every RTL
-    /// tile of a site into the same scratch buffer.
-    pub fn reusing(dim: usize, mut buf: Mat<i32>) -> Self {
-        buf.reset(dim, dim);
+        let mut c = Mat::default();
+        c.reset(dim, dim);
         FlushCollector {
             dim,
             taken: vec![0; dim],
-            c: buf,
+            c,
         }
     }
 

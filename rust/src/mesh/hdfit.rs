@@ -19,7 +19,7 @@
 //! cycle* differs.
 
 use super::inject::{Fault, FaultPlan, Injectable, Persistence};
-use super::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+use super::mesh::{Mesh, MeshInputs, MeshSim, MeshState, StepOutput};
 use super::signal::SignalKind;
 use crate::config::Dataflow;
 use crate::util::bits::{flip_i32, flip_i8};
@@ -266,6 +266,17 @@ impl MeshSim for InstrumentedMesh {
     fn acc_at(&self, row: usize, col: usize) -> i32 {
         self.base.acc_at(row, col)
     }
+
+    // The hooks are stateless between cycles (armed faults are run
+    // configuration, not architectural state), so snapshotting the
+    // instrumented mesh is exactly snapshotting the base mesh.
+    fn save_state(&self, state: &mut MeshState) {
+        self.base.save_state(state);
+    }
+
+    fn restore_state(&mut self, state: &MeshState) {
+        self.base.restore_state(state);
+    }
 }
 
 impl Injectable for InstrumentedMesh {
@@ -299,6 +310,23 @@ impl Injectable for InstrumentedMesh {
     fn disarm(&mut self) {
         self.armed.clear();
         self.pending_direct.clear();
+    }
+
+    /// HDFIT's storage hooks instrument the *assignment* of a register,
+    /// which happens one cycle before the ENFOR-SA onset (`translate`
+    /// maps `Acc`/`DReg` at cycle `t` to the `RegAcc`/`RegD` hook at
+    /// `t - 1`), so a cycle-resume trial must restore one cycle earlier
+    /// than the plan's onset for such faults. Wrapper-applied faults
+    /// (cycle-0 storage, stuck-at) first act at their own onset.
+    fn first_effect_cycle(&self, plan: &FaultPlan) -> u64 {
+        plan.faults()
+            .iter()
+            .map(|f| match self.translate(f) {
+                Some(h) => h.cycle,
+                None => f.cycle,
+            })
+            .min()
+            .unwrap_or(u64::MAX)
     }
 }
 

@@ -366,6 +366,17 @@ pub trait Injectable: MeshSim {
     fn arm(&mut self, _plan: &FaultPlan) {}
     fn inject_now(&mut self, _fault: &Fault, _inp: &mut MeshInputs) {}
     fn disarm(&mut self) {}
+
+    /// Earliest cycle at which this backend's execution of `plan` can
+    /// diverge from the golden (fault-free) trajectory — the cycle a
+    /// cycle-resume trial must restore its golden snapshot at (every
+    /// earlier cycle is bit-identical to the golden pass and safe to
+    /// skip). The ENFOR-SA wrapper first acts at the plan's onset
+    /// cycle; HDFIT-style backends override this because their storage
+    /// hooks fire on the *assignment* one cycle before the onset.
+    fn first_effect_cycle(&self, plan: &FaultPlan) -> u64 {
+        plan.first_cycle()
+    }
 }
 
 impl Injectable for Mesh {

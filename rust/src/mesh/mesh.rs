@@ -95,6 +95,37 @@ impl StepOutput {
     }
 }
 
+/// A reusable architectural snapshot of a mesh simulator: every register
+/// file plus the cycle counter. Pure scratch buffers (e.g. the pre-edge
+/// row copy) carry no cross-cycle state and are excluded. The buffers
+/// are recycled across [`MeshSim::save_state`] calls, so a warm snapshot
+/// costs only memcpys — the primitive behind cycle-resume
+/// (`restore_state(save_state(m)) ≡ id`, pinned by test).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MeshState {
+    cycle: u64,
+    reg_a: Vec<i8>,
+    reg_b: Vec<i8>,
+    acc: Vec<i32>,
+    reg_d: Vec<i32>,
+    reg_propag: Vec<bool>,
+    reg_valid: Vec<bool>,
+    reg_w: Vec<i8>,
+}
+
+impl MeshState {
+    /// The cycle the snapshot was taken at.
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+}
+
+/// Recycle `dst`'s allocation while copying `src` into it.
+fn copy_into<T: Copy>(dst: &mut Vec<T>, src: &[T]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
 /// Common simulation interface implemented by the plain (ENFOR-SA) mesh
 /// and the HDFIT-style instrumented mesh, so drivers and the campaign
 /// engine are generic over the backend.
@@ -108,6 +139,14 @@ pub trait MeshSim {
     fn reset(&mut self);
     /// Read an accumulator (test/debug visibility, as in waveforms).
     fn acc_at(&self, row: usize, col: usize) -> i32;
+    /// Snapshot every architectural register (and the cycle counter)
+    /// into `state`, reusing its buffers.
+    fn save_state(&self, state: &mut MeshState);
+    /// Restore a snapshot taken by [`MeshSim::save_state`] on an
+    /// identically-dimensioned simulator: afterwards the simulator is
+    /// bit-identical to the one the snapshot was taken from
+    /// (`restore ∘ save ≡ id`).
+    fn restore_state(&mut self, state: &MeshState);
 }
 
 /// The plain verilated-equivalent mesh (no instrumentation — ENFOR-SA's
@@ -247,51 +286,89 @@ impl Mesh {
     /// Weight-stationary clock edge. Weights preload through the d-chain
     /// (propagate phases), partial sums flow north→south through `acc`
     /// (acting as the psum pipeline register), activations west→east.
+    ///
+    /// Mirrors `step_os`'s shape (§Perf iteration 2, WS side): the
+    /// north-edge row is peeled out so the boundary-port selects vanish
+    /// from the interior, and interior rows take a pre-edge scratch copy
+    /// of their `reg_a` so the walk runs LEFT-TO-RIGHT with
+    /// straight-line selects — the a-chain is the only intra-row
+    /// dependency, so the semantics equal the inverted-order walk while
+    /// the loop body becomes SIMD-liftable.
     fn step_ws(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
         let dim = self.dim;
         for r in (0..dim).rev() {
-            for c in (0..dim).rev() {
-                let i = r * dim + c;
-                let a_in = if c == 0 { inp.west_a[r] } else { self.reg_a[i - 1] };
-                let b_in = if r == 0 { inp.north_b[c] } else { self.reg_b[i - dim] };
-                let p_in = if r == 0 {
-                    inp.north_propag[c]
-                } else {
-                    self.reg_propag[i - dim]
-                };
-                let v_in = if r == 0 {
-                    inp.north_valid[c]
-                } else {
-                    self.reg_valid[i - dim]
-                };
-                let d_in = if r == 0 { inp.north_d[c] } else { self.reg_d[i] };
-                let out_c_north = if r == 0 {
-                    inp.north_d[c]
-                } else {
-                    self.acc[i - dim]
-                };
-                // psum entering from the north (bias row at the top edge).
-                let ps_in = if r == 0 {
-                    inp.north_d[c]
-                } else {
-                    self.acc[i - dim]
-                };
-                if p_in {
-                    // weight preload: the d-chain staircases W in; old
-                    // weight is flushed out through the same chain.
-                    if r == dim - 1 {
-                        out.south_c[c] = Some(self.reg_w[i] as i32);
+            let base = r * dim;
+            if r == 0 {
+                // ---- north-edge row: sources are the boundary ports ----
+                let bottom = dim == 1;
+                for c in (0..dim).rev() {
+                    let a_in = if c == 0 { inp.west_a[0] } else { self.reg_a[c - 1] };
+                    let b_in = inp.north_b[c];
+                    let p_in = inp.north_propag[c];
+                    let v_in = inp.north_valid[c];
+                    let d_in = inp.north_d[c];
+                    if p_in {
+                        // weight preload: the d-chain staircases W in;
+                        // the old weight flushes out through the chain.
+                        if bottom {
+                            out.south_c[c] = Some(self.reg_w[c] as i32);
+                        }
+                        self.reg_w[c] = (d_in & 0xff) as i8;
+                        self.acc[c] = d_in;
+                    } else if v_in {
+                        let ps = d_in.wrapping_add(self.reg_w[c] as i32 * a_in as i32);
+                        self.acc[c] = ps;
+                        if bottom {
+                            out.south_psum[c] = Some(ps);
+                        }
                     }
-                    self.reg_w[i] = (d_in & 0xff) as i8;
-                    self.acc[i] = d_in;
-                } else if v_in {
-                    let ps = ps_in.wrapping_add(self.reg_w[i] as i32 * a_in as i32);
-                    self.acc[i] = ps;
-                    if r == dim - 1 {
+                    self.reg_d[c] = d_in;
+                    self.reg_a[c] = a_in;
+                    self.reg_b[c] = b_in;
+                    self.reg_propag[c] = p_in;
+                    self.reg_valid[c] = v_in;
+                }
+                continue;
+            }
+            // ---- interior rows: pre-edge scratch a-row, straight-line
+            // left-to-right body (see step_os) ----
+            let north = base - dim;
+            let bottom = r == dim - 1;
+            self.scratch_a.copy_from_slice(&self.reg_a[base..base + dim]);
+            for c in 0..dim {
+                let i = base + c;
+                let n = north + c;
+                let a_in = if c == 0 {
+                    inp.west_a[r]
+                } else {
+                    self.scratch_a[c - 1]
+                };
+                let b_in = self.reg_b[n];
+                let p_in = self.reg_propag[n];
+                let v_in = self.reg_valid[n];
+                let d_in = self.reg_d[i];
+                // psum + d-chain input: the northern accumulator,
+                // pre-edge (rows walk bottom-up, so row r-1 is unwritten)
+                let ps_in = self.acc[n];
+                let w_old = self.reg_w[i];
+                let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
+                if bottom {
+                    if p_in {
+                        out.south_c[c] = Some(w_old as i32);
+                    } else if v_in {
                         out.south_psum[c] = Some(ps);
                     }
                 }
-                self.reg_d[i] = out_c_north;
+                // ---- sequential assignments (branch-free selects) ----
+                self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
+                self.acc[i] = if p_in {
+                    d_in
+                } else if v_in {
+                    ps
+                } else {
+                    self.acc[i]
+                };
+                self.reg_d[i] = ps_in;
                 self.reg_a[i] = a_in;
                 self.reg_b[i] = b_in;
                 self.reg_propag[i] = p_in;
@@ -344,6 +421,33 @@ impl MeshSim for Mesh {
 
     fn acc_at(&self, row: usize, col: usize) -> i32 {
         self.acc[self.idx(row, col)]
+    }
+
+    fn save_state(&self, state: &mut MeshState) {
+        state.cycle = self.cycle;
+        copy_into(&mut state.reg_a, &self.reg_a);
+        copy_into(&mut state.reg_b, &self.reg_b);
+        copy_into(&mut state.acc, &self.acc);
+        copy_into(&mut state.reg_d, &self.reg_d);
+        copy_into(&mut state.reg_propag, &self.reg_propag);
+        copy_into(&mut state.reg_valid, &self.reg_valid);
+        copy_into(&mut state.reg_w, &self.reg_w);
+    }
+
+    fn restore_state(&mut self, state: &MeshState) {
+        assert_eq!(
+            state.acc.len(),
+            self.acc.len(),
+            "snapshot taken on a differently-dimensioned mesh"
+        );
+        self.cycle = state.cycle;
+        self.reg_a.copy_from_slice(&state.reg_a);
+        self.reg_b.copy_from_slice(&state.reg_b);
+        self.acc.copy_from_slice(&state.acc);
+        self.reg_d.copy_from_slice(&state.reg_d);
+        self.reg_propag.copy_from_slice(&state.reg_propag);
+        self.reg_valid.copy_from_slice(&state.reg_valid);
+        self.reg_w.copy_from_slice(&state.reg_w);
     }
 }
 
@@ -484,5 +588,97 @@ mod tests {
         let m4 = Mesh::new(4, Dataflow::OutputStationary);
         let m8 = Mesh::new(8, Dataflow::OutputStationary);
         assert_eq!(m8.state_elements(), 4 * m4.state_elements());
+    }
+
+    /// Drive `n` cycles of deterministic pseudo-random boundary traffic.
+    fn churn(m: &mut Mesh, n: u64, salt: u64) {
+        let dim = m.dim();
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        for t in 0..n {
+            inp.clear();
+            for r in 0..dim {
+                inp.west_a[r] = ((t * 7 + salt + r as u64) % 251) as i8;
+            }
+            for c in 0..dim {
+                inp.north_b[c] = ((t * 13 + salt + c as u64) % 241) as i8;
+                inp.north_d[c] = ((t * 31 + c as u64) % 9973) as i32 - 4000;
+                inp.north_valid[c] = (t + c as u64) % 3 == 0;
+                inp.north_propag[c] = (t + c as u64) % 7 == 0;
+            }
+            m.step(&inp, &mut out);
+        }
+    }
+
+    #[test]
+    fn restore_after_save_is_identity() {
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let mut m = Mesh::new(4, dataflow);
+            churn(&mut m, 23, 5);
+            let mut snap = MeshState::default();
+            m.save_state(&mut snap);
+            assert_eq!(snap.cycle(), 23);
+            // diverge, then restore: the snapshot round-trips bit-exactly
+            churn(&mut m, 11, 99);
+            m.restore_state(&snap);
+            let mut snap2 = MeshState::default();
+            m.save_state(&mut snap2);
+            assert_eq!(snap, snap2, "{dataflow}: restore ∘ save must be id");
+            assert_eq!(m.cycle(), 23);
+            // and the restored trajectory continues identically
+            let mut twin = Mesh::new(4, dataflow);
+            churn(&mut twin, 23, 5);
+            churn(&mut twin, 9, 1);
+            churn(&mut m, 9, 1);
+            let mut a = MeshState::default();
+            let mut b = MeshState::default();
+            m.save_state(&mut a);
+            twin.save_state(&mut b);
+            assert_eq!(a, b, "{dataflow}: resumed trajectory diverged");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "differently-dimensioned")]
+    fn restore_rejects_wrong_dim_snapshot() {
+        let m4 = Mesh::new(4, Dataflow::OutputStationary);
+        let mut snap = MeshState::default();
+        m4.save_state(&mut snap);
+        let mut m8 = Mesh::new(8, Dataflow::OutputStationary);
+        m8.restore_state(&snap);
+    }
+
+    #[test]
+    fn save_state_reuses_snapshot_buffers() {
+        let mut m = Mesh::new(4, Dataflow::OutputStationary);
+        let mut snap = MeshState::default();
+        m.save_state(&mut snap);
+        let ptr = snap.acc.as_ptr();
+        churn(&mut m, 5, 0);
+        m.save_state(&mut snap);
+        assert_eq!(snap.acc.as_ptr(), ptr, "warm snapshots must not allocate");
+    }
+
+    #[test]
+    fn ws_d_chain_staircases_weight_preload() {
+        // Mirror of d_chain_staircases_preload for the WS edge: after the
+        // preload window every PE holds its weight in reg_w (and the
+        // d-chain value in acc).
+        let dim = 3;
+        let mut m = Mesh::new(dim, Dataflow::WeightStationary);
+        let mut inp = MeshInputs::idle(dim);
+        let mut out = StepOutput::new(dim);
+        let w = [7i32, 11, 13];
+        for t in 0..(2 * dim - 1) {
+            inp.clear();
+            if t < dim {
+                inp.north_propag[0] = true;
+                inp.north_d[0] = w[dim - 1 - t];
+            }
+            m.step(&inp, &mut out);
+        }
+        for r in 0..dim {
+            assert_eq!(m.reg_w[r * dim], w[r] as i8, "row {r}");
+        }
     }
 }

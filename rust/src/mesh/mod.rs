@@ -14,7 +14,7 @@ pub mod inject;
 pub mod mesh;
 pub mod signal;
 
-pub use driver::{gold_matmul, tiled_matmul_os, MatmulDriver};
+pub use driver::{gold_matmul, tiled_matmul_os, CycleCursor, DriverScratch, MatmulDriver, Schedule};
 pub use inject::{Fault, FaultPlan, Injectable, PlanCursor};
-pub use mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+pub use mesh::{Mesh, MeshInputs, MeshSim, MeshState, StepOutput};
 pub use signal::{SignalAddr, SignalKind};

@@ -175,7 +175,14 @@ impl Soc {
 
     /// [`Soc::run_matmul`] into a caller-provided buffer (reshaped and
     /// zeroed in place) — the allocation-free seam the site-major trial
-    /// batches drive.
+    /// batches drive. Returns the SoC cycles this run ticked.
+    ///
+    /// The SoC always executes the FULL program: cycle-resume does not
+    /// apply here because the matmul schedule is owned by the
+    /// controller's execute FSM (command decode, DMA staging, drain),
+    /// not by a wrapper that could index it from an arbitrary cycle —
+    /// `TileBackend::supports_cycle_resume` gates on this (ROADMAP
+    /// "Cycle-resume" contract).
     pub fn run_matmul_into(
         &mut self,
         a: MatView<i8>,
@@ -183,7 +190,8 @@ impl Soc {
         d: MatView<i32>,
         plan: &FaultPlan,
         out: &mut Mat<i32>,
-    ) -> Result<()> {
+    ) -> Result<u64> {
+        let cycles_before = self.cycles;
         let dim = self.dim();
         let k = a.cols();
         anyhow::ensure!(a.rows() == dim, "A must have DIM rows");
@@ -250,7 +258,7 @@ impl Soc {
         for r in 0..dim {
             out.row_mut(r).copy_from_slice(self.accmem.read_row(dim + r)?);
         }
-        Ok(())
+        Ok(self.cycles - cycles_before)
     }
 }
 

@@ -13,6 +13,7 @@ fn cfg(backend: Backend, faults: u64, inputs: u64) -> CampaignConfig {
         backend,
         offload_scope: OffloadScope::SingleTile,
         engine: TrialEngine::SiteResume,
+        tile_engine: Default::default(),
         signals: vec![],
         scenario: Default::default(),
         workers: 1,

@@ -6,7 +6,9 @@
 
 use enfor_sa::campaign::campaign::run_input;
 use enfor_sa::campaign::{run_campaign, sample_trial};
-use enfor_sa::config::{Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TrialEngine};
+use enfor_sa::config::{
+    Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TileEngine, TrialEngine,
+};
 use enfor_sa::coordinator::run_parallel;
 use enfor_sa::dnn::models;
 use enfor_sa::dnn::GemmSiteId;
@@ -28,6 +30,12 @@ fn random_cfg(rng: &mut Rng) -> CampaignConfig {
             TrialEngine::SiteResume
         } else {
             TrialEngine::FullForward
+        },
+        // ... and both tile engines
+        tile_engine: if rng.chance(0.5) {
+            TileEngine::CycleResume
+        } else {
+            TileEngine::Full
         },
         signals: vec![],
         // every scenario must satisfy every coordinator property

@@ -1,0 +1,332 @@
+//! Property tests pinning the cycle-resume RTL tile engine against the
+//! full (from-cycle-0) oracle.
+//!
+//! The contract (ROADMAP "Cycle-resume"):
+//! 1. **Snapshot semantics** — `restore_state ∘ save_state ≡ id`, and a
+//!    restored trajectory continues bit-identically (both dataflows).
+//! 2. **Resume equivalence** — `advance_golden` + `matmul_resumed`
+//!    reproduce a full faulty run bit-exactly for ANY first-fault
+//!    cycle, on the plain mesh (both dataflows) and on the
+//!    HDFIT-instrumented mesh (whose storage hooks fire one cycle
+//!    before the ENFOR-SA onset — the `first_effect_cycle` shift),
+//!    including resume points inside the OS flush window.
+//! 3. **Campaign equivalence** — fixed-seed campaigns are bit-identical
+//!    between `--tile-engine full` and `--tile-engine cycle-resume`
+//!    across all five fault scenarios on the Mesh and Hdfit backends,
+//!    under worker sharding, and cycle-resume steps strictly fewer RTL
+//!    cycles. The whole-SoC backend keeps the full path (its controller
+//!    FSM owns the schedule) and must be unaffected by the flag.
+
+use enfor_sa::campaign::{run_campaign, CampaignResult};
+use enfor_sa::config::{
+    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
+    TrialEngine,
+};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::models;
+use enfor_sa::mesh::driver::Schedule;
+use enfor_sa::mesh::hdfit::InstrumentedMesh;
+use enfor_sa::mesh::{
+    CycleCursor, DriverScratch, Fault, FaultPlan, Injectable, MatmulDriver, Mesh, MeshSim,
+    MeshState, SignalKind,
+};
+use enfor_sa::util::Rng;
+
+fn cfg(backend: Backend, scenario: Scenario, tile_engine: TileEngine) -> CampaignConfig {
+    CampaignConfig {
+        seed: 0xC1C1E_7E5,
+        faults_per_layer: 3,
+        inputs: 2,
+        backend,
+        offload_scope: OffloadScope::SingleTile,
+        engine: TrialEngine::SiteResume,
+        tile_engine,
+        signals: vec![],
+        scenario,
+        workers: 1,
+    }
+}
+
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.vuln.trials, b.vuln.trials, "{label}: trials");
+    assert_eq!(a.vuln.critical, b.vuln.critical, "{label}: critical");
+    assert_eq!(a.exposed_trials, b.exposed_trials, "{label}: exposed");
+    assert_eq!(a.masked_trials, b.masked_trials, "{label}: masked");
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{label}: layer map size");
+    for ((la, va), (lb, vb)) in a.per_layer.iter().zip(b.per_layer.iter()) {
+        assert_eq!(la, lb, "{label}: layer ids");
+        assert_eq!(va.trials, vb.trials, "{label}: layer {la} trials");
+        assert_eq!(va.critical, vb.critical, "{label}: layer {la} critical");
+    }
+}
+
+/// Contract 1: snapshot round-trip, both dataflows, via the public seam.
+#[test]
+fn prop_restore_after_save_is_identity() {
+    let mut rng = Rng::new(0xA0);
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        let dim = 4;
+        let (a, b, d) = match dataflow {
+            Dataflow::OutputStationary => {
+                (rng.mat_i8(dim, 9), rng.mat_i8(9, dim), rng.mat_i32(dim, dim, 100))
+            }
+            Dataflow::WeightStationary => {
+                (rng.mat_i8(7, dim), rng.mat_i8(dim, dim), rng.mat_i32(7, dim, 100))
+            }
+        };
+        let mut mesh = Mesh::new(dim, dataflow);
+        let mut cur = CycleCursor::new();
+        let mut scratch = DriverScratch::new(dim);
+        let total = Schedule::new(dataflow, dim, a.view(), b.view(), d.view()).total_cycles();
+        // snapshot mid-program...
+        MatmulDriver::new(&mut mesh).advance_golden(
+            a.view(),
+            b.view(),
+            d.view(),
+            (0, 0),
+            total / 2,
+            &mut cur,
+            &mut scratch,
+        );
+        let mut snap = MeshState::default();
+        mesh.save_state(&mut snap);
+        assert_eq!(snap.cycle(), total / 2);
+        // ...clobber the mesh with an unrelated golden run, restore, and
+        // the state must round-trip bit-exactly
+        MatmulDriver::new(&mut mesh).matmul(a.view(), b.view(), d.view());
+        mesh.restore_state(&snap);
+        let mut snap2 = MeshState::default();
+        mesh.save_state(&mut snap2);
+        assert_eq!(snap, snap2, "{dataflow}: restore ∘ save ≡ id");
+    }
+}
+
+/// Contract 2 (Hdfit): the instrumented backend resumes at the hook's
+/// firing cycle, one BEFORE the onset for storage faults — exhaustively
+/// over every onset cycle and a mix of wire/storage/control faults.
+#[test]
+fn prop_hdfit_resumed_matches_full_at_every_cycle() {
+    let dim = 4;
+    let k = 6;
+    let mut rng = Rng::new(0xA1);
+    let a = rng.mat_i8(dim, k);
+    let b = rng.mat_i8(k, dim);
+    let d = rng.mat_i32(dim, dim, 200);
+    let mut mesh = InstrumentedMesh::new(dim);
+    let total = Schedule::new(Dataflow::OutputStationary, dim, a.view(), b.view(), d.view())
+        .total_cycles();
+    let mut cur = CycleCursor::new();
+    let mut scratch = DriverScratch::new(dim);
+    let mut out = enfor_sa::mat::Mat::default();
+    for tf in 0..total {
+        let f = match tf % 3 {
+            0 => Fault::new(2, 1, SignalKind::Acc, 29, tf), // hook fires at tf-1
+            1 => Fault::new(1, 2, SignalKind::Weight, 5, tf),
+            _ => Fault::new(0, 3, SignalKind::Valid, 0, tf),
+        };
+        let plan = FaultPlan::single(f);
+        let resume = mesh.first_effect_cycle(&plan);
+        assert!(resume <= tf, "hooks never fire after the onset");
+        let full =
+            MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), b.view(), d.view(), &plan);
+        let mut drv = MatmulDriver::new(&mut mesh);
+        drv.advance_golden(a.view(), b.view(), d.view(), (0, 0), resume, &mut cur, &mut scratch);
+        drv.matmul_resumed(a.view(), b.view(), d.view(), &plan, &cur, &mut out, &mut scratch);
+        assert_eq!(out, full, "hdfit tf={tf} ({})", f);
+    }
+}
+
+/// Contract 2 (multi-fault plans): a resumed scenario plan (several
+/// cycles, mixed kinds) equals the full run when resumed at the plan's
+/// first effect cycle — the exact shape campaign trials replay.
+#[test]
+fn prop_resumed_scenario_plans_match_full() {
+    let dim = 4;
+    let mut rng = Rng::new(0xA2);
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        let (a, b, d) = match dataflow {
+            Dataflow::OutputStationary => {
+                (rng.mat_i8(dim, 8), rng.mat_i8(8, dim), rng.mat_i32(dim, dim, 60))
+            }
+            Dataflow::WeightStationary => {
+                (rng.mat_i8(6, dim), rng.mat_i8(dim, dim), rng.mat_i32(6, dim, 60))
+            }
+        };
+        let mut mesh = Mesh::new(dim, dataflow);
+        let total = Schedule::new(dataflow, dim, a.view(), b.view(), d.view()).total_cycles();
+        let mut cur = CycleCursor::new();
+        let mut scratch = DriverScratch::new(dim);
+        let mut out = enfor_sa::mat::Mat::default();
+        for trial in 0..40u64 {
+            let c0 = rng.below(total);
+            let plan = FaultPlan::new(vec![
+                Fault::new(
+                    rng.usize_below(dim),
+                    rng.usize_below(dim),
+                    SignalKind::Acc,
+                    (trial % 32) as u8,
+                    c0,
+                ),
+                Fault::new(
+                    rng.usize_below(dim),
+                    rng.usize_below(dim),
+                    SignalKind::Propag,
+                    0,
+                    rng.below(total),
+                ),
+            ]);
+            let full = MatmulDriver::new(&mut mesh)
+                .matmul_with_plan(a.view(), b.view(), d.view(), &plan);
+            cur.invalidate(); // random cycles are not sorted across trials
+            let mut drv = MatmulDriver::new(&mut mesh);
+            // on the plain mesh the first effect cycle IS the plan onset
+            drv.advance_golden(
+                a.view(),
+                b.view(),
+                d.view(),
+                (0, 0),
+                plan.first_cycle(),
+                &mut cur,
+                &mut scratch,
+            );
+            drv.matmul_resumed(a.view(), b.view(), d.view(), &plan, &cur, &mut out, &mut scratch);
+            assert_eq!(out, full, "{dataflow} trial={trial} plan=[{plan}]");
+        }
+    }
+}
+
+/// Contract 3: fixed-seed campaigns are bit-identical across tile
+/// engines for every scenario on both mesh-level backends.
+#[test]
+fn prop_tile_engines_agree_across_scenarios_and_backends() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    for backend in [Backend::EnforSa, Backend::Hdfit] {
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 2 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ] {
+            let resume =
+                run_campaign(&model, &mesh, &cfg(backend, scenario, TileEngine::CycleResume))
+                    .unwrap();
+            let full =
+                run_campaign(&model, &mesh, &cfg(backend, scenario, TileEngine::Full)).unwrap();
+            assert_bit_identical(&resume, &full, &format!("{backend}/{scenario}"));
+            assert!(
+                resume.rtl_cycles_stepped <= full.rtl_cycles_stepped,
+                "{backend}/{scenario}: resume must never step MORE cycles"
+            );
+        }
+    }
+}
+
+/// Contract 2/3 (WS dataflow): campaign batches replay the driver seam
+/// exactly as this sweep does — one shared cursor, onsets sorted
+/// ascending, matmul-shaped operands — so pinning the WS driver here
+/// covers the dataflow the runner's OS tiling cannot route end to end
+/// (WS campaigns remain tile-shape-incompatible, unchanged from seed).
+#[test]
+fn prop_ws_driver_tile_engines_agree() {
+    // batch-shaped driver sweep: sorted onsets, one golden cursor
+    let dim = 8;
+    let mut rng = Rng::new(0xA3);
+    let a = rng.mat_i8(12, dim);
+    let w = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(12, dim, 500);
+    let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+    let total = Schedule::new(Dataflow::WeightStationary, dim, a.view(), w.view(), d.view())
+        .total_cycles();
+    let mut cur = CycleCursor::new();
+    let mut scratch = DriverScratch::new(dim);
+    let mut out = enfor_sa::mat::Mat::default();
+    // ascending onset cycles: the sorted order a campaign batch uses
+    let mut onsets: Vec<u64> = (0..12).map(|_| rng.below(total)).collect();
+    onsets.sort_unstable();
+    for (i, &tf) in onsets.iter().enumerate() {
+        let f = Fault::new(
+            rng.usize_below(dim),
+            rng.usize_below(dim),
+            if i % 2 == 0 { SignalKind::Weight } else { SignalKind::Valid },
+            0,
+            tf,
+        );
+        let plan = FaultPlan::single(f);
+        let full =
+            MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), w.view(), d.view(), &plan);
+        let mut drv = MatmulDriver::new(&mut mesh);
+        drv.advance_golden(a.view(), w.view(), d.view(), (0, 0), tf, &mut cur, &mut scratch);
+        drv.matmul_resumed(a.view(), w.view(), d.view(), &plan, &cur, &mut out, &mut scratch);
+        assert_eq!(out, full, "ws tf={tf}");
+    }
+}
+
+/// Contract 3: the flag round-trips through the parallel coordinator —
+/// worker-count invariance holds under cycle-resume, including the
+/// deterministic `rtl_cycles_stepped` accounting.
+#[test]
+fn prop_cycle_resume_is_worker_invariant() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    let mut c = cfg(Backend::EnforSa, Scenario::Seu, TileEngine::CycleResume);
+    c.workers = 1;
+    let one = run_parallel(&model, &mesh, &c, None).unwrap();
+    for workers in [2usize, 5] {
+        c.workers = workers;
+        let many = run_parallel(&model, &mesh, &c, None).unwrap();
+        assert_bit_identical(&one, &many, &format!("workers={workers}"));
+        assert_eq!(
+            one.rtl_cycles_stepped, many.rtl_cycles_stepped,
+            "workers={workers}: stepped-cycle accounting must be deterministic"
+        );
+    }
+}
+
+/// The SoC backend keeps the full tile path: a cycle-resume campaign is
+/// bit-identical to a full one (the flag silently falls back), pinned
+/// on a small budget because every trial drives the whole chip.
+#[test]
+fn prop_full_soc_ignores_cycle_resume() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dim: 4,
+        ..Default::default()
+    };
+    let mut base = cfg(Backend::FullSoc, Scenario::Seu, TileEngine::CycleResume);
+    base.faults_per_layer = 1;
+    base.inputs = 1;
+    let resume = run_campaign(&model, &mesh, &base).unwrap();
+    base.tile_engine = TileEngine::Full;
+    let full = run_campaign(&model, &mesh, &base).unwrap();
+    assert_eq!(resume.vuln.trials, 5);
+    assert_bit_identical(&resume, &full, "full-soc");
+    assert_eq!(
+        resume.rtl_cycles_stepped, full.rtl_cycles_stepped,
+        "the SoC ticks the same cycles either way"
+    );
+}
+
+/// Cycle-resume must beat the full tile engine on stepped RTL cycles
+/// once trials share tiles — faults_per_layer=16 pigeonholes the
+/// Linear site's 1x2 tile grid, so the saving is structural.
+#[test]
+fn prop_cycle_resume_steps_strictly_fewer_cycles() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig::default();
+    let mut c = cfg(Backend::EnforSa, Scenario::Seu, TileEngine::CycleResume);
+    c.faults_per_layer = 16;
+    c.inputs = 1;
+    let resume = run_campaign(&model, &mesh, &c).unwrap();
+    c.tile_engine = TileEngine::Full;
+    let full = run_campaign(&model, &mesh, &c).unwrap();
+    assert_bit_identical(&resume, &full, "16-fault campaign");
+    assert!(resume.rtl_cycles_stepped > 0);
+    assert!(
+        resume.rtl_cycles_stepped < full.rtl_cycles_stepped,
+        "cycle-resume stepped {} cycles, full {}",
+        resume.rtl_cycles_stepped,
+        full.rtl_cycles_stepped
+    );
+}

@@ -39,6 +39,7 @@ fn cfg(backend: Backend, engine: TrialEngine, scope: OffloadScope) -> CampaignCo
         backend,
         offload_scope: scope,
         engine,
+        tile_engine: Default::default(),
         signals: vec![],
         scenario: Default::default(),
         workers: 1,

@@ -38,6 +38,7 @@ fn cfg(backend: Backend, scenario: Scenario) -> CampaignConfig {
         backend,
         offload_scope: OffloadScope::SingleTile,
         engine: TrialEngine::SiteResume,
+        tile_engine: Default::default(),
         signals: vec![],
         scenario,
         workers: 1,
