@@ -6,6 +6,8 @@
 //! few hundred trials per model — override with env:
 //!   BENCH_FAULTS=..  BENCH_INPUTS=..  BENCH_MODELS=quicknet,ResNet18
 //!   BENCH_SCENARIO=seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>
+//!   BENCH_DATAFLOW=os|ws|both   (default both: one Table-VI row set
+//!                                per dataflow — schema v5)
 //!
 //! Set BENCH_OUT=path.json to also write a machine-readable snapshot
 //! (`benchkit::injection_snapshot_json` — the schema stored under
@@ -14,8 +16,8 @@
 //!
 //! Run: `cargo bench --bench injection_overhead`
 
-use enfor_sa::benchkit::{injection_snapshot_json, injection_table};
-use enfor_sa::config::{CampaignConfig, MeshConfig, Scenario};
+use enfor_sa::benchkit::{injection_snapshot_json, injection_table_dataflows};
+use enfor_sa::config::{CampaignConfig, Dataflow, MeshConfig, Scenario};
 use enfor_sa::dnn::models;
 use enfor_sa::report::human_time;
 
@@ -41,6 +43,12 @@ fn main() {
         .ok()
         .map(|s| Scenario::parse(&s).expect("bad BENCH_SCENARIO"))
         .unwrap_or_default();
+    let dataflows: Vec<Dataflow> = match std::env::var("BENCH_DATAFLOW").ok().as_deref() {
+        None | Some("both") => {
+            vec![Dataflow::OutputStationary, Dataflow::WeightStationary]
+        }
+        Some(s) => vec![Dataflow::parse(s).expect("bad BENCH_DATAFLOW (os|ws|both)")],
+    };
     let mesh_cfg = MeshConfig::default();
     let cc = CampaignConfig {
         faults_per_layer: faults,
@@ -50,18 +58,20 @@ fn main() {
     };
     println!(
         "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, \
-         scenario {scenario}, DIM8 OS)"
+         scenario {scenario}, DIM8, dataflows {dataflows:?})"
     );
     println!(
-        "{:<16} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8}",
-        "Model", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s", "resume-x",
-        "rtl-cycles", "tile-x"
+        "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8}",
+        "Model", "DF", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s",
+        "resume-x", "rtl-cycles", "tile-x"
     );
-    let rows = injection_table(&names, &mesh_cfg, &cc).expect("campaigns");
+    let rows = injection_table_dataflows(&names, &mesh_cfg, &cc, &dataflows).expect("campaigns");
     for r in &rows {
         println!(
-            "{:<16} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} {:>7.2}x",
+            "{:<16} {:>4} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} \
+             {:>7.2}x",
             r.model,
+            r.dataflow,
             human_time(r.sw.wall.as_secs_f64()),
             human_time(r.rtl.wall.as_secs_f64()),
             r.slowdown_pct(),
@@ -88,8 +98,9 @@ fn main() {
     );
     for r in &rows {
         println!(
-            "CSV,injection,{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4}",
+            "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4}",
             r.model,
+            r.dataflow,
             r.sw.wall.as_secs_f64(),
             r.rtl.wall.as_secs_f64(),
             r.slowdown_pct(),

@@ -78,7 +78,15 @@ fn main() -> anyhow::Result<()> {
         for info in &sites {
             for _ in 0..faults_per_layer {
                 let trial: TrialFault = sample_trial(
-                    Scenario::Seu, info.site, info.m, info.k, info.n, dim, &mut irng, &[],
+                    Scenario::Seu,
+                    Dataflow::OutputStationary,
+                    info.site,
+                    info.m,
+                    info.k,
+                    info.n,
+                    dim,
+                    &mut irng,
+                    &[],
                 );
                 let logits = qn.forward(&mut rt, &x, Some((trial, &mut mesh)))?;
                 rtl_trials += 1;

@@ -9,6 +9,7 @@
 
 use enfor_sa::benchkit;
 use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
+use enfor_sa::config::{Dataflow, MeshConfig};
 use enfor_sa::coordinator::Args;
 use enfor_sa::dnn::models;
 use enfor_sa::mesh::SignalKind;
@@ -18,11 +19,16 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let trials_per_pe = args.u64_or("faults", 200)?.div_euclid(8).max(4);
     let dim = args.usize_or("dim", 8)?;
+    let dataflow = match args.get("dataflow") {
+        Some(s) => Dataflow::parse(s).ok_or_else(|| anyhow::anyhow!("bad --dataflow {s}"))?,
+        None => Dataflow::OutputStationary,
+    };
     args.finish()?;
+    let mesh_cfg = MeshConfig { dim, dataflow };
 
     let model = models::resnet50(42);
     println!(
-        "== ResNet50 case study (scaled model: {} params, {} layers, {dim}x{dim} OS mesh) ==\n",
+        "== ResNet50 case study (scaled model: {} params, {} layers, {dim}x{dim} {dataflow} mesh) ==\n",
         model.param_count(),
         model.layers.len()
     );
@@ -31,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     // metric) needs very large budgets on these scaled models — the
     // tile-level exposure map shows the row gradient at any budget.
     for kind in [SignalKind::Valid, SignalKind::Propag] {
-        let map = control_avf_map(&model, 0, dim, trials_per_pe, 0xF16A, kind);
+        let map = control_avf_map(&model, 0, &mesh_cfg, trials_per_pe, 0xF16A, kind);
         println!("{}", format_pe_map(&map));
         let emap = exposure_map(dim, 27, kind, trials_per_pe * 4, 0xF16A);
         println!("{}", format_pe_map(&emap));

@@ -181,6 +181,10 @@ pub fn layer_forward(dims: &[usize]) -> Result<Vec<LayerForwardRow>> {
 #[derive(Clone, Debug)]
 pub struct InjectionRow {
     pub model: String,
+    /// Mesh dataflow every campaign of this row executed under (schema
+    /// v5: one row per (model, dataflow) pair makes OS-vs-WS
+    /// reliability directly comparable per model).
+    pub dataflow: Dataflow,
     pub sw: CampaignResult,
     /// ENFOR-SA campaign on the default fast path (site-resume trial
     /// engine, cycle-resume tile engine).
@@ -274,11 +278,31 @@ pub fn injection_table(
         let rtl_full = run_campaign(&model, mesh_cfg, &full_cfg)?;
         rows.push(InjectionRow {
             model: model.name.clone(),
+            dataflow: mesh_cfg.dataflow,
             sw,
             rtl,
             rtl_tile_full,
             rtl_full,
         });
+    }
+    Ok(rows)
+}
+
+/// Table VI across dataflows: the same campaigns re-run per dataflow
+/// (same per-model seeds, so weights match across dataflows and only
+/// the mesh configuration varies) — the v5 snapshot's OS-vs-WS
+/// comparability surface. The `mesh_cfg.dataflow` field is ignored in
+/// favour of the explicit `dataflows` list.
+pub fn injection_table_dataflows(
+    model_names: &[String],
+    mesh_cfg: &MeshConfig,
+    base: &CampaignConfig,
+    dataflows: &[Dataflow],
+) -> Result<Vec<InjectionRow>> {
+    let mut rows = Vec::new();
+    for &dataflow in dataflows {
+        let mc = MeshConfig { dataflow, ..*mesh_cfg };
+        rows.extend(injection_table(model_names, &mc, base)?);
     }
     Ok(rows)
 }
@@ -289,10 +313,16 @@ pub fn injection_table(
 /// per-scenario outcome counts (masked / exposed / critical), campaign
 /// throughput and the site-resume speedup over the full-forward
 /// oracle, so future PRs can diff the RTL-offload overhead, the
-/// trial-engine trajectory and the scenario mix. Schema v4 adds the
+/// trial-engine trajectory and the scenario mix. Schema v4 added the
 /// cycle-resume tile-engine accounting: `rtl_cycles_stepped` (the fast
 /// path), `rtl_cycles_stepped_full_tile` (the bit-identical full-tile
 /// oracle) and their deterministic ratio `cycle_resume_speedup`.
+/// Schema v5 makes the rows dataflow-generic: every model row carries
+/// a `dataflow` label (one row per (model, dataflow) when the caller
+/// benches both — see [`injection_table_dataflows`]), the top level
+/// lists the distinct `dataflows` present, and the per-dataflow
+/// masked/exposed/SDC and `cycle_resume_speedup` values make OS-vs-WS
+/// reliability directly comparable per model.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -305,6 +335,7 @@ pub fn injection_snapshot_json(
         .map(|r| {
             Json::obj(vec![
                 ("model", Json::str(r.model.clone())),
+                ("dataflow", Json::str(r.dataflow.to_string())),
                 ("scenario", Json::str(r.rtl.scenario.to_string())),
                 ("sw_wall_s", Json::num(r.sw.wall.as_secs_f64())),
                 ("rtl_wall_s", Json::num(r.rtl.wall.as_secs_f64())),
@@ -331,10 +362,23 @@ pub fn injection_snapshot_json(
         })
         .collect();
     let n = rows.len().max(1) as f64;
+    // distinct dataflows in first-appearance order (rows may arrive
+    // grouped per dataflow or interleaved per model)
+    let mut dataflows: Vec<String> = Vec::new();
+    for r in rows {
+        let df = r.dataflow.to_string();
+        if !dataflows.contains(&df) {
+            dataflows.push(df);
+        }
+    }
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v4")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v5")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
+        (
+            "dataflows",
+            Json::Arr(dataflows.into_iter().map(Json::str).collect()),
+        ),
         ("faults_per_layer", Json::num(faults_per_layer as f64)),
         ("inputs", Json::num(inputs as f64)),
         (
@@ -388,7 +432,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v4_carries_scenario_and_cycle_accounting() {
+    fn snapshot_schema_v5_carries_dataflow_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -396,13 +440,40 @@ mod tests {
             scenario: Scenario::Mbu { bits: 2 },
             ..Default::default()
         };
-        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let rows = injection_table_dataflows(
+            &names,
+            &MeshConfig::default(),
+            &cc,
+            &[Dataflow::OutputStationary, Dataflow::WeightStationary],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2, "one row per (model, dataflow)");
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v4")
+            Some("enfor-sa/injection-overhead/v5")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
+        let dfs = j.get("dataflows").and_then(Json::as_arr).unwrap();
+        let dfs: Vec<_> = dfs.iter().filter_map(|d| d.as_str()).collect();
+        assert_eq!(dfs, vec!["OS", "WS"], "both dataflows listed");
+        let models = j.get("models").and_then(Json::as_arr).unwrap();
+        assert_eq!(
+            models[0].get("dataflow").and_then(Json::as_str),
+            Some("OS")
+        );
+        assert_eq!(
+            models[1].get("dataflow").and_then(Json::as_str),
+            Some("WS")
+        );
+        // the WS row partitions its trials too
+        let ws = &models[1];
+        assert_eq!(
+            ws.get("trials").and_then(Json::as_f64).unwrap(),
+            ws.get("masked").and_then(Json::as_f64).unwrap()
+                + ws.get("exposed").and_then(Json::as_f64).unwrap()
+                + ws.get("critical").and_then(Json::as_f64).unwrap()
+        );
         assert!(
             j.get("mean_cycle_resume_speedup")
                 .and_then(Json::as_f64)

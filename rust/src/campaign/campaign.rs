@@ -31,11 +31,19 @@
 //! [`Scenario`] (`seu` default — bit-identical to the legacy
 //! single-fault campaigns; `mbu:<k>`, `burst:<r>`, `double-seu`,
 //! `stuck:<0|1>` — see the ROADMAP "Fault scenario API" contract).
+//!
+//! Campaigns are **dataflow-generic**: `MeshConfig.dataflow` selects
+//! the mesh program every RTL tile executes, the tile grid trials are
+//! sampled from, and the cycle range fault cycles are drawn from —
+//! with the OS draws exactly the legacy ones, so fixed-seed OS
+//! campaigns are bit-identical to the pre-dataflow-generic engine.
+//! The whole-SoC backend is OS-only ([`validate_dataflow_support`]).
 
 use super::fault::{sample_trial, TrialFault};
 use super::runner::{CrossLayerRunner, TileBackend};
 use crate::config::{
-    Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TileEngine, TrialEngine,
+    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
+    TrialEngine,
 };
 use crate::dnn::engine::probe_input;
 use crate::dnn::engine::synthetic_input;
@@ -66,6 +74,8 @@ pub enum TrialOutcome {
 pub struct CampaignResult {
     pub model: String,
     pub backend: Backend,
+    /// The mesh dataflow the campaign's RTL tiles executed under.
+    pub dataflow: Dataflow,
     /// The fault scenario every trial of this campaign sampled.
     pub scenario: Scenario,
     pub vuln: VulnEstimate,
@@ -100,10 +110,16 @@ impl CampaignResult {
         }
     }
 
-    pub fn empty(model: &str, backend: Backend, scenario: Scenario) -> CampaignResult {
+    pub fn empty(
+        model: &str,
+        backend: Backend,
+        scenario: Scenario,
+        dataflow: Dataflow,
+    ) -> CampaignResult {
         CampaignResult {
             model: model.to_string(),
             backend,
+            dataflow,
             scenario,
             vuln: VulnEstimate::default(),
             exposed_trials: 0,
@@ -179,7 +195,7 @@ pub fn plan_one(
     cfg: &CampaignConfig,
     sites: &[GemmSiteInfo],
     kinds: &[SignalKind],
-    dim: usize,
+    mesh_cfg: &MeshConfig,
     rng: &mut Rng,
 ) -> InputPlan {
     let x = synthetic_input(&model.input_shape, rng);
@@ -202,11 +218,12 @@ pub fn plan_one(
                     }
                     _ => PlannedTrial::Rtl(sample_trial(
                         cfg.scenario,
+                        mesh_cfg.dataflow,
                         info.site,
                         info.m,
                         info.k,
                         info.n,
-                        dim,
+                        mesh_cfg.dim,
                         rng,
                         kinds,
                     )),
@@ -246,8 +263,15 @@ impl TrialExecutor {
     pub fn new(mesh_cfg: &MeshConfig, cfg: &CampaignConfig) -> TrialExecutor {
         let sim = match cfg.backend {
             Backend::EnforSa => Sim::Mesh(Mesh::new(mesh_cfg.dim, mesh_cfg.dataflow)),
-            Backend::Hdfit => Sim::Hdfit(InstrumentedMesh::new(mesh_cfg.dim)),
-            Backend::FullSoc => Sim::Soc(Box::new(Soc::new(mesh_cfg.dim))),
+            Backend::Hdfit => {
+                Sim::Hdfit(InstrumentedMesh::with_dataflow(mesh_cfg.dim, mesh_cfg.dataflow))
+            }
+            // the SoC takes its dataflow from MeshConfig too, but only
+            // implements the OS schedule — campaigns reject WS + FullSoc
+            // before construction (`validate_dataflow_support`)
+            Backend::FullSoc => {
+                Sim::Soc(Box::new(Soc::with_dataflow(mesh_cfg.dim, mesh_cfg.dataflow)))
+            }
             Backend::SwOnly => Sim::Sw,
         };
         TrialExecutor {
@@ -443,22 +467,39 @@ pub fn run_input(
     run_campaign(model, mesh_cfg, &one)
 }
 
+/// Reject backend/dataflow combinations the simulators cannot execute:
+/// the whole-SoC backend is output-stationary only (its controller FSM
+/// implements the OS preload/compute/flush schedule), so WS campaigns
+/// must name a mesh-level backend. A config-level error — never a
+/// silent dataflow override (ROADMAP "Dataflow-generic campaigns").
+pub fn validate_dataflow_support(mesh_cfg: &MeshConfig, cfg: &CampaignConfig) -> Result<()> {
+    if cfg.backend == Backend::FullSoc && mesh_cfg.dataflow == Dataflow::WeightStationary {
+        anyhow::bail!(
+            "the full-SoC backend is output-stationary only (its controller FSM owns the OS \
+             schedule); run --dataflow ws campaigns on --backend enfor-sa or hdfit"
+        );
+    }
+    Ok(())
+}
+
 /// Run a full campaign for `model` with the given configuration.
 pub fn run_campaign(
     model: &Model,
     mesh_cfg: &MeshConfig,
     cfg: &CampaignConfig,
 ) -> Result<CampaignResult> {
+    validate_dataflow_support(mesh_cfg, cfg)?;
     let kinds = signal_kinds(cfg);
     // site list computed once per campaign and borrowed from here on
     let sites = campaign_sites(model);
     let mut rng = Rng::new(cfg.seed);
-    let mut result = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
+    let mut result =
+        CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
     let mut exec = TrialExecutor::new(mesh_cfg, cfg);
 
     let t0 = Instant::now();
     for _input in 0..cfg.inputs {
-        let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg.dim, &mut rng);
+        let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg, &mut rng);
         for batch in &plan.batches {
             exec.run_batch(model, &plan, batch, &mut result);
         }
@@ -645,6 +686,82 @@ mod tests {
         );
     }
 
+    fn ws_mesh_cfg() -> MeshConfig {
+        MeshConfig {
+            dataflow: Dataflow::WeightStationary,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ws_campaign_runs_and_counts_on_mesh_backends() {
+        let model = models::quicknet(5);
+        for backend in [Backend::EnforSa, Backend::Hdfit] {
+            let (_, cfg) = small_cfg(backend);
+            let r = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+            assert_eq!(r.dataflow, Dataflow::WeightStationary);
+            assert_eq!(r.vuln.trials, 40, "{backend}");
+            assert_eq!(
+                r.vuln.trials,
+                r.masked_trials + r.exposed_trials + r.vuln.critical,
+                "{backend}: outcomes must partition trials"
+            );
+            assert_eq!(r.per_layer.len(), 5);
+            assert!(r.rtl_cycles_stepped > 0);
+        }
+    }
+
+    #[test]
+    fn ws_site_resume_matches_full_forward_oracle() {
+        let model = models::quicknet(5);
+        let (_, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.engine = TrialEngine::SiteResume;
+        let a = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        cfg.engine = TrialEngine::FullForward;
+        let b = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        assert_eq!(a.masked_trials, b.masked_trials);
+    }
+
+    #[test]
+    fn ws_tile_engines_agree_and_cycle_resume_steps_fewer() {
+        // the WS mirror of the cycle-resume acceptance pin: bit-identical
+        // counts, strictly fewer RTL cycles. faults_per_layer=16
+        // pigeonholes conv1's (K=27, N=16) -> 4x2 = 8 weight tiles.
+        let model = models::quicknet(5);
+        let (_, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.tile_engine = TileEngine::CycleResume;
+        let a = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        cfg.tile_engine = TileEngine::Full;
+        let b = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        assert_eq!(a.masked_trials, b.masked_trials);
+        assert!(a.rtl_cycles_stepped > 0 && b.rtl_cycles_stepped > 0);
+        assert!(
+            a.rtl_cycles_stepped < b.rtl_cycles_stepped,
+            "WS cycle-resume must step fewer RTL cycles: {} vs {}",
+            a.rtl_cycles_stepped,
+            b.rtl_cycles_stepped
+        );
+    }
+
+    #[test]
+    fn ws_full_soc_campaign_is_rejected_with_a_clear_error() {
+        let model = models::quicknet(5);
+        let (_, cfg) = small_cfg(Backend::FullSoc);
+        let err = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap_err();
+        assert!(
+            format!("{err}").contains("output-stationary only"),
+            "error must name the restriction: {err}"
+        );
+    }
+
     #[test]
     fn plan_one_is_deterministic_and_covers_all_sites() {
         let model = models::quicknet(5);
@@ -653,8 +770,8 @@ mod tests {
         let kinds = signal_kinds(&cfg);
         let mut r1 = Rng::new(cfg.seed);
         let mut r2 = Rng::new(cfg.seed);
-        let p1 = plan_one(&model, &cfg, &sites, &kinds, mesh_cfg.dim, &mut r1);
-        let p2 = plan_one(&model, &cfg, &sites, &kinds, mesh_cfg.dim, &mut r2);
+        let p1 = plan_one(&model, &cfg, &sites, &kinds, &mesh_cfg, &mut r1);
+        let p2 = plan_one(&model, &cfg, &sites, &kinds, &mesh_cfg, &mut r2);
         assert_eq!(p1.batches.len(), sites.len());
         assert_eq!(p1.golden_top1, p2.golden_top1);
         assert_eq!(p1.golden_logits, p2.golden_logits);

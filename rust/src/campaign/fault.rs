@@ -11,10 +11,17 @@
 //! single-fault path. Every other scenario derives its plan from the
 //! same base draw (plus, for `double-seu`, one extra independent draw),
 //! keeping sampling deterministic per `(seed, scenario)`.
+//!
+//! Sampling is **dataflow-generic**: the tile grid and the fault-cycle
+//! range come from the dataflow's tiling ([`tile_grid`]) and cycle
+//! model ([`matmul_cycles`]). The output-stationary draws are exactly
+//! the legacy ones (the RNG-stream compatibility pin of
+//! `prop_scenario.rs`); weight-stationary trials sample a weight tile
+//! over the `(K, N)` grid and a cycle inside the M-row streaming pass.
 
-use crate::config::Scenario;
+use crate::config::{Dataflow, Scenario};
 use crate::dnn::GemmSiteId;
-use crate::mesh::driver::os_matmul_cycles;
+use crate::mesh::driver::{matmul_cycles, tile_grid};
 use crate::mesh::inject::Persistence;
 use crate::mesh::{Fault, FaultPlan, SignalAddr, SignalKind};
 use crate::util::Rng;
@@ -24,8 +31,10 @@ use crate::util::Rng;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TrialFault {
     pub site: GemmSiteId,
-    /// Output-tile coordinates (units of DIM).
+    /// Tile coordinates in [`tile_grid`] units: the output tile row (OS)
+    /// or the K-dimension weight-tile index (WS).
     pub tile_i: usize,
+    /// Tile column (units of DIM over N, both dataflows).
     pub tile_j: usize,
     /// The mesh-level fault plan (cycles relative to the tile matmul).
     pub plan: FaultPlan,
@@ -73,26 +82,46 @@ pub fn sample_signal(rng: &mut Rng, kinds: &[SignalKind]) -> (SignalKind, u8) {
     unreachable!("bit-weighted sampling exhausted the pool");
 }
 
-/// Sample a mesh fault for a tile matmul with inner dimension `k_inner`.
-pub fn sample_mesh_fault(
+/// Sample a mesh fault for one tile pass of `dataflow`: signal+bit,
+/// row, col, then a cycle drawn from the dataflow's cycle model
+/// ([`matmul_cycles`] — the K stream for OS, the M stream for WS).
+pub fn sample_fault(
+    dataflow: Dataflow,
     dim: usize,
-    k_inner: usize,
+    m: usize,
+    k: usize,
     rng: &mut Rng,
     kinds: &[SignalKind],
 ) -> Fault {
     let (kind, bit) = sample_signal(rng, kinds);
     let row = rng.usize_below(dim);
     let col = rng.usize_below(dim);
-    let cycle = rng.below(os_matmul_cycles(dim, k_inner));
+    let cycle = rng.below(matmul_cycles(dataflow, dim, m, k));
     Fault::new(row, col, kind, bit, cycle)
+}
+
+/// Sample a mesh fault for an OS tile matmul with inner dimension
+/// `k_inner` — the legacy entry ([`sample_fault`] with
+/// [`Dataflow::OutputStationary`]); kept verbatim because it is the
+/// RNG-stream compatibility surface of the pre-scenario campaigns.
+pub fn sample_mesh_fault(
+    dim: usize,
+    k_inner: usize,
+    rng: &mut Rng,
+    kinds: &[SignalKind],
+) -> Fault {
+    sample_fault(Dataflow::OutputStationary, dim, 0, k_inner, rng, kinds)
 }
 
 /// Derive a scenario's fault plan from its base SEU draw. Deterministic:
 /// only `double-seu` consumes additional RNG (one more base draw).
+#[allow(clippy::too_many_arguments)]
 fn scenario_plan(
     scenario: Scenario,
     base: Fault,
+    dataflow: Dataflow,
     dim: usize,
+    m: usize,
     k_inner: usize,
     rng: &mut Rng,
     kinds: &[SignalKind],
@@ -133,7 +162,7 @@ fn scenario_plan(
         }
         Scenario::DoubleSeu => {
             // two independent space/time draws in one tile
-            let second = sample_mesh_fault(dim, k_inner, rng, kinds);
+            let second = sample_fault(dataflow, dim, m, k_inner, rng, kinds);
             FaultPlan::new(vec![base, second])
         }
         Scenario::StuckAt { value } => FaultPlan::single(Fault {
@@ -144,11 +173,15 @@ fn scenario_plan(
 }
 
 /// Sample a complete trial for one GEMM site of shape (m, k, n) under
-/// `scenario`. For [`Scenario::Seu`] this consumes the RNG stream in
-/// exactly the legacy single-fault order.
+/// `scenario` and `dataflow`. The draw order is the same for every
+/// dataflow (`tile_i`, `tile_j`, signal+bit, row, col, cycle — only the
+/// ranges differ), and for [`Dataflow::OutputStationary`] +
+/// [`Scenario::Seu`] it consumes the RNG stream in exactly the legacy
+/// single-fault order.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_trial(
     scenario: Scenario,
+    dataflow: Dataflow,
     site: GemmSiteId,
     m: usize,
     k: usize,
@@ -157,24 +190,26 @@ pub fn sample_trial(
     rng: &mut Rng,
     kinds: &[SignalKind],
 ) -> TrialFault {
-    let tiles_i = m.div_ceil(dim);
-    let tiles_j = n.div_ceil(dim);
+    let (tiles_i, tiles_j) = tile_grid(dataflow, dim, m, k, n);
     let tile_i = rng.usize_below(tiles_i);
     let tile_j = rng.usize_below(tiles_j);
-    let base = sample_mesh_fault(dim, k, rng, kinds);
+    let base = sample_fault(dataflow, dim, m, k, rng, kinds);
     TrialFault {
         site,
         tile_i,
         tile_j,
-        plan: scenario_plan(scenario, base, dim, k, rng, kinds),
+        plan: scenario_plan(scenario, base, dataflow, dim, m, k, rng, kinds),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mesh::driver::{os_matmul_cycles, ws_matmul_cycles};
 
     const SITE: GemmSiteId = GemmSiteId { layer: 1, ordinal: 0 };
+    const OS: Dataflow = Dataflow::OutputStationary;
+    const WS: Dataflow = Dataflow::WeightStationary;
 
     #[test]
     fn signal_sampling_is_bit_weighted() {
@@ -211,7 +246,7 @@ mod tests {
     fn trial_bounds_respected() {
         let mut rng = Rng::new(63);
         for _ in 0..500 {
-            let t = sample_trial(Scenario::Seu, SITE, 100, 27, 16, 8, &mut rng, &[]);
+            let t = sample_trial(Scenario::Seu, OS, SITE, 100, 27, 16, 8, &mut rng, &[]);
             assert!(t.tile_i < 13);
             assert!(t.tile_j < 2);
             assert_eq!(t.plan.len(), 1);
@@ -234,8 +269,8 @@ mod tests {
             let mut r2 = Rng::new(64);
             for _ in 0..50 {
                 assert_eq!(
-                    sample_trial(scenario, SITE, 64, 64, 64, 8, &mut r1, &[]),
-                    sample_trial(scenario, SITE, 64, 64, 64, 8, &mut r2, &[]),
+                    sample_trial(scenario, OS, SITE, 64, 64, 64, 8, &mut r1, &[]),
+                    sample_trial(scenario, OS, SITE, 64, 64, 64, 8, &mut r2, &[]),
                     "{scenario}"
                 );
             }
@@ -249,7 +284,7 @@ mod tests {
         let mut s_rng = Rng::new(65);
         let mut l_rng = Rng::new(65);
         for _ in 0..200 {
-            let t = sample_trial(Scenario::Seu, SITE, 100, 27, 16, 8, &mut s_rng, &[]);
+            let t = sample_trial(Scenario::Seu, OS, SITE, 100, 27, 16, 8, &mut s_rng, &[]);
             // legacy order, drawn manually:
             let tile_i = l_rng.usize_below(100usize.div_ceil(8));
             let tile_j = l_rng.usize_below(16usize.div_ceil(8));
@@ -267,6 +302,7 @@ mod tests {
             for _ in 0..100 {
                 let t = sample_trial(
                     Scenario::Mbu { bits },
+                    OS,
                     SITE,
                     64,
                     27,
@@ -297,6 +333,7 @@ mod tests {
             for _ in 0..100 {
                 let t = sample_trial(
                     Scenario::Burst { radius },
+                    OS,
                     SITE,
                     64,
                     27,
@@ -326,7 +363,7 @@ mod tests {
     #[test]
     fn double_seu_draws_two_independent_faults() {
         let mut rng = Rng::new(68);
-        let t = sample_trial(Scenario::DoubleSeu, SITE, 64, 27, 64, 8, &mut rng, &[]);
+        let t = sample_trial(Scenario::DoubleSeu, OS, SITE, 64, 27, 64, 8, &mut rng, &[]);
         assert_eq!(t.plan.len(), 2);
     }
 
@@ -336,6 +373,7 @@ mod tests {
         for value in [false, true] {
             let t = sample_trial(
                 Scenario::StuckAt { value },
+                OS,
                 SITE,
                 64,
                 27,
@@ -349,6 +387,54 @@ mod tests {
                 t.plan.faults()[0].persistence,
                 Persistence::StuckAt(value)
             );
+        }
+    }
+
+    #[test]
+    fn ws_trial_samples_the_weight_tile_grid_and_m_stream() {
+        // WS: tile_i ranges over K tiles, tile_j over N tiles, and the
+        // fault cycle over the M-row streaming pass
+        let mut rng = Rng::new(70);
+        let (m, k, n, dim) = (100usize, 27usize, 16usize, 8usize);
+        for _ in 0..500 {
+            let t = sample_trial(Scenario::Seu, WS, SITE, m, k, n, dim, &mut rng, &[]);
+            assert!(t.tile_i < k.div_ceil(dim), "tile_i indexes K under WS");
+            assert!(t.tile_j < n.div_ceil(dim));
+            let f = t.plan.faults()[0];
+            assert!(f.cycle < ws_matmul_cycles(dim, m), "cycle from the M stream");
+        }
+        // os draws are untouched by the dataflow-generic signature
+        let mut a = Rng::new(71);
+        let mut b = Rng::new(71);
+        assert_eq!(
+            sample_trial(Scenario::Seu, OS, SITE, m, k, n, dim, &mut a, &[]),
+            TrialFault::single(
+                SITE,
+                b.usize_below(m.div_ceil(dim)),
+                b.usize_below(n.div_ceil(dim)),
+                sample_mesh_fault(dim, k, &mut b, &[]),
+            )
+        );
+    }
+
+    #[test]
+    fn ws_sampling_is_deterministic_per_scenario() {
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 3 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ] {
+            let mut r1 = Rng::new(72);
+            let mut r2 = Rng::new(72);
+            for _ in 0..50 {
+                assert_eq!(
+                    sample_trial(scenario, WS, SITE, 64, 64, 64, 8, &mut r1, &[]),
+                    sample_trial(scenario, WS, SITE, 64, 64, 64, 8, &mut r2, &[]),
+                    "{scenario}"
+                );
+            }
         }
     }
 

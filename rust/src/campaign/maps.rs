@@ -11,10 +11,10 @@
 
 use super::fault::TrialFault;
 use super::runner::{CrossLayerRunner, TileBackend};
-use crate::config::{Dataflow, OffloadScope};
+use crate::config::{Dataflow, MeshConfig, OffloadScope};
 use crate::dnn::engine::synthetic_input;
 use crate::dnn::{argmax, Model};
-use crate::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use crate::mesh::driver::{gold_matmul, matmul_cycles, tile_grid, MatmulDriver};
 use crate::mesh::{Fault, Mesh, SignalKind};
 use crate::util::stats::VulnEstimate;
 use crate::util::Rng;
@@ -54,31 +54,40 @@ impl PeMap {
 
 /// Fig. 5a: per-PE AVF for control-signal faults during full cross-layer
 /// inference of `model`, injecting into the GEMM of layer-site index
-/// `site_idx` (e.g. the first conv of ResNet50 in the paper).
+/// `site_idx` (e.g. the first conv of ResNet50 in the paper). The map
+/// is dataflow-generic: the tile grid and the fault-cycle range come
+/// from `mesh_cfg.dataflow`'s tiling and cycle model, and the trials
+/// run on a mesh of that dataflow (the OS draws are exactly the legacy
+/// ones).
 pub fn control_avf_map(
     model: &Model,
     site_idx: usize,
-    dim: usize,
+    mesh_cfg: &MeshConfig,
     trials_per_pe: u64,
     seed: u64,
     kind: SignalKind,
 ) -> PeMap {
     assert!(matches!(kind, SignalKind::Propag | SignalKind::Valid));
+    let (dim, dataflow) = (mesh_cfg.dim, mesh_cfg.dataflow);
     let mut rng = Rng::new(seed);
-    let mut map = PeMap::new(dim, &format!("AVF map ({kind}) — {}", model.name));
+    let mut map = PeMap::new(
+        dim,
+        &format!("AVF map ({kind}, {dataflow}) — {}", model.name),
+    );
     let x = synthetic_input(&model.input_shape, &mut rng);
     let golden = argmax(&model.forward(&x, None).data);
     let sites = model.gemm_sites(&x);
     let info = sites[site_idx.min(sites.len() - 1)];
-    let cycles = os_matmul_cycles(dim, info.k);
-    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
+    let cycles = matmul_cycles(dataflow, dim, info.m, info.k);
+    let (tiles_i, tiles_j) = tile_grid(dataflow, dim, info.m, info.k, info.n);
+    let mut mesh = Mesh::new(dim, dataflow);
     for r in 0..dim {
         for c in 0..dim {
             for _ in 0..trials_per_pe {
                 let trial = TrialFault::single(
                     info.site,
-                    rng.usize_below(info.m.div_ceil(dim)),
-                    rng.usize_below(info.n.div_ceil(dim)),
+                    rng.usize_below(tiles_i),
+                    rng.usize_below(tiles_j),
                     Fault::new(r, c, kind, 0, rng.below(cycles)),
                 );
                 let mut runner = CrossLayerRunner::new(
@@ -113,29 +122,55 @@ pub fn exposure_map(
     trials_per_pe: u64,
     seed: u64,
 ) -> PeMap {
+    exposure_map_for(Dataflow::OutputStationary, dim, k_inner, kind, trials_per_pe, seed)
+}
+
+/// Dataflow-generic tile-level exposure map. `stream` is the streamed
+/// operand extent of one pass: the inner dimension K for OS, the
+/// activation row count M for WS. Faults are sampled within the
+/// COMPUTE phase — the paper's Fig. 5 analysis concerns faults "during
+/// computation" (preload/flush-phase faults have their own, different
+/// spatial profile). The OS arm draws exactly what the legacy
+/// [`exposure_map`] drew; the WS arm streams ReLU-sparse activation
+/// panels against a dense preloaded weight tile, so the map measures
+/// the held-operand masking structure of the WS array.
+pub fn exposure_map_for(
+    dataflow: Dataflow,
+    dim: usize,
+    stream: usize,
+    kind: SignalKind,
+    trials_per_pe: u64,
+    seed: u64,
+) -> PeMap {
     let mut rng = Rng::new(seed);
-    let mut map = PeMap::new(dim, &format!("{kind}-register exposure map"));
-    let mut mesh = Mesh::new(dim, Dataflow::OutputStationary);
-    // Faults are sampled within the COMPUTE phase — the paper's Fig. 5
-    // analysis concerns faults "during computation" (propag erroneously
-    // asserted while MACs run); preload/flush-phase faults have their
-    // own, different spatial profile.
+    let mut map = PeMap::new(dim, &format!("{kind}-register exposure map ({dataflow})"));
+    let mut mesh = Mesh::new(dim, dataflow);
     let compute_start = (2 * dim - 1) as u64;
-    let compute_len = (k_inner + 2 * dim - 2) as u64;
-    let d = crate::mat::Mat::zeros(dim, dim);
+    let compute_len = (stream + 2 * dim - 2) as u64;
+    let d = match dataflow {
+        Dataflow::OutputStationary => crate::mat::Mat::zeros(dim, dim),
+        Dataflow::WeightStationary => crate::mat::Mat::zeros(stream, dim),
+    };
     for r in 0..dim {
         for c in 0..dim {
             for _ in 0..trials_per_pe {
-                // weights dense, activations ReLU-sparse (half zeros)
-                let a = rng.mat_i8(dim, k_inner);
-                let mut b = rng.mat_i8(k_inner, dim);
-                for v in b.data_mut() {
-                    if rng.chance(0.5) {
-                        *v = 0;
-                    } else {
-                        *v = (*v).max(0); // post-ReLU activations
+                // weights dense, activations ReLU-sparse (half zeros) —
+                // under OS the activations stream north (operand B),
+                // under WS they stream west (operand A)
+                let (a, b) = match dataflow {
+                    Dataflow::OutputStationary => {
+                        let a = rng.mat_i8(dim, stream);
+                        let mut b = rng.mat_i8(stream, dim);
+                        sparsify(&mut rng, b.data_mut());
+                        (a, b)
                     }
-                }
+                    Dataflow::WeightStationary => {
+                        let mut a = rng.mat_i8(stream, dim);
+                        sparsify(&mut rng, a.data_mut());
+                        let w = rng.mat_i8(dim, dim);
+                        (a, w)
+                    }
+                };
                 let fault = Fault::new(
                     r,
                     c,
@@ -156,6 +191,17 @@ pub fn exposure_map(
     map
 }
 
+/// Half-zero, non-negative values — post-ReLU activation statistics.
+fn sparsify(rng: &mut Rng, vals: &mut [i8]) {
+    for v in vals {
+        if rng.chance(0.5) {
+            *v = 0;
+        } else {
+            *v = (*v).max(0);
+        }
+    }
+}
+
 /// Fig. 5b: weight-register exposure (see [`exposure_map`]).
 pub fn weight_exposure_map(
     dim: usize,
@@ -166,15 +212,47 @@ pub fn weight_exposure_map(
     exposure_map(dim, k_inner, SignalKind::Weight, trials_per_pe, seed)
 }
 
+/// WS companion of [`weight_exposure_map`]: exposure of the stationary
+/// weight registers while `m_rows` activation rows stream through. A
+/// corrupted stationary weight never travels east, so — unlike the OS
+/// map's west-to-east gradient — its exposure is confined to the PE's
+/// own column (pinned against `inject_now` ground truth by test).
+pub fn ws_weight_exposure_map(
+    dim: usize,
+    m_rows: usize,
+    trials_per_pe: u64,
+    seed: u64,
+) -> PeMap {
+    exposure_map_for(
+        Dataflow::WeightStationary,
+        dim,
+        m_rows,
+        SignalKind::Weight,
+        trials_per_pe,
+        seed,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::dnn::models;
 
+    fn mesh4(dataflow: Dataflow) -> MeshConfig {
+        MeshConfig { dim: 4, dataflow }
+    }
+
     #[test]
     fn propag_map_upper_rows_more_critical() {
         let model = models::quicknet(5);
-        let map = control_avf_map(&model, 1, 4, 12, 0xF16A, SignalKind::Propag);
+        let map = control_avf_map(
+            &model,
+            1,
+            &mesh4(Dataflow::OutputStationary),
+            12,
+            0xF16A,
+            SignalKind::Propag,
+        );
         // paper: corruption propagates down the whole column, so upper
         // rows affect more PEs => row 0 at least as critical as row dim-1
         let top = map.row_mean(0);
@@ -205,6 +283,78 @@ mod tests {
             west > east,
             "western columns must be more exposed: west={west} east={east}"
         );
+    }
+
+    #[test]
+    fn ws_control_avf_map_runs_end_to_end() {
+        // the WS AVF map drives real cross-layer inferences through the
+        // WS runner path; values stay probabilities
+        let model = models::quicknet(5);
+        let map = control_avf_map(
+            &model,
+            1,
+            &mesh4(Dataflow::WeightStationary),
+            4,
+            0xF16D,
+            SignalKind::Propag,
+        );
+        for r in 0..4 {
+            for c in 0..4 {
+                let v = map.value(r, c);
+                assert!((0.0..=1.0).contains(&v), "PE({r},{c}): {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn ws_weight_fault_exposure_is_column_local() {
+        // inject_now ground truth for the WS map's structure: a
+        // corrupted stationary weight multiplies only its own column's
+        // psums — it never travels east the way the OS weight stream
+        // does (Fig. 5b), so corruption stays in column c.
+        let dim = 4;
+        let m = 6;
+        let mut rng = Rng::new(0xF16E);
+        let a = rng.mat_i8(m, dim);
+        let w = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(m, dim, 100);
+        let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+        let golden = MatmulDriver::new(&mut mesh).matmul(a.view(), w.view(), d.view());
+        let mut exposed_any = false;
+        let compute_start = (2 * dim - 1) as u64;
+        for r in 0..dim {
+            for c in 0..dim {
+                let f = Fault::new(r, c, SignalKind::Weight, 6, compute_start + 1);
+                let faulty = MatmulDriver::new(&mut mesh)
+                    .matmul_with_fault(a.view(), w.view(), d.view(), &f);
+                for rr in 0..m {
+                    for cc in 0..dim {
+                        if cc != c {
+                            assert_eq!(
+                                faulty.at(rr, cc),
+                                golden.at(rr, cc),
+                                "PE({r},{c}) corrupted column {cc}"
+                            );
+                        } else if faulty.at(rr, cc) != golden.at(rr, cc) {
+                            exposed_any = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(exposed_any, "a bit-6 stationary-weight flip must expose somewhere");
+    }
+
+    #[test]
+    fn ws_weight_exposure_map_is_deterministic_and_bounded() {
+        let a = ws_weight_exposure_map(4, 8, 10, 0xF16F);
+        let b = ws_weight_exposure_map(4, 8, 10, 0xF16F);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(a.value(r, c), b.value(r, c), "deterministic per seed");
+                assert!((0.0..=1.0).contains(&a.value(r, c)));
+            }
+        }
     }
 
     #[test]

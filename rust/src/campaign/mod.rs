@@ -9,8 +9,12 @@ pub mod runner;
 
 pub use campaign::{
     campaign_sites, derived_input_seed, plan_one, run_campaign, run_input, signal_kinds,
-    CampaignResult, InputPlan, PlannedTrial, SiteBatch, TrialExecutor, TrialOutcome,
+    validate_dataflow_support, CampaignResult, InputPlan, PlannedTrial, SiteBatch,
+    TrialExecutor, TrialOutcome,
 };
-pub use fault::{sample_mesh_fault, sample_trial, TrialFault};
-pub use maps::{control_avf_map, exposure_map, weight_exposure_map, PeMap};
+pub use fault::{sample_fault, sample_mesh_fault, sample_trial, TrialFault};
+pub use maps::{
+    control_avf_map, exposure_map, exposure_map_for, weight_exposure_map,
+    ws_weight_exposure_map, PeMap,
+};
 pub use runner::{CrossLayerRunner, TileBackend};

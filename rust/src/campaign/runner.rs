@@ -14,11 +14,14 @@
 //! runner's persistent scratch.
 
 use super::fault::TrialFault;
-use crate::config::{OffloadScope, TileEngine};
+use crate::config::{Dataflow, OffloadScope, TileEngine};
 use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
 use crate::mat::{Mat, MatView, MatViewMut};
-use crate::mesh::driver::{os_matmul_cycles, tiled_matmul_os, MatmulDriver};
+use crate::mesh::driver::{
+    os_matmul_cycles, tile_grid, tiled_matmul_os, tiled_matmul_ws_with, ws_matmul_cycles,
+    MatmulDriver,
+};
 use crate::mesh::hdfit::InstrumentedMesh;
 
 use crate::mesh::{CycleCursor, DriverScratch, FaultPlan, Injectable, Mesh, MeshSim};
@@ -40,6 +43,17 @@ impl<'a> TileBackend<'a> {
             TileBackend::Mesh(m) => m.dim(),
             TileBackend::Hdfit(m) => m.dim(),
             TileBackend::Soc(s) => s.dim(),
+        }
+    }
+
+    /// The dataflow this backend's mesh executes — it decides the tile
+    /// grid, the operand shapes and the cycle model of every offload
+    /// (the SoC is OS-only; campaigns reject WS there at config level).
+    pub fn dataflow(&self) -> Dataflow {
+        match self {
+            TileBackend::Mesh(m) => m.dataflow(),
+            TileBackend::Hdfit(m) => m.dataflow(),
+            TileBackend::Soc(s) => s.dataflow(),
         }
     }
 
@@ -165,7 +179,8 @@ impl<'a> TileBackend<'a> {
     }
 
     /// Whole-layer offload (ablation D3): every tile through RTL, the
-    /// fault plan armed only on the target tile.
+    /// fault plan armed only on the target tile ([`tile_grid`]
+    /// coordinates of the backend's dataflow).
     pub fn run_layer(
         &mut self,
         a: MatView<i8>,
@@ -176,12 +191,28 @@ impl<'a> TileBackend<'a> {
         tile_j: usize,
     ) -> anyhow::Result<Mat<i32>> {
         // unsupported-backend check first: no tile work before the bail
+        if matches!(self, TileBackend::Soc(_)) {
+            anyhow::bail!("whole-layer offload through the SoC is not supported")
+        }
+        if self.dataflow() == Dataflow::WeightStationary {
+            // WS: the layer is a chain of M-panel passes per output
+            // column block; the plan arms only pass (tile_i, tile_j)
+            // and the corrupted psum column flows through the RTL
+            // suffix passes of the chain.
+            return Ok(match self {
+                TileBackend::Mesh(mesh) => {
+                    tiled_matmul_ws_with(*mesh, a, b, d, plan, (tile_i, tile_j))
+                }
+                TileBackend::Hdfit(mesh) => {
+                    tiled_matmul_ws_with(*mesh, a, b, d, plan, (tile_i, tile_j))
+                }
+                TileBackend::Soc(_) => unreachable!("checked above"),
+            });
+        }
         let mut c = match self {
             TileBackend::Mesh(mesh) => tiled_matmul_os(*mesh, a, b, d),
             TileBackend::Hdfit(mesh) => tiled_matmul_os(*mesh, a, b, d),
-            TileBackend::Soc(_) => {
-                anyhow::bail!("whole-layer offload through the SoC is not supported")
-            }
+            TileBackend::Soc(_) => unreachable!("checked above"),
         };
         // redo the faulty tile with the plan and splice. The tile gets
         // the full-K stream, exactly like every tile of tiled_matmul_os.
@@ -225,12 +256,25 @@ pub struct CrossLayerRunner<'a> {
     /// advances plus (full or resumed) tile runs — the campaign's
     /// `rtl_cycles_stepped` accounting.
     pub rtl_cycles: u64,
-    /// Reusable DIM x DIM result tile shared by every trial in a batch.
+    /// Reusable result tile shared by every trial in a batch (DIM x DIM
+    /// under OS; M x DIM under WS — reshaped in place).
     scratch: Mat<i32>,
     /// Reusable driver boundary buffers + drain counter.
     drv: DriverScratch,
     /// Golden trajectory snapshot shared by the batch's trials.
     cursor: CycleCursor,
+    /// WS only: the psum column entering the offloaded pass (bias plus
+    /// the chain prefix of k-tiles before the target), M x DIM.
+    ws_d: Mat<i32>,
+    /// WS only: the software golden output of the offloaded pass — the
+    /// reference the delta-splice compares the RTL column against.
+    ws_gold: Mat<i32>,
+    /// Which tile `ws_d`/`ws_gold` are valid for. Within a runner's
+    /// lifetime (one site batch) the tile operands are bit-identical
+    /// across trials — the same invariant the golden [`CycleCursor`]
+    /// rests on — so the software prefix/golden of a tile is computed
+    /// once per tile, not once per trial.
+    ws_key: Option<(usize, usize)>,
 }
 
 impl<'a> CrossLayerRunner<'a> {
@@ -259,6 +303,9 @@ impl<'a> CrossLayerRunner<'a> {
             scratch: Mat::zeros(dim, dim),
             drv: DriverScratch::new(dim),
             cursor: CycleCursor::new(),
+            ws_d: Mat::default(),
+            ws_gold: Mat::default(),
+            ws_key: None,
         }
     }
 
@@ -269,51 +316,23 @@ impl<'a> CrossLayerRunner<'a> {
         self.hit = false;
         self.exposed = false;
     }
-}
 
-impl GemmHook for CrossLayerRunner<'_> {
-    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
-        if call.site != self.trial.site || self.hit {
-            return false;
-        }
-        self.hit = true;
+    /// ENFOR-SA OS single-tile offload: the DIM-padded output tile is a
+    /// zero-copy window into the layer's buffers (full-K stream); the
+    /// RTL result drains into the runner's scratch tile and splices
+    /// back with the change-flag as the exposure signal.
+    #[allow(clippy::too_many_arguments)]
+    fn run_os_tile(
+        &mut self,
+        a_full: MatView<i8>,
+        b_full: MatView<i8>,
+        d_full: MatView<i32>,
+        (m, k, n): (usize, usize, usize),
+        ti: usize,
+        tj: usize,
+        out: &mut [i32],
+    ) {
         let dim = self.backend.dim();
-        let (m, k, n) = (call.m, call.k, call.n);
-        // clamp the sampled tile to this call's actual tile grid (shapes
-        // can differ between the sampling pass and this input)
-        let ti = self.trial.tile_i.min(m.div_ceil(dim) - 1);
-        let tj = self.trial.tile_j.min(n.div_ceil(dim) - 1);
-
-        // the layer's operands, viewed in place (flat row-major buffers)
-        let a_full = MatView::full(call.a, m, k);
-        let b_full = MatView::full(call.b, k, n);
-        let d_full = MatView::full(call.d, m, n);
-
-        // native full result first, computed directly into the layer's
-        // reusable accumulator — no per-trial allocation
-        out.resize(m * n, 0);
-        gemm_i8(m, k, n, call.a, call.b, call.d, out);
-
-        if self.scope == OffloadScope::Layer {
-            // ablation: run the ENTIRE layer through RTL. Cycle-resume
-            // does not apply here — every trial pays the whole layer by
-            // design, so the tile prefix is noise; the cycle accounting
-            // is the analytic tile count (each tile one full OS pass,
-            // plus the faulty tile's re-run).
-            let cf = self
-                .backend
-                .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
-                .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
-            let tiles = (m.div_ceil(dim) * n.div_ceil(dim)) as u64;
-            self.rtl_cycles += (tiles + 1) * os_matmul_cycles(dim, k);
-            self.exposed = cf.data() != &out[..];
-            out.copy_from_slice(cf.data());
-            return true;
-        }
-
-        // ENFOR-SA single-tile offload: the DIM-padded tile is a
-        // zero-copy window into the layer's buffers; the RTL result
-        // drains into the runner's scratch tile (no allocation)
         let (ri, cj) = (ti * dim, tj * dim);
         let a_t = a_full.sub(ri, 0, dim, k);
         let b_t = b_full.sub(0, cj, k, dim);
@@ -345,6 +364,171 @@ impl GemmHook for CrossLayerRunner<'_> {
         let mut target = MatViewMut::window(out, m, n, n, ri, cj, dim, dim);
         if target.splice_from(&self.scratch) {
             self.exposed = true;
+        }
+    }
+
+    /// ENFOR-SA WS single-tile offload: one weight-stationary pass — the
+    /// DIM x DIM weight tile `(ti, tj)` preloaded, the layer's full
+    /// M-row activation panel streamed through it, and the psum column
+    /// entering at the north edge equal to bias + the chain prefix
+    /// (k-tiles before `ti`), exactly the D stream the chained hardware
+    /// execution would feed this pass.
+    ///
+    /// The chain *suffix* (k-tiles after `ti`) is exactly linear in the
+    /// psum (a fault-free WS pass computes `A.W + D` in wrapping i32),
+    /// so the corrupted pass splices back as a delta against its
+    /// software golden: `out += rtl - gold`, element-wise, touching only
+    /// elements where the RTL pass diverged — the change-flag contract
+    /// of the OS splice, with identical masking semantics (corruption
+    /// confined to drain lanes beyond N is discarded, as the fixed drain
+    /// window of the real frontend would).
+    #[allow(clippy::too_many_arguments)]
+    fn run_ws_tile(
+        &mut self,
+        a_full: MatView<i8>,
+        b_full: MatView<i8>,
+        d_full: MatView<i32>,
+        (m, _k, n): (usize, usize, usize),
+        ti: usize,
+        tj: usize,
+        out: &mut [i32],
+    ) {
+        let dim = self.backend.dim();
+        let (ri, cj) = (ti * dim, tj * dim);
+        // operand windows: M x DIM activation panel, DIM x DIM weights
+        let a_t = a_full.sub(0, ri, m, dim);
+        let w_t = b_full.sub(ri, cj, dim, dim);
+        let ncols = dim.min(n - cj);
+        if self.ws_key != Some((ti, tj)) {
+            // first trial of this batch on this tile: compute the
+            // software prefix psum and pass golden once; later trials
+            // reuse them (tile operands are batch-invariant)
+            self.ws_key = Some((ti, tj));
+            // psum entering the pass: bias + every k-tile before the
+            // target — the D stream of the chained hardware execution
+            self.ws_d.reset(m, dim);
+            for r in 0..m {
+                let row = self.ws_d.row_mut(r);
+                for c in 0..ncols {
+                    let mut acc = d_full.at(r, cj + c);
+                    for kk in 0..ri {
+                        acc = acc.wrapping_add(
+                            a_full.at(r, kk) as i32 * b_full.at(kk, cj + c) as i32,
+                        );
+                    }
+                    row[c] = acc;
+                }
+            }
+            // software golden of THIS pass: prefix psum + tile MACs
+            self.ws_gold.reset(m, dim);
+            for r in 0..m {
+                for c in 0..dim {
+                    let mut acc = self.ws_d.at(r, c);
+                    for x in 0..dim {
+                        acc = acc.wrapping_add(a_t.at(r, x) as i32 * w_t.at(x, c) as i32);
+                    }
+                    self.ws_gold.set(r, c, acc);
+                }
+            }
+        }
+        if self.engine == TileEngine::CycleResume && self.backend.supports_cycle_resume() {
+            self.rtl_cycles += self.backend.run_tile_resumed(
+                a_t,
+                w_t,
+                self.ws_d.view(),
+                &self.trial.plan,
+                (ti, tj),
+                &mut self.cursor,
+                &mut self.scratch,
+                &mut self.drv,
+            );
+        } else {
+            match self.backend.run_tile_with(
+                a_t,
+                w_t,
+                self.ws_d.view(),
+                &self.trial.plan,
+                &mut self.scratch,
+                &mut self.drv,
+            ) {
+                Ok(cycles) => self.rtl_cycles += cycles,
+                Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
+            }
+        }
+        // delta-splice: native + (rtl - gold); untouched where equal
+        let mut changed = false;
+        for r in 0..m {
+            let rtl = self.scratch.row(r);
+            let gold = self.ws_gold.row(r);
+            let dst = &mut out[r * n + cj..r * n + cj + ncols];
+            for c in 0..ncols {
+                if rtl[c] != gold[c] {
+                    changed = true;
+                    dst[c] = dst[c].wrapping_add(rtl[c].wrapping_sub(gold[c]));
+                }
+            }
+        }
+        if changed {
+            self.exposed = true;
+        }
+    }
+}
+
+impl GemmHook for CrossLayerRunner<'_> {
+    fn gemm(&mut self, call: &GemmCall<'_>, out: &mut Vec<i32>) -> bool {
+        if call.site != self.trial.site || self.hit {
+            return false;
+        }
+        self.hit = true;
+        let dim = self.backend.dim();
+        let dataflow = self.backend.dataflow();
+        let (m, k, n) = (call.m, call.k, call.n);
+        // clamp the sampled tile to this call's actual tile grid (shapes
+        // can differ between the sampling pass and this input); the grid
+        // is the dataflow's ((M, N) output tiles for OS, (K, N) weight
+        // tiles for WS)
+        let (tiles_i, tiles_j) = tile_grid(dataflow, dim, m, k, n);
+        let ti = self.trial.tile_i.min(tiles_i - 1);
+        let tj = self.trial.tile_j.min(tiles_j - 1);
+
+        // the layer's operands, viewed in place (flat row-major buffers)
+        let a_full = MatView::full(call.a, m, k);
+        let b_full = MatView::full(call.b, k, n);
+        let d_full = MatView::full(call.d, m, n);
+
+        // native full result first, computed directly into the layer's
+        // reusable accumulator — no per-trial allocation
+        out.resize(m * n, 0);
+        gemm_i8(m, k, n, call.a, call.b, call.d, out);
+
+        if self.scope == OffloadScope::Layer {
+            // ablation: run the ENTIRE layer through RTL. Cycle-resume
+            // does not apply here — every trial pays the whole layer by
+            // design, so the tile prefix is noise; the cycle accounting
+            // is the analytic tile count (OS: each tile one full-K pass
+            // plus the faulty tile's re-run; WS: one M-stream pass per
+            // weight tile of the chain, the fault armed inline).
+            let cf = self
+                .backend
+                .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
+                .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
+            let tiles = (tiles_i * tiles_j) as u64;
+            self.rtl_cycles += match dataflow {
+                Dataflow::OutputStationary => (tiles + 1) * os_matmul_cycles(dim, k),
+                Dataflow::WeightStationary => tiles * ws_matmul_cycles(dim, m),
+            };
+            self.exposed = cf.data() != &out[..];
+            out.copy_from_slice(cf.data());
+            return true;
+        }
+
+        match dataflow {
+            Dataflow::OutputStationary => {
+                self.run_os_tile(a_full, b_full, d_full, (m, k, n), ti, tj, out)
+            }
+            Dataflow::WeightStationary => {
+                self.run_ws_tile(a_full, b_full, d_full, (m, k, n), ti, tj, out)
+            }
         }
         true
     }
@@ -549,6 +733,149 @@ mod tests {
         }
 
         let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r = CrossLayerRunner::with_engine(
+            &trials[0],
+            TileBackend::Mesh(&mut mesh),
+            OffloadScope::SingleTile,
+            TileEngine::CycleResume,
+        );
+        for (i, t) in trials.iter().enumerate() {
+            if i > 0 {
+                r.arm(t);
+            }
+            r.backend.reset();
+            let out = model.forward(&x, Some(&mut r));
+            assert_eq!(out, full[i].0, "trial {i} output");
+            assert_eq!(r.exposed, full[i].1, "trial {i} exposure");
+        }
+        assert!(
+            r.rtl_cycles < full_cycles,
+            "cycle-resume stepped {} cycles, full engine {}",
+            r.rtl_cycles,
+            full_cycles
+        );
+    }
+
+    #[test]
+    fn ws_golden_tile_offload_is_transparent() {
+        // A masked WS pass must reproduce the native forward pass
+        // bit-exactly: the delta-splice writes nothing when the RTL
+        // column equals its software golden.
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(81);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let mut mesh = Mesh::new(8, Dataflow::WeightStationary);
+        // valid-flip in the preload window of a PE with a zero weight:
+        // the stray psum copy is discarded by the fixed drain window
+        let trial = TrialFault::single(
+            GemmSiteId { layer: 1, ordinal: 0 },
+            0,
+            0,
+            Fault::new(7, 7, SignalKind::Valid, 0, 1),
+        );
+        let mut runner =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let out = model.forward(&x, Some(&mut runner));
+        assert!(runner.hit);
+        assert!(!runner.exposed);
+        assert_eq!(out, golden);
+        assert!(runner.rtl_cycles > 0, "the WS pass still ran in RTL");
+    }
+
+    #[test]
+    fn ws_acc_fault_high_bit_is_exposed() {
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(82);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let mut mesh = Mesh::new(8, Dataflow::WeightStationary);
+        // bit 30 of a psum register mid-stream: massive corruption
+        let trial = a_trial(20);
+        let mut runner =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let _ = model.forward(&x, Some(&mut runner));
+        assert!(runner.hit);
+        assert!(runner.exposed);
+    }
+
+    #[test]
+    fn ws_single_tile_and_layer_scope_agree_on_fault_effect() {
+        // the chain suffix is exactly linear in the psum, so splicing
+        // the single corrupted pass equals chaining it through the
+        // whole-layer RTL offload
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(83);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(25);
+
+        let mut mesh1 = Mesh::new(8, Dataflow::WeightStationary);
+        let mut r1 = CrossLayerRunner::new(
+            &trial,
+            TileBackend::Mesh(&mut mesh1),
+            OffloadScope::SingleTile,
+        );
+        let out1 = model.forward(&x, Some(&mut r1));
+
+        let mut mesh2 = Mesh::new(8, Dataflow::WeightStationary);
+        let mut r2 =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh2), OffloadScope::Layer);
+        let out2 = model.forward(&x, Some(&mut r2));
+
+        assert_eq!(r1.exposed, r2.exposed, "scopes agree on exposure");
+        assert_eq!(out1, out2, "both scopes yield identical faulty outputs");
+    }
+
+    #[test]
+    fn ws_hdfit_backend_reproduces_mesh_backend() {
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(84);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(33);
+
+        let mut mesh = Mesh::new(8, Dataflow::WeightStationary);
+        let mut r1 = CrossLayerRunner::new(
+            &trial,
+            TileBackend::Mesh(&mut mesh),
+            OffloadScope::SingleTile,
+        );
+        let out_mesh = model.forward(&x, Some(&mut r1));
+
+        let mut hm = InstrumentedMesh::with_dataflow(8, Dataflow::WeightStationary);
+        let mut r2 = CrossLayerRunner::new(
+            &trial,
+            TileBackend::Hdfit(&mut hm),
+            OffloadScope::SingleTile,
+        );
+        let out_hdfit = model.forward(&x, Some(&mut r2));
+        assert_eq!(r1.exposed, r2.exposed);
+        assert_eq!(out_mesh, out_hdfit);
+    }
+
+    #[test]
+    fn ws_cycle_resume_runner_matches_full_runners_and_steps_fewer_cycles() {
+        // the cycle-resume contract on the WS tile path: bit-identical
+        // to fresh full-engine runners, strictly fewer RTL cycles once
+        // trials share a weight tile
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(85);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trials = [a_trial(2), a_trial(20), a_trial(33)];
+
+        let mut full = Vec::new();
+        let mut full_cycles = 0u64;
+        for t in &trials {
+            let mut mesh = Mesh::new(8, Dataflow::WeightStationary);
+            let mut r = CrossLayerRunner::new(
+                t,
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+            );
+            let out = model.forward(&x, Some(&mut r));
+            full_cycles += r.rtl_cycles;
+            full.push((out, r.exposed));
+        }
+
+        let mut mesh = Mesh::new(8, Dataflow::WeightStationary);
         let mut r = CrossLayerRunner::with_engine(
             &trials[0],
             TileBackend::Mesh(&mut mesh),

@@ -8,6 +8,13 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Systolic dataflow of the Gemmini mesh.
+///
+/// A first-class campaign axis (CLI `--dataflow os|ws`, JSON
+/// `mesh.dataflow`): every scenario, trial engine, tile engine and
+/// worker sharding runs end-to-end under either dataflow on the mesh
+/// backends. Only the whole-SoC backend is OS-only (its controller FSM
+/// implements the OS schedule) — WS there is a config-level error, not
+/// a silent override (ROADMAP "Dataflow-generic campaigns").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Dataflow {
     /// Output-stationary: accumulators stay in the PEs, operands stream.
@@ -15,6 +22,8 @@ pub enum Dataflow {
     #[default]
     OutputStationary,
     /// Weight-stationary: weights preloaded, partial sums flow down.
+    /// Campaign trials offload one DIM x DIM weight tile and stream the
+    /// layer's full M-row activation panel through it.
     WeightStationary,
 }
 

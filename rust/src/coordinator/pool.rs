@@ -14,8 +14,8 @@
 //! reproducibility claims and pinned by `rust/tests/prop_coordinator.rs`.
 
 use crate::campaign::campaign::{
-    campaign_sites, derived_input_seed, plan_one, signal_kinds, CampaignResult, InputPlan,
-    TrialExecutor,
+    campaign_sites, derived_input_seed, plan_one, signal_kinds, validate_dataflow_support,
+    CampaignResult, InputPlan, TrialExecutor,
 };
 use crate::config::{CampaignConfig, MeshConfig};
 use crate::dnn::Model;
@@ -40,18 +40,21 @@ pub fn run_parallel(
     progress: Option<Arc<Progress>>,
 ) -> Result<CampaignResult> {
     let t0 = Instant::now();
+    validate_dataflow_support(mesh_cfg, cfg)?;
     let sites = campaign_sites(model);
     let kinds = signal_kinds(cfg);
     let n_sites = sites.len() as u64;
     let total_units = cfg.inputs * n_sites;
     let workers = cfg.workers.clamp(1, (total_units as usize).max(1));
-    let mut merged = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
+    let mut merged =
+        CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
     if workers <= 1 {
         let mut exec = TrialExecutor::new(mesh_cfg, cfg);
         for input_idx in 0..cfg.inputs {
             let mut rng = Rng::new(derived_input_seed(cfg.seed, input_idx));
-            let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg.dim, &mut rng);
-            let mut part = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
+            let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg, &mut rng);
+            let mut part =
+                CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
             for batch in &plan.batches {
                 exec.run_batch(model, &plan, batch, &mut part);
             }
@@ -81,7 +84,8 @@ pub fn run_parallel(
                 let progress = progress.clone();
                 handles.push(scope.spawn(move || -> Result<CampaignResult> {
                     let mut exec = TrialExecutor::new(mesh_cfg, cfg);
-                    let mut part = CampaignResult::empty(&model.name, cfg.backend, cfg.scenario);
+                    let mut part =
+                CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
                     loop {
                         let unit = next.fetch_add(1, Ordering::Relaxed);
                         if unit >= total_units {
@@ -101,7 +105,7 @@ pub fn run_parallel(
                                         cfg,
                                         sites,
                                         kinds,
-                                        mesh_cfg.dim,
+                                        mesh_cfg,
                                         &mut rng,
                                     ));
                                     *slot = Some(Arc::clone(&p));

@@ -19,6 +19,16 @@
 //! Python never runs on the request path: once `make artifacts` has produced
 //! `artifacts/*.hlo.txt`, the binary is self-contained.
 //!
+//! Campaigns are **dataflow-generic**: the same scenario set, trial
+//! engines, tile engines and worker shardings run end-to-end on the
+//! output-stationary mesh (the paper's configuration, default) and on
+//! the weight-stationary mesh ([`config::Dataflow`], `--dataflow`).
+//! Under OS a trial offloads one output tile with the full-K stream;
+//! under WS it offloads one preloaded DIM x DIM weight tile with the
+//! full M-row activation panel streamed through it. Only the whole-SoC
+//! backend stays OS-only (its controller FSM owns the OS schedule —
+//! WS there is a config error, never a silent override).
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -43,6 +53,17 @@
 //!     Fault::new(3, 4, SignalKind::Weight, 3, 10),
 //! ]);
 //! let _ = MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), b.view(), d.view(), &mbu);
+//!
+//! // a whole statistical campaign, here on the weight-stationary mesh:
+//! // fixed seeds reproduce identical fault lists and outcome counts
+//! use enfor_sa::campaign::run_campaign;
+//! use enfor_sa::config::{CampaignConfig, Dataflow, MeshConfig};
+//! use enfor_sa::dnn::models;
+//! let model = models::quicknet(1);
+//! let mesh_cfg = MeshConfig { dim: 8, dataflow: Dataflow::WeightStationary };
+//! let cfg = CampaignConfig { faults_per_layer: 4, inputs: 1, ..Default::default() };
+//! let result = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+//! println!("{}: AVF {:.4}%", result.model, result.vf() * 100.0);
 //! ```
 
 // Style lints that fight cycle-accurate, index-addressed simulator code

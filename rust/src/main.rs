@@ -32,6 +32,24 @@
 //!                         cycle onward
 //! ```
 //!
+//! ... a mesh dataflow via `--dataflow` (JSON `mesh.dataflow`):
+//!
+//! ```text
+//! --dataflow os           output-stationary (default; the paper's
+//!                         configuration): accumulators stay in the
+//!                         PEs, weights stream west->east, activations
+//!                         north->south; trials offload one output
+//!                         tile with the full-K stream
+//! --dataflow ws           weight-stationary: DIM x DIM weight tiles
+//!                         preloaded, activations stream west->east,
+//!                         psums flow north->south; trials offload one
+//!                         weight tile with the full M-row activation
+//!                         panel. Every scenario / engine / backend
+//!                         knob composes with it, except the whole-SoC
+//!                         backend (OS-only controller FSM — WS there
+//!                         is a config error, never a silent override)
+//! ```
+//!
 //! ... a trial engine via `--trial-engine site-resume|full-forward`
 //! (JSON `campaign.trial_engine`), and an RTL tile engine via
 //! `--tile-engine` (JSON `campaign.tile_engine`):
@@ -51,7 +69,9 @@
 
 use anyhow::{bail, Result};
 use enfor_sa::benchkit;
-use enfor_sa::campaign::{control_avf_map, exposure_map, weight_exposure_map};
+use enfor_sa::campaign::{
+    control_avf_map, exposure_map_for, weight_exposure_map, ws_weight_exposure_map,
+};
 use enfor_sa::config::{
     Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
     TrialEngine,
@@ -265,9 +285,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
         "campaign: model={name} backend={} engine={} tile-engine={} scenario={} dim={} \
-         inputs={} faults/layer={}",
-        cc.backend, cc.engine, cc.tile_engine, cc.scenario, mesh_cfg.dim, cc.inputs,
-        cc.faults_per_layer
+         dataflow={} inputs={} faults/layer={}",
+        cc.backend, cc.engine, cc.tile_engine, cc.scenario, mesh_cfg.dim, mesh_cfg.dataflow,
+        cc.inputs, cc.faults_per_layer
     );
     let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
     let (lo, hi) = r.vuln.ci95();
@@ -294,6 +314,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         let j = Json::obj(vec![
             ("model", Json::str(r.model.clone())),
             ("backend", Json::str(r.backend.to_string())),
+            ("dataflow", Json::str(r.dataflow.to_string())),
             ("scenario", Json::str(r.scenario.to_string())),
             ("tile_engine", Json::str(cc.tile_engine.to_string())),
             ("trials", Json::num(r.vuln.trials as f64)),
@@ -369,9 +390,10 @@ fn cmd_suite(args: &Args) -> Result<()> {
     // per-scenario outcome rows (masked / exposed / SDC) for the RTL arm
     for r in &rows {
         println!(
-            "scenario {} [{}]: masked={} exposed={} sdc={}",
+            "scenario {} [{} {}]: masked={} exposed={} sdc={}",
             r.rtl.scenario,
             r.model,
+            r.rtl.dataflow,
             r.rtl.masked_trials,
             r.rtl.exposed_trials,
             r.rtl.vuln.critical
@@ -393,20 +415,36 @@ fn cmd_maps(args: &Args) -> Result<()> {
             let model = models::by_name(&model_name, cc.seed)
                 .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
             for kind in [SignalKind::Valid, SignalKind::Propag] {
-                // model-level AVF map (the paper's Fig. 5a metric) ...
-                let map =
-                    control_avf_map(&model, 0, mesh_cfg.dim, trials, cc.seed, kind);
+                // model-level AVF map (the paper's Fig. 5a metric) on
+                // the configured dataflow ...
+                let map = control_avf_map(&model, 0, &mesh_cfg, trials, cc.seed, kind);
                 println!("{}", format_pe_map(&map));
                 json_maps.push(pe_map_json(&map));
                 // ... plus the tile-level exposure map, which shows the
                 // row gradient even at small trial budgets
-                let emap = exposure_map(mesh_cfg.dim, 27, kind, trials * 4, cc.seed);
+                let emap = exposure_map_for(
+                    mesh_cfg.dataflow,
+                    mesh_cfg.dim,
+                    27,
+                    kind,
+                    trials * 4,
+                    cc.seed,
+                );
                 println!("{}", format_pe_map(&emap));
                 json_maps.push(pe_map_json(&emap));
             }
         }
         "weight" => {
-            let map = weight_exposure_map(mesh_cfg.dim, 27, trials, cc.seed);
+            let map = match mesh_cfg.dataflow {
+                Dataflow::OutputStationary => {
+                    weight_exposure_map(mesh_cfg.dim, 27, trials, cc.seed)
+                }
+                // WS streams M activation rows; 27 rows keeps the map
+                // budget comparable to the OS K=27 stream
+                Dataflow::WeightStationary => {
+                    ws_weight_exposure_map(mesh_cfg.dim, 27, trials, cc.seed)
+                }
+            };
             println!("{}", format_pe_map(&map));
             json_maps.push(pe_map_json(&map));
         }

@@ -55,6 +55,35 @@ pub fn ws_matmul_cycles(dim: usize, m: usize) -> u64 {
     ((2 * dim - 1) + (m + 2 * dim - 2)) as u64
 }
 
+/// Cycle count of one tile pass under `dataflow` — the dataflow-generic
+/// cycle model every campaign layer samples from (ROADMAP
+/// "Dataflow-generic campaigns"). An OS pass streams the K reduction
+/// ([`os_matmul_cycles`]); a WS pass streams the M activation rows
+/// through a preloaded weight tile ([`ws_matmul_cycles`]), so the two
+/// dataflows depend on *different* operand dimensions.
+pub fn matmul_cycles(dataflow: Dataflow, dim: usize, m: usize, k: usize) -> u64 {
+    match dataflow {
+        Dataflow::OutputStationary => os_matmul_cycles(dim, k),
+        Dataflow::WeightStationary => ws_matmul_cycles(dim, m),
+    }
+}
+
+/// The `(tiles_i, tiles_j)` grid an `(M x K) . (K x N)` GEMM decomposes
+/// into under `dataflow` — the space the campaign samples an offload
+/// tile from.
+///
+/// * OS: output tiles — `tile_i` indexes M, `tile_j` indexes N; every
+///   tile receives the full K stream.
+/// * WS: **weight** tiles — `tile_i` indexes K (which DIM x DIM weight
+///   tile is preloaded), `tile_j` indexes N; every pass streams the
+///   full M-row activation panel.
+pub fn tile_grid(dataflow: Dataflow, dim: usize, m: usize, k: usize, n: usize) -> (usize, usize) {
+    match dataflow {
+        Dataflow::OutputStationary => (m.div_ceil(dim), n.div_ceil(dim)),
+        Dataflow::WeightStationary => (k.div_ceil(dim), n.div_ceil(dim)),
+    }
+}
+
 /// The per-dataflow operand streams of a [`Schedule`] (all zero-copy
 /// views/feeders over the caller's flat buffers).
 enum Streams<'a> {
@@ -228,7 +257,7 @@ impl<'a> Schedule<'a> {
     /// Absorb cycle `t`'s south-edge traffic into `(out, taken)`: OS
     /// un-staircases flush rows (bottom row first, so rows are written
     /// in reverse), WS collects completed psums in stream order.
-    fn drain(&self, t: u64, step_out: &StepOutput, out: &mut Mat<i32>, taken: &mut [usize]) {
+    pub fn drain(&self, t: u64, step_out: &StepOutput, out: &mut Mat<i32>, taken: &mut [usize]) {
         if t < self.drain_start() {
             return;
         }
@@ -622,6 +651,84 @@ pub fn tiled_matmul_os<S: Injectable>(
     c
 }
 
+/// Reference tiled matmul over a weight-stationary mesh — the WS peer
+/// of [`tiled_matmul_os`]: an arbitrary `(M x K) . (K x N)` decomposes
+/// into DIM-wide output column blocks, each computed by a **chain** of
+/// WS passes — one per DIM x DIM weight tile of the K reduction — with
+/// the psum output of pass `ki` feeding the next pass's north-edge D
+/// stream (a fault-free WS pass computes exactly `A.W + D` in wrapping
+/// i32, so the chain is exact). Every operand is a zero-copy,
+/// zero-padded [`MatView`] window; the finished column splices back
+/// with one strided copy.
+pub fn tiled_matmul_ws<S: Injectable>(
+    mesh: &mut S,
+    a: MatView<i8>,
+    b: MatView<i8>,
+    d: MatView<i32>,
+) -> Mat<i32> {
+    tiled_matmul_ws_with(mesh, a, b, d, &FaultPlan::empty(), (usize::MAX, usize::MAX))
+}
+
+/// [`tiled_matmul_ws`] with `plan` armed on exactly ONE pass of the
+/// chain — `target = (k_tile, n_tile)` in [`tile_grid`] coordinates —
+/// the whole-layer-offload shape of the WS campaign: the corrupted psum
+/// column flows through the (fault-free, hence exactly linear) RTL
+/// suffix passes, so the corruption reaches the layer output precisely
+/// as the chained hardware execution would expose it.
+pub fn tiled_matmul_ws_with<S: Injectable>(
+    mesh: &mut S,
+    a: MatView<i8>,
+    b: MatView<i8>,
+    d: MatView<i32>,
+    plan: &FaultPlan,
+    target: (usize, usize),
+) -> Mat<i32> {
+    let dim = mesh.dim();
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let empty = FaultPlan::empty();
+    let mut c = Mat::zeros(m, n);
+    let mut psum: Mat<i32> = Mat::default();
+    let mut next: Mat<i32> = Mat::default();
+    let mut tj = 0;
+    while tj < n {
+        // the psum chain of column block tj starts at the bias column
+        psum.reset(m, dim);
+        let ncols = dim.min(n - tj);
+        for r in 0..m {
+            let row = psum.row_mut(r);
+            for col in 0..ncols {
+                row[col] = d.at(r, tj + col);
+            }
+        }
+        let mut ti = 0;
+        while ti < k {
+            let armed = if (ti / dim, tj / dim) == target { plan } else { &empty };
+            let a_panel = a.sub(0, ti, m, dim);
+            let w_tile = b.sub(ti, tj, dim, dim);
+            MatmulDriver::new(mesh).matmul_into(a_panel, w_tile, psum.view(), armed, &mut next);
+            std::mem::swap(&mut psum, &mut next);
+            ti += dim;
+        }
+        c.window_mut(0, tj, m, dim).splice_from(&psum);
+        tj += dim;
+    }
+    c
+}
+
+/// Dataflow-generic tiled matmul: dispatches on the mesh's configured
+/// dataflow ([`tiled_matmul_os`] / [`tiled_matmul_ws`]).
+pub fn tiled_matmul<S: Injectable>(
+    mesh: &mut S,
+    a: MatView<i8>,
+    b: MatView<i8>,
+    d: MatView<i32>,
+) -> Mat<i32> {
+    match mesh.dataflow() {
+        Dataflow::OutputStationary => tiled_matmul_os(mesh, a, b, d),
+        Dataflow::WeightStationary => tiled_matmul_ws(mesh, a, b, d),
+    }
+}
+
 /// Pure-software golden matmul (the oracle for all mesh tests; the same
 /// arithmetic as the Pallas kernel's ref.py).
 pub fn gold_matmul(a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Mat<i32> {
@@ -743,6 +850,80 @@ mod tests {
             let c = tiled_matmul_os(&mut mesh, a.view(), b.view(), d.view());
             assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "m={m} k={k} n={n}");
         }
+    }
+
+    #[test]
+    fn tiled_matmul_ws_matches_gold_on_awkward_shapes() {
+        // the WS chain (psum of pass ki feeds pass ki+1) must equal the
+        // software gold for every padding case: ragged M, K and N
+        let mut rng = Rng::new(50);
+        let mut mesh = Mesh::new(4, Dataflow::WeightStationary);
+        for &(m, k, n) in &[(4usize, 4usize, 4usize), (8, 4, 8), (5, 7, 9), (1, 3, 2), (13, 9, 5)]
+        {
+            let a = rng.mat_i8(m, k);
+            let b = rng.mat_i8(k, n);
+            let d = rng.mat_i32(m, n, 500);
+            let c = tiled_matmul_ws(&mut mesh, a.view(), b.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), b.view(), d.view()), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn tiled_matmul_dispatches_on_mesh_dataflow() {
+        let mut rng = Rng::new(51);
+        let a = rng.mat_i8(6, 7);
+        let b = rng.mat_i8(7, 5);
+        let d = rng.mat_i32(6, 5, 100);
+        let gold = gold_matmul(a.view(), b.view(), d.view());
+        let mut os = Mesh::new(4, Dataflow::OutputStationary);
+        assert_eq!(tiled_matmul(&mut os, a.view(), b.view(), d.view()), gold);
+        let mut ws = Mesh::new(4, Dataflow::WeightStationary);
+        assert_eq!(tiled_matmul(&mut ws, a.view(), b.view(), d.view()), gold);
+    }
+
+    #[test]
+    fn ws_chain_fault_on_target_pass_corrupts_output() {
+        use crate::mesh::signal::SignalKind;
+        let dim = 4;
+        let mut rng = Rng::new(52);
+        let (m, k, n) = (6usize, 8usize, 8usize);
+        let a = rng.mat_i8(m, k);
+        let b = rng.mat_i8(k, n);
+        let d = rng.mat_i32(m, n, 100);
+        let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+        let golden = tiled_matmul_ws(&mut mesh, a.view(), b.view(), d.view());
+        assert_eq!(golden, gold_matmul(a.view(), b.view(), d.view()));
+        // a high Acc (psum pipeline) bit while the valid wave covers the
+        // southern consumer of PE(1,1) — the corrupted psum is consumed
+        // and drains; only column block 1 can be corrupted (the chain
+        // never crosses column blocks). The wave reaches row 2 of lane 1
+        // at preload + 1 (lane skew) + 2 (rows), i.e. preload + 3.
+        let cyc = (2 * dim - 1) as u64 + 4;
+        let plan = FaultPlan::single(Fault::new(1, 1, SignalKind::Acc, 30, cyc));
+        let faulty =
+            tiled_matmul_ws_with(&mut mesh, a.view(), b.view(), d.view(), &plan, (1, 1));
+        assert_ne!(golden, faulty);
+        for r in 0..m {
+            for c in 0..dim {
+                assert_eq!(faulty.at(r, c), golden.at(r, c), "column block 0 untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_model_and_tile_grid_dispatch_per_dataflow() {
+        assert_eq!(
+            matmul_cycles(Dataflow::OutputStationary, 8, 999, 16),
+            os_matmul_cycles(8, 16),
+            "OS streams K; M is irrelevant"
+        );
+        assert_eq!(
+            matmul_cycles(Dataflow::WeightStationary, 8, 24, 999),
+            ws_matmul_cycles(8, 24),
+            "WS streams M; K is irrelevant"
+        );
+        assert_eq!(tile_grid(Dataflow::OutputStationary, 8, 100, 27, 16), (13, 2));
+        assert_eq!(tile_grid(Dataflow::WeightStationary, 8, 100, 27, 16), (4, 2));
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub enum Slot {
     WireP = 2,
     WireV = 3,
     WireDIn = 4,
+    /// The northern PE's `out_c` wire (OS) / psum wire (WS).
     WireOutCNorth = 5,
     RegAcc = 6,
     RegD = 7,
@@ -40,9 +41,21 @@ pub enum Slot {
     RegB = 9,
     RegPropag = 10,
     RegValid = 11,
+    /// The stationary weight register — assigned only by the WS step
+    /// (the OS PE has no such register, so OS cycles never execute this
+    /// hook).
+    RegW = 12,
 }
 
-pub const SLOTS_PER_PE: u32 = 12;
+/// Distinct instrumentation slot ids per PE — the `sig_id` stride.
+pub const SLOTS_PER_PE: u32 = 13;
+/// Hooks an OS cycle executes per PE (12 of the 13 slots: no stationary
+/// weight register) — the same order as the paper's 632 assignments for
+/// an 8x8 mesh.
+pub const OS_HOOKS_PER_PE: u32 = 12;
+/// Hooks a WS cycle executes per PE (all 13 slots: the WS PE re-latches
+/// its stationary weight register every cycle, verilator-style).
+pub const WS_HOOKS_PER_PE: u32 = 13;
 
 #[inline]
 fn sig_id(dim: usize, r: usize, c: usize, slot: Slot) -> u32 {
@@ -57,8 +70,10 @@ pub struct HdfitFault {
     pub cycle: u64,
 }
 
-/// The instrumented mesh. Output-stationary only (the configuration the
-/// paper benchmarks HDFIT in).
+/// The instrumented mesh. Both dataflows are instrumented (the paper
+/// benchmarks HDFIT in the OS configuration; the WS step exists so
+/// dataflow-generic campaigns can run the same scenario set on the
+/// instrumented backend).
 pub struct InstrumentedMesh {
     pub base: Mesh,
     /// Armed hook-faults — one per planned fault (HDFIT configures its
@@ -76,8 +91,14 @@ pub struct InstrumentedMesh {
 
 impl InstrumentedMesh {
     pub fn new(dim: usize) -> Self {
+        Self::with_dataflow(dim, Dataflow::OutputStationary)
+    }
+
+    /// Instrumented mesh for an explicit dataflow (the campaign
+    /// executor's constructor — the dataflow comes from `MeshConfig`).
+    pub fn with_dataflow(dim: usize, dataflow: Dataflow) -> Self {
         InstrumentedMesh {
-            base: Mesh::new(dim, Dataflow::OutputStationary),
+            base: Mesh::new(dim, dataflow),
             armed: Vec::new(),
             hook_calls: 0,
             pending_direct: Vec::new(),
@@ -87,9 +108,12 @@ impl InstrumentedMesh {
     /// Translate an ENFOR-SA fault into the equivalent HDFIT fault.
     ///
     /// Wire-path faults map to the corresponding wire hook at the same
-    /// cycle. Storage faults (`Acc`, `DReg`) map to the register's
-    /// *assignment* in the previous cycle (an SEU latched at the end of
-    /// cycle t-1 is first observed at cycle t).
+    /// cycle. Storage faults map to the register's *assignment* in the
+    /// previous cycle (an SEU latched at the end of cycle t-1 is first
+    /// observed at cycle t): `Acc`/`DReg` on both dataflows, plus the
+    /// stationary `Weight` register under WS — where `Act` instead rides
+    /// the horizontal a-path wire (the logical-operand remap of
+    /// `mesh::inject`).
     pub fn translate(&self, f: &Fault) -> Option<HdfitFault> {
         if f.persistence != super::inject::Persistence::Transient {
             // stuck-at faults are applied through the wrapper path
@@ -98,9 +122,17 @@ impl InstrumentedMesh {
             return None;
         }
         let dim = self.base.dim();
+        let ws = self.base.dataflow() == Dataflow::WeightStationary;
         let (r, c) = (f.addr.row, f.addr.col);
         let (slot, cycle) = match f.addr.kind {
+            SignalKind::Weight if ws => {
+                if f.cycle == 0 {
+                    return None; // no previous assignment to instrument
+                }
+                (Slot::RegW, f.cycle - 1)
+            }
             SignalKind::Weight => (Slot::WireA, f.cycle),
+            SignalKind::Act if ws => (Slot::WireA, f.cycle),
             SignalKind::Act => (Slot::WireB, f.cycle),
             SignalKind::Propag => (Slot::WireP, f.cycle),
             SignalKind::Valid => (Slot::WireV, f.cycle),
@@ -240,6 +272,91 @@ impl InstrumentedMesh {
         }
         self.base.cycle += 1;
     }
+
+    /// Fully instrumented WS step: identical dataflow to `Mesh::step_ws`,
+    /// with every assignment routed through a hook — including the
+    /// stationary weight register, which the verilated model re-latches
+    /// every cycle (that per-cycle assignment is what lets a `RegW` hook
+    /// at cycle t-1 express a persistent weight SEU observed from t).
+    fn step_ws_instrumented(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
+        let dim = self.base.dim();
+        for r in (0..dim).rev() {
+            for c in (0..dim).rev() {
+                let i = r * dim + c;
+                let raw_a = if c == 0 {
+                    inp.west_a[r]
+                } else {
+                    self.base.reg_a[i - 1]
+                };
+                let a_in = self.hook8(sig_id(dim, r, c, Slot::WireA), raw_a);
+                let raw_b = if r == 0 {
+                    inp.north_b[c]
+                } else {
+                    self.base.reg_b[i - dim]
+                };
+                let b_in = self.hook8(sig_id(dim, r, c, Slot::WireB), raw_b);
+                let raw_p = if r == 0 {
+                    inp.north_propag[c]
+                } else {
+                    self.base.reg_propag[i - dim]
+                };
+                let p_in = self.hookb(sig_id(dim, r, c, Slot::WireP), raw_p);
+                let raw_v = if r == 0 {
+                    inp.north_valid[c]
+                } else {
+                    self.base.reg_valid[i - dim]
+                };
+                let v_in = self.hookb(sig_id(dim, r, c, Slot::WireV), raw_v);
+                // d-chain input: the boundary port on the north row, the
+                // PE's own inter-PE register inside (as in Mesh::step_ws)
+                let raw_d = if r == 0 {
+                    inp.north_d[c]
+                } else {
+                    self.base.reg_d[i]
+                };
+                let d_in = self.hook32(sig_id(dim, r, c, Slot::WireDIn), raw_d);
+                // psum input: the northern accumulator, pre-edge (rows
+                // walk bottom-up, so row r-1 is not yet rewritten)
+                let raw_ps = if r == 0 {
+                    inp.north_d[c]
+                } else {
+                    self.base.acc[i - dim]
+                };
+                let ps_in = self.hook32(sig_id(dim, r, c, Slot::WireOutCNorth), raw_ps);
+
+                let w_old = self.base.reg_w[i];
+                let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
+                if r == dim - 1 {
+                    if p_in {
+                        out.south_c[c] = Some(w_old as i32);
+                    } else if v_in {
+                        out.south_psum[c] = Some(ps);
+                    }
+                }
+
+                // sequential assignments (each one instrumented):
+                let w_next = if p_in { (d_in & 0xff) as i8 } else { w_old };
+                self.base.reg_w[i] = self.hook8(sig_id(dim, r, c, Slot::RegW), w_next);
+                let acc_next = if p_in {
+                    d_in
+                } else if v_in {
+                    ps
+                } else {
+                    self.base.acc[i]
+                };
+                self.base.acc[i] = self.hook32(sig_id(dim, r, c, Slot::RegAcc), acc_next);
+                let d_next = if r == 0 { d_in } else { ps_in };
+                self.base.reg_d[i] = self.hook32(sig_id(dim, r, c, Slot::RegD), d_next);
+                self.base.reg_a[i] = self.hook8(sig_id(dim, r, c, Slot::RegA), a_in);
+                self.base.reg_b[i] = self.hook8(sig_id(dim, r, c, Slot::RegB), b_in);
+                self.base.reg_propag[i] =
+                    self.hookb(sig_id(dim, r, c, Slot::RegPropag), p_in);
+                self.base.reg_valid[i] =
+                    self.hookb(sig_id(dim, r, c, Slot::RegValid), v_in);
+            }
+        }
+        self.base.cycle += 1;
+    }
 }
 
 impl MeshSim for InstrumentedMesh {
@@ -248,7 +365,7 @@ impl MeshSim for InstrumentedMesh {
     }
 
     fn dataflow(&self) -> Dataflow {
-        Dataflow::OutputStationary
+        self.base.dataflow()
     }
 
     fn cycle(&self) -> u64 {
@@ -256,7 +373,10 @@ impl MeshSim for InstrumentedMesh {
     }
 
     fn step(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
-        self.step_os_instrumented(inp, out);
+        match self.base.dataflow() {
+            Dataflow::OutputStationary => self.step_os_instrumented(inp, out),
+            Dataflow::WeightStationary => self.step_ws_instrumented(inp, out),
+        }
     }
 
     fn reset(&mut self) {
@@ -358,16 +478,23 @@ mod tests {
         mesh.step(&inp, &mut out);
         assert_eq!(
             mesh.hook_calls,
-            (dim * dim) as u64 * SLOTS_PER_PE as u64,
-            "12 hooks per PE per cycle"
+            (dim * dim) as u64 * OS_HOOKS_PER_PE as u64,
+            "12 hooks per PE per OS cycle"
+        );
+        let mut ws = InstrumentedMesh::with_dataflow(dim, Dataflow::WeightStationary);
+        ws.step(&inp, &mut out);
+        assert_eq!(
+            ws.hook_calls,
+            (dim * dim) as u64 * WS_HOOKS_PER_PE as u64,
+            "13 hooks per PE per WS cycle (the stationary weight register)"
         );
     }
 
     #[test]
     fn assignment_count_matches_paper_order() {
-        // Paper: 8x8 mesh => 632 instrumented assignments. Ours: 768.
+        // Paper: 8x8 mesh => 632 instrumented assignments. Ours: 768 OS.
         let mesh = InstrumentedMesh::new(8);
-        let per_cycle = (mesh.dim() * mesh.dim()) as u64 * SLOTS_PER_PE as u64;
+        let per_cycle = (mesh.dim() * mesh.dim()) as u64 * OS_HOOKS_PER_PE as u64;
         assert_eq!(per_cycle, 768);
     }
 
@@ -384,6 +511,71 @@ mod tests {
         assert_eq!(h.sig_id % SLOTS_PER_PE, Slot::RegAcc as u32);
         let f0 = Fault::new(2, 3, SignalKind::Acc, 9, 0);
         assert!(mesh.translate(&f0).is_none());
+    }
+
+    #[test]
+    fn ws_instrumented_mesh_matches_gold() {
+        let mut rng = Rng::new(23);
+        for &(dim, m) in &[(2usize, 2usize), (4, 4), (4, 10), (8, 8), (8, 1)] {
+            let mut mesh = InstrumentedMesh::with_dataflow(dim, Dataflow::WeightStationary);
+            let a = rng.mat_i8(m, dim);
+            let w = rng.mat_i8(dim, dim);
+            let d = rng.mat_i32(m, dim, 1 << 10);
+            let c = MatmulDriver::new(&mut mesh).matmul(a.view(), w.view(), d.view());
+            assert_eq!(c, gold_matmul(a.view(), w.view(), d.view()), "dim={dim} m={m}");
+        }
+    }
+
+    #[test]
+    fn ws_translate_maps_weight_to_the_stationary_register() {
+        let mesh = InstrumentedMesh::with_dataflow(8, Dataflow::WeightStationary);
+        // WS Weight = the stationary register: assignment hook at t-1
+        let f = Fault::new(2, 3, SignalKind::Weight, 1, 40);
+        let h = mesh.translate(&f).unwrap();
+        assert_eq!(h.cycle, 39, "stationary weight SEU latched the cycle before");
+        assert_eq!(h.sig_id % SLOTS_PER_PE, Slot::RegW as u32);
+        // ... with the cycle-0 fallback to the wrapper path
+        assert!(mesh.translate(&Fault::new(2, 3, SignalKind::Weight, 1, 0)).is_none());
+        // WS Act rides the horizontal a-path wire at the onset cycle
+        let f = Fault::new(2, 3, SignalKind::Act, 5, 40);
+        let h = mesh.translate(&f).unwrap();
+        assert_eq!(h.cycle, 40);
+        assert_eq!(h.sig_id % SLOTS_PER_PE, Slot::WireA as u32);
+        // first_effect_cycle follows the shifted hook
+        let plan = FaultPlan::single(Fault::new(1, 1, SignalKind::Weight, 0, 17));
+        assert_eq!(mesh.first_effect_cycle(&plan), 16);
+    }
+
+    /// The accuracy-validation invariant extended to WS: for every
+    /// signal kind and a sweep of cycles, the instrumented WS mesh must
+    /// reproduce the ENFOR-SA wrapper's faulty outputs bit-exactly.
+    #[test]
+    fn ws_instrumented_matches_enforsa_under_faults() {
+        let dim = 4;
+        let m = 6;
+        let mut rng = Rng::new(24);
+        let a = rng.mat_i8(m, dim);
+        let w = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(m, dim, 300);
+        let total = crate::mesh::driver::ws_matmul_cycles(dim, m);
+        let mut plain = Mesh::new(dim, Dataflow::WeightStationary);
+        let mut inst = InstrumentedMesh::with_dataflow(dim, Dataflow::WeightStationary);
+        for kind in SignalKind::ALL {
+            for cycle in 0..total {
+                let f = Fault::new(
+                    (cycle as usize) % dim,
+                    (cycle as usize / dim) % dim,
+                    kind,
+                    (cycle % kind.width() as u64) as u8,
+                    cycle,
+                );
+                let c1 = MatmulDriver::new(&mut plain)
+                    .matmul_with_fault(a.view(), w.view(), d.view(), &f);
+                let c2 = MatmulDriver::new(&mut inst)
+                    .matmul_with_fault(a.view(), w.view(), d.view(), &f);
+                assert_eq!(c1, c2, "kind={kind} cycle={cycle}");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,16 @@
 //! |                    | is exactly an SEU latched the cycle before)   |
 //! | `DReg`             | the d-chain register itself (rewritten every  |
 //! |                    | cycle, so the flip lives exactly one cycle)   |
+//!
+//! The signal kinds address **logical operands**, so the weight-
+//! stationary dataflow remaps the two operand classes onto the storage
+//! that actually holds them (the control/storage rows are unchanged):
+//!
+//! * `Weight` — the PE's stationary `reg_w`: an SEU there persists
+//!   until the next preload rewrites it (operands *held* rather than
+//!   streamed — the masking-structure difference WS campaigns measure);
+//! * `Act` — the horizontal a-path pipeline (`reg_a[r][c-1]` / west
+//!   edge wire), where WS streams its activations.
 
 use super::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 use super::signal::{SignalAddr, SignalKind};
@@ -315,7 +325,14 @@ pub fn apply_enforsa(mesh: &mut Mesh, inp: &mut MeshInputs, fault: &Fault) {
             }
         }
         SignalKind::Act => {
-            if r == 0 {
+            if mesh.dataflow() == Dataflow::WeightStationary {
+                // WS: activations stream on the horizontal a path.
+                if c == 0 {
+                    inp.west_a[r] = f8(inp.west_a[r]);
+                } else {
+                    mesh.reg_a[i - 1] = f8(mesh.reg_a[i - 1]);
+                }
+            } else if r == 0 {
                 inp.north_b[c] = f8(inp.north_b[c]);
             } else {
                 mesh.reg_b[i - dim] = f8(mesh.reg_b[i - dim]);
@@ -542,6 +559,34 @@ mod tests {
         m.step(&inp, &mut out);
         assert_eq!(m.reg_b[m.idx(1, 2)], 32 | -128, "target corrupted");
         assert_eq!(m.reg_b[m.idx(0, 2)], 0, "source refreshed clean");
+    }
+
+    #[test]
+    fn ws_operand_faults_target_the_ws_storage() {
+        // WS remap: `Act` rides the horizontal a path (where WS streams
+        // activations), `Weight` flips the stationary reg_w in place —
+        // and the weight SEU persists until the next preload.
+        let mut m = Mesh::new(4, Dataflow::WeightStationary);
+        let mut inp = MeshInputs::idle(4);
+        let mut out = StepOutput::new(4);
+        inp.west_a[1] = 16;
+        m.step(&inp, &mut out); // reg_a[1][0] = 16
+        m.step(&inp, &mut out); // reg_a[1][1] = 16
+        let f = Fault::new(1, 2, SignalKind::Act, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        m.step(&inp, &mut out);
+        assert_eq!(m.reg_a[m.idx(1, 2)], 17, "target latched corrupt activation");
+        assert_eq!(m.reg_a[m.idx(1, 1)], 16, "source refreshed by upstream data");
+
+        let i = m.idx(2, 3);
+        m.reg_w[i] = 0b100;
+        let f = Fault::new(2, 3, SignalKind::Weight, 0, m.cycle());
+        m.inject_now(&f, &mut inp);
+        assert_eq!(m.reg_w[i], 0b101);
+        inp.clear();
+        m.step(&inp, &mut out);
+        m.step(&inp, &mut out);
+        assert_eq!(m.reg_w[i], 0b101, "stationary weight SEU persists");
     }
 
     #[test]

@@ -12,10 +12,15 @@
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 
 pub enum SignalKind {
-    /// Horizontal (west→east) operand pipeline register. In the paper's
-    /// configuration this path carries the DNN *weights* (Fig. 5b).
+    /// The DNN *weight* operand. Under the paper's output-stationary
+    /// configuration this is the horizontal (west→east) operand
+    /// pipeline register (Fig. 5b); under weight-stationary it is the
+    /// PE's stationary weight register, where an SEU persists until the
+    /// next preload. The kinds address logical operands, so fault lists
+    /// stay portable across dataflows (see `mesh::inject`).
     Weight,
-    /// Vertical (north→south) operand pipeline register (activations).
+    /// The *activation* operand: the vertical (north→south) pipeline
+    /// register under OS, the horizontal a-path under WS.
     Act,
     /// The output-stationary accumulator (32-bit).
     Acc,

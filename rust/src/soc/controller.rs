@@ -67,9 +67,21 @@ pub struct Controller {
 }
 
 impl Controller {
-    pub fn new(dim: usize) -> Self {
+    /// Build the controller + mesh complex. The dataflow comes from the
+    /// campaign's `MeshConfig` (never hardcoded here), but the execute
+    /// FSM implements only the OS preload/compute/flush schedule — a WS
+    /// request is a hard error, surfaced as a clear config-level error
+    /// by `campaign::validate_dataflow_support` before any SoC is
+    /// constructed (ROADMAP "Dataflow-generic campaigns": the SoC
+    /// backend stays OS-only for now, with no silent override).
+    pub fn new(dim: usize, dataflow: crate::config::Dataflow) -> Self {
+        assert_eq!(
+            dataflow,
+            crate::config::Dataflow::OutputStationary,
+            "the SoC execute FSM implements only the output-stationary schedule"
+        );
         Controller {
-            mesh: Mesh::new(dim, crate::config::Dataflow::OutputStationary),
+            mesh: Mesh::new(dim, dataflow),
             rob: VecDeque::new(),
             state: ExecState::Idle,
             cfg_k: dim,
@@ -308,7 +320,7 @@ mod tests {
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 1 << 10);
 
-        let mut ctrl = Controller::new(dim);
+        let mut ctrl = Controller::new(dim, crate::config::Dataflow::OutputStationary);
         let mut spad = Scratchpad::new(4, 64, dim);
         let mut accmem = AccMem::new(64, dim);
         let mut dma = Dma::new();
@@ -352,7 +364,7 @@ mod tests {
 
     #[test]
     fn mvin_then_mvout_round_trip() {
-        let mut ctrl = Controller::new(4);
+        let mut ctrl = Controller::new(4, crate::config::Dataflow::OutputStationary);
         let mut spad = Scratchpad::new(4, 64, 4);
         let mut accmem = AccMem::new(64, 4);
         let mut dma = Dma::new();

@@ -67,9 +67,19 @@ pub struct Soc {
 }
 
 impl Soc {
-    /// Build a SoC around a DIM x DIM mesh with Chipyard-like defaults
-    /// (16 KiB L1s, 256 KiB scratchpad, 64 KiB accumulator).
+    /// Build a SoC around a DIM x DIM output-stationary mesh with
+    /// Chipyard-like defaults (16 KiB L1s, 256 KiB scratchpad, 64 KiB
+    /// accumulator).
     pub fn new(dim: usize) -> Self {
+        Self::with_dataflow(dim, crate::config::Dataflow::OutputStationary)
+    }
+
+    /// [`Soc::new`] with the dataflow taken from `MeshConfig`. The SoC
+    /// backend is OS-only for now (the controller FSM implements the OS
+    /// schedule); campaigns reject WS + FullSoc with a config error
+    /// before construction, and the controller asserts it here too —
+    /// never a silent override to OS.
+    pub fn with_dataflow(dim: usize, dataflow: crate::config::Dataflow) -> Self {
         let spad_rows = (256 * 1024 / dim).max(4 * dim * dim);
         Soc {
             core: Core::new(),
@@ -80,7 +90,7 @@ impl Soc {
             accmem: AccMem::new((64 * 1024 / (4 * dim)).max(4 * dim), dim),
             dma: Dma::new(),
             mem: MainMemory::new(1 << 22, 4),
-            ctrl: Controller::new(dim),
+            ctrl: Controller::new(dim, dataflow),
             detail: UncoreDetail::new(dim),
             cycles: 0,
             icache_stall: 0,
@@ -89,6 +99,12 @@ impl Soc {
 
     pub fn dim(&self) -> usize {
         self.ctrl.dim()
+    }
+
+    /// The mesh dataflow this SoC executes (OS — see [`Soc::with_dataflow`]).
+    pub fn dataflow(&self) -> crate::config::Dataflow {
+        use crate::mesh::MeshSim;
+        self.ctrl.mesh.dataflow()
     }
 
     /// Return the SoC to power-on state **without reallocating** its

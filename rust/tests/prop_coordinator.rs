@@ -7,7 +7,8 @@
 use enfor_sa::campaign::campaign::run_input;
 use enfor_sa::campaign::{run_campaign, sample_trial};
 use enfor_sa::config::{
-    Backend, CampaignConfig, MeshConfig, OffloadScope, Scenario, TileEngine, TrialEngine,
+    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
+    TrialEngine,
 };
 use enfor_sa::coordinator::run_parallel;
 use enfor_sa::dnn::models;
@@ -115,14 +116,21 @@ fn prop_sampled_trials_always_in_bounds() {
             Scenario::DoubleSeu,
             Scenario::StuckAt { value: true },
         ][rng.usize_below(5)];
-        let t = sample_trial(scenario, site, m, k, n, dim, &mut rng, &[]);
-        assert!(t.tile_i < m.div_ceil(dim));
-        assert!(t.tile_j < n.div_ceil(dim));
-        assert!(!t.plan.is_empty());
-        for f in t.plan.faults() {
-            assert!(f.addr.row < dim && f.addr.col < dim);
-            assert!(f.bit < f.addr.kind.width());
-            assert!(f.cycle < enfor_sa::mesh::driver::os_matmul_cycles(dim, k));
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let t = sample_trial(scenario, dataflow, site, m, k, n, dim, &mut rng, &[]);
+            let (tiles_i, tiles_j) =
+                enfor_sa::mesh::driver::tile_grid(dataflow, dim, m, k, n);
+            assert!(t.tile_i < tiles_i, "{dataflow}");
+            assert!(t.tile_j < tiles_j, "{dataflow}");
+            assert!(!t.plan.is_empty());
+            for f in t.plan.faults() {
+                assert!(f.addr.row < dim && f.addr.col < dim);
+                assert!(f.bit < f.addr.kind.width());
+                assert!(
+                    f.cycle < enfor_sa::mesh::driver::matmul_cycles(dataflow, dim, m, k),
+                    "{dataflow}"
+                );
+            }
         }
     }
 }

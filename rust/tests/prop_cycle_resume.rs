@@ -223,11 +223,10 @@ fn prop_tile_engines_agree_across_scenarios_and_backends() {
     }
 }
 
-/// Contract 2/3 (WS dataflow): campaign batches replay the driver seam
-/// exactly as this sweep does — one shared cursor, onsets sorted
-/// ascending, matmul-shaped operands — so pinning the WS driver here
-/// covers the dataflow the runner's OS tiling cannot route end to end
-/// (WS campaigns remain tile-shape-incompatible, unchanged from seed).
+/// Contract 2 (WS driver seam): one shared cursor, onsets sorted
+/// ascending, matmul-shaped operands — the exact replay shape of a WS
+/// campaign batch (which, since the dataflow-generic campaign PR, runs
+/// end to end; the campaign-level pins are below).
 #[test]
 fn prop_ws_driver_tile_engines_agree() {
     // batch-shaped driver sweep: sorted onsets, one golden cursor
@@ -261,6 +260,88 @@ fn prop_ws_driver_tile_engines_agree() {
         drv.matmul_resumed(a.view(), w.view(), d.view(), &plan, &cur, &mut out, &mut scratch);
         assert_eq!(out, full, "ws tf={tf}");
     }
+}
+
+/// Contract 3 (WS campaigns): fixed-seed WS campaigns are bit-identical
+/// across tile engines for every scenario on both mesh-level backends —
+/// the dataflow-generic mirror of the OS pin above.
+#[test]
+fn prop_ws_tile_engines_agree_across_scenarios_and_backends() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    for backend in [Backend::EnforSa, Backend::Hdfit] {
+        for scenario in [
+            Scenario::Seu,
+            Scenario::Mbu { bits: 2 },
+            Scenario::Burst { radius: 1 },
+            Scenario::DoubleSeu,
+            Scenario::StuckAt { value: true },
+        ] {
+            let resume =
+                run_campaign(&model, &mesh, &cfg(backend, scenario, TileEngine::CycleResume))
+                    .unwrap();
+            let full =
+                run_campaign(&model, &mesh, &cfg(backend, scenario, TileEngine::Full)).unwrap();
+            assert_bit_identical(&resume, &full, &format!("ws/{backend}/{scenario}"));
+            assert!(
+                resume.rtl_cycles_stepped <= full.rtl_cycles_stepped,
+                "ws/{backend}/{scenario}: resume must never step MORE cycles"
+            );
+        }
+    }
+}
+
+/// Contract 3 (WS worker invariance): WS campaigns shard like OS ones —
+/// identical counts AND identical deterministic `rtl_cycles_stepped`
+/// for any worker count.
+#[test]
+fn prop_ws_cycle_resume_is_worker_invariant() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    let mut c = cfg(Backend::EnforSa, Scenario::Seu, TileEngine::CycleResume);
+    c.workers = 1;
+    let one = run_parallel(&model, &mesh, &c, None).unwrap();
+    for workers in [2usize, 5] {
+        c.workers = workers;
+        let many = run_parallel(&model, &mesh, &c, None).unwrap();
+        assert_bit_identical(&one, &many, &format!("ws workers={workers}"));
+        assert_eq!(
+            one.rtl_cycles_stepped, many.rtl_cycles_stepped,
+            "ws workers={workers}: stepped-cycle accounting must be deterministic"
+        );
+    }
+}
+
+/// WS cycle-resume must beat the full tile engine on stepped RTL cycles
+/// once trials share weight tiles — faults_per_layer=16 pigeonholes
+/// conv1's (K=27, N=16) -> 4x2 = 8-tile weight grid.
+#[test]
+fn prop_ws_cycle_resume_steps_strictly_fewer_cycles() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    let mut c = cfg(Backend::EnforSa, Scenario::Seu, TileEngine::CycleResume);
+    c.faults_per_layer = 16;
+    c.inputs = 1;
+    let resume = run_campaign(&model, &mesh, &c).unwrap();
+    c.tile_engine = TileEngine::Full;
+    let full = run_campaign(&model, &mesh, &c).unwrap();
+    assert_bit_identical(&resume, &full, "ws 16-fault campaign");
+    assert!(resume.rtl_cycles_stepped > 0);
+    assert!(
+        resume.rtl_cycles_stepped < full.rtl_cycles_stepped,
+        "ws cycle-resume stepped {} cycles, full {}",
+        resume.rtl_cycles_stepped,
+        full.rtl_cycles_stepped
+    );
 }
 
 /// Contract 3: the flag round-trips through the parallel coordinator —

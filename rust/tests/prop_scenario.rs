@@ -14,6 +14,11 @@
 //! 3. **Scenario campaigns** — every scenario runs end-to-end on every
 //!    backend with identical counts across trial engines and worker
 //!    shardings.
+//! 4. **Dataflow-generic sampling** — the same contracts hold per
+//!    dataflow: the OS RNG stream is exactly the legacy one (contract
+//!    1a is OS by construction), WS `seu` plans draw the weight-tile
+//!    grid and M-stream cycle range in the same draw order, and every
+//!    scenario campaign also runs end-to-end on the WS mesh backends.
 
 use enfor_sa::campaign::{
     campaign_sites, derived_input_seed, plan_one, run_campaign, sample_mesh_fault,
@@ -64,7 +69,7 @@ fn prop_seu_plans_replay_the_legacy_rng_stream() {
     for input_idx in 0..c.inputs {
         let seed = derived_input_seed(c.seed, input_idx);
         let mut rng = Rng::new(seed);
-        let plan = plan_one(&model, &c, &sites, &kinds, mesh.dim, &mut rng);
+        let plan = plan_one(&model, &c, &sites, &kinds, &mesh, &mut rng);
         // legacy replica: input tensor first, then trials site-major in
         // the order (tile_i, tile_j, signal+bit, row, col, cycle)
         let mut legacy = Rng::new(seed);
@@ -312,6 +317,7 @@ fn scenario_sampling_respects_signal_filter() {
     for _ in 0..100 {
         let t = sample_trial(
             Scenario::Burst { radius: 2 },
+            Dataflow::OutputStationary,
             site,
             64,
             27,
@@ -327,4 +333,118 @@ fn scenario_sampling_respects_signal_filter() {
             ));
         }
     }
+}
+
+/// Contract 4a: under WS, `plan_one` draws in the same order with the
+/// dataflow's ranges — tile_i over K tiles, tile_j over N tiles, the
+/// cycle inside the M-row streaming pass.
+#[test]
+fn prop_ws_seu_plans_draw_the_weight_tile_grid() {
+    use enfor_sa::campaign::sample_fault;
+    use enfor_sa::mesh::driver::tile_grid;
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    let c = cfg(Backend::EnforSa, Scenario::Seu);
+    let sites = campaign_sites(&model);
+    let kinds = signal_kinds(&c);
+    for input_idx in 0..c.inputs {
+        let seed = derived_input_seed(c.seed, input_idx);
+        let mut rng = Rng::new(seed);
+        let plan = plan_one(&model, &c, &sites, &kinds, &mesh, &mut rng);
+        let mut replica = Rng::new(seed);
+        let _x = synthetic_input(&model.input_shape, &mut replica);
+        for (batch, info) in plan.batches.iter().zip(&sites) {
+            for t in &batch.trials {
+                let PlannedTrial::Rtl(t) = t else {
+                    panic!("WS RTL campaign must plan RTL trials")
+                };
+                let (tiles_i, tiles_j) =
+                    tile_grid(Dataflow::WeightStationary, mesh.dim, info.m, info.k, info.n);
+                let tile_i = replica.usize_below(tiles_i);
+                let tile_j = replica.usize_below(tiles_j);
+                let fault = sample_fault(
+                    Dataflow::WeightStationary,
+                    mesh.dim,
+                    info.m,
+                    info.k,
+                    &mut replica,
+                    &kinds,
+                );
+                assert_eq!(t, &TrialFault::single(info.site, tile_i, tile_j, fault));
+                assert!(t.tile_i < info.k.div_ceil(mesh.dim), "tile_i indexes K");
+            }
+        }
+    }
+}
+
+/// Contract 4b: every scenario runs end-to-end on the WS mesh backends
+/// with the full trial budget and identical counts across trial
+/// engines — the dataflow axis composes with the whole scenario API.
+#[test]
+fn prop_ws_every_scenario_agrees_across_engines_and_backends() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    let scenarios = [
+        Scenario::Seu,
+        Scenario::Mbu { bits: 2 },
+        Scenario::Burst { radius: 1 },
+        Scenario::DoubleSeu,
+        Scenario::StuckAt { value: true },
+    ];
+    for scenario in scenarios {
+        for backend in [Backend::EnforSa, Backend::Hdfit] {
+            let mut a_cfg = cfg(backend, scenario);
+            a_cfg.engine = TrialEngine::SiteResume;
+            let a = run_campaign(&model, &mesh, &a_cfg).unwrap();
+            let mut b_cfg = cfg(backend, scenario);
+            b_cfg.engine = TrialEngine::FullForward;
+            let b = run_campaign(&model, &mesh, &b_cfg).unwrap();
+            assert_eq!(a.vuln.trials, 5 * 3 * 2, "ws/{scenario}/{backend}");
+            assert_counts_equal(&a, &b, &format!("ws/{scenario}/{backend}"));
+        }
+    }
+}
+
+/// Contract 4c: the ENFOR-SA and HDFIT backends stay bit-equivalent on
+/// the WS mesh for multi-fault scenarios (the WS instrumented step must
+/// apply every armed hook identically to the wrapper).
+#[test]
+fn prop_ws_backends_agree_on_multi_fault_scenarios() {
+    let model = models::quicknet(11);
+    let mesh = MeshConfig {
+        dataflow: Dataflow::WeightStationary,
+        ..Default::default()
+    };
+    for scenario in [
+        Scenario::Mbu { bits: 3 },
+        Scenario::Burst { radius: 1 },
+        Scenario::DoubleSeu,
+        Scenario::StuckAt { value: false },
+    ] {
+        let a = run_campaign(&model, &mesh, &cfg(Backend::EnforSa, scenario)).unwrap();
+        let b = run_campaign(&model, &mesh, &cfg(Backend::Hdfit, scenario)).unwrap();
+        assert_counts_equal(&a, &b, &format!("ws/{scenario}"));
+    }
+}
+
+/// OS campaigns stay deterministic and correctly labelled under the
+/// dataflow-generic engine. (The actual OS bit-identity pin to the
+/// pre-dataflow behaviour is contract 1a above — the draw-by-draw
+/// legacy-RNG replica — this test only covers the campaign-level
+/// determinism and the new `dataflow` result label.)
+#[test]
+fn prop_os_campaigns_stay_deterministic_and_labelled() {
+    let model = models::quicknet(11);
+    let os = MeshConfig::default();
+    let c = cfg(Backend::EnforSa, Scenario::Seu);
+    let a = run_campaign(&model, &os, &c).unwrap();
+    let b = run_campaign(&model, &os, &c).unwrap();
+    assert_counts_equal(&a, &b, "os determinism");
+    assert_eq!(a.dataflow, Dataflow::OutputStationary);
 }
