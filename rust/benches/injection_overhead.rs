@@ -7,7 +7,10 @@
 //!   BENCH_FAULTS=..  BENCH_INPUTS=..  BENCH_MODELS=quicknet,ResNet18
 //!   BENCH_SCENARIO=seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>
 //!   BENCH_DATAFLOW=os|ws|both   (default both: one Table-VI row set
-//!                                per dataflow — schema v5)
+//!                                per dataflow)
+//!   BENCH_LANES=<n>             (lane count of the lane-lockstep
+//!                                campaign arm — schema v6; default 8,
+//!                                n=1 degenerates to cycle-resume)
 //!
 //! Set BENCH_OUT=path.json to also write a machine-readable snapshot
 //! (`benchkit::injection_snapshot_json` — the schema stored under
@@ -49,27 +52,32 @@ fn main() {
         }
         Some(s) => vec![Dataflow::parse(s).expect("bad BENCH_DATAFLOW (os|ws|both)")],
     };
+    let lanes: usize = std::env::var("BENCH_LANES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
     let mesh_cfg = MeshConfig::default();
     let cc = CampaignConfig {
         faults_per_layer: faults,
         inputs,
         scenario,
+        lanes,
         ..Default::default()
     };
     println!(
         "TABLE VI: injection time + AVF/PVF ({faults} faults/layer/input, {inputs} inputs, \
-         scenario {scenario}, DIM8, dataflows {dataflows:?})"
+         scenario {scenario}, DIM8, dataflows {dataflows:?}, {lanes} lanes)"
     );
     println!(
-        "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8}",
+        "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8} {:>8}",
         "Model", "DF", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s",
-        "resume-x", "rtl-cycles", "tile-x"
+        "resume-x", "rtl-cycles", "tile-x", "lock-x"
     );
     let rows = injection_table_dataflows(&names, &mesh_cfg, &cc, &dataflows).expect("campaigns");
     for r in &rows {
         println!(
             "{:<16} {:>4} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} \
-             {:>7.2}x",
+             {:>7.2}x {:>7.2}x",
             r.model,
             r.dataflow,
             human_time(r.sw.wall.as_secs_f64()),
@@ -80,13 +88,14 @@ fn main() {
             r.trials_per_sec(),
             r.resume_speedup_vs_full_forward(),
             r.rtl_cycles_stepped(),
-            r.cycle_resume_speedup()
+            r.cycle_resume_speedup(),
+            r.lockstep_speedup()
         );
     }
     let n = rows.len() as f64;
     println!(
         "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x  \
-         cycle-resume speedup {:.2}x",
+         cycle-resume speedup {:.2}x  lockstep speedup {:.2}x",
         rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.avf_pct()).sum::<f64>() / n,
@@ -95,10 +104,11 @@ fn main() {
             .sum::<f64>()
             / n,
         rows.iter().map(|r| r.cycle_resume_speedup()).sum::<f64>() / n,
+        rows.iter().map(|r| r.lockstep_speedup()).sum::<f64>() / n,
     );
     for r in &rows {
         println!(
-            "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4}",
+            "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4},{},{:.4}",
             r.model,
             r.dataflow,
             r.sw.wall.as_secs_f64(),
@@ -109,7 +119,9 @@ fn main() {
             r.trials_per_sec(),
             r.resume_speedup_vs_full_forward(),
             r.rtl_cycles_stepped(),
-            r.cycle_resume_speedup()
+            r.cycle_resume_speedup(),
+            r.lanes,
+            r.lockstep_speedup()
         );
     }
     if let Ok(path) = std::env::var("BENCH_OUT") {

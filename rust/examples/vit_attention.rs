@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
             tile_engine: Default::default(),
+            lanes: 8,
             signals: vec![],
             scenario: Default::default(),
             workers: 1,

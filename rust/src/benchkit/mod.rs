@@ -198,6 +198,13 @@ pub struct InjectionRow {
     /// seed, bit-identical counts; isolates the site-resume wall-clock
     /// effect. Each speedup below varies exactly one engine.
     pub rtl_full: CampaignResult,
+    /// Identical campaign with ONLY the tile engine switched to
+    /// `lane-lockstep` (schema v6) — same seed, bit-identical counts;
+    /// isolates the lane-batching effect as a deterministic RTL-cycle
+    /// ratio against the cycle-resume baseline.
+    pub rtl_lockstep: CampaignResult,
+    /// Lane count the lockstep campaign ran with.
+    pub lanes: usize,
 }
 
 impl InjectionRow {
@@ -241,18 +248,30 @@ impl InjectionRow {
         self.rtl_tile_full.rtl_cycles_stepped as f64
             / self.rtl.rtl_cycles_stepped.max(1) as f64
     }
+
+    /// Architectural speedup of the lane-lockstep tile engine over the
+    /// cycle-resume baseline: RTL cycles cycle-resume steps for the
+    /// bit-identical campaign, divided by lockstep's (which counts each
+    /// lockstep mesh step once per cycle, not per lane). Deterministic
+    /// per seed, so CI asserts it, and > 1 whenever any chunk batches
+    /// two or more trials.
+    pub fn lockstep_speedup(&self) -> f64 {
+        self.rtl.rtl_cycles_stepped as f64 / self.rtl_lockstep.rtl_cycles_stepped.max(1) as f64
+    }
 }
 
 /// Table VI: run SW-only and ENFOR-SA campaigns for each named model,
 /// plus two single-factor oracle reruns of the RTL campaign: the full
 /// tile engine (same trial engine) isolates the cycle-resume RTL-cycle
 /// saving, and the full-forward trial engine (same tile engine)
-/// isolates the site-resume wall-clock speedup. The oracle runs are
-/// slower by design (they are what the fast path is measured against),
-/// so generating the table costs roughly two extra oracle-speed
-/// campaigns per model — the price of tracking
-/// `resume_speedup_vs_full_forward` and `cycle_resume_speedup` in
-/// every snapshot.
+/// isolates the site-resume wall-clock speedup. A fourth campaign per
+/// model switches only the tile engine to `lane-lockstep` (schema v6)
+/// to measure `lockstep_speedup` against the cycle-resume baseline.
+/// The oracle runs are slower by design (they are what the fast path
+/// is measured against), so generating the table costs roughly three
+/// extra campaigns per model — the price of tracking
+/// `resume_speedup_vs_full_forward`, `cycle_resume_speedup` and
+/// `lockstep_speedup` in every snapshot.
 pub fn injection_table(
     model_names: &[String],
     mesh_cfg: &MeshConfig,
@@ -276,6 +295,9 @@ pub fn injection_table(
         let mut full_cfg = rtl_cfg.clone();
         full_cfg.engine = TrialEngine::FullForward;
         let rtl_full = run_campaign(&model, mesh_cfg, &full_cfg)?;
+        let mut lockstep_cfg = rtl_cfg.clone();
+        lockstep_cfg.tile_engine = TileEngine::LaneLockstep;
+        let rtl_lockstep = run_campaign(&model, mesh_cfg, &lockstep_cfg)?;
         rows.push(InjectionRow {
             model: model.name.clone(),
             dataflow: mesh_cfg.dataflow,
@@ -283,6 +305,8 @@ pub fn injection_table(
             rtl,
             rtl_tile_full,
             rtl_full,
+            rtl_lockstep,
+            lanes: lockstep_cfg.lanes,
         });
     }
     Ok(rows)
@@ -322,7 +346,11 @@ pub fn injection_table_dataflows(
 /// benches both — see [`injection_table_dataflows`]), the top level
 /// lists the distinct `dataflows` present, and the per-dataflow
 /// masked/exposed/SDC and `cycle_resume_speedup` values make OS-vs-WS
-/// reliability directly comparable per model.
+/// reliability directly comparable per model. Schema v6 adds the
+/// lane-lockstep accounting: a `lanes` axis (top level and per row),
+/// `rtl_cycles_stepped_lockstep` and the deterministic
+/// `lockstep_speedup` ratio vs the cycle-resume baseline (plus its
+/// top-level mean).
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -358,6 +386,12 @@ pub fn injection_snapshot_json(
                     Json::num(r.rtl_tile_full.rtl_cycles_stepped as f64),
                 ),
                 ("cycle_resume_speedup", Json::num(r.cycle_resume_speedup())),
+                ("lanes", Json::num(r.lanes as f64)),
+                (
+                    "rtl_cycles_stepped_lockstep",
+                    Json::num(r.rtl_lockstep.rtl_cycles_stepped as f64),
+                ),
+                ("lockstep_speedup", Json::num(r.lockstep_speedup())),
             ])
         })
         .collect();
@@ -371,8 +405,11 @@ pub fn injection_snapshot_json(
             dataflows.push(df);
         }
     }
+    // the lane axis is uniform across rows today (one campaign config),
+    // but read per row so mixed-lane tables stay representable
+    let lanes = rows.first().map_or(0, |r| r.lanes);
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v5")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v6")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
         (
@@ -381,6 +418,7 @@ pub fn injection_snapshot_json(
         ),
         ("faults_per_layer", Json::num(faults_per_layer as f64)),
         ("inputs", Json::num(inputs as f64)),
+        ("lanes", Json::num(lanes as f64)),
         (
             "mean_slowdown_pct",
             Json::num(rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n),
@@ -397,6 +435,10 @@ pub fn injection_snapshot_json(
         (
             "mean_cycle_resume_speedup",
             Json::num(rows.iter().map(|r| r.cycle_resume_speedup()).sum::<f64>() / n),
+        ),
+        (
+            "mean_lockstep_speedup",
+            Json::num(rows.iter().map(|r| r.lockstep_speedup()).sum::<f64>() / n),
         ),
         ("models", Json::Arr(models)),
     ])
@@ -432,7 +474,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v5_carries_dataflow_scenario_and_cycle_accounting() {
+    fn snapshot_schema_v6_carries_dataflow_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -451,9 +493,10 @@ mod tests {
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v5")
+            Some("enfor-sa/injection-overhead/v6")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
+        assert_eq!(j.get("lanes").and_then(Json::as_f64), Some(8.0));
         let dfs = j.get("dataflows").and_then(Json::as_arr).unwrap();
         let dfs: Vec<_> = dfs.iter().filter_map(|d| d.as_str()).collect();
         assert_eq!(dfs, vec!["OS", "WS"], "both dataflows listed");
@@ -497,6 +540,45 @@ mod tests {
         let speedup = m0.get("cycle_resume_speedup").and_then(Json::as_f64).unwrap();
         assert!(cycles > 0.0 && cycles_full > 0.0 && speedup > 0.0);
         assert!(cycles <= cycles_full, "resume never steps MORE cycles");
+        // the v6 lockstep axis: per-row lanes + cycle accounting
+        assert_eq!(m0.get("lanes").and_then(Json::as_f64), Some(8.0));
+        let cycles_lock = m0
+            .get("rtl_cycles_stepped_lockstep")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let lock_speedup = m0.get("lockstep_speedup").and_then(Json::as_f64).unwrap();
+        assert!(cycles_lock > 0.0 && lock_speedup > 0.0);
+        assert!(cycles_lock <= cycles, "lockstep never steps MORE cycles");
+        assert!(
+            j.get("mean_lockstep_speedup").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+    }
+
+    #[test]
+    fn lane_lockstep_steps_strictly_fewer_rtl_cycles_than_cycle_resume() {
+        // the lockstep acceptance bar at the benchkit layer: bit-identical
+        // counts vs the cycle-resume baseline, strictly fewer RTL cycles.
+        // 8 faults/layer pigeonhole >= 2 trials onto shared tiles.
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 8,
+            inputs: 2,
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let r = &rows[0];
+        assert_eq!(r.rtl.vuln.trials, r.rtl_lockstep.vuln.trials);
+        assert_eq!(r.rtl.vuln.critical, r.rtl_lockstep.vuln.critical);
+        assert_eq!(r.rtl.exposed_trials, r.rtl_lockstep.exposed_trials);
+        assert_eq!(r.rtl.masked_trials, r.rtl_lockstep.masked_trials);
+        assert!(
+            r.rtl_lockstep.rtl_cycles_stepped < r.rtl.rtl_cycles_stepped,
+            "lockstep stepped {} RTL cycles, cycle-resume {}",
+            r.rtl_lockstep.rtl_cycles_stepped,
+            r.rtl.rtl_cycles_stepped
+        );
+        assert!(r.lockstep_speedup() > 1.0);
+        assert_eq!(r.lanes, 8);
     }
 
     #[test]

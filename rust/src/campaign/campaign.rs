@@ -255,6 +255,8 @@ enum Sim {
 pub struct TrialExecutor {
     engine: TrialEngine,
     tile_engine: TileEngine,
+    /// Lane count for the lane-lockstep tile engine (ignored otherwise).
+    lanes: usize,
     scope: OffloadScope,
     sim: Sim,
 }
@@ -277,6 +279,7 @@ impl TrialExecutor {
         TrialExecutor {
             engine: cfg.engine,
             tile_engine: cfg.tile_engine,
+            lanes: cfg.lanes.max(1),
             scope: cfg.offload_scope,
             sim,
         }
@@ -310,6 +313,7 @@ impl TrialExecutor {
                 self.scope,
                 self.engine,
                 self.tile_engine,
+                self.lanes,
                 result,
             ),
             Sim::Hdfit(m) => run_rtl_batch(
@@ -320,6 +324,7 @@ impl TrialExecutor {
                 self.scope,
                 self.engine,
                 self.tile_engine,
+                self.lanes,
                 result,
             ),
             // the SoC path always offloads a single tile (whole-layer
@@ -335,6 +340,7 @@ impl TrialExecutor {
                 OffloadScope::SingleTile,
                 self.engine,
                 self.tile_engine,
+                self.lanes,
                 result,
             ),
         }
@@ -352,6 +358,14 @@ impl TrialExecutor {
 /// each tile's golden prefix exactly once. Re-ordering execution is
 /// free: sampling order is pinned by [`plan_one`] (the RNG stream is
 /// untouched) and every recorded outcome is order-independent.
+///
+/// Under [`TileEngine::LaneLockstep`] the same sorted order is
+/// additionally grouped into consecutive same-tile **chunks of at most
+/// `lanes` trials**: each chunk's tile suffix is stepped once through
+/// the lane-batched mesh ([`CrossLayerRunner::begin_chunk`]), and every
+/// trial of the chunk splices its own lane's result. Backends without
+/// [`TileBackend::supports_lane_lockstep`] fall back per trial —
+/// HDFIT to cycle-resume, the whole-SoC backend to full.
 #[allow(clippy::too_many_arguments)]
 fn run_rtl_batch(
     model: &Model,
@@ -361,14 +375,18 @@ fn run_rtl_batch(
     scope: OffloadScope,
     engine: TrialEngine,
     tile_engine: TileEngine,
+    lanes: usize,
     result: &mut CampaignResult,
 ) {
     let layer = batch.info.site.layer;
     if batch.trials.is_empty() {
         return;
     }
+    let lockstep = tile_engine == TileEngine::LaneLockstep
+        && scope == OffloadScope::SingleTile
+        && backend.supports_lane_lockstep();
     let mut order: Vec<usize> = (0..batch.trials.len()).collect();
-    if tile_engine == TileEngine::CycleResume
+    if matches!(tile_engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
         && scope == OffloadScope::SingleTile
         && backend.supports_cycle_resume()
     {
@@ -379,12 +397,39 @@ fn run_rtl_batch(
     }
     let mut runner =
         CrossLayerRunner::with_engine(rtl_trial(batch, order[0]), backend, scope, tile_engine);
-    for (idx, &i) in order.iter().enumerate() {
-        if idx > 0 {
-            runner.arm(rtl_trial(batch, i));
+    if lockstep {
+        // group the sorted order into same-tile chunks of <= lanes
+        let mut start = 0;
+        while start < order.len() {
+            let key = rtl_trial(batch, order[start]).tile_key();
+            let mut end = start + 1;
+            while end < order.len()
+                && end - start < lanes
+                && rtl_trial(batch, order[end]).tile_key() == key
+            {
+                end += 1;
+            }
+            runner.begin_chunk(
+                order[start..end]
+                    .iter()
+                    .map(|&i| &rtl_trial(batch, i).plan)
+                    .collect(),
+            );
+            for (lane, &i) in order[start..end].iter().enumerate() {
+                runner.arm_lane(rtl_trial(batch, i), lane);
+                runner.backend.reset();
+                record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+            }
+            start = end;
         }
-        runner.backend.reset();
-        record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+    } else {
+        for (idx, &i) in order.iter().enumerate() {
+            if idx > 0 {
+                runner.arm(rtl_trial(batch, i));
+            }
+            runner.backend.reset();
+            record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
+        }
     }
     result.rtl_cycles_stepped += runner.rtl_cycles;
 }
@@ -545,6 +590,7 @@ mod tests {
                 offload_scope: OffloadScope::SingleTile,
                 engine: TrialEngine::SiteResume,
                 tile_engine: TileEngine::CycleResume,
+                lanes: 8,
                 signals: vec![],
                 scenario: Scenario::Seu,
                 workers: 1,
@@ -686,6 +732,64 @@ mod tests {
         );
     }
 
+    #[test]
+    fn lane_lockstep_agrees_and_steps_fewer_than_cycle_resume() {
+        // the lockstep acceptance pin: bit-identical counts for any lane
+        // count, strictly fewer RTL cycles than cycle-resume (which is
+        // itself strictly fewer than full). faults_per_layer=16 puts >= 2
+        // trials on shared tiles, so every multi-trial chunk pays its
+        // suffix once instead of once per trial.
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.tile_engine = TileEngine::Full;
+        let full = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::CycleResume;
+        let resume = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::LaneLockstep;
+        let lock = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        for (r, label) in [(&resume, "cycle-resume"), (&lock, "lane-lockstep")] {
+            assert_eq!(r.vuln.trials, full.vuln.trials, "{label}");
+            assert_eq!(r.vuln.critical, full.vuln.critical, "{label}");
+            assert_eq!(r.exposed_trials, full.exposed_trials, "{label}");
+            assert_eq!(r.masked_trials, full.masked_trials, "{label}");
+        }
+        assert!(
+            lock.rtl_cycles_stepped < resume.rtl_cycles_stepped
+                && resume.rtl_cycles_stepped < full.rtl_cycles_stepped,
+            "expected lockstep < cycle-resume < full: {} vs {} vs {}",
+            lock.rtl_cycles_stepped,
+            resume.rtl_cycles_stepped,
+            full.rtl_cycles_stepped
+        );
+        // a single-lane lockstep campaign degenerates to cycle-resume
+        // exactly, cycle counts included
+        cfg.lanes = 1;
+        let one = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(one.vuln.critical, resume.vuln.critical);
+        assert_eq!(one.exposed_trials, resume.exposed_trials);
+        assert_eq!(one.rtl_cycles_stepped, resume.rtl_cycles_stepped);
+    }
+
+    #[test]
+    fn hdfit_lane_lockstep_falls_back_to_cycle_resume() {
+        // HDFIT's instrumented kernels hook one mesh instance, so it
+        // rejects lane batching; the gate must degrade to cycle-resume
+        // with identical counts AND identical cycle accounting.
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::Hdfit);
+        cfg.tile_engine = TileEngine::LaneLockstep;
+        let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::CycleResume;
+        let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(a.vuln.trials, b.vuln.trials);
+        assert_eq!(a.vuln.critical, b.vuln.critical);
+        assert_eq!(a.exposed_trials, b.exposed_trials);
+        assert_eq!(a.masked_trials, b.masked_trials);
+        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped);
+    }
+
     fn ws_mesh_cfg() -> MeshConfig {
         MeshConfig {
             dataflow: Dataflow::WeightStationary,
@@ -748,6 +852,29 @@ mod tests {
             "WS cycle-resume must step fewer RTL cycles: {} vs {}",
             a.rtl_cycles_stepped,
             b.rtl_cycles_stepped
+        );
+    }
+
+    #[test]
+    fn ws_lane_lockstep_agrees_and_steps_fewer_than_cycle_resume() {
+        // the WS mirror of the lockstep acceptance pin
+        let model = models::quicknet(5);
+        let (_, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.tile_engine = TileEngine::CycleResume;
+        let resume = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        cfg.tile_engine = TileEngine::LaneLockstep;
+        let lock = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        assert_eq!(lock.vuln.trials, resume.vuln.trials);
+        assert_eq!(lock.vuln.critical, resume.vuln.critical);
+        assert_eq!(lock.exposed_trials, resume.exposed_trials);
+        assert_eq!(lock.masked_trials, resume.masked_trials);
+        assert!(
+            lock.rtl_cycles_stepped < resume.rtl_cycles_stepped,
+            "WS lockstep must step fewer RTL cycles: {} vs {}",
+            lock.rtl_cycles_stepped,
+            resume.rtl_cycles_stepped
         );
     }
 

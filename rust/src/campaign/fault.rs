@@ -50,6 +50,13 @@ impl TrialFault {
             plan: FaultPlan::single(fault),
         }
     }
+
+    /// The trial's tile identity — the grouping key of the lane-lockstep
+    /// executor: only trials of one tile share operands (and hence a
+    /// lockstep chunk).
+    pub fn tile_key(&self) -> (usize, usize) {
+        (self.tile_i, self.tile_j)
+    }
 }
 
 impl std::fmt::Display for TrialFault {

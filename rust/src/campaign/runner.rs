@@ -19,12 +19,12 @@ use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
 use crate::mat::{Mat, MatView, MatViewMut};
 use crate::mesh::driver::{
-    os_matmul_cycles, tile_grid, tiled_matmul_os, tiled_matmul_ws_with, ws_matmul_cycles,
-    MatmulDriver,
+    lockstep_resumed, os_matmul_cycles, tile_grid, tiled_matmul_os, tiled_matmul_ws_with,
+    ws_matmul_cycles, MatmulDriver,
 };
 use crate::mesh::hdfit::InstrumentedMesh;
 
-use crate::mesh::{CycleCursor, DriverScratch, FaultPlan, Injectable, Mesh, MeshSim};
+use crate::mesh::{CycleCursor, DriverScratch, FaultPlan, Injectable, LaneMesh, Mesh, MeshSim};
 use crate::soc::Soc;
 
 /// Which simulator executes the offloaded tile.
@@ -118,6 +118,17 @@ impl<'a> TileBackend<'a> {
     /// contract; pinned by the oracle tests).
     pub fn supports_cycle_resume(&self) -> bool {
         !matches!(self, TileBackend::Soc(_))
+    }
+
+    /// Whether this backend supports the trial-lockstep lane engine.
+    /// Mesh-only: the HDFIT backend arms its instrumentation hooks per
+    /// mesh instance, so one instrumented mesh cannot carry N
+    /// independent trials' hooks side by side — it silently falls back
+    /// to cycle-resume, and the whole-SoC backend to full, the same
+    /// fallback shape as [`TileBackend::supports_cycle_resume`]
+    /// (ROADMAP "Trial-lockstep" contract; pinned by the oracle tests).
+    pub fn supports_lane_lockstep(&self) -> bool {
+        matches!(self, TileBackend::Mesh(_))
     }
 
     /// Earliest cycle this backend's execution of `plan` can diverge
@@ -275,6 +286,24 @@ pub struct CrossLayerRunner<'a> {
     /// rests on — so the software prefix/golden of a tile is computed
     /// once per tile, not once per trial.
     ws_key: Option<(usize, usize)>,
+    /// Lane-lockstep only: the fault plans of the current trial chunk
+    /// ([`CrossLayerRunner::begin_chunk`]); lane `l` steps plan `l`.
+    chunk_plans: Vec<&'a FaultPlan>,
+    /// Lane-lockstep only: which lane the armed trial occupies.
+    lane: usize,
+    /// Lane-lockstep only: set once the chunk's lockstep pass ran;
+    /// later trials of the chunk reuse the computed lane results.
+    lockstep_done: bool,
+    /// Lane-lockstep only: the lane-batched SoA mesh (zero lanes until
+    /// the first chunk reshapes it).
+    lane_mesh: LaneMesh,
+    /// Lane-lockstep only: per-lane result tiles of the current chunk.
+    lane_outs: Vec<Mat<i32>>,
+    /// Debug guard: which tile engine has driven this runner's golden
+    /// cursor. The lockstep and per-trial resume paths prime drain
+    /// state differently (per-lane `takens` vs the scratch counter), so
+    /// one runner must never interleave them on the same cursor.
+    cursor_engine: Option<TileEngine>,
 }
 
 impl<'a> CrossLayerRunner<'a> {
@@ -292,6 +321,7 @@ impl<'a> CrossLayerRunner<'a> {
         engine: TileEngine,
     ) -> Self {
         let dim = backend.dim();
+        let dataflow = backend.dataflow();
         CrossLayerRunner {
             trial,
             backend,
@@ -306,15 +336,107 @@ impl<'a> CrossLayerRunner<'a> {
             ws_d: Mat::default(),
             ws_gold: Mat::default(),
             ws_key: None,
+            chunk_plans: vec![&trial.plan],
+            lane: 0,
+            lockstep_done: false,
+            lane_mesh: LaneMesh::new(dim, dataflow),
+            lane_outs: Vec::new(),
+            cursor_engine: None,
         }
     }
 
     /// Re-arm for the next trial of a batch: fresh trial and flags, same
-    /// backend borrow, same scratch buffers, same golden cursor.
+    /// backend borrow, same scratch buffers, same golden cursor. Under
+    /// lane-lockstep this arms a fresh single-trial chunk — the
+    /// per-trial shape unit tests and direct callers use; the campaign
+    /// executor arms whole chunks via [`CrossLayerRunner::begin_chunk`]
+    /// + [`CrossLayerRunner::arm_lane`] instead.
     pub fn arm(&mut self, trial: &'a TrialFault) {
         self.trial = trial;
         self.hit = false;
         self.exposed = false;
+        self.chunk_plans.clear();
+        self.chunk_plans.push(&trial.plan);
+        self.lane = 0;
+        self.lockstep_done = false;
+    }
+
+    /// Start a lane-lockstep chunk: lane `l` of the next lockstep pass
+    /// steps `plans[l]`. Every plan must come from the same site batch
+    /// and target the same tile (the executor's grouping guarantees
+    /// both); the pass itself runs lazily on the chunk's first armed
+    /// trial.
+    pub fn begin_chunk(&mut self, plans: Vec<&'a FaultPlan>) {
+        debug_assert!(!plans.is_empty(), "a lockstep chunk needs at least one trial");
+        self.chunk_plans = plans;
+        self.lockstep_done = false;
+    }
+
+    /// Re-arm for trial `lane` of the current chunk (see
+    /// [`CrossLayerRunner::begin_chunk`]): like
+    /// [`CrossLayerRunner::arm`] but keeping the chunk's plans and its
+    /// already-computed lane results.
+    pub fn arm_lane(&mut self, trial: &'a TrialFault, lane: usize) {
+        debug_assert!(lane < self.chunk_plans.len(), "lane outside the armed chunk");
+        self.trial = trial;
+        self.hit = false;
+        self.exposed = false;
+        self.lane = lane;
+    }
+
+    /// Debug guard (see `cursor_engine`): called by both cursor-driven
+    /// tile paths with their engine.
+    fn note_cursor_engine(&mut self, engine: TileEngine) {
+        debug_assert!(
+            self.cursor_engine.is_none() || self.cursor_engine == Some(engine),
+            "lockstep and cycle-resume must not interleave on one runner's cursor"
+        );
+        self.cursor_engine = Some(engine);
+    }
+
+    /// Trial-lockstep tile run (PR 6 tentpole): on the chunk's first
+    /// armed trial, advance the batch-shared golden cursor to the
+    /// chunk's MINIMUM first-effect cycle and step the tile suffix once
+    /// for all lanes ([`lockstep_resumed`]); later trials of the chunk
+    /// reuse the computed lane results for free. The caller splices
+    /// `lane_outs[self.lane]` through the unchanged exposure seam via
+    /// `scratch`. Callers must gate on
+    /// [`TileBackend::supports_lane_lockstep`].
+    fn run_lockstep_tile(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        key: (usize, usize),
+    ) {
+        self.note_cursor_engine(TileEngine::LaneLockstep);
+        if !self.lockstep_done {
+            let min_fe = self
+                .chunk_plans
+                .iter()
+                .map(|p| self.backend.first_effect_cycle(p))
+                .min()
+                .expect("lockstep chunk must not be empty");
+            let TileBackend::Mesh(m) = &mut self.backend else {
+                unreachable!("lane-lockstep is mesh-only: gate on supports_lane_lockstep")
+            };
+            let adv =
+                MatmulDriver::new(*m).advance_golden(a, b, d, key, min_fe, &mut self.cursor, &mut self.drv);
+            let stepped = lockstep_resumed(
+                &mut self.lane_mesh,
+                a,
+                b,
+                d,
+                &self.chunk_plans,
+                &self.cursor,
+                &mut self.lane_outs,
+                &mut self.drv,
+            );
+            // the suffix is paid ONCE per chunk — the lockstep speedup
+            self.rtl_cycles += adv + stepped;
+            self.lockstep_done = true;
+        }
+        self.scratch.clone_from(&self.lane_outs[self.lane]);
     }
 
     /// ENFOR-SA OS single-tile offload: the DIM-padded output tile is a
@@ -337,9 +459,17 @@ impl<'a> CrossLayerRunner<'a> {
         let a_t = a_full.sub(ri, 0, dim, k);
         let b_t = b_full.sub(0, cj, k, dim);
         let d_t = d_full.sub(ri, cj, dim, dim);
-        if self.engine == TileEngine::CycleResume && self.backend.supports_cycle_resume() {
+        if self.engine == TileEngine::LaneLockstep && self.backend.supports_lane_lockstep() {
+            // trial-lockstep: the whole chunk's suffix steps once
+            // through the lane mesh; this trial reads its lane
+            self.run_lockstep_tile(a_t, b_t, d_t, (ti, tj));
+        } else if matches!(self.engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
+            && self.backend.supports_cycle_resume()
+        {
             // cycle-resume: skip the golden prefix of the tile — the
-            // batch-shared cursor advances it once per tile
+            // batch-shared cursor advances it once per tile (also the
+            // lane-lockstep fallback on the HDFIT backend)
+            self.note_cursor_engine(TileEngine::CycleResume);
             self.rtl_cycles += self.backend.run_tile_resumed(
                 a_t,
                 b_t,
@@ -431,7 +561,14 @@ impl<'a> CrossLayerRunner<'a> {
                 }
             }
         }
-        if self.engine == TileEngine::CycleResume && self.backend.supports_cycle_resume() {
+        if self.engine == TileEngine::LaneLockstep && self.backend.supports_lane_lockstep() {
+            let ws_d = std::mem::take(&mut self.ws_d);
+            self.run_lockstep_tile(a_t, w_t, ws_d.view(), (ti, tj));
+            self.ws_d = ws_d;
+        } else if matches!(self.engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
+            && self.backend.supports_cycle_resume()
+        {
+            self.note_cursor_engine(TileEngine::CycleResume);
             self.rtl_cycles += self.backend.run_tile_resumed(
                 a_t,
                 w_t,
@@ -906,10 +1043,116 @@ mod tests {
             !TileBackend::Soc(&mut soc).supports_cycle_resume(),
             "the SoC controller FSM owns its schedule: no cycle-resume"
         );
+        assert!(!TileBackend::Soc(&mut soc).supports_lane_lockstep());
         let mut mesh = Mesh::new(4, Dataflow::OutputStationary);
         assert!(TileBackend::Mesh(&mut mesh).supports_cycle_resume());
+        assert!(TileBackend::Mesh(&mut mesh).supports_lane_lockstep());
         let mut hm = InstrumentedMesh::new(4);
         assert!(TileBackend::Hdfit(&mut hm).supports_cycle_resume());
+        assert!(
+            !TileBackend::Hdfit(&mut hm).supports_lane_lockstep(),
+            "HDFIT hooks are armed per mesh instance: lockstep falls back"
+        );
+    }
+
+    #[test]
+    fn lockstep_chunk_matches_full_runners_and_steps_fewer_cycles() {
+        // The trial-lockstep contract, both dataflows: a whole chunk
+        // armed via begin_chunk/arm_lane must reproduce fresh
+        // full-engine runners bit-exactly (output AND exposure), while
+        // stepping strictly fewer RTL cycles than per-trial cycle-resume
+        // — the chunk's tile suffix is paid once, not once per trial.
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let model = models::quicknet(5);
+            let mut rng = Rng::new(86);
+            let x = synthetic_input(&model.input_shape, &mut rng);
+            let trials = [a_trial(2), a_trial(20), a_trial(33)];
+
+            let mut full = Vec::new();
+            for t in &trials {
+                let mut mesh = Mesh::new(8, dataflow);
+                let mut r = CrossLayerRunner::new(
+                    t,
+                    TileBackend::Mesh(&mut mesh),
+                    OffloadScope::SingleTile,
+                );
+                let out = model.forward(&x, Some(&mut r));
+                full.push((out, r.exposed));
+            }
+
+            // per-trial cycle-resume cycle count: the lockstep baseline
+            let mut mesh = Mesh::new(8, dataflow);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+                TileEngine::CycleResume,
+            );
+            for (i, t) in trials.iter().enumerate() {
+                if i > 0 {
+                    r.arm(t);
+                }
+                r.backend.reset();
+                let _ = model.forward(&x, Some(&mut r));
+            }
+            let resume_cycles = r.rtl_cycles;
+
+            let mut mesh = Mesh::new(8, dataflow);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+                TileEngine::LaneLockstep,
+            );
+            r.begin_chunk(trials.iter().map(|t| &t.plan).collect());
+            for (lane, t) in trials.iter().enumerate() {
+                r.arm_lane(t, lane);
+                r.backend.reset();
+                let out = model.forward(&x, Some(&mut r));
+                assert_eq!(out, full[lane].0, "{dataflow} trial {lane} output");
+                assert_eq!(r.exposed, full[lane].1, "{dataflow} trial {lane} exposure");
+            }
+            assert!(
+                r.rtl_cycles < resume_cycles,
+                "{dataflow}: lockstep stepped {} cycles, cycle-resume {}",
+                r.rtl_cycles,
+                resume_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn lockstep_single_trial_arm_matches_cycle_resume_cycles() {
+        // Legacy arm() under lane-lockstep = a one-lane chunk per trial:
+        // bit-identical results and EXACTLY the cycle-resume cycle count
+        // (one lane pays the same advance + suffix as a resumed trial).
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(87);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trials = [a_trial(2), a_trial(20)];
+        let mut outs = Vec::new();
+        let mut cycles = Vec::new();
+        for engine in [TileEngine::CycleResume, TileEngine::LaneLockstep] {
+            let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+                engine,
+            );
+            let mut got = Vec::new();
+            for (i, t) in trials.iter().enumerate() {
+                if i > 0 {
+                    r.arm(t);
+                }
+                r.backend.reset();
+                got.push(model.forward(&x, Some(&mut r)));
+            }
+            outs.push(got);
+            cycles.push(r.rtl_cycles);
+        }
+        assert_eq!(outs[0], outs[1], "one-lane lockstep != cycle-resume");
+        assert_eq!(cycles[0], cycles[1], "one-lane lockstep cycle count");
     }
 
     #[test]

@@ -146,7 +146,7 @@ impl std::fmt::Display for TrialEngine {
 /// How the offloaded RTL tile itself is stepped per trial.
 ///
 /// CLI / JSON grammar (`--tile-engine` / `"tile_engine"`):
-/// `full | cycle-resume`.
+/// `full | cycle-resume | lane-lockstep`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum TileEngine {
     /// Snapshot the golden mesh trajectory of each offloaded tile and
@@ -159,6 +159,13 @@ pub enum TileEngine {
     /// Step every trial from cycle 0 — the bit-exactness oracle for
     /// cycle-resume, mirroring [`TrialEngine::FullForward`].
     Full,
+    /// Cycle-resume plus trial-lockstep lane batching: a site batch's
+    /// trials on one tile restore the golden snapshot at the chunk's
+    /// minimum first-effect cycle and step the suffix ONCE through a
+    /// lane-contiguous SoA mesh, `--lanes` trials side by side.
+    /// Mesh-backend only; HDFIT falls back to cycle-resume and the
+    /// whole-SoC backend to full, exactly like the gates above.
+    LaneLockstep,
 }
 
 impl TileEngine {
@@ -166,6 +173,7 @@ impl TileEngine {
         match s.to_ascii_lowercase().as_str() {
             "cycle-resume" | "cycle_resume" | "cycle" => Some(TileEngine::CycleResume),
             "full" => Some(TileEngine::Full),
+            "lane-lockstep" | "lane_lockstep" | "lockstep" => Some(TileEngine::LaneLockstep),
             _ => None,
         }
     }
@@ -176,6 +184,7 @@ impl std::fmt::Display for TileEngine {
         let s = match self {
             TileEngine::CycleResume => "cycle-resume",
             TileEngine::Full => "full",
+            TileEngine::LaneLockstep => "lane-lockstep",
         };
         write!(f, "{s}")
     }
@@ -295,6 +304,10 @@ pub struct CampaignConfig {
     /// RTL tile execution engine (cycle-resume by default; full is the
     /// bit-exactness oracle). Results are bit-identical either way.
     pub tile_engine: TileEngine,
+    /// Lane count for the `lane-lockstep` tile engine: how many trials
+    /// of one site batch step the tile suffix side by side. Ignored by
+    /// the other engines; results are bit-identical for ANY lane count.
+    pub lanes: usize,
     /// Restrict injection to these signal kinds (empty = all).
     pub signals: Vec<String>,
     /// Fault scenario sampled per trial (`seu` reproduces the legacy
@@ -314,6 +327,7 @@ impl Default for CampaignConfig {
             offload_scope: OffloadScope::SingleTile,
             engine: TrialEngine::SiteResume,
             tile_engine: TileEngine::CycleResume,
+            lanes: 8,
             signals: vec![],
             scenario: Scenario::Seu,
             workers: 1,
@@ -331,6 +345,9 @@ impl CampaignConfig {
         }
         if self.workers == 0 {
             bail!("workers must be > 0");
+        }
+        if self.lanes == 0 {
+            bail!("lanes must be > 0");
         }
         Ok(())
     }
@@ -411,6 +428,9 @@ impl Config {
             if let Some(v) = c.get("workers").and_then(Json::as_usize) {
                 cfg.campaign.workers = v;
             }
+            if let Some(v) = c.get("lanes").and_then(Json::as_usize) {
+                cfg.campaign.lanes = v;
+            }
             if let Some(arr) = c.get("signals").and_then(Json::as_arr) {
                 cfg.campaign.signals = arr
                     .iter()
@@ -474,7 +494,8 @@ mod tests {
                            "trial_engine": "full-forward",
                            "tile_engine": "full",
                            "scenario": "mbu:2",
-                           "workers": 2, "signals": ["propag", "valid"]},
+                           "workers": 2, "lanes": 4,
+                           "signals": ["propag", "valid"]},
               "artifacts_dir": "art"
             }"#,
         )
@@ -486,6 +507,7 @@ mod tests {
         assert_eq!(c.campaign.engine, TrialEngine::FullForward);
         assert_eq!(c.campaign.tile_engine, TileEngine::Full);
         assert_eq!(c.campaign.scenario, Scenario::Mbu { bits: 2 });
+        assert_eq!(c.campaign.lanes, 4);
         assert_eq!(c.campaign.signals.len(), 2);
         assert_eq!(c.artifacts_dir, "art");
     }
@@ -549,16 +571,29 @@ mod tests {
             ("cycle_resume", TileEngine::CycleResume),
             ("cycle", TileEngine::CycleResume),
             ("full", TileEngine::Full),
+            ("lane-lockstep", TileEngine::LaneLockstep),
+            ("lane_lockstep", TileEngine::LaneLockstep),
+            ("lockstep", TileEngine::LaneLockstep),
         ] {
             assert_eq!(TileEngine::parse(s), Some(want), "{s}");
         }
         assert_eq!(TileEngine::parse("bogus"), None);
         assert_eq!(TileEngine::CycleResume.to_string(), "cycle-resume");
         assert_eq!(TileEngine::Full.to_string(), "full");
+        assert_eq!(TileEngine::LaneLockstep.to_string(), "lane-lockstep");
         // display round-trips through the grammar
-        for e in [TileEngine::CycleResume, TileEngine::Full] {
+        for e in [
+            TileEngine::CycleResume,
+            TileEngine::Full,
+            TileEngine::LaneLockstep,
+        ] {
             assert_eq!(TileEngine::parse(&e.to_string()), Some(e));
         }
+        // the lane knob defaults on and rejects zero
+        assert_eq!(Config::default().campaign.lanes, 8);
+        let mut c = Config::default();
+        c.campaign.lanes = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //! `(campaign seed, input index)` so results are bit-identical
 //! regardless of worker count or claim order — required for the paper's
 //! reproducibility claims and pinned by `rust/tests/prop_coordinator.rs`.
+//!
+//! The `(input, site)` claim granularity is deliberate for the
+//! lane-lockstep tile engine: a worker always owns a **whole**
+//! [`SiteBatch`](crate::campaign::campaign::SiteBatch), so every
+//! same-tile trial of the batch lands on one executor and its lockstep
+//! lanes stay full — finer (per-trial) sharding would split chunks
+//! across workers and forfeit the batched suffix.
 
 use crate::campaign::campaign::{
     campaign_sites, derived_input_seed, plan_one, signal_kinds, validate_dataflow_support,
@@ -168,6 +175,7 @@ mod tests {
                 offload_scope: Default::default(),
                 engine: TrialEngine::SiteResume,
                 tile_engine: Default::default(),
+                lanes: 8,
                 signals: vec![],
                 scenario: Default::default(),
                 workers,

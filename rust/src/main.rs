@@ -63,6 +63,19 @@
 //!                              controller FSM owns the schedule)
 //! --tile-engine full           step every trial from cycle 0 — the
 //!                              bit-exactness oracle for cycle-resume
+//! --tile-engine lane-lockstep  cycle-resume plus lane batching: group a
+//!                              site batch's same-tile trials into chunks
+//!                              of `--lanes` and step each tile suffix
+//!                              once through a lane-contiguous mesh, one
+//!                              trial per lane. Bit-identical to the
+//!                              other engines for a fixed seed at ANY
+//!                              lane count (mesh backend only; HDFIT
+//!                              falls back to cycle-resume, the whole-SoC
+//!                              backend to full)
+//! --lanes <n>                  lane count for lane-lockstep (default 8;
+//!                              n >= 1 — lanes=1 degenerates to
+//!                              cycle-resume exactly, cycle counts
+//!                              included). Ignored by the other engines
 //! ```
 
 #![allow(clippy::needless_range_loop)]
@@ -151,9 +164,11 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
             .ok_or_else(|| anyhow::anyhow!("bad --trial-engine {s} (site-resume|full-forward)"))?;
     }
     if let Some(s) = args.get("tile-engine") {
-        cfg.campaign.tile_engine = TileEngine::parse(s)
-            .ok_or_else(|| anyhow::anyhow!("bad --tile-engine {s} (full|cycle-resume)"))?;
+        cfg.campaign.tile_engine = TileEngine::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("bad --tile-engine {s} (full|cycle-resume|lane-lockstep)")
+        })?;
     }
+    cfg.campaign.lanes = args.usize_or("lanes", cfg.campaign.lanes)?;
     if let Some(s) = args.get("scenario") {
         cfg.campaign.scenario = Scenario::parse(s).ok_or_else(|| {
             anyhow::anyhow!("bad --scenario {s} (seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>)")
@@ -284,10 +299,10 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     let model = models::by_name(&name, cc.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
-        "campaign: model={name} backend={} engine={} tile-engine={} scenario={} dim={} \
+        "campaign: model={name} backend={} engine={} tile-engine={} lanes={} scenario={} dim={} \
          dataflow={} inputs={} faults/layer={}",
-        cc.backend, cc.engine, cc.tile_engine, cc.scenario, mesh_cfg.dim, mesh_cfg.dataflow,
-        cc.inputs, cc.faults_per_layer
+        cc.backend, cc.engine, cc.tile_engine, cc.lanes, cc.scenario, mesh_cfg.dim,
+        mesh_cfg.dataflow, cc.inputs, cc.faults_per_layer
     );
     let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
     let (lo, hi) = r.vuln.ci95();
@@ -317,6 +332,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             ("dataflow", Json::str(r.dataflow.to_string())),
             ("scenario", Json::str(r.scenario.to_string())),
             ("tile_engine", Json::str(cc.tile_engine.to_string())),
+            ("lanes", Json::num(cc.lanes as f64)),
             ("trials", Json::num(r.vuln.trials as f64)),
             ("critical", Json::num(r.vuln.critical as f64)),
             ("exposed", Json::num(r.exposed_trials as f64)),

@@ -12,6 +12,7 @@
 //! implicit zero padding plays the role of the zero-padded scratchpad
 //! read the real frontend performs.
 
+use super::mesh::StepOutput;
 use crate::mat::{Mat, MatView};
 
 /// Emulates the bank of skew shift-registers that staggers operand lane
@@ -133,12 +134,12 @@ impl FlushCollector {
     }
 
     /// Record this cycle's south-edge flush outputs.
-    pub fn absorb(&mut self, south_c: &[Option<i32>]) {
-        for (col, v) in south_c.iter().enumerate() {
-            if let Some(v) = *v {
+    pub fn absorb(&mut self, out: &StepOutput) {
+        for col in 0..self.dim {
+            if out.has_south_c(col) {
                 let k = self.taken[col];
                 if k < self.dim {
-                    self.c.set(self.dim - 1 - k, col, v);
+                    self.c.set(self.dim - 1 - k, col, out.south_c_at(col));
                     self.taken[col] += 1;
                 }
             }
@@ -207,10 +208,16 @@ mod tests {
 
     #[test]
     fn flush_collector_reverses_rows() {
+        let south = |a: i32, b: i32| {
+            let mut out = StepOutput::new(2);
+            out.set_south_c(0, a);
+            out.set_south_c(1, b);
+            out
+        };
         let mut fc = FlushCollector::new(2);
-        fc.absorb(&[Some(30), Some(40)]); // first out = row 1
+        fc.absorb(&south(30, 40)); // first out = row 1
         assert!(!fc.complete());
-        fc.absorb(&[Some(10), Some(20)]); // then row 0
+        fc.absorb(&south(10, 20)); // then row 0
         assert!(fc.complete());
         assert_eq!(fc.c, Mat::from_vec(2, 2, vec![10, 20, 30, 40]));
     }

@@ -41,6 +41,7 @@
 
 use super::adapters::SkewFeeder;
 use super::inject::{Fault, FaultPlan, Injectable, PlanCursor};
+use super::lane::{LaneCursor, LaneMesh};
 use super::mesh::{MeshInputs, MeshState, StepOutput};
 use crate::config::Dataflow;
 use crate::mat::{Mat, MatView};
@@ -263,22 +264,22 @@ impl<'a> Schedule<'a> {
         }
         match self.streams {
             Streams::Os { .. } => {
-                for (col, v) in step_out.south_c.iter().enumerate() {
-                    if let Some(v) = *v {
+                for col in 0..self.dim {
+                    if step_out.has_south_c(col) {
                         let k = taken[col];
                         if k < self.out_rows {
-                            out.set(self.out_rows - 1 - k, col, v);
+                            out.set(self.out_rows - 1 - k, col, step_out.south_c_at(col));
                             taken[col] = k + 1;
                         }
                     }
                 }
             }
             Streams::Ws { .. } => {
-                for (col, v) in step_out.south_psum.iter().enumerate() {
-                    if let Some(ps) = *v {
+                for col in 0..self.dim {
+                    if step_out.has_south_psum(col) {
                         let k = taken[col];
                         if k < self.out_rows {
-                            out.set(k, col, ps);
+                            out.set(k, col, step_out.south_psum_at(col));
                             taken[col] = k + 1;
                         }
                     }
@@ -315,15 +316,25 @@ impl DriverScratch {
         }
     }
 
-    /// Shape for `dim` lanes and zero the drain counter (reusing the
-    /// allocations whenever the dimension is unchanged).
-    fn begin(&mut self, dim: usize) {
+    /// Shape the buffers for `dim` WITHOUT resetting the drain counter —
+    /// the one scratch is reused across `advance_golden`,
+    /// `matmul_resumed` and the lockstep span, and the resume paths
+    /// overwrite `taken` wholesale from the cursor's golden progress, so
+    /// re-zeroing it per call would be wasted work.
+    fn ensure_dim(&mut self, dim: usize) {
         if self.inp.west_a.len() != dim {
             self.inp = MeshInputs::idle(dim);
             self.step_out = StepOutput::new(dim);
+            self.taken.clear();
+            self.taken.resize(dim, 0);
         }
-        self.taken.clear();
-        self.taken.resize(dim, 0);
+    }
+
+    /// Shape for `dim` lanes and zero the drain counter (reusing the
+    /// allocations whenever the dimension is unchanged).
+    fn begin(&mut self, dim: usize) {
+        self.ensure_dim(dim);
+        self.taken.fill(0);
     }
 }
 
@@ -497,7 +508,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         if cur.key == Some(key) && cur.cycle == target {
             return 0; // snapshot already at the requested cycle
         }
-        scratch.begin(self.mesh.dim());
+        // reshape-only: the drain progress lives in `cur.taken` here
+        scratch.ensure_dim(self.mesh.dim());
         if cur.key != Some(key) || cur.cycle > target {
             // fresh tile — or a rewound target (possible only when tile
             // clamping merged two sort groups): restart the trajectory
@@ -560,7 +572,8 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
             cur.cycle <= self.mesh.first_effect_cycle(plan).min(sched.total_cycles()),
             "snapshot taken past the plan's first effect cycle"
         );
-        scratch.begin(self.mesh.dim());
+        // reshape-only: `taken` is primed from the cursor just below
+        scratch.ensure_dim(self.mesh.dim());
         if !plan.is_empty() {
             self.mesh.arm(plan);
         }
@@ -618,6 +631,96 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         }
         to.saturating_sub(from)
     }
+}
+
+/// Trial-lockstep resume (PR 6 tentpole): replay the suffix of ONE tile
+/// matmul for a whole chunk of trials at once — one [`LaneMesh`] lane
+/// per trial. Sound because of the site-resume invariant: every trial of
+/// a site batch shares operands, so a single `Schedule::fill` per cycle
+/// feeds ALL lanes, and each lane's fault-free replay of
+/// `[cur.cycle(), fe_l)` reproduces the golden trajectory bit-for-bit
+/// before its own plan first acts at `fe_l`.
+///
+/// Requires `cur` to have been advanced ([`MatmulDriver::advance_golden`])
+/// for the SAME operands to a cycle `<=` the minimum first-effect cycle
+/// over `plans`. Every lane restores from the one golden snapshot
+/// ([`LaneMesh::broadcast`]), primes its result and drain counters from
+/// the cursor's golden progress, and the suffix is stepped ONCE in
+/// lockstep; each lane fires only its own plan through its
+/// [`LaneCursor`]. `outs[l]` is then bit-identical to a per-trial
+/// [`MatmulDriver::matmul_resumed`] with `plans[l]` (pinned by
+/// `lockstep_resumed_matches_per_trial_resume` below and by
+/// `rust/tests/prop_lockstep.rs` end to end).
+///
+/// Returns the cycles stepped — counted ONCE per lockstep cycle, not
+/// per lane, which is what `rtl_cycles_stepped` reports and why a chunk
+/// of N>1 trials steps strictly fewer cycles than N cycle-resume runs.
+pub fn lockstep_resumed(
+    mesh: &mut LaneMesh,
+    a: MatView<i8>,
+    b: MatView<i8>,
+    d: MatView<i32>,
+    plans: &[&FaultPlan],
+    cur: &CycleCursor,
+    outs: &mut Vec<Mat<i32>>,
+    scratch: &mut DriverScratch,
+) -> u64 {
+    let dim = mesh.dim();
+    let lanes = plans.len();
+    assert!(lanes > 0, "a lockstep chunk needs at least one trial");
+    let sched = Schedule::new(mesh.dataflow(), dim, a, b, d);
+    debug_assert!(
+        cur.key.is_some(),
+        "lockstep resume requires an advanced golden cursor"
+    );
+    debug_assert_eq!(
+        (cur.partial.rows(), cur.partial.cols()),
+        sched.out_shape(),
+        "cursor was advanced for a different schedule"
+    );
+    debug_assert!(
+        cur.cycle
+            <= plans
+                .iter()
+                .map(|p| p.first_cycle())
+                .min()
+                .unwrap_or(u64::MAX)
+                .min(sched.total_cycles()),
+        "snapshot taken past the chunk's first effect cycle"
+    );
+    // reshape-only: per-lane drain counters live in `mesh.takens`
+    scratch.ensure_dim(dim);
+    mesh.reshape(lanes);
+    mesh.broadcast(&cur.state);
+    if outs.len() != lanes {
+        outs.resize_with(lanes, Mat::default);
+    }
+    let mut cursors = Vec::with_capacity(lanes);
+    for (l, plan) in plans.iter().enumerate() {
+        // prime each lane's result and drain progress with the golden
+        // prefix, exactly as a per-trial resume would
+        outs[l].clone_from(&cur.partial);
+        mesh.takens[l].clear();
+        mesh.takens[l].extend_from_slice(&cur.taken);
+        cursors.push(LaneCursor::start(plan));
+    }
+    let total = sched.total_cycles();
+    for t in cur.cycle..total {
+        sched.fill(t, &mut scratch.inp);
+        mesh.begin_cycle(&scratch.inp);
+        // Still one compare per lane per cycle — ENFOR-SA's whole
+        // overhead story, now amortized over the shared fill and step.
+        for (l, cursor) in cursors.iter_mut().enumerate() {
+            if cursor.next_cycle() == t {
+                cursor.fire(plans[l], t, mesh, l);
+            }
+        }
+        mesh.step();
+        for (l, out) in outs.iter_mut().enumerate() {
+            sched.drain(t, &mesh.step_outs[l], out, &mut mesh.takens[l]);
+        }
+    }
+    total.saturating_sub(cur.cycle)
 }
 
 /// Reference tiled matmul over the mesh: decomposes an arbitrary
@@ -1167,6 +1270,94 @@ mod tests {
                     drv.matmul_resumed(a.view(), b.view(), d.view(), &plan, &cur, &mut out, &mut scratch);
                 assert_eq!(stepped, total - tf, "{dataflow} tf={tf}: replay length");
                 assert_eq!(out, full, "{dataflow} tf={tf}: resumed != full");
+            }
+        }
+    }
+
+    /// Lockstep chunk vs per-trial oracle: a lane batch of heterogeneous
+    /// plans (control, storage, multi-fault, stuck-at) stepped once in
+    /// lockstep must reproduce each trial's full faulty run bit-exactly,
+    /// for both dataflows, paying the suffix once. A second, smaller
+    /// chunk on the same [`LaneMesh`] pins the reshape path and cursor
+    /// reuse at a later resume point.
+    #[test]
+    fn lockstep_resumed_matches_per_trial_resume() {
+        use crate::mesh::lane::LaneMesh;
+        use crate::mesh::signal::SignalKind;
+        let mut rng = Rng::new(35);
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let dim = 4;
+            let (a, b, d) = match dataflow {
+                Dataflow::OutputStationary => {
+                    (rng.mat_i8(dim, 6), rng.mat_i8(6, dim), rng.mat_i32(dim, dim, 100))
+                }
+                Dataflow::WeightStationary => {
+                    (rng.mat_i8(5, dim), rng.mat_i8(dim, dim), rng.mat_i32(5, dim, 100))
+                }
+            };
+            let mut mesh = Mesh::new(dim, dataflow);
+            let total = Schedule::new(dataflow, dim, a.view(), b.view(), d.view()).total_cycles();
+            let mut lane_mesh = LaneMesh::new(dim, dataflow);
+            let mut cur = CycleCursor::new();
+            let mut scratch = DriverScratch::new(dim);
+            let mut outs = Vec::new();
+            for (chunk_idx, plans) in [
+                vec![
+                    FaultPlan::single(Fault::new(1, 2, SignalKind::Propag, 0, 2)),
+                    FaultPlan::single(Fault::new(2, 1, SignalKind::Acc, 27, 9)),
+                    FaultPlan::new(vec![
+                        Fault::new(0, 0, SignalKind::Act, 3, 7),
+                        Fault::new(3, 3, SignalKind::DReg, 11, 15),
+                    ]),
+                    FaultPlan::single(Fault::stuck_at(1, 1, SignalKind::Valid, 0, true, 5)),
+                ],
+                // second chunk: fewer lanes, later first-effect cycles
+                vec![
+                    FaultPlan::single(Fault::new(0, 1, SignalKind::Weight, 2, 12)),
+                    FaultPlan::single(Fault::new(2, 2, SignalKind::Acc, 5, 14)),
+                ],
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                let mut fulls = Vec::new();
+                for plan in &plans {
+                    fulls.push(MatmulDriver::new(&mut mesh).matmul_with_plan(
+                        a.view(),
+                        b.view(),
+                        d.view(),
+                        plan,
+                    ));
+                }
+                let min_fe = plans.iter().map(|p| p.first_cycle()).min().unwrap();
+                MatmulDriver::new(&mut mesh).advance_golden(
+                    a.view(),
+                    b.view(),
+                    d.view(),
+                    (0, 0),
+                    min_fe,
+                    &mut cur,
+                    &mut scratch,
+                );
+                let plan_refs: Vec<&FaultPlan> = plans.iter().collect();
+                let stepped = lockstep_resumed(
+                    &mut lane_mesh,
+                    a.view(),
+                    b.view(),
+                    d.view(),
+                    &plan_refs,
+                    &cur,
+                    &mut outs,
+                    &mut scratch,
+                );
+                assert_eq!(
+                    stepped,
+                    total - min_fe,
+                    "{dataflow} chunk {chunk_idx}: suffix paid once"
+                );
+                for (l, full) in fulls.iter().enumerate() {
+                    assert_eq!(&outs[l], full, "{dataflow} chunk {chunk_idx} lane {l}");
+                }
             }
         }
     }

@@ -252,7 +252,7 @@ impl InstrumentedMesh {
                 // verilated `reg = hook(expr)` rewrites):
                 let acc_next = if p_in {
                     if r == dim - 1 {
-                        out.south_c[c] = Some(self.base.acc[i]);
+                        out.set_south_c(c, self.base.acc[i]);
                     }
                     d_in
                 } else if v_in {
@@ -328,9 +328,9 @@ impl InstrumentedMesh {
                 let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
                 if r == dim - 1 {
                     if p_in {
-                        out.south_c[c] = Some(w_old as i32);
+                        out.set_south_c(c, w_old as i32);
                     } else if v_in {
-                        out.south_psum[c] = Some(ps);
+                        out.set_south_psum(c, ps);
                     }
                 }
 

@@ -35,6 +35,7 @@
 //! * `Act` — the horizontal a-path pipeline (`reg_a[r][c-1]` / west
 //!   edge wire), where WS streams its activations.
 
+use super::lane::LaneMesh;
 use super::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
 use super::signal::{SignalAddr, SignalKind};
 use crate::config::Dataflow;
@@ -365,6 +366,85 @@ impl Mesh {
     /// ENFOR-SA injection entry point used by the drivers.
     pub fn inject_now(&mut self, fault: &Fault, inp: &mut MeshInputs) {
         apply_enforsa(self, inp, fault);
+    }
+}
+
+/// Lane-batched twin of [`apply_enforsa`]: corrupt the SAME source
+/// register/edge wire, but only in lane `lane` of a [`LaneMesh`]. The
+/// lane-contiguous SoA layout maps scalar flat index `x` to
+/// `x * lanes + lane`, so every arm below is the scalar arm with that
+/// stride substituted; edge wires land in the per-lane stripes that
+/// `LaneMesh::begin_cycle` rebuilds each cycle (giving edge faults the
+/// same one-cycle lifetime as the scalar path's refilled `MeshInputs`).
+/// `north_d` has no arm here for the same reason it has none above: the
+/// preload stream is not an injection target.
+pub(crate) fn apply_enforsa_lane(mesh: &mut LaneMesh, lane: usize, fault: &Fault) {
+    let (r, c) = (fault.addr.row, fault.addr.col);
+    let dim = mesh.dim();
+    let lanes = mesh.lanes();
+    assert!(r < dim && c < dim, "fault target outside mesh");
+    assert!(lane < lanes, "fault lane outside the lane batch");
+    let i = (r * dim + c) * lanes + lane;
+    let f8 = |v: i8| match fault.persistence {
+        Persistence::Transient => flip_i8(v, fault.bit),
+        Persistence::StuckAt(val) => set_bit_i8(v, fault.bit, val),
+    };
+    let f32v = |v: i32| match fault.persistence {
+        Persistence::Transient => flip_i32(v, fault.bit),
+        Persistence::StuckAt(val) => set_bit_i32(v, fault.bit, val),
+    };
+    let fb = |v: bool| match fault.persistence {
+        Persistence::Transient => flip_bool(v),
+        Persistence::StuckAt(val) => val,
+    };
+    match fault.addr.kind {
+        SignalKind::Weight => {
+            if mesh.dataflow() == Dataflow::WeightStationary {
+                mesh.reg_w[i] = f8(mesh.reg_w[i]);
+            } else if c == 0 {
+                let e = r * lanes + lane;
+                mesh.west_a[e] = f8(mesh.west_a[e]);
+            } else {
+                mesh.reg_a[i - lanes] = f8(mesh.reg_a[i - lanes]);
+            }
+        }
+        SignalKind::Act => {
+            if mesh.dataflow() == Dataflow::WeightStationary {
+                if c == 0 {
+                    let e = r * lanes + lane;
+                    mesh.west_a[e] = f8(mesh.west_a[e]);
+                } else {
+                    mesh.reg_a[i - lanes] = f8(mesh.reg_a[i - lanes]);
+                }
+            } else if r == 0 {
+                let e = c * lanes + lane;
+                mesh.north_b[e] = f8(mesh.north_b[e]);
+            } else {
+                mesh.reg_b[i - dim * lanes] = f8(mesh.reg_b[i - dim * lanes]);
+            }
+        }
+        SignalKind::Propag => {
+            if r == 0 {
+                let e = c * lanes + lane;
+                mesh.north_propag[e] = fb(mesh.north_propag[e]);
+            } else {
+                mesh.reg_propag[i - dim * lanes] = fb(mesh.reg_propag[i - dim * lanes]);
+            }
+        }
+        SignalKind::Valid => {
+            if r == 0 {
+                let e = c * lanes + lane;
+                mesh.north_valid[e] = fb(mesh.north_valid[e]);
+            } else {
+                mesh.reg_valid[i - dim * lanes] = fb(mesh.reg_valid[i - dim * lanes]);
+            }
+        }
+        SignalKind::Acc => {
+            mesh.acc[i] = f32v(mesh.acc[i]);
+        }
+        SignalKind::DReg => {
+            mesh.reg_d[i] = f32v(mesh.reg_d[i]);
+        }
     }
 }
 

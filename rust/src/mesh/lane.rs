@@ -1,0 +1,547 @@
+//! Trial-lockstep lane-batched mesh (PR 6 tentpole).
+//!
+//! A [`LaneMesh`] steps LANES independent trials of the SAME tile matmul
+//! through one register-accurate mesh pass. The site-resume invariant
+//! (PR 2) makes this sound: every trial of a `SiteBatch` shares its
+//! operands and checkpoint, so the `Schedule` edge streams are identical
+//! across trials — only the injected faults differ, and those touch at
+//! most a handful of lane-local registers per firing cycle.
+//!
+//! Layout: per-PE state is **lane-contiguous** (structure-of-arrays with
+//! the lane index innermost) — scalar flat index `x` of [`super::Mesh`]
+//! maps to `x * lanes + lane` here. The lockstep kernels transliterate
+//! the scalar `step_os`/`step_ws` bodies with an innermost branch-free
+//! loop over lanes (select ladders instead of lane-dependent control
+//! flow), which is the shape LLVM auto-vectorizes. Only the south-edge
+//! drain strip is branchy, and each lane owns its own
+//! [`StepOutput`]/drain counters there.
+//!
+//! Feeding: one `Schedule::fill` per cycle produces the shared
+//! [`MeshInputs`]; [`LaneMesh::begin_cycle`] broadcasts the edge wires
+//! into per-lane stripes so a lane's [`LaneCursor`] can corrupt its own
+//! copy (edge-wire faults live exactly one cycle, mirroring the scalar
+//! path where `fill`'s leading `clear()` rebuilds the shared inputs).
+//! `north_d` stays genuinely shared — it is never an injection target
+//! (see `apply_enforsa`: no arm reads or writes `inp.north_d`).
+
+use super::inject::{apply_enforsa_lane, Fault, FaultPlan, Persistence};
+use super::mesh::{MeshInputs, MeshState, StepOutput};
+use crate::config::Dataflow;
+
+/// Broadcast one scalar register file into every lane of its SoA twin.
+fn spread<T: Copy>(dst: &mut [T], src: &[T], lanes: usize) {
+    debug_assert_eq!(dst.len(), src.len() * lanes);
+    for (i, &v) in src.iter().enumerate() {
+        dst[i * lanes..(i + 1) * lanes].fill(v);
+    }
+}
+
+/// Lane-batched systolic mesh: LANES trials' register state side by
+/// side, stepped in lockstep by [`LaneMesh::step`].
+#[derive(Clone, Debug)]
+pub struct LaneMesh {
+    dim: usize,
+    lanes: usize,
+    dataflow: Dataflow,
+    cycle: u64,
+    // SoA register files, `[dim * dim * lanes]`, lane index innermost.
+    pub(crate) reg_a: Vec<i8>,
+    pub(crate) reg_b: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) reg_d: Vec<i32>,
+    pub(crate) reg_propag: Vec<bool>,
+    pub(crate) reg_valid: Vec<bool>,
+    pub(crate) reg_w: Vec<i8>,
+    // Per-lane edge stripes `[dim * lanes]`, rebuilt every cycle by
+    // `begin_cycle` (so an edge-wire fault lives one cycle, like the
+    // scalar path's shared `MeshInputs` rebuilt by `Schedule::fill`).
+    pub(crate) west_a: Vec<i8>,
+    pub(crate) north_b: Vec<i8>,
+    pub(crate) north_propag: Vec<bool>,
+    pub(crate) north_valid: Vec<bool>,
+    /// Shared preload stream `[dim]` — never an injection target.
+    north_d: Vec<i32>,
+    /// Pre-edge copy of one row's `reg_a` lanes (Verilator
+    /// inverted-assignment-order semantics, as in the scalar kernels).
+    scratch_a: Vec<i8>,
+    /// Per-lane south-edge drain strip.
+    pub(crate) step_outs: Vec<StepOutput>,
+    /// Per-lane drain counters, primed from the cursor per chunk.
+    pub(crate) takens: Vec<Vec<usize>>,
+}
+
+impl LaneMesh {
+    /// An empty (zero-lane) mesh; [`LaneMesh::reshape`] sizes it per
+    /// chunk.
+    pub fn new(dim: usize, dataflow: Dataflow) -> Self {
+        LaneMesh {
+            dim,
+            lanes: 0,
+            dataflow,
+            cycle: 0,
+            reg_a: Vec::new(),
+            reg_b: Vec::new(),
+            acc: Vec::new(),
+            reg_d: Vec::new(),
+            reg_propag: Vec::new(),
+            reg_valid: Vec::new(),
+            reg_w: Vec::new(),
+            west_a: Vec::new(),
+            north_b: Vec::new(),
+            north_propag: Vec::new(),
+            north_valid: Vec::new(),
+            north_d: vec![0; dim],
+            scratch_a: Vec::new(),
+            step_outs: Vec::new(),
+            takens: Vec::new(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn dataflow(&self) -> Dataflow {
+        self.dataflow
+    }
+
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Lane `lane`'s accumulator at PE (r, c) — test/debug peek.
+    pub fn acc_at(&self, lane: usize, r: usize, c: usize) -> i32 {
+        self.acc[(r * self.dim + c) * self.lanes + lane]
+    }
+
+    /// Resize to `lanes` lanes, reusing allocations when unchanged.
+    /// Contents are left arbitrary — `broadcast` (registers),
+    /// `begin_cycle` (edges) and the caller (drain counters) overwrite
+    /// everything a chunk reads.
+    pub fn reshape(&mut self, lanes: usize) {
+        assert!(lanes > 0, "a lockstep chunk needs at least one lane");
+        if self.lanes == lanes {
+            return;
+        }
+        self.lanes = lanes;
+        let dim = self.dim;
+        let pe = dim * dim * lanes;
+        let edge = dim * lanes;
+        self.reg_a.resize(pe, 0);
+        self.reg_b.resize(pe, 0);
+        self.acc.resize(pe, 0);
+        self.reg_d.resize(pe, 0);
+        self.reg_propag.resize(pe, false);
+        self.reg_valid.resize(pe, false);
+        self.reg_w.resize(pe, 0);
+        self.west_a.resize(edge, 0);
+        self.north_b.resize(edge, 0);
+        self.north_propag.resize(edge, false);
+        self.north_valid.resize(edge, false);
+        self.scratch_a.resize(edge, 0);
+        self.step_outs.resize_with(lanes, || StepOutput::new(dim));
+        self.takens.resize_with(lanes, Vec::new);
+    }
+
+    /// Restore every lane from one golden [`MeshState`] snapshot — the
+    /// lockstep analogue of `Mesh::restore_state`, replicating each
+    /// scalar register across the lane stripe.
+    pub fn broadcast(&mut self, state: &MeshState) {
+        assert_eq!(
+            state.acc.len(),
+            self.dim * self.dim,
+            "snapshot taken on a differently-dimensioned mesh"
+        );
+        let lanes = self.lanes;
+        self.cycle = state.cycle;
+        spread(&mut self.reg_a, &state.reg_a, lanes);
+        spread(&mut self.reg_b, &state.reg_b, lanes);
+        spread(&mut self.acc, &state.acc, lanes);
+        spread(&mut self.reg_d, &state.reg_d, lanes);
+        spread(&mut self.reg_propag, &state.reg_propag, lanes);
+        spread(&mut self.reg_valid, &state.reg_valid, lanes);
+        spread(&mut self.reg_w, &state.reg_w, lanes);
+    }
+
+    /// Broadcast this cycle's shared edge wires into the per-lane
+    /// stripes and clear the drain strips. Called once per cycle with
+    /// the single `Schedule::fill` result that feeds ALL lanes.
+    pub fn begin_cycle(&mut self, inp: &MeshInputs) {
+        debug_assert_eq!(inp.west_a.len(), self.dim);
+        let lanes = self.lanes;
+        spread(&mut self.west_a, &inp.west_a, lanes);
+        spread(&mut self.north_b, &inp.north_b, lanes);
+        spread(&mut self.north_propag, &inp.north_propag, lanes);
+        spread(&mut self.north_valid, &inp.north_valid, lanes);
+        self.north_d.copy_from_slice(&inp.north_d);
+        for out in &mut self.step_outs {
+            out.clear();
+        }
+    }
+
+    /// Advance every lane one cycle in lockstep.
+    pub fn step(&mut self) {
+        match self.dataflow {
+            Dataflow::OutputStationary => self.step_os(),
+            Dataflow::WeightStationary => self.step_ws(),
+        }
+        self.cycle += 1;
+    }
+
+    /// Lockstep transliteration of the scalar `Mesh::step_os`: same
+    /// most-downstream-first row order, same row-0 peel (columns in
+    /// reverse), same pre-edge `scratch_a` copy for interior rows — with
+    /// the lane loop innermost and the accumulator update a branch-free
+    /// select ladder so every lane takes the same control path.
+    fn step_os(&mut self) {
+        let dim = self.dim;
+        let lanes = self.lanes;
+        for r in (0..dim).rev() {
+            let base = r * dim;
+            if r == 0 {
+                for c in (0..dim).rev() {
+                    let d_in = self.north_d[c];
+                    for l in 0..lanes {
+                        let i = c * lanes + l;
+                        let a_in = if c == 0 {
+                            self.west_a[l]
+                        } else {
+                            self.reg_a[(c - 1) * lanes + l]
+                        };
+                        let b_in = self.north_b[i];
+                        let p_in = self.north_propag[i];
+                        let v_in = self.north_valid[i];
+                        let acc_old = self.acc[i];
+                        if dim == 1 && p_in {
+                            self.step_outs[l].set_south_c(c, acc_old);
+                        }
+                        let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
+                        self.acc[i] = if p_in {
+                            d_in
+                        } else if v_in {
+                            mac
+                        } else {
+                            acc_old
+                        };
+                        self.reg_d[i] = d_in;
+                        self.reg_a[i] = a_in;
+                        self.reg_b[i] = b_in;
+                        self.reg_propag[i] = p_in;
+                        self.reg_valid[i] = v_in;
+                    }
+                }
+                continue;
+            }
+            let north = base - dim;
+            let bottom = r == dim - 1;
+            let row = base * lanes;
+            self.scratch_a
+                .copy_from_slice(&self.reg_a[row..row + dim * lanes]);
+            for c in 0..dim {
+                let ibase = (base + c) * lanes;
+                let nbase = (north + c) * lanes;
+                for l in 0..lanes {
+                    let i = ibase + l;
+                    let n = nbase + l;
+                    let a_in = if c == 0 {
+                        self.west_a[r * lanes + l]
+                    } else {
+                        self.scratch_a[(c - 1) * lanes + l]
+                    };
+                    let b_in = self.reg_b[n];
+                    let p_in = self.reg_propag[n];
+                    let v_in = self.reg_valid[n];
+                    let d_in = self.reg_d[i];
+                    let out_c_north = self.acc[n];
+                    let acc_old = self.acc[i];
+                    if bottom && p_in {
+                        self.step_outs[l].set_south_c(c, acc_old);
+                    }
+                    let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
+                    self.acc[i] = if p_in {
+                        d_in
+                    } else if v_in {
+                        mac
+                    } else {
+                        acc_old
+                    };
+                    self.reg_d[i] = out_c_north;
+                    self.reg_a[i] = a_in;
+                    self.reg_b[i] = b_in;
+                    self.reg_propag[i] = p_in;
+                    self.reg_valid[i] = v_in;
+                }
+            }
+        }
+    }
+
+    /// Lockstep transliteration of the scalar `Mesh::step_ws` under the
+    /// same discipline as [`LaneMesh::step_os`].
+    fn step_ws(&mut self) {
+        let dim = self.dim;
+        let lanes = self.lanes;
+        for r in (0..dim).rev() {
+            let base = r * dim;
+            if r == 0 {
+                let bottom = dim == 1;
+                for c in (0..dim).rev() {
+                    let d_in = self.north_d[c];
+                    for l in 0..lanes {
+                        let i = c * lanes + l;
+                        let a_in = if c == 0 {
+                            self.west_a[l]
+                        } else {
+                            self.reg_a[(c - 1) * lanes + l]
+                        };
+                        let b_in = self.north_b[i];
+                        let p_in = self.north_propag[i];
+                        let v_in = self.north_valid[i];
+                        let w_old = self.reg_w[i];
+                        let ps = d_in.wrapping_add(w_old as i32 * a_in as i32);
+                        if bottom {
+                            if p_in {
+                                self.step_outs[l].set_south_c(c, w_old as i32);
+                            } else if v_in {
+                                self.step_outs[l].set_south_psum(c, ps);
+                            }
+                        }
+                        self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
+                        self.acc[i] = if p_in {
+                            d_in
+                        } else if v_in {
+                            ps
+                        } else {
+                            self.acc[i]
+                        };
+                        self.reg_d[i] = d_in;
+                        self.reg_a[i] = a_in;
+                        self.reg_b[i] = b_in;
+                        self.reg_propag[i] = p_in;
+                        self.reg_valid[i] = v_in;
+                    }
+                }
+                continue;
+            }
+            let north = base - dim;
+            let bottom = r == dim - 1;
+            let row = base * lanes;
+            self.scratch_a
+                .copy_from_slice(&self.reg_a[row..row + dim * lanes]);
+            for c in 0..dim {
+                let ibase = (base + c) * lanes;
+                let nbase = (north + c) * lanes;
+                for l in 0..lanes {
+                    let i = ibase + l;
+                    let n = nbase + l;
+                    let a_in = if c == 0 {
+                        self.west_a[r * lanes + l]
+                    } else {
+                        self.scratch_a[(c - 1) * lanes + l]
+                    };
+                    let b_in = self.reg_b[n];
+                    let p_in = self.reg_propag[n];
+                    let v_in = self.reg_valid[n];
+                    let d_in = self.reg_d[i];
+                    let ps_in = self.acc[n];
+                    let w_old = self.reg_w[i];
+                    let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
+                    if bottom {
+                        if p_in {
+                            self.step_outs[l].set_south_c(c, w_old as i32);
+                        } else if v_in {
+                            self.step_outs[l].set_south_psum(c, ps);
+                        }
+                    }
+                    self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
+                    self.acc[i] = if p_in {
+                        d_in
+                    } else if v_in {
+                        ps
+                    } else {
+                        self.acc[i]
+                    };
+                    self.reg_d[i] = ps_in;
+                    self.reg_a[i] = a_in;
+                    self.reg_b[i] = b_in;
+                    self.reg_propag[i] = p_in;
+                    self.reg_valid[i] = v_in;
+                }
+            }
+        }
+    }
+}
+
+/// Per-lane fault cursor: [`super::PlanCursor`]'s start/next_cycle/fire
+/// contract verbatim — one compare per lane per cycle, stuck-at faults
+/// re-armed every cycle while active — but firing through the
+/// lane-strided `apply_enforsa_lane` so only this lane's registers and
+/// edge stripe are corrupted.
+#[derive(Clone, Debug)]
+pub struct LaneCursor {
+    next: usize,
+    due: u64,
+    active: Vec<Fault>,
+}
+
+impl LaneCursor {
+    pub fn start(plan: &FaultPlan) -> Self {
+        LaneCursor {
+            next: 0,
+            due: plan.first_cycle(),
+            active: Vec::new(),
+        }
+    }
+
+    /// Next cycle at which [`LaneCursor::fire`] must run — the single
+    /// per-cycle compare.
+    #[inline]
+    pub fn next_cycle(&self) -> u64 {
+        self.due
+    }
+
+    /// Apply this lane's faults due at cycle `t`: active stuck-at
+    /// faults replay first, then due-onset faults in plan order.
+    pub fn fire(&mut self, plan: &FaultPlan, t: u64, mesh: &mut LaneMesh, lane: usize) {
+        for f in &self.active {
+            apply_enforsa_lane(mesh, lane, f);
+        }
+        let faults = plan.faults();
+        while self.next < faults.len() && faults[self.next].cycle == t {
+            let f = faults[self.next];
+            apply_enforsa_lane(mesh, lane, &f);
+            if matches!(f.persistence, Persistence::StuckAt(_)) {
+                self.active.push(f);
+            }
+            self.next += 1;
+        }
+        self.due = if !self.active.is_empty() {
+            t + 1
+        } else if self.next < faults.len() {
+            faults[self.next].cycle
+        } else {
+            u64::MAX
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mesh::{Mesh, MeshSim};
+    use super::*;
+
+    /// Every lane of a golden (no-fault) lockstep pass must track the
+    /// scalar mesh register for register: step both from reset under
+    /// identical inputs and compare accumulators each cycle.
+    #[test]
+    fn golden_lanes_track_the_scalar_mesh() {
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let dim = 3;
+            let mut mesh = Mesh::new(dim, dataflow);
+            let mut lane_mesh = LaneMesh::new(dim, dataflow);
+            lane_mesh.reshape(4);
+            let mut state = MeshState::default();
+            mesh.save_state(&mut state);
+            lane_mesh.broadcast(&state);
+            let mut inp = MeshInputs::idle(dim);
+            let mut out = StepOutput::new(dim);
+            for t in 0..20u64 {
+                inp.clear();
+                for c in 0..dim {
+                    inp.west_a[c] = (t as i8).wrapping_mul(3).wrapping_add(c as i8);
+                    inp.north_b[c] = (c as i8).wrapping_sub(t as i8);
+                    inp.north_d[c] = t as i32 * 100 + c as i32;
+                    inp.north_propag[c] = t % 7 == c as u64 % 7;
+                    inp.north_valid[c] = (t + c as u64) % 3 != 0;
+                }
+                out.clear();
+                lane_mesh.begin_cycle(&inp);
+                mesh.step(&inp, &mut out);
+                lane_mesh.step();
+                for lane in 0..4 {
+                    for r in 0..dim {
+                        for c in 0..dim {
+                            assert_eq!(
+                                lane_mesh.acc_at(lane, r, c),
+                                mesh.acc_at(r, c),
+                                "{dataflow} t={t} lane={lane} PE({r},{c})"
+                            );
+                        }
+                    }
+                    for c in 0..dim {
+                        assert_eq!(
+                            lane_mesh.step_outs[lane].has_south_c(c),
+                            out.has_south_c(c),
+                            "{dataflow} t={t} lane={lane} south_c mask col {c}"
+                        );
+                        if out.has_south_c(c) {
+                            assert_eq!(
+                                lane_mesh.step_outs[lane].south_c_at(c),
+                                out.south_c_at(c)
+                            );
+                        }
+                        assert_eq!(
+                            lane_mesh.step_outs[lane].has_south_psum(c),
+                            out.has_south_psum(c),
+                            "{dataflow} t={t} lane={lane} south_psum mask col {c}"
+                        );
+                        if out.has_south_psum(c) {
+                            assert_eq!(
+                                lane_mesh.step_outs[lane].south_psum_at(c),
+                                out.south_psum_at(c)
+                            );
+                        }
+                    }
+                }
+            }
+            assert_eq!(lane_mesh.cycle(), mesh.cycle());
+        }
+    }
+
+    /// A fault fired into one lane must leave every other lane golden.
+    #[test]
+    fn lane_faults_stay_lane_local() {
+        use super::super::signal::SignalKind;
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let dim = 2;
+            let mut lane_mesh = LaneMesh::new(dim, dataflow);
+            lane_mesh.reshape(3);
+            let mut state = MeshState::default();
+            Mesh::new(dim, dataflow).save_state(&mut state);
+            lane_mesh.broadcast(&state);
+            let plan = FaultPlan::single(Fault::new(1, 1, SignalKind::Acc, 4, 2));
+            let mut cursor = LaneCursor::start(&plan);
+            let mut inp = MeshInputs::idle(dim);
+            for t in 0..4u64 {
+                inp.clear();
+                for c in 0..dim {
+                    inp.west_a[c] = 1 + c as i8;
+                    inp.north_b[c] = 2;
+                    inp.north_valid[c] = true;
+                }
+                lane_mesh.begin_cycle(&inp);
+                if cursor.next_cycle() == t {
+                    cursor.fire(&plan, t, &mut lane_mesh, 1);
+                }
+                lane_mesh.step();
+            }
+            for r in 0..dim {
+                for c in 0..dim {
+                    assert_eq!(
+                        lane_mesh.acc_at(0, r, c),
+                        lane_mesh.acc_at(2, r, c),
+                        "{dataflow} untouched lanes diverged at PE({r},{c})"
+                    );
+                }
+            }
+            assert_ne!(
+                lane_mesh.acc_at(1, 1, 1),
+                lane_mesh.acc_at(0, 1, 1),
+                "{dataflow} lane 1's acc fault did not land"
+            );
+        }
+    }
+}

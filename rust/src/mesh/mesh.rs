@@ -72,26 +72,73 @@ impl MeshInputs {
 }
 
 /// Values crossing the south edge during one cycle.
+///
+/// Dense `i32` buffers plus a validity bitmask (one bit per column,
+/// packed into 64-bit words) instead of an `Option` per column: drain
+/// collection is a mask-bit test over flat storage, and the lane-batched
+/// kernels don't carry an `Option` per lane — mirroring the flat-`Mat`
+/// boundary contract.
 #[derive(Clone, Debug)]
 pub struct StepOutput {
     /// `out_c` wire of each bottom-row PE when its propagate input was
-    /// asserted this cycle (flush traffic), else None.
-    pub south_c: Vec<Option<i32>>,
+    /// asserted this cycle (flush traffic); valid iff its mask bit set.
+    south_c: Vec<i32>,
     /// Completed partial sums leaving the bottom row (WS dataflow).
-    pub south_psum: Vec<Option<i32>>,
+    south_psum: Vec<i32>,
+    south_c_mask: Vec<u64>,
+    south_psum_mask: Vec<u64>,
 }
 
 impl StepOutput {
     pub fn new(dim: usize) -> Self {
+        let words = dim.div_ceil(64);
         StepOutput {
-            south_c: vec![None; dim],
-            south_psum: vec![None; dim],
+            south_c: vec![0; dim],
+            south_psum: vec![0; dim],
+            south_c_mask: vec![0; words],
+            south_psum_mask: vec![0; words],
         }
     }
 
+    /// Invalidate every column. Values are left in place — only the mask
+    /// words are zeroed, so the per-cycle clear is O(dim/64).
     pub fn clear(&mut self) {
-        self.south_c.fill(None);
-        self.south_psum.fill(None);
+        self.south_c_mask.fill(0);
+        self.south_psum_mask.fill(0);
+    }
+
+    #[inline]
+    pub fn set_south_c(&mut self, col: usize, v: i32) {
+        self.south_c[col] = v;
+        self.south_c_mask[col >> 6] |= 1 << (col & 63);
+    }
+
+    #[inline]
+    pub fn set_south_psum(&mut self, col: usize, v: i32) {
+        self.south_psum[col] = v;
+        self.south_psum_mask[col >> 6] |= 1 << (col & 63);
+    }
+
+    #[inline]
+    pub fn has_south_c(&self, col: usize) -> bool {
+        self.south_c_mask[col >> 6] & (1 << (col & 63)) != 0
+    }
+
+    #[inline]
+    pub fn has_south_psum(&self, col: usize) -> bool {
+        self.south_psum_mask[col >> 6] & (1 << (col & 63)) != 0
+    }
+
+    /// The column's value; meaningful only when [`Self::has_south_c`].
+    #[inline]
+    pub fn south_c_at(&self, col: usize) -> i32 {
+        self.south_c[col]
+    }
+
+    /// The column's value; meaningful only when [`Self::has_south_psum`].
+    #[inline]
+    pub fn south_psum_at(&self, col: usize) -> i32 {
+        self.south_psum[col]
     }
 }
 
@@ -103,14 +150,16 @@ impl StepOutput {
 /// (`restore_state(save_state(m)) ≡ id`, pinned by test).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MeshState {
-    cycle: u64,
-    reg_a: Vec<i8>,
-    reg_b: Vec<i8>,
-    acc: Vec<i32>,
-    reg_d: Vec<i32>,
-    reg_propag: Vec<bool>,
-    reg_valid: Vec<bool>,
-    reg_w: Vec<i8>,
+    // pub(crate): the lane-batched engine broadcasts a snapshot into
+    // every lane of its SoA register files (`mesh::lane`).
+    pub(crate) cycle: u64,
+    pub(crate) reg_a: Vec<i8>,
+    pub(crate) reg_b: Vec<i8>,
+    pub(crate) acc: Vec<i32>,
+    pub(crate) reg_d: Vec<i32>,
+    pub(crate) reg_propag: Vec<bool>,
+    pub(crate) reg_valid: Vec<bool>,
+    pub(crate) reg_w: Vec<i8>,
 }
 
 impl MeshState {
@@ -219,7 +268,7 @@ impl Mesh {
                     let d_in = inp.north_d[c];
                     if p_in {
                         if dim == 1 {
-                            out.south_c[c] = Some(self.acc[c]);
+                            out.set_south_c(c, self.acc[c]);
                         }
                         self.acc[c] = d_in;
                     } else if v_in {
@@ -263,7 +312,7 @@ impl Mesh {
                 // ---- sequential assignments (branch-free selects) ----
                 let acc_old = self.acc[i];
                 if bottom && p_in {
-                    out.south_c[c] = Some(acc_old);
+                    out.set_south_c(c, acc_old);
                 }
                 let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
                 self.acc[i] = if p_in {
@@ -311,7 +360,7 @@ impl Mesh {
                         // weight preload: the d-chain staircases W in;
                         // the old weight flushes out through the chain.
                         if bottom {
-                            out.south_c[c] = Some(self.reg_w[c] as i32);
+                            out.set_south_c(c, self.reg_w[c] as i32);
                         }
                         self.reg_w[c] = (d_in & 0xff) as i8;
                         self.acc[c] = d_in;
@@ -319,7 +368,7 @@ impl Mesh {
                         let ps = d_in.wrapping_add(self.reg_w[c] as i32 * a_in as i32);
                         self.acc[c] = ps;
                         if bottom {
-                            out.south_psum[c] = Some(ps);
+                            out.set_south_psum(c, ps);
                         }
                     }
                     self.reg_d[c] = d_in;
@@ -354,9 +403,9 @@ impl Mesh {
                 let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
                 if bottom {
                     if p_in {
-                        out.south_c[c] = Some(w_old as i32);
+                        out.set_south_c(c, w_old as i32);
                     } else if v_in {
-                        out.south_psum[c] = Some(ps);
+                        out.set_south_psum(c, ps);
                     }
                 }
                 // ---- sequential assignments (branch-free selects) ----
@@ -465,7 +514,7 @@ mod tests {
         }
         assert_eq!(m.cycle(), 10);
         assert!(m.acc.iter().all(|&v| v == 0));
-        assert!(out.south_c.iter().all(|o| o.is_none()));
+        assert!((0..4).all(|c| !out.has_south_c(c)));
     }
 
     #[test]
@@ -561,8 +610,8 @@ mod tests {
                 inp.north_propag[0] = true;
             }
             m.step(&inp, &mut out);
-            if let Some(v) = out.south_c[0] {
-                captured.push(v);
+            if out.has_south_c(0) {
+                captured.push(out.south_c_at(0));
             }
         }
         assert_eq!(captured, vec![300, 200, 100]);

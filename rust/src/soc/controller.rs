@@ -272,7 +272,7 @@ impl Controller {
                 }
                 self.step_mesh_with_fault();
                 if let Some(col) = self.collector.as_mut() {
-                    col.absorb(&self.out.south_c);
+                    col.absorb(&self.out);
                 }
                 if p + 1 == 2 * dim - 1 {
                     // land C into the accumulator memory

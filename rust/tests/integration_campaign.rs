@@ -14,6 +14,7 @@ fn cfg(backend: Backend, faults: u64, inputs: u64) -> CampaignConfig {
         offload_scope: OffloadScope::SingleTile,
         engine: TrialEngine::SiteResume,
         tile_engine: Default::default(),
+        lanes: 8,
         signals: vec![],
         scenario: Default::default(),
         workers: 1,

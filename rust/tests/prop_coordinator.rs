@@ -32,12 +32,14 @@ fn random_cfg(rng: &mut Rng) -> CampaignConfig {
         } else {
             TrialEngine::FullForward
         },
-        // ... and both tile engines
-        tile_engine: if rng.chance(0.5) {
-            TileEngine::CycleResume
-        } else {
-            TileEngine::Full
-        },
+        // ... and all three tile engines
+        tile_engine: [
+            TileEngine::Full,
+            TileEngine::CycleResume,
+            TileEngine::LaneLockstep,
+        ][rng.usize_below(3)],
+        // lane counts 1..=8: every one must be outcome-invariant
+        lanes: 1 + rng.usize_below(8),
         signals: vec![],
         // every scenario must satisfy every coordinator property
         scenario: [

@@ -41,6 +41,7 @@ fn cfg(backend: Backend, scenario: Scenario, tile_engine: TileEngine) -> Campaig
         offload_scope: OffloadScope::SingleTile,
         engine: TrialEngine::SiteResume,
         tile_engine,
+        lanes: 8,
         signals: vec![],
         scenario,
         workers: 1,

@@ -1,0 +1,190 @@
+//! Property tests pinning the lane-lockstep tile engine against the
+//! cycle-resume and full oracles.
+//!
+//! Contracts (ROADMAP "Trial-lockstep lane-batched mesh stepping"):
+//! 1. Fixed-seed campaigns are bit-identical across `--tile-engine
+//!    full | cycle-resume | lane-lockstep` for ANY lane count, on both
+//!    dataflows, under every fault scenario, and across worker
+//!    shardings.
+//! 2. Lockstep steps strictly fewer total RTL cycles than cycle-resume
+//!    once trials pigeonhole onto shared tiles (each lockstep mesh step
+//!    counts once per cycle, not per lane), and `lanes = 1` degenerates
+//!    to cycle-resume exactly — cycle counts included.
+//! 3. Backends without lane support degrade through the gate chain:
+//!    HDFIT to cycle-resume, the whole-SoC backend to full — bit- and
+//!    cycle-identical to the engine they fall back to.
+
+use enfor_sa::campaign::{run_campaign, CampaignResult};
+use enfor_sa::config::{
+    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
+    TrialEngine,
+};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::models;
+
+fn cfg(backend: Backend, tile_engine: TileEngine, lanes: usize) -> CampaignConfig {
+    CampaignConfig {
+        seed: 0x10C_57E9,
+        faults_per_layer: 4,
+        inputs: 1,
+        backend,
+        offload_scope: OffloadScope::SingleTile,
+        engine: TrialEngine::SiteResume,
+        tile_engine,
+        lanes,
+        signals: vec![],
+        scenario: Default::default(),
+        workers: 1,
+    }
+}
+
+fn mesh_cfg(dataflow: Dataflow) -> MeshConfig {
+    MeshConfig { dataflow, ..Default::default() }
+}
+
+const SCENARIOS: [Scenario; 5] = [
+    Scenario::Seu,
+    Scenario::Mbu { bits: 2 },
+    Scenario::Burst { radius: 1 },
+    Scenario::DoubleSeu,
+    Scenario::StuckAt { value: true },
+];
+
+const DATAFLOWS: [Dataflow; 2] = [Dataflow::OutputStationary, Dataflow::WeightStationary];
+
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.vuln.trials, b.vuln.trials, "{label}: trials");
+    assert_eq!(a.vuln.critical, b.vuln.critical, "{label}: critical");
+    assert_eq!(a.exposed_trials, b.exposed_trials, "{label}: exposed");
+    assert_eq!(a.masked_trials, b.masked_trials, "{label}: masked");
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{label}: layer map size");
+    for ((la, va), (lb, vb)) in a.per_layer.iter().zip(b.per_layer.iter()) {
+        assert_eq!(la, lb, "{label}: layer ids");
+        assert_eq!(va.trials, vb.trials, "{label}: layer {la} trials");
+        assert_eq!(va.critical, vb.critical, "{label}: layer {la} critical");
+    }
+}
+
+/// Contract 1: the engine triple agrees bit-exactly for every scenario,
+/// dataflow and lane count — lockstep is an optimization, never a
+/// semantic change.
+#[test]
+fn prop_lockstep_matches_oracles_for_every_scenario_dataflow_and_lane_count() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        for scenario in SCENARIOS {
+            let mut full = cfg(Backend::EnforSa, TileEngine::Full, 8);
+            full.scenario = scenario;
+            let oracle = run_campaign(&model, &mc, &full).unwrap();
+            let mut resume = full.clone();
+            resume.tile_engine = TileEngine::CycleResume;
+            let r = run_campaign(&model, &mc, &resume).unwrap();
+            assert_bit_identical(&oracle, &r, &format!("{dataflow}/{scenario}/cycle-resume"));
+            for lanes in [1usize, 2, 7, 8] {
+                let mut lock = full.clone();
+                lock.tile_engine = TileEngine::LaneLockstep;
+                lock.lanes = lanes;
+                let l = run_campaign(&model, &mc, &lock).unwrap();
+                assert_bit_identical(
+                    &oracle,
+                    &l,
+                    &format!("{dataflow}/{scenario}/lockstep lanes={lanes}"),
+                );
+            }
+        }
+    }
+}
+
+/// Contract 1 (worker axis): lockstep campaigns are worker-count
+/// invariant, cycle accounting included — whole-(input, site) claims
+/// keep every chunk on one executor.
+#[test]
+fn prop_lockstep_is_worker_count_invariant() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut base = cfg(Backend::EnforSa, TileEngine::LaneLockstep, 4);
+        base.inputs = 2;
+        let one = run_parallel(&model, &mc, &base, None).unwrap();
+        for workers in [2usize, 3] {
+            let mut sharded = base.clone();
+            sharded.workers = workers;
+            let w = run_parallel(&model, &mc, &sharded, None).unwrap();
+            assert_bit_identical(&one, &w, &format!("{dataflow}/workers={workers}"));
+            assert_eq!(
+                one.rtl_cycles_stepped, w.rtl_cycles_stepped,
+                "{dataflow}: cycle accounting must not depend on workers={workers}"
+            );
+        }
+    }
+}
+
+/// Contract 2: the pigeonhole pin — with enough faults per layer to
+/// share tiles, lockstep steps strictly fewer TOTAL mesh cycles than
+/// cycle-resume (suffixes are paid per chunk, not per trial), while
+/// lanes=1 reproduces cycle-resume's count exactly.
+#[test]
+fn prop_lockstep_steps_strictly_fewer_cycles_and_one_lane_degenerates() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut resume = cfg(Backend::EnforSa, TileEngine::CycleResume, 8);
+        resume.faults_per_layer = 16;
+        let r = run_campaign(&model, &mc, &resume).unwrap();
+        let mut lock = resume.clone();
+        lock.tile_engine = TileEngine::LaneLockstep;
+        let l = run_campaign(&model, &mc, &lock).unwrap();
+        assert_bit_identical(&r, &l, &format!("{dataflow}: counts"));
+        assert!(r.rtl_cycles_stepped > 0 && l.rtl_cycles_stepped > 0);
+        assert!(
+            l.rtl_cycles_stepped < r.rtl_cycles_stepped,
+            "{dataflow}: lockstep must step fewer RTL cycles: {} vs {}",
+            l.rtl_cycles_stepped,
+            r.rtl_cycles_stepped
+        );
+        let mut single = lock.clone();
+        single.lanes = 1;
+        let s = run_campaign(&model, &mc, &single).unwrap();
+        assert_bit_identical(&r, &s, &format!("{dataflow}: lanes=1 counts"));
+        assert_eq!(
+            s.rtl_cycles_stepped, r.rtl_cycles_stepped,
+            "{dataflow}: a single lane must reproduce cycle-resume's cycle count exactly"
+        );
+    }
+}
+
+/// Contract 3: HDFIT rejects lane batching (instrumentation hooks arm
+/// one mesh instance) and must degrade to cycle-resume bit- and
+/// cycle-identically.
+#[test]
+fn prop_hdfit_lockstep_degrades_to_cycle_resume() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let lock = cfg(Backend::Hdfit, TileEngine::LaneLockstep, 8);
+        let a = run_campaign(&model, &mc, &lock).unwrap();
+        let resume = cfg(Backend::Hdfit, TileEngine::CycleResume, 8);
+        let b = run_campaign(&model, &mc, &resume).unwrap();
+        assert_bit_identical(&a, &b, &format!("{dataflow}: hdfit fallback"));
+        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+    }
+}
+
+/// Contract 3: the whole-SoC backend keeps the full tile path under
+/// lane-lockstep exactly as it does under cycle-resume.
+#[test]
+fn prop_full_soc_is_unaffected_by_lockstep() {
+    let model = models::quicknet(5);
+    // the whole-SoC backend steps the entire chip per cycle — keep the
+    // mesh small and the budget minimal, like every other SoC pin
+    let mc = MeshConfig { dim: 4, ..Default::default() };
+    let mut lock = cfg(Backend::FullSoc, TileEngine::LaneLockstep, 8);
+    lock.faults_per_layer = 1;
+    let a = run_campaign(&model, &mc, &lock).unwrap();
+    let mut full = cfg(Backend::FullSoc, TileEngine::Full, 8);
+    full.faults_per_layer = 1;
+    let b = run_campaign(&model, &mc, &full).unwrap();
+    assert_bit_identical(&a, &b, "full-soc fallback");
+    assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped);
+}

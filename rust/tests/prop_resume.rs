@@ -40,6 +40,7 @@ fn cfg(backend: Backend, engine: TrialEngine, scope: OffloadScope) -> CampaignCo
         offload_scope: scope,
         engine,
         tile_engine: Default::default(),
+        lanes: 8,
         signals: vec![],
         scenario: Default::default(),
         workers: 1,

@@ -44,6 +44,7 @@ fn cfg(backend: Backend, scenario: Scenario) -> CampaignConfig {
         offload_scope: OffloadScope::SingleTile,
         engine: TrialEngine::SiteResume,
         tile_engine: Default::default(),
+        lanes: 8,
         signals: vec![],
         scenario,
         workers: 1,
