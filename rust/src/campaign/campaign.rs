@@ -37,7 +37,8 @@
 //! sampled from, and the cycle range fault cycles are drawn from —
 //! with the OS draws exactly the legacy ones, so fixed-seed OS
 //! campaigns are bit-identical to the pre-dataflow-generic engine.
-//! The whole-SoC backend is OS-only ([`validate_dataflow_support`]).
+//! Every backend — the whole SoC included — runs both dataflows
+//! (ROADMAP "Schedule-indexable SoC").
 
 use super::fault::{sample_trial, TrialFault};
 use super::runner::{CrossLayerRunner, TileBackend};
@@ -268,9 +269,9 @@ impl TrialExecutor {
             Backend::Hdfit => {
                 Sim::Hdfit(InstrumentedMesh::with_dataflow(mesh_cfg.dim, mesh_cfg.dataflow))
             }
-            // the SoC takes its dataflow from MeshConfig too, but only
-            // implements the OS schedule — campaigns reject WS + FullSoc
-            // before construction (`validate_dataflow_support`)
+            // the SoC takes its dataflow from MeshConfig too: the
+            // controller's SocSchedule opens the OS or WS window from
+            // the same command stream shape
             Backend::FullSoc => {
                 Sim::Soc(Box::new(Soc::with_dataflow(mesh_cfg.dim, mesh_cfg.dataflow)))
             }
@@ -328,10 +329,11 @@ impl TrialExecutor {
                 result,
             ),
             // the SoC path always offloads a single tile (whole-layer
-            // offload through the core is unsupported); it also keeps
-            // the full tile engine — the controller FSM owns the
-            // schedule, so the runner's supports_cycle_resume gate
-            // falls back to full there (pinned by prop_cycle_resume.rs)
+            // offload through the core is unsupported). Cycle-resume is
+            // fully supported — the schedule-indexable controller
+            // snapshots mid-window (pinned by prop_cycle_resume.rs);
+            // lane-lockstep falls back to cycle-resume (one persistent
+            // chip cannot carry N lanes)
             Sim::Soc(s) => run_rtl_batch(
                 model,
                 plan,
@@ -385,11 +387,11 @@ fn run_rtl_batch(
     let lockstep = tile_engine == TileEngine::LaneLockstep
         && scope == OffloadScope::SingleTile
         && backend.supports_lane_lockstep();
-    let mut order: Vec<usize> = (0..batch.trials.len()).collect();
-    if matches!(tile_engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
+    let resumable = matches!(tile_engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
         && scope == OffloadScope::SingleTile
-        && backend.supports_cycle_resume()
-    {
+        && backend.supports_cycle_resume();
+    let mut order: Vec<usize> = (0..batch.trials.len()).collect();
+    if resumable {
         order.sort_by_key(|&i| {
             let t = rtl_trial(batch, i);
             (t.tile_i, t.tile_j, backend.first_effect_cycle(&t.plan))
@@ -423,11 +425,22 @@ fn run_rtl_batch(
             start = end;
         }
     } else {
+        if resumable {
+            // one cold reset per batch: the SoC's resume cursor lives
+            // inside the chip, so resetting per trial would re-stage
+            // every tile — and a stale cursor from another batch could
+            // collide on the (tile_i, tile_j) key. Batches are the
+            // sharding unit, so per-batch resets keep cycle accounting
+            // worker-count invariant. (No-op for the mesh backends.)
+            runner.backend.reset();
+        }
         for (idx, &i) in order.iter().enumerate() {
             if idx > 0 {
                 runner.arm(rtl_trial(batch, i));
             }
-            runner.backend.reset();
+            if !resumable {
+                runner.backend.reset();
+            }
             record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
         }
     }
@@ -512,18 +525,13 @@ pub fn run_input(
     run_campaign(model, mesh_cfg, &one)
 }
 
-/// Reject backend/dataflow combinations the simulators cannot execute:
-/// the whole-SoC backend is output-stationary only (its controller FSM
-/// implements the OS preload/compute/flush schedule), so WS campaigns
-/// must name a mesh-level backend. A config-level error — never a
-/// silent dataflow override (ROADMAP "Dataflow-generic campaigns").
-pub fn validate_dataflow_support(mesh_cfg: &MeshConfig, cfg: &CampaignConfig) -> Result<()> {
-    if cfg.backend == Backend::FullSoc && mesh_cfg.dataflow == Dataflow::WeightStationary {
-        anyhow::bail!(
-            "the full-SoC backend is output-stationary only (its controller FSM owns the OS \
-             schedule); run --dataflow ws campaigns on --backend enfor-sa or hdfit"
-        );
-    }
+/// Reject backend/dataflow combinations the simulators cannot execute.
+/// Since the SoC controller became schedule-indexable (ROADMAP
+/// "Schedule-indexable SoC"), every backend runs both dataflows and
+/// this accepts every combination — it is kept as the config-level seam
+/// where a future backend would surface its gaps as a clear error
+/// rather than a silent dataflow override.
+pub fn validate_dataflow_support(_mesh_cfg: &MeshConfig, _cfg: &CampaignConfig) -> Result<()> {
     Ok(())
 }
 
@@ -879,14 +887,75 @@ mod tests {
     }
 
     #[test]
-    fn ws_full_soc_campaign_is_rejected_with_a_clear_error() {
+    fn ws_full_soc_campaign_runs_and_counts() {
+        // WS + FullSoc used to be a config-level error; the
+        // schedule-indexable controller executes it end-to-end now
         let model = models::quicknet(5);
-        let (_, cfg) = small_cfg(Backend::FullSoc);
-        let err = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap_err();
-        assert!(
-            format!("{err}").contains("output-stationary only"),
-            "error must name the restriction: {err}"
+        let (_, mut cfg) = small_cfg(Backend::FullSoc);
+        let mesh_cfg = MeshConfig { dim: 4, dataflow: Dataflow::WeightStationary };
+        cfg.faults_per_layer = 2;
+        cfg.inputs = 1;
+        let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(r.dataflow, Dataflow::WeightStationary);
+        assert_eq!(r.vuln.trials, 10);
+        assert_eq!(
+            r.vuln.trials,
+            r.masked_trials + r.exposed_trials + r.vuln.critical,
+            "outcomes must partition trials"
         );
+        assert!(r.rtl_cycles_stepped > 0);
+    }
+
+    #[test]
+    fn full_soc_tile_engines_agree_and_cycle_resume_steps_fewer() {
+        // the FullSoc cycle-resume acceptance pin, both dataflows:
+        // bit-identical counts, strictly fewer SoC cycles once trials
+        // pigeonhole onto shared tiles (faults_per_layer=8 on dim=4)
+        let model = models::quicknet(5);
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let (_, mut cfg) = small_cfg(Backend::FullSoc);
+            let mesh_cfg = MeshConfig { dim: 4, dataflow };
+            cfg.faults_per_layer = 8;
+            cfg.inputs = 1;
+            cfg.tile_engine = TileEngine::CycleResume;
+            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            cfg.tile_engine = TileEngine::Full;
+            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(a.vuln.trials, b.vuln.trials, "{dataflow}");
+            assert_eq!(a.vuln.critical, b.vuln.critical, "{dataflow}");
+            assert_eq!(a.exposed_trials, b.exposed_trials, "{dataflow}");
+            assert_eq!(a.masked_trials, b.masked_trials, "{dataflow}");
+            assert!(a.rtl_cycles_stepped > 0 && b.rtl_cycles_stepped > 0);
+            assert!(
+                a.rtl_cycles_stepped < b.rtl_cycles_stepped,
+                "{dataflow}: SoC cycle-resume must step fewer cycles: {} vs {}",
+                a.rtl_cycles_stepped,
+                b.rtl_cycles_stepped
+            );
+        }
+    }
+
+    #[test]
+    fn full_soc_lane_lockstep_falls_back_to_cycle_resume() {
+        // one persistent chip cannot carry N lanes; the gate must
+        // degrade to cycle-resume with identical counts AND identical
+        // cycle accounting, both dataflows
+        let model = models::quicknet(5);
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let (_, mut cfg) = small_cfg(Backend::FullSoc);
+            let mesh_cfg = MeshConfig { dim: 4, dataflow };
+            cfg.faults_per_layer = 2;
+            cfg.inputs = 1;
+            cfg.tile_engine = TileEngine::LaneLockstep;
+            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            cfg.tile_engine = TileEngine::CycleResume;
+            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(a.vuln.trials, b.vuln.trials, "{dataflow}");
+            assert_eq!(a.vuln.critical, b.vuln.critical, "{dataflow}");
+            assert_eq!(a.exposed_trials, b.exposed_trials, "{dataflow}");
+            assert_eq!(a.masked_trials, b.masked_trials, "{dataflow}");
+            assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+        }
     }
 
     #[test]

@@ -48,7 +48,7 @@ impl<'a> TileBackend<'a> {
 
     /// The dataflow this backend's mesh executes — it decides the tile
     /// grid, the operand shapes and the cycle model of every offload
-    /// (the SoC is OS-only; campaigns reject WS there at config level).
+    /// (all three backends, the whole SoC included, run both dataflows).
     pub fn dataflow(&self) -> Dataflow {
         match self {
             TileBackend::Mesh(m) => m.dataflow(),
@@ -111,22 +111,24 @@ impl<'a> TileBackend<'a> {
         })
     }
 
-    /// Whether this backend supports the cycle-resume tile engine. The
-    /// whole-SoC backend does not: its controller FSM owns the matmul
-    /// schedule, so the wrapper cannot index it from an arbitrary cycle
-    /// — `full` is silently used instead (ROADMAP "Cycle-resume"
-    /// contract; pinned by the oracle tests).
+    /// Whether this backend supports the cycle-resume tile engine. All
+    /// three do: the mesh backends index their `Schedule` directly, and
+    /// the whole-SoC backend's controller is schedule-indexable too —
+    /// its `SocSchedule` + `ControllerState` snapshot give the same
+    /// advance-golden/replay shape through [`Soc::run_matmul_resumed`]
+    /// (ROADMAP "Schedule-indexable SoC"; pinned by the oracle tests).
     pub fn supports_cycle_resume(&self) -> bool {
-        !matches!(self, TileBackend::Soc(_))
+        true
     }
 
     /// Whether this backend supports the trial-lockstep lane engine.
     /// Mesh-only: the HDFIT backend arms its instrumentation hooks per
     /// mesh instance, so one instrumented mesh cannot carry N
-    /// independent trials' hooks side by side — it silently falls back
-    /// to cycle-resume, and the whole-SoC backend to full, the same
-    /// fallback shape as [`TileBackend::supports_cycle_resume`]
-    /// (ROADMAP "Trial-lockstep" contract; pinned by the oracle tests).
+    /// independent trials' hooks side by side, and the whole-SoC backend
+    /// steps one persistent chip — both silently fall back to
+    /// cycle-resume, the same fallback shape as
+    /// [`TileBackend::supports_cycle_resume`] (ROADMAP "Trial-lockstep"
+    /// contract; pinned by the oracle tests).
     pub fn supports_lane_lockstep(&self) -> bool {
         matches!(self, TileBackend::Mesh(_))
     }
@@ -147,8 +149,11 @@ impl<'a> TileBackend<'a> {
     /// `key` to the plan's first effect cycle, snapshot, and replay only
     /// the faulty suffix — bit-identical to [`TileBackend::run_tile_with`]
     /// (pinned by `prop_cycle_resume.rs`). Returns the RTL cycles
-    /// stepped (golden advance + replay). Callers must gate on
-    /// [`TileBackend::supports_cycle_resume`].
+    /// stepped: golden advance + replay for the mesh backends; prefix
+    /// staging (once per tile) + golden advance + replay SoC cycles for
+    /// the whole-SoC backend, whose resume cursor lives inside the `Soc`
+    /// itself ([`Soc::run_matmul_resumed`]) rather than in `cur`.
+    /// Callers must gate on [`TileBackend::supports_cycle_resume`].
     #[allow(clippy::too_many_arguments)]
     pub fn run_tile_resumed(
         &mut self,
@@ -160,9 +165,9 @@ impl<'a> TileBackend<'a> {
         cur: &mut CycleCursor,
         out: &mut Mat<i32>,
         scratch: &mut DriverScratch,
-    ) -> u64 {
+    ) -> anyhow::Result<u64> {
         let resume = self.first_effect_cycle(plan);
-        match self {
+        Ok(match self {
             TileBackend::Mesh(m) => {
                 let cycles =
                     MatmulDriver::new(*m).advance_golden(a, b, d, key, resume, cur, scratch);
@@ -173,16 +178,17 @@ impl<'a> TileBackend<'a> {
                     MatmulDriver::new(*m).advance_golden(a, b, d, key, resume, cur, scratch);
                 cycles + MatmulDriver::new(*m).matmul_resumed(a, b, d, plan, cur, out, scratch)
             }
-            TileBackend::Soc(_) => {
-                unreachable!("cycle-resume is mesh-only: the SoC controller owns its schedule")
-            }
-        }
+            TileBackend::Soc(s) => s.run_matmul_resumed(a, b, d, plan, key, resume, out)?,
+        })
     }
 
-    /// Prepare the backend for the next trial of a batch. The mesh
-    /// drivers reset the array at the start of every matmul, so only the
+    /// Prepare the backend for the next trial batch. The mesh drivers
+    /// reset the array at the start of every matmul, so only the
     /// whole-SoC backend (persistent across a campaign since the
     /// fresh-`Soc`-per-trial path was retired) has work to do here.
+    /// Note: the SoC's reset also invalidates its cycle-resume cursor,
+    /// so under the resumed engine this is a once-per-batch operation,
+    /// not a per-trial one.
     pub fn reset(&mut self) {
         if let TileBackend::Soc(s) = self {
             s.reset();
@@ -470,7 +476,7 @@ impl<'a> CrossLayerRunner<'a> {
             // batch-shared cursor advances it once per tile (also the
             // lane-lockstep fallback on the HDFIT backend)
             self.note_cursor_engine(TileEngine::CycleResume);
-            self.rtl_cycles += self.backend.run_tile_resumed(
+            match self.backend.run_tile_resumed(
                 a_t,
                 b_t,
                 d_t,
@@ -479,7 +485,10 @@ impl<'a> CrossLayerRunner<'a> {
                 &mut self.cursor,
                 &mut self.scratch,
                 &mut self.drv,
-            );
+            ) {
+                Ok(cycles) => self.rtl_cycles += cycles,
+                Err(e) => panic!("resumed tile offload failed for [{}]: {e:#}", self.trial),
+            }
         } else {
             match self
                 .backend
@@ -569,7 +578,7 @@ impl<'a> CrossLayerRunner<'a> {
             && self.backend.supports_cycle_resume()
         {
             self.note_cursor_engine(TileEngine::CycleResume);
-            self.rtl_cycles += self.backend.run_tile_resumed(
+            match self.backend.run_tile_resumed(
                 a_t,
                 w_t,
                 self.ws_d.view(),
@@ -578,7 +587,10 @@ impl<'a> CrossLayerRunner<'a> {
                 &mut self.cursor,
                 &mut self.scratch,
                 &mut self.drv,
-            );
+            ) {
+                Ok(cycles) => self.rtl_cycles += cycles,
+                Err(e) => panic!("resumed tile offload failed for [{}]: {e:#}", self.trial),
+            }
         } else {
             match self.backend.run_tile_with(
                 a_t,
@@ -1037,13 +1049,16 @@ mod tests {
     }
 
     #[test]
-    fn soc_backend_keeps_the_full_tile_path() {
+    fn soc_backend_supports_cycle_resume_but_not_lockstep() {
         let mut soc = Soc::new(4);
         assert!(
-            !TileBackend::Soc(&mut soc).supports_cycle_resume(),
-            "the SoC controller FSM owns its schedule: no cycle-resume"
+            TileBackend::Soc(&mut soc).supports_cycle_resume(),
+            "the schedule-indexable SoC controller supports cycle-resume"
         );
-        assert!(!TileBackend::Soc(&mut soc).supports_lane_lockstep());
+        assert!(
+            !TileBackend::Soc(&mut soc).supports_lane_lockstep(),
+            "the SoC steps one persistent chip: lockstep falls back to cycle-resume"
+        );
         let mut mesh = Mesh::new(4, Dataflow::OutputStationary);
         assert!(TileBackend::Mesh(&mut mesh).supports_cycle_resume());
         assert!(TileBackend::Mesh(&mut mesh).supports_lane_lockstep());
@@ -1053,6 +1068,60 @@ mod tests {
             !TileBackend::Hdfit(&mut hm).supports_lane_lockstep(),
             "HDFIT hooks are armed per mesh instance: lockstep falls back"
         );
+    }
+
+    #[test]
+    fn soc_cycle_resume_runner_matches_full_runners_and_steps_fewer_cycles() {
+        // The FullSoc cycle-resume contract, both dataflows: one resumed
+        // runner over a cycle-sorted same-tile batch reproduces fresh
+        // full-engine SoCs bit-exactly while stepping strictly fewer SoC
+        // cycles (staging prefix and fence-drain postfix paid once).
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let model = models::quicknet(5);
+            let mut rng = Rng::new(87);
+            let x = synthetic_input(&model.input_shape, &mut rng);
+            let trials = [a_trial(2), a_trial(20), a_trial(33)];
+
+            let mut full = Vec::new();
+            let mut full_cycles = 0u64;
+            for t in &trials {
+                let mut soc = Soc::with_dataflow(4, dataflow);
+                let mut r = CrossLayerRunner::new(
+                    t,
+                    TileBackend::Soc(&mut soc),
+                    OffloadScope::SingleTile,
+                );
+                let out = model.forward(&x, Some(&mut r));
+                full_cycles += r.rtl_cycles;
+                full.push((out, r.exposed));
+            }
+
+            // one resumed runner; reset ONCE (per-batch, like the
+            // campaign) — a per-trial reset would invalidate the SoC's
+            // resume cursor
+            let mut soc = Soc::with_dataflow(4, dataflow);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Soc(&mut soc),
+                OffloadScope::SingleTile,
+                TileEngine::CycleResume,
+            );
+            r.backend.reset();
+            for (i, t) in trials.iter().enumerate() {
+                if i > 0 {
+                    r.arm(t);
+                }
+                let out = model.forward(&x, Some(&mut r));
+                assert_eq!(out, full[i].0, "{dataflow:?}: trial {i} output");
+                assert_eq!(r.exposed, full[i].1, "{dataflow:?}: trial {i} exposure");
+            }
+            assert!(
+                r.rtl_cycles < full_cycles,
+                "{dataflow:?}: SoC cycle-resume stepped {} cycles, full engine {}",
+                r.rtl_cycles,
+                full_cycles
+            );
+        }
     }
 
     #[test]

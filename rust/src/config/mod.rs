@@ -11,10 +11,11 @@ use std::path::Path;
 ///
 /// A first-class campaign axis (CLI `--dataflow os|ws`, JSON
 /// `mesh.dataflow`): every scenario, trial engine, tile engine and
-/// worker sharding runs end-to-end under either dataflow on the mesh
-/// backends. Only the whole-SoC backend is OS-only (its controller FSM
-/// implements the OS schedule) — WS there is a config-level error, not
-/// a silent override (ROADMAP "Dataflow-generic campaigns").
+/// worker sharding runs end-to-end under either dataflow on every
+/// backend, the whole SoC included — its schedule-indexable controller
+/// opens an OS preload/compute/flush or WS preload/compute window from
+/// the same command stream shape (ROADMAP "Dataflow-generic campaigns"
+/// and "Schedule-indexable SoC").
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Dataflow {
     /// Output-stationary: accumulators stay in the PEs, operands stream.
@@ -151,9 +152,10 @@ impl std::fmt::Display for TrialEngine {
 pub enum TileEngine {
     /// Snapshot the golden mesh trajectory of each offloaded tile and
     /// start every trial at its first fault cycle; a site batch pays
-    /// each tile's golden prefix once (the default fast path). The
-    /// whole-SoC backend keeps the full path — its controller FSM owns
-    /// the schedule — so cycle-resume silently falls back there.
+    /// each tile's golden prefix once (the default fast path). On the
+    /// whole-SoC backend the controller snapshot additionally skips the
+    /// command-decode/DMA prefix (paid once per tile) and the
+    /// fence-drain/halt postfix (never replayed).
     #[default]
     CycleResume,
     /// Step every trial from cycle 0 — the bit-exactness oracle for
@@ -163,8 +165,8 @@ pub enum TileEngine {
     /// trials on one tile restore the golden snapshot at the chunk's
     /// minimum first-effect cycle and step the suffix ONCE through a
     /// lane-contiguous SoA mesh, `--lanes` trials side by side.
-    /// Mesh-backend only; HDFIT falls back to cycle-resume and the
-    /// whole-SoC backend to full, exactly like the gates above.
+    /// Mesh-backend only; HDFIT and the whole-SoC backend fall back to
+    /// cycle-resume (one persistent chip cannot carry N lanes).
     LaneLockstep,
 }
 

@@ -25,9 +25,10 @@
 //! the weight-stationary mesh ([`config::Dataflow`], `--dataflow`).
 //! Under OS a trial offloads one output tile with the full-K stream;
 //! under WS it offloads one preloaded DIM x DIM weight tile with the
-//! full M-row activation panel streamed through it. Only the whole-SoC
-//! backend stays OS-only (its controller FSM owns the OS schedule —
-//! WS there is a config error, never a silent override).
+//! full M-row activation panel streamed through it. The whole-SoC
+//! backend included: its schedule-indexable controller ([`soc`])
+//! opens an OS preload/compute/flush or WS preload/compute window
+//! from the same command stream shape, and supports cycle-resume.
 //!
 //! ## Quick start
 //!

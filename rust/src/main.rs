@@ -45,9 +45,10 @@
 //!                         psums flow north->south; trials offload one
 //!                         weight tile with the full M-row activation
 //!                         panel. Every scenario / engine / backend
-//!                         knob composes with it, except the whole-SoC
-//!                         backend (OS-only controller FSM — WS there
-//!                         is a config error, never a silent override)
+//!                         knob composes with it, the whole-SoC backend
+//!                         included (its controller opens a WS
+//!                         preload/compute window from the same command
+//!                         stream shape)
 //! ```
 //!
 //! ... a trial engine via `--trial-engine site-resume|full-forward`
@@ -58,9 +59,10 @@
 //! --tile-engine cycle-resume   snapshot the golden mesh trajectory per
 //!                              offloaded tile and start every trial at
 //!                              its first fault cycle; a site batch pays
-//!                              each tile's golden prefix once (default;
-//!                              the whole-SoC backend keeps `full` — its
-//!                              controller FSM owns the schedule)
+//!                              each tile's golden prefix once (default).
+//!                              On the whole-SoC backend the controller
+//!                              snapshot also skips the command-decode/
+//!                              DMA prefix and the fence/halt postfix
 //! --tile-engine full           step every trial from cycle 0 — the
 //!                              bit-exactness oracle for cycle-resume
 //! --tile-engine lane-lockstep  cycle-resume plus lane batching: group a
@@ -69,9 +71,9 @@
 //!                              once through a lane-contiguous mesh, one
 //!                              trial per lane. Bit-identical to the
 //!                              other engines for a fixed seed at ANY
-//!                              lane count (mesh backend only; HDFIT
-//!                              falls back to cycle-resume, the whole-SoC
-//!                              backend to full)
+//!                              lane count (mesh backend only; HDFIT and
+//!                              the whole-SoC backend fall back to
+//!                              cycle-resume)
 //! --lanes <n>                  lane count for lane-lockstep (default 8;
 //!                              n >= 1 — lanes=1 degenerates to
 //!                              cycle-resume exactly, cycle counts
@@ -378,6 +380,8 @@ fn cmd_suite(args: &Args) -> Result<()> {
                 format!("{:.2}%", r.pvf_pct()),
                 format!("{:.2}%", r.avf_pct()),
                 format!("{:.2}x", r.resume_speedup_vs_full_forward()),
+                format!("{:.2}x", r.soc_cycle_resume_speedup()),
+                format!("{:.2}x", r.soc_vs_sw_slowdown()),
             ]
         })
         .collect();
@@ -393,6 +397,8 @@ fn cmd_suite(args: &Args) -> Result<()> {
                 "PVF*",
                 "AVF*",
                 "Resume speedup",
+                "SoC resume speedup",
+                "SoC/SW",
             ],
             &table,
         )

@@ -104,6 +104,22 @@ enum Streams<'a> {
     },
 }
 
+/// The cycle-indexability contract shared by every schedule in the
+/// system: a fixed total cycle count, a fixed drain window start, and a
+/// fixed result-row count — all knowable up front, independent of any
+/// stepping state. [`Schedule`] implements it for the mesh-only driver
+/// and [`crate::soc::SocSchedule`] for the full-SoC controller, which is
+/// what lets the campaign's cycle-resume machinery treat both backends
+/// identically (ROADMAP "Schedule-indexable SoC").
+pub trait CycleIndexed {
+    /// Mesh cycles in the whole program window.
+    fn total_cycles(&self) -> u64;
+    /// First cycle south-edge traffic is captured (fixed drain window).
+    fn drain_start(&self) -> u64;
+    /// Result rows the window produces (OS: DIM; WS: M).
+    fn out_rows(&self) -> usize;
+}
+
 /// A cycle-indexed description of one tile matmul: phase boundaries plus
 /// the operand feeders, able to produce the boundary [`MeshInputs`] of
 /// ANY cycle `t` in O(dim) ([`Schedule::fill`]) and to absorb that
@@ -286,6 +302,18 @@ impl<'a> Schedule<'a> {
                 }
             }
         }
+    }
+}
+
+impl CycleIndexed for Schedule<'_> {
+    fn total_cycles(&self) -> u64 {
+        Schedule::total_cycles(self)
+    }
+    fn drain_start(&self) -> u64 {
+        Schedule::drain_start(self)
+    }
+    fn out_rows(&self) -> usize {
+        self.out_rows
     }
 }
 

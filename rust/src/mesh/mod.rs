@@ -18,7 +18,7 @@ pub mod signal;
 pub use driver::{
     gold_matmul, lockstep_resumed, matmul_cycles, os_matmul_cycles, tile_grid, tiled_matmul,
     tiled_matmul_os, tiled_matmul_ws, tiled_matmul_ws_with, ws_matmul_cycles, CycleCursor,
-    DriverScratch, MatmulDriver, Schedule,
+    CycleIndexed, DriverScratch, MatmulDriver, Schedule,
 };
 pub use inject::{Fault, FaultPlan, Injectable, PlanCursor};
 pub use lane::{LaneCursor, LaneMesh};

@@ -1,21 +1,38 @@
 //! Gemmini controller: RoCC command queue (ROB), config state and the
-//! execute FSM that drives operand streams from the scratchpad into the
-//! mesh — the `ExecuteController` / `LoadController` / `StoreController`
-//! complex of the real design.
+//! execute engine that drives operand streams from the scratchpad into
+//! the mesh — the `ExecuteController` / `LoadController` /
+//! `StoreController` complex of the real design.
 //!
-//! The execute FSM reproduces *exactly* the schedule of
-//! [`crate::mesh::driver::MatmulDriver`] (preload / compute / flush with
-//! the same skews), so a fault at mesh-relative cycle `t` produces the
-//! same corruption whether injected through the mesh-only wrapper or
-//! through the full SoC — pinned by `rust/tests/integration_soc.rs`.
+//! # The schedule-indexable execute engine
+//!
+//! The matmul window is expressed as a [`SocSchedule`] — the SoC
+//! counterpart of [`crate::mesh::driver::Schedule`]: phase boundaries
+//! plus operand base addresses, able to produce any cycle `t`'s
+//! [`MeshInputs`] and scratchpad/accmem read addresses in O(dim)
+//! ([`Controller::step_window`] reads `mesh_t`, not an imperative FSM
+//! state). The command-decode/DMA phases stay a thin prefix outside the
+//! window. Because the window is cycle-indexed, the controller supports
+//! cycle-resume: [`Controller::save_state`] / [`Controller::restore_state`]
+//! snapshot the window-relative architectural state (registers, skew
+//! rings, drain accumulator, mesh [`crate::mesh::MeshState`]) in
+//! O(dim²) — the scratchpad and accumulator SRAM are *not* mutated
+//! mid-window (reads only; C lands at window end), so they are excluded
+//! and shared by every replay of a tile.
+//!
+//! The schedule reproduces *exactly* the mesh-only driver's programs
+//! (OS preload/compute/flush and WS preload/compute, same skews), so a
+//! fault at mesh-relative cycle `t` produces the same corruption whether
+//! injected through the mesh-only wrapper or through the full SoC —
+//! pinned by `rust/tests/integration_soc.rs`.
 
 use super::core::RoccCmd;
 use super::dma::{Dma, DmaDir, MainMemory};
 use super::scratchpad::{AccMem, Scratchpad};
+use crate::config::Dataflow;
 use crate::mat::Mat;
-use crate::mesh::adapters::FlushCollector;
+use crate::mesh::driver::CycleIndexed;
 use crate::mesh::inject::{FaultPlan, PlanCursor};
-use crate::mesh::mesh::{Mesh, MeshInputs, MeshSim, StepOutput};
+use crate::mesh::mesh::{Mesh, MeshInputs, MeshSim, MeshState, StepOutput};
 use anyhow::Result;
 use std::collections::VecDeque;
 
@@ -28,20 +45,138 @@ pub mod funct {
     pub const MVOUT: u8 = 4;
 }
 
+/// A cycle-indexed description of one in-flight SoC matmul window: the
+/// dataflow's phase arithmetic plus the operand base rows latched by the
+/// CONFIG / PRELOAD / COMPUTE commands. Like the mesh-only
+/// [`crate::mesh::driver::Schedule`], it maps any window cycle `t` to
+/// that cycle's boundary inputs and memory read addresses in O(dim) —
+/// the indexability cycle-resume builds on — but reads operands through
+/// the scratchpad/accmem ports instead of zero-copy views, preserving
+/// the SoC's per-cycle port (and conflict) accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ExecState {
-    Idle,
-    Preload { p: usize },
-    Compute { tau: usize },
-    Flush { p: usize },
+pub struct SocSchedule {
+    dataflow: Dataflow,
+    dim: usize,
+    /// Stream length latched by CONFIG: K under OS, M under WS.
+    stream: usize,
+    /// Scratchpad base rows of the streamed operands (COMPUTE rs1/rs2).
+    a_base: usize,
+    b_base: usize,
+    /// Accmem row holding D (PRELOAD rs1) and landing row for C (rs2).
+    d_base: usize,
+    c_base: usize,
+}
+
+impl SocSchedule {
+    fn new(
+        dataflow: Dataflow,
+        dim: usize,
+        stream: usize,
+        a_base: usize,
+        b_base: usize,
+        d_base: usize,
+        c_base: usize,
+    ) -> SocSchedule {
+        SocSchedule { dataflow, dim, stream, a_base, b_base, d_base, c_base }
+    }
+
+    pub fn dataflow(&self) -> Dataflow {
+        self.dataflow
+    }
+
+    /// Accmem row the first result row lands in at window end.
+    pub fn c_base(&self) -> usize {
+        self.c_base
+    }
+
+    /// Preload window: D (OS) or W (WS) staircases down the d-chain.
+    pub fn preload_cycles(&self) -> u64 {
+        (2 * self.dim - 1) as u64
+    }
+
+    /// Compute window: the skewed operand streams.
+    pub fn compute_cycles(&self) -> u64 {
+        (self.stream + 2 * self.dim - 2) as u64
+    }
+
+    /// Flush window: OS drains C through the south edge; WS has none
+    /// (psums exit during compute).
+    pub fn flush_cycles(&self) -> u64 {
+        match self.dataflow {
+            Dataflow::OutputStationary => (2 * self.dim - 1) as u64,
+            Dataflow::WeightStationary => 0,
+        }
+    }
+
+    /// Mesh cycles in the whole window (identical to the mesh-only
+    /// driver's cycle model for the same operands).
+    pub fn total_cycles(&self) -> u64 {
+        self.preload_cycles() + self.compute_cycles() + self.flush_cycles()
+    }
+
+    /// First cycle south-edge traffic is captured (the fixed drain
+    /// window of [`crate::mesh::driver::Schedule::drain`]).
+    pub fn drain_start(&self) -> u64 {
+        match self.dataflow {
+            Dataflow::OutputStationary => self.preload_cycles() + self.compute_cycles(),
+            Dataflow::WeightStationary => self.preload_cycles(),
+        }
+    }
+
+    /// Result rows the window lands in accmem (OS: DIM; WS: M).
+    pub fn out_rows(&self) -> usize {
+        match self.dataflow {
+            Dataflow::OutputStationary => self.dim,
+            Dataflow::WeightStationary => self.stream,
+        }
+    }
+}
+
+impl CycleIndexed for SocSchedule {
+    fn total_cycles(&self) -> u64 {
+        SocSchedule::total_cycles(self)
+    }
+    fn drain_start(&self) -> u64 {
+        SocSchedule::drain_start(self)
+    }
+    fn out_rows(&self) -> usize {
+        SocSchedule::out_rows(self)
+    }
+}
+
+/// A reusable snapshot of the controller's window-relative architectural
+/// state: the in-flight [`SocSchedule`], config/base registers, the skew
+/// rings, the drain accumulator and the mesh register file — O(dim²)
+/// total. The ROB is excluded (the core fences through the whole window,
+/// so it is empty), the fault plan/cursor are excluded (replays re-arm
+/// via [`Controller::begin_replay`]), and the scratchpad/accmem are
+/// excluded because the window never mutates them before its final
+/// cycle. Buffers are recycled across [`Controller::save_state`] calls
+/// (`restore ∘ save ≡ id`, pinned by test).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ControllerState {
+    pub(crate) window: Option<SocSchedule>,
+    pub(crate) cfg_k: usize,
+    pub(crate) a_base: usize,
+    pub(crate) b_base: usize,
+    pub(crate) d_base: usize,
+    pub(crate) c_base: usize,
+    pub(crate) ring_a: Mat<i8>,
+    pub(crate) ring_b: Mat<i8>,
+    pub(crate) ring_d: Mat<i32>,
+    pub(crate) mesh_t: u64,
+    pub(crate) mesh: MeshState,
+    pub(crate) cmat: Mat<i32>,
+    pub(crate) taken: Vec<usize>,
 }
 
 /// The controller + mesh complex.
 pub struct Controller {
     pub mesh: Mesh,
     rob: VecDeque<RoccCmd>,
-    state: ExecState,
-    /// config: inner dimension (stream length K) of the next compute.
+    /// The in-flight matmul window (`None` = idle command decode).
+    window: Option<SocSchedule>,
+    /// config: stream length (K under OS, M under WS) of the next compute.
     cfg_k: usize,
     /// operand base rows (set by the COMPUTE command).
     a_base: usize,
@@ -50,16 +185,26 @@ pub struct Controller {
     d_base: usize,
     c_base: usize,
     /// ring buffers implementing the skew shift registers at the edges
-    /// (flat DIM x DIM matrices; row = ring slot).
+    /// (flat DIM x DIM matrices; row = ring slot). `ring_d` carries the
+    /// WS psum-initialiser stream (unused under OS).
     ring_a: Mat<i8>,
     ring_b: Mat<i8>,
+    ring_d: Mat<i32>,
     /// mesh-relative cycle counter for the in-flight matmul.
     mesh_t: u64,
     /// armed fault plan for the next COMPUTE (mesh-relative cycles;
     /// empty = golden) and its per-run firing cursor.
     plan: FaultPlan,
     cursor: PlanCursor,
-    collector: Option<FlushCollector>,
+    /// Drain accumulator: the C tile assembled from south-edge traffic
+    /// (OS: rows un-staircased in reverse; WS: stream order) plus the
+    /// per-column row counters — the [`crate::mesh::driver::Schedule::drain`]
+    /// state, held inline so snapshots capture mid-flush progress.
+    cmat: Mat<i32>,
+    taken: Vec<usize>,
+    /// Persistent scratch row for port reads that feed the north edge
+    /// directly (no per-cycle allocation, like `DriverScratch`).
+    row_i8: Vec<i8>,
     inp: MeshInputs,
     out: StepOutput,
     /// statistics
@@ -68,22 +213,14 @@ pub struct Controller {
 
 impl Controller {
     /// Build the controller + mesh complex. The dataflow comes from the
-    /// campaign's `MeshConfig` (never hardcoded here), but the execute
-    /// FSM implements only the OS preload/compute/flush schedule — a WS
-    /// request is a hard error, surfaced as a clear config-level error
-    /// by `campaign::validate_dataflow_support` before any SoC is
-    /// constructed (ROADMAP "Dataflow-generic campaigns": the SoC
-    /// backend stays OS-only for now, with no silent override).
-    pub fn new(dim: usize, dataflow: crate::config::Dataflow) -> Self {
-        assert_eq!(
-            dataflow,
-            crate::config::Dataflow::OutputStationary,
-            "the SoC execute FSM implements only the output-stationary schedule"
-        );
+    /// campaign's `MeshConfig` (never hardcoded here) and selects which
+    /// [`SocSchedule`] the COMPUTE command opens: OS
+    /// preload/compute/flush or WS preload/compute.
+    pub fn new(dim: usize, dataflow: Dataflow) -> Self {
         Controller {
             mesh: Mesh::new(dim, dataflow),
             rob: VecDeque::new(),
-            state: ExecState::Idle,
+            window: None,
             cfg_k: dim,
             a_base: 0,
             b_base: 0,
@@ -91,10 +228,13 @@ impl Controller {
             c_base: 0,
             ring_a: Mat::zeros(dim, dim),
             ring_b: Mat::zeros(dim, dim),
+            ring_d: Mat::zeros(dim, dim),
             mesh_t: 0,
             plan: FaultPlan::empty(),
             cursor: PlanCursor::default(),
-            collector: None,
+            cmat: Mat::zeros(dim, dim),
+            taken: vec![0; dim],
+            row_i8: vec![0; dim],
             inp: MeshInputs::idle(dim),
             out: StepOutput::new(dim),
             matmuls_done: 0,
@@ -107,7 +247,23 @@ impl Controller {
 
     /// ROB occupancy (drives the core's fence).
     pub fn busy(&self) -> bool {
-        !self.rob.is_empty() || self.state != ExecState::Idle
+        !self.rob.is_empty() || self.window.is_some()
+    }
+
+    /// Whether a matmul window is in flight (the cycle-resume region:
+    /// between the COMPUTE decode and the window's final cycle).
+    pub fn in_window(&self) -> bool {
+        self.window.is_some()
+    }
+
+    /// The in-flight window's schedule, if any.
+    pub fn window_schedule(&self) -> Option<SocSchedule> {
+        self.window
+    }
+
+    /// Mesh-relative cycle of the in-flight matmul.
+    pub fn mesh_cycle(&self) -> u64 {
+        self.mesh_t
     }
 
     pub fn enqueue(&mut self, cmd: RoccCmd) {
@@ -123,13 +279,71 @@ impl Controller {
         self.plan.clone_from_plan(plan);
     }
 
-    /// Power-on state: idle FSM, empty ROB, cleared rings, disarmed
+    /// Disarm the fault plan and its cursor in place (keeps the plan
+    /// buffer for the next re-arm) — the golden-advance state.
+    pub fn disarm(&mut self) {
+        self.plan.clear();
+        self.cursor = PlanCursor::default();
+    }
+
+    /// Arm `plan` against an already-open window (a restored snapshot):
+    /// the cursor starts fresh, so faults due at or after the snapshot
+    /// cycle fire exactly as they would in a from-scratch run. The
+    /// cycle-resume replay entry point ([`super::Soc::run_matmul_resumed`]).
+    pub fn begin_replay(&mut self, plan: &FaultPlan) {
+        self.plan.clone_from_plan(plan);
+        self.cursor = PlanCursor::start(&self.plan);
+    }
+
+    /// Snapshot the window-relative architectural state into `st`,
+    /// reusing its buffers (see [`ControllerState`] for what is and is
+    /// not captured).
+    pub fn save_state(&self, st: &mut ControllerState) {
+        st.window = self.window;
+        st.cfg_k = self.cfg_k;
+        st.a_base = self.a_base;
+        st.b_base = self.b_base;
+        st.d_base = self.d_base;
+        st.c_base = self.c_base;
+        st.ring_a.clone_from(&self.ring_a);
+        st.ring_b.clone_from(&self.ring_b);
+        st.ring_d.clone_from(&self.ring_d);
+        st.mesh_t = self.mesh_t;
+        self.mesh.save_state(&mut st.mesh);
+        st.cmat.clone_from(&self.cmat);
+        st.taken.clear();
+        st.taken.extend_from_slice(&self.taken);
+    }
+
+    /// Restore a snapshot taken by [`Controller::save_state`] on an
+    /// identically-dimensioned controller: the window-relative state is
+    /// bit-identical afterwards (`restore ∘ save ≡ id`, pinned by
+    /// test). The fault plan/cursor are untouched — follow with
+    /// [`Controller::begin_replay`] or [`Controller::disarm`].
+    pub fn restore_state(&mut self, st: &ControllerState) {
+        self.window = st.window;
+        self.cfg_k = st.cfg_k;
+        self.a_base = st.a_base;
+        self.b_base = st.b_base;
+        self.d_base = st.d_base;
+        self.c_base = st.c_base;
+        self.ring_a.clone_from(&st.ring_a);
+        self.ring_b.clone_from(&st.ring_b);
+        self.ring_d.clone_from(&st.ring_d);
+        self.mesh_t = st.mesh_t;
+        self.mesh.restore_state(&st.mesh);
+        self.cmat.clone_from(&st.cmat);
+        self.taken.clear();
+        self.taken.extend_from_slice(&st.taken);
+    }
+
+    /// Power-on state: no window, empty ROB, cleared rings, disarmed
     /// fault, zeroed counters. Keeps every allocation.
     pub fn reset(&mut self) {
         let dim = self.dim();
         self.mesh.reset();
         self.rob.clear();
-        self.state = ExecState::Idle;
+        self.window = None;
         self.cfg_k = dim;
         self.a_base = 0;
         self.b_base = 0;
@@ -137,10 +351,14 @@ impl Controller {
         self.c_base = 0;
         self.ring_a.data_mut().fill(0);
         self.ring_b.data_mut().fill(0);
+        self.ring_d.data_mut().fill(0);
         self.mesh_t = 0;
         self.plan.clear();
         self.cursor = PlanCursor::default();
-        self.collector = None;
+        self.cmat.reset(dim, dim);
+        self.taken.clear();
+        self.taken.resize(dim, 0);
+        self.row_i8.fill(0);
         self.inp.clear();
         self.out.clear();
         self.matmuls_done = 0;
@@ -154,179 +372,267 @@ impl Controller {
         dma: &mut Dma,
         mem: &mut MainMemory,
     ) -> Result<()> {
+        if self.window.is_some() {
+            return self.step_window(spad, accmem);
+        }
+        // idle: decode at most one command per cycle (issue stage)
+        if let Some(cmd) = self.rob.front().copied() {
+            match cmd.funct {
+                funct::CONFIG => {
+                    self.cfg_k = cmd.rs1 as usize;
+                    self.rob.pop_front();
+                }
+                funct::MVIN => {
+                    if !dma.busy() {
+                        let rows = (cmd.rs2 >> 32) as usize;
+                        let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
+                        dma.start(DmaDir::MemToSpad, cmd.rs1 as usize, spad_row, rows, mem);
+                        self.rob.pop_front();
+                    }
+                }
+                funct::MVOUT => {
+                    if !dma.busy() {
+                        let rows = (cmd.rs2 >> 32) as usize;
+                        let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
+                        dma.start(DmaDir::SpadToMem, cmd.rs1 as usize, spad_row, rows, mem);
+                        self.rob.pop_front();
+                    }
+                }
+                funct::PRELOAD => {
+                    self.d_base = cmd.rs1 as usize;
+                    self.c_base = cmd.rs2 as usize;
+                    self.rob.pop_front();
+                }
+                funct::COMPUTE => {
+                    self.a_base = cmd.rs1 as usize;
+                    self.b_base = cmd.rs2 as usize;
+                    self.rob.pop_front();
+                    self.begin_window();
+                }
+                other => anyhow::bail!("unknown RoCC funct {other}"),
+            }
+        }
+        // the full SoC clocks the mesh every cycle, busy or not; on the
+        // COMPUTE-decode tick this is the post-reset idle edge the
+        // mesh-relative clock starts after
+        self.inp.clear();
+        self.mesh.step(&self.inp, &mut self.out);
+        Ok(())
+    }
+
+    /// Open the matmul window: latch the schedule from the decoded
+    /// command registers and reset the window-relative state.
+    fn begin_window(&mut self) {
         let dim = self.dim();
-        match self.state {
-            ExecState::Idle => {
-                // decode at most one command per cycle (issue stage)
-                if let Some(cmd) = self.rob.front().copied() {
-                    match cmd.funct {
-                        funct::CONFIG => {
-                            self.cfg_k = cmd.rs1 as usize;
-                            self.rob.pop_front();
-                        }
-                        funct::MVIN => {
-                            if !dma.busy() {
-                                let rows = (cmd.rs2 >> 32) as usize;
-                                let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
-                                dma.start(
-                                    DmaDir::MemToSpad,
-                                    cmd.rs1 as usize,
-                                    spad_row,
-                                    rows,
-                                    mem,
-                                );
-                                self.rob.pop_front();
+        let sched = SocSchedule::new(
+            self.mesh.dataflow(),
+            dim,
+            self.cfg_k,
+            self.a_base,
+            self.b_base,
+            self.d_base,
+            self.c_base,
+        );
+        self.mesh.reset();
+        self.mesh_t = 0;
+        self.cursor = PlanCursor::start(&self.plan);
+        self.ring_a.data_mut().fill(0);
+        self.ring_b.data_mut().fill(0);
+        self.ring_d.data_mut().fill(0);
+        self.cmat.reset(sched.out_rows(), dim);
+        self.taken.clear();
+        self.taken.resize(dim, 0);
+        self.window = Some(sched);
+    }
+
+    /// One window cycle: fill cycle `mesh_t`'s boundary inputs from the
+    /// schedule, fire any due fault, step the mesh, drain the south
+    /// edge, and close the window after its final cycle. Callable from
+    /// any restored snapshot — the cycle-resume stepping primitive.
+    pub fn step_window(&mut self, spad: &mut Scratchpad, accmem: &mut AccMem) -> Result<()> {
+        let sched = self.window.expect("step_window outside the matmul window");
+        let t = self.mesh_t;
+        self.fill_window(sched, t, spad, accmem)?;
+        // one compare per mesh cycle — same wrapper contract as the
+        // mesh-only driver (`PlanCursor::next_cycle`)
+        if self.cursor.next_cycle() == t {
+            self.cursor.fire(&self.plan, t, &mut self.mesh, &mut self.inp);
+        }
+        self.out.clear();
+        self.mesh.step(&self.inp, &mut self.out);
+        // drain gating stated once for both dataflows, mirroring
+        // `Schedule::drain`'s fixed-window contract: south-edge traffic
+        // before the drain window — possible under control-signal
+        // faults — is discarded, as the real frontend's drain FSM does.
+        if t >= sched.drain_start() {
+            let out_rows = sched.out_rows();
+            let dim = sched.dim;
+            match sched.dataflow {
+                Dataflow::OutputStationary => {
+                    for col in 0..dim {
+                        if self.out.has_south_c(col) {
+                            let k = self.taken[col];
+                            if k < out_rows {
+                                self.cmat.set(out_rows - 1 - k, col, self.out.south_c_at(col));
+                                self.taken[col] = k + 1;
                             }
                         }
-                        funct::MVOUT => {
-                            if !dma.busy() {
-                                let rows = (cmd.rs2 >> 32) as usize;
-                                let spad_row = (cmd.rs2 & 0xffff_ffff) as usize;
-                                dma.start(
-                                    DmaDir::SpadToMem,
-                                    cmd.rs1 as usize,
-                                    spad_row,
-                                    rows,
-                                    mem,
-                                );
-                                self.rob.pop_front();
-                            }
-                        }
-                        funct::PRELOAD => {
-                            self.d_base = cmd.rs1 as usize;
-                            self.c_base = cmd.rs2 as usize;
-                            self.rob.pop_front();
-                        }
-                        funct::COMPUTE => {
-                            self.a_base = cmd.rs1 as usize;
-                            self.b_base = cmd.rs2 as usize;
-                            self.rob.pop_front();
-                            self.mesh.reset();
-                            self.mesh_t = 0;
-                            self.cursor = PlanCursor::start(&self.plan);
-                            self.collector = Some(FlushCollector::new(dim));
-                            self.ring_a.data_mut().fill(0);
-                            self.ring_b.data_mut().fill(0);
-                            self.state = ExecState::Preload { p: 0 };
-                        }
-                        other => anyhow::bail!("unknown RoCC funct {other}"),
                     }
                 }
-                // the full SoC clocks the mesh every cycle, busy or not
-                self.inp.clear();
-                self.mesh.step(&self.inp, &mut self.out);
+                Dataflow::WeightStationary => {
+                    for col in 0..dim {
+                        if self.out.has_south_psum(col) {
+                            let k = self.taken[col];
+                            if k < out_rows {
+                                self.cmat.set(k, col, self.out.south_psum_at(col));
+                                self.taken[col] = k + 1;
+                            }
+                        }
+                    }
+                }
             }
-            ExecState::Preload { p } => {
-                self.inp.clear();
-                if p < dim {
-                    let d_row = accmem.read_row(self.d_base + (dim - 1 - p))?.to_vec();
+        }
+        self.mesh_t = t + 1;
+        if self.mesh_t == sched.total_cycles() {
+            self.finish_window(sched, accmem)?;
+        }
+        Ok(())
+    }
+
+    /// Produce window cycle `t`'s boundary inputs in O(dim), reading
+    /// operands through the scratchpad/accmem ports at the same per-cycle
+    /// addresses the imperative FSM issued.
+    fn fill_window(
+        &mut self,
+        sched: SocSchedule,
+        t: u64,
+        spad: &mut Scratchpad,
+        accmem: &mut AccMem,
+    ) -> Result<()> {
+        let dim = sched.dim;
+        self.inp.clear();
+        if t < sched.preload_cycles() {
+            // phase 1: preload down the d-chain (rows fed in reverse)
+            let p = t as usize;
+            if p < dim {
+                match sched.dataflow {
+                    Dataflow::OutputStationary => {
+                        let d_row = accmem.read_row(sched.d_base + (dim - 1 - p))?;
+                        for c in 0..dim {
+                            self.inp.north_propag[c] = true;
+                            self.inp.north_d[c] = d_row[c];
+                        }
+                    }
+                    Dataflow::WeightStationary => {
+                        spad.read_row_into(sched.b_base + (dim - 1 - p), &mut self.row_i8)?;
+                        for c in 0..dim {
+                            self.inp.north_propag[c] = true;
+                            self.inp.north_d[c] = self.row_i8[c] as i32;
+                        }
+                    }
+                }
+            }
+        } else if t < sched.preload_cycles() + sched.compute_cycles() {
+            // phase 2: the skewed operand streams; one operand pair read
+            // per cycle while the streams last, pushed into the rings
+            let tau = (t - sched.preload_cycles()) as usize;
+            let s = sched.stream;
+            match sched.dataflow {
+                Dataflow::OutputStationary => {
+                    if tau < s {
+                        spad.read_row_into(sched.a_base + tau, self.ring_a.row_mut(tau % dim))?;
+                        spad.read_row_into(sched.b_base + tau, self.ring_b.row_mut(tau % dim))?;
+                    }
+                    for r in 0..dim {
+                        // lane r sees stream element tau - r (skew rings)
+                        if tau >= r && tau - r < s {
+                            self.inp.west_a[r] = self.ring_a.at((tau - r) % dim, r);
+                        }
+                    }
                     for c in 0..dim {
-                        self.inp.north_propag[c] = true;
-                        self.inp.north_d[c] = d_row[c];
+                        if tau >= c && tau - c < s {
+                            self.inp.north_b[c] = self.ring_b.at((tau - c) % dim, c);
+                            self.inp.north_valid[c] = true;
+                        }
                     }
                 }
-                self.step_mesh_with_fault();
-                self.state = if p + 1 == 2 * dim - 1 {
-                    ExecState::Compute { tau: 0 }
-                } else {
-                    ExecState::Preload { p: p + 1 }
-                };
+                Dataflow::WeightStationary => {
+                    if tau < s {
+                        spad.read_row_into(sched.a_base + tau, self.ring_a.row_mut(tau % dim))?;
+                        let d_row = accmem.read_row(sched.d_base + tau)?;
+                        self.ring_d.row_mut(tau % dim).copy_from_slice(d_row);
+                    }
+                    for r in 0..dim {
+                        if tau >= r && tau - r < s {
+                            self.inp.west_a[r] = self.ring_a.at((tau - r) % dim, r);
+                        }
+                    }
+                    for c in 0..dim {
+                        if tau >= c && tau - c < s {
+                            self.inp.north_d[c] = self.ring_d.at((tau - c) % dim, c);
+                            self.inp.north_valid[c] = true;
+                        }
+                    }
+                }
             }
-            ExecState::Compute { tau } => {
-                let k = self.cfg_k;
-                // scratchpad reads: one operand column/row pair per cycle
-                // while the streams last, pushed into the skew registers.
-                if tau < k {
-                    let (a_col, _s1) = spad.read_row(self.a_base + tau)?;
-                    let (b_row, _s2) = spad.read_row(self.b_base + tau)?;
-                    self.ring_a.row_mut(tau % dim).copy_from_slice(&a_col);
-                    self.ring_b.row_mut(tau % dim).copy_from_slice(&b_row);
-                }
-                self.inp.clear();
-                for r in 0..dim {
-                    // lane r sees stream element tau - r (skew registers)
-                    if tau >= r && tau - r < k {
-                        self.inp.west_a[r] = self.ring_a.at((tau - r) % dim, r);
-                    }
-                }
+        } else {
+            // phase 3 (OS only): flush C through the south edge
+            debug_assert!(t < sched.total_cycles(), "cycle beyond the schedule");
+            let p = (t - sched.preload_cycles() - sched.compute_cycles()) as usize;
+            if p < dim {
                 for c in 0..dim {
-                    if tau >= c && tau - c < k {
-                        self.inp.north_b[c] = self.ring_b.at((tau - c) % dim, c);
-                        self.inp.north_valid[c] = true;
-                    }
-                }
-                self.step_mesh_with_fault();
-                self.state = if tau + 1 == k + 2 * dim - 2 {
-                    ExecState::Flush { p: 0 }
-                } else {
-                    ExecState::Compute { tau: tau + 1 }
-                };
-            }
-            ExecState::Flush { p } => {
-                self.inp.clear();
-                self.out.clear();
-                if p < dim {
-                    for c in 0..dim {
-                        self.inp.north_propag[c] = true;
-                    }
-                }
-                self.step_mesh_with_fault();
-                if let Some(col) = self.collector.as_mut() {
-                    col.absorb(&self.out);
-                }
-                if p + 1 == 2 * dim - 1 {
-                    // land C into the accumulator memory
-                    let col = self.collector.take().expect("flush without collector");
-                    debug_assert!(col.complete());
-                    for (r, row) in col.c.row_iter().enumerate() {
-                        accmem.write_row(self.c_base + r, row)?;
-                    }
-                    // disarm in place (keeps the plan buffer for the
-                    // next trial's re-arm)
-                    self.plan.clear();
-                    self.cursor = PlanCursor::default();
-                    self.matmuls_done += 1;
-                    self.state = ExecState::Idle;
-                } else {
-                    self.state = ExecState::Flush { p: p + 1 };
+                    self.inp.north_propag[c] = true;
                 }
             }
         }
         Ok(())
     }
 
-    fn step_mesh_with_fault(&mut self) {
-        // one compare per mesh cycle — same wrapper contract as the
-        // mesh-only driver (`PlanCursor::next_cycle`)
-        if self.cursor.next_cycle() == self.mesh_t {
-            self.cursor
-                .fire(&self.plan, self.mesh_t, &mut self.mesh, &mut self.inp);
+    /// Close the window: land C into the accumulator memory and disarm.
+    fn finish_window(&mut self, sched: SocSchedule, accmem: &mut AccMem) -> Result<()> {
+        // the fixed-window drain contract of `Schedule::drain`: only
+        // fault-free windows must have produced every result row
+        // (control-signal faults can disturb the drain pulses)
+        debug_assert!(
+            !self.plan.is_empty() || self.taken.iter().all(|&k| k == sched.out_rows()),
+            "fault-free drain did not produce every result row"
+        );
+        for r in 0..sched.out_rows() {
+            accmem.write_row(sched.c_base + r, self.cmat.row(r))?;
         }
-        self.mesh.step(&self.inp, &mut self.out);
-        self.mesh_t += 1;
+        // disarm in place (keeps the plan buffer for the next re-arm)
+        self.plan.clear();
+        self.cursor = PlanCursor::default();
+        self.matmuls_done += 1;
+        self.window = None;
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mesh::driver::gold_matmul;
+    use crate::mesh::inject::Fault;
+    use crate::mesh::signal::SignalKind;
+    use crate::util::Rng;
 
-    /// Drive the controller directly (no core) through one matmul.
-    fn run_matmul_direct(dim: usize, k: usize, seed: u64) -> (Mat<i32>, Mat<i32>) {
-        use crate::mesh::driver::gold_matmul;
-        use crate::util::Rng;
+    /// Stage an OS matmul (spad rows [0..k) = A columns, [k..2k) = B
+    /// rows, accmem [0..dim) = D) and enqueue the command sequence;
+    /// results land at accmem row 16.
+    fn os_setup(
+        dim: usize,
+        k: usize,
+        seed: u64,
+    ) -> (Controller, Scratchpad, AccMem, Dma, MainMemory, Mat<i32>) {
         let mut rng = Rng::new(seed);
         let a = rng.mat_i8(dim, k);
         let b = rng.mat_i8(k, dim);
         let d = rng.mat_i32(dim, dim, 1 << 10);
 
-        let mut ctrl = Controller::new(dim, crate::config::Dataflow::OutputStationary);
+        let mut ctrl = Controller::new(dim, Dataflow::OutputStationary);
         let mut spad = Scratchpad::new(4, 64, dim);
         let mut accmem = AccMem::new(64, dim);
-        let mut dma = Dma::new();
-        let mut mem = MainMemory::new(1 << 16, 2);
-
-        // stage operands: spad rows [0..k) = A columns, [k..2k) = B rows
         for kk in 0..k {
             let col: Vec<i8> = (0..dim).map(|r| a.at(r, kk)).collect();
             spad.write_row(kk, &col).unwrap();
@@ -339,32 +645,167 @@ mod tests {
         ctrl.enqueue(RoccCmd { funct: funct::CONFIG, rs1: k as u64, rs2: 0 });
         ctrl.enqueue(RoccCmd { funct: funct::PRELOAD, rs1: 0, rs2: 16 });
         ctrl.enqueue(RoccCmd { funct: funct::COMPUTE, rs1: 0, rs2: k as u64 });
+        let gold = gold_matmul(a.view(), b.view(), d.view());
+        (ctrl, spad, accmem, Dma::new(), MainMemory::new(1 << 16, 2), gold)
+    }
+
+    /// Stage a WS matmul (spad rows [0..m) = A rows, [m..m+dim) = W
+    /// rows, accmem [0..m) = D rows); results land at accmem row 32.
+    fn ws_setup(
+        dim: usize,
+        m: usize,
+        seed: u64,
+    ) -> (Controller, Scratchpad, AccMem, Dma, MainMemory, Mat<i32>) {
+        let mut rng = Rng::new(seed);
+        let a = rng.mat_i8(m, dim);
+        let w = rng.mat_i8(dim, dim);
+        let d = rng.mat_i32(m, dim, 1 << 10);
+
+        let mut ctrl = Controller::new(dim, Dataflow::WeightStationary);
+        let mut spad = Scratchpad::new(4, 64, dim);
+        let mut accmem = AccMem::new(64, dim);
+        for r in 0..m {
+            spad.write_row(r, a.row(r)).unwrap();
+            spad.tick();
+        }
+        for r in 0..dim {
+            spad.write_row(m + r, w.row(r)).unwrap();
+            spad.tick();
+        }
+        for r in 0..m {
+            accmem.write_row(r, d.row(r)).unwrap();
+        }
+        ctrl.enqueue(RoccCmd { funct: funct::CONFIG, rs1: m as u64, rs2: 0 });
+        ctrl.enqueue(RoccCmd { funct: funct::PRELOAD, rs1: 0, rs2: 32 });
+        ctrl.enqueue(RoccCmd { funct: funct::COMPUTE, rs1: 0, rs2: m as u64 });
+        let gold = gold_matmul(a.view(), w.view(), d.view());
+        (ctrl, spad, accmem, Dma::new(), MainMemory::new(1 << 16, 2), gold)
+    }
+
+    fn run_to_completion(
+        ctrl: &mut Controller,
+        spad: &mut Scratchpad,
+        accmem: &mut AccMem,
+        dma: &mut Dma,
+        mem: &mut MainMemory,
+    ) {
         let mut guard = 0;
         while ctrl.busy() {
             spad.tick();
-            ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+            ctrl.tick(spad, accmem, dma, mem).unwrap();
             guard += 1;
             assert!(guard < 100_000);
         }
-        let mut c = Mat::zeros(dim, dim);
-        for r in 0..dim {
-            c.row_mut(r)
-                .copy_from_slice(accmem.read_row(16 + r).unwrap());
+    }
+
+    fn read_c(accmem: &AccMem, base: usize, rows: usize, dim: usize) -> Mat<i32> {
+        let mut c = Mat::zeros(rows, dim);
+        for r in 0..rows {
+            c.row_mut(r).copy_from_slice(accmem.read_row(base + r).unwrap());
         }
-        (c, gold_matmul(a.view(), b.view(), d.view()))
+        c
     }
 
     #[test]
     fn controller_matmul_matches_gold() {
         for &(dim, k) in &[(2usize, 2usize), (4, 4), (4, 9), (8, 8)] {
-            let (c, gold) = run_matmul_direct(dim, k, dim as u64 * 31 + k as u64);
-            assert_eq!(c, gold, "dim={dim} k={k}");
+            let (mut ctrl, mut spad, mut accmem, mut dma, mut mem, gold) =
+                os_setup(dim, k, dim as u64 * 31 + k as u64);
+            run_to_completion(&mut ctrl, &mut spad, &mut accmem, &mut dma, &mut mem);
+            assert_eq!(read_c(&accmem, 16, dim, dim), gold, "dim={dim} k={k}");
+        }
+    }
+
+    #[test]
+    fn controller_ws_matmul_matches_gold() {
+        for &(dim, m) in &[(2usize, 2usize), (4, 5), (4, 9), (8, 8)] {
+            let (mut ctrl, mut spad, mut accmem, mut dma, mut mem, gold) =
+                ws_setup(dim, m, dim as u64 * 37 + m as u64);
+            run_to_completion(&mut ctrl, &mut spad, &mut accmem, &mut dma, &mut mem);
+            assert_eq!(read_c(&accmem, 32, m, dim), gold, "dim={dim} m={m}");
+        }
+    }
+
+    #[test]
+    fn controller_schedule_matches_mesh_driver_cycle_model() {
+        use crate::mesh::driver::{os_matmul_cycles, ws_matmul_cycles};
+        let os = SocSchedule::new(Dataflow::OutputStationary, 4, 9, 0, 9, 0, 4);
+        assert_eq!(os.total_cycles(), os_matmul_cycles(4, 9));
+        assert_eq!(os.out_rows(), 4);
+        let ws = SocSchedule::new(Dataflow::WeightStationary, 8, 11, 0, 11, 0, 11);
+        assert_eq!(ws.total_cycles(), ws_matmul_cycles(8, 11));
+        assert_eq!(ws.out_rows(), 11);
+        assert_eq!(ws.flush_cycles(), 0);
+    }
+
+    #[test]
+    fn controller_state_restore_after_save_is_identity() {
+        type Setup = fn(usize, usize, u64) -> (Controller, Scratchpad, AccMem, Dma, MainMemory, Mat<i32>);
+        for setup in [os_setup as Setup, ws_setup] {
+            let (mut ctrl, mut spad, mut accmem, mut dma, mut mem, _gold) = setup(4, 6, 7);
+            // advance into the matmul window
+            let mut guard = 0;
+            while !(ctrl.in_window() && ctrl.mesh_cycle() == 5) {
+                spad.tick();
+                ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            let mut snap = ControllerState::default();
+            ctrl.save_state(&mut snap);
+            // churn past the snapshot, then restore
+            for _ in 0..7 {
+                spad.tick();
+                ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+            }
+            ctrl.restore_state(&snap);
+            let mut snap2 = ControllerState::default();
+            ctrl.save_state(&mut snap2);
+            assert_eq!(snap, snap2, "restore ∘ save must be the identity");
+        }
+    }
+
+    #[test]
+    fn controller_replay_from_snapshot_matches_full_window() {
+        // Snapshot the golden window mid-flight, run the rest golden
+        // (churn), then restore + begin_replay: the faulty result must be
+        // bit-identical to arming the plan before the full run — the
+        // controller-level cycle-resume contract, both dataflows.
+        type Setup = fn(usize, usize, u64) -> (Controller, Scratchpad, AccMem, Dma, MainMemory, Mat<i32>);
+        for (setup, fault_cycle) in [(os_setup as Setup, 9u64), (ws_setup as Setup, 8u64)] {
+            let plan =
+                FaultPlan::single(Fault::new(1, 2, SignalKind::Acc, 12, fault_cycle));
+            // oracle: the plan armed across the whole window
+            let (mut ctrl, mut spad, mut accmem, mut dma, mut mem, _gold) = setup(4, 6, 42);
+            ctrl.arm_plan(&plan);
+            run_to_completion(&mut ctrl, &mut spad, &mut accmem, &mut dma, &mut mem);
+            let c_full_os = read_c(&accmem, 16, 4, 4);
+            let c_full_ws = read_c(&accmem, 32, 6, 4);
+
+            // golden to the fault cycle, snapshot, churn to the end,
+            // restore, replay with the plan
+            let (mut ctrl, mut spad, mut accmem, mut dma, mut mem, _gold) = setup(4, 6, 42);
+            let mut guard = 0;
+            while !(ctrl.in_window() && ctrl.mesh_cycle() == fault_cycle) {
+                spad.tick();
+                ctrl.tick(&mut spad, &mut accmem, &mut dma, &mut mem).unwrap();
+                guard += 1;
+                assert!(guard < 10_000);
+            }
+            let mut snap = ControllerState::default();
+            ctrl.save_state(&mut snap);
+            run_to_completion(&mut ctrl, &mut spad, &mut accmem, &mut dma, &mut mem);
+            ctrl.restore_state(&snap);
+            ctrl.begin_replay(&plan);
+            run_to_completion(&mut ctrl, &mut spad, &mut accmem, &mut dma, &mut mem);
+            assert_eq!(read_c(&accmem, 16, 4, 4), c_full_os, "OS landing rows");
+            assert_eq!(read_c(&accmem, 32, 6, 4), c_full_ws, "WS landing rows");
         }
     }
 
     #[test]
     fn mvin_then_mvout_round_trip() {
-        let mut ctrl = Controller::new(4, crate::config::Dataflow::OutputStationary);
+        let mut ctrl = Controller::new(4, Dataflow::OutputStationary);
         let mut spad = Scratchpad::new(4, 64, 4);
         let mut accmem = AccMem::new(64, 4);
         let mut dma = Dma::new();

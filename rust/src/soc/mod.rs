@@ -12,5 +12,5 @@ pub mod scratchpad;
 #[allow(clippy::module_inception)]
 pub mod soc;
 
-pub use controller::Controller;
+pub use controller::{Controller, ControllerState, SocSchedule};
 pub use soc::Soc;

@@ -72,6 +72,27 @@ impl Scratchpad {
         Ok((self.data[off..off + self.row_bytes].to_vec(), stall))
     }
 
+    /// [`Scratchpad::read_row`] into a caller-provided buffer: identical
+    /// port arbitration, stall and conflict accounting, but no per-call
+    /// allocation — the SoC controller's per-cycle operand reads land
+    /// directly in its persistent skew rings through this port.
+    pub fn read_row_into(&mut self, row: usize, dst: &mut [i8]) -> Result<u32> {
+        let (bank, local) = self.locate(row)?;
+        if dst.len() != self.row_bytes {
+            bail!("row read of {} bytes from {}-byte rows", dst.len(), self.row_bytes);
+        }
+        let stall = if self.read_busy[bank] {
+            self.conflicts += 1;
+            1
+        } else {
+            self.read_busy[bank] = true;
+            0
+        };
+        let off = (bank * self.rows_per_bank + local) * self.row_bytes;
+        dst.copy_from_slice(&self.data[off..off + self.row_bytes]);
+        Ok(stall)
+    }
+
     /// Write a full row (port-arbitrated like reads).
     pub fn write_row(&mut self, row: usize, bytes: &[i8]) -> Result<u32> {
         let (bank, local) = self.locate(row)?;
@@ -124,6 +145,10 @@ impl AccMem {
         self.data.fill(0);
     }
 
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
     pub fn read_row(&self, row: usize) -> Result<&[i32]> {
         if row >= self.rows {
             bail!("accmem row {row} out of range");
@@ -156,6 +181,21 @@ mod tests {
         let (got, stall) = sp.read_row(5).unwrap();
         assert_eq!(got, row);
         assert_eq!(stall, 0);
+    }
+
+    #[test]
+    fn read_row_into_matches_read_row_ports_included() {
+        let mut sp = Scratchpad::new(4, 16, 8);
+        let row = vec![9i8, -8, 7, -6, 5, -4, 3, -2];
+        sp.write_row(6, &row).unwrap();
+        sp.tick();
+        let mut buf = vec![0i8; 8];
+        assert_eq!(sp.read_row_into(6, &mut buf).unwrap(), 0);
+        assert_eq!(buf, row);
+        // second same-bank read this cycle stalls, exactly like read_row
+        assert_eq!(sp.read_row_into(2, &mut buf).unwrap(), 1);
+        assert_eq!(sp.conflicts, 1);
+        assert!(sp.read_row_into(0, &mut vec![0i8; 4]).is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! (Table V): functionally it computes the same matmuls as the mesh-only
 //! wrapper, but each simulated cycle pays for the entire SoC.
 
-use super::controller::{funct, Controller};
+use super::controller::{funct, Controller, ControllerState, SocSchedule};
 use super::core::{Core, Insn};
 use super::detail::UncoreDetail;
 use super::cache::Cache;
@@ -50,6 +50,25 @@ impl Interconnect {
     }
 }
 
+/// Cycle-resume bookkeeping for the FullSoc backend (ROADMAP
+/// "Schedule-indexable SoC"): the identity of the currently staged tile,
+/// the schedule its COMPUTE opened, the golden controller snapshot and
+/// how far along the window it has been advanced. Reused (and its
+/// buffers recycled) across every trial of a site batch; invalidated by
+/// [`Soc::reset`].
+#[derive(Default)]
+struct SocResume {
+    /// Tile identity of the staged operands (`None` = nothing staged).
+    key: Option<(usize, usize)>,
+    /// Mesh-relative cycle the golden snapshot `state` sits at.
+    cycle: u64,
+    /// The staged window's schedule, captured at COMPUTE decode — kept
+    /// outside `state` so it survives a golden advance that closes the
+    /// window (first effect at/after the window end).
+    sched: Option<SocSchedule>,
+    state: ControllerState,
+}
+
 /// The complete SoC.
 pub struct Soc {
     pub core: Core,
@@ -64,6 +83,7 @@ pub struct Soc {
     pub detail: UncoreDetail,
     pub cycles: u64,
     icache_stall: u32,
+    resume: SocResume,
 }
 
 impl Soc {
@@ -74,11 +94,11 @@ impl Soc {
         Self::with_dataflow(dim, crate::config::Dataflow::OutputStationary)
     }
 
-    /// [`Soc::new`] with the dataflow taken from `MeshConfig`. The SoC
-    /// backend is OS-only for now (the controller FSM implements the OS
-    /// schedule); campaigns reject WS + FullSoc with a config error
-    /// before construction, and the controller asserts it here too —
-    /// never a silent override to OS.
+    /// [`Soc::new`] with the dataflow taken from `MeshConfig`. Both
+    /// dataflows are first-class end-to-end targets: the controller's
+    /// [`SocSchedule`] opens the OS preload/compute/flush window or the
+    /// WS preload/compute window from the same command stream shape
+    /// (ROADMAP "Schedule-indexable SoC").
     pub fn with_dataflow(dim: usize, dataflow: crate::config::Dataflow) -> Self {
         let spad_rows = (256 * 1024 / dim).max(4 * dim * dim);
         Soc {
@@ -94,6 +114,7 @@ impl Soc {
             detail: UncoreDetail::new(dim),
             cycles: 0,
             icache_stall: 0,
+            resume: SocResume::default(),
         }
     }
 
@@ -101,7 +122,7 @@ impl Soc {
         self.ctrl.dim()
     }
 
-    /// The mesh dataflow this SoC executes (OS — see [`Soc::with_dataflow`]).
+    /// The mesh dataflow this SoC executes (see [`Soc::with_dataflow`]).
     pub fn dataflow(&self) -> crate::config::Dataflow {
         use crate::mesh::MeshSim;
         self.ctrl.mesh.dataflow()
@@ -112,7 +133,10 @@ impl Soc {
     /// arrays). Campaigns reuse one SoC across all `FullSoc` trials via
     /// this reset instead of constructing a fresh `Soc::new(dim)` per
     /// trial; `run_matmul` results after a reset are bit-identical to a
-    /// freshly built SoC (fault cycles are mesh-relative).
+    /// freshly built SoC (fault cycles are mesh-relative). Also
+    /// invalidates the cycle-resume cursor — the next
+    /// [`Soc::run_matmul_resumed`] re-stages its tile from scratch
+    /// (snapshot buffers are kept, only the identity is dropped).
     pub fn reset(&mut self) {
         let dim = self.dim();
         self.core = Core::new();
@@ -127,6 +151,9 @@ impl Soc {
         self.detail = UncoreDetail::new(dim);
         self.cycles = 0;
         self.icache_stall = 0;
+        self.resume.key = None;
+        self.resume.cycle = 0;
+        self.resume.sched = None;
     }
 
     /// One SoC clock edge: every block evaluates, like the verilated SoC.
@@ -193,12 +220,13 @@ impl Soc {
     /// zeroed in place) — the allocation-free seam the site-major trial
     /// batches drive. Returns the SoC cycles this run ticked.
     ///
-    /// The SoC always executes the FULL program: cycle-resume does not
-    /// apply here because the matmul schedule is owned by the
-    /// controller's execute FSM (command decode, DMA staging, drain),
-    /// not by a wrapper that could index it from an arbitrary cycle —
-    /// `TileBackend::supports_cycle_resume` gates on this (ROADMAP
-    /// "Cycle-resume" contract).
+    /// Executes the FULL driver program every call (command decode, DMA
+    /// staging, matmul window, fence drain). The cycle-resume
+    /// counterpart is [`Soc::run_matmul_resumed`], which pays the
+    /// prefix once per staged tile and replays only window suffixes —
+    /// both count SoC cycles through the same `self.cycles` clock, so
+    /// the two tile engines' `rtl_cycles_stepped` are directly
+    /// comparable (ROADMAP "Schedule-indexable SoC").
     pub fn run_matmul_into(
         &mut self,
         a: MatView<i8>,
@@ -208,14 +236,55 @@ impl Soc {
         out: &mut Mat<i32>,
     ) -> Result<u64> {
         let cycles_before = self.cycles;
+        let (prog, out_rows, c_base) = self.stage(a, b, d)?;
+        if !plan.is_empty() {
+            self.ctrl.arm_plan(plan);
+        }
+        let mut guard = 0u64;
+        while !self.core.halted() || self.ctrl.busy() || self.dma.busy() {
+            self.tick(&prog)?;
+            guard += 1;
+            anyhow::ensure!(guard < 10_000_000, "SoC run did not terminate");
+        }
+        out.reset(out_rows, self.dim());
+        for r in 0..out_rows {
+            out.row_mut(r).copy_from_slice(self.accmem.read_row(c_base + r)?);
+        }
+        Ok(self.cycles - cycles_before)
+    }
+
+    /// Stage one matmul's operands (main memory + accmem bias rows) and
+    /// build the driver program the core executes, per dataflow.
+    /// Returns `(program, out_rows, c_base)`: how many result rows land
+    /// and at which accmem row.
+    fn stage(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+    ) -> Result<(Vec<Insn>, usize, usize)> {
+        // the driver program runs from reset on every matmul
+        self.core = Core::new();
+        match self.dataflow() {
+            crate::config::Dataflow::OutputStationary => self.stage_os(a, b, d),
+            crate::config::Dataflow::WeightStationary => self.stage_ws(a, b, d),
+        }
+    }
+
+    /// OS staging: A as K DIM-columns, B as K rows, D as DIM bias rows;
+    /// C lands at accmem rows `dim..2*dim`.
+    fn stage_os(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+    ) -> Result<(Vec<Insn>, usize, usize)> {
         let dim = self.dim();
         let k = a.cols();
         anyhow::ensure!(a.rows() == dim, "A must have DIM rows");
         anyhow::ensure!(b.rows() == k, "B must have K rows");
         anyhow::ensure!(b.cols() == dim, "B must have DIM cols");
         anyhow::ensure!((d.rows(), d.cols()) == (dim, dim), "D must be DIM x DIM");
-        // the driver program runs from reset on every matmul
-        self.core = Core::new();
 
         // Stage operands in main memory: A as K columns, then B as K rows.
         // Views may be zero-padded windows, so stage element-wise through
@@ -236,13 +305,10 @@ impl Soc {
             d.copy_row_into(r, &mut d_buf);
             self.accmem.write_row(r, &d_buf)?;
         }
-        if !plan.is_empty() {
-            self.ctrl.arm_plan(plan);
-        }
 
         // Driver program the Rocket core executes (rs values via ADDIs —
         // the pointer arithmetic real driver code performs).
-        let c_base = dim as u64; // accmem landing row
+        let c_base = dim; // accmem landing row
         let prog = vec![
             Insn::Addi { rd: 1, rs1: 0, imm: a_mem as i64 },
             Insn::Addi { rd: 2, rs1: 0, imm: ((k as i64) << 32) | 0 },
@@ -263,18 +329,172 @@ impl Soc {
             Insn::Fence,
             Insn::Halt,
         ];
+        Ok((prog, dim, c_base))
+    }
 
+    /// WS staging: A as M activation rows, the stationary DIM x DIM
+    /// weight tile W after them, D as M psum-initialiser rows; C lands
+    /// at accmem rows `m..2*m`.
+    fn stage_ws(
+        &mut self,
+        a: MatView<i8>,
+        w: MatView<i8>,
+        d: MatView<i32>,
+    ) -> Result<(Vec<Insn>, usize, usize)> {
+        let dim = self.dim();
+        let m = a.rows();
+        anyhow::ensure!(a.cols() == dim, "A must have DIM cols");
+        anyhow::ensure!((w.rows(), w.cols()) == (dim, dim), "W must be DIM x DIM");
+        anyhow::ensure!(d.rows() == m, "D must have M rows");
+        anyhow::ensure!(d.cols() == dim, "D must have DIM cols");
+        anyhow::ensure!(
+            m + dim <= self.spad.rows(),
+            "WS activation panel of {m} rows does not fit the scratchpad"
+        );
+        anyhow::ensure!(
+            2 * m <= self.accmem.rows(),
+            "WS activation panel of {m} rows does not fit the accumulator"
+        );
+
+        // Stage A rows then W rows in main memory (element-wise through
+        // `at` so zero-padded window views read as zero).
+        let a_mem = 0x1000usize;
+        let w_mem = a_mem + m * dim;
+        let mut row_buf = vec![0i8; dim];
+        for r in 0..m {
+            a.copy_row_into(r, &mut row_buf);
+            self.mem.bytes[a_mem + r * dim..a_mem + (r + 1) * dim].copy_from_slice(&row_buf);
+        }
+        for r in 0..dim {
+            w.copy_row_into(r, &mut row_buf);
+            self.mem.bytes[w_mem + r * dim..w_mem + (r + 1) * dim].copy_from_slice(&row_buf);
+        }
+        let mut d_buf = vec![0i32; dim];
+        for r in 0..m {
+            d.copy_row_into(r, &mut d_buf);
+            self.accmem.write_row(r, &d_buf)?;
+        }
+
+        // Same program shape as OS — only the stream length (CONFIG = M)
+        // and the operand layout differ: A rows at spad 0..m, W rows at
+        // spad m..m+dim (COMPUTE rs2), D/C in accmem rows 0..m / m..2m.
+        let c_base = m;
+        let prog = vec![
+            Insn::Addi { rd: 1, rs1: 0, imm: a_mem as i64 },
+            Insn::Addi { rd: 2, rs1: 0, imm: ((m as i64) << 32) | 0 },
+            Insn::Rocc { funct: funct::MVIN, rs1: 1, rs2: 2 }, // A rows -> rows 0..m
+            Insn::Fence,
+            Insn::Addi { rd: 3, rs1: 0, imm: w_mem as i64 },
+            Insn::Addi { rd: 4, rs1: 0, imm: ((dim as i64) << 32) | m as i64 },
+            Insn::Rocc { funct: funct::MVIN, rs1: 3, rs2: 4 }, // W rows -> rows m..m+dim
+            Insn::Fence,
+            Insn::Addi { rd: 5, rs1: 0, imm: m as i64 },
+            Insn::Rocc { funct: funct::CONFIG, rs1: 5, rs2: 0 },
+            Insn::Addi { rd: 6, rs1: 0, imm: 0 },
+            Insn::Addi { rd: 7, rs1: 0, imm: c_base as i64 },
+            Insn::Rocc { funct: funct::PRELOAD, rs1: 6, rs2: 7 },
+            Insn::Addi { rd: 8, rs1: 0, imm: 0 },
+            Insn::Addi { rd: 9, rs1: 0, imm: m as i64 },
+            Insn::Rocc { funct: funct::COMPUTE, rs1: 8, rs2: 9 },
+            Insn::Fence,
+            Insn::Halt,
+        ];
+        Ok((prog, m, c_base))
+    }
+
+    /// Cold-stage a tile for cycle-resume: full reset, DMA staging and
+    /// command decode up to the COMPUTE that opens the matmul window,
+    /// then snapshot the controller at mesh-relative cycle 0. Returns
+    /// the SoC cycles the prefix ticked (paid once per staged tile).
+    fn begin_tile(&mut self, a: MatView<i8>, b: MatView<i8>, d: MatView<i32>) -> Result<u64> {
+        self.reset();
+        let (prog, _out_rows, _c_base) = self.stage(a, b, d)?;
         let mut guard = 0u64;
-        while !self.core.halted() || self.ctrl.busy() || self.dma.busy() {
+        while !self.ctrl.in_window() {
             self.tick(&prog)?;
             guard += 1;
-            anyhow::ensure!(guard < 10_000_000, "SoC run did not terminate");
+            anyhow::ensure!(guard < 10_000_000, "SoC prefix did not open the matmul window");
         }
-        out.reset(dim, dim);
-        for r in 0..dim {
-            out.row_mut(r).copy_from_slice(self.accmem.read_row(dim + r)?);
+        self.resume.sched = self.ctrl.window_schedule();
+        self.ctrl.save_state(&mut self.resume.state);
+        self.resume.cycle = 0;
+        Ok(self.cycles)
+    }
+
+    /// Cycle-resume counterpart of [`Soc::run_matmul_into`]: pay the
+    /// command-decode/DMA prefix once per tile `key`, keep a golden
+    /// controller snapshot, advance it monotonically to each trial's
+    /// `resume_at` (the plan's first effect cycle), and replay only the
+    /// faulty window suffix. Bit-identical to the full program because
+    /// the window trajectory is prefix-independent: the mesh resets at
+    /// COMPUTE decode, the scratchpad/accmem operand rows are never
+    /// mutated mid-window, and fault cycles are mesh-relative. Returns
+    /// the SoC cycles actually ticked (prefix when staging + golden
+    /// advance + replay) — the same clock `run_matmul_into` counts, so
+    /// `rtl_cycles_stepped` is comparable across tile engines.
+    ///
+    /// Trials of a batch should arrive sorted by `resume_at` (the
+    /// campaign sorts site batches); an earlier cycle re-stages the
+    /// tile from scratch rather than failing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_matmul_resumed(
+        &mut self,
+        a: MatView<i8>,
+        b: MatView<i8>,
+        d: MatView<i32>,
+        plan: &FaultPlan,
+        key: (usize, usize),
+        resume_at: u64,
+        out: &mut Mat<i32>,
+    ) -> Result<u64> {
+        let mut stepped = 0u64;
+        if self.resume.key != Some(key) {
+            stepped += self.begin_tile(a, b, d)?;
+            self.resume.key = Some(key);
         }
-        Ok(self.cycles - cycles_before)
+        let sched = self.resume.sched.expect("resumable tile without a schedule");
+        let total = sched.total_cycles();
+        let target = resume_at.min(total);
+        if target < self.resume.cycle {
+            // rewind: an unsorted batch — re-stage from scratch
+            stepped += self.begin_tile(a, b, d)?;
+        }
+        self.ctrl.restore_state(&self.resume.state);
+        if target > self.resume.cycle {
+            // advance the shared golden snapshot (no fault armed)
+            self.ctrl.disarm();
+            stepped += self.step_ctrl_window_to(target)?;
+            self.ctrl.save_state(&mut self.resume.state);
+            self.resume.cycle = target;
+        }
+        // faulty replay of the suffix (a plan entirely at/after the
+        // window end degenerates to reading the golden result, exactly
+        // as the full program would)
+        self.ctrl.begin_replay(plan);
+        stepped += self.step_ctrl_window_to(total)?;
+        let out_rows = sched.out_rows();
+        out.reset(out_rows, self.dim());
+        for r in 0..out_rows {
+            out.row_mut(r)
+                .copy_from_slice(self.accmem.read_row(sched.c_base() + r)?);
+        }
+        Ok(stepped)
+    }
+
+    /// Step the in-flight matmul window up to (not including) mesh
+    /// cycle `to`, counting each edge on the SoC clock. Per-edge
+    /// discipline matches [`Soc::tick`]: the scratchpad releases its
+    /// ports before the controller's operand reads — so port conflicts
+    /// and stalls account identically under both tile engines.
+    fn step_ctrl_window_to(&mut self, to: u64) -> Result<u64> {
+        let mut stepped = 0u64;
+        while self.ctrl.in_window() && self.ctrl.mesh_cycle() < to {
+            self.cycles += 1;
+            self.spad.tick();
+            self.ctrl.step_window(&mut self.spad, &mut self.accmem)?;
+            stepped += 1;
+        }
+        Ok(stepped)
     }
 }
 
@@ -395,5 +615,102 @@ mod tests {
             .run_matmul(a.view(), b.view(), d.view(), &FaultPlan::single(f))
             .unwrap();
         assert_ne!(golden, faulty);
+    }
+
+    #[test]
+    fn soc_ws_matmul_matches_gold() {
+        use crate::config::Dataflow;
+        let mut rng = Rng::new(81);
+        for &(dim, m) in &[(2usize, 2usize), (4, 4), (4, 7), (8, 11)] {
+            let mut soc = Soc::with_dataflow(dim, Dataflow::WeightStationary);
+            let a = rng.mat_i8(m, dim);
+            let w = rng.mat_i8(dim, dim);
+            let d = rng.mat_i32(m, dim, 1000);
+            let c = soc
+                .run_matmul(a.view(), w.view(), d.view(), &FaultPlan::empty())
+                .unwrap();
+            assert_eq!(c, gold_matmul(a.view(), w.view(), d.view()), "dim={dim} m={m}");
+        }
+    }
+
+    #[test]
+    fn soc_resumed_matches_full_run_and_steps_fewer_cycles() {
+        use crate::config::Dataflow;
+        use crate::mesh::signal::SignalKind;
+        // The SoC-level cycle-resume contract: per trial, the resumed
+        // path is bit-identical to the full driver program, and a batch
+        // of same-tile trials steps strictly fewer SoC cycles (prefix
+        // and fence-drain postfix paid once, golden window prefixes
+        // shared), both dataflows.
+        let dim = 4;
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let mut rng = Rng::new(83);
+            let (a, b, d) = match dataflow {
+                Dataflow::OutputStationary => (
+                    rng.mat_i8(dim, 6),
+                    rng.mat_i8(6, dim),
+                    rng.mat_i32(dim, dim, 100),
+                ),
+                Dataflow::WeightStationary => (
+                    rng.mat_i8(6, dim),
+                    rng.mat_i8(dim, dim),
+                    rng.mat_i32(6, dim, 100),
+                ),
+            };
+            // trials sorted by first effect cycle, as the campaign sorts
+            let plans: Vec<FaultPlan> = [2u64, 9, 14]
+                .iter()
+                .map(|&cyc| FaultPlan::single(Fault::new(1, 2, SignalKind::Acc, 12, cyc)))
+                .collect();
+
+            let mut full = Soc::with_dataflow(dim, dataflow);
+            let mut c_full = Vec::new();
+            let mut full_cycles = 0u64;
+            for plan in &plans {
+                full.reset();
+                let mut c = Mat::default();
+                full_cycles += full
+                    .run_matmul_into(a.view(), b.view(), d.view(), plan, &mut c)
+                    .unwrap();
+                c_full.push(c);
+            }
+
+            let mut soc = Soc::with_dataflow(dim, dataflow);
+            let mut resumed_cycles = 0u64;
+            for (plan, oracle) in plans.iter().zip(&c_full) {
+                let mut c = Mat::default();
+                resumed_cycles += soc
+                    .run_matmul_resumed(
+                        a.view(),
+                        b.view(),
+                        d.view(),
+                        plan,
+                        (0, 0),
+                        plan.first_cycle(),
+                        &mut c,
+                    )
+                    .unwrap();
+                assert_eq!(&c, oracle, "{dataflow:?}: resumed trial must be bit-identical");
+            }
+            assert!(
+                resumed_cycles < full_cycles,
+                "{dataflow:?}: resumed batch must step fewer SoC cycles: {resumed_cycles} vs {full_cycles}"
+            );
+
+            // a fresh key re-stages and still matches (cursor reuse is
+            // keyed, never silently carried across tiles)
+            let mut c = Mat::default();
+            soc.run_matmul_resumed(
+                a.view(),
+                b.view(),
+                d.view(),
+                &plans[0],
+                (1, 0),
+                plans[0].first_cycle(),
+                &mut c,
+            )
+            .unwrap();
+            assert_eq!(&c, &c_full[0], "{dataflow:?}: re-staged tile must be bit-identical");
+        }
     }
 }

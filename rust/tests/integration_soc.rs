@@ -3,7 +3,7 @@
 //! MatmulDriver schedule exactly) and the cost structure behind Table V.
 
 use enfor_sa::config::Dataflow;
-use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, MatmulDriver};
+use enfor_sa::mesh::driver::{gold_matmul, os_matmul_cycles, ws_matmul_cycles, MatmulDriver};
 use enfor_sa::mesh::{Fault, FaultPlan, Mesh, MeshSim, SignalKind};
 use enfor_sa::soc::Soc;
 use enfor_sa::util::Rng;
@@ -86,6 +86,66 @@ fn soc_and_mesh_agree_on_multi_fault_plans() {
         let mut soc = Soc::new(dim);
         let c_soc = soc.run_matmul(a.view(), b.view(), d.view(), plan).unwrap();
         assert_eq!(c_mesh, c_soc, "plan [{plan}] diverged between backends");
+    }
+}
+
+#[test]
+fn soc_ws_and_mesh_agree_on_identical_faults() {
+    // the WS mirror of the cross-backend contract: the controller's WS
+    // window replays the MatmulDriver's weight-stationary schedule
+    // cycle-for-cycle, so identical faults corrupt identically
+    let mut rng = Rng::new(0x50C8);
+    let dim = 4;
+    let m = 6;
+    let a = rng.mat_i8(m, dim);
+    let w = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(m, dim, 100);
+    for kind in SignalKind::ALL {
+        for cycle in [1u64, 7, ws_matmul_cycles(dim, m) - 2] {
+            let fault = Fault::new(1, 2, kind, 0, cycle);
+            let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+            let c_mesh = MatmulDriver::new(&mut mesh)
+                .matmul_with_fault(a.view(), w.view(), d.view(), &fault);
+            let mut soc = Soc::with_dataflow(dim, Dataflow::WeightStationary);
+            let c_soc = soc
+                .run_matmul(a.view(), w.view(), d.view(), &FaultPlan::single(fault))
+                .unwrap();
+            assert_eq!(c_mesh, c_soc, "ws {fault} diverged between backends");
+        }
+    }
+}
+
+#[test]
+fn soc_ws_and_mesh_agree_on_multi_fault_plans() {
+    let mut rng = Rng::new(0x50C9);
+    let dim = 4;
+    let m = 7;
+    let a = rng.mat_i8(m, dim);
+    let w = rng.mat_i8(dim, dim);
+    let d = rng.mat_i32(m, dim, 100);
+    let plans = vec![
+        FaultPlan::new(
+            (0..dim)
+                .map(|r| Fault::new(r, 1, SignalKind::Propag, 0, 6))
+                .collect(),
+        ),
+        FaultPlan::new(vec![
+            Fault::new(1, 2, SignalKind::Acc, 3, 6),
+            Fault::new(1, 2, SignalKind::Acc, 4, 6),
+        ]),
+        FaultPlan::new(vec![
+            Fault::new(0, 0, SignalKind::Weight, 5, 2),
+            Fault::new(3, 3, SignalKind::Act, 2, 10),
+        ]),
+        FaultPlan::single(Fault::stuck_at(0, 0, SignalKind::Weight, 2, true, 3)),
+    ];
+    for plan in &plans {
+        let mut mesh = Mesh::new(dim, Dataflow::WeightStationary);
+        let c_mesh =
+            MatmulDriver::new(&mut mesh).matmul_with_plan(a.view(), w.view(), d.view(), plan);
+        let mut soc = Soc::with_dataflow(dim, Dataflow::WeightStationary);
+        let c_soc = soc.run_matmul(a.view(), w.view(), d.view(), plan).unwrap();
+        assert_eq!(c_mesh, c_soc, "ws plan [{plan}] diverged between backends");
     }
 }
 

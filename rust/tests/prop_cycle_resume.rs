@@ -14,8 +14,10 @@
 //!    between `--tile-engine full` and `--tile-engine cycle-resume`
 //!    across all five fault scenarios on the Mesh and Hdfit backends,
 //!    under worker sharding, and cycle-resume steps strictly fewer RTL
-//!    cycles. The whole-SoC backend keeps the full path (its controller
-//!    FSM owns the schedule) and must be unaffected by the flag.
+//!    cycles. The whole-SoC backend honours the flag too (ROADMAP
+//!    "Schedule-indexable SoC"): its controller snapshots inside the
+//!    matmul window, so resumed campaigns are bit-identical to full
+//!    ones under both dataflows and step strictly fewer SoC cycles.
 
 use enfor_sa::campaign::{run_campaign, CampaignResult};
 use enfor_sa::config::{
@@ -366,28 +368,65 @@ fn prop_cycle_resume_is_worker_invariant() {
     }
 }
 
-/// The SoC backend keeps the full tile path: a cycle-resume campaign is
-/// bit-identical to a full one (the flag silently falls back), pinned
-/// on a small budget because every trial drives the whole chip.
+/// Contract 3 (FullSoc): the whole-SoC backend honours the tile engine
+/// now — fixed-seed campaigns are bit-identical between full and
+/// cycle-resume under both dataflows and multi-fault scenarios, and
+/// cycle-resume steps STRICTLY fewer SoC cycles: the command-decode
+/// prefix is paid once per tile and the fence-drain/halt postfix never,
+/// instead of both per trial. Small budget — every trial still drives
+/// the whole chip.
 #[test]
-fn prop_full_soc_ignores_cycle_resume() {
+fn prop_full_soc_tile_engines_agree_and_resume_steps_fewer() {
     let model = models::quicknet(11);
-    let mesh = MeshConfig {
-        dim: 4,
-        ..Default::default()
-    };
-    let mut base = cfg(Backend::FullSoc, Scenario::Seu, TileEngine::CycleResume);
-    base.faults_per_layer = 1;
-    base.inputs = 1;
-    let resume = run_campaign(&model, &mesh, &base).unwrap();
-    base.tile_engine = TileEngine::Full;
-    let full = run_campaign(&model, &mesh, &base).unwrap();
-    assert_eq!(resume.vuln.trials, 5);
-    assert_bit_identical(&resume, &full, "full-soc");
-    assert_eq!(
-        resume.rtl_cycles_stepped, full.rtl_cycles_stepped,
-        "the SoC ticks the same cycles either way"
-    );
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        let mesh = MeshConfig { dim: 4, dataflow };
+        for scenario in [Scenario::Seu, Scenario::DoubleSeu, Scenario::Mbu { bits: 2 }] {
+            let mut base = cfg(Backend::FullSoc, scenario, TileEngine::CycleResume);
+            base.faults_per_layer = 2;
+            base.inputs = 1;
+            let resume = run_campaign(&model, &mesh, &base).unwrap();
+            base.tile_engine = TileEngine::Full;
+            let full = run_campaign(&model, &mesh, &base).unwrap();
+            assert_eq!(resume.vuln.trials, 10, "full-soc/{dataflow}/{scenario}");
+            assert_bit_identical(&resume, &full, &format!("full-soc/{dataflow}/{scenario}"));
+            assert!(
+                resume.rtl_cycles_stepped < full.rtl_cycles_stepped,
+                "full-soc/{dataflow}/{scenario}: resumed SoC stepped {} cycles, full {}",
+                resume.rtl_cycles_stepped,
+                full.rtl_cycles_stepped
+            );
+        }
+    }
+}
+
+/// Contract 3 (FullSoc worker invariance): the SoC resume cursor is
+/// per-batch state and batches are the shard unit, so any worker count
+/// reproduces the single-worker counts AND the deterministic
+/// stepped-cycle accounting, both dataflows.
+#[test]
+fn prop_full_soc_cycle_resume_is_worker_invariant() {
+    let model = models::quicknet(11);
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        let mesh = MeshConfig { dim: 4, dataflow };
+        let mut c = cfg(Backend::FullSoc, Scenario::Seu, TileEngine::CycleResume);
+        c.faults_per_layer = 2;
+        c.inputs = 1;
+        c.workers = 1;
+        let one = run_parallel(&model, &mesh, &c, None).unwrap();
+        for workers in [2usize, 5] {
+            c.workers = workers;
+            let many = run_parallel(&model, &mesh, &c, None).unwrap();
+            assert_bit_identical(
+                &one,
+                &many,
+                &format!("full-soc/{dataflow} workers={workers}"),
+            );
+            assert_eq!(
+                one.rtl_cycles_stepped, many.rtl_cycles_stepped,
+                "full-soc/{dataflow} workers={workers}: accounting must be deterministic"
+            );
+        }
+    }
 }
 
 /// Cycle-resume must beat the full tile engine on stepped RTL cycles

@@ -11,8 +11,10 @@
 //!    counts once per cycle, not per lane), and `lanes = 1` degenerates
 //!    to cycle-resume exactly — cycle counts included.
 //! 3. Backends without lane support degrade through the gate chain:
-//!    HDFIT to cycle-resume, the whole-SoC backend to full — bit- and
-//!    cycle-identical to the engine they fall back to.
+//!    HDFIT and the whole-SoC backend both fall back to cycle-resume
+//!    (one persistent chip cannot carry N lanes, but its controller is
+//!    schedule-indexable) — bit- and cycle-identical to the engine
+//!    they fall back to.
 
 use enfor_sa::campaign::{run_campaign, CampaignResult};
 use enfor_sa::config::{
@@ -171,20 +173,23 @@ fn prop_hdfit_lockstep_degrades_to_cycle_resume() {
     }
 }
 
-/// Contract 3: the whole-SoC backend keeps the full tile path under
-/// lane-lockstep exactly as it does under cycle-resume.
+/// Contract 3: the whole-SoC backend rejects lane batching (one
+/// persistent chip cannot carry N lanes) and must degrade to
+/// cycle-resume bit- and cycle-identically, on both dataflows.
 #[test]
-fn prop_full_soc_is_unaffected_by_lockstep() {
+fn prop_full_soc_lockstep_degrades_to_cycle_resume() {
     let model = models::quicknet(5);
-    // the whole-SoC backend steps the entire chip per cycle — keep the
-    // mesh small and the budget minimal, like every other SoC pin
-    let mc = MeshConfig { dim: 4, ..Default::default() };
-    let mut lock = cfg(Backend::FullSoc, TileEngine::LaneLockstep, 8);
-    lock.faults_per_layer = 1;
-    let a = run_campaign(&model, &mc, &lock).unwrap();
-    let mut full = cfg(Backend::FullSoc, TileEngine::Full, 8);
-    full.faults_per_layer = 1;
-    let b = run_campaign(&model, &mc, &full).unwrap();
-    assert_bit_identical(&a, &b, "full-soc fallback");
-    assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped);
+    for dataflow in DATAFLOWS {
+        // the whole-SoC backend steps the entire chip per cycle — keep
+        // the mesh small and the budget minimal, like every other SoC pin
+        let mc = MeshConfig { dim: 4, dataflow };
+        let mut lock = cfg(Backend::FullSoc, TileEngine::LaneLockstep, 8);
+        lock.faults_per_layer = 1;
+        let a = run_campaign(&model, &mc, &lock).unwrap();
+        let mut resume = cfg(Backend::FullSoc, TileEngine::CycleResume, 8);
+        resume.faults_per_layer = 1;
+        let b = run_campaign(&model, &mc, &resume).unwrap();
+        assert_bit_identical(&a, &b, &format!("{dataflow}: full-soc fallback"));
+        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+    }
 }

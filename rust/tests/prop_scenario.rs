@@ -18,7 +18,8 @@
 //!    dataflow: the OS RNG stream is exactly the legacy one (contract
 //!    1a is OS by construction), WS `seu` plans draw the weight-tile
 //!    grid and M-stream cycle range in the same draw order, and every
-//!    scenario campaign also runs end-to-end on the WS mesh backends.
+//!    scenario campaign also runs end-to-end on the WS mesh backends
+//!    and on the whole SoC under both dataflows (contract 3d).
 
 use enfor_sa::campaign::{
     campaign_sites, derived_input_seed, plan_one, run_campaign, sample_mesh_fault,
@@ -284,27 +285,27 @@ fn prop_scenarios_are_worker_count_invariant() {
     }
 }
 
-/// Contract 3d: the full-SoC backend executes scenario plans too
+/// Contract 3d: the full-SoC backend executes scenario plans too,
+/// under BOTH dataflows since the schedule-indexable controller
 /// (small budget — every trial drives the whole chip).
 #[test]
 fn full_soc_runs_scenario_plans() {
     let model = models::quicknet(11);
-    let mesh = MeshConfig {
-        dim: 4,
-        ..Default::default()
-    };
-    for scenario in [Scenario::Mbu { bits: 2 }, Scenario::StuckAt { value: true }] {
-        let mut c = cfg(Backend::FullSoc, scenario);
-        c.faults_per_layer = 1;
-        c.inputs = 1;
-        let soc = run_campaign(&model, &mesh, &c).unwrap();
-        assert_eq!(soc.vuln.trials, 5, "{scenario}");
-        // and it matches the mesh backend on the same plans
-        let mut m_cfg = cfg(Backend::EnforSa, scenario);
-        m_cfg.faults_per_layer = 1;
-        m_cfg.inputs = 1;
-        let mesh_r = run_campaign(&model, &mesh, &m_cfg).unwrap();
-        assert_counts_equal(&soc, &mesh_r, &format!("{scenario} soc-vs-mesh"));
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        let mesh = MeshConfig { dim: 4, dataflow };
+        for scenario in [Scenario::Mbu { bits: 2 }, Scenario::StuckAt { value: true }] {
+            let mut c = cfg(Backend::FullSoc, scenario);
+            c.faults_per_layer = 1;
+            c.inputs = 1;
+            let soc = run_campaign(&model, &mesh, &c).unwrap();
+            assert_eq!(soc.vuln.trials, 5, "{dataflow}/{scenario}");
+            // and it matches the mesh backend on the same plans
+            let mut m_cfg = cfg(Backend::EnforSa, scenario);
+            m_cfg.faults_per_layer = 1;
+            m_cfg.inputs = 1;
+            let mesh_r = run_campaign(&model, &mesh, &m_cfg).unwrap();
+            assert_counts_equal(&soc, &mesh_r, &format!("{dataflow}/{scenario} soc-vs-mesh"));
+        }
     }
 }
 
