@@ -14,7 +14,11 @@
 //!
 //! Each row also runs the whole-SoC campaign pair (schema v7):
 //! cycle-resume vs full tile engine on the FullSoc backend, reported as
-//! `soc_cycle_resume_speedup` plus the wall-clock `soc_vs_sw_slowdown`.
+//! `soc_cycle_resume_speedup` plus the wall-clock `soc_vs_sw_slowdown`,
+//! and the durable-journal pair (schema v8): the same campaign through
+//! the coordinator's in-memory sink vs journaled to a scratch campaign
+//! dir (manifest + per-batch fsynced JSONL + report), reported as
+//! `journal_overhead` — CI's bench smoke asserts its mean stays < 1.10.
 //!
 //! Set BENCH_OUT=path.json to also write a machine-readable snapshot
 //! (`benchkit::injection_snapshot_json` — the schema stored under
@@ -73,15 +77,16 @@ fn main() {
          scenario {scenario}, DIM8, dataflows {dataflows:?}, {lanes} lanes)"
     );
     println!(
-        "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8} {:>8} {:>8} {:>8}",
+        "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8} {:>8} {:>8} \
+         {:>8} {:>8}",
         "Model", "DF", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s",
-        "resume-x", "rtl-cycles", "tile-x", "lock-x", "soc-x", "soc/sw"
+        "resume-x", "rtl-cycles", "tile-x", "lock-x", "soc-x", "soc/sw", "jrnl-x"
     );
     let rows = injection_table_dataflows(&names, &mesh_cfg, &cc, &dataflows).expect("campaigns");
     for r in &rows {
         println!(
             "{:<16} {:>4} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} \
-             {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x",
+             {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x",
             r.model,
             r.dataflow,
             human_time(r.sw.wall.as_secs_f64()),
@@ -95,14 +100,16 @@ fn main() {
             r.cycle_resume_speedup(),
             r.lockstep_speedup(),
             r.soc_cycle_resume_speedup(),
-            r.soc_vs_sw_slowdown()
+            r.soc_vs_sw_slowdown(),
+            r.journal_overhead()
         );
     }
     let n = rows.len() as f64;
     println!(
         "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x  \
          cycle-resume speedup {:.2}x  lockstep speedup {:.2}x  \
-         SoC cycle-resume speedup {:.2}x  SoC-vs-SW slowdown {:.2}x",
+         SoC cycle-resume speedup {:.2}x  SoC-vs-SW slowdown {:.2}x  \
+         journal overhead {:.3}x",
         rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.pvf_pct()).sum::<f64>() / n,
         rows.iter().map(|r| r.avf_pct()).sum::<f64>() / n,
@@ -114,10 +121,12 @@ fn main() {
         rows.iter().map(|r| r.lockstep_speedup()).sum::<f64>() / n,
         rows.iter().map(|r| r.soc_cycle_resume_speedup()).sum::<f64>() / n,
         rows.iter().map(|r| r.soc_vs_sw_slowdown()).sum::<f64>() / n,
+        rows.iter().map(|r| r.journal_overhead()).sum::<f64>() / n,
     );
     for r in &rows {
         println!(
-            "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4},{},{:.4},{:.4},{:.4}",
+            "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4},{},{:.4},\
+             {:.4},{:.4},{:.4}",
             r.model,
             r.dataflow,
             r.sw.wall.as_secs_f64(),
@@ -132,7 +141,8 @@ fn main() {
             r.lanes,
             r.lockstep_speedup(),
             r.soc_cycle_resume_speedup(),
-            r.soc_vs_sw_slowdown()
+            r.soc_vs_sw_slowdown(),
+            r.journal_overhead()
         );
     }
     if let Ok(path) = std::env::var("BENCH_OUT") {

@@ -8,7 +8,9 @@ use crate::config::{
     Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
     TrialEngine,
 };
+use crate::coordinator::run_parallel;
 use crate::dnn::models;
+use crate::journal::{run_journaled, Shard};
 use crate::mat::Mat;
 use crate::mesh::driver::{tiled_matmul_os, MatmulDriver};
 use crate::mesh::hdfit::InstrumentedMesh;
@@ -214,6 +216,15 @@ pub struct InjectionRow {
     /// to `full` — same seed, bit-identical counts; isolates the SoC
     /// cycle-resume effect as a deterministic SoC-cycle ratio.
     pub soc_tile_full: CampaignResult,
+    /// Identical campaign through the async coordinator with the
+    /// in-memory batch sink (schema v8) — the journal-overhead
+    /// baseline: same seed, bit-identical counts, no durability.
+    pub rtl_mem: CampaignResult,
+    /// The same campaign journaled to a scratch campaign dir —
+    /// manifest write, per-batch fsynced JSONL appends, final report
+    /// (schema v8). Same seed, bit-identical counts; the wall ratio
+    /// against `rtl_mem` prices the durability layer.
+    pub rtl_journal: CampaignResult,
 }
 
 impl InjectionRow {
@@ -287,6 +298,16 @@ impl InjectionRow {
     pub fn soc_vs_sw_slowdown(&self) -> f64 {
         self.soc.wall.as_secs_f64() / self.sw.wall.as_secs_f64()
     }
+
+    /// Wall-clock cost of durability (schema v8): the journaled
+    /// campaign (manifest + per-batch fsynced journal + report) over
+    /// the identical in-memory-sink campaign through the same
+    /// coordinator. CI's bench smoke asserts the mean stays < 1.10 —
+    /// fsync at batch (not trial) granularity keeps durability in the
+    /// noise floor.
+    pub fn journal_overhead(&self) -> f64 {
+        self.rtl_journal.wall.as_secs_f64() / self.rtl_mem.wall.as_secs_f64()
+    }
 }
 
 /// Table VI: run SW-only and ENFOR-SA campaigns for each named model,
@@ -297,10 +318,11 @@ impl InjectionRow {
 /// model switches only the tile engine to `lane-lockstep` (schema v6)
 /// to measure `lockstep_speedup` against the cycle-resume baseline.
 /// The oracle runs are slower by design (they are what the fast path
-/// is measured against), so generating the table costs roughly three
+/// is measured against), so generating the table costs a handful of
 /// extra campaigns per model — the price of tracking
-/// `resume_speedup_vs_full_forward`, `cycle_resume_speedup` and
-/// `lockstep_speedup` in every snapshot.
+/// `resume_speedup_vs_full_forward`, `cycle_resume_speedup`,
+/// `lockstep_speedup` and (schema v8) `journal_overhead` — the
+/// in-memory-sink vs journaled-campaign wall pair — in every snapshot.
 pub fn injection_table(
     model_names: &[String],
     mesh_cfg: &MeshConfig,
@@ -336,6 +358,32 @@ pub fn injection_table(
         let mut soc_full_cfg = soc_cfg.clone();
         soc_full_cfg.tile_engine = TileEngine::Full;
         let soc_tile_full = run_campaign(&model, mesh_cfg, &soc_full_cfg)?;
+        // schema v8: the journal-overhead pair — the same RTL campaign
+        // through the coordinator with the in-memory sink, then
+        // journaled to a scratch campaign dir (manifest + per-batch
+        // fsynced JSONL + report); the wall ratio prices durability
+        let rtl_mem = run_parallel(&model, mesh_cfg, &rtl_cfg, None)?;
+        // unique per call (pid + process-wide counter): concurrent
+        // tests in one test binary must not share a scratch dir
+        static SCRATCH_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let scratch = std::env::temp_dir().join(format!(
+            "enfor-sa-journal-bench-{}-{}",
+            std::process::id(),
+            SCRATCH_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&scratch);
+        let journaled = run_journaled(
+            &model,
+            mesh_cfg,
+            &rtl_cfg,
+            &scratch,
+            Shard::default(),
+            false,
+            None,
+            None,
+        )?;
+        let _ = std::fs::remove_dir_all(&scratch);
+        let rtl_journal = journaled.result;
         rows.push(InjectionRow {
             model: model.name.clone(),
             dataflow: mesh_cfg.dataflow,
@@ -347,6 +395,8 @@ pub fn injection_table(
             lanes: lockstep_cfg.lanes,
             soc,
             soc_tile_full,
+            rtl_mem,
+            rtl_journal,
         });
     }
     Ok(rows)
@@ -396,6 +446,11 @@ pub fn injection_table_dataflows(
 /// deterministic `soc_cycle_resume_speedup` ratio and the wall-clock
 /// `soc_vs_sw_slowdown`, plus top-level means of both — the measured
 /// counterparts of the paper's 569x isolation and ~6% overhead claims.
+/// Schema v8 prices the durable campaign journal (ROADMAP "Durable
+/// campaign journal"): per-model `journal_mem_wall_s` (in-memory
+/// sink), `journal_wall_s` (manifest + per-batch fsynced JSONL +
+/// report) and their ratio `journal_overhead`, plus the top-level
+/// `mean_journal_overhead` that the CI bench smoke asserts < 1.10.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -451,6 +506,15 @@ pub fn injection_snapshot_json(
                     Json::num(r.soc_cycle_resume_speedup()),
                 ),
                 ("soc_vs_sw_slowdown", Json::num(r.soc_vs_sw_slowdown())),
+                (
+                    "journal_mem_wall_s",
+                    Json::num(r.rtl_mem.wall.as_secs_f64()),
+                ),
+                (
+                    "journal_wall_s",
+                    Json::num(r.rtl_journal.wall.as_secs_f64()),
+                ),
+                ("journal_overhead", Json::num(r.journal_overhead())),
             ])
         })
         .collect();
@@ -468,7 +532,7 @@ pub fn injection_snapshot_json(
     // but read per row so mixed-lane tables stay representable
     let lanes = rows.first().map_or(0, |r| r.lanes);
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v7")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v8")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
         (
@@ -507,6 +571,10 @@ pub fn injection_snapshot_json(
             "mean_soc_vs_sw_slowdown",
             Json::num(rows.iter().map(|r| r.soc_vs_sw_slowdown()).sum::<f64>() / n),
         ),
+        (
+            "mean_journal_overhead",
+            Json::num(rows.iter().map(|r| r.journal_overhead()).sum::<f64>() / n),
+        ),
         ("models", Json::Arr(models)),
     ])
 }
@@ -541,7 +609,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v7_carries_dataflow_scenario_and_cycle_accounting() {
+    fn snapshot_schema_v8_carries_dataflow_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -560,7 +628,7 @@ mod tests {
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v7")
+            Some("enfor-sa/injection-overhead/v8")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
         assert_eq!(j.get("lanes").and_then(Json::as_f64), Some(8.0));
@@ -641,6 +709,37 @@ mod tests {
         assert!(
             j.get("mean_soc_vs_sw_slowdown").and_then(Json::as_f64).unwrap() > 0.0
         );
+        // the v8 journal axis: both walls and the overhead ratio
+        assert!(m0.get("journal_mem_wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(m0.get("journal_wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(m0.get("journal_overhead").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(
+            j.get("mean_journal_overhead").and_then(Json::as_f64).unwrap() > 0.0
+        );
+    }
+
+    #[test]
+    fn journaled_campaign_counts_match_in_memory_sink() {
+        // the v8 acceptance bar at the benchkit layer: the journaled
+        // campaign is count-identical to the in-memory-sink campaign
+        // AND to the plain single-threaded campaign — durability is a
+        // pure sink concern, never a sampling one.
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 4,
+            inputs: 2,
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let r = &rows[0];
+        for pair in [&r.rtl_mem, &r.rtl_journal] {
+            assert_eq!(r.rtl.vuln.trials, pair.vuln.trials);
+            assert_eq!(r.rtl.vuln.critical, pair.vuln.critical);
+            assert_eq!(r.rtl.exposed_trials, pair.exposed_trials);
+            assert_eq!(r.rtl.masked_trials, pair.masked_trials);
+            assert_eq!(r.rtl.rtl_cycles_stepped, pair.rtl_cycles_stepped);
+        }
+        assert!(r.journal_overhead() > 0.0);
     }
 
     #[test]

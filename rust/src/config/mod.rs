@@ -110,6 +110,16 @@ impl OffloadScope {
     }
 }
 
+impl std::fmt::Display for OffloadScope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            OffloadScope::SingleTile => "single-tile",
+            OffloadScope::Layer => "layer",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// How each fault trial executes the network around the injected tile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum TrialEngine {
@@ -286,6 +296,16 @@ impl MeshConfig {
         }
         Ok(())
     }
+
+    /// Emit the `"mesh"` object of the config JSON schema — the inverse
+    /// of [`Config::from_json`], used by the campaign manifest
+    /// (`journal::Manifest`) to persist the exact run configuration.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::num(self.dim as f64)),
+            ("dataflow", Json::str(self.dataflow.to_string())),
+        ])
+    }
 }
 
 /// Campaign configuration.
@@ -338,6 +358,29 @@ impl Default for CampaignConfig {
 }
 
 impl CampaignConfig {
+    /// Emit the `"campaign"` object of the config JSON schema — the
+    /// inverse of [`Config::from_json`], used by the campaign manifest
+    /// (`journal::Manifest`). Every field is written explicitly (no
+    /// default elision) so two manifests compare field-for-field.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("faults_per_layer", Json::num(self.faults_per_layer as f64)),
+            ("inputs", Json::num(self.inputs as f64)),
+            ("backend", Json::str(self.backend.to_string())),
+            ("offload_scope", Json::str(self.offload_scope.to_string())),
+            ("trial_engine", Json::str(self.engine.to_string())),
+            ("tile_engine", Json::str(self.tile_engine.to_string())),
+            ("lanes", Json::num(self.lanes as f64)),
+            (
+                "signals",
+                Json::Arr(self.signals.iter().map(Json::str).collect()),
+            ),
+            ("scenario", Json::str(self.scenario.to_string())),
+            ("workers", Json::num(self.workers as f64)),
+        ])
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.faults_per_layer == 0 {
             bail!("faults_per_layer must be > 0");
@@ -386,7 +429,14 @@ impl Config {
     }
 
     pub fn from_json_str(text: &str) -> Result<Config> {
-        let j = Json::parse(text)?;
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Build a config from an already-parsed JSON value; absent keys
+    /// keep their defaults. The campaign manifest (`journal::Manifest`)
+    /// reuses this to decode its embedded `"mesh"` / `"campaign"`
+    /// objects, so the manifest schema IS the config-file schema.
+    pub fn from_json(j: &Json) -> Result<Config> {
         let mut cfg = Config::default();
         if let Some(mesh) = j.get("mesh") {
             if let Some(dim) = mesh.get("dim").and_then(Json::as_usize) {
@@ -596,6 +646,60 @@ mod tests {
         let mut c = Config::default();
         c.campaign.lanes = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_json_round_trips_through_to_json() {
+        // a thoroughly non-default config survives to_json -> from_json
+        let mesh = MeshConfig {
+            dim: 4,
+            dataflow: Dataflow::WeightStationary,
+        };
+        let campaign = CampaignConfig {
+            seed: 7,
+            faults_per_layer: 10,
+            inputs: 2,
+            backend: Backend::Hdfit,
+            offload_scope: OffloadScope::Layer,
+            engine: TrialEngine::FullForward,
+            tile_engine: TileEngine::LaneLockstep,
+            lanes: 4,
+            signals: vec!["propag".into(), "valid".into()],
+            scenario: Scenario::Mbu { bits: 2 },
+            workers: 3,
+        };
+        let j = Json::obj(vec![
+            ("mesh", mesh.to_json()),
+            ("campaign", campaign.to_json()),
+        ]);
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.mesh.dim, mesh.dim);
+        assert_eq!(back.mesh.dataflow, mesh.dataflow);
+        assert_eq!(back.campaign.seed, campaign.seed);
+        assert_eq!(back.campaign.faults_per_layer, campaign.faults_per_layer);
+        assert_eq!(back.campaign.inputs, campaign.inputs);
+        assert_eq!(back.campaign.backend, campaign.backend);
+        assert_eq!(back.campaign.offload_scope, campaign.offload_scope);
+        assert_eq!(back.campaign.engine, campaign.engine);
+        assert_eq!(back.campaign.tile_engine, campaign.tile_engine);
+        assert_eq!(back.campaign.lanes, campaign.lanes);
+        assert_eq!(back.campaign.signals, campaign.signals);
+        assert_eq!(back.campaign.scenario, campaign.scenario);
+        assert_eq!(back.campaign.workers, campaign.workers);
+        // defaults round-trip too (serializer writes every field)
+        let dflt = Json::obj(vec![
+            ("mesh", MeshConfig::default().to_json()),
+            ("campaign", CampaignConfig::default().to_json()),
+        ]);
+        let back = Config::from_json(&dflt).unwrap();
+        assert_eq!(back.campaign.seed, CampaignConfig::default().seed);
+        assert_eq!(back.campaign.lanes, CampaignConfig::default().lanes);
+        assert_eq!(OffloadScope::SingleTile.to_string(), "single-tile");
+        assert_eq!(OffloadScope::Layer.to_string(), "layer");
+        assert_eq!(
+            OffloadScope::parse(&OffloadScope::SingleTile.to_string()),
+            Some(OffloadScope::SingleTile)
+        );
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod cli;
 pub mod pool;
 
 pub use cli::Args;
-pub use pool::{run_parallel, Progress};
+pub use pool::{run_parallel, run_parallel_sink, BatchSink, MemorySink, Progress};

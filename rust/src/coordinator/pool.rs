@@ -19,6 +19,18 @@
 //! same-tile trial of the batch lands on one executor and its lockstep
 //! lanes stay full — finer (per-trial) sharding would split chunks
 //! across workers and forfeit the batched suffix.
+//!
+//! Since the durable-journal PR the pool no longer buffers results to
+//! the end of the run: every finished batch is handed to a
+//! [`BatchSink`] as a standalone delta the moment it completes. The
+//! default [`MemorySink`] discards the stream (aggregation still
+//! happens through the worker-local merge, so existing callers are
+//! unchanged); the journal sink (`journal::JournalSink`) appends one
+//! fsynced JSONL line per batch, which is what makes campaigns
+//! resumable and O(1)-memory in trial count. [`run_parallel_sink`]
+//! additionally accepts an explicit work-unit list so resume and
+//! `--shard i/N` runs execute exactly the pending subset of the
+//! worker-count-invariant `unit = input * n_sites + site` space.
 
 use crate::campaign::campaign::{
     campaign_sites, derived_input_seed, plan_one, signal_kinds, validate_dataflow_support,
@@ -26,6 +38,7 @@ use crate::campaign::campaign::{
 };
 use crate::config::{CampaignConfig, MeshConfig};
 use crate::dnn::Model;
+use crate::report::human_time;
 use crate::util::Rng;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -33,10 +46,67 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Live progress counters shared with observers (CLI progress line).
+/// All counters are monotonic for the lifetime of one
+/// [`run_parallel_sink`] call; `batches_total` is set once at start.
 #[derive(Default)]
 pub struct Progress {
     pub inputs_done: AtomicU64,
     pub trials_done: AtomicU64,
+    pub batches_done: AtomicU64,
+    pub batches_total: AtomicU64,
+}
+
+impl Progress {
+    /// One-line human summary for the CLI progress ticker:
+    /// `batches done/total  rate trials/s  ETA <human_time>`.
+    /// The ETA extrapolates the mean wall time per completed batch
+    /// over the batches still outstanding (`--` until one completes).
+    pub fn line(&self, elapsed_s: f64) -> String {
+        let done = self.batches_done.load(Ordering::Relaxed);
+        let total = self.batches_total.load(Ordering::Relaxed);
+        let trials = self.trials_done.load(Ordering::Relaxed);
+        let rate = if elapsed_s > 0.0 {
+            trials as f64 / elapsed_s
+        } else {
+            0.0
+        };
+        let eta = if done > 0 && total > done {
+            human_time(elapsed_s / done as f64 * (total - done) as f64)
+        } else {
+            "--".to_string()
+        };
+        format!("batches {done}/{total}  {rate:.1} trials/s  ETA {eta}")
+    }
+}
+
+/// Where finished site batches go, the moment they finish.
+///
+/// `delta` is the standalone result of exactly one `(input, site)`
+/// batch (fresh [`CampaignResult`] per batch, so counters are the
+/// batch's own, not a running total). Implementations other than
+/// [`MemorySink`] are expected to persist the delta durably before
+/// returning — a sink error aborts the campaign. With multiple workers
+/// the pool serializes `record_batch` calls behind a lock, but the
+/// arrival ORDER is completion order, which is nondeterministic: any
+/// deterministic consumer must key on `(input_idx, site_idx)` (the
+/// journal fold sorts by it).
+pub trait BatchSink: Send {
+    fn record_batch(
+        &mut self,
+        input_idx: u64,
+        site_idx: usize,
+        delta: &CampaignResult,
+    ) -> Result<()>;
+}
+
+/// The default sink: keep nothing — aggregation happens in the worker
+/// partials exactly as before the journal PR.
+pub struct MemorySink;
+
+impl BatchSink for MemorySink {
+    fn record_batch(&mut self, _input: u64, _site: usize, _delta: &CampaignResult) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Run a campaign across `cfg.workers` threads.
@@ -46,27 +116,76 @@ pub fn run_parallel(
     cfg: &CampaignConfig,
     progress: Option<Arc<Progress>>,
 ) -> Result<CampaignResult> {
+    run_parallel_sink(model, mesh_cfg, cfg, progress, None, &mut MemorySink)
+}
+
+/// Run a campaign over an explicit `(input, site)` work-unit subset,
+/// streaming each finished batch into `sink`.
+///
+/// `units` are indices into the worker-count-invariant unit space
+/// `unit = input_idx * n_sites + site_idx` (`None` = all of
+/// `0..inputs*n_sites`, which is exactly [`run_parallel`]). Resume
+/// passes the pending units of a journal, `--shard i/N` passes its
+/// residue class — results are bit-identical to running those units in
+/// any other grouping, because sampling is split from execution
+/// ([`plan_one`]) and [`CampaignResult::merge`] is commutative.
+pub fn run_parallel_sink(
+    model: &Model,
+    mesh_cfg: &MeshConfig,
+    cfg: &CampaignConfig,
+    progress: Option<Arc<Progress>>,
+    units: Option<&[u64]>,
+    sink: &mut dyn BatchSink,
+) -> Result<CampaignResult> {
     let t0 = Instant::now();
     validate_dataflow_support(mesh_cfg, cfg)?;
     let sites = campaign_sites(model);
     let kinds = signal_kinds(cfg);
     let n_sites = sites.len() as u64;
-    let total_units = cfg.inputs * n_sites;
-    let workers = cfg.workers.clamp(1, (total_units as usize).max(1));
+    let all_units: Vec<u64>;
+    let units: &[u64] = match units {
+        Some(u) => u,
+        None => {
+            all_units = (0..cfg.inputs * n_sites).collect();
+            &all_units
+        }
+    };
+    debug_assert!(units.iter().all(|&u| u < cfg.inputs * n_sites));
+    if let Some(p) = &progress {
+        p.batches_total
+            .fetch_add(units.len() as u64, Ordering::Relaxed);
+    }
+    // per-input count of outstanding site batches IN THIS RUN (drives
+    // plan drop + the inputs_done progress counter); inputs with no
+    // units here (already journaled, or another shard's) never count
+    let mut outstanding = vec![0u64; cfg.inputs as usize];
+    for &u in units {
+        outstanding[(u / n_sites) as usize] += 1;
+    }
+    let workers = cfg.workers.clamp(1, units.len().max(1));
     let mut merged =
         CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
     if workers <= 1 {
         let mut exec = TrialExecutor::new(mesh_cfg, cfg);
-        for input_idx in 0..cfg.inputs {
-            let mut rng = Rng::new(derived_input_seed(cfg.seed, input_idx));
-            let plan = plan_one(model, cfg, &sites, &kinds, mesh_cfg, &mut rng);
-            let mut part =
-                CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
-            for batch in &plan.batches {
-                exec.run_batch(model, &plan, batch, &mut part);
+        let mut cached: Option<(u64, InputPlan)> = None;
+        for &unit in units {
+            let input_idx = unit / n_sites;
+            let site_idx = (unit % n_sites) as usize;
+            // rebuild only on input change (units arrive input-major)
+            if cached.as_ref().map(|(i, _)| *i) != Some(input_idx) {
+                let mut rng = Rng::new(derived_input_seed(cfg.seed, input_idx));
+                cached = Some((
+                    input_idx,
+                    plan_one(model, cfg, &sites, &kinds, mesh_cfg, &mut rng),
+                ));
             }
-            bump(&progress, &part);
-            merged.merge(&part);
+            let plan = &cached.as_ref().unwrap().1;
+            let mut delta =
+                CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
+            exec.run_batch(model, plan, &plan.batches[site_idx], &mut delta);
+            sink.record_batch(input_idx, site_idx, &delta)?;
+            merged.merge(&delta);
+            bump_batch(&progress, &delta, &mut outstanding[input_idx as usize]);
         }
     } else {
         // Lazily built, shared read-only per-input plans. A slot is
@@ -77,16 +196,13 @@ pub fn run_parallel(
         // checkpoints).
         let plans: Vec<Mutex<Option<Arc<InputPlan>>>> =
             (0..cfg.inputs).map(|_| Mutex::new(None)).collect();
-        // per-input count of outstanding site batches (drives plan
-        // drop + the inputs_done progress counter)
-        let remaining: Vec<AtomicU64> = (0..cfg.inputs)
-            .map(|_| AtomicU64::new(n_sites))
-            .collect();
+        let remaining: Vec<AtomicU64> = outstanding.iter().map(|&n| AtomicU64::new(n)).collect();
         let next = AtomicU64::new(0);
+        let sink = Mutex::new(sink);
         let results: Vec<Result<CampaignResult>> = std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for _ in 0..workers {
-                let (plans, remaining, next) = (&plans, &remaining, &next);
+                let (plans, remaining, next, sink) = (&plans, &remaining, &next, &sink);
                 let (sites, kinds) = (&sites, &kinds);
                 let progress = progress.clone();
                 handles.push(scope.spawn(move || -> Result<CampaignResult> {
@@ -94,10 +210,11 @@ pub fn run_parallel(
                     let mut part =
                 CampaignResult::empty(&model.name, cfg.backend, cfg.scenario, mesh_cfg.dataflow);
                     loop {
-                        let unit = next.fetch_add(1, Ordering::Relaxed);
-                        if unit >= total_units {
+                        let claim = next.fetch_add(1, Ordering::Relaxed) as usize;
+                        if claim >= units.len() {
                             break;
                         }
+                        let unit = units[claim];
                         let input_idx = unit / n_sites;
                         let site_idx = (unit % n_sites) as usize;
                         let plan = {
@@ -120,11 +237,19 @@ pub fn run_parallel(
                                 }
                             }
                         };
-                        let before = part.vuln.trials;
-                        exec.run_batch(model, &plan, &plan.batches[site_idx], &mut part);
+                        let mut delta = CampaignResult::empty(
+                            &model.name,
+                            cfg.backend,
+                            cfg.scenario,
+                            mesh_cfg.dataflow,
+                        );
+                        exec.run_batch(model, &plan, &plan.batches[site_idx], &mut delta);
+                        sink.lock().unwrap().record_batch(input_idx, site_idx, &delta)?;
+                        part.merge(&delta);
                         if let Some(p) = &progress {
+                            p.batches_done.fetch_add(1, Ordering::Relaxed);
                             p.trials_done
-                                .fetch_add(part.vuln.trials - before, Ordering::Relaxed);
+                                .fetch_add(delta.vuln.trials, Ordering::Relaxed);
                         }
                         // last batch of this input: free its plan (no
                         // future unit can claim this input again)
@@ -151,10 +276,14 @@ pub fn run_parallel(
     Ok(merged)
 }
 
-fn bump(progress: &Option<Arc<Progress>>, part: &CampaignResult) {
+fn bump_batch(progress: &Option<Arc<Progress>>, delta: &CampaignResult, outstanding: &mut u64) {
+    *outstanding -= 1;
     if let Some(p) = progress {
-        p.inputs_done.fetch_add(1, Ordering::Relaxed);
-        p.trials_done.fetch_add(part.vuln.trials, Ordering::Relaxed);
+        p.batches_done.fetch_add(1, Ordering::Relaxed);
+        p.trials_done.fetch_add(delta.vuln.trials, Ordering::Relaxed);
+        if *outstanding == 0 {
+            p.inputs_done.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -231,5 +360,90 @@ mod tests {
         let _ = run_parallel(&model, &m, &c, Some(Arc::clone(&p))).unwrap();
         assert_eq!(p.inputs_done.load(Ordering::Relaxed), 4);
         assert_eq!(p.trials_done.load(Ordering::Relaxed), 60);
+        assert_eq!(p.batches_done.load(Ordering::Relaxed), 20);
+        assert_eq!(p.batches_total.load(Ordering::Relaxed), 20);
+    }
+
+    #[test]
+    fn progress_line_formats() {
+        let p = Progress::default();
+        assert_eq!(p.line(0.0), "batches 0/0  0.0 trials/s  ETA --");
+        p.batches_total.store(20, Ordering::Relaxed);
+        p.batches_done.store(5, Ordering::Relaxed);
+        p.trials_done.store(150, Ordering::Relaxed);
+        // 5 batches in 10 s -> 2 s/batch -> 15 left = 30 s
+        assert_eq!(p.line(10.0), "batches 5/20  15.0 trials/s  ETA 30.00s");
+        p.batches_done.store(20, Ordering::Relaxed);
+        assert!(p.line(10.0).ends_with("ETA --"), "done: no ETA");
+    }
+
+    /// A sink that records claim keys: every batch arrives exactly
+    /// once, as a standalone delta whose counts sum to the total.
+    struct CountingSink {
+        seen: Vec<(u64, usize)>,
+        trials: u64,
+    }
+
+    impl BatchSink for CountingSink {
+        fn record_batch(
+            &mut self,
+            input_idx: u64,
+            site_idx: usize,
+            delta: &CampaignResult,
+        ) -> Result<()> {
+            self.seen.push((input_idx, site_idx));
+            self.trials += delta.vuln.trials;
+            assert_eq!(
+                delta.vuln.trials,
+                delta.masked_trials + delta.exposed_trials + delta.vuln.critical,
+                "delta is a standalone batch partition"
+            );
+            assert_eq!(delta.per_layer.len(), 1, "one site batch = one layer");
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sink_sees_every_batch_once() {
+        let model = models::quicknet(7);
+        for workers in [1, 3] {
+            let (m, c) = cfg(workers);
+            let mut sink = CountingSink {
+                seen: vec![],
+                trials: 0,
+            };
+            let r = run_parallel_sink(&model, &m, &c, None, None, &mut sink).unwrap();
+            let mut seen = sink.seen.clone();
+            seen.sort_unstable();
+            let want: Vec<(u64, usize)> =
+                (0..4u64).flat_map(|i| (0..5usize).map(move |s| (i, s))).collect();
+            assert_eq!(seen, want, "workers={workers}");
+            assert_eq!(sink.trials, r.vuln.trials);
+        }
+    }
+
+    #[test]
+    fn unit_subset_runs_exactly_that_subset() {
+        let model = models::quicknet(7);
+        let (m, c) = cfg(1);
+        // full run, then the same campaign split into two unit halves:
+        // merged halves must equal the whole (resume/shard soundness)
+        let full = run_parallel(&model, &m, &c, None).unwrap();
+        let all: Vec<u64> = (0..20).collect();
+        let mut sink = MemorySink;
+        let a = run_parallel_sink(&model, &m, &c, None, Some(&all[..7]), &mut sink).unwrap();
+        let b = run_parallel_sink(&model, &m, &c, None, Some(&all[7..]), &mut sink).unwrap();
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.vuln.trials, full.vuln.trials);
+        assert_eq!(merged.vuln.critical, full.vuln.critical);
+        assert_eq!(merged.exposed_trials, full.exposed_trials);
+        assert_eq!(merged.masked_trials, full.masked_trials);
+        assert_eq!(merged.rtl_cycles_stepped, full.rtl_cycles_stepped);
+        assert_eq!(merged.per_layer.len(), full.per_layer.len());
+        for (k, v) in &full.per_layer {
+            let got = &merged.per_layer[k];
+            assert_eq!((got.trials, got.critical), (v.trials, v.critical));
+        }
     }
 }

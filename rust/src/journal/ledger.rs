@@ -1,0 +1,147 @@
+//! The shard ledger: which `(input, site)` units a journal has made
+//! durable, and which remain.
+//!
+//! Rebuilt from the journal on every resume (there is no separate
+//! ledger file to drift out of sync); validates every record against
+//! the manifest — unit in range, owned by the dir's shard, no
+//! duplicates — so a journal from the wrong shard or a double-append
+//! is caught before any work is skipped.
+
+use super::manifest::Manifest;
+use super::outcome::BatchRecord;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Completed-unit set of one campaign directory.
+pub struct ShardLedger {
+    done: BTreeSet<u64>,
+}
+
+impl ShardLedger {
+    pub fn build(records: &[BatchRecord], manifest: &Manifest) -> Result<ShardLedger> {
+        let n_sites = manifest.n_sites;
+        let total = manifest.total_units();
+        let mut done = BTreeSet::new();
+        for rec in records {
+            let unit = rec.unit(n_sites);
+            if rec.site >= n_sites || unit >= total {
+                bail!(
+                    "journal record (input {}, site {}) outside campaign space \
+                     ({} inputs x {} sites)",
+                    rec.input,
+                    rec.site,
+                    manifest.campaign.inputs,
+                    n_sites
+                );
+            }
+            if !manifest.shard.owns(unit) {
+                bail!(
+                    "journal record (input {}, site {}) = unit {} not owned by shard {}",
+                    rec.input,
+                    rec.site,
+                    unit,
+                    manifest.shard
+                );
+            }
+            if !done.insert(unit) {
+                bail!(
+                    "duplicate journal record for (input {}, site {})",
+                    rec.input,
+                    rec.site
+                );
+            }
+        }
+        Ok(ShardLedger { done })
+    }
+
+    pub fn is_done(&self, unit: u64) -> bool {
+        self.done.contains(&unit)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.done.len()
+    }
+}
+
+/// The units this directory's shard still has to run, ascending — the
+/// exact work list handed to `run_parallel_sink`. Empty means the
+/// shard is complete.
+pub fn pending_units(manifest: &Manifest, ledger: &ShardLedger) -> Vec<u64> {
+    (0..manifest.total_units())
+        .filter(|&u| manifest.shard.owns(u) && !ledger.is_done(u))
+        .collect()
+}
+
+/// Count of units a shard owns (its complete-journal line count).
+pub fn owned_units(manifest: &Manifest) -> u64 {
+    (0..manifest.total_units())
+        .filter(|&u| manifest.shard.owns(u))
+        .count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignConfig, MeshConfig};
+    use crate::journal::manifest::Shard;
+
+    fn manifest(shard: Shard) -> Manifest {
+        let campaign = CampaignConfig {
+            inputs: 2,
+            ..Default::default()
+        };
+        Manifest::new("quicknet", 5, shard, MeshConfig::default(), campaign)
+    }
+
+    fn rec(input: u64, site: u64) -> BatchRecord {
+        BatchRecord {
+            input,
+            site,
+            layer: 0,
+            masked: 1,
+            exposed: 0,
+            critical: 0,
+            rtl_cycles: 1,
+        }
+    }
+
+    #[test]
+    fn ledger_tracks_pending() {
+        let m = manifest(Shard::default());
+        let ledger = ShardLedger::build(&[rec(0, 0), rec(0, 3), rec(1, 2)], &m).unwrap();
+        assert_eq!(ledger.completed(), 3);
+        assert!(ledger.is_done(0) && ledger.is_done(3) && ledger.is_done(7));
+        let pending = pending_units(&m, &ledger);
+        assert_eq!(pending, vec![1, 2, 4, 5, 6, 8, 9]);
+        assert_eq!(owned_units(&m), 10);
+        // empty journal: everything pending, in ascending unit order
+        let fresh = ShardLedger::build(&[], &m).unwrap();
+        assert_eq!(pending_units(&m, &fresh), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_scopes_pending_and_ownership() {
+        let s1 = Shard { index: 1, count: 2 };
+        let m = manifest(s1);
+        let ledger = ShardLedger::build(&[rec(0, 1)], &m).unwrap(); // unit 1
+        let pending = pending_units(&m, &ledger);
+        assert_eq!(pending, vec![3, 5, 7, 9]);
+        assert_eq!(owned_units(&m), 5);
+        // a record the shard does not own is rejected
+        let e = ShardLedger::build(&[rec(0, 2)], &m).unwrap_err().to_string();
+        assert!(e.contains("not owned by shard 1/2"), "{e}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_and_duplicates() {
+        let m = manifest(Shard::default());
+        let e = ShardLedger::build(&[rec(0, 5)], &m).unwrap_err().to_string();
+        assert!(e.contains("outside campaign space"), "{e}");
+        let e = ShardLedger::build(&[rec(2, 0)], &m).unwrap_err().to_string();
+        assert!(e.contains("outside campaign space"), "{e}");
+        let e = ShardLedger::build(&[rec(0, 1), rec(0, 1)], &m)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("duplicate journal record"), "{e}");
+    }
+}

@@ -1,0 +1,344 @@
+//! The campaign manifest: the durable identity of a campaign directory.
+//!
+//! Written once when a campaign dir is initialized, read back on every
+//! `--resume` and `campaign merge`. Resume soundness rests on the
+//! journaled outcomes being a function of `(seed, config, model)` only
+//! — so the manifest pins exactly those, plus the shard slice this
+//! directory owns, and any mismatch is a hard, field-named error
+//! instead of a silently corrupted campaign.
+
+use crate::config::{CampaignConfig, Config, MeshConfig};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Journal schema version. Bump on any change to the manifest shape or
+/// the JSONL record shape; resume across schema versions refuses.
+pub const SCHEMA: &str = "enfor-sa/campaign-journal/v1";
+
+/// One slice of the worker-count-invariant `(input, site)` unit space:
+/// shard `i/N` owns every unit with `unit % N == i`. The residue-class
+/// split keeps every shard's input coverage (and therefore plan-build
+/// cost) roughly even. `0/1` is the whole campaign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: u64,
+    pub count: u64,
+}
+
+impl Default for Shard {
+    fn default() -> Self {
+        Shard { index: 0, count: 1 }
+    }
+}
+
+impl Shard {
+    /// Parse the CLI grammar `i/N` (e.g. `0/2`, `1/2`).
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("bad shard '{s}' (expected i/N, e.g. 0/2)"))?;
+        let shard = Shard {
+            index: i.parse().map_err(|_| anyhow!("bad shard index '{i}'"))?,
+            count: n.parse().map_err(|_| anyhow!("bad shard count '{n}'"))?,
+        };
+        shard.validate()?;
+        Ok(shard)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.count == 0 {
+            bail!("shard count must be > 0");
+        }
+        if self.index >= self.count {
+            bail!("shard index {} out of range 0..{}", self.index, self.count);
+        }
+        Ok(())
+    }
+
+    /// Does this shard own the given work unit?
+    pub fn owns(&self, unit: u64) -> bool {
+        unit % self.count == self.index
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// Everything `manifest.json` pins. The embedded `mesh` / `campaign`
+/// objects reuse the config-file JSON schema ([`Config::from_json`]),
+/// so a manifest is also a valid `--config` fragment.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schema: String,
+    pub model: String,
+    /// GEMM-site count of the model under this config — fixes the
+    /// `unit = input * n_sites + site` encoding of the journal.
+    pub n_sites: u64,
+    pub shard: Shard,
+    pub mesh: MeshConfig,
+    pub campaign: CampaignConfig,
+}
+
+impl Manifest {
+    pub fn new(
+        model: &str,
+        n_sites: u64,
+        shard: Shard,
+        mesh: MeshConfig,
+        campaign: CampaignConfig,
+    ) -> Manifest {
+        Manifest {
+            schema: SCHEMA.to_string(),
+            model: model.to_string(),
+            n_sites,
+            shard,
+            mesh,
+            campaign,
+        }
+    }
+
+    /// Size of the FULL unit space (all shards; the shard owns the
+    /// `unit % count == index` subset of it).
+    pub fn total_units(&self) -> u64 {
+        self.campaign.inputs * self.n_sites
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(self.schema.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("n_sites", Json::num(self.n_sites as f64)),
+            ("shard", Json::str(self.shard.to_string())),
+            ("mesh", self.mesh.to_json()),
+            ("campaign", self.campaign.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let schema = j
+            .req("schema")?
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest schema must be a string"))?
+            .to_string();
+        let model = j
+            .req("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest model must be a string"))?
+            .to_string();
+        let n_sites = j
+            .req("n_sites")?
+            .as_f64()
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("manifest n_sites must be a number"))?;
+        let shard = Shard::parse(
+            j.req("shard")?
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest shard must be a string"))?,
+        )?;
+        // the mesh/campaign sub-objects ARE the config-file schema
+        let cfg = Config::from_json(j)?;
+        Ok(Manifest {
+            schema,
+            model,
+            n_sites,
+            shard,
+            mesh: cfg.mesh,
+            campaign: cfg.campaign,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    /// Atomic write: tmp file in the same dir, fsync, rename — a crash
+    /// leaves either no manifest or a complete one, never a torn one.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(self.to_json().pretty().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.sync_data()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing manifest {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Refuse to resume against a manifest that pins a different
+    /// campaign. Everything result-bearing must match; `workers` is
+    /// deliberately EXEMPT — results are worker-count-invariant by the
+    /// coordinator contract, so a campaign may be resumed at any
+    /// parallelism.
+    pub fn require_match(&self, current: &Manifest) -> Result<()> {
+        self.require_match_fields(current, true)
+    }
+
+    /// The merge variant: shards are expected to differ (that is the
+    /// point), everything else must match.
+    pub fn require_match_ignoring_shard(&self, other: &Manifest) -> Result<()> {
+        self.require_match_fields(other, false)
+    }
+
+    fn require_match_fields(&self, other: &Manifest, check_shard: bool) -> Result<()> {
+        let a = &self.campaign;
+        let b = &other.campaign;
+        let mismatch: Option<(&str, String, String)> = if self.schema != other.schema {
+            Some(("schema", self.schema.clone(), other.schema.clone()))
+        } else if self.model != other.model {
+            Some(("model", self.model.clone(), other.model.clone()))
+        } else if self.n_sites != other.n_sites {
+            Some(("n_sites", self.n_sites.to_string(), other.n_sites.to_string()))
+        } else if check_shard && self.shard != other.shard {
+            Some(("shard", self.shard.to_string(), other.shard.to_string()))
+        } else if self.mesh.dim != other.mesh.dim {
+            Some(("mesh.dim", self.mesh.dim.to_string(), other.mesh.dim.to_string()))
+        } else if self.mesh.dataflow != other.mesh.dataflow {
+            Some((
+                "mesh.dataflow",
+                self.mesh.dataflow.to_string(),
+                other.mesh.dataflow.to_string(),
+            ))
+        } else if a.seed != b.seed {
+            Some(("seed", a.seed.to_string(), b.seed.to_string()))
+        } else if a.faults_per_layer != b.faults_per_layer {
+            Some((
+                "faults_per_layer",
+                a.faults_per_layer.to_string(),
+                b.faults_per_layer.to_string(),
+            ))
+        } else if a.inputs != b.inputs {
+            Some(("inputs", a.inputs.to_string(), b.inputs.to_string()))
+        } else if a.backend != b.backend {
+            Some(("backend", a.backend.to_string(), b.backend.to_string()))
+        } else if a.offload_scope != b.offload_scope {
+            Some((
+                "offload_scope",
+                a.offload_scope.to_string(),
+                b.offload_scope.to_string(),
+            ))
+        } else if a.engine != b.engine {
+            Some(("trial_engine", a.engine.to_string(), b.engine.to_string()))
+        } else if a.tile_engine != b.tile_engine {
+            Some((
+                "tile_engine",
+                a.tile_engine.to_string(),
+                b.tile_engine.to_string(),
+            ))
+        } else if a.lanes != b.lanes {
+            Some(("lanes", a.lanes.to_string(), b.lanes.to_string()))
+        } else if a.signals != b.signals {
+            Some(("signals", a.signals.join(","), b.signals.join(",")))
+        } else if a.scenario != b.scenario {
+            Some(("scenario", a.scenario.to_string(), b.scenario.to_string()))
+        } else {
+            None
+        };
+        if let Some((field, have, want)) = mismatch {
+            bail!("manifest mismatch: {field} ('{have}' in dir vs '{want}' requested)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    fn manifest() -> Manifest {
+        Manifest::new(
+            "quicknet",
+            5,
+            Shard::default(),
+            MeshConfig::default(),
+            CampaignConfig::default(),
+        )
+    }
+
+    #[test]
+    fn shard_grammar() {
+        assert_eq!(Shard::parse("0/1").unwrap(), Shard::default());
+        let s = Shard::parse("1/3").unwrap();
+        assert_eq!((s.index, s.count), (1, 3));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(s.owns(1) && s.owns(4) && !s.owns(0) && !s.owns(2));
+        for bad in ["", "1", "2/2", "3/2", "a/2", "1/b", "1/0", "/"] {
+            assert!(Shard::parse(bad).is_err(), "{bad}");
+        }
+        // every unit is owned by exactly one shard of a count
+        for unit in 0..20u64 {
+            let owners = (0..3)
+                .filter(|&i| Shard { index: i, count: 3 }.owns(unit))
+                .count();
+            assert_eq!(owners, 1);
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_json() {
+        let mut m = manifest();
+        m.shard = Shard::parse("1/2").unwrap();
+        m.campaign.scenario = Scenario::Mbu { bits: 3 };
+        m.campaign.signals = vec!["weight".into()];
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.schema, SCHEMA);
+        m.require_match(&back).unwrap();
+        assert_eq!(back.total_units(), m.campaign.inputs * 5);
+    }
+
+    #[test]
+    fn mismatches_name_the_field() {
+        let base = manifest();
+        let mut m = manifest();
+        m.campaign.seed += 1;
+        let e = base.require_match(&m).unwrap_err().to_string();
+        assert!(e.contains("manifest mismatch: seed"), "{e}");
+        let mut m = manifest();
+        m.schema = "enfor-sa/campaign-journal/v0".into();
+        let e = base.require_match(&m).unwrap_err().to_string();
+        assert!(e.contains("manifest mismatch: schema"), "{e}");
+        let mut m = manifest();
+        m.campaign.scenario = Scenario::DoubleSeu;
+        let e = base.require_match(&m).unwrap_err().to_string();
+        assert!(e.contains("manifest mismatch: scenario"), "{e}");
+        let mut m = manifest();
+        m.shard = Shard::parse("0/2").unwrap();
+        assert!(base.require_match(&m).is_err());
+        base.require_match_ignoring_shard(&m).unwrap(); // merge's view
+    }
+
+    #[test]
+    fn workers_are_exempt_from_matching() {
+        let base = manifest();
+        let mut m = manifest();
+        m.campaign.workers = 7;
+        base.require_match(&m).unwrap();
+    }
+
+    #[test]
+    fn atomic_write_then_load() {
+        let dir = std::env::temp_dir().join(format!(
+            "enfor-sa-manifest-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let m = manifest();
+        m.write(&path).unwrap();
+        let back = Manifest::load(&path).unwrap();
+        m.require_match(&back).unwrap();
+        assert!(!path.with_extension("json.tmp").exists(), "tmp renamed away");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,176 @@
+//! Deterministic fold of one or many journals into a campaign result.
+//!
+//! Journal lines arrive in completion order (nondeterministic under
+//! multiple workers); the fold sorts by the worker-count-invariant
+//! unit index first, so the aggregate — and therefore the report JSON
+//! — is byte-identical no matter how the campaign was executed:
+//! straight through, interrupted+resumed, or sharded across processes
+//! and merged here.
+
+use super::ledger::{owned_units, ShardLedger};
+use super::manifest::Manifest;
+use super::outcome::{read_journal, BatchRecord};
+use super::CampaignDir;
+use crate::campaign::CampaignResult;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Fold records into the canonical aggregate, in stable unit order.
+pub fn fold_records(records: &[BatchRecord], manifest: &Manifest) -> CampaignResult {
+    let mut sorted: Vec<&BatchRecord> = records.iter().collect();
+    sorted.sort_by_key(|r| r.unit(manifest.n_sites));
+    let mut acc = CampaignResult::empty(
+        &manifest.model,
+        manifest.campaign.backend,
+        manifest.campaign.scenario,
+        manifest.mesh.dataflow,
+    );
+    for rec in sorted {
+        rec.apply(&mut acc);
+    }
+    acc
+}
+
+/// A merged multi-shard campaign: the folded result plus the manifest
+/// the shards agreed on (shard field = the first dir's, only meaningful
+/// for its config/model payload).
+pub struct MergedCampaign {
+    pub manifest: Manifest,
+    pub result: CampaignResult,
+    /// Journal lines folded across all directories.
+    pub batches: u64,
+}
+
+/// `campaign merge <dir>...`: validate that the directories are the
+/// complete, disjoint shards of ONE campaign, then fold their journals
+/// deterministically. Errors (never partial output) when manifests
+/// disagree on anything but the shard, when the shard indices do not
+/// exactly partition `0..N`, or when any shard's journal is torn or
+/// incomplete.
+pub fn merge_dirs(dirs: &[&Path]) -> Result<MergedCampaign> {
+    if dirs.is_empty() {
+        bail!("campaign merge needs at least one campaign dir");
+    }
+    let mut manifests = Vec::with_capacity(dirs.len());
+    for dir in dirs {
+        let cd = CampaignDir::new(dir);
+        let m = Manifest::load(&cd.manifest_path())
+            .with_context(|| format!("campaign dir {}", dir.display()))?;
+        manifests.push(m);
+    }
+    let first = &manifests[0];
+    for (dir, m) in dirs.iter().zip(&manifests).skip(1) {
+        first
+            .require_match_ignoring_shard(m)
+            .with_context(|| format!("campaign dir {}", dir.display()))?;
+    }
+    // the dirs must be the complete shard set: equal counts, indices
+    // exactly 0..N (one dir per shard, none missing, none doubled)
+    let count = first.shard.count;
+    if manifests.iter().any(|m| m.shard.count != count) {
+        bail!("manifest mismatch: shard counts differ across campaign dirs");
+    }
+    let mut indices: Vec<u64> = manifests.iter().map(|m| m.shard.index).collect();
+    indices.sort_unstable();
+    if indices != (0..count).collect::<Vec<u64>>() {
+        bail!(
+            "shard indices {:?} do not partition 0..{count} (give every shard dir exactly once)",
+            indices
+        );
+    }
+    let mut all = Vec::new();
+    for (dir, m) in dirs.iter().zip(&manifests) {
+        let cd = CampaignDir::new(dir);
+        let scan = read_journal(&cd.journal_path())?;
+        if scan.torn {
+            bail!(
+                "journal {} has a torn final line — resume that shard first",
+                cd.journal_path().display()
+            );
+        }
+        let ledger = ShardLedger::build(&scan.records, m)
+            .with_context(|| format!("campaign dir {}", dir.display()))?;
+        let owned = owned_units(m);
+        if (ledger.completed() as u64) < owned {
+            bail!(
+                "shard {} incomplete in {}: {}/{} batches journaled — resume it first",
+                m.shard,
+                dir.display(),
+                ledger.completed(),
+                owned
+            );
+        }
+        all.extend(scan.records);
+    }
+    let result = fold_records(&all, first);
+    Ok(MergedCampaign {
+        manifest: first.clone(),
+        result,
+        batches: all.len() as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CampaignConfig, MeshConfig};
+    use crate::journal::manifest::Shard;
+
+    fn manifest() -> Manifest {
+        let campaign = CampaignConfig {
+            inputs: 2,
+            ..Default::default()
+        };
+        Manifest::new("quicknet", 3, Shard::default(), MeshConfig::default(), campaign)
+    }
+
+    fn rec(input: u64, site: u64, critical: u64) -> BatchRecord {
+        BatchRecord {
+            input,
+            site,
+            layer: site,
+            masked: 3,
+            exposed: 1,
+            critical,
+            rtl_cycles: 10,
+        }
+    }
+
+    #[test]
+    fn fold_is_order_invariant() {
+        let m = manifest();
+        let mut records = vec![
+            rec(0, 0, 1),
+            rec(0, 1, 0),
+            rec(0, 2, 2),
+            rec(1, 0, 0),
+            rec(1, 1, 1),
+            rec(1, 2, 0),
+        ];
+        let a = fold_records(&records, &m);
+        records.reverse();
+        let b = fold_records(&records, &m);
+        records.swap(1, 4);
+        let c = fold_records(&records, &m);
+        for other in [&b, &c] {
+            assert_eq!(a.vuln.trials, other.vuln.trials);
+            assert_eq!(a.vuln.critical, other.vuln.critical);
+            assert_eq!(a.masked_trials, other.masked_trials);
+            assert_eq!(a.exposed_trials, other.exposed_trials);
+            assert_eq!(a.rtl_cycles_stepped, other.rtl_cycles_stepped);
+            assert_eq!(a.per_layer.len(), other.per_layer.len());
+        }
+        assert_eq!(a.vuln.trials, 6 * 5);
+        assert_eq!(a.vuln.critical, 4);
+        assert_eq!(a.per_layer.len(), 3);
+        assert_eq!(a.model, "quicknet");
+    }
+
+    #[test]
+    fn merge_rejects_bad_shard_sets() {
+        // exercised end-to-end (with real dirs) in tests/prop_journal.rs;
+        // here just the index-partition arithmetic via the public fn
+        let e = merge_dirs(&[]).unwrap_err().to_string();
+        assert!(e.contains("at least one"), "{e}");
+    }
+}

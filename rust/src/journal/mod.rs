@@ -1,0 +1,221 @@
+//! Durable campaign journal: resumable, O(1)-memory, multi-process
+//! fault campaigns (ROADMAP "Durable campaign journal").
+//!
+//! A campaign run with `--campaign-dir <dir>` persists three files:
+//!
+//! * `manifest.json` — the campaign's identity (schema version, model,
+//!   site count, shard slice, full mesh + campaign config), written
+//!   once at initialization ([`manifest::Manifest`]). Resume refuses a
+//!   mismatched manifest with a field-named error.
+//! * `journal.jsonl` — the append-only outcome journal: one line per
+//!   finished `(input, site)` batch, fsynced at batch granularity
+//!   ([`outcome`]). Aggregation is a streaming fold over these lines,
+//!   so resident memory is O(1) in trial count.
+//! * `report.json` — the deterministic final report
+//!   ([`crate::report::campaign_report_json`]; no wall-clock fields),
+//!   written only when the shard's journal is complete.
+//!
+//! Soundness: the site-resume planner makes sampling independent of
+//! execution order (`plan_one` draws per `(seed, input)`), and
+//! `CampaignResult::merge` is commutative — so skipping journaled
+//! units on resume, slicing units across `--shard i/N` processes, and
+//! folding journals in unit order all produce byte-identical reports
+//! (pinned by `rust/tests/prop_journal.rs` and the CI kill/resume job).
+
+pub mod ledger;
+pub mod manifest;
+pub mod merge;
+pub mod outcome;
+
+pub use ledger::{owned_units, pending_units, ShardLedger};
+pub use manifest::{Manifest, Shard, SCHEMA};
+pub use merge::{fold_records, merge_dirs, MergedCampaign};
+pub use outcome::{read_journal, truncate_to, BatchRecord, JournalScan, JournalWriter};
+
+use crate::campaign::{campaign_sites, CampaignResult};
+use crate::config::{CampaignConfig, MeshConfig};
+use crate::coordinator::{run_parallel_sink, BatchSink, Progress};
+use crate::dnn::Model;
+use crate::report::campaign_report_json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Well-known file layout of a campaign directory.
+pub struct CampaignDir {
+    root: PathBuf,
+}
+
+impl CampaignDir {
+    pub fn new(root: impl Into<PathBuf>) -> CampaignDir {
+        CampaignDir { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    pub fn journal_path(&self) -> PathBuf {
+        self.root.join("journal.jsonl")
+    }
+
+    pub fn report_path(&self) -> PathBuf {
+        self.root.join("report.json")
+    }
+}
+
+/// The [`BatchSink`] that appends every finished batch to the journal,
+/// durably, before the coordinator moves on.
+pub struct JournalSink {
+    writer: JournalWriter,
+}
+
+impl JournalSink {
+    pub fn open(path: &Path) -> Result<JournalSink> {
+        Ok(JournalSink {
+            writer: JournalWriter::open_append(path)?,
+        })
+    }
+}
+
+impl BatchSink for JournalSink {
+    fn record_batch(
+        &mut self,
+        input_idx: u64,
+        site_idx: usize,
+        delta: &CampaignResult,
+    ) -> Result<()> {
+        self.writer
+            .append(&BatchRecord::from_delta(input_idx, site_idx, delta))
+    }
+}
+
+/// What one journaled run did.
+pub struct JournalRun {
+    /// The shard's aggregate, folded from the journal in unit order —
+    /// deterministic except for `wall` (this run's elapsed time).
+    pub result: CampaignResult,
+    /// True when the shard's journal now covers every owned unit.
+    pub completed: bool,
+    /// Units already journaled before this run (skipped on resume).
+    pub batches_skipped: u64,
+    /// Units executed by this run (capped by `max_batches`).
+    pub batches_run: u64,
+    /// Units this shard owns in total.
+    pub batches_total: u64,
+    /// True when a torn final journal line was truncated before
+    /// planning (its batch re-executed).
+    pub torn_repaired: bool,
+    /// `report.json` path, written when `completed`.
+    pub report: Option<PathBuf>,
+}
+
+/// Write the deterministic report file atomically (tmp + rename).
+pub fn write_report(path: &Path, result: &CampaignResult, cfg: &CampaignConfig) -> Result<()> {
+    let text = campaign_report_json(result, cfg.tile_engine, cfg.lanes).pretty() + "\n";
+    let tmp = path.with_extension("json.tmp");
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(text.as_bytes())?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("installing report {}", path.display()))?;
+    Ok(())
+}
+
+/// Run (or resume) a journaled campaign shard in `dir`.
+///
+/// Fresh dirs are initialized (manifest written) unless `resume` is
+/// set; initialized dirs REQUIRE `resume` and a matching manifest.
+/// `max_batches` caps how many pending units this invocation executes
+/// (the kill/resume simulation knob — with one worker the journal is
+/// then an exact unit-order prefix). The returned result is always the
+/// fold of the whole journal so far, not just this run's units.
+pub fn run_journaled(
+    model: &Model,
+    mesh_cfg: &MeshConfig,
+    cfg: &CampaignConfig,
+    dir: &Path,
+    shard: Shard,
+    resume: bool,
+    max_batches: Option<u64>,
+    progress: Option<Arc<Progress>>,
+) -> Result<JournalRun> {
+    let t0 = Instant::now();
+    shard.validate()?;
+    let n_sites = campaign_sites(model).len() as u64;
+    let manifest = Manifest::new(&model.name, n_sites, shard, *mesh_cfg, cfg.clone());
+    let cd = CampaignDir::new(dir);
+    if cd.manifest_path().exists() {
+        if !resume {
+            bail!(
+                "campaign dir {} is already initialized — pass --resume to continue it",
+                dir.display()
+            );
+        }
+        let existing = Manifest::load(&cd.manifest_path())?;
+        existing.require_match(&manifest)?;
+    } else {
+        if resume {
+            bail!("nothing to resume: {} has no manifest.json", dir.display());
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating campaign dir {}", dir.display()))?;
+        manifest.write(&cd.manifest_path())?;
+    }
+    // scan + torn-tail repair, then plan the pending units
+    let scan = read_journal(&cd.journal_path())?;
+    let torn_repaired = scan.torn;
+    if scan.torn {
+        truncate_to(&cd.journal_path(), scan.valid_len)?;
+    }
+    let ledger = ShardLedger::build(&scan.records, &manifest)?;
+    let pending = pending_units(&manifest, &ledger);
+    let batches_skipped = ledger.completed() as u64;
+    let batches_total = batches_skipped + pending.len() as u64;
+    let limit = match max_batches {
+        Some(m) => pending.len().min(m as usize),
+        None => pending.len(),
+    };
+    if limit > 0 {
+        let mut sink = JournalSink::open(&cd.journal_path())?;
+        run_parallel_sink(
+            model,
+            mesh_cfg,
+            cfg,
+            progress,
+            Some(&pending[..limit]),
+            &mut sink,
+        )?;
+    }
+    let completed = limit == pending.len();
+    // the returned aggregate is ALWAYS the deterministic fold of the
+    // whole journal (prior runs included), in stable unit order
+    let scan = read_journal(&cd.journal_path())?;
+    debug_assert!(!scan.torn, "this run's appends cannot be torn");
+    let mut result = fold_records(&scan.records, &manifest);
+    result.wall = t0.elapsed();
+    let report = if completed {
+        write_report(&cd.report_path(), &result, cfg)?;
+        Some(cd.report_path())
+    } else {
+        None
+    };
+    Ok(JournalRun {
+        result,
+        completed,
+        batches_skipped,
+        batches_run: limit as u64,
+        batches_total,
+        torn_repaired,
+        report,
+    })
+}

@@ -1,0 +1,337 @@
+//! The append-only JSONL outcome journal.
+//!
+//! One line per finished `(input, site)` batch, written with a single
+//! `write_all` and fsynced (`sync_data`) before the batch is considered
+//! durable — so after a crash the journal is a valid prefix plus at
+//! most one torn final line. Torn-tail repair is a newline/parse check
+//! on the LAST line only; a malformed line with valid lines after it
+//! means real corruption and is a hard error, never silently skipped.
+//!
+//! Records carry outcome COUNTS, not per-trial data: resident memory
+//! is O(1) in trial count on both the write path (one delta per batch)
+//! and the read path can stream (the in-tree reader collects records —
+//! one small struct per batch — which is O(batches), the same order as
+//! the resume ledger itself).
+
+use crate::campaign::CampaignResult;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write as _;
+use std::path::Path;
+
+/// One journal line: the outcome counts of one `(input, site)` batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchRecord {
+    pub input: u64,
+    pub site: u64,
+    /// Model layer index of the site (denormalized for the per-layer
+    /// fold; a site batch is always single-layer).
+    pub layer: u64,
+    pub masked: u64,
+    pub exposed: u64,
+    pub critical: u64,
+    pub rtl_cycles: u64,
+}
+
+impl BatchRecord {
+    pub fn trials(&self) -> u64 {
+        self.masked + self.exposed + self.critical
+    }
+
+    /// Position in the worker-count-invariant unit space.
+    pub fn unit(&self, n_sites: u64) -> u64 {
+        self.input * n_sites + self.site
+    }
+
+    /// Build the record for one batch delta handed to the sink.
+    pub fn from_delta(input: u64, site: usize, delta: &CampaignResult) -> BatchRecord {
+        // one site batch = one layer; an empty delta (cannot happen —
+        // faults_per_layer >= 1) would fold as layer 0 with 0 trials
+        let layer = delta.per_layer.keys().next().copied().unwrap_or(0) as u64;
+        BatchRecord {
+            input,
+            site: site as u64,
+            layer,
+            masked: delta.masked_trials,
+            exposed: delta.exposed_trials,
+            critical: delta.vuln.critical,
+            rtl_cycles: delta.rtl_cycles_stepped,
+        }
+    }
+
+    /// Fold this record into an aggregate (the streaming replacement
+    /// for merging a `Vec<CampaignResult>`).
+    pub fn apply(&self, into: &mut CampaignResult) {
+        into.vuln.trials += self.trials();
+        into.vuln.critical += self.critical;
+        into.exposed_trials += self.exposed;
+        into.masked_trials += self.masked;
+        into.rtl_cycles_stepped += self.rtl_cycles;
+        let layer = into.per_layer.entry(self.layer as usize).or_default();
+        layer.trials += self.trials();
+        layer.critical += self.critical;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("input", Json::num(self.input as f64)),
+            ("site", Json::num(self.site as f64)),
+            ("layer", Json::num(self.layer as f64)),
+            ("masked", Json::num(self.masked as f64)),
+            ("exposed", Json::num(self.exposed as f64)),
+            ("critical", Json::num(self.critical as f64)),
+            ("rtl_cycles", Json::num(self.rtl_cycles as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<BatchRecord> {
+        let field = |k: &str| -> Result<u64> {
+            j.req(k)?
+                .as_f64()
+                .map(|v| v as u64)
+                .ok_or_else(|| anyhow!("journal field '{k}' must be a number"))
+        };
+        Ok(BatchRecord {
+            input: field("input")?,
+            site: field("site")?,
+            layer: field("layer")?,
+            masked: field("masked")?,
+            exposed: field("exposed")?,
+            critical: field("critical")?,
+            rtl_cycles: field("rtl_cycles")?,
+        })
+    }
+}
+
+/// Appending journal writer: one fsynced line per record.
+pub struct JournalWriter {
+    file: std::fs::File,
+}
+
+impl JournalWriter {
+    pub fn open_append(path: &Path) -> Result<JournalWriter> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(JournalWriter { file })
+    }
+
+    /// Append one record durably: single `write_all` of `line\n`, then
+    /// `sync_data`. Batch granularity is the fsync granularity — the
+    /// journal-overhead bench (schema v8) pins the cost at < 10%.
+    pub fn append(&mut self, rec: &BatchRecord) -> Result<()> {
+        let mut line = rec.to_json().compact();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+}
+
+/// Result of scanning a journal file.
+pub struct JournalScan {
+    /// Every validly-parsed record, in file (= completion) order.
+    pub records: Vec<BatchRecord>,
+    /// Byte length of the valid prefix (end of the last good line).
+    pub valid_len: u64,
+    /// True when the file ends in a torn line (crash mid-append):
+    /// trailing bytes after `valid_len` that are unterminated or
+    /// unparseable. The torn tail's batch is NOT in `records` and must
+    /// be re-executed after truncating to `valid_len`.
+    pub torn: bool,
+}
+
+/// Scan a journal file; a missing file is an empty (fresh) journal.
+pub fn read_journal(path: &Path) -> Result<JournalScan> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(JournalScan {
+                records: vec![],
+                valid_len: 0,
+                torn: false,
+            })
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal {}", path.display()))
+        }
+    };
+    let mut records = Vec::new();
+    let mut valid_len = 0u64;
+    let mut pos = 0usize;
+    let bytes = text.as_bytes();
+    while pos < bytes.len() {
+        let (line, end, terminated) = match text[pos..].find('\n') {
+            Some(rel) => (&text[pos..pos + rel], pos + rel + 1, true),
+            None => (&text[pos..], bytes.len(), false),
+        };
+        let parsed = Json::parse(line).and_then(|j| BatchRecord::from_json(&j));
+        match parsed {
+            Ok(rec) if terminated => {
+                records.push(rec);
+                valid_len = end as u64;
+                pos = end;
+            }
+            // an unterminated-but-parseable line still counts as torn:
+            // the fsync covering its newline never landed, so the
+            // batch is not durable — re-execute it
+            _ if end == bytes.len() => {
+                return Ok(JournalScan {
+                    records,
+                    valid_len,
+                    torn: true,
+                })
+            }
+            Err(e) => {
+                bail!(
+                    "corrupt journal {}: line {} is invalid but not final: {e}",
+                    path.display(),
+                    records.len() + 1
+                );
+            }
+            Ok(_) => unreachable!("terminated mid-file lines either parse or error"),
+        }
+    }
+    Ok(JournalScan {
+        records,
+        valid_len,
+        torn: false,
+    })
+}
+
+/// Truncate a journal to its valid prefix (torn-tail repair).
+pub fn truncate_to(path: &Path, len: u64) -> Result<()> {
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening journal {} for repair", path.display()))?;
+    f.set_len(len)?;
+    f.sync_data()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, Dataflow, Scenario};
+
+    fn rec(input: u64, site: u64) -> BatchRecord {
+        BatchRecord {
+            input,
+            site,
+            layer: site / 2,
+            masked: 2,
+            exposed: 1,
+            critical: 1,
+            rtl_cycles: 100 + input,
+        }
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("enfor-sa-journal-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn record_round_trips_json() {
+        let r = rec(3, 4);
+        let line = r.to_json().compact();
+        assert!(!line.contains('\n'));
+        let back = BatchRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(r.trials(), 4);
+        assert_eq!(r.unit(5), 19);
+    }
+
+    #[test]
+    fn apply_folds_counts_and_layers() {
+        let mut acc = CampaignResult::empty(
+            "m",
+            Backend::EnforSa,
+            Scenario::Seu,
+            Dataflow::OutputStationary,
+        );
+        rec(0, 0).apply(&mut acc);
+        rec(0, 1).apply(&mut acc);
+        rec(1, 2).apply(&mut acc);
+        assert_eq!(acc.vuln.trials, 12);
+        assert_eq!(acc.vuln.critical, 3);
+        assert_eq!(acc.masked_trials, 6);
+        assert_eq!(acc.exposed_trials, 3);
+        assert_eq!(acc.rtl_cycles_stepped, 301);
+        assert_eq!(acc.per_layer.len(), 2); // layers 0 (sites 0,1) and 1
+        assert_eq!(acc.per_layer[&0].trials, 8);
+    }
+
+    #[test]
+    fn write_scan_round_trip() {
+        let path = tmpfile("round_trip.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut w = JournalWriter::open_append(&path).unwrap();
+        for i in 0..4 {
+            w.append(&rec(i, i % 2)).unwrap();
+        }
+        drop(w);
+        let scan = read_journal(&path).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.records.len(), 4);
+        assert_eq!(scan.valid_len, std::fs::metadata(&path).unwrap().len());
+        assert_eq!(scan.records[2], rec(2, 0));
+        // append after reopen keeps the prefix
+        let mut w = JournalWriter::open_append(&path).unwrap();
+        w.append(&rec(9, 1)).unwrap();
+        drop(w);
+        assert_eq!(read_journal(&path).unwrap().records.len(), 5);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_empty_journal() {
+        let scan = read_journal(Path::new("/nonexistent/journal.jsonl")).unwrap();
+        assert!(scan.records.is_empty() && !scan.torn && scan.valid_len == 0);
+    }
+
+    #[test]
+    fn torn_tail_detected_and_repaired() {
+        let path = tmpfile("torn.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut w = JournalWriter::open_append(&path).unwrap();
+        for i in 0..3 {
+            w.append(&rec(i, 0)).unwrap();
+        }
+        drop(w);
+        let full = std::fs::metadata(&path).unwrap().len();
+        // crash mid-append: chop 7 bytes off the final line
+        truncate_to(&path, full - 7).unwrap();
+        let scan = read_journal(&path).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.records.len(), 2, "torn line excluded");
+        truncate_to(&path, scan.valid_len).unwrap();
+        let scan = read_journal(&path).unwrap();
+        assert!(!scan.torn);
+        assert_eq!(scan.records.len(), 2);
+        // an unterminated but parseable tail is torn too (newline not
+        // durable)
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&rec(9, 9).to_json().compact()); // no trailing \n
+        std::fs::write(&path, &text).unwrap();
+        let scan = read_journal(&path).unwrap();
+        assert!(scan.torn);
+        assert_eq!(scan.records.len(), 2);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mid_file_corruption_is_a_hard_error() {
+        let path = tmpfile("corrupt.jsonl");
+        let good = rec(0, 0).to_json().compact();
+        std::fs::write(&path, format!("{good}\ngarbage line\n{good}\n")).unwrap();
+        let e = read_journal(&path).unwrap_err().to_string();
+        assert!(e.contains("corrupt journal"), "{e}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

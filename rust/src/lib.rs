@@ -9,8 +9,10 @@
 //!   *inverted-assignment-order* fault injection ([`mesh`]), the HDFIT-style
 //!   instrumented baseline ([`mesh::hdfit`]), the full-SoC baseline
 //!   ([`soc`]), the quantized DNN substrate ([`dnn`]), the software-level
-//!   injector ([`swfi`]), the statistical campaign engine ([`campaign`]) and
-//!   the async campaign coordinator ([`coordinator`]).
+//!   injector ([`swfi`]), the statistical campaign engine ([`campaign`]),
+//!   the async campaign coordinator ([`coordinator`]) and the durable
+//!   campaign journal ([`journal`]) — resumable, shardable,
+//!   O(1)-memory campaigns with bit-identical reports.
 //! * **L2** — JAX graphs of the quantized layers (`python/compile/model.py`),
 //!   AOT-lowered to HLO text and executed from Rust via PJRT ([`runtime`]).
 //! * **L1** — Pallas int8 GEMM / im2col kernels
@@ -79,6 +81,7 @@ pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod dnn;
+pub mod journal;
 pub mod mat;
 pub mod mesh;
 pub mod report;

@@ -9,6 +9,7 @@
 //! enfor-sa matmul-bench [--dims ..]        Table IV
 //! enfor-sa layer-bench  [--dims ..]        Table V
 //! enfor-sa campaign --model <name> ...     Table VI (one model)
+//! enfor-sa campaign merge <dir>...         fold sharded campaign dirs
 //! enfor-sa suite table6 --models a,b,..    Table VI (many models)
 //! enfor-sa maps --signal control|weight    Fig. 5a / 5b
 //! enfor-sa validate                        §IV-B accuracy validation
@@ -79,6 +80,37 @@
 //!                              cycle-resume exactly, cycle counts
 //!                              included). Ignored by the other engines
 //! ```
+//!
+//! ... and the durable-journal flags (ROADMAP "Durable campaign
+//! journal"), which make campaigns resumable, O(1)-memory and
+//! multi-process with byte-identical final reports:
+//!
+//! ```text
+//! --campaign-dir <dir>    journal the run: write <dir>/manifest.json
+//!                         once, append one fsynced JSONL line per
+//!                         finished (input, site) batch to
+//!                         <dir>/journal.jsonl, and emit the
+//!                         deterministic <dir>/report.json (no
+//!                         wall-clock fields) when the shard completes
+//! --resume <dir>          continue an interrupted journaled run:
+//!                         journaled batches are skipped, a torn final
+//!                         line is truncated and re-executed, and the
+//!                         manifest must match (seed/config/schema;
+//!                         workers exempt — resume at any parallelism).
+//!                         With --campaign-dir, spell it --resume=true
+//! --shard i/N             own only the work units with unit % N == i
+//!                         (one process + dir per shard, same seed and
+//!                         config); `campaign merge` folds the N dirs
+//! --max-batches <n>       stop this invocation after n pending batches
+//!                         (kill/resume simulation: the journal stays a
+//!                         valid prefix; resume finishes the rest)
+//!
+//! enfor-sa campaign merge <dir>... [--out report.json]
+//!                         validate the dirs as the complete, disjoint
+//!                         shard set of ONE campaign and fold their
+//!                         journals (stable unit order) into the same
+//!                         report a single-process run emits
+//! ```
 
 #![allow(clippy::needless_range_loop)]
 
@@ -91,15 +123,21 @@ use enfor_sa::config::{
     Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
     TrialEngine,
 };
-use enfor_sa::coordinator::{run_parallel, Args};
+use enfor_sa::coordinator::{run_parallel, Args, Progress};
 use enfor_sa::dnn::models;
+use enfor_sa::journal::{merge_dirs, run_journaled, Shard};
 use enfor_sa::mesh::driver::{gold_matmul, MatmulDriver};
 use enfor_sa::mesh::hdfit::InstrumentedMesh;
 use enfor_sa::mesh::{Mesh, SignalKind};
-use enfor_sa::report::{format_pe_map, format_table, human_time, pe_map_json};
+use enfor_sa::report::{
+    campaign_report_json, format_pe_map, format_table, human_time, pe_map_json,
+};
 use enfor_sa::soc::Soc;
 use enfor_sa::util::json::Json;
 use enfor_sa::util::Rng;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -294,9 +332,35 @@ fn cmd_layer_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_campaign(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(String::as_str) == Some("merge") {
+        return cmd_campaign_merge(args);
+    }
     let (mesh_cfg, cc) = configs(args)?;
     let name = args.str_or("model", "quicknet");
     let out = args.get("out").map(str::to_string);
+    // durable-journal flags — see the doc grammar above and ROADMAP
+    // "Durable campaign journal"
+    let campaign_dir = args.get("campaign-dir").map(str::to_string);
+    let resume_arg = args.get("resume").map(str::to_string);
+    let (dir, resume) = match (campaign_dir, resume_arg) {
+        (Some(d), r) => (Some(d), r.is_some()),
+        (None, Some(r)) if !matches!(r.as_str(), "true" | "1" | "yes") => (Some(r), true),
+        (None, Some(_)) => bail!("--resume without a directory requires --campaign-dir <dir>"),
+        (None, None) => (None, false),
+    };
+    let shard = match args.get("shard") {
+        Some(s) => Shard::parse(s)?,
+        None => Shard::default(),
+    };
+    let max_batches = match args.get("max-batches") {
+        Some(v) => Some(v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--max-batches expects an integer, got '{v}'")
+        })?),
+        None => None,
+    };
+    if dir.is_none() && (shard != Shard::default() || max_batches.is_some()) {
+        bail!("--shard / --max-batches need a journaled run (--campaign-dir <dir>)");
+    }
     args.finish()?;
     let model = models::by_name(&name, cc.seed)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
@@ -306,7 +370,42 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         cc.backend, cc.engine, cc.tile_engine, cc.lanes, cc.scenario, mesh_cfg.dim,
         mesh_cfg.dataflow, cc.inputs, cc.faults_per_layer
     );
-    let r = run_parallel(&model, &mesh_cfg, &cc, None)?;
+    let r = match dir {
+        Some(dir) => {
+            let progress = Arc::new(Progress::default());
+            let stop = Arc::new(AtomicBool::new(false));
+            let ticker = spawn_progress_ticker(Arc::clone(&progress), Arc::clone(&stop));
+            let run = run_journaled(
+                &model,
+                &mesh_cfg,
+                &cc,
+                Path::new(&dir),
+                shard,
+                resume,
+                max_batches,
+                Some(Arc::clone(&progress)),
+            );
+            stop.store(true, Ordering::Relaxed);
+            let _ = ticker.join();
+            let run = run?;
+            if run.torn_repaired {
+                eprintln!("journal: torn final line truncated, its batch re-executed");
+            }
+            eprintln!(
+                "journal: shard {shard} in {dir}: {} batches skipped, {} run, {}/{} journaled{}",
+                run.batches_skipped,
+                run.batches_run,
+                run.batches_skipped + run.batches_run,
+                run.batches_total,
+                if run.completed { " (complete)" } else { "" }
+            );
+            if let Some(report) = &run.report {
+                eprintln!("journal: wrote {}", report.display());
+            }
+            run.result
+        }
+        None => run_parallel(&model, &mesh_cfg, &cc, None)?,
+    };
     let (lo, hi) = r.vuln.ci95();
     println!(
         "{}: trials={} critical={} exposed={} masked={}",
@@ -328,25 +427,70 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         println!("  layer {layer:2}: VF {:.4}% ({} trials)", v.vf() * 100.0, v.trials);
     }
     if let Some(path) = out {
-        let j = Json::obj(vec![
-            ("model", Json::str(r.model.clone())),
-            ("backend", Json::str(r.backend.to_string())),
-            ("dataflow", Json::str(r.dataflow.to_string())),
-            ("scenario", Json::str(r.scenario.to_string())),
-            ("tile_engine", Json::str(cc.tile_engine.to_string())),
-            ("lanes", Json::num(cc.lanes as f64)),
-            ("trials", Json::num(r.vuln.trials as f64)),
-            ("critical", Json::num(r.vuln.critical as f64)),
-            ("exposed", Json::num(r.exposed_trials as f64)),
-            ("masked", Json::num(r.masked_trials as f64)),
-            ("rtl_cycles_stepped", Json::num(r.rtl_cycles_stepped as f64)),
-            ("vf", Json::num(r.vf())),
-            ("wall_s", Json::num(r.wall.as_secs_f64())),
-        ]);
+        // the deterministic report object plus this run's wall clock
+        // (campaign-dir report.json files stay wall-free for diffing)
+        let mut j = campaign_report_json(&r, cc.tile_engine, cc.lanes);
+        if let Json::Obj(m) = &mut j {
+            m.insert("wall_s".to_string(), Json::num(r.wall.as_secs_f64()));
+        }
         std::fs::write(&path, j.pretty())?;
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+/// `campaign merge <dir>...` — fold complete shard journals into the
+/// byte-identical single-process report.
+fn cmd_campaign_merge(args: &Args) -> Result<()> {
+    let out = args.get("out").map(str::to_string);
+    args.finish()?;
+    let dirs: Vec<&Path> = args.positional[2..].iter().map(Path::new).collect();
+    if dirs.is_empty() {
+        bail!("usage: enfor-sa campaign merge <dir>... [--out report.json]");
+    }
+    let merged = merge_dirs(&dirs)?;
+    let r = &merged.result;
+    let cc = &merged.manifest.campaign;
+    println!(
+        "merged {} shard dir(s): {} batches  trials={} critical={} exposed={} masked={}",
+        dirs.len(),
+        merged.batches,
+        r.vuln.trials,
+        r.vuln.critical,
+        r.exposed_trials,
+        r.masked_trials
+    );
+    let text = campaign_report_json(r, cc.tile_engine, cc.lanes).pretty() + "\n";
+    match out {
+        Some(path) => {
+            std::fs::write(&path, text)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+/// Background stderr ticker for journaled campaigns: one progress line
+/// per second (`done/total batches, trials/sec, ETA`).
+fn spawn_progress_ticker(
+    progress: Arc<Progress>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        loop {
+            // 100 ms polls so a finished campaign joins promptly; one
+            // printed line per second
+            for _ in 0..10 {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            eprintln!("progress: {}", progress.line(t0.elapsed().as_secs_f64()));
+        }
+    })
 }
 
 fn cmd_suite(args: &Args) -> Result<()> {

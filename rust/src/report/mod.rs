@@ -1,7 +1,8 @@
 //! Report rendering: paper-style tables and per-PE heat maps, as
 //! monospace text and JSON.
 
-use crate::campaign::PeMap;
+use crate::campaign::{CampaignResult, PeMap};
+use crate::config::TileEngine;
 use crate::util::json::Json;
 
 /// Render an aligned monospace table (the shape the paper's tables use).
@@ -81,6 +82,44 @@ pub fn pe_map_json(map: &PeMap) -> Json {
     ])
 }
 
+/// The canonical campaign report JSON — every field is a deterministic
+/// function of `(seed, config, model)`: counters, labels and per-layer
+/// estimates only, NO wall-clock times. This is what makes the
+/// journal's bit-identity contract checkable with `diff`: a resumed,
+/// sharded+merged or straight-through campaign emits byte-identical
+/// report files (`Json::pretty` over `BTreeMap` is key-sorted). The
+/// CLI `--out` path layers a `wall_s` field on top of this object;
+/// campaign-dir `report.json` files are exactly this object.
+pub fn campaign_report_json(r: &CampaignResult, tile_engine: TileEngine, lanes: usize) -> Json {
+    let per_layer: Vec<Json> = r
+        .per_layer
+        .iter()
+        .map(|(layer, v)| {
+            Json::obj(vec![
+                ("layer", Json::num(*layer as f64)),
+                ("trials", Json::num(v.trials as f64)),
+                ("critical", Json::num(v.critical as f64)),
+                ("vf", Json::num(v.vf())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("model", Json::str(r.model.clone())),
+        ("backend", Json::str(r.backend.to_string())),
+        ("dataflow", Json::str(r.dataflow.to_string())),
+        ("scenario", Json::str(r.scenario.to_string())),
+        ("tile_engine", Json::str(tile_engine.to_string())),
+        ("lanes", Json::num(lanes as f64)),
+        ("trials", Json::num(r.vuln.trials as f64)),
+        ("critical", Json::num(r.vuln.critical as f64)),
+        ("exposed", Json::num(r.exposed_trials as f64)),
+        ("masked", Json::num(r.masked_trials as f64)),
+        ("rtl_cycles_stepped", Json::num(r.rtl_cycles_stepped as f64)),
+        ("vf", Json::num(r.vf())),
+        ("per_layer", Json::Arr(per_layer)),
+    ])
+}
+
 /// Format a duration in the paper's style (h / min / s / ms / us).
 pub fn human_time(secs: f64) -> String {
     if secs >= 3600.0 {
@@ -135,6 +174,34 @@ mod tests {
         assert_eq!(human_time(2.5), "2.50s");
         assert_eq!(human_time(0.0025), "2.500ms");
         assert_eq!(human_time(0.0000025), "2.500us");
+    }
+
+    #[test]
+    fn campaign_report_json_is_deterministic_and_wall_free() {
+        use crate::config::{Backend, Dataflow, Scenario};
+        let mut r = CampaignResult::empty(
+            "m",
+            Backend::EnforSa,
+            Scenario::Seu,
+            Dataflow::OutputStationary,
+        );
+        r.vuln.trials = 10;
+        r.vuln.critical = 2;
+        r.exposed_trials = 3;
+        r.masked_trials = 5;
+        r.rtl_cycles_stepped = 1234;
+        let v = r.vuln;
+        r.per_layer.insert(0, v);
+        let j = campaign_report_json(&r, TileEngine::CycleResume, 8);
+        let text = j.pretty();
+        assert!(!text.contains("wall"), "report must be wall-clock free");
+        assert_eq!(j.get("trials").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("per_layer").unwrap().as_arr().unwrap().len(), 1);
+        // identical inputs -> identical bytes, the journal's diff contract
+        let mut r2 = r.clone();
+        r2.wall = std::time::Duration::from_secs(999); // wall differs...
+        let text2 = campaign_report_json(&r2, TileEngine::CycleResume, 8).pretty();
+        assert_eq!(text, text2); // ...bytes don't
     }
 
     #[test]

@@ -111,6 +111,53 @@ impl Json {
         out
     }
 
+    /// Serialize on a single line with no whitespace — the JSONL form
+    /// used by the campaign outcome journal (`journal`), where one
+    /// record per line makes torn-write detection a newline check.
+    /// `Obj` is a `BTreeMap`, so output is key-sorted and deterministic.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write_pretty(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -380,6 +427,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn round_trips_compact() {
+        let src = r#"{"a": [1, 2, {"b": false}], "c": "x\n", "d": null, "e": 0.5}"#;
+        let j = Json::parse(src).unwrap();
+        let line = j.compact();
+        assert!(!line.contains('\n'), "compact is single-line: {line}");
+        assert!(!line.contains(": "), "compact has no pad: {line}");
+        assert_eq!(Json::parse(&line).unwrap(), j);
+        assert_eq!(Json::Arr(vec![]).compact(), "[]");
+        assert_eq!(Json::obj(vec![]).compact(), "{}");
     }
 
     #[test]

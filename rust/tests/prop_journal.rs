@@ -1,0 +1,447 @@
+//! End-to-end properties of the durable campaign journal: the ISSUE's
+//! acceptance bar is that interrupted+resumed, sharded+merged and
+//! straight-through campaigns produce BYTE-identical `report.json`
+//! files at any worker count. The offline environment has no proptest
+//! crate, so the properties are checked over fixed small campaigns
+//! (quicknet: 2 inputs x 5 sites x 3 faults = 10 units, 30 trials)
+//! with real campaign directories under the system temp dir.
+
+use enfor_sa::config::{CampaignConfig, MeshConfig, Scenario};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::models;
+use enfor_sa::journal::{merge_dirs, read_journal, run_journaled, Shard};
+use enfor_sa::report::campaign_report_json;
+use std::path::PathBuf;
+
+fn cfg() -> CampaignConfig {
+    CampaignConfig {
+        seed: 0x10AD,
+        faults_per_layer: 3,
+        inputs: 2,
+        workers: 1,
+        ..Default::default()
+    }
+}
+
+/// Fresh scratch campaign dir, unique per (process, test-site).
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "enfor-sa-prop-journal-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn report_bytes(dir: &PathBuf) -> String {
+    std::fs::read_to_string(dir.join("report.json")).expect("report.json must exist")
+}
+
+/// The canonical report text for a complete straight-through journaled
+/// run of `cfg()` — every other execution mode must reproduce it
+/// byte-for-byte.
+fn straight_report(name: &str) -> String {
+    let model = models::quicknet(7);
+    let dir = tmpdir(name);
+    let cc = cfg();
+    let run = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cc,
+        &dir,
+        Shard::default(),
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(run.completed);
+    assert_eq!(run.batches_total, 10);
+    let bytes = report_bytes(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+#[test]
+fn journaled_run_matches_in_memory_counts() {
+    let model = models::quicknet(7);
+    let cc = cfg();
+    let mem = run_parallel(&model, &MeshConfig::default(), &cc, None).unwrap();
+    let dir = tmpdir("counts");
+    let run = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cc,
+        &dir,
+        Shard::default(),
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(run.completed);
+    let r = &run.result;
+    assert_eq!(mem.vuln.trials, r.vuln.trials);
+    assert_eq!(mem.vuln.critical, r.vuln.critical);
+    assert_eq!(mem.exposed_trials, r.exposed_trials);
+    assert_eq!(mem.masked_trials, r.masked_trials);
+    assert_eq!(mem.rtl_cycles_stepped, r.rtl_cycles_stepped);
+    let keys = |m: &std::collections::BTreeMap<usize, enfor_sa::util::stats::VulnEstimate>| {
+        m.iter().map(|(k, v)| (*k, v.trials, v.critical)).collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&mem.per_layer), keys(&r.per_layer));
+    // the journal holds exactly one line per (input, site) unit
+    let scan = read_journal(&dir.join("journal.jsonl")).unwrap();
+    assert!(!scan.torn);
+    assert_eq!(scan.records.len(), 10);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_kill_resume_is_bit_identical() {
+    let baseline = straight_report("kill-baseline");
+    let model = models::quicknet(7);
+    // kill after 0, 1, 4 or 9 of the 10 batches, then resume — at a
+    // DIFFERENT worker count than the first leg ran with
+    for (cap, resume_workers) in [(0u64, 1usize), (1, 3), (4, 2), (9, 3)] {
+        let dir = tmpdir(&format!("kill-{cap}"));
+        let cc = cfg();
+        let first = run_journaled(
+            &model,
+            &MeshConfig::default(),
+            &cc,
+            &dir,
+            Shard::default(),
+            false,
+            Some(cap),
+            None,
+        )
+        .unwrap();
+        assert!(!first.completed, "cap {cap} must leave work pending");
+        assert_eq!(first.batches_run, cap);
+        assert!(!dir.join("report.json").exists(), "no partial reports");
+        let mut resumed_cc = cfg();
+        resumed_cc.workers = resume_workers;
+        let second = run_journaled(
+            &model,
+            &MeshConfig::default(),
+            &resumed_cc,
+            &dir,
+            Shard::default(),
+            true,
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(second.completed);
+        assert_eq!(second.batches_skipped, cap);
+        assert_eq!(second.batches_run, 10 - cap);
+        assert_eq!(report_bytes(&dir), baseline, "cap {cap} diverged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn prop_shard_merge_is_bit_identical() {
+    let baseline = straight_report("shard-baseline");
+    let model = models::quicknet(7);
+    let cc = cfg();
+    let dirs: Vec<PathBuf> = (0..2).map(|i| tmpdir(&format!("shard-{i}"))).collect();
+    for (i, dir) in dirs.iter().enumerate() {
+        let mut shard_cc = cfg();
+        shard_cc.workers = i + 1; // shards may run at different widths
+        let shard = Shard { index: i as u64, count: 2 };
+        let run = run_journaled(
+            &model,
+            &MeshConfig::default(),
+            &shard_cc,
+            dir,
+            shard,
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(run.completed);
+        assert_eq!(run.batches_total, 5, "each 1/2 shard owns 5 of 10 units");
+    }
+    let merged = merge_dirs(&[dirs[0].as_path(), dirs[1].as_path()]).unwrap();
+    assert_eq!(merged.batches, 10);
+    let text =
+        campaign_report_json(&merged.result, cc.tile_engine, cc.lanes).pretty() + "\n";
+    assert_eq!(text, baseline, "merged shards diverged from straight run");
+    // giving the same shard twice is not a partition
+    let e = merge_dirs(&[dirs[0].as_path(), dirs[0].as_path()])
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("do not partition"), "{e}");
+    // a single complete 1/1 dir merges to the same bytes too
+    let whole = tmpdir("shard-whole");
+    run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cc,
+        &whole,
+        Shard::default(),
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    let solo = merge_dirs(&[whole.as_path()]).unwrap();
+    let text = campaign_report_json(&solo.result, cc.tile_engine, cc.lanes).pretty() + "\n";
+    assert_eq!(text, baseline);
+    for dir in dirs.iter().chain([&whole]) {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn merge_refuses_incomplete_shards() {
+    let model = models::quicknet(7);
+    let done = tmpdir("inc-done");
+    let partial = tmpdir("inc-partial");
+    for (dir, shard, cap) in [
+        (&done, Shard { index: 0, count: 2 }, None),
+        (&partial, Shard { index: 1, count: 2 }, Some(2)),
+    ] {
+        run_journaled(
+            &model,
+            &MeshConfig::default(),
+            &cfg(),
+            dir,
+            shard,
+            false,
+            cap,
+            None,
+        )
+        .unwrap();
+    }
+    let e = merge_dirs(&[done.as_path(), partial.as_path()])
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("incomplete"), "{e}");
+    assert!(e.contains("resume it first"), "{e}");
+    for dir in [&done, &partial] {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn prop_torn_tail_is_repaired_on_resume() {
+    let baseline = straight_report("torn-baseline");
+    let model = models::quicknet(7);
+    let dir = tmpdir("torn");
+    run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        false,
+        Some(3),
+        None,
+    )
+    .unwrap();
+    // tear the final journal line mid-record, as a crash during the
+    // un-synced tail write would
+    let journal = dir.join("journal.jsonl");
+    let len = std::fs::metadata(&journal).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&journal).unwrap();
+    f.set_len(len - 7).unwrap();
+    drop(f);
+    let scan = read_journal(&journal).unwrap();
+    assert!(scan.torn);
+    assert_eq!(scan.records.len(), 2, "only the intact prefix survives");
+    let run = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(run.torn_repaired, "the torn tail must be detected");
+    assert_eq!(run.batches_skipped, 2);
+    assert_eq!(run.batches_run, 8, "the torn batch is re-executed");
+    assert!(run.completed);
+    assert_eq!(report_bytes(&dir), baseline);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_mismatch_is_refused_with_named_field() {
+    let model = models::quicknet(7);
+    let dir = tmpdir("mismatch");
+    run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        false,
+        Some(1),
+        None,
+    )
+    .unwrap();
+    // wrong seed
+    let mut other = cfg();
+    other.seed += 1;
+    let e = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &other,
+        &dir,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("manifest mismatch: seed"), "{e}");
+    // wrong scenario
+    let mut other = cfg();
+    other.scenario = Scenario::Mbu { bits: 2 };
+    let e = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &other,
+        &dir,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("manifest mismatch: scenario"), "{e}");
+    // wrong schema version (hand-edited manifest)
+    let mpath = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    assert!(text.contains("enfor-sa/campaign-journal/v1"));
+    std::fs::write(&mpath, text.replace("campaign-journal/v1", "campaign-journal/v0"))
+        .unwrap();
+    let e = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("manifest mismatch: schema"), "{e}");
+    let _ = std::fs::remove_dir_all(&dir);
+    // resuming a dir that was never initialized is its own error
+    let fresh = tmpdir("mismatch-fresh");
+    let e = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &fresh,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("nothing to resume"), "{e}");
+    // ... and re-initializing an existing dir without --resume refuses
+    let dir = tmpdir("mismatch-reinit");
+    run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        false,
+        Some(1),
+        None,
+    )
+    .unwrap();
+    let e = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        false,
+        None,
+        None,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("already initialized"), "{e}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_of_completed_dir_is_noop_and_reemits_report() {
+    let model = models::quicknet(7);
+    let dir = tmpdir("noop");
+    let first = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        false,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(first.completed);
+    let baseline = report_bytes(&dir);
+    // even if the report file is lost, resume regenerates it from the
+    // journal without re-running anything
+    std::fs::remove_file(dir.join("report.json")).unwrap();
+    let again = run_journaled(
+        &model,
+        &MeshConfig::default(),
+        &cfg(),
+        &dir,
+        Shard::default(),
+        true,
+        None,
+        None,
+    )
+    .unwrap();
+    assert!(again.completed);
+    assert_eq!(again.batches_run, 0, "no batch may re-execute");
+    assert_eq!(again.batches_skipped, 10);
+    assert_eq!(report_bytes(&dir), baseline);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_report_bytes_are_worker_count_invariant() {
+    let baseline = straight_report("workers-baseline");
+    let model = models::quicknet(7);
+    for workers in [2usize, 3] {
+        let dir = tmpdir(&format!("workers-{workers}"));
+        let mut cc = cfg();
+        cc.workers = workers;
+        let run = run_journaled(
+            &model,
+            &MeshConfig::default(),
+            &cc,
+            &dir,
+            Shard::default(),
+            false,
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(run.completed);
+        assert_eq!(report_bytes(&dir), baseline, "workers={workers} diverged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
