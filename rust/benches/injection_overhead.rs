@@ -8,9 +8,10 @@
 //!   BENCH_SCENARIO=seu|mbu:<k>|burst:<r>|double-seu|stuck:<0|1>
 //!   BENCH_DATAFLOW=os|ws|both   (default both: one Table-VI row set
 //!                                per dataflow)
-//!   BENCH_LANES=<n>             (lane count of the lane-lockstep
-//!                                campaign arm — schema v6; default 8,
-//!                                n=1 degenerates to cycle-resume)
+//!   BENCH_LANES=<n>             (lane count of the lane-lockstep and
+//!                                packed-lockstep campaign arms —
+//!                                schema v6/v9; default 8, n=1
+//!                                degenerates to cycle-resume)
 //!
 //! Each row also runs the whole-SoC campaign pair (schema v7):
 //! cycle-resume vs full tile engine on the FullSoc backend, reported as
@@ -19,6 +20,11 @@
 //! the coordinator's in-memory sink vs journaled to a scratch campaign
 //! dir (manifest + per-batch fsynced JSONL + report), reported as
 //! `journal_overhead` — CI's bench smoke asserts its mean stays < 1.10.
+//! Schema v9 adds the cross-tile packer arm: `packed_lockstep_speedup`
+//! (RTL cycles lockstep steps over the packer's, deterministic per
+//! seed) and the lane-occupancy pair — CI's bench smoke asserts the
+//! packed mean speedup > 1 and the occupancy improvement at
+//! BENCH_FAULTS=2.
 //!
 //! Set BENCH_OUT=path.json to also write a machine-readable snapshot
 //! (`benchkit::injection_snapshot_json` — the schema stored under
@@ -78,15 +84,15 @@ fn main() {
     );
     println!(
         "{:<16} {:>4} {:>12} {:>14} {:>10} {:>8} {:>8} {:>10} {:>9} {:>12} {:>8} {:>8} {:>8} \
-         {:>8} {:>8}",
+         {:>6} {:>8} {:>8} {:>8}",
         "Model", "DF", "SW", "ENFOR-SA(RTL)", "Slowdown", "PVF", "AVF", "trials/s",
-        "resume-x", "rtl-cycles", "tile-x", "lock-x", "soc-x", "soc/sw", "jrnl-x"
+        "resume-x", "rtl-cycles", "tile-x", "lock-x", "pack-x", "occ", "soc-x", "soc/sw", "jrnl-x"
     );
     let rows = injection_table_dataflows(&names, &mesh_cfg, &cc, &dataflows).expect("campaigns");
     for r in &rows {
         println!(
             "{:<16} {:>4} {:>12} {:>14} {:>9.2}% {:>7.2}% {:>7.2}% {:>10.1} {:>8.2}x {:>12} \
-             {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x {:>7.2}x",
+             {:>7.2}x {:>7.2}x {:>7.2}x {:>6.2} {:>7.2}x {:>7.2}x {:>7.2}x",
             r.model,
             r.dataflow,
             human_time(r.sw.wall.as_secs_f64()),
@@ -99,6 +105,8 @@ fn main() {
             r.rtl_cycles_stepped(),
             r.cycle_resume_speedup(),
             r.lockstep_speedup(),
+            r.packed_lockstep_speedup(),
+            r.lane_occupancy(),
             r.soc_cycle_resume_speedup(),
             r.soc_vs_sw_slowdown(),
             r.journal_overhead()
@@ -108,6 +116,7 @@ fn main() {
     println!(
         "Mean: slowdown {:.2}%  PVF {:.2}%  AVF {:.2}%  resume speedup {:.2}x  \
          cycle-resume speedup {:.2}x  lockstep speedup {:.2}x  \
+         packed speedup {:.2}x  occupancy {:.2} (lockstep {:.2})  \
          SoC cycle-resume speedup {:.2}x  SoC-vs-SW slowdown {:.2}x  \
          journal overhead {:.3}x",
         rows.iter().map(|r| r.slowdown_pct()).sum::<f64>() / n,
@@ -119,6 +128,9 @@ fn main() {
             / n,
         rows.iter().map(|r| r.cycle_resume_speedup()).sum::<f64>() / n,
         rows.iter().map(|r| r.lockstep_speedup()).sum::<f64>() / n,
+        rows.iter().map(|r| r.packed_lockstep_speedup()).sum::<f64>() / n,
+        rows.iter().map(|r| r.lane_occupancy()).sum::<f64>() / n,
+        rows.iter().map(|r| r.lane_occupancy_lockstep()).sum::<f64>() / n,
         rows.iter().map(|r| r.soc_cycle_resume_speedup()).sum::<f64>() / n,
         rows.iter().map(|r| r.soc_vs_sw_slowdown()).sum::<f64>() / n,
         rows.iter().map(|r| r.journal_overhead()).sum::<f64>() / n,
@@ -126,7 +138,7 @@ fn main() {
     for r in &rows {
         println!(
             "CSV,injection,{},{},{:.6},{:.6},{:.3},{:.4},{:.4},{:.3},{:.4},{},{:.4},{},{:.4},\
-             {:.4},{:.4},{:.4}",
+             {:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
             r.model,
             r.dataflow,
             r.sw.wall.as_secs_f64(),
@@ -140,6 +152,9 @@ fn main() {
             r.cycle_resume_speedup(),
             r.lanes,
             r.lockstep_speedup(),
+            r.packed_lockstep_speedup(),
+            r.lane_occupancy(),
+            r.lane_occupancy_lockstep(),
             r.soc_cycle_resume_speedup(),
             r.soc_vs_sw_slowdown(),
             r.journal_overhead()

@@ -1,0 +1,120 @@
+//! Bench: lane step kernels — ns per mesh cycle and per lane-cycle of
+//! the SoA lane mesh, across lane counts and both dataflows, against
+//! the scalar `Mesh::step` baseline.
+//!
+//! The lane kernels walk each row in fixed-width `LANE_BLOCK` chunks
+//! (plus a scalar remainder), so wider lane meshes should amortize
+//! toward a flat per-lane-cycle cost; the `eff` column is the scalar
+//! baseline's per-cycle time divided by the lane mesh's per-lane-cycle
+//! time (> 1 means one lane-mesh lane is cheaper than one scalar mesh).
+//!
+//! Env knobs: BENCH_CYCLES (default 200k), BENCH_DIM (default 8),
+//! BENCH_LANE_COUNTS (default 1,8,16). Set BENCH_OUT=path.json to write
+//! a machine-readable snapshot (schema enfor-sa/lane-step/v1) for CI's
+//! bench smoke.
+//!
+//! Run: `cargo bench --bench lane_step`
+
+use enfor_sa::config::Dataflow;
+use enfor_sa::mesh::{LaneMesh, Mesh, MeshInputs, MeshSim, MeshState, StepOutput};
+use enfor_sa::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let cycles: u64 = std::env::var("BENCH_CYCLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+    let dim: usize = std::env::var("BENCH_DIM")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let lane_counts: Vec<usize> = std::env::var("BENCH_LANE_COUNTS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .map(|v| v.parse().expect("bad BENCH_LANE_COUNTS"))
+                .collect()
+        })
+        .unwrap_or_else(|| vec![1, 8, 16]);
+    println!("lane step kernels: DIM{dim}, {cycles} cycles per variant");
+    println!(
+        "{:<4} {:>6} {:>14} {:>18} {:>8}",
+        "DF", "lanes", "ns/cycle", "ns/lane-cycle", "eff"
+    );
+    let inp = MeshInputs::idle(dim);
+    let mut rows = Vec::new();
+    for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+        // scalar baseline: the single-mesh step the lane kernels replace
+        let mut mesh = Mesh::new(dim, dataflow);
+        let mut out = StepOutput::new(dim);
+        let t0 = Instant::now();
+        for _ in 0..cycles {
+            mesh.step(&inp, &mut out);
+        }
+        let scalar_ns = t0.elapsed().as_secs_f64() * 1e9 / cycles as f64;
+        std::hint::black_box(mesh.acc_at(0, 0));
+        // seed the lane broadcast from a mid-flight scalar snapshot so
+        // registers carry real values, matching how chunks start
+        let mut state = MeshState::default();
+        mesh.save_state(&mut state);
+        println!(
+            "{:<4} {:>6} {:>12.1}ns {:>16.1}ns {:>7.2}x",
+            dataflow, "-", scalar_ns, scalar_ns, 1.0
+        );
+        rows.push(Json::obj(vec![
+            ("dataflow", Json::str(dataflow.to_string())),
+            ("lanes", Json::num(0.0)),
+            ("ns_per_cycle", Json::num(scalar_ns)),
+            ("ns_per_lane_cycle", Json::num(scalar_ns)),
+            ("lane_efficiency", Json::num(1.0)),
+        ]));
+        for &lanes in &lane_counts {
+            let mut lm = LaneMesh::new(dim, dataflow);
+            lm.reshape(lanes);
+            lm.broadcast(&state);
+            let t0 = Instant::now();
+            for _ in 0..cycles {
+                lm.begin_cycle(&inp);
+                lm.step();
+            }
+            let step_ns = t0.elapsed().as_secs_f64() * 1e9 / cycles as f64;
+            let lane_ns = step_ns / lanes as f64;
+            let eff = scalar_ns / lane_ns;
+            std::hint::black_box(lm.acc_at(0, 0, 0));
+            println!(
+                "{:<4} {:>6} {:>12.1}ns {:>16.1}ns {:>7.2}x",
+                dataflow, lanes, step_ns, lane_ns, eff
+            );
+            rows.push(Json::obj(vec![
+                ("dataflow", Json::str(dataflow.to_string())),
+                ("lanes", Json::num(lanes as f64)),
+                ("ns_per_cycle", Json::num(step_ns)),
+                ("ns_per_lane_cycle", Json::num(lane_ns)),
+                ("lane_efficiency", Json::num(eff)),
+            ]));
+        }
+    }
+    for r in &rows {
+        println!(
+            "CSV,lane_step,{},{},{:.3},{:.3},{:.4}",
+            r.get("dataflow").and_then(Json::as_str).unwrap(),
+            r.get("lanes").and_then(Json::as_f64).unwrap() as u64,
+            r.get("ns_per_cycle").and_then(Json::as_f64).unwrap(),
+            r.get("ns_per_lane_cycle").and_then(Json::as_f64).unwrap(),
+            r.get("lane_efficiency").and_then(Json::as_f64).unwrap(),
+        );
+    }
+    if let Ok(path) = std::env::var("BENCH_OUT") {
+        let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+        let snap = Json::obj(vec![
+            ("schema", Json::str("enfor-sa/lane-step/v1")),
+            ("label", Json::str(label)),
+            ("dim", Json::num(dim as f64)),
+            ("cycles", Json::num(cycles as f64)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write(&path, snap.pretty()).expect("writing BENCH_OUT snapshot");
+        eprintln!("wrote snapshot {path}");
+    }
+}

@@ -206,7 +206,14 @@ pub struct InjectionRow {
     /// isolates the lane-batching effect as a deterministic RTL-cycle
     /// ratio against the cycle-resume baseline.
     pub rtl_lockstep: CampaignResult,
-    /// Lane count the lockstep campaign ran with.
+    /// Identical campaign with ONLY the tile engine switched to
+    /// `packed-lockstep` (schema v9) — same seed, bit-identical counts;
+    /// the cross-tile packer merges lane-lockstep's same-tile chunks,
+    /// so the cycle ratio against `rtl_lockstep` isolates the packing
+    /// effect and the occupancy pair below shows WHY it wins (fuller
+    /// lanes).
+    pub rtl_packed: CampaignResult,
+    /// Lane count the lockstep and packed campaigns ran with.
     pub lanes: usize,
     /// Whole-SoC campaign on its fast path (cycle-resume tile engine,
     /// schema v7) — the measured counterpart of the paper's "verilated
@@ -279,6 +286,31 @@ impl InjectionRow {
         self.rtl.rtl_cycles_stepped as f64 / self.rtl_lockstep.rtl_cycles_stepped.max(1) as f64
     }
 
+    /// Architectural speedup of the packed-lockstep tile engine over
+    /// same-tile lane-lockstep: RTL cycles lockstep steps for the
+    /// bit-identical campaign, divided by the packer's (schema v9).
+    /// Deterministic per seed, so CI asserts it; >= 1 always (packing
+    /// whole runs never costs cycles) and > 1 whenever the packer
+    /// merges at least two same-tile runs into one cross-tile chunk.
+    pub fn packed_lockstep_speedup(&self) -> f64 {
+        self.rtl_lockstep.rtl_cycles_stepped as f64
+            / self.rtl_packed.rtl_cycles_stepped.max(1) as f64
+    }
+
+    /// Lane occupancy of the packed campaign: filled lane-cycles over
+    /// stepped lane-cycles (schema v9). 1.0 means every stepped lane
+    /// carried a live trial.
+    pub fn lane_occupancy(&self) -> f64 {
+        self.rtl_packed.lane_occupancy()
+    }
+
+    /// Lane occupancy of the same-tile lockstep campaign — the packed
+    /// engine's baseline; the gap between the two is the idle-lane
+    /// waste the cross-tile packer reclaims.
+    pub fn lane_occupancy_lockstep(&self) -> f64 {
+        self.rtl_lockstep.lane_occupancy()
+    }
+
     /// Architectural speedup of cycle-resume on the whole-SoC backend:
     /// SoC cycles the full tile engine steps for the bit-identical
     /// campaign, divided by the resumed engine's (schema v7). The
@@ -349,6 +381,11 @@ pub fn injection_table(
         let mut lockstep_cfg = rtl_cfg.clone();
         lockstep_cfg.tile_engine = TileEngine::LaneLockstep;
         let rtl_lockstep = run_campaign(&model, mesh_cfg, &lockstep_cfg)?;
+        // schema v9: the cross-tile packer — same seed, same lanes, only
+        // the tile engine differs from the lockstep run above
+        let mut packed_cfg = rtl_cfg.clone();
+        packed_cfg.tile_engine = TileEngine::PackedLockstep;
+        let rtl_packed = run_campaign(&model, mesh_cfg, &packed_cfg)?;
         // schema v7: the whole-SoC pair — resumed fast path vs the full
         // tile engine, same seed (SoC campaigns are single-tile scoped)
         let mut soc_cfg = rtl_cfg.clone();
@@ -392,6 +429,7 @@ pub fn injection_table(
             rtl_tile_full,
             rtl_full,
             rtl_lockstep,
+            rtl_packed,
             lanes: lockstep_cfg.lanes,
             soc,
             soc_tile_full,
@@ -451,6 +489,13 @@ pub fn injection_table_dataflows(
 /// sink), `journal_wall_s` (manifest + per-batch fsynced JSONL +
 /// report) and their ratio `journal_overhead`, plus the top-level
 /// `mean_journal_overhead` that the CI bench smoke asserts < 1.10.
+/// Schema v9 adds the cross-tile packer accounting (ROADMAP
+/// "Cross-tile lane packing"): per-model `rtl_cycles_stepped_packed`,
+/// the deterministic `packed_lockstep_speedup` ratio vs the same-tile
+/// lockstep baseline, and the lane-occupancy pair `lane_occupancy`
+/// (packed) / `lane_occupancy_lockstep` (filled over stepped
+/// lane-cycles — the idle-lane waste the packer reclaims), plus
+/// top-level means of all three.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -492,6 +537,19 @@ pub fn injection_snapshot_json(
                     Json::num(r.rtl_lockstep.rtl_cycles_stepped as f64),
                 ),
                 ("lockstep_speedup", Json::num(r.lockstep_speedup())),
+                (
+                    "rtl_cycles_stepped_packed",
+                    Json::num(r.rtl_packed.rtl_cycles_stepped as f64),
+                ),
+                (
+                    "packed_lockstep_speedup",
+                    Json::num(r.packed_lockstep_speedup()),
+                ),
+                ("lane_occupancy", Json::num(r.lane_occupancy())),
+                (
+                    "lane_occupancy_lockstep",
+                    Json::num(r.lane_occupancy_lockstep()),
+                ),
                 ("soc_wall_s", Json::num(r.soc.wall.as_secs_f64())),
                 (
                     "soc_rtl_cycles_stepped",
@@ -532,7 +590,7 @@ pub fn injection_snapshot_json(
     // but read per row so mixed-lane tables stay representable
     let lanes = rows.first().map_or(0, |r| r.lanes);
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v8")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v9")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
         (
@@ -562,6 +620,18 @@ pub fn injection_snapshot_json(
         (
             "mean_lockstep_speedup",
             Json::num(rows.iter().map(|r| r.lockstep_speedup()).sum::<f64>() / n),
+        ),
+        (
+            "mean_packed_lockstep_speedup",
+            Json::num(rows.iter().map(|r| r.packed_lockstep_speedup()).sum::<f64>() / n),
+        ),
+        (
+            "mean_lane_occupancy",
+            Json::num(rows.iter().map(|r| r.lane_occupancy()).sum::<f64>() / n),
+        ),
+        (
+            "mean_lane_occupancy_lockstep",
+            Json::num(rows.iter().map(|r| r.lane_occupancy_lockstep()).sum::<f64>() / n),
         ),
         (
             "mean_soc_cycle_resume_speedup",
@@ -609,7 +679,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v8_carries_dataflow_scenario_and_cycle_accounting() {
+    fn snapshot_schema_v9_carries_dataflow_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -628,7 +698,7 @@ mod tests {
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v8")
+            Some("enfor-sa/injection-overhead/v9")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
         assert_eq!(j.get("lanes").and_then(Json::as_f64), Some(8.0));
@@ -686,6 +756,34 @@ mod tests {
         assert!(cycles_lock <= cycles, "lockstep never steps MORE cycles");
         assert!(
             j.get("mean_lockstep_speedup").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+        // the v9 packed axis: cycle count, speedup ratio, occupancy pair
+        let cycles_packed = m0
+            .get("rtl_cycles_stepped_packed")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(cycles_packed > 0.0);
+        assert!(
+            cycles_packed <= cycles_lock,
+            "packed never steps MORE cycles than lockstep"
+        );
+        assert!(
+            m0.get("packed_lockstep_speedup").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+        let occ = m0.get("lane_occupancy").and_then(Json::as_f64).unwrap();
+        let occ_lock = m0
+            .get("lane_occupancy_lockstep")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy is a fraction: {occ}");
+        assert!(occ_lock > 0.0 && occ_lock <= 1.0);
+        assert!(occ >= occ_lock, "packed lanes are never emptier");
+        assert!(
+            j.get("mean_packed_lockstep_speedup").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+        assert!(j.get("mean_lane_occupancy").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(
+            j.get("mean_lane_occupancy_lockstep").and_then(Json::as_f64).unwrap() > 0.0
         );
         // the v7 whole-SoC axis: wall, cycle pair, both ratios
         assert!(m0.get("soc_wall_s").and_then(Json::as_f64).unwrap() > 0.0);
@@ -795,6 +893,41 @@ mod tests {
         );
         assert!(r.lockstep_speedup() > 1.0);
         assert_eq!(r.lanes, 8);
+    }
+
+    #[test]
+    fn packed_lockstep_steps_strictly_fewer_rtl_cycles_than_lane_lockstep() {
+        // the packed acceptance bar at the benchkit layer: bit-identical
+        // counts vs both baselines, strictly fewer RTL cycles than
+        // same-tile lockstep, and strictly better lane occupancy. 8
+        // faults/layer on 8 lanes lets the packer merge a batch's
+        // same-tile runs into one chunk whenever a batch spans >= 2
+        // tiles (the Linear site has a 1x2 grid).
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 8,
+            inputs: 2,
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let r = &rows[0];
+        assert_eq!(r.rtl.vuln.trials, r.rtl_packed.vuln.trials);
+        assert_eq!(r.rtl.vuln.critical, r.rtl_packed.vuln.critical);
+        assert_eq!(r.rtl.exposed_trials, r.rtl_packed.exposed_trials);
+        assert_eq!(r.rtl.masked_trials, r.rtl_packed.masked_trials);
+        assert!(
+            r.rtl_packed.rtl_cycles_stepped < r.rtl_lockstep.rtl_cycles_stepped,
+            "packed stepped {} RTL cycles, lockstep {}",
+            r.rtl_packed.rtl_cycles_stepped,
+            r.rtl_lockstep.rtl_cycles_stepped
+        );
+        assert!(r.packed_lockstep_speedup() > 1.0);
+        assert!(
+            r.lane_occupancy() > r.lane_occupancy_lockstep(),
+            "packed lanes must be fuller: {} vs {}",
+            r.lane_occupancy(),
+            r.lane_occupancy_lockstep()
+        );
     }
 
     #[test]

@@ -41,7 +41,7 @@
 //! (ROADMAP "Schedule-indexable SoC").
 
 use super::fault::{sample_trial, TrialFault};
-use super::runner::{CrossLayerRunner, TileBackend};
+use super::runner::{CrossLayerRunner, PackedGroup, TileBackend};
 use crate::config::{
     Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
     TrialEngine,
@@ -87,6 +87,17 @@ pub struct CampaignResult {
     /// Deterministic per seed, so the cycle-resume speedup is
     /// wall-clock-noise-free.
     pub rtl_cycles_stepped: u64,
+    /// Lane-cycles that carried a live (unretired) trial, over every RTL
+    /// cycle the campaign stepped. Scalar engine paths count one fully
+    /// occupied lane per cycle; lockstep/packed passes count their
+    /// active lanes per lockstep cycle. Deterministic per seed.
+    pub lane_cycles_filled: u64,
+    /// Lane-cycles of capacity paid for those same steps: lockstep and
+    /// packed passes charge `max(lanes, chunk width)` per lockstep
+    /// cycle, scalar paths one. `lane_cycles_filled / lane_cycles_stepped`
+    /// is the campaign's lane-occupancy metric — the figure cross-tile
+    /// packing exists to raise.
+    pub lane_cycles_stepped: u64,
     pub wall: Duration,
     pub per_layer: BTreeMap<usize, VulnEstimate>,
 }
@@ -95,6 +106,18 @@ impl CampaignResult {
     /// The vulnerability factor: AVF for RTL backends, PVF for SW-only.
     pub fn vf(&self) -> f64 {
         self.vuln.vf()
+    }
+
+    /// Lane occupancy of the campaign's RTL stepping: the fraction of
+    /// paid lane-cycles that carried a live trial (1.0 for purely scalar
+    /// engines, < 1.0 when lockstep lanes idle, 0.0 when nothing
+    /// stepped).
+    pub fn lane_occupancy(&self) -> f64 {
+        if self.lane_cycles_stepped == 0 {
+            0.0
+        } else {
+            self.lane_cycles_filled as f64 / self.lane_cycles_stepped as f64
+        }
     }
 }
 
@@ -105,6 +128,8 @@ impl CampaignResult {
         self.exposed_trials += other.exposed_trials;
         self.masked_trials += other.masked_trials;
         self.rtl_cycles_stepped += other.rtl_cycles_stepped;
+        self.lane_cycles_filled += other.lane_cycles_filled;
+        self.lane_cycles_stepped += other.lane_cycles_stepped;
         self.wall += other.wall;
         for (layer, v) in &other.per_layer {
             self.per_layer.entry(*layer).or_default().merge(v);
@@ -126,6 +151,8 @@ impl CampaignResult {
             exposed_trials: 0,
             masked_trials: 0,
             rtl_cycles_stepped: 0,
+            lane_cycles_filled: 0,
+            lane_cycles_stepped: 0,
             wall: Duration::ZERO,
             per_layer: BTreeMap::new(),
         }
@@ -368,6 +395,18 @@ impl TrialExecutor {
 /// trial of the chunk splices its own lane's result. Backends without
 /// [`TileBackend::supports_lane_lockstep`] fall back per trial —
 /// HDFIT to cycle-resume, the whole-SoC backend to full.
+///
+/// Under [`TileEngine::PackedLockstep`] the chunking becomes a
+/// **packer**: first form lane-lockstep's exact maximal same-tile runs
+/// (each at most `lanes` trials), then pack *whole* consecutive runs
+/// into one chunk while their lane total still fits — cross-tile groups
+/// stepped side by side by one packed pass
+/// ([`CrossLayerRunner::begin_packed_chunk`]). Packing whole runs (never
+/// splitting one) keeps the per-chunk cycle cost at
+/// `Σ_g adv_g + max_g(span_g)` vs lane-lockstep's
+/// `Σ_g (adv_g + span_g)`: never more, strictly fewer whenever at least
+/// two runs share a chunk. Fallback on non-mesh backends is identical
+/// to lane-lockstep's (per-trial cycle-resume, same trial order).
 #[allow(clippy::too_many_arguments)]
 fn run_rtl_batch(
     model: &Model,
@@ -387,8 +426,13 @@ fn run_rtl_batch(
     let lockstep = tile_engine == TileEngine::LaneLockstep
         && scope == OffloadScope::SingleTile
         && backend.supports_lane_lockstep();
-    let resumable = matches!(tile_engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
+    let packed = tile_engine == TileEngine::PackedLockstep
         && scope == OffloadScope::SingleTile
+        && backend.supports_lane_lockstep();
+    let resumable = matches!(
+        tile_engine,
+        TileEngine::CycleResume | TileEngine::LaneLockstep | TileEngine::PackedLockstep
+    ) && scope == OffloadScope::SingleTile
         && backend.supports_cycle_resume();
     let mut order: Vec<usize> = (0..batch.trials.len()).collect();
     if resumable {
@@ -399,8 +443,11 @@ fn run_rtl_batch(
     }
     let mut runner =
         CrossLayerRunner::with_engine(rtl_trial(batch, order[0]), backend, scope, tile_engine);
-    if lockstep {
-        // group the sorted order into same-tile chunks of <= lanes
+    runner.lane_capacity = lanes;
+    if lockstep || packed {
+        // form the maximal same-tile runs of the sorted order, <= lanes
+        // trials each — the lockstep chunks, and the packer's atoms
+        let mut runs: Vec<(usize, usize)> = Vec::new();
         let mut start = 0;
         while start < order.len() {
             let key = rtl_trial(batch, order[start]).tile_key();
@@ -411,18 +458,51 @@ fn run_rtl_batch(
             {
                 end += 1;
             }
-            runner.begin_chunk(
-                order[start..end]
-                    .iter()
-                    .map(|&i| &rtl_trial(batch, i).plan)
-                    .collect(),
-            );
-            for (lane, &i) in order[start..end].iter().enumerate() {
+            runs.push((start, end));
+            start = end;
+        }
+        let mut ri = 0;
+        while ri < runs.len() {
+            // packed: greedily pack whole consecutive runs while the
+            // lane total fits; lockstep: exactly one run per chunk
+            let mut rj = ri + 1;
+            if packed {
+                let mut total = runs[ri].1 - runs[ri].0;
+                while rj < runs.len() && total + (runs[rj].1 - runs[rj].0) <= lanes {
+                    total += runs[rj].1 - runs[rj].0;
+                    rj += 1;
+                }
+                runner.begin_packed_chunk(
+                    runs[ri..rj]
+                        .iter()
+                        .map(|&(s, e)| {
+                            let t0 = rtl_trial(batch, order[s]);
+                            PackedGroup {
+                                tile_i: t0.tile_i,
+                                tile_j: t0.tile_j,
+                                plans: order[s..e]
+                                    .iter()
+                                    .map(|&i| &rtl_trial(batch, i).plan)
+                                    .collect(),
+                            }
+                        })
+                        .collect(),
+                );
+            } else {
+                runner.begin_chunk(
+                    order[runs[ri].0..runs[ri].1]
+                        .iter()
+                        .map(|&i| &rtl_trial(batch, i).plan)
+                        .collect(),
+                );
+            }
+            let (cs, ce) = (runs[ri].0, runs[rj - 1].1);
+            for (lane, &i) in order[cs..ce].iter().enumerate() {
                 runner.arm_lane(rtl_trial(batch, i), lane);
                 runner.backend.reset();
                 record(result, layer, run_rtl_trial(model, plan, &mut runner, engine));
             }
-            start = end;
+            ri = rj;
         }
     } else {
         if resumable {
@@ -445,6 +525,8 @@ fn run_rtl_batch(
         }
     }
     result.rtl_cycles_stepped += runner.rtl_cycles;
+    result.lane_cycles_filled += runner.lane_cycles_filled;
+    result.lane_cycles_stepped += runner.lane_cycles_stepped;
 }
 
 fn rtl_trial(batch: &SiteBatch, i: usize) -> &TrialFault {
@@ -781,21 +863,73 @@ mod tests {
     }
 
     #[test]
+    fn packed_lockstep_agrees_and_steps_fewer_than_lane_lockstep() {
+        // the packed acceptance pin: bit-identical counts, strictly
+        // fewer RTL cycles than same-tile lockstep, and strictly better
+        // lane occupancy. lanes=16 with faults_per_layer=16 lets the
+        // packer merge every batch's runs into one chunk, so any batch
+        // whose trials touch >= 2 tiles (the Linear site has a 1x2
+        // grid) pays max(span) instead of sum(span).
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.lanes = 16;
+        cfg.tile_engine = TileEngine::Full;
+        let full = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::LaneLockstep;
+        let lock = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::PackedLockstep;
+        let packed = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        for (r, label) in [(&lock, "lane-lockstep"), (&packed, "packed-lockstep")] {
+            assert_eq!(r.vuln.trials, full.vuln.trials, "{label}");
+            assert_eq!(r.vuln.critical, full.vuln.critical, "{label}");
+            assert_eq!(r.exposed_trials, full.exposed_trials, "{label}");
+            assert_eq!(r.masked_trials, full.masked_trials, "{label}");
+        }
+        assert!(
+            packed.rtl_cycles_stepped < lock.rtl_cycles_stepped,
+            "packed must step fewer RTL cycles than lockstep: {} vs {}",
+            packed.rtl_cycles_stepped,
+            lock.rtl_cycles_stepped
+        );
+        assert!(
+            packed.lane_occupancy() > lock.lane_occupancy(),
+            "packed must fill lanes better than lockstep: {} vs {}",
+            packed.lane_occupancy(),
+            lock.lane_occupancy()
+        );
+        // a single-lane packed campaign degenerates to cycle-resume
+        // exactly, cycle counts included
+        cfg.tile_engine = TileEngine::CycleResume;
+        let resume = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        cfg.tile_engine = TileEngine::PackedLockstep;
+        cfg.lanes = 1;
+        let one = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(one.vuln.critical, resume.vuln.critical);
+        assert_eq!(one.exposed_trials, resume.exposed_trials);
+        assert_eq!(one.rtl_cycles_stepped, resume.rtl_cycles_stepped);
+    }
+
+    #[test]
     fn hdfit_lane_lockstep_falls_back_to_cycle_resume() {
         // HDFIT's instrumented kernels hook one mesh instance, so it
-        // rejects lane batching; the gate must degrade to cycle-resume
-        // with identical counts AND identical cycle accounting.
+        // rejects lane batching; both lane-batched gates must degrade
+        // to cycle-resume with identical counts AND identical cycle
+        // accounting.
         let model = models::quicknet(5);
-        let (mesh_cfg, mut cfg) = small_cfg(Backend::Hdfit);
-        cfg.tile_engine = TileEngine::LaneLockstep;
-        let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
-        cfg.tile_engine = TileEngine::CycleResume;
-        let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
-        assert_eq!(a.vuln.trials, b.vuln.trials);
-        assert_eq!(a.vuln.critical, b.vuln.critical);
-        assert_eq!(a.exposed_trials, b.exposed_trials);
-        assert_eq!(a.masked_trials, b.masked_trials);
-        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped);
+        for engine in [TileEngine::LaneLockstep, TileEngine::PackedLockstep] {
+            let (mesh_cfg, mut cfg) = small_cfg(Backend::Hdfit);
+            cfg.tile_engine = engine;
+            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            cfg.tile_engine = TileEngine::CycleResume;
+            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(a.vuln.trials, b.vuln.trials, "{engine}");
+            assert_eq!(a.vuln.critical, b.vuln.critical, "{engine}");
+            assert_eq!(a.exposed_trials, b.exposed_trials, "{engine}");
+            assert_eq!(a.masked_trials, b.masked_trials, "{engine}");
+            assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{engine}");
+        }
     }
 
     fn ws_mesh_cfg() -> MeshConfig {
@@ -887,6 +1021,38 @@ mod tests {
     }
 
     #[test]
+    fn ws_packed_lockstep_agrees_and_steps_fewer_than_lane_lockstep() {
+        // the WS mirror of the packed acceptance pin: per-group prefix
+        // psums and pass goldens must reproduce lockstep's counts while
+        // cross-tile chunks retire the shorter schedules early
+        let model = models::quicknet(5);
+        let (_, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.lanes = 16;
+        cfg.tile_engine = TileEngine::LaneLockstep;
+        let lock = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        cfg.tile_engine = TileEngine::PackedLockstep;
+        let packed = run_campaign(&model, &ws_mesh_cfg(), &cfg).unwrap();
+        assert_eq!(packed.vuln.trials, lock.vuln.trials);
+        assert_eq!(packed.vuln.critical, lock.vuln.critical);
+        assert_eq!(packed.exposed_trials, lock.exposed_trials);
+        assert_eq!(packed.masked_trials, lock.masked_trials);
+        assert!(
+            packed.rtl_cycles_stepped < lock.rtl_cycles_stepped,
+            "WS packed must step fewer RTL cycles: {} vs {}",
+            packed.rtl_cycles_stepped,
+            lock.rtl_cycles_stepped
+        );
+        assert!(
+            packed.lane_occupancy() > lock.lane_occupancy(),
+            "WS packed must fill lanes better: {} vs {}",
+            packed.lane_occupancy(),
+            lock.lane_occupancy()
+        );
+    }
+
+    #[test]
     fn ws_full_soc_campaign_runs_and_counts() {
         // WS + FullSoc used to be a config-level error; the
         // schedule-indexable controller executes it end-to-end now
@@ -937,24 +1103,26 @@ mod tests {
 
     #[test]
     fn full_soc_lane_lockstep_falls_back_to_cycle_resume() {
-        // one persistent chip cannot carry N lanes; the gate must
-        // degrade to cycle-resume with identical counts AND identical
-        // cycle accounting, both dataflows
+        // one persistent chip cannot carry N lanes; both lane-batched
+        // gates must degrade to cycle-resume with identical counts AND
+        // identical cycle accounting, both dataflows
         let model = models::quicknet(5);
         for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
-            let (_, mut cfg) = small_cfg(Backend::FullSoc);
-            let mesh_cfg = MeshConfig { dim: 4, dataflow };
-            cfg.faults_per_layer = 2;
-            cfg.inputs = 1;
-            cfg.tile_engine = TileEngine::LaneLockstep;
-            let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
-            cfg.tile_engine = TileEngine::CycleResume;
-            let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
-            assert_eq!(a.vuln.trials, b.vuln.trials, "{dataflow}");
-            assert_eq!(a.vuln.critical, b.vuln.critical, "{dataflow}");
-            assert_eq!(a.exposed_trials, b.exposed_trials, "{dataflow}");
-            assert_eq!(a.masked_trials, b.masked_trials, "{dataflow}");
-            assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+            for engine in [TileEngine::LaneLockstep, TileEngine::PackedLockstep] {
+                let (_, mut cfg) = small_cfg(Backend::FullSoc);
+                let mesh_cfg = MeshConfig { dim: 4, dataflow };
+                cfg.faults_per_layer = 2;
+                cfg.inputs = 1;
+                cfg.tile_engine = engine;
+                let a = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+                cfg.tile_engine = TileEngine::CycleResume;
+                let b = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+                assert_eq!(a.vuln.trials, b.vuln.trials, "{dataflow}/{engine}");
+                assert_eq!(a.vuln.critical, b.vuln.critical, "{dataflow}/{engine}");
+                assert_eq!(a.exposed_trials, b.exposed_trials, "{dataflow}/{engine}");
+                assert_eq!(a.masked_trials, b.masked_trials, "{dataflow}/{engine}");
+                assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}/{engine}");
+            }
         }
     }
 

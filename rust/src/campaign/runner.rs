@@ -19,8 +19,8 @@ use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
 use crate::mat::{Mat, MatView, MatViewMut};
 use crate::mesh::driver::{
-    lockstep_resumed, os_matmul_cycles, tile_grid, tiled_matmul_os, tiled_matmul_ws_with,
-    ws_matmul_cycles, MatmulDriver,
+    lockstep_resumed, os_matmul_cycles, packed_lockstep_resumed, tile_grid, tiled_matmul_os,
+    tiled_matmul_ws_with, ws_matmul_cycles, LaneGroup, MatmulDriver,
 };
 use crate::mesh::hdfit::InstrumentedMesh;
 
@@ -247,6 +247,20 @@ impl<'a> TileBackend<'a> {
     }
 }
 
+/// One lane group of a packed-lockstep chunk, as the campaign's packer
+/// hands it to [`CrossLayerRunner::begin_packed_chunk`]: a maximal
+/// same-tile run of trials (exactly the runs lane-lockstep's chunking
+/// would form) carrying its **sampled** tile coordinates — the runner
+/// clamps them to each call's actual tile grid, exactly as the
+/// single-trial paths do.
+pub struct PackedGroup<'a> {
+    pub tile_i: usize,
+    pub tile_j: usize,
+    /// One fault plan per lane of the group, ascending first-effect
+    /// cycle (the batch sort order).
+    pub plans: Vec<&'a FaultPlan>,
+}
+
 /// GEMM hook that performs the cross-layer offload for one trial.
 ///
 /// A runner is built once per **site batch** and re-armed per trial
@@ -273,6 +287,20 @@ pub struct CrossLayerRunner<'a> {
     /// advances plus (full or resumed) tile runs — the campaign's
     /// `rtl_cycles_stepped` accounting.
     pub rtl_cycles: u64,
+    /// Lane capacity the occupancy accounting measures against — the
+    /// campaign's configured lane count (chunks are at most this wide).
+    /// Direct callers may leave the default 1: the accounting clamps it
+    /// up to the armed chunk's width.
+    pub lane_capacity: usize,
+    /// Lane-cycles carrying live trial work: for every RTL cycle
+    /// stepped, the number of lanes with an unretired trial on them
+    /// (scalar engine paths count as one fully-occupied lane).
+    pub lane_cycles_filled: u64,
+    /// Lane-cycles of capacity paid for those same steps: lockstep and
+    /// packed passes charge `max(lane_capacity, chunk width)` per cycle,
+    /// scalar paths one. `filled / stepped` is the campaign's
+    /// lane-occupancy metric.
+    pub lane_cycles_stepped: u64,
     /// Reusable result tile shared by every trial in a batch (DIM x DIM
     /// under OS; M x DIM under WS — reshaped in place).
     scratch: Mat<i32>,
@@ -310,6 +338,28 @@ pub struct CrossLayerRunner<'a> {
     /// state differently (per-lane `takens` vs the scratch counter), so
     /// one runner must never interleave them on the same cursor.
     cursor_engine: Option<TileEngine>,
+    /// Packed-lockstep only: the lane groups of the current chunk
+    /// ([`CrossLayerRunner::begin_packed_chunk`]) — whole same-tile
+    /// runs packed side by side; global lane `l` belongs to group
+    /// `lane_group[l]`.
+    packed_groups: Vec<PackedGroup<'a>>,
+    /// Packed-lockstep only: global lane -> group index of the chunk.
+    lane_group: Vec<usize>,
+    /// Packed-lockstep only: set once the chunk's packed pass ran;
+    /// later trials of the chunk reuse the computed lane results.
+    packed_done: bool,
+    /// Packed-lockstep only: one golden cursor per group. Slots are
+    /// recycled across chunks without resetting — `advance_golden`
+    /// restarts a stale trajectory on key mismatch or rewind, so a
+    /// leftover snapshot can cost cycles but never correctness.
+    packed_cursors: Vec<CycleCursor>,
+    /// Packed-lockstep WS only: per-group psum column entering the
+    /// offloaded pass (the [`CrossLayerRunner::ws_d`] peer, one per
+    /// group since a packed chunk spans weight tiles).
+    packed_ws_d: Vec<Mat<i32>>,
+    /// Packed-lockstep WS only: per-group software golden of the pass
+    /// (the delta-splice reference for that group's trials).
+    packed_ws_gold: Vec<Mat<i32>>,
 }
 
 impl<'a> CrossLayerRunner<'a> {
@@ -336,6 +386,9 @@ impl<'a> CrossLayerRunner<'a> {
             hit: false,
             exposed: false,
             rtl_cycles: 0,
+            lane_capacity: 1,
+            lane_cycles_filled: 0,
+            lane_cycles_stepped: 0,
             scratch: Mat::zeros(dim, dim),
             drv: DriverScratch::new(dim),
             cursor: CycleCursor::new(),
@@ -348,6 +401,16 @@ impl<'a> CrossLayerRunner<'a> {
             lane_mesh: LaneMesh::new(dim, dataflow),
             lane_outs: Vec::new(),
             cursor_engine: None,
+            packed_groups: vec![PackedGroup {
+                tile_i: trial.tile_i,
+                tile_j: trial.tile_j,
+                plans: vec![&trial.plan],
+            }],
+            lane_group: vec![0],
+            packed_done: false,
+            packed_cursors: Vec::new(),
+            packed_ws_d: Vec::new(),
+            packed_ws_gold: Vec::new(),
         }
     }
 
@@ -365,6 +428,34 @@ impl<'a> CrossLayerRunner<'a> {
         self.chunk_plans.push(&trial.plan);
         self.lane = 0;
         self.lockstep_done = false;
+        // the packed peer of the single-trial chunk: one one-lane group
+        self.packed_groups.clear();
+        self.packed_groups.push(PackedGroup {
+            tile_i: trial.tile_i,
+            tile_j: trial.tile_j,
+            plans: vec![&trial.plan],
+        });
+        self.lane_group.clear();
+        self.lane_group.push(0);
+        self.packed_done = false;
+    }
+
+    /// Start a packed-lockstep chunk: whole same-tile runs (each a
+    /// [`PackedGroup`]) laid side by side, `Σ_g plans_g` lanes in total;
+    /// global lane `l` of the next packed pass steps the `l`-th plan in
+    /// group-then-lane order. Every plan must come from the same site
+    /// batch (the executor's packer guarantees it; operands of different
+    /// *tiles* may differ — that is the point). The pass itself runs
+    /// lazily on the chunk's first armed trial.
+    pub fn begin_packed_chunk(&mut self, groups: Vec<PackedGroup<'a>>) {
+        debug_assert!(!groups.is_empty(), "a packed chunk needs at least one group");
+        self.lane_group.clear();
+        for (gi, g) in groups.iter().enumerate() {
+            debug_assert!(!g.plans.is_empty(), "a packed group needs at least one trial");
+            self.lane_group.extend(std::iter::repeat(gi).take(g.plans.len()));
+        }
+        self.packed_groups = groups;
+        self.packed_done = false;
     }
 
     /// Start a lane-lockstep chunk: lane `l` of the next lockstep pass
@@ -379,11 +470,16 @@ impl<'a> CrossLayerRunner<'a> {
     }
 
     /// Re-arm for trial `lane` of the current chunk (see
-    /// [`CrossLayerRunner::begin_chunk`]): like
+    /// [`CrossLayerRunner::begin_chunk`] /
+    /// [`CrossLayerRunner::begin_packed_chunk`] — `lane` is global,
+    /// group-then-lane order, for packed chunks): like
     /// [`CrossLayerRunner::arm`] but keeping the chunk's plans and its
     /// already-computed lane results.
     pub fn arm_lane(&mut self, trial: &'a TrialFault, lane: usize) {
-        debug_assert!(lane < self.chunk_plans.len(), "lane outside the armed chunk");
+        debug_assert!(
+            lane < self.chunk_plans.len().max(self.lane_group.len()),
+            "lane outside the armed chunk"
+        );
         self.trial = trial;
         self.hit = false;
         self.exposed = false;
@@ -398,6 +494,14 @@ impl<'a> CrossLayerRunner<'a> {
             "lockstep and cycle-resume must not interleave on one runner's cursor"
         );
         self.cursor_engine = Some(engine);
+    }
+
+    /// Account RTL cycles stepped on a single-lane (scalar) engine path:
+    /// one lane of capacity, fully occupied.
+    fn add_scalar_cycles(&mut self, cycles: u64) {
+        self.rtl_cycles += cycles;
+        self.lane_cycles_filled += cycles;
+        self.lane_cycles_stepped += cycles;
     }
 
     /// Trial-lockstep tile run (PR 6 tentpole): on the chunk's first
@@ -440,9 +544,196 @@ impl<'a> CrossLayerRunner<'a> {
             );
             // the suffix is paid ONCE per chunk — the lockstep speedup
             self.rtl_cycles += adv + stepped;
+            // occupancy: the golden advance is scalar (one full lane);
+            // the lockstep span fills `width` of `capacity` lanes
+            let width = self.chunk_plans.len() as u64;
+            let cap = (self.lane_capacity as u64).max(width);
+            self.lane_cycles_filled += adv + width * stepped;
+            self.lane_cycles_stepped += adv + cap * stepped;
             self.lockstep_done = true;
         }
         self.scratch.clone_from(&self.lane_outs[self.lane]);
+    }
+
+    /// Cross-tile packed-lockstep pass (the PR 9 tentpole): on the
+    /// chunk's first armed trial, advance each group's OWN golden cursor
+    /// to that group's minimum first-effect cycle, then step ALL groups'
+    /// tile suffixes side by side in one [`packed_lockstep_resumed`]
+    /// pass; later trials of the chunk read their lane for free. Sampled
+    /// tile coordinates are clamped to the call's actual grid here,
+    /// exactly like the single-trial paths — two groups may clamp onto
+    /// the same actual tile, which is why each group owns a cursor slot
+    /// instead of sharing a tile-keyed one. Under WS each group also
+    /// gets its own prefix psum + pass golden (`packed_ws_d` /
+    /// `packed_ws_gold`), since a packed chunk spans weight tiles.
+    /// Callers must gate on [`TileBackend::supports_lane_lockstep`].
+    fn run_packed_pass(
+        &mut self,
+        a_full: MatView<i8>,
+        b_full: MatView<i8>,
+        d_full: MatView<i32>,
+        (m, k, n): (usize, usize, usize),
+    ) {
+        self.note_cursor_engine(TileEngine::PackedLockstep);
+        let dim = self.backend.dim();
+        let dataflow = self.backend.dataflow();
+        let (tiles_i, tiles_j) = tile_grid(dataflow, dim, m, k, n);
+        let ngroups = self.packed_groups.len();
+        if self.packed_cursors.len() < ngroups {
+            self.packed_cursors.resize_with(ngroups, CycleCursor::new);
+        }
+        // clamp each group's sampled tile to this call's actual grid
+        let keys: Vec<(usize, usize)> = self
+            .packed_groups
+            .iter()
+            .map(|g| (g.tile_i.min(tiles_i - 1), g.tile_j.min(tiles_j - 1)))
+            .collect();
+        let min_fes: Vec<u64> = self
+            .packed_groups
+            .iter()
+            .map(|g| {
+                g.plans
+                    .iter()
+                    .map(|p| self.backend.first_effect_cycle(p))
+                    .min()
+                    .expect("a packed group must not be empty")
+            })
+            .collect();
+        if dataflow == Dataflow::WeightStationary {
+            if self.packed_ws_d.len() < ngroups {
+                self.packed_ws_d.resize_with(ngroups, Mat::default);
+                self.packed_ws_gold.resize_with(ngroups, Mat::default);
+            }
+            for gi in 0..ngroups {
+                let (ti, tj) = keys[gi];
+                let (ri, cj) = (ti * dim, tj * dim);
+                let ncols = dim.min(n - cj);
+                let a_t = a_full.sub(0, ri, m, dim);
+                let w_t = b_full.sub(ri, cj, dim, dim);
+                // the group's psum column entering the pass: bias +
+                // every k-tile before the target (see run_ws_tile)
+                self.packed_ws_d[gi].reset(m, dim);
+                for r in 0..m {
+                    let row = self.packed_ws_d[gi].row_mut(r);
+                    for c in 0..ncols {
+                        let mut acc = d_full.at(r, cj + c);
+                        for kk in 0..ri {
+                            acc = acc.wrapping_add(
+                                a_full.at(r, kk) as i32 * b_full.at(kk, cj + c) as i32,
+                            );
+                        }
+                        row[c] = acc;
+                    }
+                }
+                // software golden of the group's pass
+                self.packed_ws_gold[gi].reset(m, dim);
+                for r in 0..m {
+                    for c in 0..dim {
+                        let mut acc = self.packed_ws_d[gi].at(r, c);
+                        for x in 0..dim {
+                            acc = acc.wrapping_add(a_t.at(r, x) as i32 * w_t.at(x, c) as i32);
+                        }
+                        self.packed_ws_gold[gi].set(r, c, acc);
+                    }
+                }
+            }
+        }
+        let mut adv_total = 0u64;
+        {
+            let TileBackend::Mesh(mesh) = &mut self.backend else {
+                unreachable!("packed-lockstep is mesh-only: gate on supports_lane_lockstep")
+            };
+            for gi in 0..ngroups {
+                let (ti, tj) = keys[gi];
+                let (ri, cj) = (ti * dim, tj * dim);
+                let (a_t, b_t, d_t) = match dataflow {
+                    Dataflow::OutputStationary => (
+                        a_full.sub(ri, 0, dim, k),
+                        b_full.sub(0, cj, k, dim),
+                        d_full.sub(ri, cj, dim, dim),
+                    ),
+                    Dataflow::WeightStationary => (
+                        a_full.sub(0, ri, m, dim),
+                        b_full.sub(ri, cj, dim, dim),
+                        self.packed_ws_d[gi].view(),
+                    ),
+                };
+                adv_total += MatmulDriver::new(*mesh).advance_golden(
+                    a_t,
+                    b_t,
+                    d_t,
+                    (ti, tj),
+                    min_fes[gi],
+                    &mut self.packed_cursors[gi],
+                    &mut self.drv,
+                );
+            }
+        }
+        let mut groups: Vec<LaneGroup<'_>> = Vec::with_capacity(ngroups);
+        for gi in 0..ngroups {
+            let (ti, tj) = keys[gi];
+            let (ri, cj) = (ti * dim, tj * dim);
+            let (a_t, b_t, d_t) = match dataflow {
+                Dataflow::OutputStationary => (
+                    a_full.sub(ri, 0, dim, k),
+                    b_full.sub(0, cj, k, dim),
+                    d_full.sub(ri, cj, dim, dim),
+                ),
+                Dataflow::WeightStationary => (
+                    a_full.sub(0, ri, m, dim),
+                    b_full.sub(ri, cj, dim, dim),
+                    self.packed_ws_d[gi].view(),
+                ),
+            };
+            groups.push(LaneGroup {
+                a: a_t,
+                b: b_t,
+                d: d_t,
+                plans: self.packed_groups[gi].plans.clone(),
+                cur: &self.packed_cursors[gi],
+            });
+        }
+        let (stepped, filled) = packed_lockstep_resumed(
+            &mut self.lane_mesh,
+            &groups,
+            &mut self.lane_outs,
+            &mut self.drv,
+        );
+        // every group's golden advance is scalar; the packed span is
+        // paid ONCE — `max_g(span_g)`, never more than lane-lockstep's
+        // `Σ_g span_g` over the same runs
+        self.rtl_cycles += adv_total + stepped;
+        let cap = (self.lane_capacity as u64).max(self.lane_group.len() as u64);
+        self.lane_cycles_filled += adv_total + filled;
+        self.lane_cycles_stepped += adv_total + cap * stepped;
+        self.packed_done = true;
+    }
+
+    /// Delta-splice one WS pass back into the layer accumulator:
+    /// `out += rtl - gold`, touching only elements where the RTL pass
+    /// diverged from its software golden. Returns whether anything
+    /// changed (the exposure signal).
+    fn ws_delta_splice(
+        rtl: &Mat<i32>,
+        gold: &Mat<i32>,
+        out: &mut [i32],
+        (m, n): (usize, usize),
+        cj: usize,
+        ncols: usize,
+    ) -> bool {
+        let mut changed = false;
+        for r in 0..m {
+            let rtl = rtl.row(r);
+            let gold = gold.row(r);
+            let dst = &mut out[r * n + cj..r * n + cj + ncols];
+            for c in 0..ncols {
+                if rtl[c] != gold[c] {
+                    changed = true;
+                    dst[c] = dst[c].wrapping_add(rtl[c].wrapping_sub(gold[c]));
+                }
+            }
+        }
+        changed
     }
 
     /// ENFOR-SA OS single-tile offload: the DIM-padded output tile is a
@@ -465,16 +756,25 @@ impl<'a> CrossLayerRunner<'a> {
         let a_t = a_full.sub(ri, 0, dim, k);
         let b_t = b_full.sub(0, cj, k, dim);
         let d_t = d_full.sub(ri, cj, dim, dim);
-        if self.engine == TileEngine::LaneLockstep && self.backend.supports_lane_lockstep() {
+        if self.engine == TileEngine::PackedLockstep && self.backend.supports_lane_lockstep() {
+            // packed-lockstep: ALL groups' suffixes step side by side
+            // once through the lane mesh; this trial reads its lane
+            if !self.packed_done {
+                self.run_packed_pass(a_full, b_full, d_full, (m, k, n));
+            }
+            self.scratch.clone_from(&self.lane_outs[self.lane]);
+        } else if self.engine == TileEngine::LaneLockstep && self.backend.supports_lane_lockstep() {
             // trial-lockstep: the whole chunk's suffix steps once
             // through the lane mesh; this trial reads its lane
             self.run_lockstep_tile(a_t, b_t, d_t, (ti, tj));
-        } else if matches!(self.engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
-            && self.backend.supports_cycle_resume()
+        } else if matches!(
+            self.engine,
+            TileEngine::CycleResume | TileEngine::LaneLockstep | TileEngine::PackedLockstep
+        ) && self.backend.supports_cycle_resume()
         {
             // cycle-resume: skip the golden prefix of the tile — the
             // batch-shared cursor advances it once per tile (also the
-            // lane-lockstep fallback on the HDFIT backend)
+            // lockstep engines' fallback on the HDFIT/SoC backends)
             self.note_cursor_engine(TileEngine::CycleResume);
             match self.backend.run_tile_resumed(
                 a_t,
@@ -486,7 +786,7 @@ impl<'a> CrossLayerRunner<'a> {
                 &mut self.scratch,
                 &mut self.drv,
             ) {
-                Ok(cycles) => self.rtl_cycles += cycles,
+                Ok(cycles) => self.add_scalar_cycles(cycles),
                 Err(e) => panic!("resumed tile offload failed for [{}]: {e:#}", self.trial),
             }
         } else {
@@ -494,7 +794,7 @@ impl<'a> CrossLayerRunner<'a> {
                 .backend
                 .run_tile_with(a_t, b_t, d_t, &self.trial.plan, &mut self.scratch, &mut self.drv)
             {
-                Ok(cycles) => self.rtl_cycles += cycles,
+                Ok(cycles) => self.add_scalar_cycles(cycles),
                 Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
             }
         }
@@ -538,6 +838,20 @@ impl<'a> CrossLayerRunner<'a> {
         let a_t = a_full.sub(0, ri, m, dim);
         let w_t = b_full.sub(ri, cj, dim, dim);
         let ncols = dim.min(n - cj);
+        if self.engine == TileEngine::PackedLockstep && self.backend.supports_lane_lockstep() {
+            // packed-lockstep: the pass computed per-group prefix psums
+            // and goldens (`packed_ws_d`/`packed_ws_gold`) — the
+            // single-slot `ws_key` cache below never runs on this path
+            if !self.packed_done {
+                self.run_packed_pass(a_full, b_full, d_full, (m, _k, n));
+            }
+            self.scratch.clone_from(&self.lane_outs[self.lane]);
+            let gold = &self.packed_ws_gold[self.lane_group[self.lane]];
+            if Self::ws_delta_splice(&self.scratch, gold, out, (m, n), cj, ncols) {
+                self.exposed = true;
+            }
+            return;
+        }
         if self.ws_key != Some((ti, tj)) {
             // first trial of this batch on this tile: compute the
             // software prefix psum and pass golden once; later trials
@@ -574,8 +888,10 @@ impl<'a> CrossLayerRunner<'a> {
             let ws_d = std::mem::take(&mut self.ws_d);
             self.run_lockstep_tile(a_t, w_t, ws_d.view(), (ti, tj));
             self.ws_d = ws_d;
-        } else if matches!(self.engine, TileEngine::CycleResume | TileEngine::LaneLockstep)
-            && self.backend.supports_cycle_resume()
+        } else if matches!(
+            self.engine,
+            TileEngine::CycleResume | TileEngine::LaneLockstep | TileEngine::PackedLockstep
+        ) && self.backend.supports_cycle_resume()
         {
             self.note_cursor_engine(TileEngine::CycleResume);
             match self.backend.run_tile_resumed(
@@ -588,7 +904,7 @@ impl<'a> CrossLayerRunner<'a> {
                 &mut self.scratch,
                 &mut self.drv,
             ) {
-                Ok(cycles) => self.rtl_cycles += cycles,
+                Ok(cycles) => self.add_scalar_cycles(cycles),
                 Err(e) => panic!("resumed tile offload failed for [{}]: {e:#}", self.trial),
             }
         } else {
@@ -600,24 +916,12 @@ impl<'a> CrossLayerRunner<'a> {
                 &mut self.scratch,
                 &mut self.drv,
             ) {
-                Ok(cycles) => self.rtl_cycles += cycles,
+                Ok(cycles) => self.add_scalar_cycles(cycles),
                 Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
             }
         }
         // delta-splice: native + (rtl - gold); untouched where equal
-        let mut changed = false;
-        for r in 0..m {
-            let rtl = self.scratch.row(r);
-            let gold = self.ws_gold.row(r);
-            let dst = &mut out[r * n + cj..r * n + cj + ncols];
-            for c in 0..ncols {
-                if rtl[c] != gold[c] {
-                    changed = true;
-                    dst[c] = dst[c].wrapping_add(rtl[c].wrapping_sub(gold[c]));
-                }
-            }
-        }
-        if changed {
+        if Self::ws_delta_splice(&self.scratch, &self.ws_gold, out, (m, n), cj, ncols) {
             self.exposed = true;
         }
     }
@@ -662,10 +966,11 @@ impl GemmHook for CrossLayerRunner<'_> {
                 .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
                 .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
             let tiles = (tiles_i * tiles_j) as u64;
-            self.rtl_cycles += match dataflow {
+            let cycles = match dataflow {
                 Dataflow::OutputStationary => (tiles + 1) * os_matmul_cycles(dim, k),
                 Dataflow::WeightStationary => tiles * ws_matmul_cycles(dim, m),
             };
+            self.add_scalar_cycles(cycles);
             self.exposed = cf.data() != &out[..];
             out.copy_from_slice(cf.data());
             return true;
@@ -1192,16 +1497,21 @@ mod tests {
 
     #[test]
     fn lockstep_single_trial_arm_matches_cycle_resume_cycles() {
-        // Legacy arm() under lane-lockstep = a one-lane chunk per trial:
-        // bit-identical results and EXACTLY the cycle-resume cycle count
-        // (one lane pays the same advance + suffix as a resumed trial).
+        // Legacy arm() under lane-lockstep OR packed-lockstep = a
+        // one-lane chunk per trial: bit-identical results and EXACTLY
+        // the cycle-resume cycle count (one lane pays the same advance +
+        // suffix as a resumed trial).
         let model = models::quicknet(5);
         let mut rng = Rng::new(87);
         let x = synthetic_input(&model.input_shape, &mut rng);
         let trials = [a_trial(2), a_trial(20)];
         let mut outs = Vec::new();
         let mut cycles = Vec::new();
-        for engine in [TileEngine::CycleResume, TileEngine::LaneLockstep] {
+        for engine in [
+            TileEngine::CycleResume,
+            TileEngine::LaneLockstep,
+            TileEngine::PackedLockstep,
+        ] {
             let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
             let mut r = CrossLayerRunner::with_engine(
                 &trials[0],
@@ -1222,6 +1532,102 @@ mod tests {
         }
         assert_eq!(outs[0], outs[1], "one-lane lockstep != cycle-resume");
         assert_eq!(cycles[0], cycles[1], "one-lane lockstep cycle count");
+        assert_eq!(outs[0], outs[2], "one-lane packed != cycle-resume");
+        assert_eq!(cycles[0], cycles[2], "one-lane packed cycle count");
+    }
+
+    #[test]
+    fn packed_chunk_matches_full_runners_and_beats_lane_lockstep() {
+        // The packed-lockstep contract, both dataflows: whole same-tile
+        // runs packed side by side in ONE chunk must reproduce fresh
+        // full-engine runners bit-exactly (output AND exposure) while
+        // stepping strictly fewer RTL cycles than lane-lockstep paying
+        // each run's suffix separately — packed pays max over runs, not
+        // sum — and at strictly better lane occupancy.
+        fn tile_trial(tile_i: usize, tile_j: usize, cycle: u64) -> TrialFault {
+            TrialFault::single(
+                GemmSiteId { layer: 1, ordinal: 0 },
+                tile_i,
+                tile_j,
+                Fault::new(0, 0, SignalKind::Acc, 30, cycle),
+            )
+        }
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let model = models::quicknet(5);
+            let mut rng = Rng::new(88);
+            let x = synthetic_input(&model.input_shape, &mut rng);
+            // two maximal same-tile runs: [trial 0, trial 1] and [trial 2]
+            let trials = [tile_trial(0, 0, 2), tile_trial(0, 0, 20), tile_trial(0, 1, 5)];
+            let runs: [&[usize]; 2] = [&[0, 1], &[2]];
+
+            let mut full = Vec::new();
+            for t in &trials {
+                let mut mesh = Mesh::new(8, dataflow);
+                let mut r = CrossLayerRunner::new(
+                    t,
+                    TileBackend::Mesh(&mut mesh),
+                    OffloadScope::SingleTile,
+                );
+                let out = model.forward(&x, Some(&mut r));
+                full.push((out, r.exposed));
+            }
+
+            // lane-lockstep baseline: one chunk per same-tile run
+            let mut mesh = Mesh::new(8, dataflow);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+                TileEngine::LaneLockstep,
+            );
+            r.lane_capacity = 3;
+            for run in runs {
+                r.begin_chunk(run.iter().map(|&i| &trials[i].plan).collect());
+                for (lane, &i) in run.iter().enumerate() {
+                    r.arm_lane(&trials[i], lane);
+                    r.backend.reset();
+                    let _ = model.forward(&x, Some(&mut r));
+                }
+            }
+            let lockstep_cycles = r.rtl_cycles;
+            let lockstep_occ = r.lane_cycles_filled as f64 / r.lane_cycles_stepped as f64;
+
+            // packed: both runs side by side in ONE chunk
+            let mut mesh = Mesh::new(8, dataflow);
+            let mut r = CrossLayerRunner::with_engine(
+                &trials[0],
+                TileBackend::Mesh(&mut mesh),
+                OffloadScope::SingleTile,
+                TileEngine::PackedLockstep,
+            );
+            r.lane_capacity = 3;
+            r.begin_packed_chunk(vec![
+                PackedGroup {
+                    tile_i: 0,
+                    tile_j: 0,
+                    plans: vec![&trials[0].plan, &trials[1].plan],
+                },
+                PackedGroup { tile_i: 0, tile_j: 1, plans: vec![&trials[2].plan] },
+            ]);
+            for (lane, t) in trials.iter().enumerate() {
+                r.arm_lane(t, lane);
+                r.backend.reset();
+                let out = model.forward(&x, Some(&mut r));
+                assert_eq!(out, full[lane].0, "{dataflow} trial {lane} output");
+                assert_eq!(r.exposed, full[lane].1, "{dataflow} trial {lane} exposure");
+            }
+            assert!(
+                r.rtl_cycles < lockstep_cycles,
+                "{dataflow}: packed stepped {} cycles, lane-lockstep {}",
+                r.rtl_cycles,
+                lockstep_cycles
+            );
+            let packed_occ = r.lane_cycles_filled as f64 / r.lane_cycles_stepped as f64;
+            assert!(
+                packed_occ > lockstep_occ,
+                "{dataflow}: packed occupancy {packed_occ} must beat lockstep {lockstep_occ}"
+            );
+        }
     }
 
     #[test]

@@ -157,7 +157,7 @@ impl std::fmt::Display for TrialEngine {
 /// How the offloaded RTL tile itself is stepped per trial.
 ///
 /// CLI / JSON grammar (`--tile-engine` / `"tile_engine"`):
-/// `full | cycle-resume | lane-lockstep`.
+/// `full | cycle-resume | lane-lockstep | packed-lockstep`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum TileEngine {
     /// Snapshot the golden mesh trajectory of each offloaded tile and
@@ -178,6 +178,14 @@ pub enum TileEngine {
     /// Mesh-backend only; HDFIT and the whole-SoC backend fall back to
     /// cycle-resume (one persistent chip cannot carry N lanes).
     LaneLockstep,
+    /// Lane-lockstep plus cross-tile packing: lanes in one chunk may
+    /// carry trials from *different* tiles of the same site batch, each
+    /// lane group owning its own operand schedule, golden snapshot and
+    /// drain window. Shorter groups retire early (masked, branch-free)
+    /// while the longest group finishes, so sparse `faults_per_layer`
+    /// runs keep every lane full. Falls back to cycle-resume on HDFIT
+    /// and the whole-SoC backend exactly like lane-lockstep.
+    PackedLockstep,
 }
 
 impl TileEngine {
@@ -186,6 +194,7 @@ impl TileEngine {
             "cycle-resume" | "cycle_resume" | "cycle" => Some(TileEngine::CycleResume),
             "full" => Some(TileEngine::Full),
             "lane-lockstep" | "lane_lockstep" | "lockstep" => Some(TileEngine::LaneLockstep),
+            "packed-lockstep" | "packed_lockstep" | "packed" => Some(TileEngine::PackedLockstep),
             _ => None,
         }
     }
@@ -197,6 +206,7 @@ impl std::fmt::Display for TileEngine {
             TileEngine::CycleResume => "cycle-resume",
             TileEngine::Full => "full",
             TileEngine::LaneLockstep => "lane-lockstep",
+            TileEngine::PackedLockstep => "packed-lockstep",
         };
         write!(f, "{s}")
     }
@@ -626,6 +636,9 @@ mod tests {
             ("lane-lockstep", TileEngine::LaneLockstep),
             ("lane_lockstep", TileEngine::LaneLockstep),
             ("lockstep", TileEngine::LaneLockstep),
+            ("packed-lockstep", TileEngine::PackedLockstep),
+            ("packed_lockstep", TileEngine::PackedLockstep),
+            ("packed", TileEngine::PackedLockstep),
         ] {
             assert_eq!(TileEngine::parse(s), Some(want), "{s}");
         }
@@ -633,11 +646,13 @@ mod tests {
         assert_eq!(TileEngine::CycleResume.to_string(), "cycle-resume");
         assert_eq!(TileEngine::Full.to_string(), "full");
         assert_eq!(TileEngine::LaneLockstep.to_string(), "lane-lockstep");
+        assert_eq!(TileEngine::PackedLockstep.to_string(), "packed-lockstep");
         // display round-trips through the grammar
         for e in [
             TileEngine::CycleResume,
             TileEngine::Full,
             TileEngine::LaneLockstep,
+            TileEngine::PackedLockstep,
         ] {
             assert_eq!(TileEngine::parse(&e.to_string()), Some(e));
         }

@@ -14,7 +14,9 @@ use std::path::Path;
 
 /// Journal schema version. Bump on any change to the manifest shape or
 /// the JSONL record shape; resume across schema versions refuses.
-pub const SCHEMA: &str = "enfor-sa/campaign-journal/v1";
+/// v2: `BatchRecord` gained the required `lane_cycles_filled` /
+/// `lane_cycles_stepped` occupancy pair (cross-tile lane packing).
+pub const SCHEMA: &str = "enfor-sa/campaign-journal/v2";
 
 /// One slice of the worker-count-invariant `(input, site)` unit space:
 /// shard `i/N` owns every unit with `unit % N == i`. The residue-class

@@ -31,6 +31,13 @@ pub struct BatchRecord {
     pub exposed: u64,
     pub critical: u64,
     pub rtl_cycles: u64,
+    /// Lane-cycles that carried a live trial while the batch stepped
+    /// (journal schema v2, with [`Self::lane_cycles_stepped`] — the
+    /// occupancy numerator/denominator pair of the lane-batched tile
+    /// engines).
+    pub lane_cycles_filled: u64,
+    /// Lane-cycles the batch stepped in total, live or idle.
+    pub lane_cycles_stepped: u64,
 }
 
 impl BatchRecord {
@@ -56,6 +63,8 @@ impl BatchRecord {
             exposed: delta.exposed_trials,
             critical: delta.vuln.critical,
             rtl_cycles: delta.rtl_cycles_stepped,
+            lane_cycles_filled: delta.lane_cycles_filled,
+            lane_cycles_stepped: delta.lane_cycles_stepped,
         }
     }
 
@@ -67,6 +76,8 @@ impl BatchRecord {
         into.exposed_trials += self.exposed;
         into.masked_trials += self.masked;
         into.rtl_cycles_stepped += self.rtl_cycles;
+        into.lane_cycles_filled += self.lane_cycles_filled;
+        into.lane_cycles_stepped += self.lane_cycles_stepped;
         let layer = into.per_layer.entry(self.layer as usize).or_default();
         layer.trials += self.trials();
         layer.critical += self.critical;
@@ -81,6 +92,14 @@ impl BatchRecord {
             ("exposed", Json::num(self.exposed as f64)),
             ("critical", Json::num(self.critical as f64)),
             ("rtl_cycles", Json::num(self.rtl_cycles as f64)),
+            (
+                "lane_cycles_filled",
+                Json::num(self.lane_cycles_filled as f64),
+            ),
+            (
+                "lane_cycles_stepped",
+                Json::num(self.lane_cycles_stepped as f64),
+            ),
         ])
     }
 
@@ -99,6 +118,8 @@ impl BatchRecord {
             exposed: field("exposed")?,
             critical: field("critical")?,
             rtl_cycles: field("rtl_cycles")?,
+            lane_cycles_filled: field("lane_cycles_filled")?,
+            lane_cycles_stepped: field("lane_cycles_stepped")?,
         })
     }
 }
@@ -226,6 +247,8 @@ mod tests {
             exposed: 1,
             critical: 1,
             rtl_cycles: 100 + input,
+            lane_cycles_filled: 100 + input,
+            lane_cycles_stepped: 110 + input,
         }
     }
 
@@ -263,6 +286,8 @@ mod tests {
         assert_eq!(acc.masked_trials, 6);
         assert_eq!(acc.exposed_trials, 3);
         assert_eq!(acc.rtl_cycles_stepped, 301);
+        assert_eq!(acc.lane_cycles_filled, 301);
+        assert_eq!(acc.lane_cycles_stepped, 331);
         assert_eq!(acc.per_layer.len(), 2); // layers 0 (sites 0,1) and 1
         assert_eq!(acc.per_layer[&0].trials, 8);
     }

@@ -75,10 +75,24 @@
 //!                              lane count (mesh backend only; HDFIT and
 //!                              the whole-SoC backend fall back to
 //!                              cycle-resume)
-//! --lanes <n>                  lane count for lane-lockstep (default 8;
-//!                              n >= 1 — lanes=1 degenerates to
-//!                              cycle-resume exactly, cycle counts
-//!                              included). Ignored by the other engines
+//! --tile-engine packed-lockstep
+//!                              lane-lockstep plus cross-tile packing:
+//!                              whole same-tile chunks whose lane totals
+//!                              fit in `--lanes` are packed side by side
+//!                              into ONE lane mesh pass — each group owns
+//!                              its own operands, schedule and golden
+//!                              cursor, shorter schedules retire early,
+//!                              and the chunk pays max(span) instead of
+//!                              sum(span). Bit-identical to the other
+//!                              engines for a fixed seed at ANY lane
+//!                              count, never more cycles than
+//!                              lane-lockstep (same fallbacks: HDFIT and
+//!                              the whole-SoC backend use cycle-resume)
+//! --lanes <n>                  lane count for lane-lockstep and
+//!                              packed-lockstep (default 8; n >= 1 —
+//!                              lanes=1 degenerates to cycle-resume
+//!                              exactly, cycle counts included). Ignored
+//!                              by the other engines
 //! ```
 //!
 //! ... and the durable-journal flags (ROADMAP "Durable campaign
@@ -205,7 +219,9 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
     }
     if let Some(s) = args.get("tile-engine") {
         cfg.campaign.tile_engine = TileEngine::parse(s).ok_or_else(|| {
-            anyhow::anyhow!("bad --tile-engine {s} (full|cycle-resume|lane-lockstep)")
+            anyhow::anyhow!(
+                "bad --tile-engine {s} (full|cycle-resume|lane-lockstep|packed-lockstep)"
+            )
         })?;
     }
     cfg.campaign.lanes = args.usize_or("lanes", cfg.campaign.lanes)?;
@@ -423,6 +439,18 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         hi * 100.0,
         human_time(r.wall.as_secs_f64())
     );
+    // lane-occupancy accounting: filled vs stepped lane-cycles (1.00
+    // means every stepped lane carried a live trial; the cross-tile
+    // packer's win shows up here as a higher fraction)
+    if r.lane_cycles_stepped > 0 {
+        println!(
+            "RTL cycles = {}  lane occupancy = {:.2} ({}/{} lane-cycles filled)",
+            r.rtl_cycles_stepped,
+            r.lane_occupancy(),
+            r.lane_cycles_filled,
+            r.lane_cycles_stepped
+        );
+    }
     for (layer, v) in &r.per_layer {
         println!("  layer {layer:2}: VF {:.4}% ({} trials)", v.vf() * 100.0, v.trials);
     }

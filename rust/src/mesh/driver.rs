@@ -751,6 +751,153 @@ pub fn lockstep_resumed(
     total.saturating_sub(cur.cycle)
 }
 
+/// One lane group of a packed-lockstep chunk: a maximal same-tile run of
+/// trials sharing operands, a golden cursor and a drain window. Groups
+/// are packed side by side into one [`LaneMesh`]; each owns the lane
+/// range `[lane0, lane0 + plans.len())` assigned by packing order.
+pub struct LaneGroup<'a> {
+    /// Operand views of this group's tile (the `Schedule::new` triple).
+    pub a: MatView<'a, i8>,
+    pub b: MatView<'a, i8>,
+    pub d: MatView<'a, i32>,
+    /// One fault plan per lane of the group.
+    pub plans: Vec<&'a FaultPlan>,
+    /// The group's advanced golden cursor (per-group snapshot + drain
+    /// progress; distinct groups may clamp to the same actual tile, so
+    /// each group must own its own cursor).
+    pub cur: &'a CycleCursor,
+}
+
+/// Cross-tile packed-lockstep resume (the cross-tile packing tentpole):
+/// replay the suffixes of SEVERAL tile matmuls side by side in one
+/// [`LaneMesh`] pass — each [`LaneGroup`] owns its own `Schedule`,
+/// golden snapshot (per-group [`LaneMesh::broadcast_group`] instead of a
+/// whole-mesh broadcast), per-group edge fill and drain window.
+///
+/// Cycle alignment is **start-aligned**: group `g` restored its snapshot
+/// at golden cycle `start_g = cur.cycle()`, so at global step `t` its
+/// local cycle is `start_g + t`, and the chunk runs for
+/// `max_g(total_g - start_g)` global steps. A group whose suffix is
+/// shorter retires early: its edge fill, fault fires and drain are
+/// simply skipped while its lanes keep stepping on stale edges — the
+/// step kernels stay branch-free and the retired lanes' outputs are
+/// never read. Requires each group's cursor to have been advanced
+/// ([`MatmulDriver::advance_golden`]) for that group's operands to a
+/// cycle `<=` the minimum first-effect cycle over its plans; `outs[l]`
+/// is then bit-identical to a per-trial
+/// [`MatmulDriver::matmul_resumed`] (pinned by
+/// `packed_resumed_matches_per_trial_resume` below and by
+/// `rust/tests/prop_lockstep.rs` end to end).
+///
+/// Returns `(stepped, lane_cycles_filled)`: the cycles stepped —
+/// `max_g(span_g)`, counted ONCE per global lockstep cycle — and the
+/// lane-cycles actually carrying live work, `Σ_g lanes_g · span_g` (each
+/// group's lanes are active for exactly its own span under start
+/// alignment; the campaign's lane-occupancy accounting divides this by
+/// capacity · stepped). A chunk of G>1 groups therefore steps
+/// `max_g(span_g)` instead of lane-lockstep's `Σ_g span_g`: never more,
+/// and strictly fewer whenever packing merged at least two runs.
+pub fn packed_lockstep_resumed(
+    mesh: &mut LaneMesh,
+    groups: &[LaneGroup<'_>],
+    outs: &mut Vec<Mat<i32>>,
+    scratch: &mut DriverScratch,
+) -> (u64, u64) {
+    let dim = mesh.dim();
+    assert!(!groups.is_empty(), "a packed chunk needs at least one group");
+    let lanes: usize = groups.iter().map(|g| g.plans.len()).sum();
+    assert!(lanes > 0, "a packed chunk needs at least one trial");
+    scratch.ensure_dim(dim);
+    mesh.reshape(lanes);
+    if outs.len() != lanes {
+        outs.resize_with(lanes, Mat::default);
+    }
+    let mut scheds = Vec::with_capacity(groups.len());
+    let mut starts = Vec::with_capacity(groups.len());
+    let mut lane0s = Vec::with_capacity(groups.len());
+    let mut cursors: Vec<LaneCursor> = Vec::with_capacity(lanes);
+    let mut lane0 = 0usize;
+    let mut span_max = 0u64;
+    let mut filled = 0u64;
+    for g in groups {
+        let sched = Schedule::new(mesh.dataflow(), dim, g.a, g.b, g.d);
+        let cur = g.cur;
+        debug_assert!(
+            cur.key.is_some(),
+            "packed resume requires an advanced golden cursor per group"
+        );
+        debug_assert_eq!(
+            (cur.partial.rows(), cur.partial.cols()),
+            sched.out_shape(),
+            "a group's cursor was advanced for a different schedule"
+        );
+        debug_assert!(
+            cur.cycle
+                <= g.plans
+                    .iter()
+                    .map(|p| p.first_cycle())
+                    .min()
+                    .unwrap_or(u64::MAX)
+                    .min(sched.total_cycles()),
+            "a group's snapshot was taken past its first effect cycle"
+        );
+        mesh.broadcast_group(lane0, g.plans.len(), &cur.state);
+        for (l, plan) in g.plans.iter().enumerate() {
+            outs[lane0 + l].clone_from(&cur.partial);
+            mesh.takens[lane0 + l].clear();
+            mesh.takens[lane0 + l].extend_from_slice(&cur.taken);
+            cursors.push(LaneCursor::start(plan));
+        }
+        let span = sched.total_cycles().saturating_sub(cur.cycle);
+        span_max = span_max.max(span);
+        filled += g.plans.len() as u64 * span;
+        starts.push(cur.cycle);
+        lane0s.push(lane0);
+        lane0 += g.plans.len();
+        scheds.push(sched);
+    }
+    for t in 0..span_max {
+        mesh.clear_outputs();
+        for (gi, g) in groups.iter().enumerate() {
+            let local = starts[gi] + t;
+            if local >= scheds[gi].total_cycles() {
+                continue; // retired: stale edges, outputs unread
+            }
+            scheds[gi].fill(local, &mut scratch.inp);
+            mesh.fill_group(lane0s[gi], g.plans.len(), &scratch.inp);
+        }
+        for (gi, g) in groups.iter().enumerate() {
+            let local = starts[gi] + t;
+            if local >= scheds[gi].total_cycles() {
+                continue;
+            }
+            for (l, plan) in g.plans.iter().enumerate() {
+                let lane = lane0s[gi] + l;
+                if cursors[lane].next_cycle() == local {
+                    cursors[lane].fire(plan, local, mesh, lane);
+                }
+            }
+        }
+        mesh.step();
+        for (gi, g) in groups.iter().enumerate() {
+            let local = starts[gi] + t;
+            if local >= scheds[gi].total_cycles() {
+                continue;
+            }
+            for l in 0..g.plans.len() {
+                let lane = lane0s[gi] + l;
+                scheds[gi].drain(
+                    local,
+                    &mesh.step_outs[lane],
+                    &mut outs[lane],
+                    &mut mesh.takens[lane],
+                );
+            }
+        }
+    }
+    (span_max, filled)
+}
+
 /// Reference tiled matmul over the mesh: decomposes an arbitrary
 /// (M x K) . (K x N) into DIM x DIM output tiles, each computed by one
 /// OS pass with the full K stream. Each tile is a zero-copy, zero-padded
@@ -1386,6 +1533,107 @@ mod tests {
                 for (l, full) in fulls.iter().enumerate() {
                     assert_eq!(&outs[l], full, "{dataflow} chunk {chunk_idx} lane {l}");
                 }
+            }
+        }
+    }
+
+    /// Packed chunk vs per-trial oracle: lane groups on DIFFERENT
+    /// operands (tiles), each with its own golden cursor advanced to its
+    /// own min-first-effect cycle, stepped once side by side — every
+    /// lane must reproduce its trial's full faulty run bit-exactly, both
+    /// dataflows, and the chunk pays only the LONGEST group suffix
+    /// (strictly fewer cycles than the two lockstep chunks would).
+    #[test]
+    fn packed_resumed_matches_per_trial_resume() {
+        use crate::mesh::lane::LaneMesh;
+        use crate::mesh::signal::SignalKind;
+        let mut rng = Rng::new(36);
+        for dataflow in [Dataflow::OutputStationary, Dataflow::WeightStationary] {
+            let dim = 4;
+            let mk_ops = |rng: &mut Rng| match dataflow {
+                Dataflow::OutputStationary => {
+                    (rng.mat_i8(dim, 6), rng.mat_i8(6, dim), rng.mat_i32(dim, dim, 100))
+                }
+                Dataflow::WeightStationary => {
+                    (rng.mat_i8(5, dim), rng.mat_i8(dim, dim), rng.mat_i32(5, dim, 100))
+                }
+            };
+            let (a0, b0, d0) = mk_ops(&mut rng);
+            let (a1, b1, d1) = mk_ops(&mut rng);
+            let plans0 = vec![
+                FaultPlan::single(Fault::new(1, 2, SignalKind::Propag, 0, 2)),
+                FaultPlan::single(Fault::new(2, 1, SignalKind::Acc, 27, 9)),
+                FaultPlan::single(Fault::stuck_at(1, 1, SignalKind::Valid, 0, true, 5)),
+            ];
+            let plans1 = vec![
+                FaultPlan::single(Fault::new(0, 1, SignalKind::Weight, 2, 12)),
+                FaultPlan::new(vec![
+                    Fault::new(0, 0, SignalKind::Act, 3, 7),
+                    Fault::new(3, 3, SignalKind::DReg, 11, 15),
+                ]),
+            ];
+            let mut mesh = Mesh::new(dim, dataflow);
+            // per-trial full-run oracles, group order then lane order
+            let mut fulls = Vec::new();
+            for plan in &plans0 {
+                fulls.push(MatmulDriver::new(&mut mesh).matmul_with_plan(
+                    a0.view(),
+                    b0.view(),
+                    d0.view(),
+                    plan,
+                ));
+            }
+            for plan in &plans1 {
+                fulls.push(MatmulDriver::new(&mut mesh).matmul_with_plan(
+                    a1.view(),
+                    b1.view(),
+                    d1.view(),
+                    plan,
+                ));
+            }
+            let mut scratch = DriverScratch::new(dim);
+            let mut cur0 = CycleCursor::new();
+            let mut cur1 = CycleCursor::new();
+            let fe0 = plans0.iter().map(|p| p.first_cycle()).min().unwrap();
+            let fe1 = plans1.iter().map(|p| p.first_cycle()).min().unwrap();
+            MatmulDriver::new(&mut mesh)
+                .advance_golden(a0.view(), b0.view(), d0.view(), (0, 0), fe0, &mut cur0, &mut scratch);
+            MatmulDriver::new(&mut mesh)
+                .advance_golden(a1.view(), b1.view(), d1.view(), (0, 1), fe1, &mut cur1, &mut scratch);
+            let total = Schedule::new(dataflow, dim, a0.view(), b0.view(), d0.view()).total_cycles();
+            let (span0, span1) = (total - fe0, total - fe1);
+            let groups = vec![
+                LaneGroup {
+                    a: a0.view(),
+                    b: b0.view(),
+                    d: d0.view(),
+                    plans: plans0.iter().collect(),
+                    cur: &cur0,
+                },
+                LaneGroup {
+                    a: a1.view(),
+                    b: b1.view(),
+                    d: d1.view(),
+                    plans: plans1.iter().collect(),
+                    cur: &cur1,
+                },
+            ];
+            let mut lane_mesh = LaneMesh::new(dim, dataflow);
+            let mut outs = Vec::new();
+            let (stepped, filled) =
+                packed_lockstep_resumed(&mut lane_mesh, &groups, &mut outs, &mut scratch);
+            assert_eq!(stepped, span0.max(span1), "{dataflow}: longest suffix paid once");
+            assert!(
+                stepped < span0 + span1,
+                "{dataflow}: packing must beat back-to-back lockstep"
+            );
+            assert_eq!(
+                filled,
+                3 * span0 + 2 * span1,
+                "{dataflow}: each group's lanes are live for exactly its span"
+            );
+            for (l, full) in fulls.iter().enumerate() {
+                assert_eq!(&outs[l], full, "{dataflow} lane {l}");
             }
         }
     }

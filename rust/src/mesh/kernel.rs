@@ -1,0 +1,293 @@
+//! Fixed-width PE row kernels shared by the scalar [`super::mesh::Mesh`]
+//! and the lane-batched [`super::lane::LaneMesh`].
+//!
+//! Both meshes update one mesh row per call as an **element-wise map**
+//! over `n` independent cells: the scalar mesh passes `n = dim` (one
+//! element per column), the lane mesh passes `n = dim * lanes` (the
+//! lane-contiguous SoA row). All intra-row dependencies are resolved by
+//! the caller *before* the call — the a-chain through a pre-edge shifted
+//! scratch copy (`a_in[j]` is the west port for the leading element(s)
+//! and the western neighbour's pre-edge `reg_a` otherwise), the
+//! north-row sources through read-only pre-edge slices (rows are walked
+//! bottom-up, so the northern row is unwritten), and the south-edge
+//! captures through pre/post-edge snapshots taken around the call. That
+//! leaves a straight-line select ladder per element.
+//!
+//! The hot loop is blocked over a compile-time [`LANE_BLOCK`]: the main
+//! loop runs `LANE_BLOCK` elements with a *constant* trip count (plus a
+//! scalar remainder), and every slice is pre-narrowed to `n` elements,
+//! so the body is bounds-check-free, branch-free and fixed-width — the
+//! shape LLVM reliably lifts to SIMD on stable Rust. Bit-identity of the
+//! blocked kernels against the pre-blocking scalar walk is pinned by
+//! `blocked_rows_match_reference_cells` below and by the golden
+//! lockstep/mesh tests.
+//!
+//! The `EDGE` const parameter folds the north-edge row and the interior
+//! rows into one body: the only semantic difference is where the
+//! accumulator-chain input `d_in` comes from (the boundary port stream
+//! for row 0; the PE's own `reg_d`, latched from the northern `out_c`
+//! wire last cycle, for interior rows). `d_next` is what `reg_d` latches
+//! this cycle: the boundary `north_d` for row 0, the northern pre-edge
+//! accumulator for interior rows.
+
+/// Compile-time width of the main element loop. 8 lanes of i32 fill one
+/// AVX2 register (and two NEON registers) — wide enough to saturate the
+/// vector units the CI runners have, small enough that the scalar
+/// remainder stays cheap at dim 4..16.
+pub(crate) const LANE_BLOCK: usize = 8;
+
+/// One output-stationary mesh row, `n` independent elements.
+///
+/// Element semantics (transliterated from the scalar `step_os`):
+///
+/// ```text
+/// d_in  = EDGE ? d_next[j] : reg_d[j]        // acc-chain input
+/// mac   = acc[j] + a_in[j] * b_in[j]          (wrapping)
+/// acc'  = p ? d_in : (v ? mac : acc)
+/// reg_d'= d_next[j]                           // latch north out_c wire
+/// reg_a'/reg_b'/reg_propag'/reg_valid' latch the inputs
+/// ```
+///
+/// South-edge flush capture (`p ⇒ out_c = acc_old`, bottom row only) is
+/// the caller's job from a pre-edge `acc` snapshot.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn os_row<const EDGE: bool>(
+    a_in: &[i8],
+    b_in: &[i8],
+    p_in: &[bool],
+    v_in: &[bool],
+    d_next: &[i32],
+    acc: &mut [i32],
+    reg_a: &mut [i8],
+    reg_b: &mut [i8],
+    reg_d: &mut [i32],
+    reg_propag: &mut [bool],
+    reg_valid: &mut [bool],
+) {
+    let n = acc.len();
+    // Pre-narrow every slice to `n`: one bounds check each up front, none
+    // inside the blocked loop.
+    let (a_in, b_in, p_in, v_in, d_next) =
+        (&a_in[..n], &b_in[..n], &p_in[..n], &v_in[..n], &d_next[..n]);
+    let (reg_a, reg_b, reg_d) = (&mut reg_a[..n], &mut reg_b[..n], &mut reg_d[..n]);
+    let (reg_propag, reg_valid) = (&mut reg_propag[..n], &mut reg_valid[..n]);
+    macro_rules! cell {
+        ($j:expr) => {{
+            let j = $j;
+            let a = a_in[j];
+            let b = b_in[j];
+            let p = p_in[j];
+            let v = v_in[j];
+            let d_in = if EDGE { d_next[j] } else { reg_d[j] };
+            let acc_old = acc[j];
+            let mac = acc_old.wrapping_add(a as i32 * b as i32);
+            acc[j] = if p {
+                d_in
+            } else if v {
+                mac
+            } else {
+                acc_old
+            };
+            reg_d[j] = d_next[j];
+            reg_a[j] = a;
+            reg_b[j] = b;
+            reg_propag[j] = p;
+            reg_valid[j] = v;
+        }};
+    }
+    let mut j = 0;
+    while j + LANE_BLOCK <= n {
+        for k in 0..LANE_BLOCK {
+            cell!(j + k);
+        }
+        j += LANE_BLOCK;
+    }
+    while j < n {
+        cell!(j);
+        j += 1;
+    }
+}
+
+/// One weight-stationary mesh row, `n` independent elements.
+///
+/// `chain[j]` is the psum/d-chain input from the north: the boundary
+/// `north_d` stream for row 0, the northern pre-edge accumulator (the
+/// psum pipeline) for interior rows. Element semantics (transliterated
+/// from the scalar `step_ws`):
+///
+/// ```text
+/// d_in  = EDGE ? chain[j] : reg_d[j]
+/// ps    = chain[j] + reg_w[j] * a_in[j]       (wrapping)
+/// reg_w'= p ? low8(d_in) : reg_w
+/// acc'  = p ? d_in : (v ? ps : acc)
+/// reg_d'= chain[j]
+/// ```
+///
+/// South-edge captures (bottom row only: `p ⇒ out_c = w_old`,
+/// `!p ∧ v ⇒ psum = ps`) are the caller's job — `w_old` from a pre-edge
+/// `reg_w` snapshot, `ps` from the post-edge `acc` (equal to `ps`
+/// exactly when `!p ∧ v`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ws_row<const EDGE: bool>(
+    a_in: &[i8],
+    b_in: &[i8],
+    p_in: &[bool],
+    v_in: &[bool],
+    chain: &[i32],
+    acc: &mut [i32],
+    reg_a: &mut [i8],
+    reg_b: &mut [i8],
+    reg_d: &mut [i32],
+    reg_w: &mut [i8],
+    reg_propag: &mut [bool],
+    reg_valid: &mut [bool],
+) {
+    let n = acc.len();
+    let (a_in, b_in, p_in, v_in, chain) =
+        (&a_in[..n], &b_in[..n], &p_in[..n], &v_in[..n], &chain[..n]);
+    let (reg_a, reg_b, reg_d, reg_w) =
+        (&mut reg_a[..n], &mut reg_b[..n], &mut reg_d[..n], &mut reg_w[..n]);
+    let (reg_propag, reg_valid) = (&mut reg_propag[..n], &mut reg_valid[..n]);
+    macro_rules! cell {
+        ($j:expr) => {{
+            let j = $j;
+            let a = a_in[j];
+            let b = b_in[j];
+            let p = p_in[j];
+            let v = v_in[j];
+            let ch = chain[j];
+            let d_in = if EDGE { ch } else { reg_d[j] };
+            let w_old = reg_w[j];
+            let ps = ch.wrapping_add(w_old as i32 * a as i32);
+            reg_w[j] = if p { (d_in & 0xff) as i8 } else { w_old };
+            let acc_old = acc[j];
+            acc[j] = if p {
+                d_in
+            } else if v {
+                ps
+            } else {
+                acc_old
+            };
+            reg_d[j] = ch;
+            reg_a[j] = a;
+            reg_b[j] = b;
+            reg_propag[j] = p;
+            reg_valid[j] = v;
+        }};
+    }
+    let mut j = 0;
+    while j + LANE_BLOCK <= n {
+        for k in 0..LANE_BLOCK {
+            cell!(j + k);
+        }
+        j += LANE_BLOCK;
+    }
+    while j < n {
+        cell!(j);
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference (unblocked, per-cell) transliteration of the original
+    /// scalar walk, run against the blocked kernels on sizes straddling
+    /// `LANE_BLOCK` boundaries — pins that blocking changed no result.
+    #[test]
+    fn blocked_rows_match_reference_cells() {
+        for n in [1, 3, LANE_BLOCK - 1, LANE_BLOCK, LANE_BLOCK + 5, 4 * LANE_BLOCK + 7] {
+            // deterministic pseudo-random fixture
+            let v8 = |s: usize, j: usize| ((s * 97 + j * 31 + 13) % 251) as u8 as i8;
+            let v32 = |s: usize, j: usize| ((s * 131 + j * 17) % 9973) as i32 - 4000;
+            let vb = |s: usize, j: usize| (s + j) % 3 == 0;
+            let a_in: Vec<i8> = (0..n).map(|j| v8(1, j)).collect();
+            let b_in: Vec<i8> = (0..n).map(|j| v8(2, j)).collect();
+            let p_in: Vec<bool> = (0..n).map(|j| vb(1, j)).collect();
+            let v_in: Vec<bool> = (0..n).map(|j| vb(2, j)).collect();
+            let chain: Vec<i32> = (0..n).map(|j| v32(3, j)).collect();
+            let mk = || {
+                (
+                    (0..n).map(|j| v32(4, j)).collect::<Vec<i32>>(), // acc
+                    (0..n).map(|j| v8(5, j)).collect::<Vec<i8>>(),   // reg_a
+                    (0..n).map(|j| v8(6, j)).collect::<Vec<i8>>(),   // reg_b
+                    (0..n).map(|j| v32(7, j)).collect::<Vec<i32>>(), // reg_d
+                    (0..n).map(|j| v8(8, j)).collect::<Vec<i8>>(),   // reg_w
+                    (0..n).map(|j| vb(3, j)).collect::<Vec<bool>>(), // propag
+                    (0..n).map(|j| vb(4, j)).collect::<Vec<bool>>(), // valid
+                )
+            };
+            for edge in [false, true] {
+                // OS
+                let (mut acc, mut ra, mut rb, mut rd, _, mut rp, mut rv) = mk();
+                let (mut acc2, mut ra2, mut rb2, mut rd2, _, mut rp2, mut rv2) = mk();
+                for j in 0..n {
+                    let d_in = if edge { chain[j] } else { rd2[j] };
+                    let acc_old = acc2[j];
+                    let mac = acc_old.wrapping_add(a_in[j] as i32 * b_in[j] as i32);
+                    acc2[j] = if p_in[j] {
+                        d_in
+                    } else if v_in[j] {
+                        mac
+                    } else {
+                        acc_old
+                    };
+                    rd2[j] = chain[j];
+                    ra2[j] = a_in[j];
+                    rb2[j] = b_in[j];
+                    rp2[j] = p_in[j];
+                    rv2[j] = v_in[j];
+                }
+                if edge {
+                    os_row::<true>(
+                        &a_in, &b_in, &p_in, &v_in, &chain, &mut acc, &mut ra, &mut rb,
+                        &mut rd, &mut rp, &mut rv,
+                    );
+                } else {
+                    os_row::<false>(
+                        &a_in, &b_in, &p_in, &v_in, &chain, &mut acc, &mut ra, &mut rb,
+                        &mut rd, &mut rp, &mut rv,
+                    );
+                }
+                assert_eq!((acc, ra, rb, rd, rp, rv), (acc2, ra2, rb2, rd2, rp2, rv2),
+                    "os n={n} edge={edge}");
+                // WS
+                let (mut acc, mut ra, mut rb, mut rd, mut rw, mut rp, mut rv) = mk();
+                let (mut acc2, mut ra2, mut rb2, mut rd2, mut rw2, mut rp2, mut rv2) = mk();
+                for j in 0..n {
+                    let d_in = if edge { chain[j] } else { rd2[j] };
+                    let w_old = rw2[j];
+                    let ps = chain[j].wrapping_add(w_old as i32 * a_in[j] as i32);
+                    rw2[j] = if p_in[j] { (d_in & 0xff) as i8 } else { w_old };
+                    let acc_old = acc2[j];
+                    acc2[j] = if p_in[j] {
+                        d_in
+                    } else if v_in[j] {
+                        ps
+                    } else {
+                        acc_old
+                    };
+                    rd2[j] = chain[j];
+                    ra2[j] = a_in[j];
+                    rb2[j] = b_in[j];
+                    rp2[j] = p_in[j];
+                    rv2[j] = v_in[j];
+                }
+                if edge {
+                    ws_row::<true>(
+                        &a_in, &b_in, &p_in, &v_in, &chain, &mut acc, &mut ra, &mut rb,
+                        &mut rd, &mut rw, &mut rp, &mut rv,
+                    );
+                } else {
+                    ws_row::<false>(
+                        &a_in, &b_in, &p_in, &v_in, &chain, &mut acc, &mut ra, &mut rb,
+                        &mut rd, &mut rw, &mut rp, &mut rv,
+                    );
+                }
+                assert_eq!((acc, ra, rb, rd, rw, rp, rv), (acc2, ra2, rb2, rd2, rw2, rp2, rv2),
+                    "ws n={n} edge={edge}");
+            }
+        }
+    }
+}

@@ -16,24 +16,41 @@
 //! drain strip is branchy, and each lane owns its own
 //! [`StepOutput`]/drain counters there.
 //!
-//! Feeding: one `Schedule::fill` per cycle produces the shared
-//! [`MeshInputs`]; [`LaneMesh::begin_cycle`] broadcasts the edge wires
-//! into per-lane stripes so a lane's [`LaneCursor`] can corrupt its own
-//! copy (edge-wire faults live exactly one cycle, mirroring the scalar
-//! path where `fill`'s leading `clear()` rebuilds the shared inputs).
-//! `north_d` stays genuinely shared — it is never an injection target
-//! (see `apply_enforsa`: no arm reads or writes `inp.north_d`).
+//! Feeding: one `Schedule::fill` per cycle per **lane group** produces
+//! shared [`MeshInputs`]; [`LaneMesh::fill_group`] broadcasts the edge
+//! wires into that group's lane sub-stripes so a lane's [`LaneCursor`]
+//! can corrupt its own copy (edge-wire faults live exactly one cycle,
+//! mirroring the scalar path where `fill`'s leading `clear()` rebuilds
+//! the shared inputs). Same-tile lockstep is the one-group special case
+//! ([`LaneMesh::begin_cycle`]). `north_d` is striped per lane like the
+//! other edges — packed groups carry different preload streams — but
+//! remains a non-target of injection (see `apply_enforsa`: no arm reads
+//! or writes `inp.north_d`).
+//!
+//! The step kernels are the shared fixed-width row kernels of
+//! [`super::kernel`]: one element-wise call per mesh row over the
+//! `dim * lanes` SoA stripe, blocked over `kernel::LANE_BLOCK` so the
+//! hot loop is fixed-trip-count and branch-free — retired lanes of a
+//! packed chunk keep stepping on stale edge stripes (their outputs are
+//! never drained) instead of adding per-lane control flow.
 
 use super::inject::{apply_enforsa_lane, Fault, FaultPlan, Persistence};
+use super::kernel;
 use super::mesh::{MeshInputs, MeshState, StepOutput};
 use crate::config::Dataflow;
 
+/// Broadcast one scalar register file into lanes `[lane0, lane0 + n)`
+/// of its SoA twin, leaving the other lanes untouched.
+fn spread_group<T: Copy>(dst: &mut [T], src: &[T], lanes: usize, lane0: usize, n: usize) {
+    debug_assert!(lane0 + n <= lanes && dst.len() == src.len() * lanes);
+    for (i, &v) in src.iter().enumerate() {
+        dst[i * lanes + lane0..i * lanes + lane0 + n].fill(v);
+    }
+}
+
 /// Broadcast one scalar register file into every lane of its SoA twin.
 fn spread<T: Copy>(dst: &mut [T], src: &[T], lanes: usize) {
-    debug_assert_eq!(dst.len(), src.len() * lanes);
-    for (i, &v) in src.iter().enumerate() {
-        dst[i * lanes..(i + 1) * lanes].fill(v);
-    }
+    spread_group(dst, src, lanes, 0, lanes);
 }
 
 /// Lane-batched systolic mesh: LANES trials' register state side by
@@ -59,11 +76,17 @@ pub struct LaneMesh {
     pub(crate) north_b: Vec<i8>,
     pub(crate) north_propag: Vec<bool>,
     pub(crate) north_valid: Vec<bool>,
-    /// Shared preload stream `[dim]` — never an injection target.
+    /// Per-lane preload stream `[dim * lanes]` — striped so packed lane
+    /// groups can carry different operands; never an injection target.
     north_d: Vec<i32>,
-    /// Pre-edge copy of one row's `reg_a` lanes (Verilator
+    /// SHIFTED pre-edge a-row `[dim * lanes]`: the west stripe, then the
+    /// western neighbour's pre-edge `reg_a` lanes (Verilator
     /// inverted-assignment-order semantics, as in the scalar kernels).
     scratch_a: Vec<i8>,
+    /// Pre-edge bottom-row `acc` lanes (OS south_c capture source).
+    scratch_c: Vec<i32>,
+    /// Pre-edge bottom-row `reg_w` lanes (WS south_c capture source).
+    scratch_w: Vec<i8>,
     /// Per-lane south-edge drain strip.
     pub(crate) step_outs: Vec<StepOutput>,
     /// Per-lane drain counters, primed from the cursor per chunk.
@@ -90,8 +113,10 @@ impl LaneMesh {
             north_b: Vec::new(),
             north_propag: Vec::new(),
             north_valid: Vec::new(),
-            north_d: vec![0; dim],
+            north_d: Vec::new(),
             scratch_a: Vec::new(),
+            scratch_c: Vec::new(),
+            scratch_w: Vec::new(),
             step_outs: Vec::new(),
             takens: Vec::new(),
         }
@@ -142,7 +167,10 @@ impl LaneMesh {
         self.north_b.resize(edge, 0);
         self.north_propag.resize(edge, false);
         self.north_valid.resize(edge, false);
+        self.north_d.resize(edge, 0);
         self.scratch_a.resize(edge, 0);
+        self.scratch_c.resize(edge, 0);
+        self.scratch_w.resize(edge, 0);
         self.step_outs.resize_with(lanes, || StepOutput::new(dim));
         self.takens.resize_with(lanes, Vec::new);
     }
@@ -151,36 +179,63 @@ impl LaneMesh {
     /// lockstep analogue of `Mesh::restore_state`, replicating each
     /// scalar register across the lane stripe.
     pub fn broadcast(&mut self, state: &MeshState) {
+        self.cycle = state.cycle;
+        let lanes = self.lanes;
+        self.broadcast_group(0, lanes, state);
+    }
+
+    /// Restore lanes `[lane0, lane0 + n)` from one golden snapshot — the
+    /// per-group restore of a packed chunk. The mesh cycle counter is
+    /// NOT touched: packed groups start at different golden cycles, so
+    /// the packed driver tracks each group's local cycle itself.
+    pub fn broadcast_group(&mut self, lane0: usize, n: usize, state: &MeshState) {
         assert_eq!(
             state.acc.len(),
             self.dim * self.dim,
             "snapshot taken on a differently-dimensioned mesh"
         );
+        assert!(lane0 + n <= self.lanes, "lane group out of range");
         let lanes = self.lanes;
-        self.cycle = state.cycle;
-        spread(&mut self.reg_a, &state.reg_a, lanes);
-        spread(&mut self.reg_b, &state.reg_b, lanes);
-        spread(&mut self.acc, &state.acc, lanes);
-        spread(&mut self.reg_d, &state.reg_d, lanes);
-        spread(&mut self.reg_propag, &state.reg_propag, lanes);
-        spread(&mut self.reg_valid, &state.reg_valid, lanes);
-        spread(&mut self.reg_w, &state.reg_w, lanes);
+        spread_group(&mut self.reg_a, &state.reg_a, lanes, lane0, n);
+        spread_group(&mut self.reg_b, &state.reg_b, lanes, lane0, n);
+        spread_group(&mut self.acc, &state.acc, lanes, lane0, n);
+        spread_group(&mut self.reg_d, &state.reg_d, lanes, lane0, n);
+        spread_group(&mut self.reg_propag, &state.reg_propag, lanes, lane0, n);
+        spread_group(&mut self.reg_valid, &state.reg_valid, lanes, lane0, n);
+        spread_group(&mut self.reg_w, &state.reg_w, lanes, lane0, n);
     }
 
     /// Broadcast this cycle's shared edge wires into the per-lane
     /// stripes and clear the drain strips. Called once per cycle with
-    /// the single `Schedule::fill` result that feeds ALL lanes.
+    /// the single `Schedule::fill` result that feeds ALL lanes (the
+    /// one-group special case of a packed cycle).
     pub fn begin_cycle(&mut self, inp: &MeshInputs) {
-        debug_assert_eq!(inp.west_a.len(), self.dim);
+        self.clear_outputs();
         let lanes = self.lanes;
-        spread(&mut self.west_a, &inp.west_a, lanes);
-        spread(&mut self.north_b, &inp.north_b, lanes);
-        spread(&mut self.north_propag, &inp.north_propag, lanes);
-        spread(&mut self.north_valid, &inp.north_valid, lanes);
-        self.north_d.copy_from_slice(&inp.north_d);
+        self.fill_group(0, lanes, inp);
+    }
+
+    /// Clear every lane's drain strip — once per (global) cycle of a
+    /// packed chunk, before the per-group edge fills.
+    pub fn clear_outputs(&mut self) {
         for out in &mut self.step_outs {
             out.clear();
         }
+    }
+
+    /// Broadcast one group's `Schedule::fill` result into the edge
+    /// stripes of lanes `[lane0, lane0 + n)`. Retired groups simply skip
+    /// their fill: their lanes keep stepping on stale edges (branch-free
+    /// in the kernels) and their outputs are never drained.
+    pub fn fill_group(&mut self, lane0: usize, n: usize, inp: &MeshInputs) {
+        debug_assert_eq!(inp.west_a.len(), self.dim);
+        debug_assert!(lane0 + n <= self.lanes, "lane group out of range");
+        let lanes = self.lanes;
+        spread_group(&mut self.west_a, &inp.west_a, lanes, lane0, n);
+        spread_group(&mut self.north_b, &inp.north_b, lanes, lane0, n);
+        spread_group(&mut self.north_propag, &inp.north_propag, lanes, lane0, n);
+        spread_group(&mut self.north_valid, &inp.north_valid, lanes, lane0, n);
+        spread_group(&mut self.north_d, &inp.north_d, lanes, lane0, n);
     }
 
     /// Advance every lane one cycle in lockstep.
@@ -192,183 +247,159 @@ impl LaneMesh {
         self.cycle += 1;
     }
 
-    /// Lockstep transliteration of the scalar `Mesh::step_os`: same
-    /// most-downstream-first row order, same row-0 peel (columns in
-    /// reverse), same pre-edge `scratch_a` copy for interior rows — with
-    /// the lane loop innermost and the accumulator update a branch-free
-    /// select ladder so every lane takes the same control path.
+    /// Lockstep transliteration of the scalar `Mesh::step_os` through
+    /// the shared [`kernel::os_row`]: same most-downstream-first row
+    /// order, the a-chain through the shifted pre-edge `scratch_a`, the
+    /// whole `dim * lanes` SoA row as one fixed-width element-wise call.
     fn step_os(&mut self) {
         let dim = self.dim;
         let lanes = self.lanes;
+        let w = dim * lanes;
         for r in (0..dim).rev() {
-            let base = r * dim;
+            let row = r * dim * lanes;
+            // shifted pre-edge a-row: the west stripe, then the western
+            // neighbour cell's pre-edge reg_a lanes
+            self.scratch_a[..lanes]
+                .copy_from_slice(&self.west_a[r * lanes..(r + 1) * lanes]);
+            self.scratch_a[lanes..w]
+                .copy_from_slice(&self.reg_a[row..row + w - lanes]);
+            let bottom = r == dim - 1;
+            if bottom {
+                self.scratch_c.copy_from_slice(&self.acc[row..row + w]);
+            }
             if r == 0 {
-                for c in (0..dim).rev() {
-                    let d_in = self.north_d[c];
-                    for l in 0..lanes {
-                        let i = c * lanes + l;
-                        let a_in = if c == 0 {
-                            self.west_a[l]
-                        } else {
-                            self.reg_a[(c - 1) * lanes + l]
-                        };
-                        let b_in = self.north_b[i];
-                        let p_in = self.north_propag[i];
-                        let v_in = self.north_valid[i];
-                        let acc_old = self.acc[i];
-                        if dim == 1 && p_in {
-                            self.step_outs[l].set_south_c(c, acc_old);
+                kernel::os_row::<true>(
+                    &self.scratch_a[..w],
+                    &self.north_b[..w],
+                    &self.north_propag[..w],
+                    &self.north_valid[..w],
+                    &self.north_d[..w],
+                    &mut self.acc[row..row + w],
+                    &mut self.reg_a[row..row + w],
+                    &mut self.reg_b[row..row + w],
+                    &mut self.reg_d[row..row + w],
+                    &mut self.reg_propag[row..row + w],
+                    &mut self.reg_valid[row..row + w],
+                );
+                if bottom {
+                    for c in 0..dim {
+                        for l in 0..lanes {
+                            if self.north_propag[c * lanes + l] {
+                                self.step_outs[l]
+                                    .set_south_c(c, self.scratch_c[c * lanes + l]);
+                            }
                         }
-                        let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
-                        self.acc[i] = if p_in {
-                            d_in
-                        } else if v_in {
-                            mac
-                        } else {
-                            acc_old
-                        };
-                        self.reg_d[i] = d_in;
-                        self.reg_a[i] = a_in;
-                        self.reg_b[i] = b_in;
-                        self.reg_propag[i] = p_in;
-                        self.reg_valid[i] = v_in;
                     }
                 }
                 continue;
             }
-            let north = base - dim;
-            let bottom = r == dim - 1;
-            let row = base * lanes;
-            self.scratch_a
-                .copy_from_slice(&self.reg_a[row..row + dim * lanes]);
-            for c in 0..dim {
-                let ibase = (base + c) * lanes;
-                let nbase = (north + c) * lanes;
-                for l in 0..lanes {
-                    let i = ibase + l;
-                    let n = nbase + l;
-                    let a_in = if c == 0 {
-                        self.west_a[r * lanes + l]
-                    } else {
-                        self.scratch_a[(c - 1) * lanes + l]
-                    };
-                    let b_in = self.reg_b[n];
-                    let p_in = self.reg_propag[n];
-                    let v_in = self.reg_valid[n];
-                    let d_in = self.reg_d[i];
-                    let out_c_north = self.acc[n];
-                    let acc_old = self.acc[i];
-                    if bottom && p_in {
-                        self.step_outs[l].set_south_c(c, acc_old);
+            let north = row - w;
+            let (acc_head, acc_row) = self.acc.split_at_mut(row);
+            let (b_head, b_row) = self.reg_b.split_at_mut(row);
+            let (p_head, p_row) = self.reg_propag.split_at_mut(row);
+            let (v_head, v_row) = self.reg_valid.split_at_mut(row);
+            kernel::os_row::<false>(
+                &self.scratch_a[..w],
+                &b_head[north..],
+                &p_head[north..],
+                &v_head[north..],
+                &acc_head[north..],
+                &mut acc_row[..w],
+                &mut self.reg_a[row..row + w],
+                &mut b_row[..w],
+                &mut self.reg_d[row..row + w],
+                &mut p_row[..w],
+                &mut v_row[..w],
+            );
+            if bottom {
+                for c in 0..dim {
+                    for l in 0..lanes {
+                        if p_head[north + c * lanes + l] {
+                            self.step_outs[l]
+                                .set_south_c(c, self.scratch_c[c * lanes + l]);
+                        }
                     }
-                    let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
-                    self.acc[i] = if p_in {
-                        d_in
-                    } else if v_in {
-                        mac
-                    } else {
-                        acc_old
-                    };
-                    self.reg_d[i] = out_c_north;
-                    self.reg_a[i] = a_in;
-                    self.reg_b[i] = b_in;
-                    self.reg_propag[i] = p_in;
-                    self.reg_valid[i] = v_in;
                 }
             }
         }
     }
 
-    /// Lockstep transliteration of the scalar `Mesh::step_ws` under the
-    /// same discipline as [`LaneMesh::step_os`].
+    /// Lockstep transliteration of the scalar `Mesh::step_ws` through
+    /// the shared [`kernel::ws_row`], under the same discipline as
+    /// [`LaneMesh::step_os`].
     fn step_ws(&mut self) {
         let dim = self.dim;
         let lanes = self.lanes;
+        let w = dim * lanes;
         for r in (0..dim).rev() {
-            let base = r * dim;
+            let row = r * dim * lanes;
+            self.scratch_a[..lanes]
+                .copy_from_slice(&self.west_a[r * lanes..(r + 1) * lanes]);
+            self.scratch_a[lanes..w]
+                .copy_from_slice(&self.reg_a[row..row + w - lanes]);
+            let bottom = r == dim - 1;
+            if bottom {
+                self.scratch_w.copy_from_slice(&self.reg_w[row..row + w]);
+            }
             if r == 0 {
-                let bottom = dim == 1;
-                for c in (0..dim).rev() {
-                    let d_in = self.north_d[c];
-                    for l in 0..lanes {
-                        let i = c * lanes + l;
-                        let a_in = if c == 0 {
-                            self.west_a[l]
-                        } else {
-                            self.reg_a[(c - 1) * lanes + l]
-                        };
-                        let b_in = self.north_b[i];
-                        let p_in = self.north_propag[i];
-                        let v_in = self.north_valid[i];
-                        let w_old = self.reg_w[i];
-                        let ps = d_in.wrapping_add(w_old as i32 * a_in as i32);
-                        if bottom {
-                            if p_in {
-                                self.step_outs[l].set_south_c(c, w_old as i32);
-                            } else if v_in {
-                                self.step_outs[l].set_south_psum(c, ps);
+                kernel::ws_row::<true>(
+                    &self.scratch_a[..w],
+                    &self.north_b[..w],
+                    &self.north_propag[..w],
+                    &self.north_valid[..w],
+                    &self.north_d[..w],
+                    &mut self.acc[row..row + w],
+                    &mut self.reg_a[row..row + w],
+                    &mut self.reg_b[row..row + w],
+                    &mut self.reg_d[row..row + w],
+                    &mut self.reg_w[row..row + w],
+                    &mut self.reg_propag[row..row + w],
+                    &mut self.reg_valid[row..row + w],
+                );
+                if bottom {
+                    for c in 0..dim {
+                        for l in 0..lanes {
+                            let i = c * lanes + l;
+                            if self.north_propag[i] {
+                                self.step_outs[l]
+                                    .set_south_c(c, self.scratch_w[i] as i32);
+                            } else if self.north_valid[i] {
+                                self.step_outs[l].set_south_psum(c, self.acc[i]);
                             }
                         }
-                        self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
-                        self.acc[i] = if p_in {
-                            d_in
-                        } else if v_in {
-                            ps
-                        } else {
-                            self.acc[i]
-                        };
-                        self.reg_d[i] = d_in;
-                        self.reg_a[i] = a_in;
-                        self.reg_b[i] = b_in;
-                        self.reg_propag[i] = p_in;
-                        self.reg_valid[i] = v_in;
                     }
                 }
                 continue;
             }
-            let north = base - dim;
-            let bottom = r == dim - 1;
-            let row = base * lanes;
-            self.scratch_a
-                .copy_from_slice(&self.reg_a[row..row + dim * lanes]);
-            for c in 0..dim {
-                let ibase = (base + c) * lanes;
-                let nbase = (north + c) * lanes;
-                for l in 0..lanes {
-                    let i = ibase + l;
-                    let n = nbase + l;
-                    let a_in = if c == 0 {
-                        self.west_a[r * lanes + l]
-                    } else {
-                        self.scratch_a[(c - 1) * lanes + l]
-                    };
-                    let b_in = self.reg_b[n];
-                    let p_in = self.reg_propag[n];
-                    let v_in = self.reg_valid[n];
-                    let d_in = self.reg_d[i];
-                    let ps_in = self.acc[n];
-                    let w_old = self.reg_w[i];
-                    let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
-                    if bottom {
-                        if p_in {
-                            self.step_outs[l].set_south_c(c, w_old as i32);
-                        } else if v_in {
-                            self.step_outs[l].set_south_psum(c, ps);
+            let north = row - w;
+            let (acc_head, acc_row) = self.acc.split_at_mut(row);
+            let (b_head, b_row) = self.reg_b.split_at_mut(row);
+            let (p_head, p_row) = self.reg_propag.split_at_mut(row);
+            let (v_head, v_row) = self.reg_valid.split_at_mut(row);
+            kernel::ws_row::<false>(
+                &self.scratch_a[..w],
+                &b_head[north..],
+                &p_head[north..],
+                &v_head[north..],
+                &acc_head[north..],
+                &mut acc_row[..w],
+                &mut self.reg_a[row..row + w],
+                &mut b_row[..w],
+                &mut self.reg_d[row..row + w],
+                &mut self.reg_w[row..row + w],
+                &mut p_row[..w],
+                &mut v_row[..w],
+            );
+            if bottom {
+                for c in 0..dim {
+                    for l in 0..lanes {
+                        let i = c * lanes + l;
+                        if p_head[north + i] {
+                            self.step_outs[l].set_south_c(c, self.scratch_w[i] as i32);
+                        } else if v_head[north + i] {
+                            self.step_outs[l].set_south_psum(c, acc_row[i]);
                         }
                     }
-                    self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
-                    self.acc[i] = if p_in {
-                        d_in
-                    } else if v_in {
-                        ps
-                    } else {
-                        self.acc[i]
-                    };
-                    self.reg_d[i] = ps_in;
-                    self.reg_a[i] = a_in;
-                    self.reg_b[i] = b_in;
-                    self.reg_propag[i] = p_in;
-                    self.reg_valid[i] = v_in;
                 }
             }
         }

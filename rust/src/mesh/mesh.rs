@@ -34,6 +34,7 @@
 //! matching Gemmini, where a transient in a PE's operand register corrupts
 //! that PE's MAC and every downstream PE one hop per cycle (Fig. 5b).
 
+use super::kernel;
 use crate::config::Dataflow;
 
 /// Per-cycle boundary inputs, produced by the interface adapters.
@@ -213,10 +214,15 @@ pub struct Mesh {
     pub(crate) reg_valid: Vec<bool>,
     /// WS only: the stationary weight held in each PE.
     pub(crate) reg_w: Vec<i8>,
-    /// Scratch: pre-edge copy of one row of `reg_a`, so rows can be
-    /// evaluated left-to-right (vectorizable) while preserving the
-    /// inverted-assignment-order semantics (§Perf iteration 2).
+    /// Scratch: the SHIFTED pre-edge a-row (`[west_port, reg_a[0..dim-1]]`),
+    /// so each row is one element-wise [`kernel`] call while preserving
+    /// the inverted-assignment-order semantics (§Perf iteration 2, then
+    /// blocked over [`kernel::LANE_BLOCK`] in the cross-tile packing PR).
     scratch_a: Vec<i8>,
+    /// Scratch: pre-edge bottom-row `acc` (OS south_c capture source).
+    scratch_c: Vec<i32>,
+    /// Scratch: pre-edge bottom-row `reg_w` (WS south_c capture source).
+    scratch_w: Vec<i8>,
 }
 
 impl Mesh {
@@ -235,6 +241,8 @@ impl Mesh {
             reg_valid: vec![false; n],
             reg_w: vec![0; n],
             scratch_a: vec![0; dim],
+            scratch_c: vec![0; dim],
+            scratch_w: vec![0; dim],
         }
     }
 
@@ -246,87 +254,75 @@ impl Mesh {
     /// Output-stationary clock edge. In-place, inverted assignment order.
     ///
     /// Hot path of the whole framework (Table III/IV/V all sit on it).
-    /// Perf notes (EXPERIMENTS.md §Perf): the north/west edge-PE cases
-    /// are peeled out of the inner loop so interior PEs run branch-free,
-    /// and the row-local state is accessed through disjoint slices so
-    /// the optimizer drops the bounds checks.
+    /// Perf notes (EXPERIMENTS.md §Perf): each row is one element-wise
+    /// [`kernel::os_row`] call — the a-chain is resolved through the
+    /// shifted pre-edge `scratch_a` copy and the north-row sources are
+    /// pre-edge slices (rows walk bottom-up), so the per-column body is
+    /// a straight-line select ladder blocked over
+    /// [`kernel::LANE_BLOCK`]-wide fixed-trip loops. Bit-identical to
+    /// the original inverted-order walk (the a-chain is the only
+    /// intra-row dependency), pinned by the fixture tests below.
     fn step_os(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
         let dim = self.dim;
         for r in (0..dim).rev() {
             let base = r * dim;
+            // shifted pre-edge a-row: the west port, then reg_a[c-1]
+            self.scratch_a[0] = inp.west_a[r];
+            self.scratch_a[1..dim].copy_from_slice(&self.reg_a[base..base + dim - 1]);
+            let bottom = r == dim - 1;
+            if bottom {
+                // pre-edge acc: the south-edge out_c source during flush
+                self.scratch_c.copy_from_slice(&self.acc[base..base + dim]);
+            }
             if r == 0 {
                 // ---- north-edge row: sources are the boundary ports ----
-                for c in (0..dim).rev() {
-                    let a_in = if c == 0 {
-                        inp.west_a[0]
-                    } else {
-                        self.reg_a[c - 1]
-                    };
-                    let b_in = inp.north_b[c];
-                    let p_in = inp.north_propag[c];
-                    let v_in = inp.north_valid[c];
-                    let d_in = inp.north_d[c];
-                    if p_in {
-                        if dim == 1 {
-                            out.set_south_c(c, self.acc[c]);
+                kernel::os_row::<true>(
+                    &self.scratch_a,
+                    &inp.north_b,
+                    &inp.north_propag,
+                    &inp.north_valid,
+                    &inp.north_d,
+                    &mut self.acc[..dim],
+                    &mut self.reg_a[..dim],
+                    &mut self.reg_b[..dim],
+                    &mut self.reg_d[..dim],
+                    &mut self.reg_propag[..dim],
+                    &mut self.reg_valid[..dim],
+                );
+                if bottom {
+                    for c in 0..dim {
+                        if inp.north_propag[c] {
+                            out.set_south_c(c, self.scratch_c[c]);
                         }
-                        self.acc[c] = d_in;
-                    } else if v_in {
-                        self.acc[c] =
-                            self.acc[c].wrapping_add(a_in as i32 * b_in as i32);
                     }
-                    self.reg_d[c] = d_in;
-                    self.reg_a[c] = a_in;
-                    self.reg_b[c] = b_in;
-                    self.reg_propag[c] = p_in;
-                    self.reg_valid[c] = v_in;
                 }
                 continue;
             }
-            // ---- interior rows ----
-            // A pre-edge snapshot of this row's `reg_a` lets the row be
-            // evaluated LEFT-TO-RIGHT with element-wise-independent
-            // operations (the only intra-row dependency is the a-chain):
-            // identical semantics to the inverted-order walk, but the
-            // loop body becomes straight-line selects the autovectorizer
-            // can lift to SIMD (§Perf iteration 2).
-            let (north, row) = (base - dim, base);
-            let bottom = r == dim - 1;
-            self.scratch_a.copy_from_slice(&self.reg_a[row..row + dim]);
-            for c in 0..dim {
-                let i = row + c;
-                let n = north + c;
-                let a_in = if c == 0 {
-                    inp.west_a[r]
-                } else {
-                    self.scratch_a[c - 1]
-                };
-                let b_in = self.reg_b[n];
-                let p_in = self.reg_propag[n];
-                let v_in = self.reg_valid[n];
-                // Inner PEs read the accumulator-chain input from their
-                // inter-PE pipeline register (which latched the northern
-                // PE's out_c wire last cycle).
-                let d_in = self.reg_d[i];
-                let out_c_north = self.acc[n]; // pre-edge: updated later
-                // ---- sequential assignments (branch-free selects) ----
-                let acc_old = self.acc[i];
-                if bottom && p_in {
-                    out.set_south_c(c, acc_old);
+            // ---- interior rows: north-row sources are pre-edge ----
+            let north = base - dim;
+            let (acc_head, acc_row) = self.acc.split_at_mut(base);
+            let (b_head, b_row) = self.reg_b.split_at_mut(base);
+            let (p_head, p_row) = self.reg_propag.split_at_mut(base);
+            let (v_head, v_row) = self.reg_valid.split_at_mut(base);
+            kernel::os_row::<false>(
+                &self.scratch_a,
+                &b_head[north..],
+                &p_head[north..],
+                &v_head[north..],
+                &acc_head[north..],
+                &mut acc_row[..dim],
+                &mut self.reg_a[base..base + dim],
+                &mut b_row[..dim],
+                &mut self.reg_d[base..base + dim],
+                &mut p_row[..dim],
+                &mut v_row[..dim],
+            );
+            if bottom {
+                for c in 0..dim {
+                    if p_head[north + c] {
+                        out.set_south_c(c, self.scratch_c[c]);
+                    }
                 }
-                let mac = acc_old.wrapping_add(a_in as i32 * b_in as i32);
-                self.acc[i] = if p_in {
-                    d_in
-                } else if v_in {
-                    mac
-                } else {
-                    acc_old
-                };
-                self.reg_d[i] = out_c_north;
-                self.reg_a[i] = a_in;
-                self.reg_b[i] = b_in;
-                self.reg_propag[i] = p_in;
-                self.reg_valid[i] = v_in;
             }
         }
         self.cycle += 1;
@@ -336,92 +332,79 @@ impl Mesh {
     /// (propagate phases), partial sums flow north→south through `acc`
     /// (acting as the psum pipeline register), activations west→east.
     ///
-    /// Mirrors `step_os`'s shape (§Perf iteration 2, WS side): the
-    /// north-edge row is peeled out so the boundary-port selects vanish
-    /// from the interior, and interior rows take a pre-edge scratch copy
-    /// of their `reg_a` so the walk runs LEFT-TO-RIGHT with
-    /// straight-line selects — the a-chain is the only intra-row
-    /// dependency, so the semantics equal the inverted-order walk while
-    /// the loop body becomes SIMD-liftable.
+    /// Mirrors `step_os`'s shape (§Perf iteration 2, WS side): each row
+    /// is one element-wise [`kernel::ws_row`] call over the shifted
+    /// pre-edge a-row and the pre-edge north-row sources; the south-edge
+    /// captures read `w_old` from the pre-edge `scratch_w` snapshot and
+    /// the completed psum from the post-edge accumulator (equal to `ps`
+    /// exactly when `!p ∧ v`). Bit-identical to the inverted-order walk.
     fn step_ws(&mut self, inp: &MeshInputs, out: &mut StepOutput) {
         let dim = self.dim;
         for r in (0..dim).rev() {
             let base = r * dim;
+            // shifted pre-edge a-row: the west port, then reg_a[c-1]
+            self.scratch_a[0] = inp.west_a[r];
+            self.scratch_a[1..dim].copy_from_slice(&self.reg_a[base..base + dim - 1]);
+            let bottom = r == dim - 1;
+            if bottom {
+                // pre-edge weights: the south-edge out_c source during preload
+                self.scratch_w.copy_from_slice(&self.reg_w[base..base + dim]);
+            }
             if r == 0 {
                 // ---- north-edge row: sources are the boundary ports ----
-                let bottom = dim == 1;
-                for c in (0..dim).rev() {
-                    let a_in = if c == 0 { inp.west_a[0] } else { self.reg_a[c - 1] };
-                    let b_in = inp.north_b[c];
-                    let p_in = inp.north_propag[c];
-                    let v_in = inp.north_valid[c];
-                    let d_in = inp.north_d[c];
-                    if p_in {
-                        // weight preload: the d-chain staircases W in;
-                        // the old weight flushes out through the chain.
-                        if bottom {
-                            out.set_south_c(c, self.reg_w[c] as i32);
-                        }
-                        self.reg_w[c] = (d_in & 0xff) as i8;
-                        self.acc[c] = d_in;
-                    } else if v_in {
-                        let ps = d_in.wrapping_add(self.reg_w[c] as i32 * a_in as i32);
-                        self.acc[c] = ps;
-                        if bottom {
-                            out.set_south_psum(c, ps);
+                kernel::ws_row::<true>(
+                    &self.scratch_a,
+                    &inp.north_b,
+                    &inp.north_propag,
+                    &inp.north_valid,
+                    &inp.north_d,
+                    &mut self.acc[..dim],
+                    &mut self.reg_a[..dim],
+                    &mut self.reg_b[..dim],
+                    &mut self.reg_d[..dim],
+                    &mut self.reg_w[..dim],
+                    &mut self.reg_propag[..dim],
+                    &mut self.reg_valid[..dim],
+                );
+                if bottom {
+                    for c in 0..dim {
+                        if inp.north_propag[c] {
+                            out.set_south_c(c, self.scratch_w[c] as i32);
+                        } else if inp.north_valid[c] {
+                            out.set_south_psum(c, self.acc[c]);
                         }
                     }
-                    self.reg_d[c] = d_in;
-                    self.reg_a[c] = a_in;
-                    self.reg_b[c] = b_in;
-                    self.reg_propag[c] = p_in;
-                    self.reg_valid[c] = v_in;
                 }
                 continue;
             }
-            // ---- interior rows: pre-edge scratch a-row, straight-line
-            // left-to-right body (see step_os) ----
+            // ---- interior rows: north-row sources are pre-edge ----
             let north = base - dim;
-            let bottom = r == dim - 1;
-            self.scratch_a.copy_from_slice(&self.reg_a[base..base + dim]);
-            for c in 0..dim {
-                let i = base + c;
-                let n = north + c;
-                let a_in = if c == 0 {
-                    inp.west_a[r]
-                } else {
-                    self.scratch_a[c - 1]
-                };
-                let b_in = self.reg_b[n];
-                let p_in = self.reg_propag[n];
-                let v_in = self.reg_valid[n];
-                let d_in = self.reg_d[i];
-                // psum + d-chain input: the northern accumulator,
-                // pre-edge (rows walk bottom-up, so row r-1 is unwritten)
-                let ps_in = self.acc[n];
-                let w_old = self.reg_w[i];
-                let ps = ps_in.wrapping_add(w_old as i32 * a_in as i32);
-                if bottom {
-                    if p_in {
-                        out.set_south_c(c, w_old as i32);
-                    } else if v_in {
-                        out.set_south_psum(c, ps);
+            let (acc_head, acc_row) = self.acc.split_at_mut(base);
+            let (b_head, b_row) = self.reg_b.split_at_mut(base);
+            let (p_head, p_row) = self.reg_propag.split_at_mut(base);
+            let (v_head, v_row) = self.reg_valid.split_at_mut(base);
+            kernel::ws_row::<false>(
+                &self.scratch_a,
+                &b_head[north..],
+                &p_head[north..],
+                &v_head[north..],
+                &acc_head[north..],
+                &mut acc_row[..dim],
+                &mut self.reg_a[base..base + dim],
+                &mut b_row[..dim],
+                &mut self.reg_d[base..base + dim],
+                &mut self.reg_w[base..base + dim],
+                &mut p_row[..dim],
+                &mut v_row[..dim],
+            );
+            if bottom {
+                for c in 0..dim {
+                    if p_head[north + c] {
+                        out.set_south_c(c, self.scratch_w[c] as i32);
+                    } else if v_head[north + c] {
+                        out.set_south_psum(c, acc_row[c]);
                     }
                 }
-                // ---- sequential assignments (branch-free selects) ----
-                self.reg_w[i] = if p_in { (d_in & 0xff) as i8 } else { w_old };
-                self.acc[i] = if p_in {
-                    d_in
-                } else if v_in {
-                    ps
-                } else {
-                    self.acc[i]
-                };
-                self.reg_d[i] = ps_in;
-                self.reg_a[i] = a_in;
-                self.reg_b[i] = b_in;
-                self.reg_propag[i] = p_in;
-                self.reg_valid[i] = v_in;
             }
         }
         self.cycle += 1;

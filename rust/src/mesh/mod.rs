@@ -10,15 +10,16 @@ pub mod adapters;
 pub mod driver;
 pub mod hdfit;
 pub mod inject;
+pub(crate) mod kernel;
 pub mod lane;
 #[allow(clippy::module_inception)]
 pub mod mesh;
 pub mod signal;
 
 pub use driver::{
-    gold_matmul, lockstep_resumed, matmul_cycles, os_matmul_cycles, tile_grid, tiled_matmul,
-    tiled_matmul_os, tiled_matmul_ws, tiled_matmul_ws_with, ws_matmul_cycles, CycleCursor,
-    CycleIndexed, DriverScratch, MatmulDriver, Schedule,
+    gold_matmul, lockstep_resumed, matmul_cycles, os_matmul_cycles, packed_lockstep_resumed,
+    tile_grid, tiled_matmul, tiled_matmul_os, tiled_matmul_ws, tiled_matmul_ws_with,
+    ws_matmul_cycles, CycleCursor, CycleIndexed, DriverScratch, LaneGroup, MatmulDriver, Schedule,
 };
 pub use inject::{Fault, FaultPlan, Injectable, PlanCursor};
 pub use lane::{LaneCursor, LaneMesh};

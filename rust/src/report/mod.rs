@@ -115,6 +115,15 @@ pub fn campaign_report_json(r: &CampaignResult, tile_engine: TileEngine, lanes: 
         ("exposed", Json::num(r.exposed_trials as f64)),
         ("masked", Json::num(r.masked_trials as f64)),
         ("rtl_cycles_stepped", Json::num(r.rtl_cycles_stepped as f64)),
+        (
+            "lane_cycles_filled",
+            Json::num(r.lane_cycles_filled as f64),
+        ),
+        (
+            "lane_cycles_stepped",
+            Json::num(r.lane_cycles_stepped as f64),
+        ),
+        ("lane_occupancy", Json::num(r.lane_occupancy())),
         ("vf", Json::num(r.vf())),
         ("per_layer", Json::Arr(per_layer)),
     ])
@@ -190,12 +199,17 @@ mod tests {
         r.exposed_trials = 3;
         r.masked_trials = 5;
         r.rtl_cycles_stepped = 1234;
+        r.lane_cycles_filled = 900;
+        r.lane_cycles_stepped = 1200;
         let v = r.vuln;
         r.per_layer.insert(0, v);
         let j = campaign_report_json(&r, TileEngine::CycleResume, 8);
         let text = j.pretty();
         assert!(!text.contains("wall"), "report must be wall-clock free");
         assert_eq!(j.get("trials").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("lane_cycles_filled").unwrap().as_usize(), Some(900));
+        assert_eq!(j.get("lane_cycles_stepped").unwrap().as_usize(), Some(1200));
+        assert_eq!(j.get("lane_occupancy").unwrap().as_f64(), Some(0.75));
         assert_eq!(j.get("per_layer").unwrap().as_arr().unwrap().len(), 1);
         // identical inputs -> identical bytes, the journal's diff contract
         let mut r2 = r.clone();

@@ -15,6 +15,13 @@
 //!    (one persistent chip cannot carry N lanes, but its controller is
 //!    schedule-indexable) — bit- and cycle-identical to the engine
 //!    they fall back to.
+//! 4. (ROADMAP "Cross-tile lane packing") `packed-lockstep` is
+//!    bit-identical to all three other engines at any lane count,
+//!    scenario, dataflow and worker sharding; it never steps MORE
+//!    cycles than lane-lockstep, steps STRICTLY fewer once low
+//!    faults-per-layer scatter trials across tiles (cross-tile chunks
+//!    pay max(span) instead of sum(span)), and degenerates to
+//!    cycle-resume cycle-exactly when every chunk is one trial.
 
 use enfor_sa::campaign::{run_campaign, CampaignResult};
 use enfor_sa::config::{
@@ -156,6 +163,115 @@ fn prop_lockstep_steps_strictly_fewer_cycles_and_one_lane_degenerates() {
     }
 }
 
+/// Contract 4: the four-engine bit-identity matrix at sparse fault
+/// budgets (`faults_per_layer` 1 and 2), where lane-lockstep's
+/// same-tile chunks mostly hold ONE trial and only the cross-tile
+/// packer can still batch. Packed never steps more cycles than
+/// lockstep; at 2 faults/layer it must step STRICTLY fewer (some batch
+/// lands its two trials on different tiles of a multi-tile site and
+/// the packer merges them into one chunk); at 1 fault/layer every
+/// chunk is a single trial, so all three resumable engines agree on
+/// the cycle count exactly.
+#[test]
+fn prop_packed_batches_cross_tile_trials_at_sparse_fault_budgets() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        for fpl in [1u64, 2] {
+            let mut full = cfg(Backend::EnforSa, TileEngine::Full, 8);
+            full.faults_per_layer = fpl;
+            let oracle = run_campaign(&model, &mc, &full).unwrap();
+            let mut resume = full.clone();
+            resume.tile_engine = TileEngine::CycleResume;
+            let r = run_campaign(&model, &mc, &resume).unwrap();
+            let mut lock = full.clone();
+            lock.tile_engine = TileEngine::LaneLockstep;
+            let l = run_campaign(&model, &mc, &lock).unwrap();
+            let mut packed = full.clone();
+            packed.tile_engine = TileEngine::PackedLockstep;
+            let p = run_campaign(&model, &mc, &packed).unwrap();
+            for (x, label) in [(&r, "cycle-resume"), (&l, "lockstep"), (&p, "packed")] {
+                assert_bit_identical(&oracle, x, &format!("{dataflow}/fpl={fpl}/{label}"));
+            }
+            assert!(
+                p.rtl_cycles_stepped <= l.rtl_cycles_stepped,
+                "{dataflow}/fpl={fpl}: packed must never step more cycles than lockstep"
+            );
+            if fpl == 1 {
+                // single-trial chunks: every resumable engine walks the
+                // same per-trial trajectory
+                assert_eq!(p.rtl_cycles_stepped, r.rtl_cycles_stepped, "{dataflow}");
+                assert_eq!(l.rtl_cycles_stepped, r.rtl_cycles_stepped, "{dataflow}");
+            } else {
+                assert!(
+                    p.rtl_cycles_stepped < l.rtl_cycles_stepped,
+                    "{dataflow}/fpl=2: packed must batch cross-tile trials lockstep \
+                     cannot: {} vs {}",
+                    p.rtl_cycles_stepped,
+                    l.rtl_cycles_stepped
+                );
+            }
+        }
+    }
+}
+
+/// Contract 4 (worker axis): packed campaigns are worker-count
+/// invariant, cycle and occupancy accounting included — the packing
+/// domain is one (input, site) batch, which is exactly the work unit
+/// the coordinator shards.
+#[test]
+fn prop_packed_is_worker_count_invariant() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut base = cfg(Backend::EnforSa, TileEngine::PackedLockstep, 4);
+        base.inputs = 2;
+        let one = run_parallel(&model, &mc, &base, None).unwrap();
+        for workers in [2usize, 3] {
+            let mut sharded = base.clone();
+            sharded.workers = workers;
+            let w = run_parallel(&model, &mc, &sharded, None).unwrap();
+            assert_bit_identical(&one, &w, &format!("{dataflow}/packed workers={workers}"));
+            assert_eq!(
+                one.rtl_cycles_stepped, w.rtl_cycles_stepped,
+                "{dataflow}: packed cycle accounting must not depend on workers={workers}"
+            );
+            assert_eq!(
+                (one.lane_cycles_filled, one.lane_cycles_stepped),
+                (w.lane_cycles_filled, w.lane_cycles_stepped),
+                "{dataflow}: packed occupancy accounting must not depend on workers={workers}"
+            );
+        }
+    }
+}
+
+/// Contract 4 (semantic axis): packed agrees with the full oracle for
+/// every scenario, dataflow and lane count — packing is an
+/// optimization, never a semantic change.
+#[test]
+fn prop_packed_matches_oracles_for_every_scenario_dataflow_and_lane_count() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        for scenario in SCENARIOS {
+            let mut full = cfg(Backend::EnforSa, TileEngine::Full, 8);
+            full.scenario = scenario;
+            let oracle = run_campaign(&model, &mc, &full).unwrap();
+            for lanes in [1usize, 2, 7, 8] {
+                let mut packed = full.clone();
+                packed.tile_engine = TileEngine::PackedLockstep;
+                packed.lanes = lanes;
+                let p = run_campaign(&model, &mc, &packed).unwrap();
+                assert_bit_identical(
+                    &oracle,
+                    &p,
+                    &format!("{dataflow}/{scenario}/packed lanes={lanes}"),
+                );
+            }
+        }
+    }
+}
+
 /// Contract 3: HDFIT rejects lane batching (instrumentation hooks arm
 /// one mesh instance) and must degrade to cycle-resume bit- and
 /// cycle-identically.
@@ -164,12 +280,14 @@ fn prop_hdfit_lockstep_degrades_to_cycle_resume() {
     let model = models::quicknet(5);
     for dataflow in DATAFLOWS {
         let mc = mesh_cfg(dataflow);
-        let lock = cfg(Backend::Hdfit, TileEngine::LaneLockstep, 8);
-        let a = run_campaign(&model, &mc, &lock).unwrap();
-        let resume = cfg(Backend::Hdfit, TileEngine::CycleResume, 8);
-        let b = run_campaign(&model, &mc, &resume).unwrap();
-        assert_bit_identical(&a, &b, &format!("{dataflow}: hdfit fallback"));
-        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+        for engine in [TileEngine::LaneLockstep, TileEngine::PackedLockstep] {
+            let lock = cfg(Backend::Hdfit, engine, 8);
+            let a = run_campaign(&model, &mc, &lock).unwrap();
+            let resume = cfg(Backend::Hdfit, TileEngine::CycleResume, 8);
+            let b = run_campaign(&model, &mc, &resume).unwrap();
+            assert_bit_identical(&a, &b, &format!("{dataflow}/{engine}: hdfit fallback"));
+            assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}/{engine}");
+        }
     }
 }
 
@@ -183,13 +301,15 @@ fn prop_full_soc_lockstep_degrades_to_cycle_resume() {
         // the whole-SoC backend steps the entire chip per cycle — keep
         // the mesh small and the budget minimal, like every other SoC pin
         let mc = MeshConfig { dim: 4, dataflow };
-        let mut lock = cfg(Backend::FullSoc, TileEngine::LaneLockstep, 8);
-        lock.faults_per_layer = 1;
-        let a = run_campaign(&model, &mc, &lock).unwrap();
-        let mut resume = cfg(Backend::FullSoc, TileEngine::CycleResume, 8);
-        resume.faults_per_layer = 1;
-        let b = run_campaign(&model, &mc, &resume).unwrap();
-        assert_bit_identical(&a, &b, &format!("{dataflow}: full-soc fallback"));
-        assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}");
+        for engine in [TileEngine::LaneLockstep, TileEngine::PackedLockstep] {
+            let mut lock = cfg(Backend::FullSoc, engine, 8);
+            lock.faults_per_layer = 1;
+            let a = run_campaign(&model, &mc, &lock).unwrap();
+            let mut resume = cfg(Backend::FullSoc, TileEngine::CycleResume, 8);
+            resume.faults_per_layer = 1;
+            let b = run_campaign(&model, &mc, &resume).unwrap();
+            assert_bit_identical(&a, &b, &format!("{dataflow}/{engine}: full-soc fallback"));
+            assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}/{engine}");
+        }
     }
 }
