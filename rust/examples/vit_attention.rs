@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             lanes: 8,
             signals: vec![],
             scenario: Default::default(),
+            hardening: Default::default(),
             workers: 1,
         };
         let r = run_campaign(&model, &mesh_cfg, &cfg)?;

@@ -5,8 +5,8 @@
 
 use crate::campaign::{run_campaign, CampaignResult};
 use crate::config::{
-    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
-    TrialEngine,
+    Backend, CampaignConfig, Dataflow, HardeningConfig, MeshConfig, OffloadScope, Scenario,
+    TileEngine, TrialEngine,
 };
 use crate::coordinator::run_parallel;
 use crate::dnn::models;
@@ -232,6 +232,15 @@ pub struct InjectionRow {
     /// (schema v8). Same seed, bit-identical counts; the wall ratio
     /// against `rtl_mem` prices the durability layer.
     pub rtl_journal: CampaignResult,
+    /// Mitigation config of the hardened twin campaign below (schema
+    /// v10; ABFT by default, or the caller's `--hardening` when armed).
+    pub hardening: HardeningConfig,
+    /// Identical campaign with ONLY the hardening axis armed — same
+    /// seed, same struck-trial set as `rtl` (mitigation happens at the
+    /// splice seam, after sampling); the verdict counters yield the
+    /// detection/correction coverage and the wall ratio against `rtl`
+    /// prices the mitigation checks.
+    pub rtl_hardened: CampaignResult,
 }
 
 impl InjectionRow {
@@ -340,6 +349,28 @@ impl InjectionRow {
     pub fn journal_overhead(&self) -> f64 {
         self.rtl_journal.wall.as_secs_f64() / self.rtl_mem.wall.as_secs_f64()
     }
+
+    /// Detection coverage of the hardened twin: struck trials whose
+    /// mitigation raised an alarm (or corrected), over struck trials
+    /// (schema v10). Deterministic per seed, so CI asserts it > 0 for
+    /// ABFT on seu campaigns.
+    pub fn detection_coverage(&self) -> f64 {
+        self.rtl_hardened.detection_coverage()
+    }
+
+    /// Correction coverage of the hardened twin: struck trials fully
+    /// restored by the mitigation, over struck trials (schema v10).
+    pub fn correction_coverage(&self) -> f64 {
+        self.rtl_hardened.correction_coverage()
+    }
+
+    /// Wall-clock cost of the armed mitigation (schema v10): the
+    /// hardened campaign over the identical unhardened one. CI's bench
+    /// smoke asserts the mean stays < 1.25 — the checksum/vote passes
+    /// are O(tile) like the splice compare they ride on.
+    pub fn hardening_overhead(&self) -> f64 {
+        self.rtl_hardened.wall.as_secs_f64() / self.rtl.wall.as_secs_f64()
+    }
 }
 
 /// Table VI: run SW-only and ENFOR-SA campaigns for each named model,
@@ -421,6 +452,17 @@ pub fn injection_table(
         )?;
         let _ = std::fs::remove_dir_all(&scratch);
         let rtl_journal = journaled.result;
+        // schema v10: the hardened twin — same seed, same struck-trial
+        // set (sampling never consumes the hardening config), ABFT by
+        // default so the coverage columns are non-trivial even when the
+        // caller benches an unhardened base config
+        let mut hard_cfg = rtl_cfg.clone();
+        hard_cfg.hardening = if base.hardening.is_none() {
+            HardeningConfig { abft: true, ..Default::default() }
+        } else {
+            base.hardening
+        };
+        let rtl_hardened = run_campaign(&model, mesh_cfg, &hard_cfg)?;
         rows.push(InjectionRow {
             model: model.name.clone(),
             dataflow: mesh_cfg.dataflow,
@@ -435,6 +477,8 @@ pub fn injection_table(
             soc_tile_full,
             rtl_mem,
             rtl_journal,
+            hardening: hard_cfg.hardening,
+            rtl_hardened,
         });
     }
     Ok(rows)
@@ -495,7 +539,13 @@ pub fn injection_table_dataflows(
 /// lockstep baseline, and the lane-occupancy pair `lane_occupancy`
 /// (packed) / `lane_occupancy_lockstep` (filled over stepped
 /// lane-cycles — the idle-lane waste the packer reclaims), plus
-/// top-level means of all three.
+/// top-level means of all three. Schema v10 adds the hardening axis
+/// (ROADMAP "Hardening-evaluation axis"): per-model `hardening` label,
+/// `hardened_wall_s`, the deterministic `detection_coverage` /
+/// `correction_coverage` of the hardened twin campaign and the
+/// wall-clock `hardening_overhead` ratio vs the unhardened run, plus
+/// top-level means of all three — the CI bench smoke asserts
+/// `mean_hardening_overhead` < 1.25.
 pub fn injection_snapshot_json(
     rows: &[InjectionRow],
     faults_per_layer: u64,
@@ -573,6 +623,14 @@ pub fn injection_snapshot_json(
                     Json::num(r.rtl_journal.wall.as_secs_f64()),
                 ),
                 ("journal_overhead", Json::num(r.journal_overhead())),
+                ("hardening", Json::str(r.hardening.to_string())),
+                (
+                    "hardened_wall_s",
+                    Json::num(r.rtl_hardened.wall.as_secs_f64()),
+                ),
+                ("detection_coverage", Json::num(r.detection_coverage())),
+                ("correction_coverage", Json::num(r.correction_coverage())),
+                ("hardening_overhead", Json::num(r.hardening_overhead())),
             ])
         })
         .collect();
@@ -590,7 +648,7 @@ pub fn injection_snapshot_json(
     // but read per row so mixed-lane tables stay representable
     let lanes = rows.first().map_or(0, |r| r.lanes);
     Json::obj(vec![
-        ("schema", Json::str("enfor-sa/injection-overhead/v9")),
+        ("schema", Json::str("enfor-sa/injection-overhead/v10")),
         ("label", Json::str(label)),
         ("scenario", Json::str(scenario.to_string())),
         (
@@ -645,6 +703,18 @@ pub fn injection_snapshot_json(
             "mean_journal_overhead",
             Json::num(rows.iter().map(|r| r.journal_overhead()).sum::<f64>() / n),
         ),
+        (
+            "mean_detection_coverage",
+            Json::num(rows.iter().map(|r| r.detection_coverage()).sum::<f64>() / n),
+        ),
+        (
+            "mean_correction_coverage",
+            Json::num(rows.iter().map(|r| r.correction_coverage()).sum::<f64>() / n),
+        ),
+        (
+            "mean_hardening_overhead",
+            Json::num(rows.iter().map(|r| r.hardening_overhead()).sum::<f64>() / n),
+        ),
         ("models", Json::Arr(models)),
     ])
 }
@@ -679,7 +749,7 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_schema_v9_carries_dataflow_scenario_and_cycle_accounting() {
+    fn snapshot_schema_v10_carries_dataflow_scenario_and_cycle_accounting() {
         let names = vec!["quicknet".to_string()];
         let cc = CampaignConfig {
             faults_per_layer: 2,
@@ -698,7 +768,7 @@ mod tests {
         let j = injection_snapshot_json(&rows, 2, 1, cc.scenario, "test");
         assert_eq!(
             j.get("schema").and_then(Json::as_str),
-            Some("enfor-sa/injection-overhead/v9")
+            Some("enfor-sa/injection-overhead/v10")
         );
         assert_eq!(j.get("scenario").and_then(Json::as_str), Some("mbu:2"));
         assert_eq!(j.get("lanes").and_then(Json::as_f64), Some(8.0));
@@ -814,6 +884,50 @@ mod tests {
         assert!(
             j.get("mean_journal_overhead").and_then(Json::as_f64).unwrap() > 0.0
         );
+        // the v10 hardening axis: label, wall, coverage pair, overhead
+        assert_eq!(m0.get("hardening").and_then(Json::as_str), Some("abft"));
+        assert!(m0.get("hardened_wall_s").and_then(Json::as_f64).unwrap() > 0.0);
+        let det = m0.get("detection_coverage").and_then(Json::as_f64).unwrap();
+        let cor = m0.get("correction_coverage").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&det), "coverage is a fraction: {det}");
+        assert!((0.0..=1.0).contains(&cor) && cor <= det, "corrected implies detected");
+        assert!(m0.get("hardening_overhead").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(
+            j.get("mean_detection_coverage").and_then(Json::as_f64).unwrap() >= 0.0
+        );
+        assert!(
+            j.get("mean_hardening_overhead").and_then(Json::as_f64).unwrap() > 0.0
+        );
+    }
+
+    #[test]
+    fn hardened_twin_keeps_the_unhardened_struck_set() {
+        // the v10 acceptance bar at the benchkit layer: the hardened
+        // twin samples the SAME trials (sampling never consumes the
+        // hardening config), so trials match, its struck set equals the
+        // baseline's exposed + critical, and ABFT detects seu strikes.
+        let names = vec!["quicknet".to_string()];
+        let cc = CampaignConfig {
+            faults_per_layer: 8,
+            inputs: 2,
+            ..Default::default()
+        };
+        let rows = injection_table(&names, &MeshConfig::default(), &cc).unwrap();
+        let r = &rows[0];
+        assert_eq!(r.hardening, HardeningConfig { abft: true, ..Default::default() });
+        assert_eq!(r.rtl.vuln.trials, r.rtl_hardened.vuln.trials);
+        assert_eq!(
+            r.rtl_hardened.struck_trials(),
+            r.rtl.exposed_trials + r.rtl.vuln.critical,
+            "mitigation runs at the splice seam, after the strike is decided"
+        );
+        if r.rtl_hardened.struck_trials() > 0 {
+            assert!(
+                r.detection_coverage() > 0.0,
+                "ABFT checksums must notice at least one seu strike"
+            );
+        }
+        assert!(r.hardening_overhead() > 0.0);
     }
 
     #[test]

@@ -41,10 +41,11 @@
 //! (ROADMAP "Schedule-indexable SoC").
 
 use super::fault::{sample_trial, TrialFault};
+use super::maps::exposure_map_for;
 use super::runner::{CrossLayerRunner, PackedGroup, TileBackend};
 use crate::config::{
-    Backend, CampaignConfig, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
-    TrialEngine,
+    Backend, CampaignConfig, Dataflow, HardeningConfig, MeshConfig, OffloadScope, Scenario,
+    TileEngine, TrialEngine,
 };
 use crate::dnn::engine::probe_input;
 use crate::dnn::engine::synthetic_input;
@@ -68,6 +69,23 @@ pub enum TrialOutcome {
     Exposed,
     /// Top-1 classification flipped vs the golden run.
     Critical,
+}
+
+/// Mitigation verdict of one *struck* trial under an armed
+/// [`HardeningConfig`] — disjoint, priority corrected > detected >
+/// escaped. Unstruck trials (and every trial of a `--hardening none`
+/// campaign) carry no verdict; the three verdict counters therefore sum
+/// to the campaign's struck-trial count, the coverage denominator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MitVerdict {
+    /// A detector (ABFT checksum or the SDC logit detector) flagged the
+    /// corruption, but mitigation could not restore it.
+    Detected,
+    /// Mitigation restored the struck region to golden bit-exactly
+    /// (the trial classifies as masked).
+    Corrected,
+    /// No armed mechanism caught the corruption.
+    Escaped,
 }
 
 /// Aggregated campaign result for one model on one backend.
@@ -98,6 +116,15 @@ pub struct CampaignResult {
     /// is the campaign's lane-occupancy metric — the figure cross-tile
     /// packing exists to raise.
     pub lane_cycles_stepped: u64,
+    /// Hardening only: struck trials whose [`MitVerdict`] was
+    /// `Detected`. Zero for `--hardening none` campaigns.
+    pub detected_trials: u64,
+    /// Hardening only: struck trials whose [`MitVerdict`] was
+    /// `Corrected` (re-classified as masked by the restored splice).
+    pub corrected_trials: u64,
+    /// Hardening only: struck trials whose [`MitVerdict`] was
+    /// `Escaped`.
+    pub escaped_trials: u64,
     pub wall: Duration,
     pub per_layer: BTreeMap<usize, VulnEstimate>,
 }
@@ -119,6 +146,36 @@ impl CampaignResult {
             self.lane_cycles_filled as f64 / self.lane_cycles_stepped as f64
         }
     }
+
+    /// Struck trials: the coverage denominator (the trials whose RTL
+    /// region differed from golden before mitigation ran — exactly the
+    /// exposed trials of the same seed under `--hardening none`).
+    pub fn struck_trials(&self) -> u64 {
+        self.detected_trials + self.corrected_trials + self.escaped_trials
+    }
+
+    /// Detection coverage of the hardening under evaluation: the
+    /// fraction of struck trials an armed mechanism caught (detected or
+    /// corrected). 0.0 when nothing struck.
+    pub fn detection_coverage(&self) -> f64 {
+        let struck = self.struck_trials();
+        if struck == 0 {
+            0.0
+        } else {
+            (self.detected_trials + self.corrected_trials) as f64 / struck as f64
+        }
+    }
+
+    /// Correction coverage: the fraction of struck trials mitigation
+    /// restored to golden bit-exactly. 0.0 when nothing struck.
+    pub fn correction_coverage(&self) -> f64 {
+        let struck = self.struck_trials();
+        if struck == 0 {
+            0.0
+        } else {
+            self.corrected_trials as f64 / struck as f64
+        }
+    }
 }
 
 impl CampaignResult {
@@ -130,6 +187,9 @@ impl CampaignResult {
         self.rtl_cycles_stepped += other.rtl_cycles_stepped;
         self.lane_cycles_filled += other.lane_cycles_filled;
         self.lane_cycles_stepped += other.lane_cycles_stepped;
+        self.detected_trials += other.detected_trials;
+        self.corrected_trials += other.corrected_trials;
+        self.escaped_trials += other.escaped_trials;
         self.wall += other.wall;
         for (layer, v) in &other.per_layer {
             self.per_layer.entry(*layer).or_default().merge(v);
@@ -153,6 +213,9 @@ impl CampaignResult {
             rtl_cycles_stepped: 0,
             lane_cycles_filled: 0,
             lane_cycles_stepped: 0,
+            detected_trials: 0,
+            corrected_trials: 0,
+            escaped_trials: 0,
             wall: Duration::ZERO,
             per_layer: BTreeMap::new(),
         }
@@ -286,7 +349,36 @@ pub struct TrialExecutor {
     /// Lane count for the lane-lockstep tile engine (ignored otherwise).
     lanes: usize,
     scope: OffloadScope,
+    /// The campaign's `--hardening` axis, armed on every RTL runner.
+    hardening: HardeningConfig,
+    /// Selective-TMR column set (empty unless `tmr:<cols>` is armed),
+    /// precomputed once per executor — see [`tmr_columns`].
+    tmr_protected: Vec<bool>,
     sim: Sim,
+}
+
+/// The selective-TMR column set: rank PE columns by the dataflow's Acc
+/// exposure map ([`exposure_map_for`], `col_mean` descending, ties to
+/// the lower index) and protect the top `cols`. The map is sampled on
+/// its own fresh mesh from fixed literals, so the set depends only on
+/// `(dataflow, dim, cols)` — every worker, tile engine and sharding
+/// derives the same columns, keeping hardened campaigns bit-identical
+/// across all of them.
+pub fn tmr_columns(mesh_cfg: &MeshConfig, cols: usize) -> Vec<bool> {
+    let dim = mesh_cfg.dim;
+    let map = exposure_map_for(mesh_cfg.dataflow, dim, 2 * dim, SignalKind::Acc, 8, 0xC0FFEE);
+    let mut rank: Vec<usize> = (0..dim).collect();
+    rank.sort_by(|&a, &b| {
+        map.col_mean(b)
+            .partial_cmp(&map.col_mean(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut protected = vec![false; dim];
+    for &c in rank.iter().take(cols.min(dim)) {
+        protected[c] = true;
+    }
+    protected
 }
 
 impl TrialExecutor {
@@ -304,11 +396,18 @@ impl TrialExecutor {
             }
             Backend::SwOnly => Sim::Sw,
         };
+        let tmr_protected = if cfg.hardening.tmr_cols > 0 && cfg.backend != Backend::SwOnly {
+            tmr_columns(mesh_cfg, cfg.hardening.tmr_cols)
+        } else {
+            Vec::new()
+        };
         TrialExecutor {
             engine: cfg.engine,
             tile_engine: cfg.tile_engine,
             lanes: cfg.lanes.max(1),
             scope: cfg.offload_scope,
+            hardening: cfg.hardening,
+            tmr_protected,
             sim,
         }
     }
@@ -325,12 +424,14 @@ impl TrialExecutor {
         let layer = batch.info.site.layer;
         match &mut self.sim {
             Sim::Sw => {
+                // the SW backend has no RTL seam to harden: trials carry
+                // no mitigation verdict (coverage is an RTL-axis metric)
                 for t in &batch.trials {
                     let PlannedTrial::Sw(sw_plan) = t else {
                         unreachable!("RTL trial routed to the SW backend")
                     };
                     let outcome = run_sw_trial(model, plan, sw_plan, self.engine);
-                    record(result, layer, outcome);
+                    record(result, layer, (outcome, None));
                 }
             }
             Sim::Mesh(m) => run_rtl_batch(
@@ -342,6 +443,8 @@ impl TrialExecutor {
                 self.engine,
                 self.tile_engine,
                 self.lanes,
+                self.hardening,
+                &self.tmr_protected,
                 result,
             ),
             Sim::Hdfit(m) => run_rtl_batch(
@@ -353,6 +456,8 @@ impl TrialExecutor {
                 self.engine,
                 self.tile_engine,
                 self.lanes,
+                self.hardening,
+                &self.tmr_protected,
                 result,
             ),
             // the SoC path always offloads a single tile (whole-layer
@@ -370,6 +475,8 @@ impl TrialExecutor {
                 self.engine,
                 self.tile_engine,
                 self.lanes,
+                self.hardening,
+                &self.tmr_protected,
                 result,
             ),
         }
@@ -417,18 +524,29 @@ fn run_rtl_batch(
     engine: TrialEngine,
     tile_engine: TileEngine,
     lanes: usize,
+    hardening: HardeningConfig,
+    tmr_protected: &[bool],
     result: &mut CampaignResult,
 ) {
     let layer = batch.info.site.layer;
     if batch.trials.is_empty() {
         return;
     }
+    // control-path plans corrupt the shared schedule bookkeeping (fill
+    // redirection + drain counters), which the SoA lane meshes do not
+    // model — batches carrying one fall back to per-trial cycle-resume,
+    // the same fallback shape as the HDFIT/SoC backends. Per-batch
+    // gating keeps the fallback worker-count invariant (batches are the
+    // sharding unit).
+    let has_ctrl = (0..batch.trials.len()).any(|i| rtl_trial(batch, i).plan.has_control());
     let lockstep = tile_engine == TileEngine::LaneLockstep
         && scope == OffloadScope::SingleTile
-        && backend.supports_lane_lockstep();
+        && backend.supports_lane_lockstep()
+        && !has_ctrl;
     let packed = tile_engine == TileEngine::PackedLockstep
         && scope == OffloadScope::SingleTile
-        && backend.supports_lane_lockstep();
+        && backend.supports_lane_lockstep()
+        && !has_ctrl;
     let resumable = matches!(
         tile_engine,
         TileEngine::CycleResume | TileEngine::LaneLockstep | TileEngine::PackedLockstep
@@ -444,6 +562,8 @@ fn run_rtl_batch(
     let mut runner =
         CrossLayerRunner::with_engine(rtl_trial(batch, order[0]), backend, scope, tile_engine);
     runner.lane_capacity = lanes;
+    runner.hardening = hardening;
+    runner.tmr_protected = tmr_protected.to_vec();
     if lockstep || packed {
         // form the maximal same-tile runs of the sorted order, <= lanes
         // trials each — the lockstep chunks, and the packer's atoms
@@ -536,17 +656,41 @@ fn rtl_trial(batch: &SiteBatch, i: usize) -> &TrialFault {
     }
 }
 
+/// The armed trial's mitigation verdict, from the runner's splice-seam
+/// flags plus the trial-level SDC logit detector. `None` for unstruck
+/// trials and for `--hardening none` campaigns (the coverage metrics
+/// count struck trials only).
+fn mit_verdict(
+    runner: &CrossLayerRunner<'_>,
+    h: &HardeningConfig,
+    sdc_detected: bool,
+) -> Option<MitVerdict> {
+    if h.is_none() || !runner.mit_struck {
+        return None;
+    }
+    Some(if runner.mit_corrected {
+        MitVerdict::Corrected
+    } else if runner.mit_detected || sdc_detected {
+        MitVerdict::Detected
+    } else {
+        MitVerdict::Escaped
+    })
+}
+
 fn run_rtl_trial(
     model: &Model,
     plan: &InputPlan,
     runner: &mut CrossLayerRunner<'_>,
     engine: TrialEngine,
-) -> TrialOutcome {
+) -> (TrialOutcome, Option<MitVerdict>) {
+    let h = runner.hardening;
     match engine {
         TrialEngine::FullForward => {
             let logits = model.forward(&plan.x, Some(&mut *runner));
             debug_assert!(runner.hit, "trial site not reached: [{}]", runner.trial);
-            classify(runner.exposed, argmax(&logits.data) != plan.golden_top1)
+            let sdc = h.detect && logits != plan.golden_logits;
+            let outcome = classify(runner.exposed, argmax(&logits.data) != plan.golden_top1);
+            (outcome, mit_verdict(runner, &h, sdc))
         }
         TrialEngine::SiteResume => {
             let li = runner.trial.site.layer;
@@ -560,14 +704,17 @@ fn run_rtl_trial(
             debug_assert!(runner.hit, "trial site not reached: [{}]", runner.trial);
             if !runner.exposed {
                 // The splice change-flag says the fault never escaped
-                // the array: the layer output is bit-identical to the
-                // golden pass, so the downstream recompute is skipped
-                // entirely (logits := golden logits).
-                return TrialOutcome::Masked;
+                // the array (or mitigation restored it): the layer
+                // output is bit-identical to the golden pass, so the
+                // downstream recompute is skipped entirely (logits :=
+                // golden logits — the SDC detector has nothing to flag).
+                return (TrialOutcome::Masked, mit_verdict(runner, &h, false));
             }
             // phase 2: only the downstream layers run, hook-free
             let logits = model.resume_logits(li + 1, act, None);
-            classify(true, argmax(&logits.data) != plan.golden_top1)
+            let sdc = h.detect && logits != plan.golden_logits;
+            let outcome = classify(true, argmax(&logits.data) != plan.golden_top1);
+            (outcome, mit_verdict(runner, &h, sdc))
         }
     }
 }
@@ -653,7 +800,11 @@ fn classify(exposed: bool, critical: bool) -> TrialOutcome {
     }
 }
 
-fn record(result: &mut CampaignResult, layer: usize, outcome: TrialOutcome) {
+fn record(
+    result: &mut CampaignResult,
+    layer: usize,
+    (outcome, verdict): (TrialOutcome, Option<MitVerdict>),
+) {
     let critical = outcome == TrialOutcome::Critical;
     result.vuln.record(critical);
     result.per_layer.entry(layer).or_default().record(critical);
@@ -661,6 +812,12 @@ fn record(result: &mut CampaignResult, layer: usize, outcome: TrialOutcome) {
         TrialOutcome::Masked => result.masked_trials += 1,
         TrialOutcome::Exposed => result.exposed_trials += 1,
         TrialOutcome::Critical => {}
+    }
+    match verdict {
+        Some(MitVerdict::Detected) => result.detected_trials += 1,
+        Some(MitVerdict::Corrected) => result.corrected_trials += 1,
+        Some(MitVerdict::Escaped) => result.escaped_trials += 1,
+        None => {}
     }
 }
 
@@ -683,6 +840,7 @@ mod tests {
                 lanes: 8,
                 signals: vec![],
                 scenario: Scenario::Seu,
+                hardening: HardeningConfig::default(),
                 workers: 1,
             },
         )
@@ -1124,6 +1282,128 @@ mod tests {
                 assert_eq!(a.rtl_cycles_stepped, b.rtl_cycles_stepped, "{dataflow}/{engine}");
             }
         }
+    }
+
+    #[test]
+    fn hardened_campaign_partitions_verdicts_against_the_none_baseline() {
+        // verdicts are disjoint per struck trial and the struck count
+        // equals the same seed's exposed+critical under `none` (the
+        // pre-mitigation region compare is identical); corrected trials
+        // re-classify as masked, one for one
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        let none = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(none.struck_trials(), 0, "none-mode campaigns carry no verdicts");
+        assert_eq!(none.detection_coverage(), 0.0);
+
+        cfg.hardening = HardeningConfig::parse("abft+detect").expect("valid hardening");
+        let hard = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(hard.vuln.trials, none.vuln.trials);
+        assert_eq!(
+            hard.struck_trials(),
+            none.exposed_trials + none.vuln.critical,
+            "struck trials = the none-baseline's escaped-the-array trials"
+        );
+        assert!(hard.corrected_trials > 0, "ABFT corrects single-element SEUs");
+        assert!(hard.detection_coverage() > 0.0);
+        assert!(hard.correction_coverage() <= hard.detection_coverage());
+        assert_eq!(
+            hard.masked_trials,
+            none.masked_trials + hard.corrected_trials,
+            "every corrected trial re-classifies as masked"
+        );
+    }
+
+    #[test]
+    fn full_width_tmr_corrects_every_strike() {
+        // protecting all dim columns triplicates the whole array: every
+        // struck trial is voted back to golden, so the campaign reports
+        // full correction coverage and zero criticals
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.hardening = HardeningConfig::parse("tmr:8").expect("valid hardening");
+        let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert!(r.struck_trials() > 0, "some trials must strike");
+        assert_eq!(r.corrected_trials, r.struck_trials());
+        assert_eq!(r.correction_coverage(), 1.0);
+        assert_eq!(r.vuln.critical, 0);
+        assert_eq!(r.masked_trials, r.vuln.trials);
+    }
+
+    #[test]
+    fn hardened_campaigns_agree_across_tile_engines() {
+        // the engine-agreement invariant extends to the hardening axis:
+        // verdict counters are bit-identical across all four engines
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.faults_per_layer = 16;
+        cfg.inputs = 1;
+        cfg.hardening = HardeningConfig::parse("clip:-65536,65535+abft+detect")
+            .expect("valid hardening");
+        cfg.tile_engine = TileEngine::Full;
+        let full = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        for engine in [
+            TileEngine::CycleResume,
+            TileEngine::LaneLockstep,
+            TileEngine::PackedLockstep,
+        ] {
+            cfg.tile_engine = engine;
+            let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(r.vuln.critical, full.vuln.critical, "{engine}");
+            assert_eq!(r.exposed_trials, full.exposed_trials, "{engine}");
+            assert_eq!(r.masked_trials, full.masked_trials, "{engine}");
+            assert_eq!(r.detected_trials, full.detected_trials, "{engine}");
+            assert_eq!(r.corrected_trials, full.corrected_trials, "{engine}");
+            assert_eq!(r.escaped_trials, full.escaped_trials, "{engine}");
+        }
+    }
+
+    #[test]
+    fn control_fault_campaign_runs_and_lane_engines_fall_back() {
+        // the control-path fault target: campaigns restricted to the
+        // sequencer/drain-FSM kind execute on every engine, and the
+        // lane-batched engines fall back to per-trial cycle-resume
+        // (identical counts AND identical cycle accounting) because the
+        // SoA lane meshes do not model schedule corruption
+        let model = models::quicknet(5);
+        let (mesh_cfg, mut cfg) = small_cfg(Backend::EnforSa);
+        cfg.signals = vec!["control".into()];
+        cfg.tile_engine = TileEngine::Full;
+        let full = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(full.vuln.trials, 40);
+        assert_eq!(
+            full.vuln.trials,
+            full.masked_trials + full.exposed_trials + full.vuln.critical,
+            "outcomes must partition trials"
+        );
+        cfg.tile_engine = TileEngine::CycleResume;
+        let resume = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+        assert_eq!(resume.vuln.critical, full.vuln.critical);
+        assert_eq!(resume.exposed_trials, full.exposed_trials);
+        assert_eq!(resume.masked_trials, full.masked_trials);
+        for engine in [TileEngine::LaneLockstep, TileEngine::PackedLockstep] {
+            cfg.tile_engine = engine;
+            let r = run_campaign(&model, &mesh_cfg, &cfg).unwrap();
+            assert_eq!(r.vuln.critical, full.vuln.critical, "{engine}");
+            assert_eq!(r.exposed_trials, full.exposed_trials, "{engine}");
+            assert_eq!(r.masked_trials, full.masked_trials, "{engine}");
+            assert_eq!(
+                r.rtl_cycles_stepped, resume.rtl_cycles_stepped,
+                "{engine} must fall back to cycle-resume on control batches"
+            );
+        }
+    }
+
+    #[test]
+    fn tmr_columns_is_deterministic_and_sized() {
+        let mesh_cfg = MeshConfig::default();
+        let a = tmr_columns(&mesh_cfg, 2);
+        let b = tmr_columns(&mesh_cfg, 2);
+        assert_eq!(a, b, "fixed-literal seed: the column set is reproducible");
+        assert_eq!(a.len(), mesh_cfg.dim);
+        assert_eq!(a.iter().filter(|&&p| p).count(), 2);
+        let all = tmr_columns(&mesh_cfg, 64);
+        assert!(all.iter().all(|&p| p), "cols clamps to dim");
     }
 
     #[test]

@@ -250,6 +250,33 @@ mod tests {
     }
 
     #[test]
+    fn control_faults_sample_through_the_same_draw_order() {
+        // `Ctrl` is outside the default pool (opt-in via `--signals
+        // control`) but flows through the unchanged sampler discipline:
+        // same draw order, bit inside the 16-bit control space, cycle
+        // inside the dataflow's cycle model.
+        let mut rng = Rng::new(64);
+        for _ in 0..200 {
+            let t = sample_trial(
+                Scenario::Seu, OS, SITE, 16, 27, 16, 8, &mut rng, &[SignalKind::Ctrl],
+            );
+            let f = t.plan.faults()[0];
+            assert_eq!(f.addr.kind, SignalKind::Ctrl);
+            assert!(f.bit < SignalKind::Ctrl.width());
+            assert!(f.cycle < os_matmul_cycles(8, 27));
+            assert!(t.plan.has_control());
+        }
+        // mbu over a control signal clamps into its width like any kind
+        let mut rng = Rng::new(65);
+        let t = sample_trial(
+            Scenario::Mbu { bits: 4 }, OS, SITE, 16, 27, 16, 8, &mut rng,
+            &[SignalKind::Ctrl],
+        );
+        assert!(t.plan.len() <= 4);
+        assert!(t.plan.faults().iter().all(|f| f.bit < 16));
+    }
+
+    #[test]
     fn trial_bounds_respected() {
         let mut rng = Rng::new(63);
         for _ in 0..500 {

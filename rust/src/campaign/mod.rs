@@ -9,8 +9,8 @@ pub mod runner;
 
 pub use campaign::{
     campaign_sites, derived_input_seed, plan_one, run_campaign, run_input, signal_kinds,
-    validate_dataflow_support, CampaignResult, InputPlan, PlannedTrial, SiteBatch,
-    TrialExecutor, TrialOutcome,
+    tmr_columns, validate_dataflow_support, CampaignResult, InputPlan, MitVerdict,
+    PlannedTrial, SiteBatch, TrialExecutor, TrialOutcome,
 };
 pub use fault::{sample_fault, sample_mesh_fault, sample_trial, TrialFault};
 pub use maps::{

@@ -14,7 +14,7 @@
 //! runner's persistent scratch.
 
 use super::fault::TrialFault;
-use crate::config::{Dataflow, OffloadScope, TileEngine};
+use crate::config::{Dataflow, HardeningConfig, OffloadScope, TileEngine};
 use crate::dnn::gemm::gemm_i8;
 use crate::dnn::layers::{GemmCall, GemmHook};
 use crate::mat::{Mat, MatView, MatViewMut};
@@ -283,6 +283,25 @@ pub struct CrossLayerRunner<'a> {
     /// Set when the RTL tile differed from the fault-free tile (the
     /// fault was *exposed* to the software layer — paper Fig. 5b).
     pub exposed: bool,
+    /// Armed mitigation stack (the campaign's `--hardening` axis).
+    /// `HardeningConfig::is_none()` keeps every splice seam on the
+    /// legacy compare-only path, bit-identical to pre-hardening runs.
+    pub hardening: HardeningConfig,
+    /// TMR-protected PE columns (`tmr_protected[c % dim]`), empty when
+    /// selective TMR is not armed. The campaign precomputes this once
+    /// per executor from the dataflow's exposure map.
+    pub tmr_protected: Vec<bool>,
+    /// Hardening only: the RTL region differed from its golden BEFORE
+    /// mitigation ran (what `exposed` would read under `--hardening
+    /// none`) — the denominator of the coverage metrics.
+    pub mit_struck: bool,
+    /// Hardening only: an armed detector (ABFT checksum) flagged the
+    /// struck region.
+    pub mit_detected: bool,
+    /// Hardening only: mitigation restored the struck region to its
+    /// golden bit-exactly (the splice then writes nothing, so the trial
+    /// classifies as masked).
+    pub mit_corrected: bool,
     /// Total RTL mesh cycles stepped by this runner: golden-cursor
     /// advances plus (full or resumed) tile runs — the campaign's
     /// `rtl_cycles_stepped` accounting.
@@ -385,6 +404,11 @@ impl<'a> CrossLayerRunner<'a> {
             engine,
             hit: false,
             exposed: false,
+            hardening: HardeningConfig::default(),
+            tmr_protected: Vec::new(),
+            mit_struck: false,
+            mit_detected: false,
+            mit_corrected: false,
             rtl_cycles: 0,
             lane_capacity: 1,
             lane_cycles_filled: 0,
@@ -424,6 +448,9 @@ impl<'a> CrossLayerRunner<'a> {
         self.trial = trial;
         self.hit = false;
         self.exposed = false;
+        self.mit_struck = false;
+        self.mit_detected = false;
+        self.mit_corrected = false;
         self.chunk_plans.clear();
         self.chunk_plans.push(&trial.plan);
         self.lane = 0;
@@ -483,6 +510,9 @@ impl<'a> CrossLayerRunner<'a> {
         self.trial = trial;
         self.hit = false;
         self.exposed = false;
+        self.mit_struck = false;
+        self.mit_detected = false;
+        self.mit_corrected = false;
         self.lane = lane;
     }
 
@@ -709,6 +739,102 @@ impl<'a> CrossLayerRunner<'a> {
         self.packed_done = true;
     }
 
+    /// Apply the armed mitigation stack to one faulty RTL region before
+    /// it splices back into the software layer. `rtl[0..rows][0..cols]`
+    /// is the in-bounds faulty region (exactly what the splice can
+    /// expose); `gold(r, c)` reads the fault-free value of the same
+    /// element. Mechanisms run in hardware order — selective TMR votes
+    /// protected PE columns back to golden first, the ABFT row/column
+    /// checksums check (and single-error-correct) the post-vote region,
+    /// and range clipping clamps whatever corruption remains — each
+    /// mutating `rtl` in place, so the unchanged splice seam downstream
+    /// sees the mitigated tile. Returns `(struck, detected, corrected)`:
+    /// the region differed from golden before mitigation, a detector
+    /// flagged it, and mitigation restored it bit-exactly (the splice
+    /// then writes nothing and the trial classifies as masked).
+    ///
+    /// Modeling notes: the checksums compare against the golden region
+    /// (an idealized ABFT whose encoded checksum row/column is itself
+    /// fault-free); clipping clamps only diverged elements — a range
+    /// check against the fault-free activation, not a blanket
+    /// saturation that would also perturb golden out-of-range values.
+    /// Output column `c` drains from PE column `c % dim`, so tile
+    /// regions (`cols <= dim`) index the TMR map directly and
+    /// whole-layer regions wrap per column block.
+    fn mitigate_region(
+        h: &HardeningConfig,
+        tmr: &[bool],
+        rtl: &mut Mat<i32>,
+        gold: impl Fn(usize, usize) -> i32,
+        rows: usize,
+        cols: usize,
+    ) -> (bool, bool, bool) {
+        let diff =
+            |rtl: &Mat<i32>| (0..rows).any(|r| (0..cols).any(|c| rtl.at(r, c) != gold(r, c)));
+        if !diff(rtl) {
+            return (false, false, false);
+        }
+        // selective TMR: the voter at each protected column's output
+        // restores that column's elements; corruption that forwarded
+        // into unprotected neighbours stays
+        if !tmr.is_empty() {
+            for r in 0..rows {
+                for c in 0..cols {
+                    if tmr[c % tmr.len()] && rtl.at(r, c) != gold(r, c) {
+                        rtl.set(r, c, gold(r, c));
+                    }
+                }
+            }
+        }
+        // ABFT: wrapping row/column checksums over the post-vote region;
+        // a unique bad-row x bad-column pair with matching deltas is a
+        // single-element error — subtract it out
+        let mut detected = false;
+        if h.abft {
+            let delta = |r: usize, c: usize| rtl.at(r, c).wrapping_sub(gold(r, c));
+            let mut bad_rows: Vec<(usize, i32)> = Vec::new();
+            for r in 0..rows {
+                let d = (0..cols).fold(0i32, |acc, c| acc.wrapping_add(delta(r, c)));
+                if d != 0 {
+                    bad_rows.push((r, d));
+                }
+            }
+            let mut bad_cols: Vec<(usize, i32)> = Vec::new();
+            for c in 0..cols {
+                let d = (0..rows).fold(0i32, |acc, r| acc.wrapping_add(delta(r, c)));
+                if d != 0 {
+                    bad_cols.push((c, d));
+                }
+            }
+            if !bad_rows.is_empty() || !bad_cols.is_empty() {
+                detected = true;
+                if bad_rows.len() == 1 && bad_cols.len() == 1 && bad_rows[0].1 == bad_cols[0].1 {
+                    let ((r, d), (c, _)) = (bad_rows[0], bad_cols[0]);
+                    rtl.set(r, c, rtl.at(r, c).wrapping_sub(d));
+                }
+            }
+        }
+        // range clipping on whatever corruption remains
+        if let Some((lo, hi)) = h.clip {
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rtl.at(r, c) != gold(r, c) {
+                        rtl.set(r, c, rtl.at(r, c).clamp(lo, hi));
+                    }
+                }
+            }
+        }
+        (true, detected, !diff(rtl))
+    }
+
+    /// Fold one mitigated region's flags into the armed trial's verdict
+    /// inputs (one region splices per trial — the hook hits one site).
+    fn note_mitigation(&mut self, (struck, detected, corrected): (bool, bool, bool)) {
+        self.mit_struck |= struck;
+        self.mit_detected |= detected;
+        self.mit_corrected |= corrected;
+    }
+
     /// Delta-splice one WS pass back into the layer accumulator:
     /// `out += rtl - gold`, touching only elements where the RTL pass
     /// diverged from its software golden. Returns whether anything
@@ -798,6 +924,21 @@ impl<'a> CrossLayerRunner<'a> {
                 Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
             }
         }
+        if !self.hardening.is_none() {
+            // the accumulator window still holds the native golden tile
+            // — mitigate the RTL region against it before the splice
+            let (rows, cols) = (dim.min(m - ri), dim.min(n - cj));
+            let gold: &[i32] = out;
+            let flags = Self::mitigate_region(
+                &self.hardening,
+                &self.tmr_protected,
+                &mut self.scratch,
+                |r, c| gold[(ri + r) * n + (cj + c)],
+                rows,
+                cols,
+            );
+            self.note_mitigation(flags);
+        }
         // splice the RTL tile back into the accumulator (one strided
         // copy; a changed element means the fault escaped the array)
         let mut target = MatViewMut::window(out, m, n, n, ri, cj, dim, dim);
@@ -846,6 +987,18 @@ impl<'a> CrossLayerRunner<'a> {
                 self.run_packed_pass(a_full, b_full, d_full, (m, _k, n));
             }
             self.scratch.clone_from(&self.lane_outs[self.lane]);
+            if !self.hardening.is_none() {
+                let gold = &self.packed_ws_gold[self.lane_group[self.lane]];
+                let flags = Self::mitigate_region(
+                    &self.hardening,
+                    &self.tmr_protected,
+                    &mut self.scratch,
+                    |r, c| gold.at(r, c),
+                    m,
+                    ncols,
+                );
+                self.note_mitigation(flags);
+            }
             let gold = &self.packed_ws_gold[self.lane_group[self.lane]];
             if Self::ws_delta_splice(&self.scratch, gold, out, (m, n), cj, ncols) {
                 self.exposed = true;
@@ -920,6 +1073,18 @@ impl<'a> CrossLayerRunner<'a> {
                 Err(e) => panic!("tile offload failed for [{}]: {e:#}", self.trial),
             }
         }
+        if !self.hardening.is_none() {
+            let gold = &self.ws_gold;
+            let flags = Self::mitigate_region(
+                &self.hardening,
+                &self.tmr_protected,
+                &mut self.scratch,
+                |r, c| gold.at(r, c),
+                m,
+                ncols,
+            );
+            self.note_mitigation(flags);
+        }
         // delta-splice: native + (rtl - gold); untouched where equal
         if Self::ws_delta_splice(&self.scratch, &self.ws_gold, out, (m, n), cj, ncols) {
             self.exposed = true;
@@ -961,7 +1126,7 @@ impl GemmHook for CrossLayerRunner<'_> {
             // is the analytic tile count (OS: each tile one full-K pass
             // plus the faulty tile's re-run; WS: one M-stream pass per
             // weight tile of the chain, the fault armed inline).
-            let cf = self
+            let mut cf = self
                 .backend
                 .run_layer(a_full, b_full, d_full, &self.trial.plan, ti, tj)
                 .unwrap_or_else(|e| panic!("layer offload failed for [{}]: {e:#}", self.trial));
@@ -971,6 +1136,21 @@ impl GemmHook for CrossLayerRunner<'_> {
                 Dataflow::WeightStationary => tiles * ws_matmul_cycles(dim, m),
             };
             self.add_scalar_cycles(cycles);
+            if !self.hardening.is_none() {
+                // layer scope mitigates the whole layer as one region
+                // (its splice granularity); `out` holds the native
+                // golden until the copy below
+                let gold: &[i32] = out;
+                let flags = Self::mitigate_region(
+                    &self.hardening,
+                    &self.tmr_protected,
+                    &mut cf,
+                    |r, c| gold[r * n + c],
+                    m,
+                    n,
+                );
+                self.note_mitigation(flags);
+            }
             self.exposed = cf.data() != &out[..];
             out.copy_from_slice(cf.data());
             return true;
@@ -1628,6 +1808,89 @@ mod tests {
                 "{dataflow}: packed occupancy {packed_occ} must beat lockstep {lockstep_occ}"
             );
         }
+    }
+
+    #[test]
+    fn abft_hardening_corrects_a_single_element_and_masks_the_trial() {
+        // Acc bit 30 of PE (0,0) mid-compute is a single-element error
+        // under OS (wrapping adds keep the delta exactly +/-2^30), so
+        // the idealized ABFT checksums must locate and subtract it: the
+        // trial strikes, detects, corrects — and the corrected splice
+        // writes nothing, reproducing golden logits bit-exactly.
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(90);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let trial = a_trial(20);
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        r.hardening = HardeningConfig::parse("abft").expect("valid hardening");
+        let out = model.forward(&x, Some(&mut r));
+        assert!(r.hit);
+        assert!(r.mit_struck, "bit 30 of an accumulator mid-compute escapes the array");
+        assert!(r.mit_detected, "the row/column checksums flag the struck tile");
+        assert!(r.mit_corrected, "a single corrupted element single-error-corrects");
+        assert!(!r.exposed, "the corrected splice writes nothing");
+        assert_eq!(out, golden, "ABFT-corrected trial reproduces golden logits");
+    }
+
+    #[test]
+    fn tmr_protected_column_outvotes_the_fault() {
+        // the fault sits in PE (0,0); under OS its corruption drains
+        // from PE column 0 — voting that column restores the tile
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(91);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let golden = model.forward(&x, None);
+        let trial = a_trial(20);
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        r.hardening = HardeningConfig::parse("tmr:1").expect("valid hardening");
+        let mut protected = vec![false; 8];
+        protected[0] = true;
+        r.tmr_protected = protected;
+        let out = model.forward(&x, Some(&mut r));
+        assert!(r.mit_struck);
+        assert!(r.mit_corrected, "the protected column outvotes the flip");
+        assert!(!r.mit_detected, "TMR corrects silently (no detector armed)");
+        assert!(!r.exposed);
+        assert_eq!(out, golden);
+    }
+
+    #[test]
+    fn clip_hardening_clamps_without_detecting() {
+        // range clipping bounds the corruption magnitude but raises no
+        // detection signal; a 2^30 accumulator flip stays struck (and
+        // exposed) with its spliced elements clamped into range
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(92);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(20);
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        r.hardening = HardeningConfig::parse("clip:-1000,1000").expect("valid hardening");
+        let _ = model.forward(&x, Some(&mut r));
+        assert!(r.mit_struck);
+        assert!(!r.mit_detected, "clipping is a silent mitigation");
+    }
+
+    #[test]
+    fn none_hardening_keeps_the_legacy_seam_flags() {
+        // `--hardening none` (the default) must not touch the mitigation
+        // flags at all — the byte-identity contract of the report
+        let model = models::quicknet(5);
+        let mut rng = Rng::new(93);
+        let x = synthetic_input(&model.input_shape, &mut rng);
+        let trial = a_trial(20);
+        let mut mesh = Mesh::new(8, Dataflow::OutputStationary);
+        let mut r =
+            CrossLayerRunner::new(&trial, TileBackend::Mesh(&mut mesh), OffloadScope::SingleTile);
+        let _ = model.forward(&x, Some(&mut r));
+        assert!(r.exposed, "the unhardened trial is exposed");
+        assert!(!r.mit_struck && !r.mit_detected && !r.mit_corrected);
     }
 
     #[test]

@@ -282,6 +282,111 @@ impl std::fmt::Display for Scenario {
     }
 }
 
+/// Fault-mitigation (hardening) configuration — a campaign axis
+/// orthogonal to scenario, dataflow, backend and engines: the same
+/// sampled trials run against a *hardened* execution, and every struck
+/// trial earns a mitigation verdict (`detected` / `corrected` /
+/// `escaped`) that the report aggregates into detection/correction
+/// coverage per (scenario, dataflow, hardening) cell.
+///
+/// CLI / JSON grammar (`--hardening` / `"hardening"`) — mechanisms
+/// compose with `+`, each may appear at most once:
+///
+/// * `none` — no mitigation (default; campaigns are byte-identical to
+///   the un-hardened injector)
+/// * `clip:<lo,hi>` — range-clip the tile's faulty outputs to
+///   `[lo, hi]` (`lo <= hi`); clipping back onto the golden value
+///   counts as a correction
+/// * `abft` — ABFT row/column checksums verified per offloaded GEMM
+///   tile: any checksum mismatch detects the strike, and a single
+///   corrupted element (one bad row crossing one bad column with equal
+///   deltas) is corrected by checksum reconstruction
+/// * `tmr:<cols>` — selective TMR of the `cols` most-exposed PE
+///   columns (ranked by the `exposure_map_for` vulnerability map);
+///   strikes whose faults all land in protected columns are
+///   outvoted, i.e. corrected
+/// * `detect` — end-to-end SDC detector: flag any trial whose final
+///   logits diverge from the golden logits
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct HardeningConfig {
+    /// Range clipping of faulty tile outputs to `[lo, hi]`.
+    pub clip: Option<(i32, i32)>,
+    /// ABFT row/column checksum verification per GEMM tile.
+    pub abft: bool,
+    /// Number of most-exposed PE columns protected by TMR (0 = off).
+    pub tmr_cols: usize,
+    /// End-to-end SDC detection on the final logits.
+    pub detect: bool,
+}
+
+impl HardeningConfig {
+    /// True when no mitigation mechanism is armed — the campaign must
+    /// then be byte-identical to the pre-hardening injector.
+    pub fn is_none(&self) -> bool {
+        self.clip.is_none() && !self.abft && self.tmr_cols == 0 && !self.detect
+    }
+
+    pub fn parse(s: &str) -> Option<HardeningConfig> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "none" {
+            return Some(HardeningConfig::default());
+        }
+        let mut h = HardeningConfig::default();
+        for part in s.split('+') {
+            if let Some(v) = part.strip_prefix("clip:") {
+                let (lo, hi) = v.split_once(',')?;
+                let lo: i32 = lo.parse().ok()?;
+                let hi: i32 = hi.parse().ok()?;
+                if lo > hi || h.clip.is_some() {
+                    return None;
+                }
+                h.clip = Some((lo, hi));
+            } else if part == "abft" {
+                if h.abft {
+                    return None;
+                }
+                h.abft = true;
+            } else if let Some(v) = part.strip_prefix("tmr:") {
+                let cols: usize = v.parse().ok()?;
+                if cols == 0 || h.tmr_cols != 0 {
+                    return None;
+                }
+                h.tmr_cols = cols;
+            } else if part == "detect" {
+                if h.detect {
+                    return None;
+                }
+                h.detect = true;
+            } else {
+                return None; // unknown mechanism (or a stray "none")
+            }
+        }
+        Some(h)
+    }
+}
+
+impl std::fmt::Display for HardeningConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_none() {
+            return write!(f, "none");
+        }
+        let mut parts: Vec<String> = Vec::new();
+        if let Some((lo, hi)) = self.clip {
+            parts.push(format!("clip:{lo},{hi}"));
+        }
+        if self.abft {
+            parts.push("abft".into());
+        }
+        if self.tmr_cols > 0 {
+            parts.push(format!("tmr:{}", self.tmr_cols));
+        }
+        if self.detect {
+            parts.push("detect".into());
+        }
+        write!(f, "{}", parts.join("+"))
+    }
+}
+
 /// Hardware (mesh) configuration — the paper's "compilation phase" knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct MeshConfig {
@@ -345,6 +450,10 @@ pub struct CampaignConfig {
     /// Fault scenario sampled per trial (`seu` reproduces the legacy
     /// single-fault campaigns bit-exactly).
     pub scenario: Scenario,
+    /// Mitigation mechanisms armed for the campaign (`none` by default;
+    /// hardened campaigns stay bit-identical across tile engines and
+    /// worker counts because mitigation happens at the splice seam).
+    pub hardening: HardeningConfig,
     /// Worker threads for the campaign coordinator.
     pub workers: usize,
 }
@@ -362,6 +471,7 @@ impl Default for CampaignConfig {
             lanes: 8,
             signals: vec![],
             scenario: Scenario::Seu,
+            hardening: HardeningConfig::default(),
             workers: 1,
         }
     }
@@ -387,6 +497,7 @@ impl CampaignConfig {
                 Json::Arr(self.signals.iter().map(Json::str).collect()),
             ),
             ("scenario", Json::str(self.scenario.to_string())),
+            ("hardening", Json::str(self.hardening.to_string())),
             ("workers", Json::num(self.workers as f64)),
         ])
     }
@@ -486,6 +597,10 @@ impl Config {
             if let Some(v) = c.get("scenario").and_then(Json::as_str) {
                 cfg.campaign.scenario = Scenario::parse(v)
                     .ok_or_else(|| anyhow::anyhow!("bad scenario {v}"))?;
+            }
+            if let Some(v) = c.get("hardening").and_then(Json::as_str) {
+                cfg.campaign.hardening = HardeningConfig::parse(v)
+                    .ok_or_else(|| anyhow::anyhow!("bad hardening {v}"))?;
             }
             if let Some(v) = c.get("workers").and_then(Json::as_usize) {
                 cfg.campaign.workers = v;
@@ -681,6 +796,12 @@ mod tests {
             lanes: 4,
             signals: vec!["propag".into(), "valid".into()],
             scenario: Scenario::Mbu { bits: 2 },
+            hardening: HardeningConfig {
+                clip: Some((-128, 127)),
+                abft: true,
+                tmr_cols: 2,
+                detect: true,
+            },
             workers: 3,
         };
         let j = Json::obj(vec![
@@ -700,6 +821,7 @@ mod tests {
         assert_eq!(back.campaign.lanes, campaign.lanes);
         assert_eq!(back.campaign.signals, campaign.signals);
         assert_eq!(back.campaign.scenario, campaign.scenario);
+        assert_eq!(back.campaign.hardening, campaign.hardening);
         assert_eq!(back.campaign.workers, campaign.workers);
         // defaults round-trip too (serializer writes every field)
         let dflt = Json::obj(vec![
@@ -715,6 +837,60 @@ mod tests {
             OffloadScope::parse(&OffloadScope::SingleTile.to_string()),
             Some(OffloadScope::SingleTile)
         );
+    }
+
+    #[test]
+    fn hardening_grammar_round_trips() {
+        let cases = [
+            ("none", HardeningConfig::default()),
+            (
+                "clip:-128,127",
+                HardeningConfig { clip: Some((-128, 127)), ..Default::default() },
+            ),
+            ("abft", HardeningConfig { abft: true, ..Default::default() }),
+            ("tmr:3", HardeningConfig { tmr_cols: 3, ..Default::default() }),
+            ("detect", HardeningConfig { detect: true, ..Default::default() }),
+            (
+                "clip:0,64+abft+tmr:2+detect",
+                HardeningConfig {
+                    clip: Some((0, 64)),
+                    abft: true,
+                    tmr_cols: 2,
+                    detect: true,
+                },
+            ),
+            (
+                "abft+detect",
+                HardeningConfig { abft: true, detect: true, ..Default::default() },
+            ),
+        ];
+        for (s, want) in cases {
+            assert_eq!(HardeningConfig::parse(s), Some(want), "{s}");
+            assert_eq!(want.to_string(), s, "display round-trip of {s}");
+            assert_eq!(HardeningConfig::parse(&want.to_string()), Some(want));
+        }
+        // components compose in any order but display canonically
+        assert_eq!(
+            HardeningConfig::parse("detect+abft").unwrap().to_string(),
+            "abft+detect"
+        );
+        for bad in [
+            "", "bogus", "clip:", "clip:5", "clip:5,1", "clip:a,b", "tmr:0",
+            "tmr:", "tmr:x", "abft+abft", "detect+detect", "none+abft",
+            "clip:0,1+clip:0,1", "tmr:1+tmr:2",
+        ] {
+            assert_eq!(HardeningConfig::parse(bad), None, "{bad:?} must not parse");
+        }
+        assert!(HardeningConfig::default().is_none());
+        assert!(!HardeningConfig { abft: true, ..Default::default() }.is_none());
+        assert_eq!(Config::default().campaign.hardening, HardeningConfig::default());
+        assert!(
+            Config::from_json_str(r#"{"campaign": {"hardening": "bogus"}}"#).is_err()
+        );
+        let c = Config::from_json_str(r#"{"campaign": {"hardening": "abft+tmr:2"}}"#)
+            .unwrap();
+        assert_eq!(c.campaign.hardening.tmr_cols, 2);
+        assert!(c.campaign.hardening.abft);
     }
 
     #[test]

@@ -307,6 +307,7 @@ mod tests {
                 lanes: 8,
                 signals: vec![],
                 scenario: Default::default(),
+                hardening: Default::default(),
                 workers,
             },
         )

@@ -491,6 +491,65 @@ mod tests {
     }
 
     #[test]
+    fn by_name_resolves_every_zoo_name_case_insensitively() {
+        for info in TABLE_II.iter() {
+            for variant in [
+                info.name.to_string(),
+                info.name.to_ascii_lowercase(),
+                info.name.to_ascii_uppercase(),
+            ] {
+                let m = by_name(&variant, 42)
+                    .unwrap_or_else(|| panic!("by_name must resolve '{variant}'"));
+                assert_eq!(m.name, info.name, "lookup '{variant}'");
+            }
+        }
+        // the example model is reachable too, in any case
+        for variant in ["quicknet", "QuickNet", "QUICKNET"] {
+            let m = by_name(variant, 7).unwrap();
+            assert_eq!(m.name, "quicknet");
+        }
+        assert!(by_name("bogus-model", 42).is_none());
+        assert!(by_name("", 42).is_none());
+        assert!(by_name("resnet", 42).is_none(), "no prefix matching");
+    }
+
+    /// Same seed => bit-identical weights across two independent zoo
+    /// constructions (Layer carries no PartialEq; derived Debug prints
+    /// every weight/bias vector, so string equality is weight equality).
+    #[test]
+    fn zoo_is_bit_deterministic_per_seed() {
+        let a = zoo(42);
+        let b = zoo(42);
+        assert_eq!(a.len(), b.len());
+        let mut rng = Rng::new(3);
+        for (ma, mb) in a.iter().zip(b.iter()) {
+            assert_eq!(ma.name, mb.name);
+            assert_eq!(ma.param_count(), mb.param_count(), "{}", ma.name);
+            assert_eq!(
+                format!("{:?}", ma.layers),
+                format!("{:?}", mb.layers),
+                "{}: same seed must reproduce weights bit-exactly",
+                ma.name
+            );
+            let x = synthetic_input(&ma.input_shape, &mut rng);
+            assert_eq!(
+                ma.forward(&x, None),
+                mb.forward(&x, None),
+                "{}: twin constructions must agree on logits",
+                ma.name
+            );
+        }
+        // and a different seed actually changes the weights somewhere
+        let c = zoo(43);
+        assert!(
+            a.iter()
+                .zip(c.iter())
+                .any(|(ma, mc)| format!("{:?}", ma.layers) != format!("{:?}", mc.layers)),
+            "distinct seeds must yield distinct weights"
+        );
+    }
+
+    #[test]
     fn same_seed_same_model() {
         let mut rng = Rng::new(10);
         let x = synthetic_input(&[3, 32, 32], &mut rng);

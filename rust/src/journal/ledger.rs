@@ -102,6 +102,11 @@ mod tests {
             exposed: 0,
             critical: 0,
             rtl_cycles: 1,
+            lane_cycles_filled: 1,
+            lane_cycles_stepped: 1,
+            detected: 0,
+            corrected: 0,
+            escaped: 0,
         }
     }
 

@@ -16,7 +16,10 @@ use std::path::Path;
 /// the JSONL record shape; resume across schema versions refuses.
 /// v2: `BatchRecord` gained the required `lane_cycles_filled` /
 /// `lane_cycles_stepped` occupancy pair (cross-tile lane packing).
-pub const SCHEMA: &str = "enfor-sa/campaign-journal/v2";
+/// v3: `BatchRecord` gained the required `detected` / `corrected` /
+/// `escaped` mitigation-verdict counts, and the manifest pins the
+/// campaign's `hardening` config (the hardening axis).
+pub const SCHEMA: &str = "enfor-sa/campaign-journal/v3";
 
 /// One slice of the worker-count-invariant `(input, site)` unit space:
 /// shard `i/N` owns every unit with `unit % N == i`. The residue-class
@@ -243,6 +246,12 @@ impl Manifest {
             Some(("signals", a.signals.join(","), b.signals.join(",")))
         } else if a.scenario != b.scenario {
             Some(("scenario", a.scenario.to_string(), b.scenario.to_string()))
+        } else if a.hardening != b.hardening {
+            Some((
+                "hardening",
+                a.hardening.to_string(),
+                b.hardening.to_string(),
+            ))
         } else {
             None
         };
@@ -288,6 +297,44 @@ mod tests {
     }
 
     #[test]
+    fn shard_parse_failures_name_the_offending_field() {
+        // zero count: rejected by the count rule, not a generic error
+        let e = Shard::parse("0/0").unwrap_err().to_string();
+        assert!(e.contains("shard count must be > 0"), "{e}");
+        // index at / past the count: the range error names both values
+        for (s, i, n) in [("2/2", 2, 2), ("5/3", 5, 3)] {
+            let e = Shard::parse(s).unwrap_err().to_string();
+            assert!(
+                e.contains(&format!("shard index {i} out of range 0..{n}")),
+                "{e}"
+            );
+        }
+        // whitespace is NOT trimmed — ' 1/2' and '1/2 ' must fail on
+        // the half that carries the space, naming that half
+        let e = Shard::parse(" 1/2").unwrap_err().to_string();
+        assert!(e.contains("bad shard index ' 1'"), "{e}");
+        let e = Shard::parse("1/2 ").unwrap_err().to_string();
+        assert!(e.contains("bad shard count '2 '"), "{e}");
+        // non-numeric halves name the half that failed to parse
+        let e = Shard::parse("x/2").unwrap_err().to_string();
+        assert!(e.contains("bad shard index 'x'"), "{e}");
+        let e = Shard::parse("1/y").unwrap_err().to_string();
+        assert!(e.contains("bad shard count 'y'"), "{e}");
+        // negative and overflowing values don't fit u64
+        let e = Shard::parse("-1/2").unwrap_err().to_string();
+        assert!(e.contains("bad shard index '-1'"), "{e}");
+        let e = Shard::parse("1/99999999999999999999999").unwrap_err().to_string();
+        assert!(
+            e.contains("bad shard count '99999999999999999999999'"),
+            "{e}"
+        );
+        // missing separator points at the full token and shows the
+        // expected grammar
+        let e = Shard::parse("12").unwrap_err().to_string();
+        assert!(e.contains("bad shard '12' (expected i/N"), "{e}");
+    }
+
+    #[test]
     fn manifest_round_trips_json() {
         let mut m = manifest();
         m.shard = Shard::parse("1/2").unwrap();
@@ -314,6 +361,12 @@ mod tests {
         m.campaign.scenario = Scenario::DoubleSeu;
         let e = base.require_match(&m).unwrap_err().to_string();
         assert!(e.contains("manifest mismatch: scenario"), "{e}");
+        let mut m = manifest();
+        m.campaign.hardening =
+            crate::config::HardeningConfig::parse("abft").unwrap();
+        let e = base.require_match(&m).unwrap_err().to_string();
+        assert!(e.contains("manifest mismatch: hardening"), "{e}");
+        assert!(e.contains("abft"), "{e}");
         let mut m = manifest();
         m.shard = Shard::parse("0/2").unwrap();
         assert!(base.require_match(&m).is_err());

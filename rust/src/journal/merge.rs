@@ -133,6 +133,11 @@ mod tests {
             exposed: 1,
             critical,
             rtl_cycles: 10,
+            lane_cycles_filled: 10,
+            lane_cycles_stepped: 10,
+            detected: 0,
+            corrected: 0,
+            escaped: 0,
         }
     }
 

@@ -117,7 +117,7 @@ pub struct JournalRun {
 
 /// Write the deterministic report file atomically (tmp + rename).
 pub fn write_report(path: &Path, result: &CampaignResult, cfg: &CampaignConfig) -> Result<()> {
-    let text = campaign_report_json(result, cfg.tile_engine, cfg.lanes).pretty() + "\n";
+    let text = campaign_report_json(result, cfg.tile_engine, cfg.lanes, cfg.hardening).pretty() + "\n";
     let tmp = path.with_extension("json.tmp");
     {
         use std::io::Write as _;

@@ -38,6 +38,15 @@ pub struct BatchRecord {
     pub lane_cycles_filled: u64,
     /// Lane-cycles the batch stepped in total, live or idle.
     pub lane_cycles_stepped: u64,
+    /// Mitigation-verdict counts (journal schema v3, with the
+    /// hardening axis): struck trials whose mitigation raised an alarm
+    /// but could not restore the region (or whose SDC detector fired).
+    pub detected: u64,
+    /// Struck trials fully restored by TMR voting / ABFT correction /
+    /// clipping — they contribute to `masked` as well.
+    pub corrected: u64,
+    /// Struck trials that sailed past an armed mitigation unnoticed.
+    pub escaped: u64,
 }
 
 impl BatchRecord {
@@ -65,6 +74,9 @@ impl BatchRecord {
             rtl_cycles: delta.rtl_cycles_stepped,
             lane_cycles_filled: delta.lane_cycles_filled,
             lane_cycles_stepped: delta.lane_cycles_stepped,
+            detected: delta.detected_trials,
+            corrected: delta.corrected_trials,
+            escaped: delta.escaped_trials,
         }
     }
 
@@ -78,6 +90,9 @@ impl BatchRecord {
         into.rtl_cycles_stepped += self.rtl_cycles;
         into.lane_cycles_filled += self.lane_cycles_filled;
         into.lane_cycles_stepped += self.lane_cycles_stepped;
+        into.detected_trials += self.detected;
+        into.corrected_trials += self.corrected;
+        into.escaped_trials += self.escaped;
         let layer = into.per_layer.entry(self.layer as usize).or_default();
         layer.trials += self.trials();
         layer.critical += self.critical;
@@ -100,6 +115,9 @@ impl BatchRecord {
                 "lane_cycles_stepped",
                 Json::num(self.lane_cycles_stepped as f64),
             ),
+            ("detected", Json::num(self.detected as f64)),
+            ("corrected", Json::num(self.corrected as f64)),
+            ("escaped", Json::num(self.escaped as f64)),
         ])
     }
 
@@ -120,6 +138,9 @@ impl BatchRecord {
             rtl_cycles: field("rtl_cycles")?,
             lane_cycles_filled: field("lane_cycles_filled")?,
             lane_cycles_stepped: field("lane_cycles_stepped")?,
+            detected: field("detected")?,
+            corrected: field("corrected")?,
+            escaped: field("escaped")?,
         })
     }
 }
@@ -249,6 +270,9 @@ mod tests {
             rtl_cycles: 100 + input,
             lane_cycles_filled: 100 + input,
             lane_cycles_stepped: 110 + input,
+            detected: 1,
+            corrected: 1,
+            escaped: 0,
         }
     }
 
@@ -271,6 +295,39 @@ mod tests {
     }
 
     #[test]
+    fn v3_records_require_verdict_and_occupancy_fields() {
+        // a v3 line must carry every counter: dropping any verdict or
+        // occupancy field is a schema error that NAMES the field, so a
+        // v2 journal fed to a v3 reader fails loudly, not as zeros
+        let r = rec(1, 2);
+        for missing in [
+            "detected",
+            "corrected",
+            "escaped",
+            "lane_cycles_filled",
+            "lane_cycles_stepped",
+        ] {
+            let Json::Obj(mut fields) = r.to_json() else {
+                panic!("record json must be an object")
+            };
+            fields.remove(missing);
+            let e = BatchRecord::from_json(&Json::Obj(fields))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains(missing), "error must name '{missing}': {e}");
+        }
+        // a non-numeric verdict field is rejected by name too
+        let Json::Obj(mut fields) = r.to_json() else {
+            panic!("record json must be an object")
+        };
+        fields.insert("escaped".into(), Json::str("three"));
+        let e = BatchRecord::from_json(&Json::Obj(fields))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("escaped") && e.contains("number"), "{e}");
+    }
+
+    #[test]
     fn apply_folds_counts_and_layers() {
         let mut acc = CampaignResult::empty(
             "m",
@@ -288,6 +345,9 @@ mod tests {
         assert_eq!(acc.rtl_cycles_stepped, 301);
         assert_eq!(acc.lane_cycles_filled, 301);
         assert_eq!(acc.lane_cycles_stepped, 331);
+        assert_eq!(acc.detected_trials, 3);
+        assert_eq!(acc.corrected_trials, 3);
+        assert_eq!(acc.escaped_trials, 0);
         assert_eq!(acc.per_layer.len(), 2); // layers 0 (sites 0,1) and 1
         assert_eq!(acc.per_layer[&0].trials, 8);
     }

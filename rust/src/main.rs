@@ -95,6 +95,33 @@
 //!                              by the other engines
 //! ```
 //!
+//! ... a hardening configuration via `--hardening <spec>` (JSON
+//! `campaign.hardening`; components compose with `+` and display
+//! canonically as clip -> abft -> tmr -> detect):
+//!
+//! ```text
+//! --hardening none          no mitigation (default) — campaigns stay
+//!                           byte-identical to the unhardened injector
+//! --hardening clip:<lo,hi>  range-clip diverged tile outputs to
+//!                           [lo, hi] before they propagate
+//! --hardening abft          ABFT row/column checksums per GEMM tile:
+//!                           detection always, single-error correction
+//!                           when the bad row x bad column is unique
+//! --hardening tmr:<cols>    triplicate the <cols> most-exposed PE
+//!                           columns (ranked by the exposure map of the
+//!                           campaign dataflow) and vote their outputs
+//! --hardening detect        end-to-end SDC detector on final logit
+//!                           divergence (flags, never corrects)
+//! --hardening clip:0,64+abft+tmr:2+detect     any '+' composition
+//! ```
+//!
+//! Hardened campaigns classify every struck trial as detected /
+//! corrected / escaped; coverage lands in the CLI summary, report.json
+//! and the benchkit snapshot (schema v10). `--signals control` adds the
+//! control-path fault targets (tile-sequencer / drain-FSM counters) to
+//! the sampled signal set; lane engines fall back to cycle-resume for
+//! batches that carry a control fault.
+//!
 //! ... and the durable-journal flags (ROADMAP "Durable campaign
 //! journal"), which make campaigns resumable, O(1)-memory and
 //! multi-process with byte-identical final reports:
@@ -134,8 +161,8 @@ use enfor_sa::campaign::{
     control_avf_map, exposure_map_for, weight_exposure_map, ws_weight_exposure_map,
 };
 use enfor_sa::config::{
-    Backend, CampaignConfig, Config, Dataflow, MeshConfig, OffloadScope, Scenario, TileEngine,
-    TrialEngine,
+    Backend, CampaignConfig, Config, Dataflow, HardeningConfig, MeshConfig, OffloadScope,
+    Scenario, TileEngine, TrialEngine,
 };
 use enfor_sa::coordinator::{run_parallel, Args, Progress};
 use enfor_sa::dnn::models;
@@ -232,6 +259,13 @@ fn configs(args: &Args) -> Result<(MeshConfig, CampaignConfig)> {
     }
     if let Some(s) = args.get("signals") {
         cfg.campaign.signals = s.split(',').map(str::to_string).collect();
+    }
+    if let Some(s) = args.get("hardening") {
+        cfg.campaign.hardening = HardeningConfig::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad --hardening {s} (none|clip:<lo,hi>|abft|tmr:<cols>|detect, '+'-composable)"
+            )
+        })?;
     }
     cfg.validate()?;
     Ok((cfg.mesh, cfg.campaign))
@@ -382,9 +416,9 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
     eprintln!(
         "campaign: model={name} backend={} engine={} tile-engine={} lanes={} scenario={} dim={} \
-         dataflow={} inputs={} faults/layer={}",
+         dataflow={} inputs={} faults/layer={} hardening={}",
         cc.backend, cc.engine, cc.tile_engine, cc.lanes, cc.scenario, mesh_cfg.dim,
-        mesh_cfg.dataflow, cc.inputs, cc.faults_per_layer
+        mesh_cfg.dataflow, cc.inputs, cc.faults_per_layer, cc.hardening
     );
     let r = match dir {
         Some(dir) => {
@@ -451,13 +485,28 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             r.lane_cycles_stepped
         );
     }
+    // hardening coverage row — only for armed campaigns, so `none`
+    // output stays byte-identical to the unhardened CLI
+    if !cc.hardening.is_none() {
+        println!(
+            "hardening {}: struck={} detected={} corrected={} escaped={} \
+             detection coverage = {:.4}  correction coverage = {:.4}",
+            cc.hardening,
+            r.struck_trials(),
+            r.detected_trials,
+            r.corrected_trials,
+            r.escaped_trials,
+            r.detection_coverage(),
+            r.correction_coverage()
+        );
+    }
     for (layer, v) in &r.per_layer {
         println!("  layer {layer:2}: VF {:.4}% ({} trials)", v.vf() * 100.0, v.trials);
     }
     if let Some(path) = out {
         // the deterministic report object plus this run's wall clock
         // (campaign-dir report.json files stay wall-free for diffing)
-        let mut j = campaign_report_json(&r, cc.tile_engine, cc.lanes);
+        let mut j = campaign_report_json(&r, cc.tile_engine, cc.lanes, cc.hardening);
         if let Json::Obj(m) = &mut j {
             m.insert("wall_s".to_string(), Json::num(r.wall.as_secs_f64()));
         }
@@ -488,7 +537,7 @@ fn cmd_campaign_merge(args: &Args) -> Result<()> {
         r.exposed_trials,
         r.masked_trials
     );
-    let text = campaign_report_json(r, cc.tile_engine, cc.lanes).pretty() + "\n";
+    let text = campaign_report_json(r, cc.tile_engine, cc.lanes, cc.hardening).pretty() + "\n";
     match out {
         Some(path) => {
             std::fs::write(&path, text)?;

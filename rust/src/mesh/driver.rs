@@ -645,8 +645,17 @@ impl<'m, S: Injectable> MatmulDriver<'m, S> {
         inp: &mut MeshInputs,
         step_out: &mut StepOutput,
     ) -> u64 {
+        // Control-path plans corrupt the schedule machinery itself (the
+        // tile sequencer's fetch cycle, the drain-FSM counters); gated
+        // here so PE-grid plans keep the single-compare hot path.
+        let ctrl = plan.has_control();
         for t in from..to {
-            sched.fill(t, inp);
+            let fill_t = if ctrl {
+                super::inject::apply_control(plan, t, sched.total_cycles(), taken)
+            } else {
+                t
+            };
+            sched.fill(fill_t, inp);
             step_out.clear();
             // One compare per cycle: the entire injection overhead of
             // ENFOR-SA (stuck-at faults keep the cursor re-armed so the

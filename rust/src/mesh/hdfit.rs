@@ -148,6 +148,11 @@ impl InstrumentedMesh {
                 }
                 (Slot::RegD, f.cycle - 1)
             }
+            // Control-path faults live in the driver's schedule machinery
+            // (tile sequencer / drain FSM), not in any PE assignment —
+            // HDFIT and ENFOR-SA share the driver, so both backends apply
+            // them through `apply_control` at the fault's own cycle.
+            SignalKind::Ctrl => return None,
         };
         Some(HdfitFault {
             sig_id: sig_id(dim, r, c, slot),

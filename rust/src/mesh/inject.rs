@@ -180,6 +180,14 @@ impl FaultPlan {
         self.faults.first().map_or(u64::MAX, |f| f.cycle)
     }
 
+    /// True when the plan targets control-path state (the tile
+    /// sequencer / drain FSM, [`SignalKind::Ctrl`]) — the drivers then
+    /// route every cycle through [`apply_control`], and the campaign
+    /// falls lane-batched engines back to cycle-resume for the batch.
+    pub fn has_control(&self) -> bool {
+        self.faults.iter().any(|f| f.addr.kind == SignalKind::Ctrl)
+    }
+
     /// Copy `src` into this plan in place, reusing the existing
     /// allocation (the derived `clone` would allocate per call — this is
     /// the per-trial re-arm path of persistent backends like the SoC).
@@ -293,6 +301,47 @@ impl PlanCursor {
     }
 }
 
+/// Bit indices `>= CTRL_SEQ_BIT` of a [`SignalKind::Ctrl`] fault target
+/// the tile sequencer's cycle counter; lower bits target the per-column
+/// drain-FSM counter of `addr.col`.
+pub const CTRL_SEQ_BIT: u8 = 8;
+
+/// Apply every control-path ([`SignalKind::Ctrl`]) fault of `plan` due
+/// at cycle `t` to the schedule machinery the drivers own:
+///
+/// * sequencer bits (`bit >= CTRL_SEQ_BIT`) XOR into the cycle index
+///   the sequencer fetches operands for — returned as the corrupted
+///   fill cycle, wrapped into `0..total` (a misfetched schedule step;
+///   on the whole-SoC backend this redirects the scratchpad/accumulator
+///   reads of the window, i.e. a corrupted DMA descriptor);
+/// * drain bits (`bit < CTRL_SEQ_BIT`) XOR into the per-column
+///   drain-FSM counter `taken[addr.col]` (the drain's own bounds guard
+///   keeps out-of-range counts from writing outside the result tile —
+///   results are silently dropped or re-ordered, the FSM failure mode).
+///
+/// Transient faults act on their own cycle only; stuck-at faults
+/// re-corrupt every cycle from onset ([`Fault::fires_at`]). Callers
+/// gate the per-cycle scan on [`FaultPlan::has_control`], so plans
+/// without control faults keep the single-compare hot path.
+pub fn apply_control(plan: &FaultPlan, t: u64, total: u64, taken: &mut [usize]) -> u64 {
+    let mut fill_t = t;
+    for f in plan.faults() {
+        if f.addr.kind != SignalKind::Ctrl || !f.fires_at(t) {
+            continue;
+        }
+        if f.bit >= CTRL_SEQ_BIT {
+            fill_t ^= 1u64 << (f.bit - CTRL_SEQ_BIT);
+        } else if !taken.is_empty() {
+            taken[f.addr.col % taken.len()] ^= 1usize << f.bit;
+        }
+    }
+    if total > 0 {
+        fill_t % total
+    } else {
+        fill_t
+    }
+}
+
 /// Apply `fault` to the plain mesh using the source-register technique.
 /// Must be called immediately before the `step()` of each firing cycle.
 pub fn apply_enforsa(mesh: &mut Mesh, inp: &mut MeshInputs, fault: &Fault) {
@@ -359,6 +408,10 @@ pub fn apply_enforsa(mesh: &mut Mesh, inp: &mut MeshInputs, fault: &Fault) {
         SignalKind::DReg => {
             mesh.reg_d[i] = f32v(mesh.reg_d[i]);
         }
+        // Control-path faults live OUTSIDE the PE grid (tile sequencer /
+        // drain FSM): the drivers apply them via `apply_control`, not
+        // through the PE source-flip path.
+        SignalKind::Ctrl => {}
     }
 }
 
@@ -445,6 +498,9 @@ pub(crate) fn apply_enforsa_lane(mesh: &mut LaneMesh, lane: usize, fault: &Fault
         SignalKind::DReg => {
             mesh.reg_d[i] = f32v(mesh.reg_d[i]);
         }
+        // Applied by the drivers via `apply_control` (never lane-batched:
+        // the campaign falls control plans back to cycle-resume).
+        SignalKind::Ctrl => {}
     }
 }
 

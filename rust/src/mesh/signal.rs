@@ -31,6 +31,16 @@ pub enum SignalKind {
     Propag,
     /// Local control: valid bit (flows north→south).
     Valid,
+    /// Control-path state OUTSIDE the PE grid: the tile sequencer and
+    /// drain-FSM counters of the mesh `Schedule` (and the `SocSchedule`
+    /// window bookkeeping / DMA descriptors on the whole-SoC backend).
+    /// Bits 0..8 address the per-column drain counter of `addr.col`;
+    /// bits 8..16 address the sequencer's cycle counter (XOR into the
+    /// fill cycle — a misfetched schedule step). Deliberately NOT in
+    /// [`SignalKind::ALL`]: the PE-grid fault space and its sampling
+    /// streams are pinned byte-identical, so control faults are opt-in
+    /// via `--signals control`.
+    Ctrl,
 }
 
 impl SignalKind {
@@ -40,10 +50,14 @@ impl SignalKind {
             SignalKind::Weight | SignalKind::Act => 8,
             SignalKind::Acc | SignalKind::DReg => 32,
             SignalKind::Propag | SignalKind::Valid => 1,
+            SignalKind::Ctrl => 16,
         }
     }
 
-    /// All kinds, in a stable order (used by samplers and reports).
+    /// All PE-grid kinds, in a stable order (used by samplers and
+    /// reports). `Ctrl` is intentionally excluded — the default fault
+    /// space (and every pinned legacy sampling stream) is the PE grid;
+    /// control-path targets are opt-in via `--signals control`.
     pub const ALL: [SignalKind; 6] = [
         SignalKind::Weight,
         SignalKind::Act,
@@ -62,6 +76,7 @@ impl SignalKind {
             "dreg" | "d" => Some(SignalKind::DReg),
             "propag" | "propagate" => Some(SignalKind::Propag),
             "valid" => Some(SignalKind::Valid),
+            "control" | "ctrl" => Some(SignalKind::Ctrl),
             _ => None,
         }
     }
@@ -76,6 +91,7 @@ impl std::fmt::Display for SignalKind {
             SignalKind::DReg => "dreg",
             SignalKind::Propag => "propag",
             SignalKind::Valid => "valid",
+            SignalKind::Ctrl => "control",
         };
         write!(f, "{s}")
     }
@@ -146,5 +162,19 @@ mod tests {
             assert_eq!(SignalKind::parse(&k.to_string()), Some(k));
         }
         assert_eq!(SignalKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn control_kind_is_opt_in() {
+        // the control-path kind parses and round-trips...
+        assert_eq!(SignalKind::parse("control"), Some(SignalKind::Ctrl));
+        assert_eq!(SignalKind::parse("ctrl"), Some(SignalKind::Ctrl));
+        assert_eq!(SignalKind::Ctrl.to_string(), "control");
+        assert_eq!(SignalKind::Ctrl.width(), 16);
+        // ...but stays OUT of the default fault space: ALL and the
+        // per-PE bit budget are pinned so legacy sampling streams stay
+        // byte-identical.
+        assert!(!SignalKind::ALL.contains(&SignalKind::Ctrl));
+        assert_eq!(SignalAddr::fault_space_bits(8), 64 * 82);
     }
 }

@@ -2,7 +2,7 @@
 //! monospace text and JSON.
 
 use crate::campaign::{CampaignResult, PeMap};
-use crate::config::TileEngine;
+use crate::config::{HardeningConfig, TileEngine};
 use crate::util::json::Json;
 
 /// Render an aligned monospace table (the shape the paper's tables use).
@@ -90,7 +90,18 @@ pub fn pe_map_json(map: &PeMap) -> Json {
 /// report files (`Json::pretty` over `BTreeMap` is key-sorted). The
 /// CLI `--out` path layers a `wall_s` field on top of this object;
 /// campaign-dir `report.json` files are exactly this object.
-pub fn campaign_report_json(r: &CampaignResult, tile_engine: TileEngine, lanes: usize) -> Json {
+///
+/// The hardening fields (`hardening`, `detected`, `corrected`,
+/// `escaped`, `detection_coverage`, `correction_coverage`) appear ONLY
+/// when a mitigation is armed: a `--hardening none` campaign emits
+/// byte-identical reports to the pre-hardening engine (the acceptance
+/// pin of the hardening axis).
+pub fn campaign_report_json(
+    r: &CampaignResult,
+    tile_engine: TileEngine,
+    lanes: usize,
+    hardening: HardeningConfig,
+) -> Json {
     let per_layer: Vec<Json> = r
         .per_layer
         .iter()
@@ -103,7 +114,7 @@ pub fn campaign_report_json(r: &CampaignResult, tile_engine: TileEngine, lanes: 
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("model", Json::str(r.model.clone())),
         ("backend", Json::str(r.backend.to_string())),
         ("dataflow", Json::str(r.dataflow.to_string())),
@@ -126,7 +137,16 @@ pub fn campaign_report_json(r: &CampaignResult, tile_engine: TileEngine, lanes: 
         ("lane_occupancy", Json::num(r.lane_occupancy())),
         ("vf", Json::num(r.vf())),
         ("per_layer", Json::Arr(per_layer)),
-    ])
+    ];
+    if !hardening.is_none() {
+        fields.push(("hardening", Json::str(hardening.to_string())));
+        fields.push(("detected", Json::num(r.detected_trials as f64)));
+        fields.push(("corrected", Json::num(r.corrected_trials as f64)));
+        fields.push(("escaped", Json::num(r.escaped_trials as f64)));
+        fields.push(("detection_coverage", Json::num(r.detection_coverage())));
+        fields.push(("correction_coverage", Json::num(r.correction_coverage())));
+    }
+    Json::obj(fields)
 }
 
 /// Format a duration in the paper's style (h / min / s / ms / us).
@@ -203,7 +223,8 @@ mod tests {
         r.lane_cycles_stepped = 1200;
         let v = r.vuln;
         r.per_layer.insert(0, v);
-        let j = campaign_report_json(&r, TileEngine::CycleResume, 8);
+        let none = HardeningConfig::default();
+        let j = campaign_report_json(&r, TileEngine::CycleResume, 8, none);
         let text = j.pretty();
         assert!(!text.contains("wall"), "report must be wall-clock free");
         assert_eq!(j.get("trials").unwrap().as_usize(), Some(10));
@@ -214,8 +235,37 @@ mod tests {
         // identical inputs -> identical bytes, the journal's diff contract
         let mut r2 = r.clone();
         r2.wall = std::time::Duration::from_secs(999); // wall differs...
-        let text2 = campaign_report_json(&r2, TileEngine::CycleResume, 8).pretty();
+        let text2 = campaign_report_json(&r2, TileEngine::CycleResume, 8, none).pretty();
         assert_eq!(text, text2); // ...bytes don't
+    }
+
+    #[test]
+    fn hardening_report_fields_are_gated_on_an_armed_config() {
+        use crate::config::{Backend, Dataflow, Scenario};
+        let mut r = CampaignResult::empty(
+            "m",
+            Backend::EnforSa,
+            Scenario::Seu,
+            Dataflow::OutputStationary,
+        );
+        r.vuln.trials = 10;
+        r.detected_trials = 2;
+        r.corrected_trials = 1;
+        r.escaped_trials = 1;
+        // none: no hardening fields at all (byte-identity with pre-axis
+        // reports), even if counters were somehow non-zero
+        let none = campaign_report_json(&r, TileEngine::CycleResume, 8, HardeningConfig::default());
+        assert!(none.get("hardening").is_none());
+        assert!(none.get("detection_coverage").is_none());
+        // armed: label + counters + coverage
+        let h = HardeningConfig::parse("abft+detect").expect("valid hardening");
+        let j = campaign_report_json(&r, TileEngine::CycleResume, 8, h);
+        assert_eq!(j.get("hardening").unwrap().as_str(), Some("abft+detect"));
+        assert_eq!(j.get("detected").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("corrected").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("escaped").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("detection_coverage").unwrap().as_f64(), Some(0.75));
+        assert_eq!(j.get("correction_coverage").unwrap().as_f64(), Some(0.25));
     }
 
     #[test]

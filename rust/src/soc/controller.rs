@@ -452,7 +452,21 @@ impl Controller {
     pub fn step_window(&mut self, spad: &mut Scratchpad, accmem: &mut AccMem) -> Result<()> {
         let sched = self.window.expect("step_window outside the matmul window");
         let t = self.mesh_t;
-        self.fill_window(sched, t, spad, accmem)?;
+        // Control-path faults corrupt the window bookkeeping itself: a
+        // sequencer-bit strike redirects which schedule cycle's operand
+        // addresses the scratchpad/accmem reads use (a corrupted DMA
+        // descriptor), a drain-bit strike flips the drain-FSM counters.
+        let fill_t = if self.plan.has_control() {
+            crate::mesh::inject::apply_control(
+                &self.plan,
+                t,
+                sched.total_cycles(),
+                &mut self.taken,
+            )
+        } else {
+            t
+        };
+        self.fill_window(sched, fill_t, spad, accmem)?;
         // one compare per mesh cycle — same wrapper contract as the
         // mesh-only driver (`PlanCursor::next_cycle`)
         if self.cursor.next_cycle() == t {

@@ -17,6 +17,7 @@ fn cfg(backend: Backend, faults: u64, inputs: u64) -> CampaignConfig {
         lanes: 8,
         signals: vec![],
         scenario: Default::default(),
+        hardening: Default::default(),
         workers: 1,
     }
 }

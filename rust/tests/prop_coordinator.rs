@@ -49,6 +49,7 @@ fn random_cfg(rng: &mut Rng) -> CampaignConfig {
             Scenario::DoubleSeu,
             Scenario::StuckAt { value: false },
         ][rng.usize_below(5)],
+        hardening: Default::default(),
         workers: 1 + rng.usize_below(4),
     }
 }

@@ -46,6 +46,7 @@ fn cfg(backend: Backend, scenario: Scenario, tile_engine: TileEngine) -> Campaig
         lanes: 8,
         signals: vec![],
         scenario,
+        hardening: Default::default(),
         workers: 1,
     }
 }

@@ -1,0 +1,225 @@
+//! Property tests pinning the hardening-evaluation axis (ROADMAP
+//! "Hardening-evaluation axis").
+//!
+//! Contracts:
+//! 1. `--hardening none` is the absence of the feature: fixed-seed
+//!    campaigns produce byte-identical `report.json` text to the
+//!    unhardened engine — zero verdict counters and no hardening keys
+//!    in the report object.
+//! 2. Hardened campaigns are bit-identical — verdict counters included
+//!    — across all four tile engines, both dataflows and every worker
+//!    sharding: mitigation happens at the deterministic splice seam,
+//!    never in engine- or scheduling-dependent code.
+//! 3. An ABFT `corrected` verdict means the tile region was restored
+//!    bit-exactly, so the trial lands in `masked` with golden-equal
+//!    logits: `masked(hardened) == masked(none) + corrected` and the
+//!    struck set equals the none-baseline's exposed + critical.
+//! 4. Control-path fault campaigns (`--signals control`) keep the same
+//!    cross-engine and cross-worker bit-identity (lane engines fall
+//!    back per batch, and batches are the sharding unit).
+
+use enfor_sa::campaign::{run_campaign, CampaignResult};
+use enfor_sa::config::{
+    Backend, CampaignConfig, Dataflow, HardeningConfig, MeshConfig, OffloadScope,
+    TileEngine, TrialEngine,
+};
+use enfor_sa::coordinator::run_parallel;
+use enfor_sa::dnn::models;
+use enfor_sa::report::campaign_report_json;
+
+fn cfg(hardening: HardeningConfig) -> CampaignConfig {
+    CampaignConfig {
+        seed: 0x4A4D_E4,
+        faults_per_layer: 12,
+        inputs: 1,
+        backend: Backend::EnforSa,
+        offload_scope: OffloadScope::SingleTile,
+        engine: TrialEngine::SiteResume,
+        tile_engine: TileEngine::CycleResume,
+        lanes: 8,
+        signals: vec![],
+        scenario: Default::default(),
+        hardening,
+        workers: 1,
+    }
+}
+
+fn mesh_cfg(dataflow: Dataflow) -> MeshConfig {
+    MeshConfig { dataflow, ..Default::default() }
+}
+
+const DATAFLOWS: [Dataflow; 2] = [Dataflow::OutputStationary, Dataflow::WeightStationary];
+
+const ENGINES: [TileEngine; 4] = [
+    TileEngine::Full,
+    TileEngine::CycleResume,
+    TileEngine::LaneLockstep,
+    TileEngine::PackedLockstep,
+];
+
+/// Bit-identity including the mitigation-verdict counters.
+fn assert_bit_identical(a: &CampaignResult, b: &CampaignResult, label: &str) {
+    assert_eq!(a.vuln.trials, b.vuln.trials, "{label}: trials");
+    assert_eq!(a.vuln.critical, b.vuln.critical, "{label}: critical");
+    assert_eq!(a.exposed_trials, b.exposed_trials, "{label}: exposed");
+    assert_eq!(a.masked_trials, b.masked_trials, "{label}: masked");
+    assert_eq!(a.detected_trials, b.detected_trials, "{label}: detected");
+    assert_eq!(a.corrected_trials, b.corrected_trials, "{label}: corrected");
+    assert_eq!(a.escaped_trials, b.escaped_trials, "{label}: escaped");
+    assert_eq!(a.per_layer.len(), b.per_layer.len(), "{label}: layer map size");
+    for ((la, va), (lb, vb)) in a.per_layer.iter().zip(b.per_layer.iter()) {
+        assert_eq!(la, lb, "{label}: layer ids");
+        assert_eq!(va.trials, vb.trials, "{label}: layer {la} trials");
+        assert_eq!(va.critical, vb.critical, "{label}: layer {la} critical");
+    }
+}
+
+/// Contract 1: `--hardening none` report.json text is byte-identical to
+/// the unhardened engine's — same counters, no hardening fields, stable
+/// across repeated runs.
+#[test]
+fn prop_none_hardening_reports_are_byte_identical_to_unhardened() {
+    let model = models::quicknet(5);
+    let none = HardeningConfig::default();
+    assert_eq!(HardeningConfig::parse("none"), Some(none));
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let c = cfg(none);
+        let a = run_campaign(&model, &mc, &c).unwrap();
+        let b = run_campaign(&model, &mc, &c).unwrap();
+        // zero verdict counters: nothing in the engine consumed the axis
+        assert_eq!(a.struck_trials(), 0, "{dataflow}: none must count no verdicts");
+        let ta = campaign_report_json(&a, c.tile_engine, c.lanes, c.hardening).pretty();
+        let tb = campaign_report_json(&b, c.tile_engine, c.lanes, c.hardening).pretty();
+        assert_eq!(ta, tb, "{dataflow}: fixed-seed reports must be byte-identical");
+        for key in ["hardening", "detected", "corrected", "escaped", "detection_coverage"] {
+            assert!(
+                !ta.contains(&format!("\"{key}\"")),
+                "{dataflow}: a none report must not carry '{key}'"
+            );
+        }
+    }
+}
+
+/// Contract 2: a hardened campaign agrees bit-exactly — verdicts
+/// included — across all four tile engines and both dataflows.
+#[test]
+fn prop_hardened_campaigns_agree_across_engines_and_dataflows() {
+    let model = models::quicknet(5);
+    let h = HardeningConfig::parse("clip:-65536,65535+abft+detect").unwrap();
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut oracle_cfg = cfg(h);
+        oracle_cfg.tile_engine = TileEngine::Full;
+        let oracle = run_campaign(&model, &mc, &oracle_cfg).unwrap();
+        assert!(
+            oracle.struck_trials() > 0,
+            "{dataflow}: the budget must strike something, or the pin is vacuous"
+        );
+        for engine in ENGINES {
+            let mut c = cfg(h);
+            c.tile_engine = engine;
+            let r = run_campaign(&model, &mc, &c).unwrap();
+            assert_bit_identical(&oracle, &r, &format!("{dataflow}/{engine:?}"));
+        }
+    }
+}
+
+/// Contract 2 (worker axis): hardened campaigns are worker-count
+/// invariant, verdict counters included.
+#[test]
+fn prop_hardened_campaigns_are_worker_count_invariant() {
+    let model = models::quicknet(5);
+    let h = HardeningConfig::parse("abft+detect").unwrap();
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut base = cfg(h);
+        base.inputs = 2;
+        base.tile_engine = TileEngine::PackedLockstep;
+        let one = run_parallel(&model, &mc, &base, None).unwrap();
+        for workers in [2usize, 3] {
+            let mut sharded = base.clone();
+            sharded.workers = workers;
+            let w = run_parallel(&model, &mc, &sharded, None).unwrap();
+            assert_bit_identical(&one, &w, &format!("{dataflow}/workers={workers}"));
+        }
+    }
+}
+
+/// Contract 3: ABFT corrections restore the tile bit-exactly, so every
+/// corrected trial lands in `masked` (golden-equal logits) and the
+/// hardened struck set equals the none-baseline's exposed + critical.
+#[test]
+fn prop_abft_corrected_trials_become_masked_with_golden_logits() {
+    let model = models::quicknet(5);
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        // 24 faults/layer: enough seu strikes that at least one is a
+        // single-element accumulator corruption ABFT can correct, on
+        // both dataflows
+        let mut none_cfg = cfg(HardeningConfig::default());
+        none_cfg.faults_per_layer = 24;
+        let none = run_campaign(&model, &mc, &none_cfg).unwrap();
+        let mut hard_cfg = cfg(HardeningConfig::parse("abft+detect").unwrap());
+        hard_cfg.faults_per_layer = 24;
+        let hard = run_campaign(&model, &mc, &hard_cfg).unwrap();
+        assert_eq!(hard.vuln.trials, none.vuln.trials, "{dataflow}: same plans");
+        assert_eq!(
+            hard.struck_trials(),
+            none.exposed_trials + none.vuln.critical,
+            "{dataflow}: struck set is decided before mitigation"
+        );
+        assert!(
+            hard.corrected_trials > 0,
+            "{dataflow}: seu strikes are single-delta corruptions ABFT can correct"
+        );
+        assert_eq!(
+            hard.masked_trials,
+            none.masked_trials + hard.corrected_trials,
+            "{dataflow}: a corrected region splices nothing, so the trial is masked"
+        );
+        assert!(
+            hard.vuln.critical <= none.vuln.critical,
+            "{dataflow}: correction can only remove SDCs, never add them"
+        );
+        assert!(hard.detection_coverage() > 0.0 && hard.detection_coverage() <= 1.0);
+        assert!(hard.correction_coverage() <= hard.detection_coverage());
+    }
+}
+
+/// Contract 2 + 4: a campaign targeting the control path (tile
+/// sequencer / drain-FSM counters) with hardening armed stays
+/// bit-identical across every tile engine and worker sharding — lane
+/// engines fall back per batch, and batches are the sharding unit.
+#[test]
+fn prop_control_fault_campaigns_agree_across_engines_and_workers() {
+    let model = models::quicknet(5);
+    let h = HardeningConfig::parse("abft").unwrap();
+    for dataflow in DATAFLOWS {
+        let mc = mesh_cfg(dataflow);
+        let mut oracle_cfg = cfg(h);
+        oracle_cfg.signals = vec!["control".into()];
+        oracle_cfg.tile_engine = TileEngine::Full;
+        let oracle = run_campaign(&model, &mc, &oracle_cfg).unwrap();
+        for engine in ENGINES {
+            let mut c = oracle_cfg.clone();
+            c.tile_engine = engine;
+            let r = run_campaign(&model, &mc, &c).unwrap();
+            assert_bit_identical(&oracle, &r, &format!("{dataflow}/control/{engine:?}"));
+        }
+        let mut base = oracle_cfg.clone();
+        base.tile_engine = TileEngine::PackedLockstep;
+        base.inputs = 2;
+        let one = run_parallel(&model, &mc, &base, None).unwrap();
+        for workers in [2usize, 3] {
+            let mut sharded = base.clone();
+            sharded.workers = workers;
+            let w = run_parallel(&model, &mc, &sharded, None).unwrap();
+            assert_bit_identical(
+                &one,
+                &w,
+                &format!("{dataflow}/control/workers={workers}"),
+            );
+        }
+    }
+}

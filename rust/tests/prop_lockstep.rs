@@ -43,6 +43,7 @@ fn cfg(backend: Backend, tile_engine: TileEngine, lanes: usize) -> CampaignConfi
         lanes,
         signals: vec![],
         scenario: Default::default(),
+        hardening: Default::default(),
         workers: 1,
     }
 }

@@ -43,6 +43,7 @@ fn cfg(backend: Backend, engine: TrialEngine, scope: OffloadScope) -> CampaignCo
         lanes: 8,
         signals: vec![],
         scenario: Default::default(),
+        hardening: Default::default(),
         workers: 1,
     }
 }

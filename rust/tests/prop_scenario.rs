@@ -48,6 +48,7 @@ fn cfg(backend: Backend, scenario: Scenario) -> CampaignConfig {
         lanes: 8,
         signals: vec![],
         scenario,
+        hardening: Default::default(),
         workers: 1,
     }
 }
